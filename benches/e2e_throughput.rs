@@ -1,0 +1,31 @@
+//! Headline end-to-end bench: AIF vs the sequential baseline under the same
+//! closed-loop load — the serving half of the paper's deployment claim.
+
+use std::sync::Arc;
+
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::Merger;
+use aif::workload::runner;
+
+fn main() {
+    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let n = if quick { 24 } else { 96 };
+    for (name, variant, sim) in [
+        ("base", "base", SimMode::Off),
+        ("aif", "aif", SimMode::Precached),
+    ] {
+        let cfg = ServingConfig {
+            variant: variant.into(),
+            sim_mode: sim,
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        };
+        let merger = Arc::new(Merger::build(cfg).expect("merger"));
+        let report = runner::closed_loop(name, &merger, n, 2, 11);
+        println!("{}", report.render());
+        let (mq, _) = runner::max_qps(&merger, n / 2, 12);
+        println!("  maxQPS {mq:.2}  extra storage {:.2} MiB",
+            merger.extra_storage_bytes() as f64 / (1 << 20) as f64);
+    }
+}

@@ -1,0 +1,14 @@
+//! Fig 6 reproduction (compute side): BEA real-time interaction cost vs the
+//! number of bridge embeddings, against the Full-Cross reference.
+//! GAUC curve comes from `python -m experiments.fig6`.
+
+fn main() {
+    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match aif::workload::experiments::run_fig6(&dir) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("fig6 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Table 1 reproduction: measured comparison of asynchronous inference
+//! strategies (offline / nearline / online-async / real-time) on the same
+//! tower workload.  `cargo bench --bench table1_stages`.
+
+fn main() {
+    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let scale = aif::workload::experiments::ExpScale::from_env();
+    match aif::workload::experiments::run_table1(&dir, scale) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("table1 failed (run `make artifacts` first?): {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

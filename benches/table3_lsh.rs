@@ -1,0 +1,14 @@
+//! Table 3 reproduction (complexity columns): MAC counts + measured
+//! wall-clock of the five long-term interaction head combinations.
+//! GAUC columns come from `python -m experiments.table3`.
+
+fn main() {
+    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match aif::workload::experiments::run_table3(&dir) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("table3 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

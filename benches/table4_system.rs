@@ -1,0 +1,16 @@
+//! Table 4 reproduction: avgRT / p99RT / maxQPS / extra-storage deltas for
+//! every pipeline increment (Base, +Async-Vectors, +SIM, +Pre-Caching,
+//! +BEA, +Long-term, +LSH, AIF) under identical load.
+//! AIF_QUICK=1 shrinks the run.
+
+fn main() {
+    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let scale = aif::workload::experiments::ExpScale::from_env();
+    match aif::workload::experiments::run_table4(&dir, scale) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("table4 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

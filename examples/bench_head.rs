@@ -1,0 +1,38 @@
+use aif::runtime::{Engine, Manifest};
+use std::time::Instant;
+fn main() {
+    let m = Manifest::load("artifacts").unwrap();
+    let mut e = Engine::new().unwrap();
+    for a in ["user_tower","item_tower","head_aif","head_base"] { e.load(&m, a).unwrap(); }
+    let user_out = e.execute("user_tower", &[
+        m.load_golden("profile").unwrap(), m.load_golden("seq_short").unwrap(), m.load_golden("seq_long_raw").unwrap(),
+        m.load_golden("seq_sign").unwrap()]).unwrap();
+    let item_out = e.execute("item_tower", &[m.load_golden("item_raw").unwrap()]).unwrap();
+    let aif_inputs = vec![user_out[0].clone(), item_out[0].clone(), user_out[1].clone(), item_out[1].clone(),
+        user_out[3].clone(), user_out[4].clone(), m.load_golden("item_sign").unwrap(),
+        m.load_golden("tiers_in").unwrap(), m.load_golden("sim_cross").unwrap()];
+    let base_inputs = vec![m.load_golden("profile").unwrap(), m.load_golden("seq_short").unwrap(), m.load_golden("item_raw").unwrap()];
+    for (name, inputs) in [("head_aif", &aif_inputs), ("head_base", &base_inputs)] {
+        for _ in 0..3 { e.execute(name, inputs).unwrap(); }
+        let t0 = Instant::now();
+        for _ in 0..20 { e.execute(name, inputs).unwrap(); }
+        println!("{name}: {:.2} ms/exec", t0.elapsed().as_secs_f64()/20.0*1e3);
+    }
+    // tier histogram cost
+    let world = aif::features::World::load(&m).unwrap();
+    let items: Vec<u32> = (0..256).collect();
+    let packed_items = aif::coordinator::merger::packed_signs_padded(&world, &items, 256);
+    let seq: Vec<u32> = world.users_long_seq.u32_row(0).to_vec();
+    let packed_seq = aif::coordinator::merger::packed_signs(&world, &seq);
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        std::hint::black_box(aif::lsh::tier_histogram(&packed_items, 256, &packed_seq, seq.len(), 64, 8));
+    }
+    println!("tier_histogram: {:.2} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+    // unpack plane cost
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        std::hint::black_box(aif::lsh::unpack_plane(&packed_seq, seq.len(), 64));
+    }
+    println!("unpack_plane(seq): {:.2} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+}

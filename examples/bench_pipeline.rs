@@ -1,0 +1,30 @@
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::Merger;
+use aif::features::LatencyModel;
+use std::sync::Arc;
+use std::time::Instant;
+fn main() {
+    for (name, variant, sim) in [("aif","aif",SimMode::Precached), ("aif_nolong","aif_nolong",SimMode::Precached),
+                                  ("aif_nobea","aif_nobea",SimMode::Precached), ("t4_asyncvec","t4_asyncvec",SimMode::Off),
+                                  ("base","base",SimMode::Off)] {
+        let cfg = ServingConfig {
+            variant: variant.into(), sim_mode: sim,
+            retrieval_latency: LatencyModel::fixed(100.0),
+            user_store_latency: LatencyModel::fixed(20.0),
+            item_store_latency: LatencyModel::fixed(10.0),
+            sim_parse_us: 0.1,
+            n_candidates: 4096,
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        };
+        let m = Arc::new(Merger::build(cfg).unwrap());
+        for i in 0..2 { m.handle(i, 5).unwrap(); } // warm
+        let t0 = Instant::now();
+        let n = 8;
+        let mut prerank = 0.0;
+        for i in 0..n { let r = m.handle(100+i, (i as usize*13)%m.world.n_users).unwrap();
+            prerank += r.timings.prerank.as_secs_f64(); }
+        println!("{name:14} total {:6.2} ms/req  prerank {:6.2} ms/req",
+            t0.elapsed().as_secs_f64()/n as f64*1e3, prerank/n as f64*1e3);
+    }
+}

@@ -1,0 +1,320 @@
+"""AOT driver: world + training + HLO lowering + manifest.
+
+Runs ONCE at build time (``make artifacts``); python never appears on the
+request path.  Emits into ``artifacts/``:
+
+  * ``*.hlo.txt``      — HLO **text** for every tower and serving head.
+                         Text, not ``.serialize()``: the image's
+                         xla_extension 0.5.1 rejects jax>=0.5 protos with
+                         64-bit instruction ids; the text parser reassigns
+                         ids and round-trips cleanly (see
+                         /opt/xla-example/README.md).
+  * ``tables/*.bin``   — the synthetic world (users, items, oracle, W_hash)
+                         as raw row-major little-endian arrays.
+  * ``goldens/*.bin``  — fixture inputs + expected outputs for the rust
+                         integration tests.
+  * ``manifest.json``  — dims, artifact signatures, table schemas, variant
+                         registry, oracle parameters.
+
+Env knobs: AIF_FAST=1 shrinks the world + training budget (used by pytest);
+AIF_TRAIN=none|fast|full picks the training budget for baked params.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data, dims, model, train, variants
+from .kernels import ref
+
+FAST = os.environ.get("AIF_FAST", "0") == "1"
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # constants as `constant({...})`, which the rust-side HLO text parser
+    # silently reads back as zeros — every baked parameter would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+def tower_signatures(b, l):
+    """Input signatures of the two asynchronous towers.
+
+    The serving user tower also ingests the long-term signature plane so it
+    can emit the linearized DIN factors (model.user_tower docstring); the
+    Pallas flavor keeps the original three-input form.
+    """
+    user_sig = [("profile", (1, dims.D_PROFILE_RAW)),
+                ("seq_short", (dims.L_SHORT, dims.D_SEQ_RAW)),
+                ("seq_long_raw", (l, dims.D_SEQ_RAW)),
+                ("seq_sign", (l, dims.D_LSH_BITS))]
+    user_sig_pallas = user_sig[:3]
+    item_sig = [("item_raw", (b, dims.D_ITEM_RAW))]
+    return user_sig, user_sig_pallas, item_sig
+
+
+def export_tables(world, w_hash, out_dir):
+    """World tables consumed by the rust feature store / oracle."""
+    tdir = os.path.join(out_dir, "tables")
+    os.makedirs(tdir, exist_ok=True)
+    tables = {
+        "users_profile": world.user_profile,
+        "users_short_seq": world.short_seq,
+        "users_long_seq": world.long_seq,
+        "users_mean_mm": world.user_mean_mm,
+        "users_cat_share": world.user_cat_share,
+        "users_z": world.z_user,
+        "items_raw": world.item_raw,
+        "items_mm": world.item_mm,
+        "items_seq_emb": world.item_seq_emb,
+        "items_category": world.category,
+        "items_bid": world.item_bid,
+        "items_z": world.z_item,
+        "w_hash": w_hash,
+    }
+    # Packed LSH signatures: ground truth for the rust lsh module.
+    bits = (world.item_mm @ w_hash.T >= 0).astype(np.uint8)  # [N, 64]
+    packed = np.packbits(bits, axis=1, bitorder="little")    # [N, 8]
+    tables["items_sign_packed"] = packed
+
+    schema = {}
+    for name, arr in tables.items():
+        arr = np.ascontiguousarray(arr)
+        dt = {"float32": "f32", "uint32": "u32", "uint8": "u8",
+              "int32": "i32"}[str(arr.dtype)]
+        path = f"tables/{name}.bin"
+        arr.tofile(os.path.join(out_dir, path))
+        schema[name] = {"file": path, "dtype": dt,
+                        "shape": list(arr.shape)}
+    return schema
+
+
+def export_goldens(world, w_hash, all_params, out_dir, b, l):
+    """One fixed request end-to-end: inputs + expected tower/head outputs.
+
+    The rust integration suite replays these through the PJRT runtime and
+    asserts bitwise-close equality — the cross-language correctness anchor.
+    """
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(99)
+    req = data.sample_request(world, rng, b)
+    user, cands = req["user"], req["cands"][:b]
+    ctx = data.request_ctx(world, user, cands, l_long=l)
+    data.add_signatures(ctx, w_hash)
+
+    files = {}
+
+    def put(name, arr):
+        arr = np.ascontiguousarray(np.asarray(arr, np.float32))
+        path = f"goldens/{name}.bin"
+        arr.tofile(os.path.join(out_dir, path))
+        files[name] = {"file": path, "dtype": "f32",
+                       "shape": list(arr.shape)}
+
+    # Raw inputs.
+    for k in ("profile", "seq_short", "seq_long_raw", "item_raw", "item_mm",
+              "seq_mm", "item_sign", "seq_sign", "sim_cross"):
+        put(k, ctx[k])
+    files["user_id"] = {"value": int(user)}
+    files["cand_ids"] = {"values": [int(c) for c in cands]}
+
+    # Tower outputs (aif params) — what the async phases must produce.
+    p_aif = all_params["aif"]
+    u_vec, bea_v, seq_emb, din_base, din_g = model.user_tower(
+        p_aif, jnp.asarray(ctx["profile"]), jnp.asarray(ctx["seq_short"]),
+        jnp.asarray(ctx["seq_long_raw"]), jnp.asarray(ctx["seq_sign"]),
+        use_kernels=False)
+    item_vec, bea_w = model.item_tower(
+        p_aif, jnp.asarray(ctx["item_raw"]), use_kernels=False)
+    put("user_tower.u_vec", u_vec)
+    put("user_tower.bea_v", bea_v)
+    put("user_tower.seq_emb", seq_emb)
+    put("user_tower.din_base", din_base)
+    put("user_tower.din_g", din_g)
+    put("item_tower.item_vec", item_vec)
+    put("item_tower.bea_w", bea_w)
+
+    # SimTier feature as the rust popcount path computes it (Eq.9).
+    from .kernels import ref as R
+    _, tiers_in = R.lsh_interact(
+        jnp.asarray(ctx["item_sign"]), jnp.asarray(ctx["seq_sign"]),
+        seq_emb, dims.N_TIERS)
+    put("tiers_in", tiers_in)
+
+    # Head outputs for the two anchor variants.
+    for vname in ("base", "aif"):
+        v = variants.by_name(vname)
+        full = dict(ctx)
+        full.update({"u_vec": u_vec, "bea_v": bea_v, "seq_emb": seq_emb,
+                     "din_base": din_base, "din_g": din_g,
+                     "item_vec": item_vec, "bea_w": bea_w,
+                     "tiers_in": tiers_in})
+        sig = model.serving_inputs(v, b=b, l=l)
+        args = [jnp.asarray(full[name]) for name, _ in sig]
+        scores = model.head_fn(v, all_params[vname], use_kernels=False)(
+            *args)[0]
+        put(f"head_{vname}.scores", scores)
+    return files
+
+
+# --------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train", default=os.environ.get("AIF_TRAIN", "fast"),
+                    choices=["none", "fast", "full"])
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    b = 64 if FAST else dims.B_MINI
+    l = 256 if FAST else dims.L_LONG
+    world = data.World(seed=7,
+                       n_users=256 if FAST else dims.N_USERS,
+                       n_items=2000 if FAST else dims.N_ITEMS,
+                       l_long=l)
+    w_hash = data.make_w_hash()
+
+    # ---- training budget -------------------------------------------------
+    budgets = {"none": 0, "fast": 256, "full": 1024}
+    n_train = 8 if FAST else budgets[args.train]
+    quality = {"base", "base_full", "aif", "aif_noasync", "aif_nobea",
+               "aif_nolong", "base_p115"}
+
+    train_set = None
+    if n_train:
+        t0 = time.time()
+        train_set, _ = train.build_dataset(
+            world, n_train=n_train, n_eval=1,
+            l_long_train=min(l, 512), seed=17)
+        print(f"dataset: {time.time()-t0:.1f}s", flush=True)
+
+    all_params = {}
+    for v in variants.SERVING:
+        rng = np.random.default_rng(3)
+        if train_set is not None and v.name in quality:
+            t0 = time.time()
+            p, hist = train.train_variant(v, train_set, w_hash)
+            print(f"trained {v.name}: loss {hist[0]:.4f} -> {hist[-1]:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        else:
+            p = model.init_variant_params(v, rng)
+        all_params[v.name] = p
+
+    # ---- lower towers ------------------------------------------------------
+    manifest = {"dims": {k: getattr(dims, k) for k in dir(dims)
+                         if k.isupper()},
+                "batch": b, "l_long": l,
+                "artifacts": {}, "variants": {}}
+    user_sig, user_sig_pallas, item_sig = tower_signatures(b, l)
+
+    def emit(name, fn, sig, outputs):
+        path = f"{name}.hlo.txt"
+        t0 = time.time()
+        hlo = lower_fn(fn, [spec(s) for _, s in sig])
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][name] = {
+            "file": path,
+            "inputs": [{"name": n, "shape": list(s), "dtype": "f32"}
+                       for n, s in sig],
+            "outputs": outputs,
+        }
+        print(f"lowered {name} ({len(hlo)//1024} KB, "
+              f"{time.time()-t0:.1f}s)", flush=True)
+
+    # Serving artifacts are lowered through the pure-jnp path: it is
+    # numerically identical to the Pallas kernels (enforced by pytest) and
+    # XLA-CPU fuses it far better than interpret-mode while-loops.  The
+    # Pallas-lowered flavor is emitted alongside for the anchor graphs and
+    # cross-checked against the jnp flavor by the rust integration tests —
+    # so the L1 kernels are exercised through the full AOT->PJRT path.
+    # On a real TPU the Pallas flavor is the deployment artifact
+    # (DESIGN.md §7).
+    p_aif = all_params["aif"]
+    user_tower_outputs = [
+        {"name": "u_vec", "shape": [1, dims.D]},
+        {"name": "bea_v", "shape": [variants.AIF.n_bridge, dims.D_BEA]},
+        {"name": "seq_emb", "shape": [l, dims.D]},
+        {"name": "din_base", "shape": [1, dims.D]},
+        {"name": "din_g", "shape": [dims.D_LSH_BITS, dims.D]}]
+    emit("user_tower",
+         lambda pr, ss, sl, sg: model.user_tower(p_aif, pr, ss, sl, sg,
+                                                 use_kernels=False),
+         user_sig, user_tower_outputs)
+    emit("user_tower_pallas",
+         lambda pr, ss, sl: model.user_tower(p_aif, pr, ss, sl,
+                                             use_kernels=True),
+         user_sig_pallas, user_tower_outputs[:3])
+    item_tower_outputs = [
+        {"name": "item_vec", "shape": [b, dims.D]},
+        {"name": "bea_w", "shape": [b, variants.AIF.n_bridge]}]
+    emit("item_tower",
+         lambda ir: model.item_tower(p_aif, ir, use_kernels=False),
+         item_sig, item_tower_outputs)
+    emit("item_tower_pallas",
+         lambda ir: model.item_tower(p_aif, ir, use_kernels=True),
+         item_sig, item_tower_outputs)
+
+    # ---- lower serving heads ----------------------------------------------
+    for v in variants.SERVING:
+        sig = model.serving_inputs(v, b=b, l=l)
+        emit(f"head_{v.name}",
+             model.head_fn(v, all_params[v.name], use_kernels=False),
+             sig,
+             [{"name": "scores", "shape": [b]}])
+        manifest["variants"][v.name] = {
+            "artifact": f"head_{v.name}",
+            "user": v.user, "item": v.item, "bea": v.bea,
+            "din_sim": v.din_sim, "tier_sim": v.tier_sim,
+            "sim_cross": v.sim_cross, "sim_budget": v.sim_budget,
+        }
+    # aif_noprecache: same head, truncated SIM assembly on the rust side.
+    manifest["variants"]["aif_noprecache"] = dict(
+        manifest["variants"]["aif"], sim_budget=0.25)
+    # Pallas flavor of the anchor head (the LSH hot-spot kernel computing
+    # DIN + SimTier fused — the TPU deployment shape), cross-checked
+    # against head_aif by the rust integration tests.
+    emit("head_aif_pallas",
+         model.head_fn(variants.AIF, all_params["aif"], use_kernels=True,
+                       pallas=True),
+         model.serving_inputs(variants.AIF, b=b, l=l, pallas=True),
+         [{"name": "scores", "shape": [b]}])
+
+    # ---- world tables + oracle + goldens ------------------------------------
+    manifest["tables"] = export_tables(world, w_hash, out_dir)
+    manifest["oracle"] = {
+        "click_w": [float(x) for x in world.click_w],
+        "click_b": float(world.click_b),
+        "d_latent": dims.D_LATENT,
+    }
+    manifest["goldens"] = export_goldens(world, w_hash, all_params,
+                                         out_dir, b, l)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {out_dir}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Synthetic world generator — the production-data substitute.
+
+The paper's experiments run on 8 days of Taobao impression/ranking logs; we
+cannot have those (DESIGN.md §2).  This module builds a latent-factor world
+in which every feature family the paper's ablations toggle carries
+*identifiable* signal:
+
+  * short-term interest  -> z_u . z_i           (profile / recent sequence)
+  * long-term interest   -> mm_i . mean(mm_seq) (multi-modal, what LSH keeps)
+  * category affinity    -> share of the user's long history in the item's
+                            category              (what SIM-hard captures)
+
+so ablating a feature family removes exactly one ground-truth term, and the
+relative ordering of Table 2/3 rows is reproducible.  All arrays are float32
+numpy; the same tables are exported to rust (aot.py) so the serving system,
+the oracle click model and the trainer see one world.
+"""
+
+import numpy as np
+
+from . import dims
+
+
+class World:
+    """Immutable synthetic universe of users, items and interests."""
+
+    def __init__(self, seed=7, n_users=dims.N_USERS, n_items=dims.N_ITEMS,
+                 l_long=dims.L_LONG):
+        rng = np.random.default_rng(seed)
+        dl = dims.D_LATENT
+        self.seed = seed
+        self.n_users, self.n_items, self.l_long = n_users, n_items, l_long
+
+        # --- latents ----------------------------------------------------
+        self.z_user = rng.normal(0, 1, (n_users, dl)).astype(np.float32)
+        self.z_long = (0.6 * self.z_user
+                       + 0.8 * rng.normal(0, 1, (n_users, dl))
+                       ).astype(np.float32)
+        self.z_item = rng.normal(0, 1, (n_items, dl)).astype(np.float32)
+
+        # --- categories: nearest of N prototype latents -------------------
+        protos = rng.normal(0, 1, (dims.N_CATEGORIES, dl)).astype(np.float32)
+        self.category = np.argmax(self.z_item @ protos.T, axis=1).astype(
+            np.uint32)
+
+        # --- observable features (noisy linear views of the latents) ------
+        def view(z, width, scale=1.0, noise=0.3):
+            a = rng.normal(0, scale / np.sqrt(dl), (z.shape[1], width))
+            return (z @ a + noise * rng.normal(0, 1, (z.shape[0], width))
+                    ).astype(np.float32)
+
+        self.user_profile = view(self.z_user, dims.D_PROFILE_RAW)
+        self.item_raw = view(self.z_item, dims.D_ITEM_RAW)
+        self.item_seq_emb = view(self.z_item, dims.D_SEQ_RAW)
+        mm = view(self.z_item, dims.D_MM, noise=0.15)
+        self.item_mm = (mm / np.linalg.norm(mm, axis=1, keepdims=True)
+                        ).astype(np.float32)
+        self.item_bid = np.exp(rng.normal(0, 0.4, n_items)).astype(np.float32)
+
+        # --- behavior sequences (affinity-sampled item ids) ----------------
+        self.short_seq = self._sample_seqs(rng, self.z_user, dims.L_SHORT,
+                                           tau=1.0)
+        self.long_seq = self._sample_seqs(rng, self.z_long, l_long, tau=1.2)
+
+        # --- oracle click model -------------------------------------------
+        # Precomputed per-user summaries keep the oracle O(1) per (u, i):
+        # rust's A/B simulator re-evaluates it millions of times.
+        mean_mm = self.item_mm[self.long_seq].mean(axis=1)
+        self.user_mean_mm = (mean_mm
+                             / np.linalg.norm(mean_mm, axis=1, keepdims=True)
+                             ).astype(np.float32)
+        share = np.zeros((n_users, dims.N_CATEGORIES), np.float32)
+        for c in range(dims.N_CATEGORIES):
+            share[:, c] = (self.category[self.long_seq] == c).mean(axis=1)
+        self.user_cat_share = share
+        # weights of the three ground-truth terms + bias
+        self.click_w = np.array([0.9, 2.5, 3.0], np.float32)
+        self.click_b = np.float32(-2.2)
+
+    def _sample_seqs(self, rng, z, length, tau):
+        """Sample item-id sequences proportional to latent affinity."""
+        n = z.shape[0]
+        out = np.empty((n, length), np.uint32)
+        # Gumbel-top-k per chunk of users keeps memory bounded.
+        chunk = 256
+        for s in range(0, n, chunk):
+            zs = z[s:s + chunk]
+            logits = (zs @ self.z_item.T) / tau
+            g = rng.gumbel(size=(zs.shape[0], self.n_items))
+            idx = np.argpartition(-(logits + g), length, axis=1)[:, :length]
+            out[s:s + chunk] = idx.astype(np.uint32)
+        return out
+
+    # ------------------------------------------------------------------
+    def click_logit(self, users, items):
+        """Ground-truth click logit for (user, item) index arrays."""
+        short = np.einsum("ud,ud->u",
+                          self.z_user[users], self.z_item[items]) \
+            / np.sqrt(dims.D_LATENT)
+        long_t = np.einsum("ud,ud->u",
+                           self.user_mean_mm[users], self.item_mm[items])
+        cat = self.user_cat_share[users, self.category[items]]
+        w, b = self.click_w, self.click_b
+        return w[0] * short + w[1] * long_t + w[2] * cat + b
+
+    def click_prob(self, users, items):
+        return 1.0 / (1.0 + np.exp(-self.click_logit(users, items)))
+
+    def sim_subsequence(self, user, cat, cap=dims.L_SIM_SUB):
+        """SIM-hard: the user's long-term subsequence in one category."""
+        seq = self.long_seq[user]
+        mask = self.category[seq] == cat
+        return seq[mask][:cap]
+
+
+# --------------------------------------------------------------------------
+# Request sampling (training / evaluation logs).
+# --------------------------------------------------------------------------
+def sample_request(world, rng, n_candidates, n_impressions=32):
+    """One pre-ranking request: user, candidates, teacher, impressions.
+
+    Candidates mix affinity-biased and random items (retrieval-shaped).
+    The 'ranking model' teacher is the oracle probability; impressions are
+    the teacher's top slots with exploration, clicks ~ Bernoulli(oracle).
+    """
+    u = int(rng.integers(world.n_users))
+    n_aff = n_candidates // 2
+    logits = world.z_user[u] @ world.z_item.T
+    g = rng.gumbel(size=world.n_items)
+    aff = np.argpartition(-(logits + g), n_aff)[:n_aff]
+    rnd = rng.integers(0, world.n_items, n_candidates - n_aff)
+    cands = np.unique(np.concatenate([aff, rnd]))[:n_candidates]
+    if len(cands) < n_candidates:  # pad with random extras
+        extra = rng.integers(0, world.n_items, n_candidates - len(cands))
+        cands = np.concatenate([cands, extra])
+    users = np.full(len(cands), u)
+    teacher = world.click_prob(users, cands).astype(np.float32)
+
+    order = np.argsort(-teacher)
+    top = order[: n_impressions - n_impressions // 4]
+    explore = rng.choice(order[n_impressions:], n_impressions // 4,
+                         replace=False)
+    imp = np.concatenate([top, explore])
+    p = teacher[imp]
+    clicks = (rng.random(len(imp)) < p).astype(np.float32)
+    return {
+        "user": u,
+        "cands": cands.astype(np.uint32),
+        "teacher": teacher,
+        "imp_idx": imp.astype(np.int32),      # indices into cands
+        "clicks": clicks,
+        "bids": world.item_bid[cands[imp]].astype(np.float32),
+    }
+
+
+def request_ctx(world, user, cands, l_long=None, sim_budget=1.0):
+    """Raw-feature context for ``model.forward`` (training mode).
+
+    l_long optionally subsamples the long sequence (training uses a shorter
+    window than serving; DIN/SimTier outputs are length-normalized so the
+    head transfers).
+    """
+    seq_long = world.long_seq[user]
+    if l_long is not None and l_long < len(seq_long):
+        seq_long = seq_long[:l_long]
+    item_cat = world.category[cands]
+    # SIM cross feature: mean seq-embedding of the category-matched
+    # subsequence, per candidate (computed via a per-category table).
+    budget = max(1, int(dims.L_SIM_SUB * sim_budget))
+    cross = np.zeros((len(cands), dims.D_SIM_CROSS), np.float32)
+    for c in np.unique(item_cat):
+        sub = world.sim_subsequence(user, c, cap=budget)
+        if len(sub):
+            cross[item_cat == c] = world.item_seq_emb[sub].mean(axis=0)
+    return {
+        "profile": world.user_profile[user][None, :],
+        "seq_short": world.item_seq_emb[world.short_seq[user]],
+        "seq_long_raw": world.item_seq_emb[seq_long],
+        "item_raw": world.item_raw[cands],
+        "item_mm": world.item_mm[cands],
+        "seq_mm": world.item_mm[seq_long],
+        "sim_cross": cross,
+    }
+
+
+def add_signatures(ctx, w_hash):
+    """Attach LSH +/-1 signature planes (Eq.5) to a context."""
+    def sig(mm):
+        return np.where(mm @ w_hash.T >= 0, 1.0, -1.0).astype(np.float32)
+    ctx["item_sign"] = sig(ctx["item_mm"])
+    ctx["seq_sign"] = sig(ctx["seq_mm"])
+    return ctx
+
+
+def make_w_hash(seed=13):
+    """The shared N(0,1) hash projection W_hash (Eq.5) — model-independent."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 1, (dims.D_LSH_BITS, dims.D_MM)).astype(np.float32)

@@ -1,0 +1,54 @@
+"""Model / system dimensions, fixed at AOT time.
+
+Single source of truth shared by kernels, model graphs, the AOT manifest and
+(through the manifest) the rust coordinator.  Paper-scale values are noted in
+DESIGN.md §4; these are the scaled equivalents used on the CPU testbed.
+"""
+
+# Shared hidden dimensionality (paper: ~1e2).
+D = 32
+
+# --- user side -----------------------------------------------------------
+# Raw concatenated user-profile embedding width (before Eq.1 projection).
+D_PROFILE_RAW = 64
+# Recent behavior sequence (self-attention input, Eq.2).
+L_SHORT = 64
+D_SEQ_RAW = 32
+
+# --- long-term behavior (SIM / LSH), paper l ~ 1e5 ------------------------
+L_LONG = 2048
+# Multi-modal embedding width (frozen, pre-trained in the paper).
+D_MM = 64
+# LSH signature width in bits; packed to D_LSH_BITS/8 uint8 at rest.
+D_LSH_BITS = 64
+# SimTier histogram tiers (Eq.9).
+N_TIERS = 8
+
+# --- BEA (Alg.1) -----------------------------------------------------------
+N_BRIDGE = 8     # n learnable bridge embeddings (Fig.6 sweeps 1..32)
+M_GROUPS = 8     # m user-side feature groups
+D_BEA = 32       # d' — dimensionality of the async-inferred user vectors
+
+# --- item side -------------------------------------------------------------
+D_ITEM_RAW = 96  # concatenated item attribute embedding width (Eq.4 input)
+
+# --- serving shapes --------------------------------------------------------
+B_MINI = 256       # pre-ranking mini-batch (paper: ~1e3)
+N_CANDIDATES = 4096  # retrieval output per request (paper: ~1e4)
+TOP_K = 128        # pre-ranking output (paper: ~1e2)
+
+# --- synthetic world -------------------------------------------------------
+N_USERS = 2048
+N_ITEMS = 10000
+N_CATEGORIES = 32
+D_LATENT = 16
+
+# SIM-hard subsequence cap per (user, category).
+L_SIM_SUB = 128
+
+# Feature width of the SIM cross feature fed to the pre-rank head.
+D_SIM_CROSS = D
+
+# Pallas tiling for the LSH interaction hot-spot kernel.
+BM_LSH = 128   # mini-batch tile
+BL_LSH = 512   # long-sequence tile

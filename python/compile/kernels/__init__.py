@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts).
+
+Each kernel is a numerically-exact drop-in for its pure-jnp oracle in
+``ref.py`` — that equivalence is enforced by ``python/tests/test_kernels.py``.
+"""
+
+from .bea import bea_combine, bea_item_weights, bea_user
+from .item_mlp import item_mlp
+from .lsh_interact import lsh_interact
+from .score_mlp import score_mlp
+from .user_attention import user_attention
+
+__all__ = [
+    "bea_combine", "bea_item_weights", "bea_user",
+    "item_mlp", "lsh_interact", "score_mlp", "user_attention",
+]

@@ -1,0 +1,96 @@
+"""Pallas kernels for BEA — Bridge Embedding Approximation (Alg.1).
+
+Three pieces with three different execution sites:
+  * ``bea_user``         — Alg.1 steps 1-2, online-async (user side): one
+                           tiny fused block (n, m, d all <= 32).
+  * ``bea_item_weights`` — Alg.1 step 3, nearline (item side): tiled over
+                           the item batch.
+  * ``bea_combine``      — Alg.1 step 4, the only real-time piece: a
+                           [B, n] @ [n, d'] matmul, tiled over B.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import nn
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec, row_spec
+
+
+# --------------------------------------------------------------------------
+# Steps 1-2 (user side, async-online).
+# --------------------------------------------------------------------------
+def _user_kernel(groups_ref, bridges_ref, w_v1_ref, b_v1_ref,
+                 w_v2_ref, b_v2_ref, out_ref):
+    groups = groups_ref[...]
+    d = groups.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=groups.dtype))
+    w = nn.softmax((bridges_ref[...] @ groups.T) * scale, axis=-1)  # [n, m]
+    v = w @ groups                                                  # [n, D]
+    h = nn.relu(v @ w_v1_ref[...].T + b_v1_ref[...])
+    out_ref[...] = h @ w_v2_ref[...].T + b_v2_ref[...]
+
+
+def bea_user(groups, params):
+    """Drop-in for ``ref.bea_user``: [M, D] -> [N_BRIDGE, D_BEA]."""
+    n = params["bridges"].shape[0]
+    d_bea = params["w_v2"].shape[0]
+    args = (groups, params["bridges"], params["w_v1"], params["b_v1"],
+            params["w_v2"], params["b_v2"])
+    return pl.pallas_call(
+        _user_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d_bea), groups.dtype),
+        in_specs=[full_spec(a.shape) for a in args],
+        out_specs=full_spec((n, d_bea)),
+        interpret=INTERPRET,
+    )(*args)
+
+
+# --------------------------------------------------------------------------
+# Step 3 (item side, nearline).
+# --------------------------------------------------------------------------
+def _item_kernel(item_proj_ref, bridges_ref, out_ref):
+    item_proj = item_proj_ref[...]
+    d = item_proj.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=item_proj.dtype))
+    out_ref[...] = nn.softmax((item_proj @ bridges_ref[...].T) * scale,
+                              axis=-1)
+
+
+def bea_item_weights(item_proj, bridges, block_b=128):
+    """Drop-in for ``ref.bea_item_weights``: [B, D] -> [B, N_BRIDGE]."""
+    b, d = item_proj.shape
+    n = bridges.shape[0]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    return pl.pallas_call(
+        _item_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), item_proj.dtype),
+        grid=(b // block_b,),
+        in_specs=[row_spec(block_b, d), full_spec(bridges.shape)],
+        out_specs=row_spec(block_b, n),
+        interpret=INTERPRET,
+    )(item_proj, bridges)
+
+
+# --------------------------------------------------------------------------
+# Step 4 (real-time): the only interaction computed at pre-rank time.
+# --------------------------------------------------------------------------
+def _combine_kernel(w_ref, v_ref, out_ref):
+    out_ref[...] = w_ref[...] @ v_ref[...]
+
+
+def bea_combine(bea_w, bea_v, block_b=128):
+    """Drop-in for ``ref.bea_combine``: [B, n] @ [n, d'] -> [B, d']."""
+    b, n = bea_w.shape
+    d_bea = bea_v.shape[-1]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    return pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d_bea), bea_w.dtype),
+        grid=(b // block_b,),
+        in_specs=[row_spec(block_b, n), full_spec(bea_v.shape)],
+        out_specs=row_spec(block_b, d_bea),
+        interpret=INTERPRET,
+    )(bea_w, bea_v)

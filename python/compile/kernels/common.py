@@ -1,0 +1,28 @@
+"""Shared Pallas helpers.
+
+All kernels in this package are authored for TPU tiling disciplines
+(BlockSpec-driven HBM->VMEM schedules, MXU-shaped matmuls) but are *executed*
+with ``interpret=True``: the image's PJRT plugin is CPU-only and cannot run
+Mosaic custom-calls, so interpret mode is the correctness (and AOT-lowering)
+path.  Real-TPU resource estimates live in DESIGN.md §7/§8.
+"""
+
+from jax.experimental import pallas as pl
+
+# Every pallas_call in this repo must pass interpret=INTERPRET.
+INTERPRET = True
+
+
+def full_spec(shape):
+    """BlockSpec that maps the whole array into VMEM for every grid step.
+
+    Used for small parameter tensors (weights, biases, bridges) that fit
+    VMEM entirely and are reused by every tile.
+    """
+    ndim = len(shape)
+    return pl.BlockSpec(shape, lambda *_: (0,) * ndim)
+
+
+def row_spec(block_rows, width):
+    """BlockSpec tiling the leading axis by ``block_rows`` on grid axis 0."""
+    return pl.BlockSpec((block_rows, width), lambda i, *_: (i, 0))

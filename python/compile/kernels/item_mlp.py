@@ -1,0 +1,41 @@
+"""Pallas kernel: item tower MLP (Eq.4), the nearline N2O computation.
+
+Projects concatenated item attribute embeddings [B, D_ITEM_RAW] to the
+compressed item vector [B, D] plus the BEA projection [B, D].  Tiled over
+the item batch; all weights fit VMEM whole.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import nn
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec, row_spec
+
+
+def _kernel(item_ref, w1_ref, b1_ref, w2_ref, b2_ref, w_proj_ref,
+            vec_ref, proj_ref):
+    item = item_ref[...]
+    h = nn.relu(item @ w1_ref[...].T + b1_ref[...])
+    vec_ref[...] = h @ w2_ref[...].T + b2_ref[...]
+    proj_ref[...] = item @ w_proj_ref[...].T
+
+
+def item_mlp(item_raw, params, block_b=128):
+    """Drop-in for ``ref.item_mlp``: [B, R] -> ([B, D], [B, D])."""
+    b, r = item_raw.shape
+    d = params["w2"].shape[0]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    args = (item_raw, params["w1"], params["b1"], params["w2"],
+            params["b2"], params["w_proj"])
+    in_specs = [row_spec(block_b, r)] + [full_spec(a.shape) for a in args[1:]]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(jax.ShapeDtypeStruct((b, d), item_raw.dtype),
+                   jax.ShapeDtypeStruct((b, d), item_raw.dtype)),
+        grid=(b // block_b,),
+        in_specs=in_specs,
+        out_specs=(row_spec(block_b, d), row_spec(block_b, d)),
+        interpret=INTERPRET,
+    )(*args)

@@ -1,0 +1,94 @@
+"""Pallas kernel: fused LSH similarity + DIN + SimTier (Eqs.5-9).
+
+This is the pre-ranking interaction hot-spot: a [B, L] similarity matrix
+between candidate signatures and the user's long-term sequence signatures,
+consumed twice (DIN weighted pooling, SimTier histogram) without ever being
+materialized in HBM.
+
+Hardware adaptation (DESIGN.md §7): the paper computes similarity as
+uint8 XNOR + PopulationCount (a CPU/GPU scalar idiom).  On TPU the same
+quantity is an affine function of a plain matmul over +/-1 planes —
+matches = (d' + s_i . s_j)/2 — which lands on the MXU systolic array.  The
+kernel therefore:
+
+  * streams (BM x d') candidate-signature tiles and (BL x d') sequence tiles
+    from HBM into VMEM via ``BlockSpec`` (grid = B/BM x L/BL),
+  * computes the sim tile with one MXU matmul,
+  * immediately reduces it into two VMEM accumulators (DIN [BM, D] via a
+    second matmul against the sequence-embedding tile; SimTier [BM, N] via a
+    one-hot-matmul histogram), so the [B, L] matrix never leaves VMEM.
+
+VMEM per grid step at the shipped tiles (BM=128, BL=512, d'=64, D=32,
+f32): sigs 128*64*4 + 512*64*4 = 163 KB, sim tile 128*512*4 = 256 KB,
+seq_emb 512*32*4 = 64 KB, accumulators ~20 KB — well under a 16 MB VMEM
+budget; tiles can be scaled up ~8x on a real chip for deeper MXU pipelining.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _kernel(n_tiers, l_total, item_sign_ref, seq_sign_ref, seq_emb_ref,
+            din_ref, tier_ref):
+    li = pl.program_id(1)
+
+    # First sequence tile for this batch tile: zero the accumulators.
+    @pl.when(li == 0)
+    def _init():
+        din_ref[...] = jnp.zeros_like(din_ref)
+        tier_ref[...] = jnp.zeros_like(tier_ref)
+
+    item_sign = item_sign_ref[...]                   # [BM, d'] +/-1
+    seq_sign = seq_sign_ref[...]                     # [BL, d'] +/-1
+    dp = item_sign.shape[-1]
+
+    # Eqs.(6)-(7): XNOR-match similarity == affine of the +/-1 matmul (MXU).
+    dots = item_sign @ seq_sign.T                    # [BM, BL]
+    sim = (1.0 + dots / dp) * 0.5
+
+    # Eq.(8): DIN weighted pooling — second MXU matmul, accumulated.
+    din_ref[...] += (sim @ seq_emb_ref[...]) * (1.0 / l_total)
+
+    # Eq.(9): SimTier histogram via one-hot matmul (no scatter on TPU).
+    idx = jnp.clip(jnp.floor(sim * n_tiers), 0, n_tiers - 1)
+    edges = jnp.arange(n_tiers, dtype=sim.dtype)
+    onehot = (idx[..., None] == edges).astype(sim.dtype)   # [BM, BL, N]
+    tier_ref[...] += onehot.sum(axis=1) * (1.0 / l_total)
+
+
+def lsh_interact(item_sign, seq_sign, seq_emb, n_tiers,
+                 block_b=128, block_l=512):
+    """Drop-in for ``ref.lsh_interact``.
+
+    item_sign: [B, d'] +/-1, seq_sign: [L, d'] +/-1, seq_emb: [L, D].
+    Returns (din [B, D], tiers [B, n_tiers]).
+    """
+    b, dp = item_sign.shape
+    l, d = seq_emb.shape
+    block_b = min(block_b, b)
+    block_l = min(block_l, l)
+    assert b % block_b == 0 and l % block_l == 0, (b, block_b, l, block_l)
+
+    kernel = functools.partial(_kernel, n_tiers, l)
+    grid = (b // block_b, l // block_l)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((b, d), item_sign.dtype),
+                   jax.ShapeDtypeStruct((b, n_tiers), item_sign.dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, dp), lambda bi, li: (bi, 0)),
+            pl.BlockSpec((block_l, dp), lambda bi, li: (li, 0)),
+            pl.BlockSpec((block_l, d), lambda bi, li: (li, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, d), lambda bi, li: (bi, 0)),
+            pl.BlockSpec((block_b, n_tiers), lambda bi, li: (bi, 0)),
+        ),
+        interpret=INTERPRET,
+    )(item_sign, seq_sign, seq_emb)

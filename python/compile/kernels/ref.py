@@ -1,0 +1,226 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its oracle to float tolerance (pytest + hypothesis sweeps in
+``python/tests/``).  They are also the *training-time* compute path — Pallas
+``interpret=True`` is far too slow to differentiate through, and the kernels
+are numerically identical, so trained parameters transfer to the
+kernel-lowered AOT artifacts unchanged.
+"""
+
+import jax.numpy as jnp
+from jax import nn
+
+
+# --------------------------------------------------------------------------
+# User tower: Eq.(1)-(3) — projections, self-attention, profile cross-attn.
+# --------------------------------------------------------------------------
+def user_attention(profile, seq, params):
+    """Fused user-side attention tower.
+
+    Args:
+      profile: [1, D_PROFILE_RAW] raw profile embedding.
+      seq:     [L_SHORT, D_SEQ_RAW] recent behavior sequence embeddings.
+      params:  dict with keys
+        w_profile [D, D_PROFILE_RAW], w_seq [D, D_SEQ_RAW],
+        w_ffn1 [D, D], b_ffn1 [D], w_ffn2 [D, D], b_ffn2 [D],
+        w_out [D, 2*D], b_out [D].
+
+    Returns:
+      u_vec: [1, D] combined user vector (cached by the Merger).
+    """
+    d = params["w_profile"].shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=profile.dtype))
+
+    # Eq.(1): project into the shared dimensionality.
+    p_hat = profile @ params["w_profile"].T                  # [1, D]
+    s_hat = seq @ params["w_seq"].T                          # [L, D]
+
+    # Eq.(2): self-attention over the behavior sequence, FFN, mean-pool.
+    attn = nn.softmax((s_hat @ s_hat.T) * scale, axis=-1)    # [L, L]
+    ctx = attn @ s_hat                                       # [L, D]
+    ffn = nn.relu(ctx @ params["w_ffn1"].T + params["b_ffn1"])
+    ffn = ffn @ params["w_ffn2"].T + params["b_ffn2"]        # [L, D]
+    u_self = jnp.mean(ffn, axis=0, keepdims=True)            # [1, D]
+
+    # Eq.(3): cross-attention profile -> sequence.
+    cross = nn.softmax((p_hat @ s_hat.T) * scale, axis=-1)   # [1, L]
+    u_prof = cross @ s_hat                                   # [1, D]
+
+    # Combine and project to the cached user vector.
+    u = jnp.concatenate([u_self, u_prof], axis=-1)           # [1, 2D]
+    return u @ params["w_out"].T + params["b_out"]           # [1, D]
+
+
+def user_groups(profile, seq, params):
+    """Derive the m user-side feature groups U in R^{m x d} for BEA.
+
+    Groups are heterogeneous views of the user: projected profile, sequence
+    mean / max / last-item summaries, mixed by a learned block projection.
+    profile [1, P], seq [L, S] -> [M_GROUPS, D].
+    """
+    d = params["w_profile"].shape[0]
+    m = params["b_groups"].shape[0] // d
+    p_hat = profile @ params["w_profile"].T                  # [1, D]
+    s_hat = seq @ params["w_seq"].T                          # [L, D]
+    feats = [
+        p_hat,
+        jnp.mean(s_hat, axis=0, keepdims=True),
+        jnp.max(s_hat, axis=0, keepdims=True),
+        s_hat[-1:, :],
+    ]
+    # Tile the four base views up to M_GROUPS rows, then mix with a learned
+    # [M*D, M*D] projection so each group becomes a distinct view.
+    base = jnp.concatenate(feats, axis=0)                    # [4, D]
+    reps = -(-m // base.shape[0])                            # ceil div
+    tiled = jnp.tile(base, (reps, 1))[:m]                    # [M, D]
+    mixed = (tiled.reshape(1, -1) @ params["w_groups"].T).reshape(m, d)
+    return nn.relu(mixed + params["b_groups"].reshape(m, d))
+
+
+# --------------------------------------------------------------------------
+# BEA — Bridge Embedding Approximation (Alg.1).
+# --------------------------------------------------------------------------
+def bea_user(groups, params):
+    """Alg.1 steps 1-2 (user side, runs async-online).
+
+    groups: [M_GROUPS, D]; params: bridges [N_BRIDGE, D], w_v1 [D, D],
+    b_v1 [D], w_v2 [D_BEA, D], b_v2 [D_BEA].
+    Returns bea_v: [N_BRIDGE, D_BEA] — the n async-inferred user vectors.
+    """
+    d = groups.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=groups.dtype))
+    w = nn.softmax((params["bridges"] @ groups.T) * scale, axis=-1)  # [n, m]
+    v = w @ groups                                                   # [n, D]
+    h = nn.relu(v @ params["w_v1"].T + params["b_v1"])
+    return h @ params["w_v2"].T + params["b_v2"]                     # [n, d']
+
+
+def bea_item_weights(item_proj, bridges):
+    """Alg.1 step 3 (item side, runs nearline): cross-attn item x bridges.
+
+    item_proj: [B, D]; bridges: [N_BRIDGE, D] -> [B, N_BRIDGE] softmax rows.
+    """
+    d = item_proj.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=item_proj.dtype))
+    return nn.softmax((item_proj @ bridges.T) * scale, axis=-1)
+
+
+def bea_combine(bea_w, bea_v):
+    """Alg.1 step 4 (real-time): weighted sum of user-side vectors.
+
+    bea_w: [B, N_BRIDGE]; bea_v: [N_BRIDGE, D_BEA] -> [B, D_BEA].
+    """
+    return bea_w @ bea_v
+
+
+def full_cross(item_proj, groups, params):
+    """Full-Cross baseline (§5.2.2): direct cross-attention between every
+    candidate item and the user feature groups — what BEA approximates.
+    item_proj: [B, D]; groups: [M, D] -> [B, D_BEA].
+    """
+    d = item_proj.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=item_proj.dtype))
+    w = nn.softmax((item_proj @ groups.T) * scale, axis=-1)   # [B, M]
+    v = w @ groups                                            # [B, D]
+    h = nn.relu(v @ params["w_v1"].T + params["b_v1"])
+    return h @ params["w_v2"].T + params["b_v2"]              # [B, d']
+
+
+# --------------------------------------------------------------------------
+# Item tower (Eq.4): MLP compression of concatenated item embeddings.
+# --------------------------------------------------------------------------
+def item_mlp(item_raw, params):
+    """item_raw: [B, D_ITEM_RAW] -> (item_vec [B, D], item_proj [B, D]).
+
+    ``item_vec`` is the N2O-cached compressed item vector; ``item_proj`` is
+    the projection used for the BEA item-side attention.
+    """
+    h = nn.relu(item_raw @ params["w1"].T + params["b1"])
+    item_vec = h @ params["w2"].T + params["b2"]
+    item_proj = item_raw @ params["w_proj"].T
+    return item_vec, item_proj
+
+
+# --------------------------------------------------------------------------
+# LSH long-term interaction (Eqs.5-9): similarity + DIN + SimTier.
+# --------------------------------------------------------------------------
+def lsh_signature(mm, w_hash):
+    """Eq.(5): sign-random-projection signature, as a +/-1 float plane.
+
+    mm: [N, D_MM]; w_hash: [D_LSH_BITS, D_MM] ~ N(0,1), shared.
+    Returns [N, D_LSH_BITS] in {-1.0, +1.0}.  (The paper stores
+    Relu(Sign(.)) bits packed to uint8; the +/-1 plane is the TPU-friendly
+    bijection of the same bit pattern — DESIGN.md §7.)
+    """
+    return jnp.where(mm @ w_hash.T >= 0.0, 1.0, -1.0).astype(mm.dtype)
+
+
+def lsh_similarity(sig_a, sig_b):
+    """Eqs.(6)-(7): normalized XNOR-match similarity in [0, 1].
+
+    With +/-1 planes, matches = (d' + a.b)/2, so sim = (1 + a.b/d') / 2.
+    sig_a: [B, d'], sig_b: [L, d'] -> [B, L].
+    """
+    dp = sig_a.shape[-1]
+    dots = sig_a @ sig_b.T
+    return (1.0 + dots / dp) * 0.5
+
+
+def din_pool(sim, seq_emb, scale):
+    """Eq.(8): similarity-weighted pooling of projected sequence embeddings.
+
+    sim: [B, L]; seq_emb: [L, D] (already W_seq-projected — the user-side,
+    async-precomputable half); scale: 1/L normalizer -> [B, D].
+    """
+    return (sim @ seq_emb) * scale
+
+
+def simtier_hist(sim, n_tiers):
+    """Eq.(9): histogram of similarity scores over N equal tiers, /L.
+
+    sim: [B, L] in [0,1] -> [B, n_tiers].  One-hot matmul keeps the binning
+    MXU-friendly (no scatter).
+    """
+    l = sim.shape[-1]
+    idx = jnp.clip(jnp.floor(sim * n_tiers), 0, n_tiers - 1)  # [B, L]
+    edges = jnp.arange(n_tiers, dtype=sim.dtype)              # [N]
+    onehot = (idx[..., None] == edges).astype(sim.dtype)      # [B, L, N]
+    return onehot.sum(axis=1) / l
+
+
+def lsh_interact(item_sign, seq_sign, seq_emb, n_tiers):
+    """Fused Eqs.(6)-(9): the pre-ranking interaction hot-spot.
+
+    item_sign: [B, d'] +/-1, seq_sign: [L, d'] +/-1, seq_emb: [L, D].
+    Returns (din [B, D], tiers [B, n_tiers]).
+    """
+    l = seq_sign.shape[0]
+    sim = lsh_similarity(item_sign, seq_sign)       # [B, L]
+    din = din_pool(sim, seq_emb, 1.0 / l)           # [B, D]
+    tiers = simtier_hist(sim, n_tiers)              # [B, N]
+    return din, tiers
+
+
+def full_interact(item_mm, seq_mm, seq_emb, n_tiers):
+    """Full-precision counterpart (Table 3 'DIN + SimTier', Table 4
+    '+Long-term'): scaled-sigmoid dot-product similarity on raw multi-modal
+    embeddings, same DIN + SimTier heads.
+    """
+    l = seq_mm.shape[0]
+    d = item_mm.shape[-1]
+    sim = nn.sigmoid((item_mm @ seq_mm.T) / jnp.sqrt(jnp.asarray(d, item_mm.dtype)))
+    din = din_pool(sim, seq_emb, 1.0 / l)
+    tiers = simtier_hist(sim, n_tiers)
+    return din, tiers
+
+
+# --------------------------------------------------------------------------
+# Scoring head MLP.
+# --------------------------------------------------------------------------
+def score_mlp(feats, params):
+    """feats: [B, F] -> scores [B] via a 3-layer MLP with sigmoid output."""
+    h = nn.relu(feats @ params["w1"].T + params["b1"])
+    h = nn.relu(h @ params["w2"].T + params["b2"])
+    logits = (h @ params["w3"].T + params["b3"]).squeeze(-1)
+    return nn.sigmoid(logits)

@@ -1,0 +1,35 @@
+"""Pallas kernel: pre-ranking scoring head MLP, tiled over the mini-batch."""
+
+import jax
+import jax.numpy as jnp
+from jax import nn
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec, row_spec
+
+
+def _kernel(feats_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+            out_ref):
+    h = nn.relu(feats_ref[...] @ w1_ref[...].T + b1_ref[...])
+    h = nn.relu(h @ w2_ref[...].T + b2_ref[...])
+    logits = h @ w3_ref[...].T + b3_ref[...]           # [BM, 1]
+    out_ref[...] = nn.sigmoid(logits)
+
+
+def score_mlp(feats, params, block_b=128):
+    """Drop-in for ``ref.score_mlp``: [B, F] -> [B] sigmoid scores."""
+    b, f = feats.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    args = (feats, params["w1"], params["b1"], params["w2"], params["b2"],
+            params["w3"], params["b3"])
+    in_specs = [row_spec(block_b, f)] + [full_spec(a.shape) for a in args[1:]]
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 1), feats.dtype),
+        grid=(b // block_b,),
+        in_specs=in_specs,
+        out_specs=row_spec(block_b, 1),
+        interpret=INTERPRET,
+    )(*args)
+    return out.squeeze(-1)

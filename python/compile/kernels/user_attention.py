@@ -1,0 +1,65 @@
+"""Pallas kernel: fused user-side attention tower (Eqs.1-3).
+
+The whole tower — two input projections, sequence self-attention + FFN +
+mean-pool, profile->sequence cross-attention, output projection — runs as a
+single fused kernel: with l = L_SHORT = 64 and d = 32 every operand fits in
+one VMEM-resident block (~100 KB), so there is no grid.  On a real TPU this
+is exactly the "one user, one core, zero HBM round-trips" schedule that makes
+online-async user computation cheap enough to overlap with retrieval.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import nn
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec
+
+
+def _kernel(profile_ref, seq_ref,
+            w_profile_ref, w_seq_ref,
+            w_ffn1_ref, b_ffn1_ref, w_ffn2_ref, b_ffn2_ref,
+            w_out_ref, b_out_ref,
+            out_ref):
+    profile = profile_ref[...]
+    seq = seq_ref[...]
+    d = w_profile_ref.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=profile.dtype))
+
+    # Eq.(1): projections into the shared dimensionality.
+    p_hat = profile @ w_profile_ref[...].T             # [1, D]
+    s_hat = seq @ w_seq_ref[...].T                     # [L, D]
+
+    # Eq.(2): self-attention + FFN + mean-pool. The [L, L] score matrix
+    # stays in VMEM/registers; softmax rows run on the VPU.
+    attn = nn.softmax((s_hat @ s_hat.T) * scale, axis=-1)
+    ctx = attn @ s_hat
+    ffn = nn.relu(ctx @ w_ffn1_ref[...].T + b_ffn1_ref[...])
+    ffn = ffn @ w_ffn2_ref[...].T + b_ffn2_ref[...]
+    u_self = jnp.mean(ffn, axis=0, keepdims=True)      # [1, D]
+
+    # Eq.(3): profile cross-attention.
+    cross = nn.softmax((p_hat @ s_hat.T) * scale, axis=-1)
+    u_prof = cross @ s_hat                             # [1, D]
+
+    u = jnp.concatenate([u_self, u_prof], axis=-1)     # [1, 2D]
+    out_ref[...] = u @ w_out_ref[...].T + b_out_ref[...]
+
+
+def user_attention(profile, seq, params):
+    """Drop-in for ``ref.user_attention`` — same signature and numerics."""
+    d = params["w_profile"].shape[0]
+    args = (
+        profile, seq,
+        params["w_profile"], params["w_seq"],
+        params["w_ffn1"], params["b_ffn1"],
+        params["w_ffn2"], params["b_ffn2"],
+        params["w_out"], params["b_out"],
+    )
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1, d), profile.dtype),
+        in_specs=[full_spec(a.shape) for a in args],
+        out_specs=full_spec((1, d)),
+        interpret=INTERPRET,
+    )(*args)

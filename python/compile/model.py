@@ -1,0 +1,292 @@
+"""L2: variant model graphs (JAX), composed from the L1 kernels.
+
+One ``forward`` covers both execution modes:
+
+* **Training** (``python/compile/train.py``): the context carries only raw
+  features; every intermediate (user tower, item tower, BEA, signatures) is
+  computed inline and differentiated through.  Uses the pure-jnp oracles.
+
+* **Serving** (``aot.py`` -> rust): the context carries the precomputed
+  tensors that AIF's asynchronous phases produce (``u_vec``, ``bea_v`` from
+  online-async; ``item_vec``, ``bea_w`` from the nearline N2O table;
+  ``seq_emb``/``seq_sign`` from the async user cache) and the head only runs
+  the interaction-dependent remainder.  Uses the Pallas kernels so they lower
+  into the AOT HLO.
+
+The *same function* with a different context split is exactly the paper's
+framing: interaction-independent pieces move out of the head, interaction-
+dependent pieces stay (approximated).
+"""
+
+import jax.numpy as jnp
+from jax import nn
+
+from . import dims
+from .kernels import ref
+from . import kernels as pk
+
+
+def cheap_user(profile, seq, params):
+    """COLD-baseline inline user representation (no attention)."""
+    pooled = jnp.concatenate(
+        [profile, jnp.mean(seq, axis=0, keepdims=True)], axis=-1)
+    return nn.relu(pooled @ params["w_cheap"].T + params["b_cheap"])
+
+
+def feat_dim(variant):
+    """Width of the scoring-head input for a variant."""
+    f = 2 * dims.D                      # item_vec + user vec
+    if variant.bea != "none":
+        f += dims.D_BEA
+    if variant.has_long:
+        f += dims.D + dims.N_TIERS      # DIN + SimTier
+    if variant.sim_cross:
+        f += dims.D_SIM_CROSS
+    return f
+
+
+def init_variant_params(variant, rng, d=dims.D):
+    """Full parameter set for one variant (seeded; see params.py)."""
+    from . import params as P
+    out = {}
+    if variant.user in ("async", "attn_inline") or variant.bea != "none":
+        out["user"] = P.init_user_tower(rng, d)
+    if variant.user == "cheap":
+        out["cheap"] = P.init_cheap_user(rng, d)
+    out["item"] = P.init_item_tower(rng, d)
+    if variant.bea != "none":
+        out["bea"] = P.init_bea(rng, n_bridge=variant.n_bridge, d=d)
+    if variant.has_long and "user" not in out:
+        # w_long lives in the user tower params; noasync still projects the
+        # long sequence (it is a per-user, cacheable op either way).
+        out["user"] = {"w_long": P.init_user_tower(rng, d)["w_long"]}
+    out["score"] = P.init_score(rng, feat_dim(variant),
+                                int(round(d * variant.mlp_mult)))
+    return out
+
+
+def _sim_matrix(kind, ctx, item_vec, seq_emb, K):
+    """Similarity matrix [B, L] for a given source kind."""
+    if kind == "lsh":
+        return ref.lsh_similarity(ctx["item_sign"], ctx["seq_sign"])
+    if kind == "mm":
+        d = ctx["item_mm"].shape[-1]
+        return nn.sigmoid((ctx["item_mm"] @ ctx["seq_mm"].T)
+                          / jnp.sqrt(jnp.asarray(d, jnp.float32)))
+    if kind == "id":
+        d = item_vec.shape[-1]
+        return nn.sigmoid((item_vec @ seq_emb.T)
+                          / jnp.sqrt(jnp.asarray(d, jnp.float32)))
+    raise ValueError(kind)
+
+
+def forward(variant, params, ctx, use_kernels=False):
+    """Score a mini-batch of candidates for one request.
+
+    ctx keys (presence depends on variant + execution mode):
+      raw:  profile [1,Dp], seq_short [Ls,Ds], seq_long_raw [L,Ds],
+            item_raw [B,Di], item_mm [B,Dmm], seq_mm [L,Dmm],
+            item_sign [B,d'], seq_sign [L,d'], sim_cross [B,D]
+      pre:  u_vec [1,D], bea_v [n,D'], item_vec [B,D], bea_w [B,n],
+            seq_emb [L,D]
+    Returns scores [B] in (0,1).
+    """
+    K = pk if use_kernels else ref
+
+    # ---- user representation ------------------------------------------
+    if "u_vec" in ctx:
+        u = ctx["u_vec"]
+    elif variant.user in ("async", "attn_inline"):
+        # In training mode 'async' is computed inline — identical math to
+        # the online-async tower artifact.
+        u = K.user_attention(ctx["profile"], ctx["seq_short"],
+                             params["user"])
+    else:
+        u = cheap_user(ctx["profile"], ctx["seq_short"], params["cheap"])
+
+    # ---- item representation -------------------------------------------
+    item_proj = None
+    if "item_vec" in ctx:
+        item_vec = ctx["item_vec"]
+    else:
+        item_vec, item_proj = K.item_mlp(ctx["item_raw"], params["item"])
+    b = item_vec.shape[0]
+
+    feats = [item_vec, jnp.broadcast_to(u, (b, u.shape[-1]))]
+
+    # ---- BEA / Full-Cross ------------------------------------------------
+    if variant.bea == "bridge":
+        if "bea_v" in ctx:
+            bea_v = ctx["bea_v"]
+        else:
+            groups = ref.user_groups(ctx["profile"], ctx["seq_short"],
+                                     params["user"])
+            bea_v = K.bea_user(groups, params["bea"])
+        if "bea_w" in ctx:
+            bea_w = ctx["bea_w"]
+        else:
+            if item_proj is None:
+                item_proj = ctx["item_raw"] @ params["item"]["w_proj"].T
+            bea_w = K.bea_item_weights(item_proj, params["bea"]["bridges"])
+        feats.append(K.bea_combine(bea_w, bea_v))
+    elif variant.bea == "full":
+        groups = ref.user_groups(ctx["profile"], ctx["seq_short"],
+                                 params["user"])
+        if item_proj is None:
+            item_proj = ctx["item_raw"] @ params["item"]["w_proj"].T
+        feats.append(ref.full_cross(item_proj, groups, params["bea"]))
+
+    # ---- long-term interaction (DIN + SimTier) ---------------------------
+    if variant.has_long and "din_g" in ctx:
+        # Fully hoisted serving split: DIN from the linearized factors
+        # (async user pass), SimTier from the serving engine's uint8
+        # popcount path (§4.2).  No [L, .] operand enters the head at all.
+        din = ctx["din_base"] + ctx["item_sign"] @ ctx["din_g"]
+        tiers = ctx["tiers_in"]
+        feats.extend([din, tiers])
+    elif variant.has_long:
+        if "seq_emb" in ctx:
+            seq_emb = ctx["seq_emb"]
+        else:
+            seq_emb = ctx["seq_long_raw"] @ params["user"]["w_long"].T
+        l = seq_emb.shape[0]
+        if variant.din_sim == "lsh" and variant.tier_sim == "lsh":
+            if "tiers_in" in ctx:
+                # Serving split (§4.2): SimTier arrives precomputed from
+                # the serving engine's uint8 XNOR+popcount LUT path (rust
+                # `lsh::tier_histogram`); only DIN's matmuls stay in HLO.
+                sim = ref.lsh_similarity(ctx["item_sign"], ctx["seq_sign"])
+                din = ref.din_pool(sim, seq_emb, 1.0 / l)
+                tiers = ctx["tiers_in"]
+            else:
+                # Fused hot-spot kernel — the TPU deployment shape where
+                # MXU matmul + VPU binning make both heads one pass
+                # (−93.75% complexity row of Table 3).
+                din, tiers = K.lsh_interact(ctx["item_sign"],
+                                            ctx["seq_sign"],
+                                            seq_emb, dims.N_TIERS)
+        else:
+            sims = {}
+            for kind in {variant.din_sim, variant.tier_sim} - {"none"}:
+                sims[kind] = _sim_matrix(kind, ctx, item_vec, seq_emb, K)
+            din = ref.din_pool(sims[variant.din_sim], seq_emb, 1.0 / l) \
+                if variant.din_sim != "none" else None
+            tiers = ref.simtier_hist(sims[variant.tier_sim], dims.N_TIERS) \
+                if variant.tier_sim != "none" else None
+        if din is None:
+            din = jnp.zeros((b, dims.D), jnp.float32)
+        if tiers is None:
+            tiers = jnp.zeros((b, dims.N_TIERS), jnp.float32)
+        feats.extend([din, tiers])
+
+    # ---- SIM-hard cross feature ------------------------------------------
+    if variant.sim_cross:
+        feats.append(ctx["sim_cross"])
+
+    x = jnp.concatenate(feats, axis=-1)
+    return K.score_mlp(x, params["score"])
+
+
+# --------------------------------------------------------------------------
+# Tower graphs — the asynchronous pieces, lowered as standalone artifacts.
+# --------------------------------------------------------------------------
+def user_tower(params, profile, seq_short, seq_long_raw, seq_sign=None,
+               use_kernels=True):
+    """Online-async user computation (Merger phase 1, §3.1).
+
+    Returns (u_vec [1,D], bea_v [n,D'], seq_emb [L,D]) — plus, when the
+    long-term signature plane is supplied, the **linearized DIN factors**:
+
+      DIN = sim @ E / L  with  sim = 1/2 + S_i S_s^T / (2 d')
+          = din_base + S_i @ din_g,
+      din_base = mean(E)/2          (1, D)
+      din_g    = S_s^T E / (2 d' L) (d', D)
+
+    The LSH similarity is *affine in the signature dot product*, so the
+    O(b·L·d) DIN pooling hoists into this asynchronous, per-user pass —
+    the real-time phase pays only a [b,d']x[d',D] matmul.  This is the
+    paper's own precompute-the-user-side principle applied to Eq.(8).
+    """
+    K = pk if use_kernels else ref
+    u_vec = K.user_attention(profile, seq_short, params["user"])
+    groups = ref.user_groups(profile, seq_short, params["user"])
+    bea_v = K.bea_user(groups, params["bea"])
+    seq_emb = seq_long_raw @ params["user"]["w_long"].T
+    if seq_sign is None:
+        return u_vec, bea_v, seq_emb
+    l = seq_emb.shape[0]
+    dp = seq_sign.shape[-1]
+    din_base = 0.5 * jnp.mean(seq_emb, axis=0, keepdims=True)
+    din_g = (seq_sign.T @ seq_emb) / (2.0 * dp * l)
+    return u_vec, bea_v, seq_emb, din_base, din_g
+
+
+def item_tower(params, item_raw, use_kernels=True):
+    """Nearline item computation (N2O, §3.2).
+
+    Returns (item_vec [B,D], bea_w [B,n]) — one row per item, stored in the
+    N2O index table, recomputed only on model/feature updates.
+    """
+    K = pk if use_kernels else ref
+    item_vec, item_proj = K.item_mlp(item_raw, params["item"])
+    bea_w = K.bea_item_weights(item_proj, params["bea"]["bridges"])
+    return item_vec, bea_w
+
+
+# --------------------------------------------------------------------------
+# Serving input signatures (drives the AOT manifest + rust assembly).
+# --------------------------------------------------------------------------
+def serving_inputs(variant, b=dims.B_MINI, l=dims.L_LONG, pallas=False):
+    """Ordered (name, shape) list of head inputs for a serving variant.
+
+    ``pallas=False`` (the CPU serving flavor) adds a ``tiers_in`` input for
+    LSH variants: SimTier is computed by the serving engine's packed
+    popcount path.  ``pallas=True`` (the TPU flavor) computes SimTier
+    inside the fused kernel and takes no such input.
+    """
+    sig = []
+    if variant.user == "async":
+        sig.append(("u_vec", (1, dims.D)))
+    else:
+        sig.append(("profile", (1, dims.D_PROFILE_RAW)))
+        sig.append(("seq_short", (dims.L_SHORT, dims.D_SEQ_RAW)))
+    if variant.item == "nearline":
+        sig.append(("item_vec", (b, dims.D)))
+    else:
+        sig.append(("item_raw", (b, dims.D_ITEM_RAW)))
+    if variant.bea == "bridge":
+        sig.append(("bea_v", (variant.n_bridge, dims.D_BEA)))
+        if variant.item == "nearline":
+            sig.append(("bea_w", (b, variant.n_bridge)))
+    # 'full' BEA needs no extra inputs (raw profile/seq/item already there).
+    if variant.has_long:
+        kinds = {variant.din_sim, variant.tier_sim}
+        pure_lsh = variant.din_sim == "lsh" and variant.tier_sim == "lsh"
+        if pure_lsh and not pallas:
+            # Hoisted serving split: DIN factors + engine-side SimTier.
+            sig.append(("din_base", (1, dims.D)))
+            sig.append(("din_g", (dims.D_LSH_BITS, dims.D)))
+            sig.append(("item_sign", (b, dims.D_LSH_BITS)))
+            sig.append(("tiers_in", (b, dims.N_TIERS)))
+        else:
+            sig.append(("seq_emb", (l, dims.D)))
+            if "lsh" in kinds:
+                sig.append(("item_sign", (b, dims.D_LSH_BITS)))
+                sig.append(("seq_sign", (l, dims.D_LSH_BITS)))
+            if "mm" in kinds:
+                sig.append(("item_mm", (b, dims.D_MM)))
+                sig.append(("seq_mm", (l, dims.D_MM)))
+    if variant.sim_cross:
+        sig.append(("sim_cross", (b, dims.D_SIM_CROSS)))
+    return sig
+
+
+def head_fn(variant, params, use_kernels=True, pallas=False):
+    """Positional-arg head function matching ``serving_inputs`` order."""
+    names = [n for n, _ in serving_inputs(variant, pallas=pallas)]
+
+    def fn(*args):
+        ctx = dict(zip(names, args))
+        return (forward(variant, params, ctx, use_kernels=use_kernels),)
+
+    return fn

@@ -1,0 +1,114 @@
+"""Parameter initialization and (de)serialization for all model variants.
+
+Parameters are plain dicts of jnp arrays (no flax/haiku in the image).  Each
+variant owns a full parameter set; initialization is seeded so that shared
+shapes start identical across variants (clean ablations).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import dims
+
+
+def _glorot(rng, out_d, in_d):
+    s = np.sqrt(6.0 / (in_d + out_d))
+    return jnp.asarray(rng.uniform(-s, s, size=(out_d, in_d)), jnp.float32)
+
+
+def _zeros(*shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def init_user_tower(rng, d=dims.D):
+    """Eq.(1)-(3) attention tower + BEA group derivation + long-seq proj."""
+    m = dims.M_GROUPS
+    return {
+        "w_profile": _glorot(rng, d, dims.D_PROFILE_RAW),
+        "w_seq": _glorot(rng, d, dims.D_SEQ_RAW),
+        "w_ffn1": _glorot(rng, d, d),
+        "b_ffn1": _zeros(d),
+        "w_ffn2": _glorot(rng, d, d),
+        "b_ffn2": _zeros(d),
+        "w_out": _glorot(rng, d, 2 * d),
+        "b_out": _zeros(d),
+        # group derivation (ref.user_groups)
+        "w_groups": _glorot(rng, m * d, m * d),
+        "b_groups": _zeros(m * d),
+        # long-term sequence projection (W_seq of Eq.8) — user-side half,
+        # applied async-online so DIN's pooled operand is precomputed.
+        "w_long": _glorot(rng, d, dims.D_SEQ_RAW),
+    }
+
+
+def init_cheap_user(rng, d=dims.D):
+    """COLD-style inline user representation: one projection, no attention.
+
+    This is what the sequential baseline can afford inside its latency
+    budget (paper §1: 'forego complex ... sophisticated model structures').
+    """
+    return {
+        "w_cheap": _glorot(rng, d, dims.D_PROFILE_RAW + dims.D_SEQ_RAW),
+        "b_cheap": _zeros(d),
+    }
+
+
+def init_bea(rng, n_bridge=dims.N_BRIDGE, d=dims.D, d_bea=dims.D_BEA):
+    return {
+        "bridges": jnp.asarray(rng.normal(0, 0.5, size=(n_bridge, d)),
+                               jnp.float32),
+        "w_v1": _glorot(rng, d, d),
+        "b_v1": _zeros(d),
+        "w_v2": _glorot(rng, d_bea, d),
+        "b_v2": _zeros(d_bea),
+    }
+
+
+def init_item_tower(rng, d=dims.D):
+    h = 2 * d
+    return {
+        "w1": _glorot(rng, h, dims.D_ITEM_RAW),
+        "b1": _zeros(h),
+        "w2": _glorot(rng, d, h),
+        "b2": _zeros(d),
+        "w_proj": _glorot(rng, d, dims.D_ITEM_RAW),
+    }
+
+
+def init_score(rng, feat_dim, d=dims.D):
+    h1, h2 = 4 * d, 2 * d
+    return {
+        "w1": _glorot(rng, h1, feat_dim),
+        "b1": _zeros(h1),
+        "w2": _glorot(rng, h2, h1),
+        "b2": _zeros(h2),
+        "w3": _glorot(rng, 1, h2),
+        "b3": _zeros(1),
+    }
+
+
+def save_params(params, path):
+    """Flatten a nested dict-of-arrays into an .npz archive."""
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}{k}/", v)
+        else:
+            flat[prefix[:-1]] = np.asarray(node)
+
+    rec("", params)
+    np.savez(path, **flat)
+
+
+def load_params(path):
+    flat = np.load(path)
+    out = {}
+    for key in flat.files:
+        parts = key.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(flat[key])
+    return out

@@ -1,0 +1,106 @@
+"""Variant registry: every model configuration the paper evaluates.
+
+A ``Variant`` is a feature-composition spec consumed by ``model.py`` (graph
+construction), ``train.py`` (quality experiments) and ``aot.py`` (which
+serving variants get an HLO artifact).  Table/figure provenance for each row
+is in DESIGN.md §6.
+"""
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    # User representation: 'cheap' (COLD inline projection), 'attn_inline'
+    # (full Eq.1-3 tower computed inside the head — what Base(full) pays
+    # for), or 'async' (u_vec arrives precomputed from the online-async
+    # tower).
+    user: str = "cheap"
+    # Item representation: 'inline' (Eq.4 MLP inside the head) or 'nearline'
+    # (item_vec arrives from the N2O index table).
+    item: str = "inline"
+    # BEA: 'none', 'bridge' (Alg.1), or 'full' (Full-Cross §5.2.2).
+    bea: str = "none"
+    # Long-term interaction — similarity source for DIN and SimTier
+    # independently: 'none', 'lsh' (Eq.5-7 signatures), 'mm' (full-precision
+    # multi-modal dots), 'id' (id-embedding dots).  Table 3 mixes these.
+    din_sim: str = "none"
+    tier_sim: str = "none"
+    # SIM-hard cross feature (category-matched long-term subsequence).
+    sim_cross: bool = False
+    # Number of bridge embeddings (Fig.6 sweeps this).
+    n_bridge: int = 8
+    # Fraction of the SIM subsequence visible (w/o pre-caching the parse
+    # budget truncates it — §3.3 latency bottleneck).
+    sim_budget: float = 1.0
+    # Scoring-MLP width multiplier (Table 2 'Base with +15% parameters').
+    mlp_mult: float = 1.0
+
+    @property
+    def has_long(self):
+        return self.din_sim != "none" or self.tier_sim != "none"
+
+
+# --- Table 2 rows -----------------------------------------------------------
+BASE = Variant("base")
+BASE_FULL = Variant("base_full", user="attn_inline", item="inline",
+                    bea="full", din_sim="mm", tier_sim="mm", sim_cross=True)
+AIF = Variant("aif", user="async", item="nearline", bea="bridge",
+              din_sim="lsh", tier_sim="lsh", sim_cross=True)
+AIF_NO_ASYNC = Variant("aif_noasync", user="cheap", item="inline", bea="none",
+                       din_sim="lsh", tier_sim="lsh", sim_cross=True)
+AIF_NO_PRECACHE = replace(AIF, name="aif_noprecache", sim_budget=0.25)
+AIF_NO_BEA = replace(AIF, name="aif_nobea", bea="none")
+AIF_NO_LONG = replace(AIF, name="aif_nolong", din_sim="none",
+                      tier_sim="none")
+# 'Base with +15% parameters' — the resource-matched strawman (§5.2.4).
+BASE_P115 = replace(BASE, name="base_p115", mlp_mult=1.15)
+
+TABLE2 = [BASE, BASE_FULL, AIF, AIF_NO_ASYNC, AIF_NO_PRECACHE, AIF_NO_BEA,
+          AIF_NO_LONG, BASE_P115]
+
+# --- Table 3 rows (long-term head combinations; all else AIF-shaped) --------
+T3_DIN_TIER = replace(AIF, name="t3_din_simtier", din_sim="id", tier_sim="mm")
+T3_LSHDIN_TIER = replace(AIF, name="t3_lshdin_simtier", din_sim="lsh",
+                         tier_sim="mm")
+T3_DIN_LSHTIER = replace(AIF, name="t3_din_lshsimtier", din_sim="id",
+                         tier_sim="lsh")
+T3_MMDIN_TIER = replace(AIF, name="t3_mmdin_simtier", din_sim="mm",
+                        tier_sim="mm")
+T3_LSH_LSH = replace(AIF, name="t3_lsh_lsh")  # == AIF head
+
+TABLE3 = [T3_DIN_TIER, T3_LSHDIN_TIER, T3_DIN_LSHTIER, T3_MMDIN_TIER,
+          T3_LSH_LSH]
+
+# --- Table 4 serving rows (incremental pipeline configs) --------------------
+# Quality is not the point of these; they exist so the rust coordinator can
+# serve each incremental configuration under identical load.
+T4_ASYNC_VEC = Variant("t4_asyncvec", user="async", item="nearline")
+T4_SIM = Variant("t4_sim", sim_cross=True)          # served sync vs pre-cached
+T4_BEA = Variant("t4_bea", user="async", item="nearline", bea="bridge")
+T4_LONG_FULL = Variant("t4_longfull", din_sim="mm", tier_sim="mm")
+T4_LSH = Variant("t4_lsh", din_sim="lsh", tier_sim="lsh")
+
+TABLE4 = [BASE, T4_ASYNC_VEC, T4_SIM, T4_BEA, T4_LONG_FULL, T4_LSH, AIF]
+
+# --- Fig.6 sweep -------------------------------------------------------------
+def fig6_variant(n):
+    return replace(AIF, name=f"fig6_n{n}", n_bridge=n)
+
+FIG6_NS = [1, 2, 4, 8, 10, 16, 32]
+
+# Variants that get an AOT HLO artifact (everything rust can serve).
+# aif_noprecache serves the 'aif' head — the difference is purely in how
+# the rust side assembles sim_cross (truncated sync fetch vs LRU cache).
+SERVING = [BASE, BASE_FULL, AIF, AIF_NO_ASYNC, AIF_NO_BEA, AIF_NO_LONG,
+           BASE_P115, T4_ASYNC_VEC, T4_SIM, T4_BEA, T4_LONG_FULL, T4_LSH]
+
+ALL = {v.name: v for v in
+       TABLE2 + TABLE3 + TABLE4 + [fig6_variant(n) for n in FIG6_NS]}
+
+
+def by_name(name):
+    if name in ALL:
+        return ALL[name]
+    raise KeyError(f"unknown variant {name!r}; have {sorted(ALL)}")

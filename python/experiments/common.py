@@ -1,0 +1,71 @@
+"""Shared experiment scaffolding: one world + dataset, train/eval a list of
+variants, report deltas vs Base in paper 'pt' units (percentage points)."""
+
+import json
+import os
+import time
+
+import numpy as np
+
+from compile import data, train, variants
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                       "experiments")
+
+# Experiment scale knobs (AIF_FAST=1 shrinks for CI).
+FAST = os.environ.get("AIF_FAST", "0") == "1"
+N_TRAIN = 96 if FAST else 768
+N_EVAL = 24 if FAST else 128
+N_CAND_EVAL = 256 if FAST else 1024
+L_TRAIN = 128 if FAST else 512
+
+
+def setup(seed=7):
+    world = data.World(seed=seed,
+                       n_users=256 if FAST else 2048,
+                       n_items=2000 if FAST else 10000,
+                       l_long=256 if FAST else 2048)
+    w_hash = data.make_w_hash()
+    train_set, eval_set = train.build_dataset(
+        world, n_train=N_TRAIN, n_eval=N_EVAL, n_cand_eval=N_CAND_EVAL,
+        l_long_train=min(world.l_long, L_TRAIN), seed=17)
+    return world, w_hash, train_set, eval_set
+
+
+def run_variants(vlist, train_set, eval_set, w_hash, epochs=2):
+    """Train + evaluate each variant; returns {name: metrics}."""
+    results = {}
+    for v in vlist:
+        t0 = time.time()
+        params, hist = train.train_variant(v, train_set, w_hash,
+                                           epochs=epochs)
+        m = train.evaluate(v, params, eval_set, w_hash)
+        m["loss_first"], m["loss_last"] = hist[0], hist[-1]
+        m["train_s"] = time.time() - t0
+        results[v.name] = m
+        print(f"  {v.name:24} HR@100 {m['hr@100']:.4f}  GAUC {m['gauc']:.4f}"
+              f"  ({m['train_s']:.0f}s)", flush=True)
+    return results
+
+
+def render_deltas(results, base_name, rows):
+    """Paper-style table: +X.XXpt deltas vs the base row."""
+    base = results[base_name]
+    out = [f"{'method':28}{'HR@100':>10}{'GAUC':>10}{'ΔHR(pt)':>10}"
+           f"{'ΔGAUC(pt)':>11}"]
+    for display, name in rows:
+        m = results[name]
+        dh = (m["hr@100"] - base["hr@100"]) * 100
+        dg = (m["gauc"] - base["gauc"]) * 100
+        out.append(f"{display:28}{m['hr@100']:>10.4f}{m['gauc']:>10.4f}"
+                   f"{dh:>+10.2f}{dg:>+11.2f}")
+    return "\n".join(out)
+
+
+def save(name, results, table):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    with open(os.path.join(OUT_DIR, f"{name}.txt"), "w") as f:
+        f.write(table + "\n")
+    print(f"\n{table}\n\nsaved to {OUT_DIR}/{name}.*", flush=True)

@@ -1,0 +1,39 @@
+"""Table 2 reproduction (offline columns): HR@100 / GAUC for Base,
+Base(full features), AIF and the four ablations.  Online CTR/RPM columns
+come from the rust side (`aif abtest --all-variants`).
+
+Run: cd python && python -m experiments.table2
+"""
+
+from compile import variants
+
+from . import common
+
+
+def main():
+    print("Table 2: building world + dataset...", flush=True)
+    world, w_hash, train_set, eval_set = common.setup()
+    print(f"training {len(variants.TABLE2)} variants "
+          f"({common.N_TRAIN} requests each)...", flush=True)
+    results = common.run_variants(variants.TABLE2, train_set, eval_set,
+                                  w_hash)
+    rows = [
+        ("Base", "base"),
+        ("Base (full features)", "base_full"),
+        ("AIF", "aif"),
+        ("AIF w/o Async-Vectors", "aif_noasync"),
+        ("AIF w/o Pre-Caching SIM", "aif_noprecache"),
+        ("AIF w/o BEA", "aif_nobea"),
+        ("AIF w/o Long-term", "aif_nolong"),
+        ("Base with +15% parameters", "base_p115"),
+    ]
+    table = "== Table 2 (offline: HR@100 / GAUC, deltas vs Base) ==\n"
+    table += common.render_deltas(results, "base", rows)
+    table += ("\n\npaper: Base(full) +8.45/+7.83pt; AIF +7.91/+7.29pt; "
+              "w/o Async-Vec +3.99/+3.71;\n  w/o Pre-Caching +5.97/+6.13; "
+              "w/o BEA +5.86/+6.09; w/o Long-term +5.43/+5.98")
+    common.save("table2", results, table)
+
+
+if __name__ == "__main__":
+    main()

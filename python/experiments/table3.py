@@ -1,0 +1,35 @@
+"""Table 3 reproduction (GAUC column): the five long-term interaction head
+combinations.  Complexity columns come from `cargo bench --bench table3_lsh`.
+
+Run: cd python && python -m experiments.table3
+"""
+
+from compile import variants
+
+from . import common
+
+
+def main():
+    print("Table 3: building world + dataset...", flush=True)
+    world, w_hash, train_set, eval_set = common.setup()
+    print(f"training {len(variants.TABLE3)} head combinations...", flush=True)
+    results = common.run_variants(variants.TABLE3, train_set, eval_set,
+                                  w_hash)
+    rows = [
+        ("DIN + SimTier", "t3_din_simtier"),
+        ("LSH-DIN + SimTier", "t3_lshdin_simtier"),
+        ("DIN + LSH-SimTier", "t3_din_lshsimtier"),
+        ("MM-DIN + SimTier", "t3_mmdin_simtier"),
+        ("LSH-DIN + LSH-SimTier (AIF)", "t3_lsh_lsh"),
+    ]
+    table = "== Table 3 (GAUC of long-term head combinations, deltas vs "
+    table += "DIN+SimTier) ==\n"
+    table += common.render_deltas(results, "t3_din_simtier", rows)
+    table += ("\n\npaper GAUC deltas: LSH-DIN+SimTier −0.28pt; "
+              "DIN+LSH-SimTier −0.37pt;\n  MM-DIN+SimTier −0.23pt; "
+              "LSH+LSH (AIF) −0.45pt — small losses for −93.75% complexity")
+    common.save("table3", results, table)
+
+
+if __name__ == "__main__":
+    main()

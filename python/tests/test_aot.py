@@ -1,0 +1,62 @@
+"""AOT pipeline smoke: fast-mode end-to-end lowering + manifest sanity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def fast_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ, AIF_FAST="1")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--train", "none"],
+        cwd=ROOT, env=env, check=True, capture_output=True, text=True)
+    return out
+
+
+def test_manifest_is_complete(fast_artifacts):
+    man = json.load(open(fast_artifacts / "manifest.json"))
+    for key in ("dims", "artifacts", "variants", "tables", "oracle",
+                "goldens"):
+        assert key in man, key
+    # Towers + every serving head + pallas flavors.
+    names = set(man["artifacts"])
+    assert {"user_tower", "user_tower_pallas", "item_tower",
+            "item_tower_pallas", "head_base", "head_aif",
+            "head_aif_pallas"} <= names
+    # Every registered variant points at an emitted artifact.
+    for v, spec in man["variants"].items():
+        assert spec["artifact"] in names, v
+
+
+def test_hlo_constants_not_elided(fast_artifacts):
+    # The rust parser reads `constant({...})` back as ZEROS — regression
+    # guard for the print_large_constants footgun.
+    for f in fast_artifacts.glob("*.hlo.txt"):
+        assert "constant({...})" not in f.read_text(), f.name
+
+
+def test_tables_match_schema(fast_artifacts):
+    man = json.load(open(fast_artifacts / "manifest.json"))
+    sizes = {"f32": 4, "u32": 4, "u8": 1, "i32": 4}
+    for name, entry in man["tables"].items():
+        path = fast_artifacts / entry["file"]
+        n = 1
+        for d in entry["shape"]:
+            n *= d
+        assert path.stat().st_size == n * sizes[entry["dtype"]], name
+
+
+def test_goldens_load(fast_artifacts):
+    man = json.load(open(fast_artifacts / "manifest.json"))
+    g = man["goldens"]
+    for need in ("profile", "item_raw", "tiers_in", "user_tower.din_g",
+                 "head_aif.scores", "head_base.scores"):
+        assert need in g, need

@@ -1,0 +1,93 @@
+"""Synthetic-world tests: every feature family must carry the signal the
+Table 2/3 ablations depend on (DESIGN.md §2 substitution argument)."""
+
+import numpy as np
+import pytest
+
+from compile import data, dims
+
+
+@pytest.fixture(scope="module")
+def world():
+    return data.World(seed=11, n_users=128, n_items=800, l_long=256)
+
+
+def test_shapes(world):
+    assert world.user_profile.shape == (128, dims.D_PROFILE_RAW)
+    assert world.item_raw.shape == (800, dims.D_ITEM_RAW)
+    assert world.item_mm.shape == (800, dims.D_MM)
+    assert world.long_seq.shape == (128, 256)
+    assert world.category.max() < dims.N_CATEGORIES
+
+
+def test_mm_is_unit_norm(world):
+    norms = np.linalg.norm(world.item_mm, axis=1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+
+
+def test_click_prob_in_unit_interval(world):
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, world.n_users, 200)
+    items = rng.integers(0, world.n_items, 200)
+    p = world.click_prob(users, items)
+    assert np.all((p > 0) & (p < 1))
+
+
+def test_long_term_signal_is_identifiable(world):
+    """Items similar (in mm space) to a user's long history must have higher
+    oracle click prob than random items — the signal LSH preserves."""
+    rng = np.random.default_rng(1)
+    deltas = []
+    for u in range(32):
+        affinity = world.item_mm @ world.user_mean_mm[u]
+        top = np.argsort(-affinity)[:20]
+        rand = rng.integers(0, world.n_items, 20)
+        deltas.append(world.click_prob(np.full(20, u), top).mean()
+                      - world.click_prob(np.full(20, u), rand).mean())
+    assert np.mean(deltas) > 0.05, np.mean(deltas)
+
+
+def test_category_signal_is_identifiable(world):
+    """Items in the user's dominant categories click better — the signal
+    SIM-hard cross features capture."""
+    deltas = []
+    for u in range(32):
+        dom = np.argmax(world.user_cat_share[u])
+        in_cat = np.where(world.category == dom)[0][:20]
+        out_cat = np.where(world.user_cat_share[u][world.category] < 0.01)[0][:20]
+        if len(in_cat) < 5 or len(out_cat) < 5:
+            continue
+        deltas.append(
+            world.click_prob(np.full(len(in_cat), u), in_cat).mean()
+            - world.click_prob(np.full(len(out_cat), u), out_cat).mean())
+    assert np.mean(deltas) > 0.1, np.mean(deltas)
+
+
+def test_sim_subsequence_is_category_pure(world):
+    sub = world.sim_subsequence(3, world.category[world.long_seq[3][0]])
+    assert len(sub) > 0
+    assert (world.category[sub] == world.category[world.long_seq[3][0]]).all()
+
+
+def test_sample_request_structure(world):
+    rng = np.random.default_rng(2)
+    req = data.sample_request(world, rng, 128, n_impressions=16)
+    assert len(req["cands"]) == 128
+    assert len(req["imp_idx"]) == 16
+    assert req["teacher"].shape == (128,)
+    assert set(req["clicks"]) <= {0.0, 1.0}
+    # Impressions index into candidates.
+    assert req["imp_idx"].max() < 128
+
+
+def test_signatures_match_packbits_convention(world):
+    """The ±1 planes and numpy packbits(little) agree bit-for-bit — the
+    convention rust's unpack relies on."""
+    w_hash = data.make_w_hash()
+    bits = (world.item_mm[:16] @ w_hash.T >= 0)
+    packed = np.packbits(bits.astype(np.uint8), axis=1, bitorder="little")
+    plane = np.where(bits, 1.0, -1.0)
+    for i in range(16):
+        for b in range(dims.D_LSH_BITS):
+            bit = (packed[i, b // 8] >> (b % 8)) & 1
+            assert (plane[i, b] > 0) == bool(bit)

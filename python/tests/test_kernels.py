@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel must match its pure-jnp
+reference to float tolerance — the core L1 signal, swept over shapes and
+seeds with hypothesis."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def close(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=RTOL, atol=ATOL)
+
+
+def user_params(rng, d=32, p=64, s=32, m=8):
+    return {
+        "w_profile": arr(rng, d, p), "w_seq": arr(rng, d, s),
+        "w_ffn1": arr(rng, d, d), "b_ffn1": arr(rng, d),
+        "w_ffn2": arr(rng, d, d), "b_ffn2": arr(rng, d),
+        "w_out": arr(rng, d, 2 * d), "b_out": arr(rng, d),
+        "w_groups": arr(rng, m * d, m * d), "b_groups": arr(rng, m * d),
+        "w_long": arr(rng, d, s),
+    }
+
+
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), l=st.sampled_from([16, 64, 128]))
+def test_user_attention_matches_ref(seed, l):
+    rng = np.random.default_rng(seed)
+    params = user_params(rng)
+    profile, seq = arr(rng, 1, 64), arr(rng, l, 32)
+    close(K.user_attention(profile, seq, params),
+          ref.user_attention(profile, seq, params))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), n=st.sampled_from([1, 4, 8, 16]))
+def test_bea_user_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    params = {"bridges": arr(rng, n, 32), "w_v1": arr(rng, 32, 32),
+              "b_v1": arr(rng, 32), "w_v2": arr(rng, 32, 32),
+              "b_v2": arr(rng, 32)}
+    groups = arr(rng, 8, 32)
+    close(K.bea_user(groups, params), ref.bea_user(groups, params))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), b=st.sampled_from([64, 128, 256]))
+def test_bea_item_weights_matches_ref(seed, b):
+    rng = np.random.default_rng(seed)
+    item_proj, bridges = arr(rng, b, 32), arr(rng, 8, 32)
+    got = K.bea_item_weights(item_proj, bridges)
+    close(got, ref.bea_item_weights(item_proj, bridges))
+    # Rows are softmax distributions.
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), b=st.sampled_from([64, 256]),
+       n=st.sampled_from([4, 8]))
+def test_bea_combine_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    w, v = arr(rng, b, n), arr(rng, n, 32)
+    close(K.bea_combine(w, v), ref.bea_combine(w, v))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), b=st.sampled_from([64, 128, 256]))
+def test_item_mlp_matches_ref(seed, b):
+    rng = np.random.default_rng(seed)
+    params = {"w1": arr(rng, 64, 96), "b1": arr(rng, 64),
+              "w2": arr(rng, 32, 64), "b2": arr(rng, 32),
+              "w_proj": arr(rng, 32, 96)}
+    item = arr(rng, b, 96)
+    (kv, kp), (rv, rp) = K.item_mlp(item, params), ref.item_mlp(item, params)
+    close(kv, rv)
+    close(kp, rp)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31),
+       b=st.sampled_from([128, 256]),
+       l=st.sampled_from([512, 1024, 2048]))
+def test_lsh_interact_matches_ref(seed, b, l):
+    rng = np.random.default_rng(seed)
+    w_hash = arr(rng, 64, 64)
+    si = ref.lsh_signature(arr(rng, b, 64), w_hash)
+    ss = ref.lsh_signature(arr(rng, l, 64), w_hash)
+    seq_emb = arr(rng, l, 32)
+    (kd, kt) = K.lsh_interact(si, ss, seq_emb, 8)
+    (rd, rt) = ref.lsh_interact(si, ss, seq_emb, 8)
+    close(kd, rd)
+    close(kt, rt)
+    # Histogram rows sum to 1 (all L entries binned, normalized).
+    np.testing.assert_allclose(np.asarray(kt).sum(-1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), b=st.sampled_from([64, 256]),
+       f=st.sampled_from([64, 136, 168]))
+def test_score_mlp_matches_ref(seed, b, f):
+    rng = np.random.default_rng(seed)
+    params = {"w1": arr(rng, 128, f), "b1": arr(rng, 128),
+              "w2": arr(rng, 64, 128), "b2": arr(rng, 64),
+              "w3": arr(rng, 1, 64), "b3": arr(rng, 1)}
+    feats = arr(rng, b, f)
+    got = K.score_mlp(feats, params)
+    close(got, ref.score_mlp(feats, params))
+    assert np.all((np.asarray(got) >= 0) & (np.asarray(got) <= 1))
+
+
+# --------------------------------------------------------------------------
+def test_lsh_signature_is_pm1_and_lsh_property():
+    rng = np.random.default_rng(5)
+    w_hash = arr(rng, 64, 64)
+    base = arr(rng, 1, 64)
+    near = base + 0.01 * arr(rng, 1, 64)
+    far = -base
+    sb = ref.lsh_signature(base, w_hash)
+    assert set(np.unique(np.asarray(sb))) <= {-1.0, 1.0}
+    sim_near = float(
+        ref.lsh_similarity(sb, ref.lsh_signature(near, w_hash))[0, 0])
+    sim_far = float(
+        ref.lsh_similarity(sb, ref.lsh_signature(far, w_hash))[0, 0])
+    assert sim_near > 0.9, sim_near
+    assert sim_far < 0.1, sim_far
+
+
+def test_din_linearization_is_exact():
+    """The serving-side factorized DIN == the full sim@E pooling."""
+    rng = np.random.default_rng(6)
+    b, l, dp, d = 64, 512, 64, 32
+    w_hash = arr(rng, dp, 64)
+    si = ref.lsh_signature(arr(rng, b, 64), w_hash)
+    ss = ref.lsh_signature(arr(rng, l, 64), w_hash)
+    seq_emb = arr(rng, l, d)
+    full = ref.din_pool(ref.lsh_similarity(si, ss), seq_emb, 1.0 / l)
+    din_base = 0.5 * jnp.mean(seq_emb, axis=0, keepdims=True)
+    din_g = (ss.T @ seq_emb) / (2.0 * dp * l)
+    hoisted = din_base + si @ din_g
+    np.testing.assert_allclose(np.asarray(full), np.asarray(hoisted),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_simtier_rows_are_distributions():
+    rng = np.random.default_rng(7)
+    sim = jnp.asarray(rng.random((32, 300)), jnp.float32)
+    hist = ref.simtier_hist(sim, 8)
+    np.testing.assert_allclose(np.asarray(hist).sum(-1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(hist) >= 0)

@@ -1,0 +1,199 @@
+//! Arena memory pool for high-frequency user-vector caching (paper §3.4:
+//! "AIF adopts an Arena memory pool for the high-frequency updates and
+//! caching of user-side features ... enhancing the efficiency of feature
+//! access and processing").
+//!
+//! Size-classed free lists of `Vec<f32>` buffers: `get(len)` hands out a
+//! zero-length buffer with capacity ≥ len from the smallest fitting class;
+//! dropping the [`PooledBuf`] returns it.  The pre-rank hot loop assembles
+//! mini-batch tensors into pooled buffers instead of fresh allocations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Power-of-two size classes from 256 floats up to 16M floats.
+const MIN_CLASS_LOG2: u32 = 8;
+const N_CLASSES: usize = 17;
+
+pub struct ArenaPool {
+    classes: Vec<Mutex<Vec<Vec<f32>>>>,
+    /// Max buffers retained per class (beyond this, drops really free).
+    retain_per_class: usize,
+    pub allocs: AtomicU64,
+    pub reuses: AtomicU64,
+}
+
+impl ArenaPool {
+    pub fn new(retain_per_class: usize) -> Arc<Self> {
+        Arc::new(ArenaPool {
+            classes: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            retain_per_class,
+            allocs: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+        })
+    }
+
+    fn class_of(len: usize) -> usize {
+        let bits = usize::BITS - len.saturating_sub(1).leading_zeros();
+        (bits.saturating_sub(MIN_CLASS_LOG2) as usize).min(N_CLASSES - 1)
+    }
+
+    fn class_capacity(class: usize) -> usize {
+        1usize << (class as u32 + MIN_CLASS_LOG2)
+    }
+
+    /// Take a buffer with capacity >= len; contents are cleared.
+    pub fn get(self: &Arc<Self>, len: usize) -> PooledBuf {
+        let class = Self::class_of(len);
+        let mut buf = {
+            let mut free = self.classes[class].lock().unwrap();
+            free.pop()
+        }
+        .map(|b| {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            b
+        })
+        .unwrap_or_else(|| {
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+            Vec::with_capacity(Self::class_capacity(class))
+        });
+        buf.clear();
+        PooledBuf {
+            buf,
+            pool: Arc::clone(self),
+            class,
+        }
+    }
+
+    /// Take a zero-filled buffer of exactly `len`.
+    pub fn get_zeroed(self: &Arc<Self>, len: usize) -> PooledBuf {
+        let mut b = self.get(len);
+        b.buf.resize(len, 0.0);
+        b
+    }
+
+    fn put_back(&self, mut buf: Vec<f32>, class: usize) {
+        let mut free = self.classes[class].lock().unwrap();
+        if free.len() < self.retain_per_class {
+            buf.clear();
+            free.push(buf);
+        }
+        // else: drop frees the memory
+    }
+
+    pub fn reuse_ratio(&self) -> f64 {
+        let a = self.allocs.load(Ordering::Relaxed) as f64;
+        let r = self.reuses.load(Ordering::Relaxed) as f64;
+        if a + r == 0.0 {
+            0.0
+        } else {
+            r / (a + r)
+        }
+    }
+
+    /// Bytes currently parked in free lists (§5.3 storage accounting).
+    pub fn pooled_bytes(&self) -> usize {
+        self.classes
+            .iter()
+            .map(|c| {
+                c.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|b| b.capacity() * 4)
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+/// RAII pooled buffer; derefs to `Vec<f32>`.
+pub struct PooledBuf {
+    buf: Vec<f32>,
+    pool: Arc<ArenaPool>,
+    class: usize,
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+}
+
+impl PooledBuf {
+    /// Move the contents out (e.g. into a Tensor), returning an empty
+    /// buffer to the pool immediately.
+    pub fn take(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() > 0 {
+            self.pool.put_back(buf, self.class);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_of_is_monotone() {
+        assert_eq!(ArenaPool::class_of(1), 0);
+        assert_eq!(ArenaPool::class_of(256), 0);
+        assert_eq!(ArenaPool::class_of(257), 1);
+        assert_eq!(ArenaPool::class_of(512), 1);
+        assert!(ArenaPool::class_of(1 << 24) == N_CLASSES - 1);
+    }
+
+    #[test]
+    fn buffers_are_reused() {
+        let pool = ArenaPool::new(8);
+        let ptr1 = {
+            let mut b = pool.get(1000);
+            b.push(1.0);
+            b.as_ptr() as usize
+        }; // returned to pool
+        let b2 = pool.get(900); // same class
+        assert_eq!(b2.as_ptr() as usize, ptr1, "buffer reused");
+        assert!(b2.is_empty(), "reused buffer is cleared");
+        assert_eq!(pool.reuses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zeroed_has_exact_len() {
+        let pool = ArenaPool::new(4);
+        let b = pool.get_zeroed(300);
+        assert_eq!(b.len(), 300);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn retain_limit_bounds_pool() {
+        let pool = ArenaPool::new(2);
+        let bufs: Vec<_> = (0..5).map(|_| pool.get(1000)).collect();
+        drop(bufs);
+        // Only 2 retained.
+        let parked = pool.pooled_bytes();
+        assert!(parked <= 2 * 1024 * 4 + 64, "parked {parked}");
+    }
+
+    #[test]
+    fn take_detaches_contents() {
+        let pool = ArenaPool::new(4);
+        let mut b = pool.get(10);
+        b.extend_from_slice(&[1.0, 2.0]);
+        let v = b.take();
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+}

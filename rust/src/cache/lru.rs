@@ -1,0 +1,281 @@
+//! Sharded LRU cache cluster — the SIM pre-caching substrate (paper §3.3,
+//! Figure 5: "an LRU cache cluster" holding parsed subsequences for all
+//! user-category combinations of the requesting user).
+//!
+//! Classic HashMap + intrusive doubly-linked list per shard (indices into a
+//! slab, no unsafe), `Mutex` per shard; keys hash to shards so concurrent
+//! requests rarely contend.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const NIL: usize = usize::MAX;
+
+struct Entry<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+struct Shard<K, V> {
+    map: HashMap<K, usize>,
+    slab: Vec<Entry<K, V>>,
+    free: Vec<usize>,
+    head: usize, // most-recent
+    tail: usize, // least-recent
+    capacity: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> Shard<K, V> {
+    fn new(capacity: usize) -> Self {
+        Shard {
+            map: HashMap::with_capacity(capacity),
+            slab: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.slab[idx].prev, self.slab[idx].next);
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn get(&mut self, key: &K) -> Option<&V> {
+        let idx = *self.map.get(key)?;
+        self.unlink(idx);
+        self.push_front(idx);
+        Some(&self.slab[idx].value)
+    }
+
+    fn insert(&mut self, key: K, value: V) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.slab[idx].value = value;
+            self.unlink(idx);
+            self.push_front(idx);
+            return false;
+        }
+        let mut evicted = false;
+        if self.map.len() >= self.capacity {
+            // Evict LRU.
+            let lru = self.tail;
+            self.unlink(lru);
+            let old_key = self.slab[lru].key.clone();
+            self.map.remove(&old_key);
+            self.free.push(lru);
+            evicted = true;
+        }
+        let idx = if let Some(i) = self.free.pop() {
+            self.slab[i] = Entry {
+                key: key.clone(),
+                value,
+                prev: NIL,
+                next: NIL,
+            };
+            i
+        } else {
+            self.slab.push(Entry {
+                key: key.clone(),
+                value,
+                prev: NIL,
+                next: NIL,
+            });
+            self.slab.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+        evicted
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Cache statistics (hit ratio drives the Table-4 pre-caching rows).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+/// Thread-safe sharded LRU.
+pub struct ShardedLru<K, V> {
+    shards: Vec<Mutex<Shard<K, V>>>,
+    pub stats: CacheStats,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
+    /// `capacity` is total across `n_shards` shards.
+    pub fn new(capacity: usize, n_shards: usize) -> Self {
+        assert!(n_shards > 0 && capacity >= n_shards);
+        let per = capacity / n_shards;
+        ShardedLru {
+            shards: (0..n_shards)
+                .map(|_| Mutex::new(Shard::new(per)))
+                .collect(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    pub fn get(&self, key: &K) -> Option<V> {
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        match shard.get(key) {
+            Some(v) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: K, value: V) {
+        let evicted = self.shards[self.shard_of(&key)]
+            .lock()
+            .unwrap()
+            .insert(key, value);
+        if evicted {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Get, or compute-and-insert on miss.
+    pub fn get_or_insert_with(&self, key: K, f: impl FnOnce() -> V) -> V {
+        if let Some(v) = self.get(&key) {
+            return v;
+        }
+        let v = f();
+        self.insert(key, v.clone());
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(3, 1);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(3, 30);
+        assert_eq!(c.get(&1), Some(10)); // touch 1 -> 2 is now LRU
+        c.insert(4, 40);
+        assert_eq!(c.get(&2), None, "2 evicted");
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&4), Some(40));
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn update_existing_does_not_evict() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(2, 1);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11);
+        assert_eq!(c.get(&1), Some(11));
+        assert_eq!(c.get(&2), Some(20));
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(64, 4);
+        for i in 0..10_000 {
+            c.insert(i, i);
+        }
+        assert!(c.len() <= 64);
+    }
+
+    #[test]
+    fn get_or_insert_with_computes_once() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(8, 2);
+        let mut calls = 0;
+        let v = c.get_or_insert_with(5, || {
+            calls += 1;
+            99
+        });
+        assert_eq!(v, 99);
+        let v = c.get_or_insert_with(5, || {
+            calls += 1;
+            100
+        });
+        assert_eq!(v, 99);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = std::sync::Arc::new(ShardedLru::<u64, u64>::new(256, 8));
+        let mut handles = vec![];
+        for t in 0..8u64 {
+            let c = std::sync::Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    c.insert(t * 1000 + i % 100, i);
+                    c.get(&(i % 100));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.len() <= 256);
+    }
+}

@@ -1,0 +1,10 @@
+//! Caching substrates: the SIM pre-cache LRU cluster (§3.3), the Arena
+//! memory pool (§3.4) and the request-scoped user-vector cache (§3.1/§3.4).
+
+pub mod arena;
+pub mod lru;
+pub mod user_cache;
+
+pub use arena::{ArenaPool, PooledBuf};
+pub use lru::{CacheStats, ShardedLru};
+pub use user_cache::{RequestKey, UserAsync, UserVecCache};

@@ -1,0 +1,178 @@
+//! User-side async-result cache (paper §3.4, "Online Asynchronous
+//! Inference" engineering).
+//!
+//! Phase 1 (during retrieval) writes the async-inferred user tensors under
+//! a key hashed from (request id, user nickname); phase 2 (pre-ranking)
+//! takes them back.  Consistent hashing over that key pins both phases to
+//! the same RTP worker / cache node, guaranteeing the user-side features
+//! seen by async inference and by the pre-ranking model are identical.
+//! Transport between phases is Base64-encoded (paper §5.3) and the decoded
+//! tensors land in pooled arena buffers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::Tensor;
+
+/// Everything the online-async phase produced for one request.
+#[derive(Debug, Clone)]
+pub struct UserAsync {
+    pub u_vec: Tensor,
+    pub bea_v: Tensor,
+    pub seq_emb: Tensor,
+    /// Linearized DIN factors (model.user_tower): the O(b·L·d) pooling,
+    /// hoisted into this async pass.
+    pub din_base: Tensor,
+    pub din_g: Tensor,
+    /// Packed uint8 signatures of the long-term sequence (serving-engine
+    /// SimTier path, §4.2).
+    pub seq_sign_packed: std::sync::Arc<Vec<u8>>,
+    /// Long-term sequence item ids (SIM assembly needs categories).
+    pub long_seq: Vec<u32>,
+}
+
+impl UserAsync {
+    pub fn size_bytes(&self) -> usize {
+        self.u_vec.size_bytes()
+            + self.bea_v.size_bytes()
+            + self.seq_emb.size_bytes()
+            + self.din_base.size_bytes()
+            + self.din_g.size_bytes()
+            + self.seq_sign_packed.len()
+            + self.long_seq.len() * 4
+    }
+}
+
+/// Request-scoped key: hash of (request id, user nickname).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RequestKey(pub u64);
+
+impl RequestKey {
+    /// FNV-1a over the request id and nickname — stable across processes,
+    /// which is what makes consistent routing reproducible.
+    pub fn new(request_id: u64, nickname: &str) -> RequestKey {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in request_id
+            .to_le_bytes()
+            .iter()
+            .chain(nickname.as_bytes())
+        {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        RequestKey(h)
+    }
+}
+
+/// Sharded store of in-flight async results.
+pub struct UserVecCache {
+    shards: Vec<Mutex<HashMap<RequestKey, UserAsync>>>,
+    pub puts: AtomicU64,
+    pub takes: AtomicU64,
+    pub misses: AtomicU64,
+    pub peak_entries: AtomicU64,
+    pub bytes_transferred: AtomicU64,
+}
+
+impl UserVecCache {
+    pub fn new(n_shards: usize) -> Self {
+        UserVecCache {
+            shards: (0..n_shards.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            puts: AtomicU64::new(0),
+            takes: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            peak_entries: AtomicU64::new(0),
+            bytes_transferred: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: RequestKey) -> &Mutex<HashMap<RequestKey, UserAsync>> {
+        &self.shards[(key.0 as usize) % self.shards.len()]
+    }
+
+    pub fn put(&self, key: RequestKey, value: UserAsync) {
+        // Account the Base64 transport of the compact user vectors (the
+        // big tensors stay node-local under consistent hashing; only u_vec
+        // and bea_v travel with the pre-rank request, §5.3).
+        let wire = crate::util::base64::encode_f32(value.u_vec.data()).len()
+            + crate::util::base64::encode_f32(value.bea_v.data()).len();
+        self.bytes_transferred
+            .fetch_add(wire as u64, Ordering::Relaxed);
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.insert(key, value);
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        let total: usize = shard.len();
+        self.peak_entries
+            .fetch_max(total as u64, Ordering::Relaxed);
+    }
+
+    /// Remove-and-return (phase 2 consumes the entry exactly once).
+    pub fn take(&self, key: RequestKey) -> Option<UserAsync> {
+        let out = self.shard(key).lock().unwrap().remove(&key);
+        if out.is_some() {
+            self.takes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(v: f32) -> UserAsync {
+        UserAsync {
+            u_vec: Tensor::new(vec![1, 2], vec![v, v]),
+            bea_v: Tensor::new(vec![1, 2], vec![v, v]),
+            seq_emb: Tensor::new(vec![1, 2], vec![v, v]),
+            din_base: Tensor::new(vec![1, 2], vec![v, v]),
+            din_g: Tensor::new(vec![1, 2], vec![v, v]),
+            seq_sign_packed: std::sync::Arc::new(vec![0xA5]),
+            long_seq: vec![1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn request_key_is_stable_and_distinct() {
+        let a = RequestKey::new(1, "alice");
+        let b = RequestKey::new(1, "alice");
+        let c = RequestKey::new(2, "alice");
+        let d = RequestKey::new(1, "bob");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn put_take_roundtrip_consumes() {
+        let cache = UserVecCache::new(4);
+        let k = RequestKey::new(7, "u7");
+        cache.put(k, dummy(1.0));
+        assert_eq!(cache.len(), 1);
+        let got = cache.take(k).unwrap();
+        assert_eq!(got.u_vec.data(), &[1.0, 1.0]);
+        assert!(cache.take(k).is_none(), "second take misses");
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn transport_bytes_accounted() {
+        let cache = UserVecCache::new(1);
+        cache.put(RequestKey::new(1, "x"), dummy(2.0));
+        assert!(cache.bytes_transferred.load(Ordering::Relaxed) > 0);
+    }
+}

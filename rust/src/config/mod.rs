@@ -1,0 +1,221 @@
+//! Typed serving configuration: JSON file -> [`ServingConfig`], plus the
+//! preset pipeline rows of Table 4 (each paper row = one config).
+
+use anyhow::{Context, Result};
+
+use crate::features::LatencyModel;
+use crate::util::json::Value;
+
+/// How the SIM-hard cross feature is produced at pre-rank time (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Feature absent from the model.
+    Off,
+    /// Fetched + parsed synchronously inside the pre-rank phase
+    /// (Table 4 "+SIM": the latency bottleneck).
+    Sync,
+    /// Pre-cached into the LRU cluster during retrieval ("+Pre-Caching").
+    Precached,
+}
+
+/// One serving pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Serving variant (manifest registry name; picks the head artifact).
+    pub variant: String,
+    pub sim_mode: SimMode,
+    /// SIM parse budget (w/o pre-caching the deadline truncates parsing).
+    pub sim_budget: f64,
+    /// RTP fleet size.
+    pub n_rtp_workers: usize,
+    /// Threads for the Merger's async/user-side tasks.
+    pub n_async_workers: usize,
+    pub n_candidates: usize,
+    pub top_k: usize,
+
+    pub retrieval_latency: LatencyModel,
+    pub user_store_latency: LatencyModel,
+    pub item_store_latency: LatencyModel,
+    /// Per-item SIM parse cost, microseconds (§3.3 "parsing processes").
+    pub sim_parse_us: f64,
+
+    pub lru_capacity: usize,
+    pub lru_shards: usize,
+    pub user_cache_shards: usize,
+    pub arena_retain: usize,
+
+    pub artifacts_dir: String,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            variant: "aif".into(),
+            sim_mode: SimMode::Precached,
+            sim_budget: 1.0,
+            // Single-core testbed: small pools (threads only help overlap
+            // modeled I/O latency, not compute).
+            n_rtp_workers: 2,
+            n_async_workers: 2,
+            n_candidates: 4096,
+            top_k: 128,
+            // Calibrated so the stage ratios match the paper's setting:
+            // retrieval ~12ms, user feature fetch ~2.5ms, item store
+            // ~600µs/batch round trip.
+            retrieval_latency: LatencyModel {
+                base_us: 12_000.0,
+                per_kib_us: 0.0,
+                jitter_sigma: 0.25,
+            },
+            user_store_latency: LatencyModel {
+                base_us: 2_000.0,
+                per_kib_us: 4.0,
+                jitter_sigma: 0.25,
+            },
+            item_store_latency: LatencyModel {
+                base_us: 400.0,
+                per_kib_us: 1.5,
+                jitter_sigma: 0.25,
+            },
+            sim_parse_us: 3.0,
+            lru_capacity: 8192,
+            lru_shards: 16,
+            user_cache_shards: 16,
+            arena_retain: 32,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Parse from a JSON object; absent keys keep defaults.
+    pub fn from_json(v: &Value) -> Result<ServingConfig> {
+        let mut c = ServingConfig::default();
+        let get = |k: &str| v.get(k);
+        if let Some(x) = get("variant").and_then(Value::as_str) {
+            c.variant = x.to_string();
+        }
+        if let Some(x) = get("sim_mode").and_then(Value::as_str) {
+            c.sim_mode = match x {
+                "off" => SimMode::Off,
+                "sync" => SimMode::Sync,
+                "precached" => SimMode::Precached,
+                other => anyhow::bail!("unknown sim_mode {other:?}"),
+            };
+        }
+        macro_rules! num {
+            ($field:ident, $key:literal, $ty:ty) => {
+                if let Some(x) = get($key).and_then(Value::as_f64) {
+                    c.$field = x as $ty;
+                }
+            };
+        }
+        num!(sim_budget, "sim_budget", f64);
+        num!(n_rtp_workers, "n_rtp_workers", usize);
+        num!(n_async_workers, "n_async_workers", usize);
+        num!(n_candidates, "n_candidates", usize);
+        num!(top_k, "top_k", usize);
+        num!(sim_parse_us, "sim_parse_us", f64);
+        num!(lru_capacity, "lru_capacity", usize);
+        num!(lru_shards, "lru_shards", usize);
+        if let Some(x) = get("artifacts_dir").and_then(Value::as_str) {
+            c.artifacts_dir = x.to_string();
+        }
+        for (key, slot) in [
+            ("retrieval_latency", &mut c.retrieval_latency),
+            ("user_store_latency", &mut c.user_store_latency),
+            ("item_store_latency", &mut c.item_store_latency),
+        ] {
+            if let Some(l) = get(key) {
+                *slot = LatencyModel {
+                    base_us: l
+                        .get("base_us")
+                        .and_then(Value::as_f64)
+                        .unwrap_or(slot.base_us),
+                    per_kib_us: l
+                        .get("per_kib_us")
+                        .and_then(Value::as_f64)
+                        .unwrap_or(slot.per_kib_us),
+                    jitter_sigma: l
+                        .get("jitter_sigma")
+                        .and_then(Value::as_f64)
+                        .unwrap_or(slot.jitter_sigma),
+                };
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &str) -> Result<ServingConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let v = Value::parse(&text).context("parsing config JSON")?;
+        Self::from_json(&v)
+    }
+
+    /// The Table-4 pipeline rows, in paper order.
+    pub fn table4_rows() -> Vec<(&'static str, ServingConfig)> {
+        let base = ServingConfig {
+            variant: "base".into(),
+            sim_mode: SimMode::Off,
+            ..Default::default()
+        };
+        let mk = |variant: &str, sim: SimMode| ServingConfig {
+            variant: variant.into(),
+            sim_mode: sim,
+            ..base.clone()
+        };
+        vec![
+            ("Base", base.clone()),
+            ("+ Async-Vectors", mk("t4_asyncvec", SimMode::Off)),
+            ("+ SIM", mk("t4_sim", SimMode::Sync)),
+            ("+ Pre-Caching", mk("t4_sim", SimMode::Precached)),
+            ("+ BEA", mk("t4_bea", SimMode::Off)),
+            ("+ Long-term User Behavior", mk("t4_longfull", SimMode::Off)),
+            ("+ LSH", mk("t4_lsh", SimMode::Off)),
+            ("AIF", mk("aif", SimMode::Precached)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = ServingConfig::default();
+        assert_eq!(c.variant, "aif");
+        assert!(c.n_candidates >= c.top_k);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let v = Value::parse(
+            r#"{"variant":"base","sim_mode":"sync","n_rtp_workers":2,
+                "retrieval_latency":{"base_us":5000}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.variant, "base");
+        assert_eq!(c.sim_mode, SimMode::Sync);
+        assert_eq!(c.n_rtp_workers, 2);
+        assert_eq!(c.retrieval_latency.base_us, 5000.0);
+        // Untouched field keeps default.
+        assert_eq!(c.top_k, 128);
+    }
+
+    #[test]
+    fn table4_rows_cover_paper() {
+        let rows = ServingConfig::table4_rows();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].0, "Base");
+        assert_eq!(rows.last().unwrap().0, "AIF");
+    }
+
+    #[test]
+    fn rejects_bad_sim_mode() {
+        let v = Value::parse(r#"{"sim_mode":"bogus"}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+    }
+}

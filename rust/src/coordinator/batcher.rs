@@ -1,0 +1,112 @@
+//! Mini-batch partitioner (paper §1: "the system partitions [the candidate
+//! set] into mini-batches ... for separate and parallel model inference").
+//!
+//! Splits a candidate list into fixed-size mini-batches; the final partial
+//! batch is padded at assembly (padding scores are sliced off on merge).
+//! Invariants (property-tested): cover, disjoint, ordered, each ≤ batch.
+
+#[derive(Debug, Clone)]
+pub struct MiniBatch<'a> {
+    /// Index of this batch within the request.
+    pub index: usize,
+    /// The real (unpadded) candidate ids.
+    pub items: &'a [u32],
+    /// Offset of `items[0]` in the original candidate list.
+    pub offset: usize,
+}
+
+pub fn split(candidates: &[u32], batch: usize) -> Vec<MiniBatch<'_>> {
+    assert!(batch > 0);
+    candidates
+        .chunks(batch)
+        .enumerate()
+        .map(|(index, items)| MiniBatch {
+            index,
+            items,
+            offset: index * batch,
+        })
+        .collect()
+}
+
+/// Merge per-batch padded scores back into a flat score vector aligned
+/// with the original candidate order.
+pub fn merge_scores(
+    n_candidates: usize,
+    batch: usize,
+    per_batch: &[Vec<f32>],
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n_candidates);
+    for (i, scores) in per_batch.iter().enumerate() {
+        let start = i * batch;
+        let real = (n_candidates - start).min(batch);
+        assert!(
+            scores.len() >= real,
+            "batch {i}: {} scores < {real} real items",
+            scores.len()
+        );
+        out.extend_from_slice(&scores[..real]);
+    }
+    assert_eq!(out.len(), n_candidates);
+    out
+}
+
+/// Top-k (item, score) pairs, descending score, stable on ties.
+pub fn top_k(items: &[u32], scores: &[f32], k: usize) -> Vec<(u32, f32)> {
+    assert_eq!(items.len(), scores.len());
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    let k = k.min(items.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut head: Vec<usize> = idx[..k].to_vec();
+    head.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+    });
+    head.into_iter().map(|i| (items[i], scores[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_and_orders() {
+        let cands: Vec<u32> = (0..1000).collect();
+        let batches = split(&cands, 256);
+        assert_eq!(batches.len(), 4);
+        assert_eq!(batches[3].items.len(), 1000 - 3 * 256);
+        let rejoined: Vec<u32> = batches
+            .iter()
+            .flat_map(|b| b.items.iter().copied())
+            .collect();
+        assert_eq!(rejoined, cands);
+        assert_eq!(batches[2].offset, 512);
+    }
+
+    #[test]
+    fn merge_strips_padding() {
+        // 5 candidates, batch 2 -> 3 batches, last padded to 2.
+        let per = vec![vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.99]];
+        let merged = merge_scores(5, 2, &per);
+        assert_eq!(merged, vec![0.1, 0.2, 0.3, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_correct() {
+        let items: Vec<u32> = (0..8).collect();
+        let scores = vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.8, 0.05, 0.6];
+        let top = top_k(&items, &scores, 3);
+        assert_eq!(
+            top.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+            vec![1, 5, 3]
+        );
+        assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+    }
+
+    #[test]
+    fn top_k_handles_k_larger_than_n() {
+        let top = top_k(&[1, 2], &[0.5, 0.6], 10);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, 2);
+    }
+}

@@ -1,0 +1,700 @@
+//! The Merger — the system's central coordinator (paper §3.1, Figures 2-5).
+//!
+//! One config-driven request pipeline covers the sequential baseline and
+//! every AIF increment of Table 4:
+//!
+//! ```text
+//! handle(request):
+//!   phase 1 (only if variant.user == "async"):
+//!       ├─ fetch user features ─ user_tower on the consistent-hashed RTP
+//!       │  worker ─ cache UserAsync under hash(request_id, nickname)
+//!       ├─ pre-warm the SIM LRU for every user-category combination
+//!       └─ ... all OVERLAPPED with the retrieval stage
+//!   retrieval (blocks for the modeled upstream latency)
+//!   phase 2 (real-time pre-rank):
+//!       ├─ take cached UserAsync (or fetch/compute user-side inline —
+//!       │  the sequential baseline path)
+//!       ├─ split candidates into mini-batches; per batch, concurrently:
+//!       │    fetch item features (inline variants) or read the N2O
+//!       │    snapshot (nearline variants), assemble head inputs, execute
+//!       │    the head artifact on the RTP fleet
+//!       └─ merge scores, top-K
+//! ```
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher;
+use super::router::Router;
+use crate::cache::{ArenaPool, RequestKey, ShardedLru, UserAsync, UserVecCache};
+use crate::config::{ServingConfig, SimMode};
+use crate::features::{assembly, FeatureStore, World};
+use crate::lsh::{self, Hasher};
+use crate::metrics::ServingMetrics;
+use crate::nearline::{N2oSnapshot, N2oTable, NearlineWorker};
+use crate::retrieval::Retriever;
+use crate::runtime::{Manifest, RtpPool, Tensor, VariantSpec};
+use crate::util::threadpool::ThreadPool;
+
+/// Per-request phase timings.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimings {
+    pub total: Duration,
+    pub retrieval: Duration,
+    pub user_async: Option<Duration>,
+    pub prerank: Duration,
+}
+
+#[derive(Debug)]
+pub struct RequestResult {
+    pub top_k: Vec<(u32, f32)>,
+    pub timings: PhaseTimings,
+}
+
+pub struct Merger {
+    pub cfg: ServingConfig,
+    pub manifest: Arc<Manifest>,
+    pub variant: VariantSpec,
+    pub world: Arc<World>,
+    pub store: Arc<FeatureStore>,
+    pub retriever: Arc<Retriever>,
+    pub rtp: Arc<RtpPool>,
+    pub router: Router,
+    pub user_cache: Arc<UserVecCache>,
+    /// (user, category) -> parsed SIM subsequence.
+    pub sim_cache: Arc<ShardedLru<(u32, u32), Arc<Vec<u32>>>>,
+    pub n2o: Arc<N2oTable>,
+    pub hasher: Arc<Hasher>,
+    pub arena: Arc<ArenaPool>,
+    pub metrics: Arc<ServingMetrics>,
+    async_pool: Arc<ThreadPool>,
+    score_pool: Arc<ThreadPool>,
+    pub batch: usize,
+    head_artifact: String,
+}
+
+impl Merger {
+    /// Bring up the full serving stack for one pipeline configuration.
+    /// Runs the nearline full build when the variant reads the N2O table.
+    pub fn build(cfg: ServingConfig) -> Result<Merger> {
+        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let variant = manifest.variant(&cfg.variant)?.clone();
+        let world = Arc::new(World::load(&manifest)?);
+        let store = Arc::new(FeatureStore::new(
+            Arc::clone(&world),
+            cfg.user_store_latency.clone(),
+            cfg.item_store_latency.clone(),
+        ));
+        let retriever = Arc::new(Retriever::new(
+            Arc::clone(&world),
+            cfg.n_candidates,
+            cfg.retrieval_latency.clone(),
+        ));
+
+        // Artifact set this pipeline needs.
+        let mut artifacts = vec![variant.artifact.clone()];
+        if variant.user == "async" || variant.has_long() {
+            // The user tower also supplies seq_emb for the non-async
+            // long-term rows (computed on the request path there).
+            artifacts.push("user_tower".into());
+        }
+        if variant.item == "nearline" {
+            artifacts.push("item_tower".into());
+        }
+        let rtp = Arc::new(RtpPool::new(
+            Arc::clone(&manifest),
+            artifacts,
+            cfg.n_rtp_workers,
+        ));
+
+        let hasher = Arc::new(Hasher::from_table(&world.w_hash));
+        let batch = manifest.batch;
+        let n2o = Arc::new(N2oTable::new(
+            world.n_items,
+            manifest.dim("D"),
+            manifest.dim("N_BRIDGE"),
+            manifest.dim("D_LSH_BITS"),
+        ));
+        if variant.item == "nearline" {
+            let worker = NearlineWorker::new(
+                Arc::clone(&rtp),
+                Arc::clone(&world),
+                Arc::clone(&hasher),
+                Arc::clone(&n2o),
+                batch,
+            );
+            let report = worker.full_build(1).context("nearline full build")?;
+            log::info!(
+                "N2O full build: {} items, {} executions, {:?}, {} bytes",
+                report.n_items,
+                report.executions,
+                report.elapsed,
+                report.table_bytes
+            );
+        }
+
+        // Validate the head signature against what we will assemble.
+        let expected = expected_input_names(&variant);
+        let actual: Vec<String> = manifest
+            .artifact(&variant.artifact)?
+            .inputs
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        anyhow::ensure!(
+            expected == actual,
+            "head {} signature mismatch: assembling {expected:?}, \
+             manifest says {actual:?}",
+            variant.artifact
+        );
+
+        Ok(Merger {
+            router: Router::new(cfg.n_rtp_workers, 64),
+            user_cache: Arc::new(UserVecCache::new(cfg.user_cache_shards)),
+            sim_cache: Arc::new(ShardedLru::new(
+                cfg.lru_capacity,
+                cfg.lru_shards,
+            )),
+            arena: ArenaPool::new(cfg.arena_retain),
+            metrics: Arc::new(ServingMetrics::new()),
+            async_pool: Arc::new(ThreadPool::new(cfg.n_async_workers)),
+            // Batch-scoring tasks block on RTP replies; give them their own
+            // pool (2x the fleet) so they never starve the phase-1 tasks.
+            score_pool: Arc::new(ThreadPool::new(cfg.n_rtp_workers + 2)),
+            head_artifact: variant.artifact.clone(),
+            manifest,
+            variant,
+            world,
+            store,
+            retriever,
+            rtp,
+            n2o,
+            hasher,
+            batch,
+            cfg,
+        })
+    }
+
+    fn nickname(user: usize) -> String {
+        format!("user-{user}")
+    }
+
+    /// Serve one request end to end.
+    pub fn handle(&self, request_id: u64, user: usize) -> Result<RequestResult> {
+        let t_total = Instant::now();
+        let key = RequestKey::new(request_id, &Self::nickname(user));
+        let worker = self.router.route(key.0);
+
+        // ---- phase 1: online asynchronous user-side inference -----------
+        let async_done = if self.variant.user == "async" {
+            let (tx, rx) = channel::<Result<Duration>>();
+            let store = Arc::clone(&self.store);
+            let world = Arc::clone(&self.world);
+            let rtp = Arc::clone(&self.rtp);
+            let cache = Arc::clone(&self.user_cache);
+            let key2 = key;
+            self.async_pool.spawn(move || {
+                let t0 = Instant::now();
+                let result = (|| -> Result<()> {
+                    let uf = store.fetch_user(user);
+                    // Signatures of the long-term sequence (static table):
+                    // packed bytes feed the SimTier popcount path; the ±1
+                    // plane goes into the tower so it can emit the
+                    // linearized DIN factors.
+                    let packed = packed_signs(&world, &uf.long_seq);
+                    let plane = lsh::unpack_plane(
+                        &packed,
+                        uf.long_seq.len(),
+                        world.w_hash.shape()[0],
+                    );
+                    let mut inputs =
+                        assembly::user_tower_inputs(&world, &uf);
+                    inputs.push(plane);
+                    let rx2 = rtp.call_async_on(worker, "user_tower", inputs);
+                    let out = rx2
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("RTP reply dropped"))??;
+                    cache.put(
+                        key2,
+                        UserAsync {
+                            u_vec: out[0].clone(),
+                            bea_v: out[1].clone(),
+                            seq_emb: out[2].clone(),
+                            din_base: out[3].clone(),
+                            din_g: out[4].clone(),
+                            seq_sign_packed: Arc::new(packed),
+                            long_seq: uf.long_seq,
+                        },
+                    );
+                    Ok(())
+                })();
+                let _ = tx.send(result.map(|()| t0.elapsed()));
+            });
+            Some(rx)
+        } else {
+            None
+        };
+
+        // SIM pre-warming runs alongside retrieval too.
+        if self.variant.sim_cross && self.cfg.sim_mode == SimMode::Precached {
+            let store = Arc::clone(&self.store);
+            let world = Arc::clone(&self.world);
+            let sim_cache = Arc::clone(&self.sim_cache);
+            let budget = self.cfg.sim_budget;
+            let parse_us = self.cfg.sim_parse_us;
+            self.async_pool.spawn(move || {
+                // Only hit the remote store if any of the user's categories
+                // is cold; one multi-get covers them all (Figure 5).
+                let cats = world.user_sim_categories(user);
+                let cold = cats.iter().any(|&c| {
+                    sim_cache.get(&(user as u32, c)).is_none()
+                });
+                if cold {
+                    for (cat, sub) in
+                        store.fetch_sim_all(user, budget, parse_us)
+                    {
+                        sim_cache.insert((user as u32, cat), Arc::new(sub));
+                    }
+                }
+            });
+        }
+
+        // ---- retrieval (upstream stage; blocks) -------------------------
+        let t_r = Instant::now();
+        let candidates = self.retriever.retrieve(user);
+        let retrieval = t_r.elapsed();
+
+        // ---- join phase 1 -------------------------------------------------
+        let user_async = match async_done {
+            Some(rx) => Some(
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("async phase died"))??,
+            ),
+            None => None,
+        };
+
+        // ---- phase 2: real-time pre-ranking ------------------------------
+        let t_p = Instant::now();
+        let scores = self.prerank(key, user, &candidates)?;
+        let prerank = t_p.elapsed();
+
+        let top_k = batcher::top_k(&candidates, &scores, self.cfg.top_k);
+        let timings = PhaseTimings {
+            total: t_total.elapsed(),
+            retrieval,
+            user_async,
+            prerank,
+        };
+        self.metrics.record_request(
+            timings.total,
+            timings.prerank,
+            timings.user_async,
+            timings.retrieval,
+        );
+        self.metrics
+            .items_scored
+            .fetch_add(candidates.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(RequestResult { top_k, timings })
+    }
+
+    /// The real-time phase: score all candidates through the head artifact.
+    fn prerank(
+        &self,
+        key: RequestKey,
+        user: usize,
+        candidates: &[u32],
+    ) -> Result<Vec<f32>> {
+        let v = &self.variant;
+
+        // -- request-level user-side tensors --------------------------------
+        let ua: Option<UserAsync> = if v.user == "async" {
+            Some(self.user_cache.take(key).ok_or_else(|| {
+                anyhow::anyhow!("user async result missing for {key:?}")
+            })?)
+        } else {
+            None
+        };
+
+        // Sequential-baseline user-side work (on the critical path).
+        let mut profile_t = None;
+        let mut seq_short_t = None;
+        let mut seq_emb_t = None;
+        let mut din_base_t = None;
+        let mut din_g_t = None;
+        let mut seq_sign_packed: Option<Arc<Vec<u8>>> = None;
+        let mut seq_len = 0usize;
+        let mut seq_mm_t = None;
+        if v.user != "async" {
+            let uf = self.store.fetch_user(user);
+            profile_t = Some(Tensor::new(
+                vec![1, uf.profile.len()],
+                uf.profile.clone(),
+            ));
+            seq_short_t =
+                Some(assembly::gather_seq_emb(&self.world, &uf.short_seq));
+            if v.has_long() {
+                // The user-side long-term projections run here, on the
+                // request path, via a synchronous user_tower call
+                // (Table 4 "+LSH"/"+Long-term" rows).
+                let packed = packed_signs(&self.world, &uf.long_seq);
+                let plane = lsh::unpack_plane(
+                    &packed,
+                    uf.long_seq.len(),
+                    self.world.w_hash.shape()[0],
+                );
+                let mut inputs =
+                    assembly::user_tower_inputs(&self.world, &uf);
+                inputs.push(plane);
+                let out = self.rtp.call("user_tower", inputs)?;
+                self.metrics
+                    .rtp_calls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                seq_emb_t = Some(out[2].clone());
+                din_base_t = Some(out[3].clone());
+                din_g_t = Some(out[4].clone());
+                seq_len = uf.long_seq.len();
+                seq_sign_packed = Some(Arc::new(packed));
+                if v.needs_mm() {
+                    seq_mm_t =
+                        Some(assembly::gather_mm(&self.world, &uf.long_seq));
+                }
+            }
+        } else if let Some(ua) = &ua {
+            seq_emb_t = Some(ua.seq_emb.clone());
+            din_base_t = Some(ua.din_base.clone());
+            din_g_t = Some(ua.din_g.clone());
+            seq_sign_packed = Some(Arc::clone(&ua.seq_sign_packed));
+            seq_len = ua.long_seq.len();
+            if v.needs_mm() {
+                seq_mm_t =
+                    Some(assembly::gather_mm(&self.world, &ua.long_seq));
+            }
+        }
+
+        let (u_vec_t, bea_v_t) = match &ua {
+            Some(ua) => (Some(ua.u_vec.clone()), Some(ua.bea_v.clone())),
+            None => (None, None),
+        };
+
+        // -- N2O snapshot (one consistent generation per request) -----------
+        let snapshot: Option<Arc<N2oSnapshot>> = if v.item == "nearline" {
+            Some(Arc::new(self.n2o.snapshot()))
+        } else {
+            None
+        };
+
+        // -- per-mini-batch fan-out -----------------------------------------
+        let batches = batcher::split(candidates, self.batch);
+        let n_batches = batches.len();
+        let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
+        for mb in &batches {
+            let items: Vec<u32> = mb.items.to_vec();
+            let index = mb.index;
+            let tx = tx.clone();
+            let this = self.clone_shared();
+            let snapshot = snapshot.clone();
+            let profile_t = profile_t.clone();
+            let seq_short_t = seq_short_t.clone();
+            let u_vec_t = u_vec_t.clone();
+            let bea_v_t = bea_v_t.clone();
+            let seq_emb_t = seq_emb_t.clone();
+            let din_base_t = din_base_t.clone();
+            let din_g_t = din_g_t.clone();
+            let seq_sign_packed = seq_sign_packed.clone();
+            let seq_mm_t = seq_mm_t.clone();
+            self.score_pool.spawn(move || {
+                let result = this.score_batch(
+                    user,
+                    &items,
+                    snapshot.as_deref(),
+                    BatchCtx {
+                        profile: profile_t,
+                        seq_short: seq_short_t,
+                        u_vec: u_vec_t,
+                        bea_v: bea_v_t,
+                        seq_emb: seq_emb_t,
+                        din_base: din_base_t,
+                        din_g: din_g_t,
+                        seq_sign_packed,
+                        seq_len,
+                        seq_mm: seq_mm_t,
+                    },
+                );
+                let _ = tx.send((index, result));
+            });
+        }
+        drop(tx);
+
+        let mut per_batch: Vec<Option<Vec<f32>>> = vec![None; n_batches];
+        for _ in 0..n_batches {
+            let (idx, result) = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("batch worker died"))?;
+            per_batch[idx] = Some(result?);
+        }
+        let per_batch: Vec<Vec<f32>> =
+            per_batch.into_iter().map(|b| b.unwrap()).collect();
+        Ok(batcher::merge_scores(candidates.len(), self.batch, &per_batch))
+    }
+
+    /// Clone the shared handles needed inside batch tasks.
+    fn clone_shared(&self) -> BatchScorer {
+        BatchScorer {
+            variant: self.variant.clone(),
+            world: Arc::clone(&self.world),
+            store: Arc::clone(&self.store),
+            rtp: Arc::clone(&self.rtp),
+            sim_cache: Arc::clone(&self.sim_cache),
+            metrics: Arc::clone(&self.metrics),
+            sim_mode: self.cfg.sim_mode,
+            sim_budget: self.cfg.sim_budget,
+            sim_parse_us: self.cfg.sim_parse_us,
+            batch: self.batch,
+            n_tiers: self.manifest.dim("N_TIERS"),
+            head_artifact: self.head_artifact.clone(),
+        }
+    }
+
+    /// §5.3 storage accounting: extra resident bytes vs the baseline.
+    pub fn extra_storage_bytes(&self) -> usize {
+        let mut total = 0;
+        if self.variant.item == "nearline" {
+            total += self.n2o.size_bytes();
+        }
+        if self.cfg.sim_mode == SimMode::Precached {
+            // LRU entries: ids only (parsed subsequences).
+            total += self.sim_cache.len() * self.world.l_sim_sub * 4;
+        }
+        total += self.arena.pooled_bytes();
+        total
+    }
+}
+
+/// Request-level tensors shared by every mini-batch of the request.
+struct BatchCtx {
+    profile: Option<Tensor>,
+    seq_short: Option<Tensor>,
+    u_vec: Option<Tensor>,
+    bea_v: Option<Tensor>,
+    seq_emb: Option<Tensor>,
+    din_base: Option<Tensor>,
+    din_g: Option<Tensor>,
+    seq_sign_packed: Option<Arc<Vec<u8>>>,
+    seq_len: usize,
+    seq_mm: Option<Tensor>,
+}
+
+/// The Send-able subset of the Merger used inside batch tasks.
+struct BatchScorer {
+    variant: VariantSpec,
+    world: Arc<World>,
+    store: Arc<FeatureStore>,
+    rtp: Arc<RtpPool>,
+    sim_cache: Arc<ShardedLru<(u32, u32), Arc<Vec<u32>>>>,
+    metrics: Arc<ServingMetrics>,
+    sim_mode: SimMode,
+    sim_budget: f64,
+    sim_parse_us: f64,
+    batch: usize,
+    n_tiers: usize,
+    head_artifact: String,
+}
+
+impl BatchScorer {
+    fn score_batch(
+        &self,
+        user: usize,
+        items: &[u32],
+        snapshot: Option<&N2oSnapshot>,
+        ctx: BatchCtx,
+    ) -> Result<Vec<f32>> {
+        let v = &self.variant;
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(8);
+
+        // user slot
+        if v.user == "async" {
+            inputs.push(ctx.u_vec.clone().expect("u_vec"));
+        } else {
+            inputs.push(ctx.profile.clone().expect("profile"));
+            inputs.push(ctx.seq_short.clone().expect("seq_short"));
+        }
+
+        // item slot (+ fetched features for inline/mm needs)
+        let needs_fetch = v.item == "inline" || v.needs_mm() || v.sim_cross;
+        let feats = if needs_fetch {
+            Some(self.store.fetch_items(items))
+        } else {
+            None
+        };
+        let mut bea_w_nearline = None;
+        let mut sign_nearline = None;
+        if v.item == "nearline" {
+            let snap = snapshot.expect("nearline snapshot");
+            let (vec_t, w_t, s_t) = snap
+                .assemble(items, self.batch)
+                .ok_or_else(|| anyhow::anyhow!("N2O rows missing"))?;
+            inputs.push(vec_t);
+            bea_w_nearline = Some(w_t);
+            sign_nearline = Some(s_t);
+        } else {
+            inputs.push(assembly::item_raw_batch(
+                feats.as_ref().unwrap(),
+                self.batch,
+            ));
+        }
+
+        // BEA slot
+        if v.bea == "bridge" {
+            inputs.push(ctx.bea_v.clone().expect("bea_v"));
+            if v.item == "nearline" {
+                inputs.push(bea_w_nearline.clone().expect("bea_w"));
+            }
+        }
+
+        // long-term slot
+        if v.tiers_precomputed() {
+            // Hoisted serving split: DIN factors from the async pass +
+            // SimTier via uint8 XNOR + popcount LUT (§4.2).  No [L, .]
+            // operand is assembled at all.
+            let item_packed =
+                packed_signs_padded(&self.world, items, self.batch);
+            let n_bits = self.world.w_hash.shape()[0];
+            let item_sign = match &sign_nearline {
+                Some(s) => s.clone(),
+                None => lsh::unpack_plane(&item_packed, self.batch, n_bits),
+            };
+            inputs.push(ctx.din_base.clone().expect("din_base"));
+            inputs.push(ctx.din_g.clone().expect("din_g"));
+            inputs.push(item_sign);
+            let seq_packed =
+                ctx.seq_sign_packed.as_ref().expect("seq packed");
+            let hist = lsh::tier_histogram(
+                &item_packed,
+                self.batch,
+                seq_packed,
+                ctx.seq_len,
+                n_bits,
+                self.n_tiers,
+            );
+            inputs.push(Tensor::new(vec![self.batch, self.n_tiers], hist));
+        } else if v.has_long() {
+            inputs.push(ctx.seq_emb.clone().expect("seq_emb"));
+            if v.needs_lsh() {
+                unreachable!("mixed lsh variants are not served");
+            }
+            if v.needs_mm() {
+                inputs.push(assembly::item_mm_batch(
+                    feats.as_ref().unwrap(),
+                    self.batch,
+                ));
+                inputs.push(ctx.seq_mm.clone().expect("seq_mm"));
+            }
+        }
+
+        // SIM cross slot
+        if v.sim_cross {
+            let cats: Vec<u32> = items
+                .iter()
+                .map(|&i| self.world.category_of(i))
+                .collect();
+            let store = &self.store;
+            let world = &self.world;
+            let sim_cache = &self.sim_cache;
+            let (mode, budget, parse_us) =
+                (self.sim_mode, self.sim_budget, self.sim_parse_us);
+            let t = assembly::sim_cross_batch(
+                world,
+                &cats,
+                self.batch,
+                |cat| match mode {
+                    SimMode::Off => Vec::new(),
+                    SimMode::Sync => store.fetch_sim_subsequence(
+                        user, cat, budget, parse_us,
+                    ),
+                    SimMode::Precached => sim_cache
+                        .get_or_insert_with((user as u32, cat), || {
+                            Arc::new(store.fetch_sim_subsequence(
+                                user, cat, budget, parse_us,
+                            ))
+                        })
+                        .as_ref()
+                        .clone(),
+                },
+            );
+            inputs.push(t);
+        }
+
+        let scores = self.rtp.call1(&self.head_artifact, inputs)?;
+        self.metrics
+            .rtp_calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(scores.data().to_vec())
+    }
+}
+
+/// Expected head-input names, mirroring python `model.serving_inputs`.
+pub fn expected_input_names(v: &VariantSpec) -> Vec<String> {
+    let mut sig: Vec<&str> = Vec::new();
+    if v.user == "async" {
+        sig.push("u_vec");
+    } else {
+        sig.push("profile");
+        sig.push("seq_short");
+    }
+    if v.item == "nearline" {
+        sig.push("item_vec");
+    } else {
+        sig.push("item_raw");
+    }
+    if v.bea == "bridge" {
+        sig.push("bea_v");
+        if v.item == "nearline" {
+            sig.push("bea_w");
+        }
+    }
+    if v.tiers_precomputed() {
+        sig.push("din_base");
+        sig.push("din_g");
+        sig.push("item_sign");
+        sig.push("tiers_in");
+    } else if v.has_long() {
+        sig.push("seq_emb");
+        if v.needs_lsh() {
+            sig.push("item_sign");
+            sig.push("seq_sign");
+        }
+        if v.needs_mm() {
+            sig.push("item_mm");
+            sig.push("seq_mm");
+        }
+    }
+    if v.sim_cross {
+        sig.push("sim_cross");
+    }
+    sig.into_iter().map(String::from).collect()
+}
+
+/// Packed signature rows for a sequence of item ids (static table).
+pub fn packed_signs(world: &World, items: &[u32]) -> Vec<u8> {
+    let pl = world.w_hash.shape()[0].div_ceil(8);
+    let mut packed = Vec::with_capacity(items.len() * pl);
+    for &i in items {
+        packed.extend_from_slice(world.items_sign_packed.u8_row(i as usize));
+    }
+    packed
+}
+
+/// Same, padded to `batch` rows by repeating the last item.
+pub fn packed_signs_padded(world: &World, items: &[u32], batch: usize) -> Vec<u8> {
+    let mut packed = packed_signs(world, items);
+    let last = world
+        .items_sign_packed
+        .u8_row(items[items.len() - 1] as usize);
+    for _ in items.len()..batch {
+        packed.extend_from_slice(last);
+    }
+    packed
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator — the paper's system contribution: the Merger two-phase
+//! request lifecycle, consistent-hash routing, mini-batch scheduling and
+//! the sequential baseline (all driven by one `ServingConfig`).
+
+pub mod batcher;
+pub mod merger;
+pub mod router;
+
+pub use merger::{Merger, PhaseTimings, RequestResult};
+pub use router::Router;

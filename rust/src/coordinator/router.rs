@@ -1,0 +1,118 @@
+//! Consistent-hash ring router (paper §3.4): pins both RTP phases of a
+//! request (async user inference, pre-rank scoring) to the same worker so
+//! the cached user-side features are node-local and version-consistent.
+//!
+//! Standard ring with virtual nodes; node churn remaps only the keys owned
+//! by the affected arcs (tested as a property in rust/tests/).
+
+use std::collections::BTreeMap;
+
+fn hash64(x: u64) -> u64 {
+    // SplitMix64 finalizer — cheap, well-mixed.
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// ring position -> node id
+    ring: BTreeMap<u64, usize>,
+    vnodes: usize,
+    nodes: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(n_nodes: usize, vnodes: usize) -> Router {
+        let mut r = Router {
+            ring: BTreeMap::new(),
+            vnodes: vnodes.max(1),
+            nodes: Vec::new(),
+        };
+        for n in 0..n_nodes {
+            r.add_node(n);
+        }
+        r
+    }
+
+    pub fn add_node(&mut self, node: usize) {
+        if self.nodes.contains(&node) {
+            return;
+        }
+        self.nodes.push(node);
+        for v in 0..self.vnodes {
+            let pos = hash64((node as u64) << 32 | v as u64);
+            self.ring.insert(pos, node);
+        }
+    }
+
+    pub fn remove_node(&mut self, node: usize) {
+        self.nodes.retain(|&n| n != node);
+        for v in 0..self.vnodes {
+            let pos = hash64((node as u64) << 32 | v as u64);
+            self.ring.remove(&pos);
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Route a key to a node (clockwise successor on the ring).
+    pub fn route(&self, key: u64) -> usize {
+        assert!(!self.ring.is_empty(), "router has no nodes");
+        let h = hash64(key);
+        self.ring
+            .range(h..)
+            .next()
+            .or_else(|| self.ring.iter().next())
+            .map(|(_, &n)| n)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_stable() {
+        let r = Router::new(4, 64);
+        for k in 0..100u64 {
+            assert_eq!(r.route(k), r.route(k));
+        }
+    }
+
+    #[test]
+    fn covers_all_nodes_reasonably() {
+        let r = Router::new(4, 128);
+        let mut counts = [0usize; 4];
+        for k in 0..40_000u64 {
+            counts[r.route(k)] += 1;
+        }
+        for &c in &counts {
+            // Within 40% of fair share — ring with 128 vnodes.
+            assert!((c as f64 - 10_000.0).abs() < 4_000.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn removal_only_remaps_owned_keys() {
+        let mut r = Router::new(4, 64);
+        let before: Vec<usize> = (0..10_000u64).map(|k| r.route(k)).collect();
+        r.remove_node(2);
+        let mut moved_from_others = 0;
+        for (k, &b) in before.iter().enumerate() {
+            let after = r.route(k as u64);
+            if b != 2 {
+                // Keys not owned by the removed node must not move.
+                assert_eq!(after, b, "key {k} moved {b} -> {after}");
+            } else {
+                assert_ne!(after, 2);
+                moved_from_others += 1;
+            }
+        }
+        assert!(moved_from_others > 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Dense-tensor assembly: gathers raw features / embeddings into the named
+//! input tensors the HLO heads consume.  This is the "constructs model
+//! input tensors by indexing the model embedding matrices" step of the
+//! paper's feature-fetching phase, kept in rust on the request path.
+
+use super::store::{ItemFeatures, UserFeatures};
+use super::world::World;
+use crate::runtime::Tensor;
+
+/// Gather seq-embedding rows for a sequence of item ids -> [len, D_SEQ_RAW].
+pub fn gather_seq_emb(world: &World, seq: &[u32]) -> Tensor {
+    let d = world.items_seq_emb.shape()[1];
+    let mut data = Vec::with_capacity(seq.len() * d);
+    for &i in seq {
+        data.extend_from_slice(world.items_seq_emb.f32_row(i as usize));
+    }
+    Tensor::new(vec![seq.len(), d], data)
+}
+
+/// Gather multi-modal rows -> [len, D_MM].
+pub fn gather_mm(world: &World, seq: &[u32]) -> Tensor {
+    let d = world.items_mm.shape()[1];
+    let mut data = Vec::with_capacity(seq.len() * d);
+    for &i in seq {
+        data.extend_from_slice(world.items_mm.f32_row(i as usize));
+    }
+    Tensor::new(vec![seq.len(), d], data)
+}
+
+/// User tower inputs: (profile [1,P], seq_short [Ls,Ds], seq_long_raw [L,Ds]).
+pub fn user_tower_inputs(world: &World, uf: &UserFeatures) -> Vec<Tensor> {
+    let profile = Tensor::new(vec![1, uf.profile.len()], uf.profile.clone());
+    let seq_short = gather_seq_emb(world, &uf.short_seq);
+    let seq_long = gather_seq_emb(world, &uf.long_seq);
+    vec![profile, seq_short, seq_long]
+}
+
+/// Item-raw matrix for a mini-batch (padded to `batch` rows by repeating
+/// the last item — scores for padding rows are discarded downstream).
+pub fn item_raw_batch(feats: &[ItemFeatures], batch: usize) -> Tensor {
+    assert!(!feats.is_empty() && feats.len() <= batch);
+    let d = feats[0].raw.len();
+    let mut data = Vec::with_capacity(batch * d);
+    for f in feats {
+        data.extend_from_slice(&f.raw);
+    }
+    for _ in feats.len()..batch {
+        data.extend_from_slice(&feats[feats.len() - 1].raw);
+    }
+    Tensor::new(vec![batch, d], data)
+}
+
+/// Item multi-modal matrix for a mini-batch, padded like `item_raw_batch`.
+pub fn item_mm_batch(feats: &[ItemFeatures], batch: usize) -> Tensor {
+    let d = feats[0].mm.len();
+    let mut data = Vec::with_capacity(batch * d);
+    for f in feats {
+        data.extend_from_slice(&f.mm);
+    }
+    for _ in feats.len()..batch {
+        data.extend_from_slice(&feats[feats.len() - 1].mm);
+    }
+    Tensor::new(vec![batch, d], data)
+}
+
+/// SIM cross feature: per candidate, mean seq-embedding of the user's
+/// category-matched subsequence -> [batch, D_SEQ_RAW].  `subseq_of` maps a
+/// category to the (pre-cached or freshly fetched) subsequence.
+pub fn sim_cross_batch(
+    world: &World,
+    cats: &[u32],
+    batch: usize,
+    mut subseq_of: impl FnMut(u32) -> Vec<u32>,
+) -> Tensor {
+    let d = world.items_seq_emb.shape()[1];
+    let mut out = vec![0.0f32; batch * d];
+    // Group candidates by category so each subsequence pools once.
+    let mut by_cat: std::collections::HashMap<u32, Vec<usize>> =
+        std::collections::HashMap::new();
+    for (i, &c) in cats.iter().enumerate() {
+        by_cat.entry(c).or_default().push(i);
+    }
+    for (cat, rows) in by_cat {
+        let sub = subseq_of(cat);
+        if sub.is_empty() {
+            continue;
+        }
+        let mut pooled = vec![0.0f32; d];
+        for &item in &sub {
+            for (p, v) in pooled
+                .iter_mut()
+                .zip(world.items_seq_emb.f32_row(item as usize))
+            {
+                *p += v;
+            }
+        }
+        let inv = 1.0 / sub.len() as f32;
+        for p in pooled.iter_mut() {
+            *p *= inv;
+        }
+        for &r in &rows {
+            out[r * d..(r + 1) * d].copy_from_slice(&pooled);
+        }
+    }
+    // Padding rows repeat the last real row.
+    if cats.len() < batch && !cats.is_empty() {
+        let last = (cats.len() - 1) * d;
+        let last_row = out[last..last + d].to_vec();
+        for r in cats.len()..batch {
+            out[r * d..(r + 1) * d].copy_from_slice(&last_row);
+        }
+    }
+    Tensor::new(vec![batch, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::store::ItemFeatures;
+
+    fn items(n: usize, d: usize) -> Vec<ItemFeatures> {
+        (0..n)
+            .map(|i| ItemFeatures {
+                raw: vec![i as f32; d],
+                mm: vec![i as f32 + 0.5; d],
+                seq_emb: vec![0.0; 4],
+                category: i as u32 % 3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn item_batch_pads_with_last_row() {
+        let t = item_raw_batch(&items(3, 4), 5);
+        assert_eq!(t.shape, vec![5, 4]);
+        assert_eq!(t.row(2), t.row(3));
+        assert_eq!(t.row(2), t.row(4));
+        assert_ne!(t.row(1), t.row(2));
+    }
+
+    #[test]
+    fn mm_batch_shape() {
+        let t = item_mm_batch(&items(4, 6), 4);
+        assert_eq!(t.shape, vec![4, 6]);
+        assert_eq!(t.row(0)[0], 0.5);
+    }
+}

@@ -1,0 +1,106 @@
+//! Synthetic service-latency model for the feature-storage / retrieval
+//! substrates (DESIGN.md §2).  Table 4's RT structure comes from *which*
+//! fetches sit on the critical path, so remote calls are emulated with a
+//! calibrated delay: base service time + per-KB payload term + lognormal
+//! jitter.  Short delays spin on `Instant` (sleep() granularity on Linux is
+//! ~50µs, far too coarse for µs-scale modeling).
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Fixed per-call service time, microseconds.
+    pub base_us: f64,
+    /// Additional microseconds per KiB of payload.
+    pub per_kib_us: f64,
+    /// Lognormal jitter sigma (0 = deterministic).
+    pub jitter_sigma: f64,
+}
+
+impl LatencyModel {
+    pub const fn zero() -> Self {
+        LatencyModel {
+            base_us: 0.0,
+            per_kib_us: 0.0,
+            jitter_sigma: 0.0,
+        }
+    }
+
+    pub fn fixed(base_us: f64) -> Self {
+        LatencyModel {
+            base_us,
+            per_kib_us: 0.0,
+            jitter_sigma: 0.0,
+        }
+    }
+
+    /// Sample the delay for a payload of `bytes`.
+    pub fn sample(&self, bytes: usize, rng: &mut Pcg64) -> Duration {
+        let mut us = self.base_us + self.per_kib_us * (bytes as f64 / 1024.0);
+        if self.jitter_sigma > 0.0 {
+            us *= rng.lognormal(0.0, self.jitter_sigma);
+        }
+        Duration::from_nanos((us * 1000.0) as u64)
+    }
+
+    /// Block the calling thread for a sampled delay.
+    pub fn charge(&self, bytes: usize, rng: &mut Pcg64) -> Duration {
+        let d = self.sample(bytes, rng);
+        spin_wait(d);
+        d
+    }
+}
+
+/// Latency wait.  The testbed is a single-core VM, so burning the core on
+/// a spin loop would *displace real work* and distort every overlap
+/// measurement; waits above 100µs sleep (granularity ~50µs is negligible
+/// at the ms scales modeled), only the short tail spins.
+pub fn spin_wait(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let deadline = Instant::now() + d;
+    if d > Duration::from_micros(100) {
+        std::thread::sleep(d.saturating_sub(Duration::from_micros(60)));
+    }
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_is_free() {
+        let mut rng = Pcg64::new(1);
+        assert_eq!(LatencyModel::zero().sample(1 << 20, &mut rng),
+                   Duration::ZERO);
+    }
+
+    #[test]
+    fn payload_term_scales() {
+        let mut rng = Pcg64::new(2);
+        let m = LatencyModel {
+            base_us: 10.0,
+            per_kib_us: 2.0,
+            jitter_sigma: 0.0,
+        };
+        let d1 = m.sample(1024, &mut rng);
+        let d2 = m.sample(10 * 1024, &mut rng);
+        assert_eq!(d1, Duration::from_micros(12));
+        assert_eq!(d2, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn spin_wait_is_accurate() {
+        let t0 = Instant::now();
+        spin_wait(Duration::from_micros(300));
+        let e = t0.elapsed();
+        assert!(e >= Duration::from_micros(300));
+        assert!(e < Duration::from_millis(5), "{e:?}");
+    }
+}

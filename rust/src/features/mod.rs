@@ -1,0 +1,12 @@
+//! Feature substrate: the synthetic world (production-data substitute),
+//! the remote feature store with latency modeling, and dense-tensor
+//! assembly for the HLO heads.
+
+pub mod assembly;
+pub mod latency;
+pub mod store;
+pub mod world;
+
+pub use latency::LatencyModel;
+pub use store::{FeatureStore, ItemFeatures, UserFeatures};
+pub use world::World;

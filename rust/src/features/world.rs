@@ -1,0 +1,150 @@
+//! The synthetic world, loaded from the AOT-exported tables — the single
+//! source of truth shared with python (`python/compile/data.py`).  Holds
+//! user/item features, behavior sequences, the oracle click model and the
+//! SIM-hard offline index.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, Table};
+
+/// All world tables resident in memory (a few tens of MB at repo scale).
+pub struct World {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub l_long: usize,
+    pub n_categories: usize,
+
+    pub users_profile: Table,   // f32 [U, D_PROFILE_RAW]
+    pub users_short_seq: Table, // u32 [U, L_SHORT]
+    pub users_long_seq: Table,  // u32 [U, L_LONG]
+    pub users_mean_mm: Table,   // f32 [U, D_MM]   (oracle)
+    pub users_cat_share: Table, // f32 [U, N_CAT]  (oracle)
+    pub users_z: Table,         // f32 [U, D_LATENT] (oracle)
+
+    pub items_raw: Table,      // f32 [I, D_ITEM_RAW]
+    pub items_mm: Table,       // f32 [I, D_MM]
+    pub items_seq_emb: Table,  // f32 [I, D_SEQ_RAW]
+    pub items_category: Table, // u32 [I]
+    pub items_bid: Table,      // f32 [I]
+    pub items_z: Table,        // f32 [I, D_LATENT] (oracle)
+
+    pub w_hash: Table,             // f32 [D_LSH_BITS, D_MM]
+    pub items_sign_packed: Table,  // u8  [I, D_LSH_BITS/8] (python oracle)
+
+    pub click_w: [f32; 3],
+    pub click_b: f32,
+
+    /// SIM-hard offline index: (user, category) -> long-term subsequence.
+    sim_index: Vec<HashMap<u32, Vec<u32>>>,
+    pub l_sim_sub: usize,
+}
+
+impl World {
+    pub fn load(manifest: &Manifest) -> Result<World> {
+        let t = |n: &str| manifest.load_table(n);
+        let users_long_seq = t("users_long_seq")?;
+        let items_category = t("items_category")?;
+        let n_users = users_long_seq.shape()[0];
+        let l_long = users_long_seq.shape()[1];
+        let n_items = items_category.shape()[0];
+        let l_sim_sub = manifest.dim("L_SIM_SUB");
+        let n_categories = manifest.dim("N_CATEGORIES");
+
+        // Build the SIM-hard offline index (paper §3.3: preprocessed
+        // <user, category, sub_sequence> triples).
+        let mut sim_index = Vec::with_capacity(n_users);
+        for u in 0..n_users {
+            let seq = users_long_seq.u32_row(u);
+            let mut per_cat: HashMap<u32, Vec<u32>> = HashMap::new();
+            for &item in seq {
+                let cat = items_category.as_u32()[item as usize];
+                let sub = per_cat.entry(cat).or_default();
+                if sub.len() < l_sim_sub {
+                    sub.push(item);
+                }
+            }
+            sim_index.push(per_cat);
+        }
+
+        Ok(World {
+            n_users,
+            n_items,
+            l_long,
+            n_categories,
+            users_profile: t("users_profile")?,
+            users_short_seq: t("users_short_seq")?,
+            users_long_seq,
+            users_mean_mm: t("users_mean_mm")?,
+            users_cat_share: t("users_cat_share")?,
+            users_z: t("users_z")?,
+            items_raw: t("items_raw")?,
+            items_mm: t("items_mm")?,
+            items_seq_emb: t("items_seq_emb")?,
+            items_category,
+            items_bid: t("items_bid")?,
+            items_z: t("items_z")?,
+            w_hash: t("w_hash")?,
+            items_sign_packed: t("items_sign_packed")?,
+            click_w: manifest.oracle.click_w,
+            click_b: manifest.oracle.click_b,
+            sim_index,
+            l_sim_sub,
+        })
+    }
+
+    pub fn category_of(&self, item: u32) -> u32 {
+        self.items_category.as_u32()[item as usize]
+    }
+
+    /// Categories present in a user's long-term history — the "all
+    /// possible user-category combinations of the requesting user" that
+    /// the pre-caching phase warms (§3.3, Figure 5).
+    pub fn user_sim_categories(&self, user: usize) -> Vec<u32> {
+        self.sim_index[user].keys().copied().collect()
+    }
+
+    /// SIM-hard subsequence for (user, category), optionally truncated to a
+    /// parse budget (w/o pre-caching, §3.3).
+    pub fn sim_subsequence(&self, user: usize, cat: u32, budget: f64) -> &[u32] {
+        let sub = self.sim_index[user]
+            .get(&cat)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[]);
+        let cap = ((self.l_sim_sub as f64 * budget).round() as usize).max(1);
+        &sub[..sub.len().min(cap)]
+    }
+
+    // ---- oracle click model (matches data.World.click_logit) -------------
+    pub fn click_logit(&self, user: usize, item: u32) -> f32 {
+        let zu = self.users_z.f32_row(user);
+        let zi = self.items_z.f32_row(item as usize);
+        let d = zu.len() as f32;
+        let short: f32 =
+            zu.iter().zip(zi).map(|(a, b)| a * b).sum::<f32>() / d.sqrt();
+        let mu = self.users_mean_mm.f32_row(user);
+        let mi = self.items_mm.f32_row(item as usize);
+        let long: f32 = mu.iter().zip(mi).map(|(a, b)| a * b).sum();
+        let cat = self.users_cat_share.f32_row(user)
+            [self.category_of(item) as usize];
+        self.click_w[0] * short + self.click_w[1] * long
+            + self.click_w[2] * cat + self.click_b
+    }
+
+    pub fn click_prob(&self, user: usize, item: u32) -> f32 {
+        1.0 / (1.0 + (-self.click_logit(user, item)).exp())
+    }
+
+    pub fn bid(&self, item: u32) -> f32 {
+        self.items_bid.as_f32()[item as usize]
+    }
+
+    /// Total bytes of raw item features (the denominator of the §5.3
+    /// storage comparison: N2O table must be much smaller than this).
+    pub fn item_feature_bytes(&self) -> usize {
+        self.items_raw.size_bytes()
+            + self.items_mm.size_bytes()
+            + self.items_seq_emb.size_bytes()
+    }
+}

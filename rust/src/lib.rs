@@ -1,0 +1,23 @@
+//! # AIF — Asynchronous Inference Framework for Cost-Effective Pre-Ranking
+//!
+//! Rust L3 coordinator of the three-layer reproduction (DESIGN.md):
+//! the Merger request lifecycle, online-asynchronous user-side inference
+//! overlapped with retrieval, nearline N2O item-side computation, SIM
+//! pre-caching, mini-batch pre-rank scheduling and the sequential baseline —
+//! all executing AOT-compiled JAX/Pallas HLO artifacts through PJRT.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! python invocation, and everything in this crate serves from `artifacts/`.
+
+pub mod util;
+pub mod config;
+pub mod runtime;
+pub mod features;
+pub mod retrieval;
+pub mod lsh;
+pub mod cache;
+pub mod nearline;
+pub mod coordinator;
+pub mod metrics;
+pub mod workload;
+pub mod server;

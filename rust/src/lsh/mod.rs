@@ -1,0 +1,217 @@
+//! LSH signature construction + similarity (paper Eq.5-7, §4.2).
+//!
+//! Signatures are built once per item from the frozen multi-modal
+//! embeddings (sign random projection with the shared `W_hash`), stored
+//! **packed uint8** in the N2O table (storage/transport — the paper's
+//! uint8 index table), and unpacked to ±1 f32 planes only at mini-batch
+//! assembly for the MXU-friendly HLO (DESIGN.md §7).
+
+use crate::runtime::{Table, Tensor};
+use crate::util::bits;
+
+/// Signature builder over a fixed `W_hash` [d_lsh_bits, d_mm].
+pub struct Hasher {
+    pub n_bits: usize,
+    d_mm: usize,
+    w_hash: Vec<f32>, // row-major [n_bits, d_mm]
+}
+
+impl Hasher {
+    pub fn from_table(w_hash: &Table) -> Hasher {
+        let shape = w_hash.shape();
+        Hasher {
+            n_bits: shape[0],
+            d_mm: shape[1],
+            w_hash: w_hash.as_f32().to_vec(),
+        }
+    }
+
+    pub fn packed_len(&self) -> usize {
+        self.n_bits.div_ceil(8)
+    }
+
+    /// Eq.(5): packed signature of one multi-modal embedding.
+    pub fn sign(&self, mm: &[f32]) -> Vec<u8> {
+        debug_assert_eq!(mm.len(), self.d_mm);
+        let bits: Vec<bool> = (0..self.n_bits)
+            .map(|b| {
+                let row = &self.w_hash[b * self.d_mm..(b + 1) * self.d_mm];
+                let dot: f32 = row.iter().zip(mm).map(|(w, x)| w * x).sum();
+                dot >= 0.0
+            })
+            .collect();
+        bits::pack_bits(&bits)
+    }
+
+    /// Batch signing into a contiguous packed matrix [n, packed_len].
+    pub fn sign_rows(&self, mm: &Table) -> Vec<u8> {
+        let n = mm.shape()[0];
+        let mut out = Vec::with_capacity(n * self.packed_len());
+        for i in 0..n {
+            out.extend_from_slice(&self.sign(mm.f32_row(i)));
+        }
+        out
+    }
+}
+
+/// Unpack a set of packed signatures into a ±1 plane tensor [n, n_bits].
+pub fn unpack_plane(packed: &[u8], n: usize, n_bits: usize) -> Tensor {
+    let pl = n_bits.div_ceil(8);
+    let mut data = vec![0.0f32; n * n_bits];
+    for i in 0..n {
+        bits::unpack_to_pm1(
+            &packed[i * pl..(i + 1) * pl],
+            n_bits,
+            &mut data[i * n_bits..(i + 1) * n_bits],
+        );
+    }
+    Tensor::new(vec![n, n_bits], data)
+}
+
+/// Rust-side reference similarity between two packed signature matrices —
+/// used by tests and the Table-3 complexity bench (the serving path runs
+/// this inside the HLO).
+pub fn similarity_matrix(
+    a: &[u8],
+    n_a: usize,
+    b: &[u8],
+    n_b: usize,
+    n_bits: usize,
+) -> Vec<f32> {
+    let pl = n_bits.div_ceil(8);
+    let mut out = vec![0.0f32; n_a * n_b];
+    for i in 0..n_a {
+        let ra = &a[i * pl..(i + 1) * pl];
+        for j in 0..n_b {
+            let rb = &b[j * pl..(j + 1) * pl];
+            out[i * n_b + j] = bits::lsh_similarity_packed(ra, rb, n_bits);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hasher() -> Hasher {
+        // 16-bit hash over d_mm=4, fixed weights.
+        let w: Vec<f32> = (0..16 * 4)
+            .map(|i| ((i * 37 + 11) % 19) as f32 - 9.0)
+            .collect();
+        Hasher {
+            n_bits: 16,
+            d_mm: 4,
+            w_hash: w,
+        }
+    }
+
+    #[test]
+    fn sign_is_deterministic_and_packed() {
+        let h = hasher();
+        let s1 = h.sign(&[0.3, -1.0, 0.7, 0.2]);
+        let s2 = h.sign(&[0.3, -1.0, 0.7, 0.2]);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), 2);
+    }
+
+    #[test]
+    fn similar_inputs_similar_signatures() {
+        let h = hasher();
+        let a = h.sign(&[1.0, 0.5, -0.3, 0.8]);
+        let b = h.sign(&[1.01, 0.49, -0.31, 0.82]); // tiny perturbation
+        let c = h.sign(&[-1.0, -0.5, 0.3, -0.8]); // antipode
+        let sim_ab = crate::util::bits::lsh_similarity_packed(&a, &b, 16);
+        let sim_ac = crate::util::bits::lsh_similarity_packed(&a, &c, 16);
+        assert!(sim_ab > 0.9, "{sim_ab}");
+        assert!(sim_ac < 0.1, "{sim_ac}");
+    }
+
+    #[test]
+    fn unpack_plane_matches_packed_similarity() {
+        let h = hasher();
+        let sigs: Vec<Vec<u8>> = (0..3)
+            .map(|i| h.sign(&[i as f32, 1.0 - i as f32, 0.5, -0.5]))
+            .collect();
+        let flat: Vec<u8> = sigs.concat();
+        let plane = unpack_plane(&flat, 3, 16);
+        // ±1 dot similarity == packed XNOR similarity.
+        for i in 0..3 {
+            for j in 0..3 {
+                let dot: f32 = plane.row(i).iter().zip(plane.row(j))
+                    .map(|(x, y)| x * y).sum();
+                let sim_plane = (1.0 + dot / 16.0) / 2.0;
+                let sim_packed = crate::util::bits::lsh_similarity_packed(
+                    &sigs[i], &sigs[j], 16);
+                assert!((sim_plane - sim_packed).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+/// SimTier histogram (Eq.9) computed the paper's way (§4.2): packed uint8
+/// signatures, XNOR + PopulationCount, integer tier binning — the serving-
+/// engine half of the LSH split (HLO keeps DIN's matmuls).  Returns a
+/// row-major [n_items, n_tiers] histogram normalized by `n_seq`.
+///
+/// Exactly matches the float path: tier = clip(floor(sim*N), 0, N-1) with
+/// sim = matches/n_bits, and matches*N/n_bits is exact integer arithmetic.
+pub fn tier_histogram(
+    item_packed: &[u8],
+    n_items: usize,
+    seq_packed: &[u8],
+    n_seq: usize,
+    n_bits: usize,
+    n_tiers: usize,
+) -> Vec<f32> {
+    let pl = n_bits.div_ceil(8);
+    let mut out = vec![0.0f32; n_items * n_tiers];
+    let inv = 1.0 / n_seq as f32;
+    // Tier lookup table over match counts (the paper's 1x256-style LUT,
+    // sized n_bits+1 here).
+    let tier_of: Vec<u8> = (0..=n_bits)
+        .map(|m| (((m * n_tiers) / n_bits).min(n_tiers - 1)) as u8)
+        .collect();
+    if n_bits == 64 && n_tiers <= 16 {
+        // Hot path: one signature == one u64 word.  Pre-convert both sides
+        // once so the O(n_items * n_seq) loop is xor+popcount+LUT only.
+        let to_words = |packed: &[u8], n: usize| -> Vec<u64> {
+            (0..n)
+                .map(|k| {
+                    u64::from_le_bytes(
+                        packed[k * 8..(k + 1) * 8].try_into().unwrap(),
+                    )
+                })
+                .collect()
+        };
+        let wi = to_words(item_packed, n_items);
+        let ws = to_words(seq_packed, n_seq);
+        for (i, &a) in wi.iter().enumerate() {
+            let mut counts = [0u32; 16];
+            for &b in &ws {
+                let matches = (!(a ^ b)).count_ones() as usize;
+                counts[tier_of[matches] as usize] += 1;
+            }
+            let row = &mut out[i * n_tiers..(i + 1) * n_tiers];
+            for (o, c) in row.iter_mut().zip(&counts) {
+                *o = *c as f32 * inv;
+            }
+        }
+        return out;
+    }
+    for i in 0..n_items {
+        let ri = &item_packed[i * pl..(i + 1) * pl];
+        let row = &mut out[i * n_tiers..(i + 1) * n_tiers];
+        let mut counts = vec![0u32; n_tiers];
+        for j in 0..n_seq {
+            let rj = &seq_packed[j * pl..(j + 1) * pl];
+            let matches =
+                crate::util::bits::xnor_matches_hw(ri, rj, n_bits) as usize;
+            counts[tier_of[matches] as usize] += 1;
+        }
+        for (o, c) in row.iter_mut().zip(&counts) {
+            *o = *c as f32 * inv;
+        }
+    }
+    out
+}

@@ -1,0 +1,253 @@
+//! `aif` — leader entrypoint + CLI for the AIF pre-ranking reproduction.
+//!
+//! Subcommands:
+//!   quickstart                     one request through the full AIF stack
+//!   serve    [--addr A]            HTTP server (/score, /metrics, /healthz)
+//!   replay   [--requests N]        closed-loop load run, prints a report
+//!   abtest   [--all-variants]      online A/B simulation (Table 2 online)
+//!   nearline                       nearline update-pipeline demo
+//!   table1 | table3 | table4 | fig6   paper experiment harnesses
+//!
+//! Common flags: --artifacts DIR  --variant NAME  --requests N  --clients N
+
+use std::sync::Arc;
+
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::Merger;
+use aif::nearline::UpdateEvent;
+use aif::util::cli::Args;
+use aif::workload::{experiments, runner};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command() {
+        Some("quickstart") => cmd_quickstart(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("abtest") => cmd_abtest(&args),
+        Some("nearline") => cmd_nearline(&args),
+        Some("table1") => experiments::run_table1(
+            &artifacts_dir(&args),
+            experiments::ExpScale::from_env(),
+        )
+        .map(|s| println!("{s}")),
+        Some("table3") => experiments::run_table3(&artifacts_dir(&args))
+            .map(|s| println!("{s}")),
+        Some("table4") => experiments::run_table4(
+            &artifacts_dir(&args),
+            experiments::ExpScale::from_env(),
+        )
+        .map(|s| println!("{s}")),
+        Some("fig6") => experiments::run_fig6(&artifacts_dir(&args))
+            .map(|s| println!("{s}")),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: aif <quickstart|serve|replay|abtest|nearline|table1|table3|\
+         table4|fig6> [--artifacts DIR] [--variant NAME] [--requests N]"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn build_merger(args: &Args) -> anyhow::Result<Arc<Merger>> {
+    let cfg = match args.get("config") {
+        Some(path) => ServingConfig::from_file(path)?,
+        None => ServingConfig::default(),
+    };
+    let cfg = ServingConfig {
+        variant: args.str_or("variant", &cfg.variant),
+        artifacts_dir: artifacts_dir(args),
+        n_rtp_workers: args.usize_or("rtp-workers", cfg.n_rtp_workers),
+        n_candidates: args.usize_or("candidates", cfg.n_candidates),
+        top_k: args.usize_or("top-k", cfg.top_k),
+        ..cfg
+    };
+    eprintln!(
+        "bringing up variant={} (rtp={}, candidates={}) ...",
+        cfg.variant, cfg.n_rtp_workers, cfg.n_candidates
+    );
+    Ok(Arc::new(Merger::build(cfg)?))
+}
+
+fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
+    let merger = build_merger(args)?;
+    let user = args.usize_or("user", 42);
+    let result = merger.handle(1, user)?;
+    println!("\nTop-10 pre-ranked items for user {user}:");
+    for (rank, (item, score)) in result.top_k.iter().take(10).enumerate() {
+        println!(
+            "  #{:<3} item {:<6} score {:.4}  (oracle pCTR {:.4}, bid {:.2})",
+            rank + 1,
+            item,
+            score,
+            merger.world.click_prob(user, *item),
+            merger.world.bid(*item)
+        );
+    }
+    let t = result.timings;
+    println!(
+        "\ntimings: total {:.2}ms = retrieval {:.2}ms (‖ user-async {}) \
+         + pre-rank {:.2}ms",
+        t.total.as_secs_f64() * 1e3,
+        t.retrieval.as_secs_f64() * 1e3,
+        t.user_async
+            .map(|d| format!("{:.2}ms", d.as_secs_f64() * 1e3))
+            .unwrap_or_else(|| "-".into()),
+        t.prerank.as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let merger = build_merger(args)?;
+    let addr = args.str_or("addr", "127.0.0.1:8787");
+    let server = aif::server::HttpServer::start(merger, &addr)?;
+    println!(
+        "serving on http://{}  (try /score?user=42, /metrics, /healthz)",
+        server.addr
+    );
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let merger = build_merger(args)?;
+    let n = args.usize_or("requests", 64) as u64;
+    let clients = args.usize_or("clients", 4);
+    let report = runner::closed_loop("replay", &merger, n, clients, 7);
+    println!("{}", report.render());
+    println!(
+        "extra storage: {:.2} MiB",
+        report.extra_storage_bytes as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+fn cmd_abtest(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let n = args.usize_or("requests", 512) as u64;
+    let slate = args.usize_or("slate", 10);
+    let base_cands = args.usize_or("candidates", 2048);
+    let plus15 = (base_cands as f64 * 1.15) as usize;
+    let rows: Vec<(&str, &str, SimMode, f64, usize)> =
+        if args.bool_or("all-variants", false) {
+            vec![
+                ("Base", "base", SimMode::Off, 1.0, base_cands),
+                ("AIF", "aif", SimMode::Precached, 1.0, base_cands),
+                ("AIF w/o Async-Vectors", "aif_noasync", SimMode::Precached,
+                 1.0, base_cands),
+                ("AIF w/o Pre-Caching SIM", "aif", SimMode::Sync, 0.25,
+                 base_cands),
+                ("AIF w/o BEA", "aif_nobea", SimMode::Precached, 1.0,
+                 base_cands),
+                ("AIF w/o Long-term", "aif_nolong", SimMode::Precached, 1.0,
+                 base_cands),
+                ("Base +15% candidates", "base", SimMode::Off, 1.0, plus15),
+                ("Base +15% parameters", "base_p115", SimMode::Off, 1.0,
+                 base_cands),
+            ]
+        } else {
+            vec![
+                ("Base", "base", SimMode::Off, 1.0, base_cands),
+                ("AIF", "aif", SimMode::Precached, 1.0, base_cands),
+            ]
+        };
+    let table = experiments::run_abtest(&dir, &rows, n, slate)?;
+    println!("{table}");
+    Ok(())
+}
+
+fn cmd_nearline(args: &Args) -> anyhow::Result<()> {
+    use aif::features::World;
+    use aif::lsh::Hasher;
+    use aif::nearline::{N2oTable, NearlineWorker, UpdateQueue};
+    use aif::runtime::{Manifest, RtpPool};
+
+    let dir = artifacts_dir(args);
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let world = Arc::new(World::load(&manifest)?);
+    let rtp = Arc::new(RtpPool::new(
+        Arc::clone(&manifest),
+        vec!["item_tower".into()],
+        2,
+    ));
+    let hasher = Arc::new(Hasher::from_table(&world.w_hash));
+    let n2o = Arc::new(N2oTable::new(
+        world.n_items,
+        manifest.dim("D"),
+        manifest.dim("N_BRIDGE"),
+        manifest.dim("D_LSH_BITS"),
+    ));
+    let worker = Arc::new(NearlineWorker::new(
+        Arc::clone(&rtp),
+        Arc::clone(&world),
+        hasher,
+        Arc::clone(&n2o),
+        manifest.batch,
+    ));
+
+    println!("[1] full build (model-update trigger)...");
+    let report = worker.full_build(1)?;
+    println!(
+        "    {} items via {} item_tower executions in {:?} -> {:.2} MiB \
+         (raw item features: {:.2} MiB)",
+        report.n_items,
+        report.executions,
+        report.elapsed,
+        report.table_bytes as f64 / (1 << 20) as f64,
+        world.item_feature_bytes() as f64 / (1 << 20) as f64,
+    );
+
+    println!("[2] incremental updates through the message queue...");
+    let queue = UpdateQueue::start(
+        Arc::clone(&worker),
+        512,
+        std::time::Duration::from_millis(20),
+    );
+    let v_before = n2o.version();
+    queue.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3, 500, 501]));
+    queue.publish(UpdateEvent::ItemFeatures(vec![2, 3, 777]));
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    println!(
+        "    coalesced incremental updates applied: {} \
+         (version unchanged: {})",
+        queue
+            .incremental_updates
+            .load(std::sync::atomic::Ordering::Relaxed),
+        n2o.version() == v_before
+    );
+
+    println!("[3] model swap (full rebuild, atomic generation bump)...");
+    queue.publish(UpdateEvent::ModelSwap { version: 2 });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // Wait for rebuild to land.
+    for _ in 0..600 {
+        if n2o.version() == 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("    table version now {}", n2o.version());
+    queue.shutdown();
+    Ok(())
+}

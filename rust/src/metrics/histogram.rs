@@ -1,0 +1,157 @@
+//! Lock-free log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Buckets are log-spaced from 1µs to ~17min with ~4.5% relative error per
+//! bucket — plenty for avgRT/p99RT deltas at the percent level.  Recording
+//! is a single atomic increment, safe from any thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const N_BUCKETS: usize = 512;
+/// Bucket boundaries grow by 2^(1/16) per step: 16 buckets per octave.
+const BUCKETS_PER_OCTAVE: f64 = 16.0;
+const MIN_NANOS: f64 = 1_000.0; // 1µs
+
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(nanos: u64) -> usize {
+        if (nanos as f64) <= MIN_NANOS {
+            return 0;
+        }
+        let idx = ((nanos as f64 / MIN_NANOS).log2() * BUCKETS_PER_OCTAVE)
+            .floor() as usize;
+        idx.min(N_BUCKETS - 1)
+    }
+
+    fn bucket_upper(idx: usize) -> f64 {
+        MIN_NANOS * 2f64.powf((idx + 1) as f64 / BUCKETS_PER_OCTAVE)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let nanos = d.as_nanos() as u64;
+        self.buckets[Self::bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in seconds.
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    /// Percentile in seconds (upper bucket bound -> ≤4.5% overestimate).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_upper(i) / 1e9;
+            }
+        }
+        self.max_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_nanos.store(0, Ordering::Relaxed);
+        self.max_nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_count() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 0.002).abs() < 1e-4, "{}", h.mean());
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let h = Histogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 > 400e-6 && p50 < 600e-6, "p50 {p50}");
+        assert!(p99 > 900e-6 && p99 < 1150e-6, "p99 {p99}");
+        assert!(h.percentile(100.0) >= p99);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        h.record(Duration::from_micros(100));
+                    }
+                })
+            })
+            .collect();
+        for t in hs {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(Duration::from_millis(5));
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0.0);
+    }
+}

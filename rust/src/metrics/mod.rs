@@ -1,0 +1,9 @@
+//! Serving metrics: log-bucketed latency histograms (avgRT / p99RT),
+//! windowed QPS counters and snapshot reporting — the measurement substrate
+//! behind Tables 1 and 4.
+
+pub mod histogram;
+pub mod report;
+
+pub use histogram::Histogram;
+pub use report::ServingMetrics;

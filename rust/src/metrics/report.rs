@@ -1,0 +1,119 @@
+//! Aggregated serving metrics + JSON snapshot (the numbers Tables 1/4 and
+//! the `/metrics` endpoint report).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::histogram::Histogram;
+use crate::util::json::{Object, Value};
+
+#[derive(Default)]
+pub struct ServingMetrics {
+    /// End-to-end request latency (what the user sees).
+    pub total_rt: Histogram,
+    /// Real-time pre-rank phase only (the paper's RT metric: retrieval is
+    /// upstream of pre-ranking, so avgRT/p99RT measure the pre-rank stage).
+    pub prerank_rt: Histogram,
+    /// Online-async user-side phase (overlapped with retrieval).
+    pub user_async_rt: Histogram,
+    /// Retrieval stage (upstream, for overlap accounting).
+    pub retrieval_rt: Histogram,
+
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub rtp_calls: AtomicU64,
+    pub items_scored: AtomicU64,
+    /// Async-phase time hidden under retrieval (the latency the paper's
+    /// design removes from the critical path).
+    pub overlap_saved_nanos: AtomicU64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(
+        &self,
+        total: Duration,
+        prerank: Duration,
+        user_async: Option<Duration>,
+        retrieval: Duration,
+    ) {
+        self.total_rt.record(total);
+        self.prerank_rt.record(prerank);
+        self.retrieval_rt.record(retrieval);
+        if let Some(ua) = user_async {
+            self.user_async_rt.record(ua);
+            let hidden = ua.min(retrieval);
+            self.overlap_saved_nanos
+                .fetch_add(hidden.as_nanos() as u64, Ordering::Relaxed);
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn qps(&self, wall: Duration) -> f64 {
+        self.requests.load(Ordering::Relaxed) as f64 / wall.as_secs_f64()
+    }
+
+    pub fn snapshot(&self, wall: Duration) -> Value {
+        let mut o = Object::new();
+        let hist = |h: &Histogram| {
+            let mut v = Object::new();
+            v.insert("count", h.count());
+            v.insert("avg_ms", h.mean() * 1e3);
+            v.insert("p50_ms", h.percentile(50.0) * 1e3);
+            v.insert("p99_ms", h.percentile(99.0) * 1e3);
+            v.insert("max_ms", h.max() * 1e3);
+            Value::Obj(v)
+        };
+        o.insert("total_rt", hist(&self.total_rt));
+        o.insert("prerank_rt", hist(&self.prerank_rt));
+        o.insert("user_async_rt", hist(&self.user_async_rt));
+        o.insert("retrieval_rt", hist(&self.retrieval_rt));
+        o.insert("requests", self.requests.load(Ordering::Relaxed));
+        o.insert("errors", self.errors.load(Ordering::Relaxed));
+        o.insert("rtp_calls", self.rtp_calls.load(Ordering::Relaxed));
+        o.insert("items_scored", self.items_scored.load(Ordering::Relaxed));
+        o.insert(
+            "overlap_saved_ms_total",
+            self.overlap_saved_nanos.load(Ordering::Relaxed) as f64 / 1e6,
+        );
+        o.insert("qps", self.qps(wall));
+        Value::Obj(o)
+    }
+
+    pub fn reset(&self) {
+        self.total_rt.reset();
+        self.prerank_rt.reset();
+        self.user_async_rt.reset();
+        self.retrieval_rt.reset();
+        self.requests.store(0, Ordering::Relaxed);
+        self.errors.store(0, Ordering::Relaxed);
+        self.rtp_calls.store(0, Ordering::Relaxed);
+        self.items_scored.store(0, Ordering::Relaxed);
+        self.overlap_saved_nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_has_expected_fields() {
+        let m = ServingMetrics::new();
+        m.record_request(
+            Duration::from_millis(20),
+            Duration::from_millis(8),
+            Some(Duration::from_millis(5)),
+            Duration::from_millis(10),
+        );
+        let snap = m.snapshot(Duration::from_secs(1));
+        assert_eq!(snap.req("requests").as_usize(), Some(1));
+        assert!(snap.req("prerank_rt").req("avg_ms").as_f64().unwrap() > 7.0);
+        // 5ms async fully hidden under 10ms retrieval.
+        let saved = snap.req("overlap_saved_ms_total").as_f64().unwrap();
+        assert!((saved - 5.0).abs() < 0.01, "{saved}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Nearline asynchronous inference for item-side computations (paper §3.2):
+//! the N2O index table, the update-triggered nearline worker and the
+//! incremental message queue.
+
+pub mod n2o;
+pub mod queue;
+pub mod worker;
+
+pub use n2o::{N2oEntry, N2oSnapshot, N2oTable};
+pub use queue::{UpdateEvent, UpdateQueue};
+pub use worker::NearlineWorker;

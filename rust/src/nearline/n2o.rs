@@ -1,0 +1,254 @@
+//! N2O index table — the nearline item-side result store (paper §3.2/§3.4).
+//!
+//! Holds, per item: the compressed item vector (Eq.4), the BEA item-side
+//! attention weights (Alg.1 step 3) and the packed LSH signature (Eq.5).
+//! Supports **full** rebuilds (model update -> new generation, atomic swap)
+//! and **incremental** updates (item feature changes / new items -> in-place
+//! row upserts), mirroring the paper's "index table for N2O that supports
+//! both full and incremental updates ... updated synchronously whenever the
+//! original item feature index table undergoes full or incremental updates".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::lsh;
+use crate::runtime::Tensor;
+
+/// One item's nearline-computed row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct N2oEntry {
+    pub item_vec: Vec<f32>,
+    pub bea_w: Vec<f32>,
+    pub sign_packed: Vec<u8>,
+}
+
+impl N2oEntry {
+    pub fn size_bytes(&self) -> usize {
+        self.item_vec.len() * 4 + self.bea_w.len() * 4 + self.sign_packed.len()
+    }
+}
+
+/// One immutable generation of the table.
+#[derive(Debug)]
+struct Generation {
+    /// Dense by item id; None = not yet computed for this generation.
+    entries: Vec<Option<N2oEntry>>,
+    version: u64,
+}
+
+/// Versioned, concurrently readable N2O table.
+pub struct N2oTable {
+    inner: RwLock<Arc<Generation>>,
+    pub d: usize,
+    pub n_bridge: usize,
+    pub n_bits: usize,
+    pub reads: AtomicU64,
+    pub stale_reads: AtomicU64,
+}
+
+impl N2oTable {
+    pub fn new(n_items: usize, d: usize, n_bridge: usize, n_bits: usize) -> Self {
+        N2oTable {
+            inner: RwLock::new(Arc::new(Generation {
+                entries: vec![None; n_items],
+                version: 0,
+            })),
+            d,
+            n_bridge,
+            n_bits,
+            reads: AtomicU64::new(0),
+            stale_reads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.read().unwrap().version
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.inner.read().unwrap().entries.len()
+    }
+
+    /// Atomic full swap to a new generation (model update trigger).
+    pub fn swap_full(&self, entries: Vec<Option<N2oEntry>>, version: u64) {
+        let mut guard = self.inner.write().unwrap();
+        assert!(
+            version > guard.version,
+            "full swap must advance the version ({} -> {version})",
+            guard.version
+        );
+        *guard = Arc::new(Generation { entries, version });
+    }
+
+    /// Incremental upsert into the current generation (item feature update
+    /// / new item from the message queue).  Copy-on-write of the generation
+    /// vector: readers holding the old Arc are unaffected.
+    pub fn upsert(&self, rows: Vec<(u32, N2oEntry)>) {
+        if rows.is_empty() {
+            return;
+        }
+        let mut guard = self.inner.write().unwrap();
+        let mut entries = guard.entries.clone();
+        let max_id = rows.iter().map(|(i, _)| *i as usize).max().unwrap();
+        if max_id >= entries.len() {
+            entries.resize(max_id + 1, None); // new items extend the table
+        }
+        for (id, e) in rows {
+            entries[id as usize] = Some(e);
+        }
+        *guard = Arc::new(Generation {
+            entries,
+            version: guard.version,
+        });
+    }
+
+    /// Snapshot handle for consistent multi-row reads within one request.
+    pub fn snapshot(&self) -> N2oSnapshot {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        N2oSnapshot {
+            generation: Arc::clone(&self.inner.read().unwrap()),
+            d: self.d,
+            n_bridge: self.n_bridge,
+            n_bits: self.n_bits,
+        }
+    }
+
+    /// Total resident bytes (the §5.3 storage comparison numerator).
+    pub fn size_bytes(&self) -> usize {
+        self.inner
+            .read()
+            .unwrap()
+            .entries
+            .iter()
+            .flatten()
+            .map(|e| e.size_bytes())
+            .sum()
+    }
+
+    pub fn coverage(&self) -> f64 {
+        let g = self.inner.read().unwrap();
+        let have = g.entries.iter().filter(|e| e.is_some()).count();
+        have as f64 / g.entries.len().max(1) as f64
+    }
+}
+
+/// Immutable view of one generation.
+pub struct N2oSnapshot {
+    generation: Arc<Generation>,
+    d: usize,
+    n_bridge: usize,
+    n_bits: usize,
+}
+
+impl N2oSnapshot {
+    pub fn version(&self) -> u64 {
+        self.generation.version
+    }
+
+    pub fn get(&self, item: u32) -> Option<&N2oEntry> {
+        self.generation
+            .entries
+            .get(item as usize)
+            .and_then(|e| e.as_ref())
+    }
+
+    /// Assemble the pre-rank head inputs for a mini-batch of items, padded
+    /// to `batch` rows: (item_vec [B,D], bea_w [B,n], item_sign [B,bits]).
+    /// Returns None if any item is missing from this generation (caller
+    /// falls back to inline computation or errors).
+    pub fn assemble(
+        &self,
+        items: &[u32],
+        batch: usize,
+    ) -> Option<(Tensor, Tensor, Tensor)> {
+        assert!(!items.is_empty() && items.len() <= batch);
+        let mut vecs = Vec::with_capacity(batch * self.d);
+        let mut ws = Vec::with_capacity(batch * self.n_bridge);
+        let mut packed = Vec::with_capacity(batch * self.n_bits / 8);
+        for &it in items {
+            let e = self.get(it)?;
+            vecs.extend_from_slice(&e.item_vec);
+            ws.extend_from_slice(&e.bea_w);
+            packed.extend_from_slice(&e.sign_packed);
+        }
+        let last = self.get(items[items.len() - 1])?;
+        for _ in items.len()..batch {
+            vecs.extend_from_slice(&last.item_vec);
+            ws.extend_from_slice(&last.bea_w);
+            packed.extend_from_slice(&last.sign_packed);
+        }
+        let sign = lsh::unpack_plane(&packed, batch, self.n_bits);
+        Some((
+            Tensor::new(vec![batch, self.d], vecs),
+            Tensor::new(vec![batch, self.n_bridge], ws),
+            sign,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(v: f32) -> N2oEntry {
+        N2oEntry {
+            item_vec: vec![v; 4],
+            bea_w: vec![v; 2],
+            sign_packed: vec![0b1010_0101],
+        }
+    }
+
+    #[test]
+    fn full_swap_advances_version() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        assert_eq!(t.version(), 0);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        assert_eq!(t.version(), 1);
+        assert_eq!(t.coverage(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "advance")]
+    fn full_swap_rejects_stale_version() {
+        let t = N2oTable::new(2, 4, 2, 8);
+        t.swap_full(vec![None, None], 3);
+        t.swap_full(vec![None, None], 2);
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_upserts() {
+        let t = N2oTable::new(3, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 3], 1);
+        let snap = t.snapshot();
+        t.upsert(vec![(0, entry(9.0))]);
+        // Old snapshot still sees the old row.
+        assert_eq!(snap.get(0).unwrap().item_vec[0], 1.0);
+        // New snapshot sees the update.
+        assert_eq!(t.snapshot().get(0).unwrap().item_vec[0], 9.0);
+    }
+
+    #[test]
+    fn upsert_extends_for_new_items() {
+        let t = N2oTable::new(2, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 2], 1);
+        t.upsert(vec![(5, entry(2.0))]); // new item id beyond table
+        assert_eq!(t.n_items(), 6);
+        assert_eq!(t.snapshot().get(5).unwrap().item_vec[0], 2.0);
+    }
+
+    #[test]
+    fn assemble_pads_and_unpacks() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)), Some(entry(2.0)), None, None], 1);
+        let snap = t.snapshot();
+        let (v, w, s) = snap.assemble(&[0, 1], 3).unwrap();
+        assert_eq!(v.shape, vec![3, 4]);
+        assert_eq!(w.shape, vec![3, 2]);
+        assert_eq!(s.shape, vec![3, 8]);
+        assert_eq!(v.row(2), v.row(1), "padding repeats last row");
+        // 0b1010_0101 little-endian bit order -> +1,-1,+1,-1,-1,+1,-1,+1
+        assert_eq!(s.row(0), &[1., -1., 1., -1., -1., 1., -1., 1.]);
+        // Missing item -> None.
+        assert!(snap.assemble(&[0, 2], 2).is_none());
+    }
+}

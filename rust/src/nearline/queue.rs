@@ -1,0 +1,144 @@
+//! Incremental message queue (paper §4.2 "Update Methods": "we employ an
+//! incremental message queue that dynamically processes updates, enabling
+//! seamless integration of new entries without recalculating existing
+//! signatures").
+//!
+//! A background thread drains events with batching (up to `max_batch` or
+//! `linger`), coalesces duplicate item ids, and applies them through the
+//! [`NearlineWorker`].
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::worker::NearlineWorker;
+
+/// Nearline update triggers.
+#[derive(Debug, Clone)]
+pub enum UpdateEvent {
+    /// Item feature change or brand-new item.
+    ItemFeatures(Vec<u32>),
+    /// Model checkpoint update -> full rebuild to `version`.
+    ModelSwap { version: u64 },
+    /// Drain & stop.
+    Shutdown,
+}
+
+pub struct UpdateQueue {
+    tx: Sender<UpdateEvent>,
+    handle: Option<JoinHandle<()>>,
+    pub incremental_updates: Arc<AtomicU64>,
+    pub full_rebuilds: Arc<AtomicU64>,
+}
+
+impl UpdateQueue {
+    pub fn start(
+        worker: Arc<NearlineWorker>,
+        max_batch: usize,
+        linger: Duration,
+    ) -> UpdateQueue {
+        let (tx, rx) = channel::<UpdateEvent>();
+        let incremental_updates = Arc::new(AtomicU64::new(0));
+        let full_rebuilds = Arc::new(AtomicU64::new(0));
+        let inc = Arc::clone(&incremental_updates);
+        let full = Arc::clone(&full_rebuilds);
+        let handle = std::thread::Builder::new()
+            .name("aif-nearline-queue".into())
+            .spawn(move || {
+                let mut stop = false;
+                while !stop {
+                    // Block for the first event.
+                    let first = match rx.recv() {
+                        Ok(e) => e,
+                        Err(_) => break,
+                    };
+                    let mut items: BTreeSet<u32> = BTreeSet::new();
+                    let mut model_swap: Option<u64> = None;
+                    let mut absorb = |e: UpdateEvent,
+                                      items: &mut BTreeSet<u32>,
+                                      stop: &mut bool| {
+                        match e {
+                            UpdateEvent::ItemFeatures(ids) => {
+                                items.extend(ids);
+                            }
+                            UpdateEvent::ModelSwap { version } => {
+                                model_swap = Some(
+                                    model_swap.map_or(version, |v| {
+                                        v.max(version)
+                                    }),
+                                );
+                            }
+                            UpdateEvent::Shutdown => *stop = true,
+                        }
+                    };
+                    absorb(first, &mut items, &mut stop);
+                    // Linger to batch bursts.
+                    let deadline = Instant::now() + linger;
+                    while items.len() < max_batch && !stop {
+                        match rx.try_recv() {
+                            Ok(e) => absorb(e, &mut items, &mut stop),
+                            Err(TryRecvError::Empty) => {
+                                if Instant::now() >= deadline {
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_micros(
+                                    200,
+                                ));
+                            }
+                            Err(TryRecvError::Disconnected) => {
+                                stop = true;
+                            }
+                        }
+                    }
+                    // A model swap subsumes incremental work.
+                    if let Some(version) = model_swap {
+                        if let Err(e) = worker.full_build(version) {
+                            log::error!("nearline full build failed: {e:#}");
+                        } else {
+                            full.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else if !items.is_empty() {
+                        let ids: Vec<u32> = items.into_iter().collect();
+                        match worker.incremental(&ids) {
+                            Ok(n) => {
+                                inc.fetch_add(n as u64, Ordering::Relaxed);
+                            }
+                            Err(e) => log::error!(
+                                "nearline incremental failed: {e:#}"
+                            ),
+                        }
+                    }
+                }
+            })
+            .expect("spawn nearline queue");
+        UpdateQueue {
+            tx,
+            handle: Some(handle),
+            incremental_updates,
+            full_rebuilds,
+        }
+    }
+
+    pub fn publish(&self, event: UpdateEvent) {
+        let _ = self.tx.send(event);
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(UpdateEvent::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for UpdateQueue {
+    fn drop(&mut self) {
+        let _ = self.tx.send(UpdateEvent::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Nearline worker: update-triggered item-side computation (paper §3.2).
+//!
+//! Runs the `item_tower` artifact over item batches on the RTP fleet and
+//! writes N2O rows.  A **full build** covers the whole catalog (model
+//! checkpoint update trigger) using "offline high-priority CPU resources,
+//! utilizing highly concurrent processes" — here, many in-flight RTP calls.
+//! **Incremental** builds recompute only the touched items (feature update
+//! / new item trigger, via the message queue).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::n2o::{N2oEntry, N2oTable};
+use crate::features::World;
+use crate::lsh::Hasher;
+use crate::runtime::{RtpPool, Tensor};
+
+pub struct NearlineWorker {
+    pub rtp: Arc<RtpPool>,
+    pub world: Arc<World>,
+    pub hasher: Arc<Hasher>,
+    pub table: Arc<N2oTable>,
+    pub batch: usize,
+}
+
+impl NearlineWorker {
+    pub fn new(
+        rtp: Arc<RtpPool>,
+        world: Arc<World>,
+        hasher: Arc<Hasher>,
+        table: Arc<N2oTable>,
+        batch: usize,
+    ) -> Self {
+        NearlineWorker {
+            rtp,
+            world,
+            hasher,
+            table,
+            batch,
+        }
+    }
+
+    fn item_raw_tensor(&self, items: &[u32]) -> Tensor {
+        let d = self.world.items_raw.shape()[1];
+        let mut data = Vec::with_capacity(self.batch * d);
+        for &i in items {
+            data.extend_from_slice(self.world.items_raw.f32_row(i as usize));
+        }
+        for _ in items.len()..self.batch {
+            data.extend_from_slice(
+                self.world
+                    .items_raw
+                    .f32_row(items[items.len() - 1] as usize),
+            );
+        }
+        Tensor::new(vec![self.batch, d], data)
+    }
+
+    /// Compute N2O rows for a chunk of items (one item_tower execution).
+    fn compute_chunk(&self, items: &[u32]) -> Result<Vec<(u32, N2oEntry)>> {
+        let input = self.item_raw_tensor(items);
+        let out = self.rtp.call("item_tower", vec![input])?;
+        let (item_vec, bea_w) = (&out[0], &out[1]);
+        let mut rows = Vec::with_capacity(items.len());
+        for (k, &id) in items.iter().enumerate() {
+            rows.push((
+                id,
+                N2oEntry {
+                    item_vec: item_vec.row(k).to_vec(),
+                    bea_w: bea_w.row(k).to_vec(),
+                    sign_packed: self
+                        .hasher
+                        .sign(self.world.items_mm.f32_row(id as usize)),
+                },
+            ));
+        }
+        Ok(rows)
+    }
+
+    /// Full catalog rebuild -> atomic generation swap.  Issues up to
+    /// `n_inflight` RTP calls concurrently (the fleet has that many
+    /// workers), keeping the build "timely" as §3.4 requires.
+    pub fn full_build(&self, new_version: u64) -> Result<FullBuildReport> {
+        let t0 = Instant::now();
+        let n = self.world.n_items;
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let chunks: Vec<&[u32]> = ids.chunks(self.batch).collect();
+
+        let n_inflight = self.rtp.n_workers().max(1);
+        let mut entries: Vec<Option<N2oEntry>> = vec![None; n];
+        let mut executions = 0usize;
+        // Pipeline the chunks through the fleet: keep n_inflight calls
+        // outstanding, writing rows as replies land.
+        let mut pending = std::collections::VecDeque::new();
+        let mut next = 0usize;
+        while next < chunks.len() || !pending.is_empty() {
+            while pending.len() < n_inflight && next < chunks.len() {
+                let chunk = chunks[next];
+                let input = self.item_raw_tensor(chunk);
+                let rx = self.rtp.call_async("item_tower", vec![input]);
+                pending.push_back((chunk, rx));
+                next += 1;
+            }
+            let (chunk, rx) = pending.pop_front().unwrap();
+            let out = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("RTP worker dropped reply"))??;
+            executions += 1;
+            for (k, &id) in chunk.iter().enumerate() {
+                entries[id as usize] = Some(N2oEntry {
+                    item_vec: out[0].row(k).to_vec(),
+                    bea_w: out[1].row(k).to_vec(),
+                    sign_packed: self
+                        .hasher
+                        .sign(self.world.items_mm.f32_row(id as usize)),
+                });
+            }
+        }
+        self.table.swap_full(entries, new_version);
+        Ok(FullBuildReport {
+            n_items: n,
+            executions,
+            elapsed: t0.elapsed(),
+            table_bytes: self.table.size_bytes(),
+        })
+    }
+
+    /// Incremental update for specific items (message-queue trigger).
+    pub fn incremental(&self, items: &[u32]) -> Result<usize> {
+        let mut updated = 0;
+        for chunk in items.chunks(self.batch) {
+            let rows = self.compute_chunk(chunk)?;
+            updated += rows.len();
+            self.table.upsert(rows);
+        }
+        Ok(updated)
+    }
+}
+
+#[derive(Debug)]
+pub struct FullBuildReport {
+    pub n_items: usize,
+    pub executions: usize,
+    pub elapsed: std::time::Duration,
+    pub table_bytes: usize,
+}

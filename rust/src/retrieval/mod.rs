@@ -1,0 +1,95 @@
+//! Retrieval-stage simulator.
+//!
+//! AIF's online-async win is the overlap of user-side computation with the
+//! *retrieval latency window*, so this substrate models exactly the two
+//! things that matter: (a) a realistic latency distribution, (b) candidate
+//! sets with zipf-ish popularity skew + user affinity (cross-request item
+//! reuse is what makes nearline N2O precomputation pay off).
+
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::features::latency::{spin_wait, LatencyModel};
+use crate::features::World;
+use crate::util::rng::{Pcg64, Zipf};
+
+pub struct Retriever {
+    world: Arc<World>,
+    pub n_candidates: usize,
+    latency: LatencyModel,
+    zipf: Zipf,
+    rng: Mutex<Pcg64>,
+    /// Fraction of candidates drawn from the user's affinity pool (their
+    /// long-term sequence neighborhood) vs global popularity.
+    affinity_frac: f64,
+}
+
+impl Retriever {
+    pub fn new(
+        world: Arc<World>,
+        n_candidates: usize,
+        latency: LatencyModel,
+    ) -> Self {
+        let n_items = world.n_items;
+        Retriever {
+            world,
+            n_candidates,
+            latency,
+            zipf: Zipf::new(n_items, 1.05),
+            rng: Mutex::new(Pcg64::with_stream(0x9E7, 5)),
+            affinity_frac: 0.5,
+        }
+    }
+
+    /// Run retrieval for a user: blocks for the modeled latency, returns
+    /// the candidate set.  The Merger calls this on a separate thread while
+    /// the user-side async inference runs (paper Figure 3).
+    pub fn retrieve(&self, user: usize) -> Vec<u32> {
+        let (delay, cands) = {
+            let mut rng = self.rng.lock().unwrap();
+            let delay = self.latency.sample(self.n_candidates * 4, &mut rng);
+            (delay, self.sample_candidates(user, &mut rng))
+        };
+        spin_wait(delay);
+        cands
+    }
+
+    /// Candidate sampling only (no latency) — used by the workload
+    /// generator when pre-building traces.
+    pub fn sample_candidates(&self, user: usize, rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.n_candidates;
+        let n_aff = (n as f64 * self.affinity_frac) as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut seen = vec![false; self.world.n_items];
+        // Affinity half: neighborhood of the user's long-term sequence.
+        let seq = self.world.users_long_seq.u32_row(user);
+        while out.len() < n_aff {
+            let item = seq[rng.below(seq.len() as u64) as usize];
+            if !seen[item as usize] {
+                seen[item as usize] = true;
+                out.push(item);
+            } else {
+                // Collision: jump to a popularity sample to guarantee progress.
+                let item = self.zipf.sample(rng) as u32;
+                if !seen[item as usize] {
+                    seen[item as usize] = true;
+                    out.push(item);
+                }
+            }
+        }
+        // Popularity half: zipf over the catalog (head reuse across requests).
+        while out.len() < n {
+            let item = self.zipf.sample(rng) as u32;
+            if !seen[item as usize] {
+                seen[item as usize] = true;
+                out.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn expected_latency(&self) -> Duration {
+        Duration::from_nanos((self.latency.base_us * 1000.0) as u64)
+    }
+}

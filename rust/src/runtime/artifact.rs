@@ -1,0 +1,342 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust serving stack.  Parses `artifacts/manifest.json` (dims, artifact
+//! I/O signatures, world-table schemas, serving-variant registry, oracle
+//! parameters, goldens) and loads the raw binary world tables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One HLO artifact (tower or serving head).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Serving-variant registry entry (mirrors `python/compile/variants.py`).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub artifact: String,
+    pub user: String,     // "cheap" | "attn_inline" | "async"
+    pub item: String,     // "inline" | "nearline"
+    pub bea: String,      // "none" | "bridge" | "full"
+    pub din_sim: String,  // "none" | "lsh" | "mm" | "id"
+    pub tier_sim: String,
+    pub sim_cross: bool,
+    pub sim_budget: f64,
+}
+
+impl VariantSpec {
+    pub fn has_long(&self) -> bool {
+        self.din_sim != "none" || self.tier_sim != "none"
+    }
+    pub fn needs_lsh(&self) -> bool {
+        self.din_sim == "lsh" || self.tier_sim == "lsh"
+    }
+    pub fn needs_mm(&self) -> bool {
+        self.din_sim == "mm" || self.tier_sim == "mm"
+    }
+    /// SimTier arrives precomputed from the serving engine (uint8 popcount
+    /// path) when both long-term heads run on LSH similarity.
+    pub fn tiers_precomputed(&self) -> bool {
+        self.din_sim == "lsh" && self.tier_sim == "lsh"
+    }
+}
+
+/// Oracle click-model parameters (the synthetic ground truth).
+#[derive(Debug, Clone)]
+pub struct Oracle {
+    pub click_w: [f32; 3],
+    pub click_b: f32,
+    pub d_latent: usize,
+}
+
+/// Raw world table (f32 / u32 / u8) loaded from `tables/*.bin`.
+#[derive(Debug, Clone)]
+pub enum Table {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl Table {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Table::F32 { shape, .. }
+            | Table::U32 { shape, .. }
+            | Table::U8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Table::F32 { data, .. } => data,
+            _ => panic!("table is not f32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            Table::U32 { data, .. } => data,
+            _ => panic!("table is not u32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> &[u8] {
+        match self {
+            Table::U8 { data, .. } => data,
+            _ => panic!("table is not u8"),
+        }
+    }
+
+    /// Row `i` of a rank-2 f32 table.
+    pub fn f32_row(&self, i: usize) -> &[f32] {
+        let w = self.shape()[1];
+        &self.as_f32()[i * w..(i + 1) * w]
+    }
+
+    pub fn u32_row(&self, i: usize) -> &[u32] {
+        let w = self.shape()[1];
+        &self.as_u32()[i * w..(i + 1) * w]
+    }
+
+    pub fn u8_row(&self, i: usize) -> &[u8] {
+        let w = self.shape()[1];
+        &self.as_u8()[i * w..(i + 1) * w]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Table::F32 { data, .. } => data.len() * 4,
+            Table::U32 { data, .. } => data.len() * 4,
+            Table::U8 { data, .. } => data.len(),
+        }
+    }
+}
+
+/// Parsed manifest + lazily loaded tables.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: HashMap<String, usize>,
+    pub batch: usize,
+    pub l_long: usize,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub variants: HashMap<String, VariantSpec>,
+    pub oracle: Oracle,
+    pub raw: Value,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let raw = Value::parse(&text).context("parsing manifest.json")?;
+
+        let mut dims = HashMap::new();
+        for (k, v) in raw.req("dims").as_obj().unwrap().iter() {
+            if let Some(n) = v.as_f64() {
+                dims.insert(k.to_string(), n as usize);
+            }
+        }
+
+        let mut artifacts = HashMap::new();
+        for (name, spec) in raw.req("artifacts").as_obj().unwrap().iter() {
+            let sig = |key: &str| -> Vec<TensorSig> {
+                spec.req(key)
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|t| TensorSig {
+                        name: t.req("name").as_str().unwrap().to_string(),
+                        shape: t
+                            .req("shape")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect(),
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    file: dir.join(spec.req("file").as_str().unwrap()),
+                    inputs: sig("inputs"),
+                    outputs: sig("outputs"),
+                },
+            );
+        }
+
+        let mut variants = HashMap::new();
+        for (name, v) in raw.req("variants").as_obj().unwrap().iter() {
+            variants.insert(
+                name.to_string(),
+                VariantSpec {
+                    name: name.to_string(),
+                    artifact: v.req("artifact").as_str().unwrap().into(),
+                    user: v.req("user").as_str().unwrap().into(),
+                    item: v.req("item").as_str().unwrap().into(),
+                    bea: v.req("bea").as_str().unwrap().into(),
+                    din_sim: v.req("din_sim").as_str().unwrap().into(),
+                    tier_sim: v.req("tier_sim").as_str().unwrap().into(),
+                    sim_cross: v.req("sim_cross").as_bool().unwrap(),
+                    sim_budget: v.req("sim_budget").as_f64().unwrap(),
+                },
+            );
+        }
+
+        let o = raw.req("oracle");
+        let w = o.req("click_w").as_arr().unwrap();
+        let oracle = Oracle {
+            click_w: [
+                w[0].as_f64().unwrap() as f32,
+                w[1].as_f64().unwrap() as f32,
+                w[2].as_f64().unwrap() as f32,
+            ],
+            click_b: o.req("click_b").as_f64().unwrap() as f32,
+            d_latent: o.req("d_latent").as_usize().unwrap(),
+        };
+
+        Ok(Manifest {
+            batch: raw.req("batch").as_usize().unwrap(),
+            l_long: raw.req("l_long").as_usize().unwrap(),
+            dir,
+            dims,
+            artifacts,
+            variants,
+            oracle,
+            raw,
+        })
+    }
+
+    pub fn dim(&self, name: &str) -> usize {
+        *self
+            .dims
+            .get(name)
+            .unwrap_or_else(|| panic!("missing dim {name}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {name:?}"))
+    }
+
+    /// Load one world table from `tables/<name>.bin`.
+    pub fn load_table(&self, name: &str) -> Result<Table> {
+        let entry = self
+            .raw
+            .req("tables")
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown table {name:?}"))?;
+        let file = self.dir.join(entry.req("file").as_str().unwrap());
+        let shape: Vec<usize> = entry
+            .req("shape")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        let n: usize = shape.iter().product();
+        let bytes = std::fs::read(&file)
+            .with_context(|| format!("reading table {file:?}"))?;
+        let dtype = entry.req("dtype").as_str().unwrap();
+        let table = match dtype {
+            "f32" => {
+                if bytes.len() != n * 4 {
+                    bail!("table {name}: {} bytes, expected {}", bytes.len(), n * 4);
+                }
+                Table::F32 {
+                    shape,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                }
+            }
+            "u32" => Table::U32 {
+                shape,
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            "u8" => Table::U8 { shape, data: bytes },
+            other => bail!("unsupported table dtype {other}"),
+        };
+        Ok(table)
+    }
+
+    /// Load a golden fixture tensor from `goldens/`.
+    pub fn load_golden(&self, name: &str) -> Result<crate::runtime::Tensor> {
+        let entry = self
+            .raw
+            .req("goldens")
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown golden {name:?}"))?;
+        let file = self.dir.join(entry.req("file").as_str().unwrap());
+        let shape: Vec<usize> = entry
+            .req("shape")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        let bytes = std::fs::read(&file)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        anyhow::ensure!(data.len() == shape.iter().product::<usize>());
+        Ok(crate::runtime::Tensor::new(shape, data))
+    }
+
+    /// Golden scalar (e.g. the fixture user id).
+    pub fn golden_value(&self, name: &str) -> Result<usize> {
+        Ok(self
+            .raw
+            .req("goldens")
+            .get(name)
+            .and_then(|v| v.get("value"))
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing golden value {name}"))?)
+    }
+
+    pub fn golden_values(&self, name: &str) -> Result<Vec<usize>> {
+        Ok(self
+            .raw
+            .req("goldens")
+            .get(name)
+            .and_then(|v| v.get("values"))
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing golden values {name}"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap())
+            .collect())
+    }
+}

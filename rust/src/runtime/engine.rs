@@ -1,0 +1,123 @@
+//! PJRT execution engine: HLO text -> compile -> execute.
+//!
+//! One `Engine` owns one PJRT client plus the compiled executables it was
+//! asked to load.  The `xla` crate's wrapper types are `!Send` (raw C
+//! pointers), so an `Engine` lives and dies on one thread — `RtpPool`
+//! (pool.rs) gives the coordinator a `Send` fleet interface on top.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// Per-thread PJRT client + compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, LoadedArtifact>,
+}
+
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Engine {
+    /// CPU PJRT client with no artifacts loaded.
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact from the manifest (idempotent).
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().unwrap(),
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::debug!("compiled {name} in {:?}", t0.elapsed());
+        self.executables
+            .insert(name.to_string(), LoadedArtifact { exe, spec });
+        Ok(())
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact. Inputs must match the manifest signature order;
+    /// outputs come back in manifest output order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let loaded = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded"))?;
+        // Input validation: catching shape bugs here beats an opaque XLA
+        // error inside the C library.
+        anyhow::ensure!(
+            inputs.len() == loaded.spec.inputs.len(),
+            "{name}: got {} inputs, expected {}",
+            inputs.len(),
+            loaded.spec.inputs.len()
+        );
+        for (t, sig) in inputs.iter().zip(&loaded.spec.inputs) {
+            anyhow::ensure!(
+                t.shape == sig.shape,
+                "{name}: input {:?} shape {:?} != manifest {:?}",
+                sig.name,
+                t.shape,
+                sig.shape
+            );
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = loaded.exe.execute::<xla::Literal>(&literals)?;
+        // Lowered with return_tuple=True: single tuple output.
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let elems = tuple.decompose_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in &elems {
+            out.push(Tensor::from_literal(lit)?);
+        }
+        anyhow::ensure!(
+            out.len() == loaded.spec.outputs.len(),
+            "{name}: got {} outputs, expected {}",
+            out.len(),
+            loaded.spec.outputs.len()
+        );
+        Ok(out)
+    }
+
+    /// Convenience: execute and return the single output.
+    pub fn execute1(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut out = self.execute(name, inputs)?;
+        anyhow::ensure!(out.len() == 1, "{name}: expected 1 output");
+        Ok(out.pop().unwrap())
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime: PJRT client wrapper executing AOT artifacts (`artifacts/*.hlo.txt`).
+//!
+//! `Engine` is the single-thread compile+execute core; `RtpPool` is the
+//! `Send` fleet interface the coordinator uses; `Manifest` is the contract
+//! with the python AOT path; `Tensor` is the host-side currency.
+
+pub mod artifact;
+pub mod engine;
+pub mod pool;
+pub mod tensor;
+
+pub use artifact::{Manifest, Table, VariantSpec};
+pub use engine::Engine;
+pub use pool::RtpPool;
+pub use tensor::Tensor;

@@ -1,0 +1,114 @@
+//! RtpPool — the "real-time prediction platform" fleet (paper §3.1).
+//!
+//! The `xla` wrapper types are `!Send`, so each worker thread owns a full
+//! [`Engine`] (its own PJRT client + compiled executables) and requests are
+//! dispatched over channels.  That is not a workaround so much as the
+//! production topology: the paper's Merger talks to an RTP *cluster*, and
+//! per-worker executable replicas are exactly how such fleets are deployed.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::engine::Engine;
+use super::tensor::Tensor;
+use crate::util::threadpool::WorkerSet;
+
+/// One scoring call to the fleet.
+pub struct RtpRequest {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+    pub reply: Sender<Result<Vec<Tensor>>>,
+}
+
+/// Fleet of PJRT workers with replicated executables.
+pub struct RtpPool {
+    workers: WorkerSet<RtpRequest>,
+    n_workers: usize,
+}
+
+impl RtpPool {
+    /// Spin up `n_workers`, each compiling every artifact in `artifacts`.
+    /// Compilation failures surface as panics during startup (fail fast —
+    /// a worker that cannot serve must not join the fleet).
+    pub fn new(
+        manifest: Arc<Manifest>,
+        artifacts: Vec<String>,
+        n_workers: usize,
+    ) -> RtpPool {
+        let workers = WorkerSet::new(
+            n_workers,
+            move |i| {
+                let mut engine = Engine::new()
+                    .unwrap_or_else(|e| panic!("worker {i}: {e:#}"));
+                for name in &artifacts {
+                    engine
+                        .load(&manifest, name)
+                        .unwrap_or_else(|e| panic!("worker {i}: {e:#}"));
+                }
+                engine
+            },
+            |engine: &mut Engine, req: RtpRequest| {
+                let result = engine.execute(&req.artifact, &req.inputs);
+                // Receiver may have given up (timeout) — that's fine.
+                let _ = req.reply.send(result);
+            },
+        );
+        RtpPool { workers, n_workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Fire a call and return the reply channel (the async half of the
+    /// Merger's two-phase interaction).
+    pub fn call_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Receiver<Result<Vec<Tensor>>> {
+        let (tx, rx) = channel();
+        self.workers.submit(RtpRequest {
+            artifact: artifact.to_string(),
+            inputs,
+            reply: tx,
+        });
+        rx
+    }
+
+    /// Same, pinned to a worker (consistent-hash routing, §3.4).
+    pub fn call_async_on(
+        &self,
+        worker: usize,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Receiver<Result<Vec<Tensor>>> {
+        let (tx, rx) = channel();
+        self.workers.submit_to(
+            worker,
+            RtpRequest {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: tx,
+            },
+        );
+        rx
+    }
+
+    /// Blocking call.
+    pub fn call(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.call_async(artifact, inputs)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("RTP worker dropped the reply"))?
+    }
+
+    /// Blocking call expecting a single output tensor.
+    pub fn call1(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Tensor> {
+        let mut out = self.call(artifact, inputs)?;
+        anyhow::ensure!(out.len() == 1, "{artifact}: expected 1 output");
+        Ok(out.pop().unwrap())
+    }
+}

@@ -1,0 +1,126 @@
+//! Host tensor type — the hand-off currency between the coordinator's
+//! assembly code and the PJRT runtime.  Everything the serving heads
+//! consume is f32 (LSH signatures travel packed-u8 at rest and are unpacked
+//! to ±1 planes at assembly; DESIGN.md §7).
+//!
+//! Data is `Arc`-backed: per-request tensors (seq_emb, seq_sign, …) are
+//! shared across all mini-batch RTP calls of the request without copying —
+//! one of the allocation savings the Arena pool + two-phase design buys.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 host tensor with cheap clones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    data: Arc<Vec<f32>>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape,
+            data: Arc::new(data),
+        }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::new(shape, vec![0.0; n])
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor::new(vec![], vec![v])
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = *self.shape.last().expect("rank >= 1");
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Approximate byte footprint (what the N2O/caching accounting reports).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4 + self.shape.len() * 8
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = shape.ty();
+        if ty != xla::ElementType::F32 {
+            bail!("expected F32 literal, got {ty:?}");
+        }
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Max |a-b| against another tensor (golden comparisons).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_sizes() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.size_bytes(), 24 + 16);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.0, 0.0, 7.25]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![3], vec![1., 2.5, 3.]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let a = Tensor::new(vec![2], vec![1., 2.]);
+        let b = a.clone();
+        assert_eq!(a.data().as_ptr(), b.data().as_ptr());
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal HTTP/1.1 server (no hyper in the vendored set): `/healthz`,
+//! `/metrics` (JSON snapshot) and `/score?user=<id>` (serve one request
+//! through the Merger).  Thread-per-connection over `TcpListener` — the
+//! load path in this repo is in-process; the HTTP face exists for
+//! operability and the `aif serve` subcommand.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::Merger;
+use crate::util::json::{Object, Value};
+
+pub struct HttpServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve in a background thread.  `addr` like "127.0.0.1:0"
+    /// (port 0 = ephemeral; the bound address is in `.addr`).
+    pub fn start(merger: Arc<Merger>, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let started = Instant::now();
+        let req_ids = Arc::new(AtomicU64::new(1 << 32));
+        let handle = std::thread::Builder::new()
+            .name("aif-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let merger = Arc::clone(&merger);
+                            let req_ids = Arc::clone(&req_ids);
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(
+                                    stream, &merger, &req_ids, started,
+                                );
+                            });
+                        }
+                        Err(ref e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(5),
+                            );
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer {
+            addr: bound,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    merger: &Arc<Merger>,
+    req_ids: &AtomicU64,
+    started: Instant,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("/");
+    // Drain headers.
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h == "\r\n" || h == "\n" || h.is_empty() {
+            break;
+        }
+    }
+    if method != "GET" {
+        return respond(&mut stream, 405, "text/plain", "method not allowed");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/healthz" => respond(&mut stream, 200, "text/plain", "ok"),
+        "/metrics" => {
+            let snap = merger.metrics.snapshot(started.elapsed());
+            respond(
+                &mut stream,
+                200,
+                "application/json",
+                &snap.to_string_pretty(),
+            )
+        }
+        "/score" => {
+            let user = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("user="))
+                .and_then(|v| v.parse::<usize>().ok());
+            let Some(user) = user else {
+                return respond(
+                    &mut stream,
+                    400,
+                    "text/plain",
+                    "missing user=<id>",
+                );
+            };
+            if user >= merger.world.n_users {
+                return respond(&mut stream, 404, "text/plain", "no such user");
+            }
+            let id = req_ids.fetch_add(1, Ordering::Relaxed);
+            match merger.handle(id, user) {
+                Ok(result) => {
+                    let mut o = Object::new();
+                    o.insert("user", user);
+                    o.insert(
+                        "total_ms",
+                        result.timings.total.as_secs_f64() * 1e3,
+                    );
+                    o.insert(
+                        "prerank_ms",
+                        result.timings.prerank.as_secs_f64() * 1e3,
+                    );
+                    let items: Vec<Value> = result
+                        .top_k
+                        .iter()
+                        .take(16)
+                        .map(|&(item, score)| {
+                            let mut e = Object::new();
+                            e.insert("item", item as u64);
+                            e.insert("score", score as f64);
+                            Value::Obj(e)
+                        })
+                        .collect();
+                    o.insert("top", Value::Arr(items));
+                    respond(
+                        &mut stream,
+                        200,
+                        "application/json",
+                        &Value::Obj(o).to_string_pretty(),
+                    )
+                }
+                Err(e) => respond(
+                    &mut stream,
+                    500,
+                    "text/plain",
+                    &format!("error: {e:#}"),
+                ),
+            }
+        }
+        _ => respond(&mut stream, 404, "text/plain", "not found"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &str,
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}

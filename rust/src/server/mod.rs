@@ -1,0 +1,5 @@
+//! Minimal HTTP face for the serving stack (`aif serve`).
+
+pub mod http;
+
+pub use http::HttpServer;

@@ -1,0 +1,125 @@
+//! Base64 codec (RFC 4648) — used to encode user-side async vectors for
+//! transmission between the Merger's two RTP phases, exactly as §5.3 of the
+//! paper does to minimize transmission overhead.
+
+const ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+fn decode_table() -> [i8; 256] {
+    let mut t = [-1i8; 256];
+    let mut i = 0;
+    while i < 64 {
+        t[ALPHABET[i] as usize] = i as i8;
+        i += 1;
+    }
+    t
+}
+
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = *chunk.get(1).unwrap_or(&0) as u32;
+        let b2 = *chunk.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("invalid base64 at position {0}")]
+pub struct DecodeError(pub usize);
+
+pub fn decode(text: &str) -> Result<Vec<u8>, DecodeError> {
+    let table = decode_table();
+    let bytes = text.as_bytes();
+    let trimmed = bytes
+        .iter()
+        .rposition(|&b| b != b'=')
+        .map_or(0, |i| i + 1);
+    let mut out = Vec::with_capacity(trimmed * 3 / 4);
+    let mut acc = 0u32;
+    let mut n_bits = 0u32;
+    for (i, &b) in bytes[..trimmed].iter().enumerate() {
+        let v = table[b as usize];
+        if v < 0 {
+            return Err(DecodeError(i));
+        }
+        acc = (acc << 6) | v as u32;
+        n_bits += 6;
+        if n_bits >= 8 {
+            n_bits -= 8;
+            out.push((acc >> n_bits) as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// Encode an f32 slice (little-endian) — the user-vector wire format.
+pub fn encode_f32(values: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    encode(&bytes)
+}
+
+pub fn decode_f32(text: &str) -> Result<Vec<f32>, DecodeError> {
+    let bytes = decode(text)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        // RFC 4648 §10 test vectors.
+        let cases = [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ];
+        for (plain, enc) in cases {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let v = vec![1.5f32, -0.25, 3.2e-8, f32::MAX, 0.0];
+        assert_eq!(decode_f32(&encode_f32(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(decode("a!b=").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Benchmark harness (criterion is not vendored; `[[bench]]` targets use
+//! `harness = false` and drive this module directly).
+//!
+//! Provides warmup + timed iteration with robust statistics, and a table
+//! printer that renders paper-style rows (avgRT / p99RT / maxQPS deltas).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall-clock samples, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} mean {:>10} p50 {:>10} p99 {:>10} min {:>10} (n={})",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.percentile(50.0)),
+            fmt_secs(self.percentile(99.0)),
+            fmt_secs(self.min()),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(700),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Time `f` repeatedly; each invocation is one sample.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure
+            || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            samples,
+        };
+        println!("{}", s.report());
+        s
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Paper-style delta table printer: first row is the base; subsequent rows
+/// render percent deltas against it, like Table 4.
+pub struct DeltaTable {
+    pub title: String,
+    pub columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+}
+
+impl DeltaTable {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        DeltaTable {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len());
+        self.rows.push((name.to_string(), values));
+    }
+
+    /// Render with the first row as baseline: `+x.xx%` deltas.
+    pub fn render_deltas(&self) -> String {
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&format!("{:32}", "method"));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>16}"));
+        }
+        out.push('\n');
+        let base = &self.rows[0].1;
+        for (i, (name, vals)) in self.rows.iter().enumerate() {
+            out.push_str(&format!("{name:32}"));
+            for (j, v) in vals.iter().enumerate() {
+                if i == 0 {
+                    out.push_str(&format!("{:>16}", format!("{v:.4}")));
+                } else {
+                    let delta = (v - base[j]) / base[j] * 100.0;
+                    out.push_str(&format!("{:>16}", format!("{delta:+.2}%")));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render raw values.
+    pub fn render_raw(&self) -> String {
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&format!("{:32}", "method"));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>16}"));
+        }
+        out.push('\n');
+        for (name, vals) in &self.rows {
+            out.push_str(&format!("{name:32}"));
+            for v in vals {
+                out.push_str(&format!("{:>16}", format!("{v:.4}")));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats {
+            name: "t".into(),
+            iters: 100,
+            samples: (1..=100).map(|i| i as f64).collect(),
+        };
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((s.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let s = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn delta_table_renders() {
+        let mut t = DeltaTable::new("Table", &["avgRT", "maxQPS"]);
+        t.row("Base", vec![1.0, 100.0]);
+        t.row("+X", vec![1.3, 93.0]);
+        let s = t.render_deltas();
+        assert!(s.contains("+30.00%"), "{s}");
+        assert!(s.contains("-7.00%"), "{s}");
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(3e-9).ends_with("ns"));
+        assert!(fmt_secs(3e-6).ends_with("µs"));
+        assert!(fmt_secs(3e-3).ends_with("ms"));
+        assert!(fmt_secs(3.0).ends_with('s'));
+    }
+}

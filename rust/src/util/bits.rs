@@ -1,0 +1,171 @@
+//! Bit-level utilities for LSH signatures (§4.2 of the paper).
+//!
+//! The paper stores `Relu(Sign(M W^T))` bits packed into uint8 and computes
+//! similarity as XNOR + PopulationCount, replacing popcount with a 1×256
+//! lookup table.  That is exactly what lives here: the packed representation
+//! is what the N2O index table and the user cache store / transmit; the
+//! unpacked ±1 planes are produced only at mini-batch assembly time for the
+//! MXU-friendly HLO (DESIGN.md §7).
+
+/// Precomputed population-count lookup table (the paper's 1×256 embedding
+/// table replacement for the PopulationCount instruction).
+pub static POPCOUNT_LUT: [u8; 256] = build_lut();
+
+const fn build_lut() -> [u8; 256] {
+    let mut lut = [0u8; 256];
+    let mut i = 0;
+    while i < 256 {
+        lut[i] = (i as u8).count_ones() as u8;
+        i += 1;
+    }
+    lut
+}
+
+/// Pack a bit plane (`true` = bit 1) into little-endian-bit-order bytes.
+/// Bit `i` lands in byte `i / 8`, position `i % 8` — matching numpy's
+/// `packbits(..., bitorder="little")` used by the AOT exporter.
+pub fn pack_bits(bits: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; bits.len().div_ceil(8)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Unpack `n_bits` bits into a ±1.0 float plane (the MXU representation).
+pub fn unpack_to_pm1(packed: &[u8], n_bits: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= n_bits);
+    for i in 0..n_bits {
+        let bit = (packed[i / 8] >> (i % 8)) & 1;
+        out[i] = if bit == 1 { 1.0 } else { -1.0 };
+    }
+}
+
+/// XNOR-match count between two packed signatures via the LUT
+/// (Eq.6: the number of equal bits).
+pub fn xnor_matches_lut(a: &[u8], b: &[u8], n_bits: usize) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let full = n_bits / 8;
+    let mut matches = 0u32;
+    for i in 0..full {
+        matches += POPCOUNT_LUT[(!(a[i] ^ b[i])) as usize] as u32;
+    }
+    let rem = n_bits % 8;
+    if rem != 0 {
+        let mask = (1u8 << rem) - 1;
+        matches += POPCOUNT_LUT[((!(a[full] ^ b[full])) & mask) as usize]
+            as u32;
+    }
+    matches
+}
+
+/// Same quantity using the hardware popcount instruction — the reference
+/// the LUT path is tested against (and the faster path on modern CPUs).
+pub fn xnor_matches_hw(a: &[u8], b: &[u8], n_bits: usize) -> u32 {
+    let full = n_bits / 8;
+    let mut matches = 0u32;
+    let mut i = 0;
+    // 8-bytes-at-a-time over u64 words.
+    while i + 8 <= full {
+        let wa = u64::from_le_bytes(a[i..i + 8].try_into().unwrap());
+        let wb = u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        matches += (!(wa ^ wb)).count_ones();
+        i += 8;
+    }
+    while i < full {
+        // `!` on u8 flips exactly 8 bits, so count_ones is already correct.
+        matches += (!(a[i] ^ b[i])).count_ones();
+        i += 1;
+    }
+    let rem = n_bits % 8;
+    if rem != 0 {
+        let mask = (1u8 << rem) - 1;
+        matches += ((!(a[full] ^ b[full])) & mask).count_ones();
+    }
+    matches
+}
+
+/// Normalized similarity in [0,1] (Eq.6 divided by d').
+pub fn lsh_similarity_packed(a: &[u8], b: &[u8], n_bits: usize) -> f32 {
+    xnor_matches_lut(a, b, n_bits) as f32 / n_bits as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_count_ones() {
+        for i in 0..256usize {
+            assert_eq!(POPCOUNT_LUT[i] as u32, (i as u8).count_ones());
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let bits: Vec<bool> =
+            (0..64).map(|i| (i * 7 + 3) % 5 == 0).collect();
+        let packed = pack_bits(&bits);
+        let mut plane = vec![0.0f32; 64];
+        unpack_to_pm1(&packed, 64, &mut plane);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(plane[i], if b { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn xnor_identity_is_all_matches() {
+        let a = pack_bits(&(0..64).map(|i| i % 3 == 0).collect::<Vec<_>>());
+        assert_eq!(xnor_matches_lut(&a, &a, 64), 64);
+        assert_eq!(xnor_matches_hw(&a, &a, 64), 64);
+    }
+
+    #[test]
+    fn xnor_complement_is_zero_matches() {
+        let bits: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let inv: Vec<bool> = bits.iter().map(|b| !b).collect();
+        let a = pack_bits(&bits);
+        let b = pack_bits(&inv);
+        assert_eq!(xnor_matches_lut(&a, &b, 64), 0);
+    }
+
+    #[test]
+    fn lut_equals_hw_on_random_pairs() {
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        for _ in 0..200 {
+            let n_bits = 8 + (rng.below(120) as usize);
+            let make = |rng: &mut crate::util::rng::Pcg64| {
+                pack_bits(
+                    &(0..n_bits).map(|_| rng.chance(0.5)).collect::<Vec<_>>(),
+                )
+            };
+            let a = make(&mut rng);
+            let b = make(&mut rng);
+            assert_eq!(
+                xnor_matches_lut(&a, &b, n_bits),
+                xnor_matches_hw(&a, &b, n_bits),
+                "n_bits={n_bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn similarity_matches_unpacked_dot() {
+        // sim_packed must equal (1 + dot(±1,±1)/d')/2 — the HLO-side formula.
+        let mut rng = crate::util::rng::Pcg64::new(12);
+        let n = 64;
+        let bits_a: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let bits_b: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let (pa, pb) = (pack_bits(&bits_a), pack_bits(&bits_b));
+        let mut fa = vec![0.0f32; n];
+        let mut fb = vec![0.0f32; n];
+        unpack_to_pm1(&pa, n, &mut fa);
+        unpack_to_pm1(&pb, n, &mut fb);
+        let dot: f32 = fa.iter().zip(&fb).map(|(x, y)| x * y).sum();
+        let sim_float = (1.0 + dot / n as f32) / 2.0;
+        let sim_packed = lsh_similarity_packed(&pa, &pb, n);
+        assert!((sim_float - sim_packed).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,146 @@
+//! Tiny CLI argument parser (the `clap` crate is not vendored).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and subcommands:  `aif serve --config cfg.json --threads 4`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (key, value) = if let Some((k, v)) = rest.split_once('=')
+                {
+                    (k.to_string(), Some(v.to_string()))
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let next_is_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if next_is_value {
+                        (rest.to_string(), iter.next())
+                    } else {
+                        (rest.to_string(), None)
+                    }
+                };
+                out.seen.push(key.clone());
+                out.flags.insert(key, value.unwrap_or_else(|| "true".into()));
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument — the subcommand.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Flags the caller never consumed — typo detection for the binary.
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.seen
+            .iter()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --config cfg.json --threads 4 --verbose");
+        assert_eq!(a.command(), Some("serve"));
+        assert_eq!(a.get("config"), Some("cfg.json"));
+        assert_eq!(a.usize_or("threads", 1), 4);
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.bool_or("quiet", false));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --mode=closed --rate=150.5");
+        assert_eq!(a.get("mode"), Some("closed"));
+        assert!((a.f64_or("rate", 0.0) - 150.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --fast");
+        assert!(a.bool_or("fast", false));
+    }
+
+    #[test]
+    fn positional_after_flags() {
+        let a = parse("replay --n 5 trace.json");
+        assert_eq!(a.positional, vec!["replay", "trace.json"]);
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("serve --confg x");
+        assert_eq!(a.unknown_flags(&["config"]), vec!["confg"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-built substrates for the vendored-only environment (DESIGN.md §3):
+//! JSON, CLI parsing, RNG + distributions, thread pool, bench harness,
+//! base64, bit utilities and a miniature property-testing framework.
+
+pub mod base64;
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

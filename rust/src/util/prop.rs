@@ -1,0 +1,236 @@
+//! Miniature property-testing framework (proptest is not vendored).
+//!
+//! `forall(gen, n_cases, prop)` runs a property over generated inputs with
+//! greedy shrinking on failure.  Generators are plain closures over
+//! [`Pcg64`]; shrink candidates come from a user-supplied (or derived)
+//! shrinker.  Used for the coordinator/cache/nearline invariants
+//! (DESIGN.md §9).
+
+use super::rng::Pcg64;
+
+/// A generator: produces a case from RNG, plus shrink candidates.
+pub struct Gen<T> {
+    pub make: Box<dyn Fn(&mut Pcg64) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(make: impl Fn(&mut Pcg64) -> T + 'static) -> Self {
+        Gen {
+            make: Box::new(make),
+            shrink: Box::new(|_| Vec::new()),
+        }
+    }
+
+    pub fn with_shrink(
+        mut self,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn map<U: 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+    ) -> Gen<U> {
+        let make = self.make;
+        let f2 = f.clone();
+        Gen {
+            make: Box::new(move |rng| f(make(rng))),
+            // Mapping loses shrink structure; mapped gens shrink at the
+            // source if composed via `vec_of`/tuples instead.
+            shrink: Box::new(move |_| {
+                let _ = &f2;
+                Vec::new()
+            }),
+        }
+    }
+}
+
+/// Integer in [lo, hi) with halving shrink toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo < hi);
+    Gen::new(move |rng| lo + rng.below((hi - lo) as u64) as usize)
+        .with_shrink(move |&x| {
+            let mut out = Vec::new();
+            if x > lo {
+                out.push(lo);
+                let mid = lo + (x - lo) / 2;
+                if mid != lo && mid != x {
+                    out.push(mid);
+                }
+                if x - 1 != lo {
+                    out.push(x - 1);
+                }
+            }
+            out
+        })
+}
+
+/// f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng| lo + rng.f64() * (hi - lo))
+}
+
+/// Vector of length in [0, max_len) with element-removal + element shrink.
+pub fn vec_of<T: Clone + 'static>(
+    elem: Gen<T>,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    let make_elem = elem.make;
+    let shrink_elem = elem.shrink;
+    Gen {
+        make: Box::new(move |rng| {
+            let n = rng.below(max_len as u64 + 1) as usize;
+            (0..n).map(|_| make_elem(rng)).collect()
+        }),
+        shrink: Box::new(move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            if !v.is_empty() {
+                // Halve, drop one element, shrink one element.
+                out.push(v[..v.len() / 2].to_vec());
+                let mut d = v.clone();
+                d.remove(v.len() - 1);
+                out.push(d);
+                for (i, x) in v.iter().enumerate().take(4) {
+                    for sx in shrink_elem(x) {
+                        let mut c = v.clone();
+                        c[i] = sx;
+                        out.push(c);
+                    }
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass,
+    Fail {
+        case: T,
+        shrunk: T,
+        message: String,
+        seed: u64,
+    },
+}
+
+/// Run `prop` over `n_cases` generated inputs; shrink on first failure.
+/// Returns the (shrunk) counterexample instead of panicking so tests can
+/// assert with context; use [`check`] for the panicking form.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    gen: &Gen<T>,
+    n_cases: usize,
+    seed: u64,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Pcg64::new(seed);
+    for case_idx in 0..n_cases {
+        let case = (gen.make)(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut current = case.clone();
+            let mut current_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in (gen.shrink)(&current) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            let _ = case_idx;
+            return PropResult::Fail {
+                case,
+                shrunk: current,
+                message: current_msg,
+                seed,
+            };
+        }
+    }
+    PropResult::Pass
+}
+
+/// Panicking wrapper for use inside `#[test]`.
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    gen: &Gen<T>,
+    n_cases: usize,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match forall(gen, n_cases, 0xA1F, prop) {
+        PropResult::Pass => {}
+        PropResult::Fail {
+            case,
+            shrunk,
+            message,
+            seed,
+        } => panic!(
+            "property {name} failed (seed {seed:#x}):\n  original: \
+             {case:?}\n  shrunk:   {shrunk:?}\n  error:    {message}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = usize_in(0, 1000);
+        check("x < 1000", &gen, 200, |&x| {
+            if x < 1000 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let gen = usize_in(0, 1000);
+        match forall(&gen, 500, 1, |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 500"))
+            }
+        }) {
+            PropResult::Fail { shrunk, .. } => {
+                // Greedy shrink should land near the boundary.
+                assert!(shrunk >= 500 && shrunk <= 520, "shrunk to {shrunk}");
+            }
+            PropResult::Pass => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_shrinks_toward_small() {
+        let gen = vec_of(usize_in(0, 100), 50);
+        match forall(&gen, 500, 2, |v: &Vec<usize>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("len >= 3".into())
+            }
+        }) {
+            PropResult::Fail { shrunk, .. } => {
+                assert!(shrunk.len() >= 3 && shrunk.len() <= 6,
+                        "shrunk len {}", shrunk.len());
+            }
+            PropResult::Pass => panic!("should have failed"),
+        }
+    }
+}

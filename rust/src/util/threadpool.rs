@@ -1,0 +1,279 @@
+//! Fixed-size worker thread pool over std channels (tokio is not vendored).
+//!
+//! Two shapes are provided:
+//!
+//! * [`ThreadPool`] — fire-and-forget closures + a `scope`-style join, used
+//!   by the nearline N2O builder ("highly concurrent processes for parallel
+//!   computation", §3.4) and the load generator.
+//! * [`WorkerSet`] — N long-lived workers each owning a `!Send` resource
+//!   (a PJRT client + compiled executables), fed through per-worker request
+//!   channels.  This is the substrate under `runtime::RtpPool`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared-queue thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n_threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("aif-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            in_flight,
+        }
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool worker died");
+    }
+
+    /// Busy-wait (with yield) until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let results = Arc::new(Mutex::new(Vec::from_iter(
+            std::iter::repeat_with(|| None::<R>).take(n),
+        )));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.spawn(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("map results still shared")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("worker panicked before writing result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// N long-lived workers, each owning a thread-local (possibly `!Send`)
+/// resource created *on* the worker thread by the init closure.  Requests
+/// are closures that receive `&mut` access to that resource.
+pub struct WorkerSet<Req: Send + 'static> {
+    txs: Vec<Sender<Req>>,
+    workers: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl<Req: Send + 'static> WorkerSet<Req> {
+    /// `init(worker_idx)` builds the per-thread resource; `handle` services
+    /// one request against it.  Panics in `init` abort the process early —
+    /// better than deadlocking on a missing worker.
+    pub fn new<R, I, H>(n_workers: usize, init: I, handle: H) -> Self
+    where
+        I: Fn(usize) -> R + Send + Sync + 'static,
+        H: Fn(&mut R, Req) + Send + Sync + 'static,
+    {
+        assert!(n_workers > 0);
+        let init = Arc::new(init);
+        let handle = Arc::new(handle);
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let (tx, rx): (Sender<Req>, Receiver<Req>) = channel();
+            let init = Arc::clone(&init);
+            let handle = Arc::clone(&handle);
+            let w = std::thread::Builder::new()
+                .name(format!("aif-worker-{i}"))
+                .spawn(move || {
+                    let mut resource = init(i);
+                    while let Ok(req) = rx.recv() {
+                        handle(&mut resource, req);
+                    }
+                })
+                .expect("spawn worker");
+            txs.push(tx);
+            workers.push(w);
+        }
+        WorkerSet {
+            txs,
+            workers,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Round-robin dispatch.
+    pub fn submit(&self, req: Req) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.txs[i].send(req).expect("worker died");
+    }
+
+    /// Dispatch to a specific worker (consistent-hash routing).
+    pub fn submit_to(&self, worker: usize, req: Req) {
+        self.txs[worker % self.txs.len()]
+            .send(req)
+            .expect("worker died");
+    }
+
+    /// Drop senders and join all workers.
+    pub fn shutdown(mut self) {
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<Req: Send + 'static> Drop for WorkerSet<Req> {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64u64).collect(), |x| x * x);
+        assert_eq!(out, (0..64u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_set_round_robin_and_reply() {
+        // Each worker owns a (non-clonable) local counter; requests carry a
+        // reply channel — the same shape as RtpPool.
+        struct Req {
+            x: u64,
+            reply: Sender<(usize, u64)>,
+        }
+        let ws = WorkerSet::new(
+            3,
+            |i| (i, 0u64),
+            |state: &mut (usize, u64), req: Req| {
+                state.1 += 1;
+                req.reply.send((state.0, req.x * 2)).unwrap();
+            },
+        );
+        let (tx, rx) = channel();
+        for x in 0..30 {
+            ws.submit(Req {
+                x,
+                reply: tx.clone(),
+            });
+        }
+        let mut seen_workers = std::collections::HashSet::new();
+        let mut sum = 0;
+        for _ in 0..30 {
+            let (w, y) = rx.recv().unwrap();
+            seen_workers.insert(w);
+            sum += y;
+        }
+        assert_eq!(sum, (0..30u64).map(|x| x * 2).sum::<u64>());
+        assert_eq!(seen_workers.len(), 3, "round-robin uses every worker");
+    }
+
+    #[test]
+    fn worker_set_submit_to_is_sticky() {
+        struct Req {
+            reply: Sender<usize>,
+        }
+        let ws = WorkerSet::new(
+            4,
+            |i| i,
+            |me: &mut usize, req: Req| {
+                req.reply.send(*me).unwrap();
+            },
+        );
+        let (tx, rx) = channel();
+        for _ in 0..10 {
+            ws.submit_to(2, Req { reply: tx.clone() });
+        }
+        for _ in 0..10 {
+            assert_eq!(rx.recv().unwrap(), 2);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Online A/B test simulator (paper §5.1-5.2).
+//!
+//! Users are assigned to arms by a hash of the user id (consistent
+//! assignment, no cross-contamination); each arm serves its traffic with
+//! its own Merger; the oracle click model simulates user behavior on the
+//! displayed slate; CTR / RPM deltas come with bootstrap confidence
+//! intervals (1000 resamples, 95%), exactly the paper's protocol.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Merger;
+use crate::util::rng::Pcg64;
+
+/// Per-request online sample.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    impressions: u32,
+    clicks: u32,
+    revenue: f32,
+}
+
+/// Per-arm aggregate.
+#[derive(Debug, Clone)]
+pub struct ArmReport {
+    pub name: String,
+    pub requests: usize,
+    pub ctr: f64,
+    pub rpm: f64,
+    pub avg_rt_ms: f64,
+    /// 95% bootstrap CI of the CTR delta vs control (None for control).
+    pub ctr_delta_ci: Option<(f64, f64)>,
+    pub rpm_delta_ci: Option<(f64, f64)>,
+    /// Per-request samples (kept for downstream re-analysis).
+    #[allow(dead_code)]
+    samples: Vec<Sample>,
+}
+
+impl ArmReport {
+    pub fn ctr_delta_pct(&self, control: &ArmReport) -> f64 {
+        (self.ctr - control.ctr) / control.ctr * 100.0
+    }
+    pub fn rpm_delta_pct(&self, control: &ArmReport) -> f64 {
+        (self.rpm - control.rpm) / control.rpm * 100.0
+    }
+}
+
+/// Run a multi-arm A/B test.  `arms[0]` is the control.  `slate` is how
+/// many of the pre-ranked top-K are displayed (the downstream stages are
+/// identity here — pre-rank quality differences flow straight to CTR).
+pub fn run(
+    arms: &[(&str, Arc<Merger>)],
+    n_requests: u64,
+    slate: usize,
+    seed: u64,
+) -> Result<Vec<ArmReport>> {
+    assert!(!arms.is_empty());
+    let world = Arc::clone(&arms[0].1.world);
+    let mut per_arm: Vec<Vec<Sample>> =
+        (0..arms.len()).map(|_| Vec::new()).collect();
+    let mut rt_sum: Vec<f64> = vec![0.0; arms.len()];
+    let mut rng = Pcg64::with_stream(seed, 77);
+
+    for id in 0..n_requests {
+        let user = rng.below(world.n_users as u64) as usize;
+        // Consistent hash assignment: a user always lands in the same arm.
+        let arm = (crate::cache::RequestKey::new(0, &format!("u{user}")).0
+            as usize)
+            % arms.len();
+        let merger = &arms[arm].1;
+        let result = merger.handle(id, user)?;
+        rt_sum[arm] += result.timings.total.as_secs_f64();
+
+        // Display the slate; oracle user clicks.
+        let shown = &result.top_k[..slate.min(result.top_k.len())];
+        let mut clicks = 0u32;
+        let mut revenue = 0.0f32;
+        for &(item, _) in shown {
+            let p = world.click_prob(user, item);
+            if rng.chance(p as f64) {
+                clicks += 1;
+                revenue += world.bid(item);
+            }
+        }
+        per_arm[arm].push(Sample {
+            impressions: shown.len() as u32,
+            clicks,
+            revenue,
+        });
+    }
+
+    // Aggregate + bootstrap vs control.
+    let agg = |samples: &[Sample]| -> (f64, f64) {
+        let imp: f64 = samples.iter().map(|s| s.impressions as f64).sum();
+        let clk: f64 = samples.iter().map(|s| s.clicks as f64).sum();
+        let rev: f64 = samples.iter().map(|s| s.revenue as f64).sum();
+        (clk / imp.max(1.0), rev / imp.max(1.0) * 1000.0)
+    };
+
+    let (control_ctr, control_rpm) = agg(&per_arm[0]);
+    let mut reports = Vec::new();
+    for (i, (name, _)) in arms.iter().enumerate() {
+        let (ctr, rpm) = agg(&per_arm[i]);
+        let (ctr_ci, rpm_ci) = if i == 0 {
+            (None, None)
+        } else {
+            let boot = bootstrap_delta(
+                &per_arm[0],
+                &per_arm[i],
+                1000,
+                seed ^ i as u64,
+            );
+            (Some(boot.0), Some(boot.1))
+        };
+        reports.push(ArmReport {
+            name: name.to_string(),
+            requests: per_arm[i].len(),
+            ctr,
+            rpm,
+            avg_rt_ms: rt_sum[i] / per_arm[i].len().max(1) as f64 * 1e3,
+            ctr_delta_ci: ctr_ci,
+            rpm_delta_ci: rpm_ci,
+            samples: per_arm[i].clone(),
+        });
+    }
+    let _ = (control_ctr, control_rpm);
+    Ok(reports)
+}
+
+/// Bootstrap 95% CI of (treatment − control) for CTR and RPM.
+fn bootstrap_delta(
+    control: &[Sample],
+    treatment: &[Sample],
+    n_resamples: usize,
+    seed: u64,
+) -> ((f64, f64), (f64, f64)) {
+    let mut rng = Pcg64::with_stream(seed, 99);
+    let mut ctr_deltas = Vec::with_capacity(n_resamples);
+    let mut rpm_deltas = Vec::with_capacity(n_resamples);
+    let stat = |s: &[Sample], rng: &mut Pcg64| -> (f64, f64) {
+        let n = s.len();
+        let mut imp = 0f64;
+        let mut clk = 0f64;
+        let mut rev = 0f64;
+        for _ in 0..n {
+            let x = &s[rng.below(n as u64) as usize];
+            imp += x.impressions as f64;
+            clk += x.clicks as f64;
+            rev += x.revenue as f64;
+        }
+        (clk / imp.max(1.0), rev / imp.max(1.0) * 1000.0)
+    };
+    for _ in 0..n_resamples {
+        let (c_ctr, c_rpm) = stat(control, &mut rng);
+        let (t_ctr, t_rpm) = stat(treatment, &mut rng);
+        ctr_deltas.push(t_ctr - c_ctr);
+        rpm_deltas.push(t_rpm - c_rpm);
+    }
+    (ci95(&mut ctr_deltas), ci95(&mut rpm_deltas))
+}
+
+fn ci95(deltas: &mut [f64]) -> (f64, f64) {
+    deltas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = deltas.len();
+    (deltas[n * 25 / 1000], deltas[n * 975 / 1000 - 1])
+}
+
+/// Render an A/B report table (paper Table 2 online columns).
+pub fn render(reports: &[ArmReport]) -> String {
+    let control = &reports[0];
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:28} {:>8} {:>9} {:>9} {:>10} {:>24}\n",
+        "arm", "requests", "CTR", "RPM", "avgRT", "ΔCTR 95% CI"
+    ));
+    for r in reports {
+        let delta = if r.name == control.name {
+            "-".to_string()
+        } else {
+            let ci = r.ctr_delta_ci.unwrap();
+            let sig = if ci.0 > 0.0 || ci.1 < 0.0 { "*" } else { " " };
+            format!(
+                "{:+.2}% [{:+.4},{:+.4}]{sig}",
+                r.ctr_delta_pct(control),
+                ci.0,
+                ci.1
+            )
+        };
+        out.push_str(&format!(
+            "{:28} {:>8} {:>9.4} {:>9.3} {:>9.2}ms {:>24}\n",
+            r.name, r.requests, r.ctr, r.rpm, r.avg_rt_ms, delta
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci95_brackets_the_distribution() {
+        let mut d: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        let (lo, hi) = ci95(&mut d);
+        assert!(lo < 0.05 && lo >= 0.0, "{lo}");
+        assert!(hi > 0.95 && hi <= 1.0, "{hi}");
+    }
+}

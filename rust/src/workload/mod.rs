@@ -1,0 +1,8 @@
+//! Workload substrate: load generation (closed/open loop, saturation
+//! sweeps) and the online A/B test simulator with bootstrap significance.
+
+pub mod abtest;
+pub mod experiments;
+pub mod runner;
+
+pub use runner::{closed_loop, max_qps, open_loop, LoadReport, UserSampler};

@@ -1,0 +1,199 @@
+//! Load generation: closed-loop and open-loop drivers over a [`Merger`],
+//! plus the saturation sweep that measures maxQPS (Table 4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Merger;
+use crate::util::rng::{Pcg64, Zipf};
+
+/// Aggregate results of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub name: String,
+    pub n_requests: u64,
+    pub n_errors: u64,
+    pub wall: Duration,
+    pub qps: f64,
+    pub avg_rt_ms: f64,
+    pub p99_rt_ms: f64,
+    pub avg_prerank_ms: f64,
+    pub p99_prerank_ms: f64,
+    pub avg_retrieval_ms: f64,
+    pub extra_storage_bytes: usize,
+}
+
+impl LoadReport {
+    pub fn render(&self) -> String {
+        format!(
+            "{:28} qps {:8.2}  avgRT {:8.3}ms  p99RT {:8.3}ms  \
+             prerank avg {:7.3}ms p99 {:7.3}ms  err {}",
+            self.name,
+            self.qps,
+            self.avg_rt_ms,
+            self.p99_rt_ms,
+            self.avg_prerank_ms,
+            self.p99_prerank_ms,
+            self.n_errors
+        )
+    }
+}
+
+/// Zipf-skewed user sampler (hot users exist in production traffic).
+pub struct UserSampler {
+    zipf: Zipf,
+    n_users: usize,
+}
+
+impl UserSampler {
+    pub fn new(n_users: usize) -> Self {
+        UserSampler {
+            zipf: Zipf::new(n_users, 1.02),
+            n_users,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        self.zipf.sample(rng) % self.n_users
+    }
+}
+
+/// Closed-loop run: `n_clients` threads each issue requests back-to-back
+/// until `n_requests` total are served.  Throughput at high `n_clients`
+/// approaches maxQPS.
+pub fn closed_loop(
+    name: &str,
+    merger: &Arc<Merger>,
+    n_requests: u64,
+    n_clients: usize,
+    seed: u64,
+) -> LoadReport {
+    merger.metrics.reset();
+    let issued = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let sampler = Arc::new(UserSampler::new(merger.world.n_users));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let merger = Arc::clone(merger);
+        let issued = Arc::clone(&issued);
+        let errors = Arc::clone(&errors);
+        let sampler = Arc::clone(&sampler);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::with_stream(seed, c as u64 + 1);
+            loop {
+                let id = issued.fetch_add(1, Ordering::Relaxed);
+                if id >= n_requests {
+                    break;
+                }
+                let user = sampler.sample(&mut rng);
+                if merger.handle(id, user).is_err() {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed();
+    report(name, merger, n_requests, errors.load(Ordering::Relaxed), wall)
+}
+
+/// Open-loop run at a fixed arrival rate (Poisson): measures latency at a
+/// target load without coordinated omission.
+pub fn open_loop(
+    name: &str,
+    merger: &Arc<Merger>,
+    n_requests: u64,
+    rate_qps: f64,
+    seed: u64,
+) -> LoadReport {
+    merger.metrics.reset();
+    let errors = Arc::new(AtomicU64::new(0));
+    let sampler = UserSampler::new(merger.world.n_users);
+    let mut rng = Pcg64::with_stream(seed, 0);
+    let t0 = Instant::now();
+    let mut next_at = t0;
+    let mut handles = Vec::new();
+    for id in 0..n_requests {
+        // Poisson arrivals.
+        let gap = rng.exponential(rate_qps);
+        next_at += Duration::from_secs_f64(gap);
+        let now = Instant::now();
+        if next_at > now {
+            std::thread::sleep(next_at - now);
+        }
+        let user = sampler.sample(&mut rng);
+        let merger = Arc::clone(merger);
+        let errors = Arc::clone(&errors);
+        handles.push(std::thread::spawn(move || {
+            if merger.handle(id, user).is_err() {
+                errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+        // Bound the number of dangling threads.
+        if handles.len() > 256 {
+            for h in handles.drain(..128) {
+                let _ = h.join();
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed();
+    report(name, merger, n_requests, errors.load(Ordering::Relaxed), wall)
+}
+
+/// maxQPS: closed-loop saturation with a client ladder; returns the peak
+/// observed throughput (the paper's maxQPS column).
+pub fn max_qps(
+    merger: &Arc<Merger>,
+    requests_per_step: u64,
+    seed: u64,
+) -> (f64, Vec<LoadReport>) {
+    let mut best = 0.0f64;
+    let mut reports = Vec::new();
+    for clients in [2usize, 4, 8, 16] {
+        let r = closed_loop(
+            &format!("clients={clients}"),
+            merger,
+            requests_per_step,
+            clients,
+            seed,
+        );
+        best = best.max(r.qps);
+        let saturated =
+            reports.last().map(|p: &LoadReport| r.qps < p.qps * 1.05);
+        reports.push(r);
+        if saturated.unwrap_or(false) {
+            break; // adding clients no longer helps
+        }
+    }
+    (best, reports)
+}
+
+fn report(
+    name: &str,
+    merger: &Arc<Merger>,
+    n_requests: u64,
+    n_errors: u64,
+    wall: Duration,
+) -> LoadReport {
+    let m = &merger.metrics;
+    LoadReport {
+        name: name.to_string(),
+        n_requests,
+        n_errors,
+        wall,
+        qps: n_requests as f64 / wall.as_secs_f64(),
+        avg_rt_ms: m.total_rt.mean() * 1e3,
+        p99_rt_ms: m.total_rt.percentile(99.0) * 1e3,
+        avg_prerank_ms: m.prerank_rt.mean() * 1e3,
+        p99_prerank_ms: m.prerank_rt.percentile(99.0) * 1e3,
+        avg_retrieval_ms: m.retrieval_rt.mean() * 1e3,
+        extra_storage_bytes: merger.extra_storage_bytes(),
+    }
+}

@@ -1,0 +1,121 @@
+//! Failure-injection + consistency tests over the serving stack.
+
+use std::sync::Arc;
+
+use aif::cache::{RequestKey, UserVecCache};
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::Merger;
+use aif::features::LatencyModel;
+use aif::nearline::{N2oEntry, N2oTable};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn test_cfg(variant: &str, sim: SimMode) -> ServingConfig {
+    ServingConfig {
+        variant: variant.into(),
+        sim_mode: sim,
+        n_rtp_workers: 2,
+        n_candidates: 512,
+        top_k: 64,
+        retrieval_latency: LatencyModel::fixed(200.0),
+        user_store_latency: LatencyModel::fixed(30.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+            .into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn missing_n2o_rows_surface_as_errors_not_corruption() {
+    // A snapshot with missing rows must refuse assembly (the Merger then
+    // errors the request) — never serve garbage.
+    let t = N2oTable::new(8, 4, 2, 8);
+    let entry = N2oEntry {
+        item_vec: vec![1.0; 4],
+        bea_w: vec![0.5; 2],
+        sign_packed: vec![0xFF],
+    };
+    t.swap_full(
+        vec![
+            Some(entry.clone()),
+            None, // hole
+            Some(entry.clone()),
+            None,
+            None,
+            None,
+            None,
+            None,
+        ],
+        1,
+    );
+    let snap = t.snapshot();
+    assert!(snap.assemble(&[0, 2], 4).is_some());
+    assert!(snap.assemble(&[0, 1], 4).is_none(), "hole must be detected");
+}
+
+#[test]
+fn user_cache_double_take_is_a_miss_not_a_stale_read() {
+    let cache = UserVecCache::new(4);
+    let key = RequestKey::new(9, "u9");
+    assert!(cache.take(key).is_none());
+    assert_eq!(
+        cache.misses.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn merger_rejects_unknown_variant() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = test_cfg("no_such_variant", SimMode::Off);
+    assert!(Merger::build(cfg).is_err());
+}
+
+#[test]
+fn merger_survives_concurrent_nearline_updates() {
+    // Incremental N2O upserts racing live traffic: every request must keep
+    // seeing a complete, consistent generation (snapshot isolation).
+    if !have_artifacts() {
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
+    let n2o = Arc::clone(&merger.n2o);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let updater = std::thread::spawn(move || {
+        let mut v = 0u32;
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            // Churn rows in place (same values, new allocation).
+            let snap = n2o.snapshot();
+            if let Some(e) = snap.get(v % 100) {
+                n2o.upsert(vec![(v % 100, e.clone())]);
+            }
+            v += 1;
+        }
+    });
+    for id in 0..6u64 {
+        let r = merger
+            .handle(id, (id as usize * 29) % merger.world.n_users)
+            .unwrap();
+        assert_eq!(r.top_k.len(), 64);
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    updater.join().unwrap();
+}
+
+#[test]
+fn request_ids_do_not_collide_across_users() {
+    // Same request id, different users -> different cache keys (the
+    // consistent-hash key includes the nickname).
+    let a = RequestKey::new(42, "user-1");
+    let b = RequestKey::new(42, "user-2");
+    assert_ne!(a, b);
+}

@@ -1,0 +1,251 @@
+//! Property-based invariants over the coordinator substrates, via the
+//! in-repo mini framework (`util::prop`) — DESIGN.md §9.
+
+use aif::cache::ShardedLru;
+use aif::coordinator::batcher;
+use aif::coordinator::Router;
+use aif::nearline::{N2oEntry, N2oTable};
+use aif::util::bits;
+use aif::util::prop::{check, usize_in, vec_of, Gen};
+use aif::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Batcher: cover / disjoint / ordered / bounded.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_batcher_partition() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n = 1 + rng.below(5000) as usize;
+        let batch = 1 + rng.below(512) as usize;
+        (n, batch)
+    });
+    check("batcher partitions", &gen, 300, |&(n, batch)| {
+        let cands: Vec<u32> = (0..n as u32).collect();
+        let batches = batcher::split(&cands, batch);
+        let rejoined: Vec<u32> = batches
+            .iter()
+            .flat_map(|b| b.items.iter().copied())
+            .collect();
+        if rejoined != cands {
+            return Err("not a cover / order broken".into());
+        }
+        for b in &batches {
+            if b.items.len() > batch {
+                return Err(format!("batch {} too large", b.index));
+            }
+            if b.offset != b.index * batch {
+                return Err("offset mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_scores_strips_padding_exactly() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n = 1 + rng.below(2000) as usize;
+        let batch = 1 + rng.below(300) as usize;
+        (n, batch)
+    });
+    check("merge strips padding", &gen, 200, |&(n, batch)| {
+        let n_batches = n.div_ceil(batch);
+        // Scores encode their global index; padding rows get NaN sentinel.
+        let per: Vec<Vec<f32>> = (0..n_batches)
+            .map(|i| {
+                (0..batch)
+                    .map(|j| {
+                        let g = i * batch + j;
+                        if g < n {
+                            g as f32
+                        } else {
+                            f32::NAN
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let merged = batcher::merge_scores(n, batch, &per);
+        for (g, v) in merged.iter().enumerate() {
+            if *v != g as f32 {
+                return Err(format!("index {g} got {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top_k_is_truly_maximal() {
+    let gen = vec_of(usize_in(0, 10_000), 600);
+    check("top_k maximal", &gen, 200, |scores_raw: &Vec<usize>| {
+        if scores_raw.is_empty() {
+            return Ok(());
+        }
+        let items: Vec<u32> = (0..scores_raw.len() as u32).collect();
+        let scores: Vec<f32> =
+            scores_raw.iter().map(|&s| s as f32 / 10_000.0).collect();
+        let k = 1 + scores.len() / 3;
+        let top = batcher::top_k(&items, &scores, k);
+        // Sorted descending.
+        for w in top.windows(2) {
+            if w[0].1 < w[1].1 {
+                return Err("not sorted".into());
+            }
+        }
+        // Every excluded score <= the worst included score.
+        let worst = top.last().unwrap().1;
+        let included: std::collections::HashSet<u32> =
+            top.iter().map(|(i, _)| *i).collect();
+        for (i, &s) in scores.iter().enumerate() {
+            if !included.contains(&(i as u32)) && s > worst {
+                return Err(format!("excluded {s} > included {worst}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Consistent-hash router: stability under churn.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_router_remap_is_minimal() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let nodes = 2 + rng.below(14) as usize;
+        let victim = rng.below(nodes as u64) as usize;
+        (nodes, victim)
+    });
+    check("router minimal remap", &gen, 50, |&(nodes, victim)| {
+        let mut r = Router::new(nodes, 64);
+        let before: Vec<usize> = (0..2000u64).map(|k| r.route(k)).collect();
+        r.remove_node(victim);
+        for (k, &b) in before.iter().enumerate() {
+            let after = r.route(k as u64);
+            if b != victim && after != b {
+                return Err(format!("key {k} moved {b}->{after}"));
+            }
+            if b == victim && after == victim {
+                return Err("routed to removed node".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// LRU: capacity bound + hit-after-insert.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_lru_capacity_and_recency() {
+    let gen = vec_of(usize_in(0, 64), 400);
+    check("lru bounded", &gen, 100, |keys: &Vec<usize>| {
+        let cap = 16;
+        let lru: ShardedLru<usize, usize> = ShardedLru::new(cap, 4);
+        for (i, &k) in keys.iter().enumerate() {
+            lru.insert(k, i);
+            if lru.len() > cap {
+                return Err(format!("len {} > cap {cap}", lru.len()));
+            }
+            // Just-inserted key must be present.
+            if lru.get(&k).is_none() {
+                return Err("just-inserted key missing".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// N2O: incremental upserts converge to the same state as a full build.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_n2o_incremental_equals_full() {
+    let gen = vec_of(usize_in(0, 40), 200);
+    check("n2o incremental == full", &gen, 60, |updates: &Vec<usize>| {
+        let n = 40;
+        let entry = |v: usize| N2oEntry {
+            item_vec: vec![v as f32; 4],
+            bea_w: vec![v as f32; 2],
+            sign_packed: vec![v as u8],
+        };
+        // Path A: full build with the final values.
+        let mut last: Vec<usize> = (0..n).collect();
+        for (step, &id) in updates.iter().enumerate() {
+            last[id] = 1000 + step;
+        }
+        let full = N2oTable::new(n, 4, 2, 8);
+        full.swap_full(
+            (0..n).map(|i| Some(entry(last[i]))).collect(),
+            1,
+        );
+        // Path B: initial build + incremental upserts.
+        let inc = N2oTable::new(n, 4, 2, 8);
+        inc.swap_full((0..n).map(|i| Some(entry(i))).collect(), 1);
+        for (step, &id) in updates.iter().enumerate() {
+            inc.upsert(vec![(id as u32, entry(1000 + step))]);
+        }
+        let (sa, sb) = (full.snapshot(), inc.snapshot());
+        for i in 0..n as u32 {
+            if sa.get(i) != sb.get(i) {
+                return Err(format!("row {i} diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// LSH: packed-LUT similarity == unpacked ±1 dot similarity, always.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_packed_similarity_equals_plane_dot() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n_bits = 8 * (1 + rng.below(16) as usize);
+        let a: Vec<bool> = (0..n_bits).map(|_| rng.chance(0.5)).collect();
+        let b: Vec<bool> = (0..n_bits).map(|_| rng.chance(0.5)).collect();
+        (n_bits, a, b)
+    });
+    check("packed == plane", &gen, 300, |(n_bits, a, b)| {
+        let pa = bits::pack_bits(a);
+        let pb = bits::pack_bits(b);
+        let packed = bits::lsh_similarity_packed(&pa, &pb, *n_bits);
+        let mut fa = vec![0.0; *n_bits];
+        let mut fb = vec![0.0; *n_bits];
+        bits::unpack_to_pm1(&pa, *n_bits, &mut fa);
+        bits::unpack_to_pm1(&pb, *n_bits, &mut fb);
+        let dot: f32 = fa.iter().zip(&fb).map(|(x, y)| x * y).sum();
+        let plane = (1.0 + dot / *n_bits as f32) / 2.0;
+        if (packed - plane).abs() > 1e-6 {
+            return Err(format!("{packed} != {plane}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Tier histogram: rows are distributions; matches the float binning.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_tier_histogram_is_distribution() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n_items = 1 + rng.below(20) as usize;
+        let n_seq = 1 + rng.below(200) as usize;
+        let bytes: Vec<u8> = (0..(n_items + n_seq) * 8)
+            .map(|_| rng.below(256) as u8)
+            .collect();
+        (n_items, n_seq, bytes)
+    });
+    check("tier hist rows sum to 1", &gen, 100, |(n_items, n_seq, bytes)| {
+        let (items, seq) = bytes.split_at(n_items * 8);
+        let hist =
+            aif::lsh::tier_histogram(items, *n_items, seq, *n_seq, 64, 8);
+        for i in 0..*n_items {
+            let s: f32 = hist[i * 8..(i + 1) * 8].iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(format!("row {i} sums to {s}"));
+            }
+        }
+        Ok(())
+    });
+}

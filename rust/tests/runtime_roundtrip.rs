@@ -1,0 +1,196 @@
+//! Cross-language correctness anchor: replay the golden fixture emitted by
+//! `python/compile/aot.py` through the rust PJRT runtime and assert the
+//! towers and heads reproduce the python oracle outputs.
+
+use aif::runtime::{Engine, Manifest, Tensor};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest loads"))
+}
+
+const TOL: f32 = 5e-4;
+
+#[test]
+fn user_tower_matches_golden() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    engine.load(&m, "user_tower").unwrap();
+    let inputs = vec![
+        m.load_golden("profile").unwrap(),
+        m.load_golden("seq_short").unwrap(),
+        m.load_golden("seq_long_raw").unwrap(),
+        m.load_golden("seq_sign").unwrap(),
+    ];
+    let out = engine.execute("user_tower", &inputs).unwrap();
+    let expect = [
+        m.load_golden("user_tower.u_vec").unwrap(),
+        m.load_golden("user_tower.bea_v").unwrap(),
+        m.load_golden("user_tower.seq_emb").unwrap(),
+        m.load_golden("user_tower.din_base").unwrap(),
+        m.load_golden("user_tower.din_g").unwrap(),
+    ];
+    for (o, e) in out.iter().zip(&expect) {
+        let d = o.max_abs_diff(e);
+        assert!(d < TOL, "user_tower diff {d}");
+    }
+}
+
+#[test]
+fn item_tower_matches_golden() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    engine.load(&m, "item_tower").unwrap();
+    let inputs = vec![m.load_golden("item_raw").unwrap()];
+    let out = engine.execute("item_tower", &inputs).unwrap();
+    let expect = [
+        m.load_golden("item_tower.item_vec").unwrap(),
+        m.load_golden("item_tower.bea_w").unwrap(),
+    ];
+    for (o, e) in out.iter().zip(&expect) {
+        let d = o.max_abs_diff(e);
+        assert!(d < TOL, "item_tower diff {d}");
+    }
+}
+
+#[test]
+fn head_base_matches_golden() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    engine.load(&m, "head_base").unwrap();
+    let inputs = vec![
+        m.load_golden("profile").unwrap(),
+        m.load_golden("seq_short").unwrap(),
+        m.load_golden("item_raw").unwrap(),
+    ];
+    let scores = engine.execute1("head_base", &inputs).unwrap();
+    let expect = m.load_golden("head_base.scores").unwrap();
+    let d = scores.max_abs_diff(&expect);
+    assert!(d < TOL, "head_base diff {d}");
+}
+
+#[test]
+fn head_aif_matches_golden_via_towers() {
+    // Full AIF composition: towers produce the async tensors, head consumes
+    // them — the exact two-phase flow the Merger performs.
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    for a in ["user_tower", "item_tower", "head_aif"] {
+        engine.load(&m, a).unwrap();
+    }
+    let user_out = engine
+        .execute(
+            "user_tower",
+            &[
+                m.load_golden("profile").unwrap(),
+                m.load_golden("seq_short").unwrap(),
+                m.load_golden("seq_long_raw").unwrap(),
+                m.load_golden("seq_sign").unwrap(),
+            ],
+        )
+        .unwrap();
+    let item_out = engine
+        .execute("item_tower", &[m.load_golden("item_raw").unwrap()])
+        .unwrap();
+    let inputs = vec![
+        user_out[0].clone(),                       // u_vec
+        item_out[0].clone(),                       // item_vec
+        user_out[1].clone(),                       // bea_v
+        item_out[1].clone(),                       // bea_w
+        user_out[3].clone(),                       // din_base (hoisted DIN)
+        user_out[4].clone(),                       // din_g
+        m.load_golden("item_sign").unwrap(),
+        m.load_golden("tiers_in").unwrap(),        // serving-engine SimTier
+        m.load_golden("sim_cross").unwrap(),
+    ];
+    let scores = engine.execute1("head_aif", &inputs).unwrap();
+    let expect = m.load_golden("head_aif.scores").unwrap();
+    let d = scores.max_abs_diff(&expect);
+    assert!(d < TOL, "head_aif diff {d}");
+    // Scores are probabilities.
+    assert!(scores.data().iter().all(|s| (0.0..=1.0).contains(s)));
+}
+
+#[test]
+fn pallas_flavor_matches_ref_flavor() {
+    // The Pallas-lowered artifacts (the TPU deployment shape, with the
+    // fused LSH kernel computing SimTier in-kernel) must agree with the
+    // ref-lowered serving artifacts — both through the SAME rust PJRT path.
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    for a in [
+        "user_tower",
+        "user_tower_pallas",
+        "item_tower",
+        "item_tower_pallas",
+        "head_aif",
+        "head_aif_pallas",
+    ] {
+        engine.load(&m, a).unwrap();
+    }
+    let user_inputs = vec![
+        m.load_golden("profile").unwrap(),
+        m.load_golden("seq_short").unwrap(),
+        m.load_golden("seq_long_raw").unwrap(),
+        m.load_golden("seq_sign").unwrap(),
+    ];
+    let u_ref = engine.execute("user_tower", &user_inputs).unwrap();
+    let u_pal = engine
+        .execute("user_tower_pallas", &user_inputs[..3])
+        .unwrap();
+    for (a, b) in u_ref.iter().take(3).zip(&u_pal) {
+        assert!(a.max_abs_diff(b) < TOL, "user tower flavors diverge");
+    }
+    let item_inputs = vec![m.load_golden("item_raw").unwrap()];
+    let i_ref = engine.execute("item_tower", &item_inputs).unwrap();
+    let i_pal = engine.execute("item_tower_pallas", &item_inputs).unwrap();
+    for (a, b) in i_ref.iter().zip(&i_pal) {
+        assert!(a.max_abs_diff(b) < TOL, "item tower flavors diverge");
+    }
+    // Heads: the ref flavor takes tiers_in; the pallas flavor computes
+    // SimTier inside the fused kernel.  Same scores either way.
+    let ref_inputs = vec![
+        u_ref[0].clone(),
+        i_ref[0].clone(),
+        u_ref[1].clone(),
+        i_ref[1].clone(),
+        u_ref[3].clone(), // din_base
+        u_ref[4].clone(), // din_g
+        m.load_golden("item_sign").unwrap(),
+        m.load_golden("tiers_in").unwrap(),
+        m.load_golden("sim_cross").unwrap(),
+    ];
+    let pallas_inputs = vec![
+        u_ref[0].clone(),
+        i_ref[0].clone(),
+        u_ref[1].clone(),
+        i_ref[1].clone(),
+        u_ref[2].clone(), // seq_emb — the kernel pools in full
+        m.load_golden("item_sign").unwrap(),
+        m.load_golden("seq_sign").unwrap(),
+        m.load_golden("sim_cross").unwrap(),
+    ];
+    let s_ref = engine.execute1("head_aif", &ref_inputs).unwrap();
+    let s_pal = engine.execute1("head_aif_pallas", &pallas_inputs).unwrap();
+    let d = s_ref.max_abs_diff(&s_pal);
+    assert!(d < TOL, "pallas vs ref head diff {d}");
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new().unwrap();
+    engine.load(&m, "head_base").unwrap();
+    let bad = vec![
+        Tensor::zeros(vec![1, 3]), // wrong profile shape
+        m.load_golden("seq_short").unwrap(),
+        m.load_golden("item_raw").unwrap(),
+    ];
+    assert!(engine.execute("head_base", &bad).is_err());
+    assert!(engine.execute("head_base", &[]).is_err());
+    assert!(engine.execute("not_loaded", &[]).is_err());
+}

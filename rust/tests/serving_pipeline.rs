@@ -1,0 +1,112 @@
+//! End-to-end coordinator integration: bring up Mergers for key pipeline
+//! configurations and serve real requests through the PJRT runtime.
+
+use std::sync::Arc;
+
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::Merger;
+use aif::features::LatencyModel;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+/// Fast config: tiny latencies, few candidates, small fleet.
+fn test_cfg(variant: &str, sim: SimMode) -> ServingConfig {
+    ServingConfig {
+        variant: variant.into(),
+        sim_mode: sim,
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        n_candidates: 512,
+        top_k: 64,
+        retrieval_latency: LatencyModel::fixed(300.0),
+        user_store_latency: LatencyModel::fixed(50.0),
+        item_store_latency: LatencyModel::fixed(20.0),
+        sim_parse_us: 0.1,
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+            .into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn aif_pipeline_serves_requests() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
+    for id in 0..4u64 {
+        let r = merger.handle(id, (id as usize * 37) % merger.world.n_users)
+            .unwrap();
+        assert_eq!(r.top_k.len(), 64);
+        // Scores sorted descending, all probabilities.
+        for w in r.top_k.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        assert!(r.top_k.iter().all(|&(_, s)| (0.0..=1.0).contains(&s)));
+        // Async phase ran and overlapped with retrieval.
+        assert!(r.timings.user_async.is_some());
+    }
+    // User cache is drained (two-phase handoff consumed).
+    assert!(merger.user_cache.is_empty());
+    // N2O table was fully built.
+    assert_eq!(merger.n2o.coverage(), 1.0);
+    assert!(merger.extra_storage_bytes() > 0);
+}
+
+#[test]
+fn base_pipeline_is_sequential() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("base", SimMode::Off)).unwrap());
+    let r = merger.handle(1, 7).unwrap();
+    assert_eq!(r.top_k.len(), 64);
+    assert!(r.timings.user_async.is_none(), "no async phase in base");
+}
+
+#[test]
+fn sync_sim_pipeline_works() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("t4_sim", SimMode::Sync)).unwrap());
+    let r = merger.handle(2, 11).unwrap();
+    assert_eq!(r.top_k.len(), 64);
+}
+
+#[test]
+fn lsh_long_term_pipeline_works() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("t4_lsh", SimMode::Off)).unwrap());
+    let r = merger.handle(3, 13).unwrap();
+    assert_eq!(r.top_k.len(), 64);
+}
+
+#[test]
+fn aif_and_base_rank_differently_but_validly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let aif =
+        Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
+    let base =
+        Arc::new(Merger::build(test_cfg("base", SimMode::Off)).unwrap());
+    let ra = aif.handle(10, 3).unwrap();
+    let rb = base.handle(10, 3).unwrap();
+    assert_eq!(ra.top_k.len(), rb.top_k.len());
+}
