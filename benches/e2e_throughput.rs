@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, PreRanker};
 use aif::workload::runner;
 
 fn main() {
@@ -21,11 +21,12 @@ fn main() {
             artifacts_dir: dir.clone(),
             ..Default::default()
         };
-        let merger = Arc::new(Merger::build(cfg).expect("merger"));
-        let report = runner::closed_loop(name, &merger, n, 2, 11);
+        let ranker: Arc<dyn PreRanker> =
+            Arc::new(Merger::build(cfg).expect("merger"));
+        let report = runner::closed_loop(name, &ranker, n, 2, 11);
         println!("{}", report.render());
-        let (mq, _) = runner::max_qps(&merger, n / 2, 12);
+        let (mq, _) = runner::max_qps(&ranker, n / 2, 12);
         println!("  maxQPS {mq:.2}  extra storage {:.2} MiB",
-            merger.extra_storage_bytes() as f64 / (1 << 20) as f64);
+            ranker.extra_storage_bytes() as f64 / (1 << 20) as f64);
     }
 }

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate, reproducible locally: build, tests, formatting.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "ci: all green"

@@ -1,5 +1,5 @@
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, ScoreRequest};
 use aif::features::LatencyModel;
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,11 +18,13 @@ fn main() {
             ..Default::default()
         };
         let m = Arc::new(Merger::build(cfg).unwrap());
-        for i in 0..2 { m.handle(i, 5).unwrap(); } // warm
+        for i in 0..2 { m.score(ScoreRequest::user(5).with_request_id(i)).unwrap(); } // warm
         let t0 = Instant::now();
         let n = 8;
         let mut prerank = 0.0;
-        for i in 0..n { let r = m.handle(100+i, (i as usize*13)%m.world.n_users).unwrap();
+        for i in 0..n {
+            let req = ScoreRequest::user((i as usize*13)%m.world.n_users).with_request_id(100+i);
+            let r = m.score(req).unwrap();
             prerank += r.timings.prerank.as_secs_f64(); }
         println!("{name:14} total {:6.2} ms/req  prerank {:6.2} ms/req",
             t0.elapsed().as_secs_f64()/n as f64*1e3, prerank/n as f64*1e3);

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, ScoreRequest};
 
 fn main() -> anyhow::Result<()> {
     let cfg = ServingConfig {
@@ -26,15 +26,24 @@ fn main() -> anyhow::Result<()> {
     let merger = Arc::new(Merger::build(cfg)?);
 
     let user = 42;
-    let result = merger.handle(1, user)?;
+    let result = merger.score(
+        ScoreRequest::user(user).with_request_id(1).with_trace(true),
+    )?;
 
     println!("\ntop-10 of {} candidates:", merger.cfg.n_candidates);
-    for (rank, (item, score)) in result.top_k.iter().take(10).enumerate() {
+    for (rank, s) in result.items.iter().take(10).enumerate() {
         println!(
-            "  #{:<3} item {:<6} score {score:.4}  oracle pCTR {:.4}",
+            "  #{:<3} item {:<6} score {:.4}  oracle pCTR {:.4}",
             rank + 1,
-            item,
-            merger.world.click_prob(user, *item)
+            s.item,
+            s.score,
+            merger.world.click_prob(user, s.item)
+        );
+    }
+    if let Some(trace) = &result.trace {
+        println!(
+            "\ntrace: {} candidates in {} mini-batches",
+            trace.n_candidates, trace.n_batches
         );
     }
 

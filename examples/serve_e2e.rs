@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
         ("Base", Arc::clone(&base)),
         ("AIF", Arc::clone(&aif)),
     ];
-    let reports = abtest::run(&arms, n_ab, 10, 4242)?;
+    let reports = abtest::run(&base.world, &arms, n_ab, 10, 4242)?;
     print!("{}", abtest::render(&reports));
 
     let control = &reports[0];

@@ -30,7 +30,10 @@ pub struct ServingConfig {
     pub n_rtp_workers: usize,
     /// Threads for the Merger's async/user-side tasks.
     pub n_async_workers: usize,
+    /// Connection-handling threads of the HTTP server (`aif serve`).
+    pub n_http_workers: usize,
     pub n_candidates: usize,
+    /// Default result size; per-request `top_k` overrides it.
     pub top_k: usize,
 
     pub retrieval_latency: LatencyModel,
@@ -57,6 +60,7 @@ impl Default for ServingConfig {
             // modeled I/O latency, not compute).
             n_rtp_workers: 2,
             n_async_workers: 2,
+            n_http_workers: 4,
             n_candidates: 4096,
             top_k: 128,
             // Calibrated so the stage ratios match the paper's setting:
@@ -113,6 +117,7 @@ impl ServingConfig {
         num!(sim_budget, "sim_budget", f64);
         num!(n_rtp_workers, "n_rtp_workers", usize);
         num!(n_async_workers, "n_async_workers", usize);
+        num!(n_http_workers, "n_http_workers", usize);
         num!(n_candidates, "n_candidates", usize);
         num!(top_k, "top_k", usize);
         num!(sim_parse_us, "sim_parse_us", f64);
@@ -211,6 +216,15 @@ mod tests {
         assert_eq!(rows.len(), 8);
         assert_eq!(rows[0].0, "Base");
         assert_eq!(rows.last().unwrap().0, "AIF");
+    }
+
+    #[test]
+    fn parses_n_http_workers() {
+        let c = ServingConfig::default();
+        assert_eq!(c.n_http_workers, 4);
+        let v = Value::parse(r#"{"n_http_workers": 9}"#).unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.n_http_workers, 9);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! every AIF increment of Table 4:
 //!
 //! ```text
-//! handle(request):
+//! score(request):
 //!   phase 1 (only if variant.user == "async"):
 //!       ├─ fetch user features ─ user_tower on the consistent-hashed RTP
 //!       │  worker ─ cache UserAsync under hash(request_id, nickname)
@@ -21,6 +21,7 @@
 //!       └─ merge scores, top-K
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -29,6 +30,10 @@ use anyhow::{Context, Result};
 
 use super::batcher;
 use super::router::Router;
+use super::service::{
+    PreRanker, ScoreRequest, ScoreResponse, ScoreTrace, ScoredItem,
+    ServeError, StageSpan,
+};
 use crate::cache::{ArenaPool, RequestKey, ShardedLru, UserAsync, UserVecCache};
 use crate::config::{ServingConfig, SimMode};
 use crate::features::{assembly, FeatureStore, World};
@@ -38,6 +43,10 @@ use crate::nearline::{N2oSnapshot, N2oTable, NearlineWorker};
 use crate::retrieval::Retriever;
 use crate::runtime::{Manifest, RtpPool, Tensor, VariantSpec};
 use crate::util::threadpool::ThreadPool;
+
+/// Auto-allocated request ids live at and above this bound; callers must
+/// stay below it so the two spaces can never alias a `RequestKey`.
+pub const AUTO_REQUEST_ID_BASE: u64 = 1 << 63;
 
 /// Per-request phase timings.
 #[derive(Debug, Clone, Copy)]
@@ -74,6 +83,11 @@ pub struct Merger {
     score_pool: Arc<ThreadPool>,
     pub batch: usize,
     head_artifact: String,
+    /// Request-id allocator for requests that don't bring their own.
+    /// Lives in the top half of the id space so auto-allocated ids can
+    /// never collide with caller-supplied ones (which would alias
+    /// `RequestKey`s in the async-variant user cache).
+    req_ids: AtomicU64,
 }
 
 impl Merger {
@@ -165,6 +179,7 @@ impl Merger {
             // pool (2x the fleet) so they never starve the phase-1 tasks.
             score_pool: Arc::new(ThreadPool::new(cfg.n_rtp_workers + 2)),
             head_artifact: variant.artifact.clone(),
+            req_ids: AtomicU64::new(AUTO_REQUEST_ID_BASE),
             manifest,
             variant,
             world,
@@ -182,9 +197,69 @@ impl Merger {
         format!("user-{user}")
     }
 
-    /// Serve one request end to end.
+    /// Pre-typed-API entry point, kept as a one-line compatibility shim.
+    /// The old API accepted the full u64 id space; ids are masked into
+    /// the caller half so the typed path's auto-id guard holds.
+    #[deprecated(note = "use `score(ScoreRequest::user(user))`")]
     pub fn handle(&self, request_id: u64, user: usize) -> Result<RequestResult> {
+        let id = request_id % AUTO_REQUEST_ID_BASE;
+        let resp =
+            self.score(ScoreRequest::user(user).with_request_id(id))?;
+        Ok(RequestResult {
+            top_k: resp.items.iter().map(|s| (s.item, s.score)).collect(),
+            timings: resp.timings,
+        })
+    }
+
+    /// Serve one request end to end through the typed contract.
+    pub fn score(
+        &self,
+        req: ScoreRequest,
+    ) -> Result<ScoreResponse, ServeError> {
+        let result = self.serve(&req);
+        if result.is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn serve(&self, req: &ScoreRequest) -> Result<ScoreResponse, ServeError> {
         let t_total = Instant::now();
+
+        // ---- validation (before any work is scheduled) -------------------
+        let user = req.user;
+        if user >= self.world.n_users {
+            return Err(ServeError::UnknownUser(user));
+        }
+        let top_k = req.top_k.unwrap_or(self.cfg.top_k);
+        if top_k == 0 {
+            return Err(ServeError::BadRequest("top_k must be >= 1".into()));
+        }
+        if let Some(cands) = &req.candidates {
+            if cands.is_empty() {
+                return Err(ServeError::BadRequest(
+                    "candidate override must be non-empty".into(),
+                ));
+            }
+            if let Some(&bad) =
+                cands.iter().find(|&&i| (i as usize) >= self.world.n_items)
+            {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown candidate item {bad}"
+                )));
+            }
+        }
+        if let Some(id) = req.request_id {
+            if id >= AUTO_REQUEST_ID_BASE {
+                return Err(ServeError::BadRequest(format!(
+                    "request_id must be < 2^63 (got {id}; the top half \
+                     is the auto-id space)"
+                )));
+            }
+        }
+        let request_id = req
+            .request_id
+            .unwrap_or_else(|| self.req_ids.fetch_add(1, Ordering::Relaxed));
         let key = RequestKey::new(request_id, &Self::nickname(user));
         let worker = self.router.route(key.0);
 
@@ -263,25 +338,40 @@ impl Merger {
         }
 
         // ---- retrieval (upstream stage; blocks) -------------------------
+        // A candidate override skips the retrieval stage entirely (the
+        // caller already knows what to score) but keeps the phase-1 overlap.
         let t_r = Instant::now();
-        let candidates = self.retriever.retrieve(user);
+        let candidates = match &req.candidates {
+            Some(c) => c.clone(),
+            None => self.retriever.retrieve(user),
+        };
         let retrieval = t_r.elapsed();
 
         // ---- join phase 1 -------------------------------------------------
         let user_async = match async_done {
-            Some(rx) => Some(
-                rx.recv()
-                    .map_err(|_| anyhow::anyhow!("async phase died"))??,
-            ),
+            Some(rx) => Some(rx.recv().map_err(|_| {
+                ServeError::Internal("async phase died".into())
+            })??),
             None => None,
         };
+
+        // ---- deadline gate before the pre-rank phase ---------------------
+        if let Err(e) = check_deadline(req.deadline, t_total) {
+            // The async result was parked for phase 2; drop it so an
+            // abandoned request doesn't leak a cache entry.
+            if self.variant.user == "async" {
+                let _ = self.user_cache.take(key);
+            }
+            return Err(e);
+        }
 
         // ---- phase 2: real-time pre-ranking ------------------------------
         let t_p = Instant::now();
         let scores = self.prerank(key, user, &candidates)?;
         let prerank = t_p.elapsed();
+        check_deadline(req.deadline, t_total)?;
 
-        let top_k = batcher::top_k(&candidates, &scores, self.cfg.top_k);
+        let top = batcher::top_k(&candidates, &scores, top_k);
         let timings = PhaseTimings {
             total: t_total.elapsed(),
             retrieval,
@@ -296,8 +386,44 @@ impl Merger {
         );
         self.metrics
             .items_scored
-            .fetch_add(candidates.len() as u64, std::sync::atomic::Ordering::Relaxed);
-        Ok(RequestResult { top_k, timings })
+            .fetch_add(candidates.len() as u64, Ordering::Relaxed);
+
+        let trace = if req.trace {
+            let mut stages = Vec::new();
+            if let Some(ua) = user_async {
+                stages.push(StageSpan {
+                    stage: "user_async",
+                    elapsed: ua,
+                });
+            }
+            stages.push(StageSpan {
+                stage: "retrieval",
+                elapsed: retrieval,
+            });
+            stages.push(StageSpan {
+                stage: "prerank",
+                elapsed: prerank,
+            });
+            Some(ScoreTrace {
+                n_candidates: candidates.len(),
+                n_batches: candidates.len().div_ceil(self.batch),
+                stages,
+            })
+        } else {
+            None
+        };
+
+        Ok(ScoreResponse {
+            request_id,
+            user,
+            variant: self.cfg.variant.clone(),
+            items: top
+                .into_iter()
+                .map(|(item, score)| ScoredItem { item, score })
+                .collect(),
+            timings,
+            trace,
+        })
     }
 
     /// The real-time phase: score all candidates through the head artifact.
@@ -470,6 +596,43 @@ impl Merger {
         }
         total += self.arena.pooled_bytes();
         total
+    }
+}
+
+impl PreRanker for Merger {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        Merger::score(self, req)
+    }
+
+    fn variant_name(&self) -> &str {
+        &self.cfg.variant
+    }
+
+    fn n_users(&self) -> usize {
+        self.world.n_users
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        self.metrics.as_ref()
+    }
+
+    fn extra_storage_bytes(&self) -> usize {
+        Merger::extra_storage_bytes(self)
+    }
+}
+
+fn check_deadline(
+    deadline: Option<Duration>,
+    t0: Instant,
+) -> Result<(), ServeError> {
+    match deadline {
+        Some(budget) if t0.elapsed() > budget => {
+            Err(ServeError::DeadlineExceeded {
+                budget_ms: budget.as_secs_f64() * 1e3,
+                elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+            })
+        }
+        _ => Ok(()),
     }
 }
 

@@ -1,10 +1,16 @@
 //! L3 coordinator — the paper's system contribution: the Merger two-phase
 //! request lifecycle, consistent-hash routing, mini-batch scheduling and
-//! the sequential baseline (all driven by one `ServingConfig`).
+//! the sequential baseline (all driven by one `ServingConfig`), behind the
+//! typed [`PreRanker`] serving contract.
 
 pub mod batcher;
 pub mod merger;
 pub mod router;
+pub mod service;
 
 pub use merger::{Merger, PhaseTimings, RequestResult};
 pub use router::Router;
+pub use service::{
+    PreRanker, ScoreRequest, ScoreResponse, ScoreTrace, ScoredItem,
+    ServeError, StageSpan,
+};

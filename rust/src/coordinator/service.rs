@@ -1,0 +1,461 @@
+//! Typed serving API (DESIGN.md §10): the request/response contract every
+//! entry point programs against — the HTTP surface, the load runner, the
+//! A/B harness, the experiment drivers, the benches and the examples.
+//!
+//! The paper's claim is that ONE config-driven pipeline serves every
+//! Table-4 variant; the serving contract therefore lives here, independent
+//! of any concrete pipeline: [`ScoreRequest`] (builder: user, `top_k`,
+//! candidate override, deadline budget, trace flag) in, [`ScoreResponse`]
+//! (scored items, [`PhaseTimings`], variant + request id, optional
+//! per-stage trace) out, and a closed [`ServeError`] enum with a defined
+//! HTTP status mapping instead of `anyhow` leaking to callers.  Any
+//! pipeline that implements [`PreRanker`] plugs into every harness.
+
+use std::time::Duration;
+
+use crate::metrics::ServingMetrics;
+use crate::util::json::{Object, Value};
+
+use super::merger::PhaseTimings;
+
+/// One pre-ranking request.  Construct with [`ScoreRequest::user`] and
+/// chain `with_*` builders for the optional knobs:
+///
+/// ```ignore
+/// let resp = merger.score(
+///     ScoreRequest::user(42).with_top_k(10).with_trace(true),
+/// )?;
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ScoreRequest {
+    /// The user to pre-rank for (must be `< n_users`).
+    pub user: usize,
+    /// Caller-supplied request id, for in-process drivers (load runner,
+    /// A/B harness); must be `< 2^63` — the top half is the service's
+    /// auto-id space.  Not accepted on the wire: the HTTP surface lets
+    /// the service allocate, so remote clients can never alias the
+    /// async-variant cache keys derived from it.
+    pub request_id: Option<u64>,
+    /// Result-size override; defaults to the pipeline's configured top-K.
+    /// Clamped to the candidate count, rejected when 0.
+    pub top_k: Option<usize>,
+    /// Candidate-list override: score exactly these items instead of
+    /// running the retrieval stage (re-ranking / debugging hook).
+    pub candidates: Option<Vec<u32>>,
+    /// End-to-end latency budget; exceeding it fails the request with
+    /// [`ServeError::DeadlineExceeded`] instead of returning late.
+    pub deadline: Option<Duration>,
+    /// Attach a per-stage [`ScoreTrace`] to the response.
+    pub trace: bool,
+}
+
+impl ScoreRequest {
+    pub fn user(user: usize) -> ScoreRequest {
+        ScoreRequest {
+            user,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_request_id(mut self, id: u64) -> Self {
+        self.request_id = Some(id);
+        self
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = Some(k);
+        self
+    }
+
+    pub fn with_candidates(mut self, candidates: Vec<u32>) -> Self {
+        self.candidates = Some(candidates);
+        self
+    }
+
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Parse one request object from a `POST /v1/score` JSON body.
+    pub fn from_json(v: &Value) -> Result<ScoreRequest, ServeError> {
+        let o = v.as_obj().ok_or_else(|| {
+            ServeError::BadRequest("body must be a JSON object".into())
+        })?;
+        let mut req = Self::options_from_json(o)?;
+        req.user = parse_user(o.get("user").ok_or_else(|| {
+            ServeError::BadRequest("missing \"user\"".into())
+        })?)?;
+        Ok(req)
+    }
+
+    /// Parse only the optional knobs (everything except `user`/`users`) —
+    /// the shared template of a batch body.
+    pub fn options_from_json(o: &Object) -> Result<ScoreRequest, ServeError> {
+        for (key, _) in o.iter() {
+            if !matches!(
+                key,
+                "user" | "users" | "top_k" | "candidates" | "deadline_ms"
+                    | "trace"
+            ) {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown field {key:?}"
+                )));
+            }
+        }
+        let mut req = ScoreRequest::default();
+        if let Some(v) = o.get("top_k") {
+            let k = v
+                .as_f64()
+                .filter(|x| *x >= 1.0 && x.fract() == 0.0)
+                .ok_or_else(|| {
+                    ServeError::BadRequest(
+                        "\"top_k\" must be a positive integer".into(),
+                    )
+                })?;
+            req.top_k = Some(k as usize);
+        }
+        if let Some(v) = o.get("deadline_ms") {
+            let ms = v.as_f64().filter(|x| *x > 0.0).ok_or_else(|| {
+                ServeError::BadRequest(
+                    "\"deadline_ms\" must be a positive number".into(),
+                )
+            })?;
+            req.deadline = Some(Duration::from_secs_f64(ms / 1e3));
+        }
+        if let Some(v) = o.get("trace") {
+            req.trace = v.as_bool().ok_or_else(|| {
+                ServeError::BadRequest("\"trace\" must be a boolean".into())
+            })?;
+        }
+        if let Some(v) = o.get("candidates") {
+            let arr = v.as_arr().ok_or_else(|| {
+                ServeError::BadRequest(
+                    "\"candidates\" must be an array of item ids".into(),
+                )
+            })?;
+            if arr.is_empty() {
+                return Err(ServeError::BadRequest(
+                    "\"candidates\" must be non-empty".into(),
+                ));
+            }
+            let mut ids = Vec::with_capacity(arr.len());
+            for e in arr {
+                let id = e
+                    .as_f64()
+                    .filter(|x| {
+                        *x >= 0.0
+                            && x.fract() == 0.0
+                            && *x <= u32::MAX as f64
+                    })
+                    .ok_or_else(|| {
+                        ServeError::BadRequest(
+                            "\"candidates\" entries must be item ids".into(),
+                        )
+                    })?;
+                ids.push(id as u32);
+            }
+            req.candidates = Some(ids);
+        }
+        Ok(req)
+    }
+}
+
+fn parse_user(v: &Value) -> Result<usize, ServeError> {
+    v.as_f64()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as usize)
+        .ok_or_else(|| {
+            ServeError::BadRequest(
+                "\"user\" must be a non-negative integer".into(),
+            )
+        })
+}
+
+/// One scored candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoredItem {
+    pub item: u32,
+    pub score: f32,
+}
+
+/// One stage of the request lifecycle, for traced requests.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSpan {
+    pub stage: &'static str,
+    pub elapsed: Duration,
+}
+
+/// Per-stage breakdown attached to a response when the request asked for
+/// `trace`.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreTrace {
+    pub n_candidates: usize,
+    pub n_batches: usize,
+    pub stages: Vec<StageSpan>,
+}
+
+/// The result of one pre-ranking request.
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    pub request_id: u64,
+    pub user: usize,
+    /// Pipeline variant that served the request (Table-4 row name).
+    pub variant: String,
+    /// Top-K scored items, descending score.
+    pub items: Vec<ScoredItem>,
+    pub timings: PhaseTimings,
+    pub trace: Option<ScoreTrace>,
+}
+
+impl ScoreResponse {
+    /// The wire shape of `GET/POST /v1/score` responses.
+    pub fn to_json(&self) -> Value {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let mut o = Object::new();
+        o.insert("request_id", self.request_id);
+        o.insert("user", self.user);
+        o.insert("variant", self.variant.as_str());
+        o.insert("total_ms", ms(self.timings.total));
+        o.insert("retrieval_ms", ms(self.timings.retrieval));
+        if let Some(ua) = self.timings.user_async {
+            o.insert("user_async_ms", ms(ua));
+        }
+        o.insert("prerank_ms", ms(self.timings.prerank));
+        let items: Vec<Value> = self
+            .items
+            .iter()
+            .map(|s| {
+                let mut e = Object::new();
+                e.insert("item", s.item as u64);
+                e.insert("score", s.score as f64);
+                Value::Obj(e)
+            })
+            .collect();
+        o.insert("items", Value::Arr(items));
+        if let Some(trace) = &self.trace {
+            let mut t = Object::new();
+            t.insert("n_candidates", trace.n_candidates);
+            t.insert("n_batches", trace.n_batches);
+            let stages: Vec<Value> = trace
+                .stages
+                .iter()
+                .map(|s| {
+                    let mut e = Object::new();
+                    e.insert("stage", s.stage);
+                    e.insert("ms", ms(s.elapsed));
+                    Value::Obj(e)
+                })
+                .collect();
+            t.insert("stages", Value::Arr(stages));
+            o.insert("trace", Value::Obj(t));
+        }
+        Value::Obj(o)
+    }
+}
+
+/// Closed error set of the request path, with a defined HTTP mapping —
+/// callers match on causes instead of string-probing `anyhow` chains.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum ServeError {
+    #[error("unknown user {0}")]
+    UnknownUser(usize),
+    #[error(
+        "deadline exceeded: {elapsed_ms:.2}ms elapsed of a \
+         {budget_ms:.2}ms budget"
+    )]
+    DeadlineExceeded { budget_ms: f64, elapsed_ms: f64 },
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    #[error("overloaded: {0}")]
+    Overloaded(String),
+    #[error("internal: {0}")]
+    Internal(String),
+}
+
+impl ServeError {
+    /// The status a `/v1` endpoint answers with for this error.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::UnknownUser(_) => 404,
+            ServeError::DeadlineExceeded { .. } => 504,
+            ServeError::BadRequest(_) => 400,
+            ServeError::Overloaded(_) => 429,
+            ServeError::Internal(_) => 500,
+        }
+    }
+}
+
+/// Pipeline internals (runtime, stores, nearline) still speak `anyhow`;
+/// whatever escapes them surfaces as an opaque `Internal`.
+impl From<anyhow::Error> for ServeError {
+    fn from(e: anyhow::Error) -> Self {
+        ServeError::Internal(format!("{e:#}"))
+    }
+}
+
+/// A pre-ranking service: one config-driven pipeline serving the typed
+/// contract.  Implemented by [`super::Merger`] for every Table-4 variant
+/// (the sequential baseline is just the `base` configuration); harnesses
+/// and the HTTP surface accept any implementation.
+pub trait PreRanker: Send + Sync {
+    /// Serve one request end to end.
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError>;
+
+    /// Name of the pipeline variant this service runs.
+    fn variant_name(&self) -> &str;
+
+    /// Number of known users; `user >= n_users()` is `UnknownUser`.
+    fn n_users(&self) -> usize;
+
+    /// Shared serving metrics (drives `/metrics` and load reports).
+    fn metrics(&self) -> &ServingMetrics;
+
+    /// §5.3 accounting: extra resident bytes vs the sequential baseline.
+    fn extra_storage_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_knobs() {
+        let req = ScoreRequest::user(7)
+            .with_request_id(99)
+            .with_top_k(5)
+            .with_candidates(vec![1, 2, 3])
+            .with_deadline(Duration::from_millis(50))
+            .with_trace(true);
+        assert_eq!(req.user, 7);
+        assert_eq!(req.request_id, Some(99));
+        assert_eq!(req.top_k, Some(5));
+        assert_eq!(req.candidates.as_deref(), Some(&[1, 2, 3][..]));
+        assert_eq!(req.deadline, Some(Duration::from_millis(50)));
+        assert!(req.trace);
+    }
+
+    #[test]
+    fn defaults_are_absent() {
+        let req = ScoreRequest::user(3);
+        assert!(req.request_id.is_none());
+        assert!(req.top_k.is_none());
+        assert!(req.candidates.is_none());
+        assert!(req.deadline.is_none());
+        assert!(!req.trace);
+    }
+
+    #[test]
+    fn http_status_mapping() {
+        assert_eq!(ServeError::UnknownUser(1).http_status(), 404);
+        assert_eq!(
+            ServeError::DeadlineExceeded {
+                budget_ms: 1.0,
+                elapsed_ms: 2.0
+            }
+            .http_status(),
+            504
+        );
+        assert_eq!(ServeError::BadRequest("x".into()).http_status(), 400);
+        assert_eq!(ServeError::Overloaded("x".into()).http_status(), 429);
+        assert_eq!(ServeError::Internal("x".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn from_json_parses_full_request() {
+        let v = Value::parse(
+            r#"{"user": 3, "top_k": 5, "trace": true,
+                "candidates": [4, 5, 6], "deadline_ms": 50}"#,
+        )
+        .unwrap();
+        let req = ScoreRequest::from_json(&v).unwrap();
+        assert_eq!(req.user, 3);
+        assert_eq!(req.top_k, Some(5));
+        assert!(req.trace);
+        assert_eq!(req.candidates.as_deref(), Some(&[4, 5, 6][..]));
+        assert_eq!(req.deadline, Some(Duration::from_millis(50)));
+        // The wire cannot pick cache-key-bearing ids; the service does.
+        assert_eq!(req.request_id, None);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let bad = [
+            r#"{}"#,                          // missing user
+            r#"{"user": "three"}"#,           // non-numeric user
+            r#"{"user": 1.5}"#,               // fractional user
+            r#"{"user": -1}"#,                // negative user
+            r#"{"user": 1, "top_k": 0}"#,     // zero top_k
+            r#"{"user": 1, "top_k": "all"}"#, // non-numeric top_k
+            r#"{"user": 1, "bogus": 2}"#,     // unknown field
+            r#"{"user": 1, "request_id": 5}"#, // ids are server-allocated
+            r#"{"user": 1, "trace": "yes"}"#, // non-bool trace
+            r#"{"user": 1, "candidates": 3}"#, // non-array candidates
+            r#"{"user": 1, "candidates": []}"#, // empty override
+            r#"{"user": 1, "candidates": [-2]}"#, // negative item id
+            r#"{"user": 1, "deadline_ms": 0}"#, // zero budget
+            r#"[1, 2]"#,                      // not an object
+        ];
+        for src in bad {
+            let v = Value::parse(src).unwrap();
+            let e = ScoreRequest::from_json(&v).unwrap_err();
+            assert!(
+                matches!(e, ServeError::BadRequest(_)),
+                "{src} -> {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn response_json_round_trips() {
+        let resp = ScoreResponse {
+            request_id: 7,
+            user: 3,
+            variant: "aif".into(),
+            items: vec![
+                ScoredItem {
+                    item: 10,
+                    score: 0.9,
+                },
+                ScoredItem {
+                    item: 11,
+                    score: 0.8,
+                },
+            ],
+            timings: PhaseTimings {
+                total: Duration::from_millis(20),
+                retrieval: Duration::from_millis(12),
+                user_async: Some(Duration::from_millis(5)),
+                prerank: Duration::from_millis(8),
+            },
+            trace: Some(ScoreTrace {
+                n_candidates: 512,
+                n_batches: 2,
+                stages: vec![StageSpan {
+                    stage: "prerank",
+                    elapsed: Duration::from_millis(8),
+                }],
+            }),
+        };
+        let v = Value::parse(&resp.to_json().to_string()).unwrap();
+        assert_eq!(v.req("user").as_usize(), Some(3));
+        assert_eq!(v.req("variant").as_str(), Some("aif"));
+        assert_eq!(v.req("items").as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.req("items").as_arr().unwrap()[0].req("item").as_usize(),
+            Some(10)
+        );
+        assert_eq!(
+            v.req("trace").req("n_candidates").as_usize(),
+            Some(512)
+        );
+        assert!(v.req("user_async_ms").as_f64().unwrap() > 4.0);
+    }
+}

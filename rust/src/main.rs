@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   quickstart                     one request through the full AIF stack
-//!   serve    [--addr A]            HTTP server (/score, /metrics, /healthz)
+//!   serve    [--addr A]            HTTP server (/v1/score, /metrics, /healthz)
 //!   replay   [--requests N]        closed-loop load run, prints a report
 //!   abtest   [--all-variants]      online A/B simulation (Table 2 online)
 //!   nearline                       nearline update-pipeline demo
@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, ScoreRequest};
 use aif::nearline::UpdateEvent;
 use aif::util::cli::Args;
 use aif::workload::{experiments, runner};
@@ -67,19 +67,23 @@ fn artifacts_dir(args: &Args) -> String {
     args.str_or("artifacts", "artifacts")
 }
 
-fn build_merger(args: &Args) -> anyhow::Result<Arc<Merger>> {
+fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
     let cfg = match args.get("config") {
         Some(path) => ServingConfig::from_file(path)?,
         None => ServingConfig::default(),
     };
-    let cfg = ServingConfig {
+    Ok(ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
         n_rtp_workers: args.usize_or("rtp-workers", cfg.n_rtp_workers),
+        n_http_workers: args.usize_or("http-workers", cfg.n_http_workers),
         n_candidates: args.usize_or("candidates", cfg.n_candidates),
         top_k: args.usize_or("top-k", cfg.top_k),
         ..cfg
-    };
+    })
+}
+
+fn build_merger_from(cfg: ServingConfig) -> anyhow::Result<Arc<Merger>> {
     eprintln!(
         "bringing up variant={} (rtp={}, candidates={}) ...",
         cfg.variant, cfg.n_rtp_workers, cfg.n_candidates
@@ -87,19 +91,24 @@ fn build_merger(args: &Args) -> anyhow::Result<Arc<Merger>> {
     Ok(Arc::new(Merger::build(cfg)?))
 }
 
+fn build_merger(args: &Args) -> anyhow::Result<Arc<Merger>> {
+    build_merger_from(resolve_cfg(args)?)
+}
+
 fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
     let merger = build_merger(args)?;
     let user = args.usize_or("user", 42);
-    let result = merger.handle(1, user)?;
+    let result =
+        merger.score(ScoreRequest::user(user).with_request_id(1))?;
     println!("\nTop-10 pre-ranked items for user {user}:");
-    for (rank, (item, score)) in result.top_k.iter().take(10).enumerate() {
+    for (rank, s) in result.items.iter().take(10).enumerate() {
         println!(
             "  #{:<3} item {:<6} score {:.4}  (oracle pCTR {:.4}, bid {:.2})",
             rank + 1,
-            item,
-            score,
-            merger.world.click_prob(user, *item),
-            merger.world.bid(*item)
+            s.item,
+            s.score,
+            merger.world.click_prob(user, s.item),
+            merger.world.bid(s.item)
         );
     }
     let t = result.timings;
@@ -117,11 +126,15 @@ fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let merger = build_merger(args)?;
+    let cfg = resolve_cfg(args)?;
+    let n_http_workers = cfg.n_http_workers;
+    let merger = build_merger_from(cfg)?;
     let addr = args.str_or("addr", "127.0.0.1:8787");
-    let server = aif::server::HttpServer::start(merger, &addr)?;
+    let server =
+        aif::server::HttpServer::start(merger, &addr, n_http_workers)?;
     println!(
-        "serving on http://{}  (try /score?user=42, /metrics, /healthz)",
+        "serving on http://{}  (try /v1/score?user=42&top_k=10, /metrics, \
+         /healthz)",
         server.addr
     );
     println!("Ctrl-C to stop.");

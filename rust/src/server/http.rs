@@ -1,19 +1,43 @@
-//! Minimal HTTP/1.1 server (no hyper in the vendored set): `/healthz`,
-//! `/metrics` (JSON snapshot) and `/score?user=<id>` (serve one request
-//! through the Merger).  Thread-per-connection over `TcpListener` — the
-//! load path in this repo is in-process; the HTTP face exists for
-//! operability and the `aif serve` subcommand.
+//! Versioned HTTP/1.1 surface over any [`PreRanker`] (no hyper in the
+//! vendored set; DESIGN.md §10.4):
+//!
+//! * `GET  /healthz` — liveness.
+//! * `GET  /metrics` — JSON metrics snapshot.
+//! * `GET  /v1/score?user=<id>[&top_k=K][&trace=1][&deadline_ms=D]`
+//! * `POST /v1/score` — JSON `ScoreRequest` body; `{"users": [..]}`
+//!   batches share the optional knobs and answer `{"results": [..]}`.
+//!
+//! [`ServeError`] variants map to statuses via `ServeError::http_status`
+//! (404 unknown user, 504 deadline, 400 bad request, 429 overload, 500
+//! internal).  Malformed JSON is 400; a well-formed body whose shape is
+//! invalid at parse time is 422 (semantic validation inside the pipeline
+//! — e.g. an out-of-range candidate id — still maps through
+//! `http_status`, i.e. 400).  Connections are served by a bounded
+//! [`ThreadPool`] (`n_http_workers` in `ServingConfig`) instead of a
+//! thread per connection; past a queue-depth bound the accept loop sheds
+//! load with 429 instead of queueing unboundedly.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::Merger;
+use crate::coordinator::{PreRanker, ScoreRequest, ServeError};
 use crate::util::json::{Object, Value};
+use crate::util::threadpool::ThreadPool;
+
+/// Largest accepted request body, bytes.
+const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest `users` batch in one POST.
+const MAX_BATCH_USERS: usize = 256;
+/// Connections in flight per worker beyond which new ones get 429.
+const OVERLOAD_QUEUE_FACTOR: usize = 8;
+/// Socket read/write timeout: a stalled client can hold a pool worker
+/// for at most this long (and can never wedge shutdown joins).
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 pub struct HttpServer {
     pub addr: String,
@@ -23,26 +47,45 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind and serve in a background thread.  `addr` like "127.0.0.1:0"
-    /// (port 0 = ephemeral; the bound address is in `.addr`).
-    pub fn start(merger: Arc<Merger>, addr: &str) -> Result<HttpServer> {
+    /// (port 0 = ephemeral; the bound address is in `.addr`).  Connection
+    /// handling runs on a pool of `n_workers` threads.
+    pub fn start(
+        ranker: Arc<dyn PreRanker>,
+        addr: &str,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let bound = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let started = Instant::now();
-        let req_ids = Arc::new(AtomicU64::new(1 << 32));
+        let n_workers = n_workers.max(1);
         let handle = std::thread::Builder::new()
             .name("aif-http".into())
             .spawn(move || {
+                let pool = ThreadPool::new(n_workers);
+                let overload_at = n_workers * OVERLOAD_QUEUE_FACTOR;
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let merger = Arc::clone(&merger);
-                            let req_ids = Arc::clone(&req_ids);
-                            std::thread::spawn(move || {
+                            if pool.in_flight() >= overload_at {
+                                // Shed load here in the accept thread —
+                                // never queue more than the pool can
+                                // drain promptly.
+                                let e = ServeError::Overloaded(format!(
+                                    "{} connections in flight",
+                                    pool.in_flight()
+                                ));
+                                shed(stream, &e);
+                                continue;
+                            }
+                            let ranker = Arc::clone(&ranker);
+                            pool.spawn(move || {
                                 let _ = handle_conn(
-                                    stream, &merger, &req_ids, started,
+                                    stream,
+                                    ranker.as_ref(),
+                                    started,
                                 );
                             });
                         }
@@ -50,13 +93,13 @@ impl HttpServer {
                             if e.kind()
                                 == std::io::ErrorKind::WouldBlock =>
                         {
-                            std::thread::sleep(
-                                std::time::Duration::from_millis(5),
-                            );
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(_) => break,
                     }
                 }
+                // `pool` drops here: in-flight connections drain, workers
+                // join.
             })?;
         Ok(HttpServer {
             addr: bound,
@@ -65,55 +108,84 @@ impl HttpServer {
         })
     }
 
-    pub fn shutdown(mut self) {
+    /// The one stop path shared by `shutdown` and `Drop`.
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
     }
 }
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
+}
+
+/// Overload path, run in the accept thread: best-effort and strictly
+/// non-blocking — overload must cost neither threads nor accept-loop
+/// stalls.  Drain whatever the client already buffered (usually the whole
+/// request, so the close doesn't RST the 429 away), write the canned
+/// reply, hang up.  A client that hasn't sent its request yet just gets
+/// the drop.
+fn shed(mut stream: TcpStream, e: &ServeError) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut sink = [0u8; 4096];
+    let _ = stream.read(&mut sink);
+    let _ = respond_error(&mut stream, e);
 }
 
 fn handle_conn(
     mut stream: TcpStream,
-    merger: &Arc<Merger>,
-    req_ids: &AtomicU64,
+    ranker: &dyn PreRanker,
     started: Instant,
 ) -> Result<()> {
     stream.set_nonblocking(false)?;
+    // A silent or trickling client may hold this worker for at most
+    // IO_TIMEOUT — it must never wedge the pool (or the shutdown joins).
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let target = parts.next().unwrap_or("/");
-    // Drain headers.
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+    // Drain headers, keeping Content-Length and Expect.
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
         if h == "\r\n" || h == "\n" || h.is_empty() {
             break;
         }
-    }
-    if method != "GET" {
-        return respond(&mut stream, 405, "text/plain", "method not allowed");
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("expect")
+                && value.trim().eq_ignore_ascii_case("100-continue")
+            {
+                expect_continue = true;
+            }
+        }
     }
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p, q),
-        None => (target, ""),
+        None => (target.as_str(), ""),
     };
-    match path {
-        "/healthz" => respond(&mut stream, 200, "text/plain", "ok"),
-        "/metrics" => {
-            let snap = merger.metrics.snapshot(started.elapsed());
+    match (method.as_str(), path) {
+        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
+        ("GET", "/metrics") => {
+            let snap = ranker.metrics().snapshot(started.elapsed());
             respond(
                 &mut stream,
                 200,
@@ -121,63 +193,271 @@ fn handle_conn(
                 &snap.to_string_pretty(),
             )
         }
-        "/score" => {
-            let user = query
-                .split('&')
-                .find_map(|kv| kv.strip_prefix("user="))
-                .and_then(|v| v.parse::<usize>().ok());
-            let Some(user) = user else {
-                return respond(
+        ("GET", "/v1/score") => match parse_query(query) {
+            Ok(req) => score_one(&mut stream, ranker, req),
+            Err(e) => respond_error(&mut stream, &e),
+        },
+        ("POST", "/v1/score") => {
+            if content_length == 0 {
+                return respond_err_msg(
                     &mut stream,
                     400,
-                    "text/plain",
-                    "missing user=<id>",
+                    "missing request body (Content-Length)",
+                );
+            }
+            if content_length > MAX_BODY_BYTES {
+                return respond_err_msg(
+                    &mut stream,
+                    413,
+                    "request body too large",
+                );
+            }
+            if expect_continue {
+                // Standards-following clients (curl on >~1KiB bodies)
+                // wait for this interim response before sending the body.
+                write!(stream, "HTTP/1.1 100 Continue\r\n\r\n")?;
+            }
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body)?;
+            let Ok(text) = String::from_utf8(body) else {
+                return respond_err_msg(
+                    &mut stream,
+                    400,
+                    "request body is not UTF-8",
                 );
             };
-            if user >= merger.world.n_users {
-                return respond(&mut stream, 404, "text/plain", "no such user");
-            }
-            let id = req_ids.fetch_add(1, Ordering::Relaxed);
-            match merger.handle(id, user) {
-                Ok(result) => {
-                    let mut o = Object::new();
-                    o.insert("user", user);
-                    o.insert(
-                        "total_ms",
-                        result.timings.total.as_secs_f64() * 1e3,
-                    );
-                    o.insert(
-                        "prerank_ms",
-                        result.timings.prerank.as_secs_f64() * 1e3,
-                    );
-                    let items: Vec<Value> = result
-                        .top_k
-                        .iter()
-                        .take(16)
-                        .map(|&(item, score)| {
-                            let mut e = Object::new();
-                            e.insert("item", item as u64);
-                            e.insert("score", score as f64);
-                            Value::Obj(e)
-                        })
-                        .collect();
-                    o.insert("top", Value::Arr(items));
-                    respond(
-                        &mut stream,
-                        200,
-                        "application/json",
-                        &Value::Obj(o).to_string_pretty(),
-                    )
-                }
-                Err(e) => respond(
+            match Value::parse(&text) {
+                Ok(v) => score_body(&mut stream, ranker, &v),
+                Err(e) => respond_err_msg(
                     &mut stream,
-                    500,
-                    "text/plain",
-                    &format!("error: {e:#}"),
+                    400,
+                    &format!("malformed JSON: {e}"),
                 ),
             }
         }
-        _ => respond(&mut stream, 404, "text/plain", "not found"),
+        (_, "/healthz") | (_, "/metrics") => {
+            respond_405(&mut stream, "GET")
+        }
+        (_, "/v1/score") => respond_405(&mut stream, "GET, POST"),
+        ("GET", "/score") => respond_err_msg(
+            &mut stream,
+            404,
+            "the unversioned /score endpoint is gone; use /v1/score?user=<id>",
+        ),
+        _ => respond_err_msg(&mut stream, 404, "not found"),
+    }
+}
+
+/// `GET /v1/score` query string -> typed request.
+fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
+    let mut user: Option<usize> = None;
+    let mut top_k: Option<usize> = None;
+    let mut deadline_ms: Option<f64> = None;
+    let mut trace = false;
+    for kv in query.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+        match k {
+            "user" => {
+                user = Some(v.parse().map_err(|_| {
+                    ServeError::BadRequest(format!("bad user {v:?}"))
+                })?)
+            }
+            "top_k" => {
+                let parsed: usize = v.parse().map_err(|_| {
+                    ServeError::BadRequest(format!("bad top_k {v:?}"))
+                })?;
+                if parsed == 0 {
+                    return Err(ServeError::BadRequest(
+                        "top_k must be >= 1".into(),
+                    ));
+                }
+                top_k = Some(parsed);
+            }
+            "deadline_ms" => {
+                let parsed: f64 = v.parse().map_err(|_| {
+                    ServeError::BadRequest(format!("bad deadline_ms {v:?}"))
+                })?;
+                if !(parsed > 0.0) {
+                    return Err(ServeError::BadRequest(
+                        "deadline_ms must be > 0".into(),
+                    ));
+                }
+                deadline_ms = Some(parsed);
+            }
+            "trace" => {
+                trace = match v {
+                    "1" | "true" => true,
+                    "0" | "false" => false,
+                    other => {
+                        return Err(ServeError::BadRequest(format!(
+                            "bad trace {other:?} (use 1/0/true/false)"
+                        )))
+                    }
+                }
+            }
+            other => {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown query param {other:?}"
+                )))
+            }
+        }
+    }
+    let user = user.ok_or_else(|| {
+        ServeError::BadRequest("missing user=<id>".into())
+    })?;
+    let mut req = ScoreRequest::user(user).with_trace(trace);
+    if let Some(k) = top_k {
+        req = req.with_top_k(k);
+    }
+    if let Some(ms) = deadline_ms {
+        req = req.with_deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    Ok(req)
+}
+
+/// Parsed `POST /v1/score` body: single request or `users` batch.
+fn score_body(
+    stream: &mut TcpStream,
+    ranker: &dyn PreRanker,
+    body: &Value,
+) -> Result<()> {
+    let Some(obj) = body.as_obj() else {
+        return respond_422(stream, "body must be a JSON object");
+    };
+    let Some(users_v) = obj.get("users") else {
+        // Single-request form.
+        return match ScoreRequest::from_json(body) {
+            Ok(req) => score_one(stream, ranker, req),
+            // The body parsed as JSON but its shape is invalid -> 422.
+            Err(e @ ServeError::BadRequest(_)) => {
+                respond_422(stream, &e.to_string())
+            }
+            Err(e) => respond_error(stream, &e),
+        };
+    };
+    // Batch form: {"users": [..], ...shared knobs...}.
+    let Some(users) = users_v.as_arr() else {
+        return respond_422(stream, "\"users\" must be an array");
+    };
+    if users.is_empty() {
+        return respond_422(stream, "\"users\" must be non-empty");
+    }
+    if users.len() > MAX_BATCH_USERS {
+        return respond_422(
+            stream,
+            &format!("at most {MAX_BATCH_USERS} users per batch"),
+        );
+    }
+    if obj.contains("user") {
+        return respond_422(stream, "give either \"user\" or \"users\"");
+    }
+    let template = match ScoreRequest::options_from_json(obj) {
+        Ok(t) => t,
+        Err(e) => return respond_422(stream, &e.to_string()),
+    };
+    let mut results: Vec<Value> = Vec::with_capacity(users.len());
+    for u in users {
+        let Some(user) = u
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+        else {
+            return respond_422(
+                stream,
+                "\"users\" entries must be non-negative integers",
+            );
+        };
+        let mut req = template.clone();
+        req.user = user;
+        // Per-user failures come back inline so one bad user doesn't void
+        // the whole batch.
+        results.push(match ranker.score(req) {
+            Ok(resp) => resp.to_json(),
+            Err(e) => error_json(&e),
+        });
+    }
+    let mut o = Object::new();
+    o.insert("results", Value::Arr(results));
+    respond(
+        stream,
+        200,
+        "application/json",
+        &Value::Obj(o).to_string_pretty(),
+    )
+}
+
+fn score_one(
+    stream: &mut TcpStream,
+    ranker: &dyn PreRanker,
+    req: ScoreRequest,
+) -> Result<()> {
+    match ranker.score(req) {
+        Ok(resp) => respond(
+            stream,
+            200,
+            "application/json",
+            &resp.to_json().to_string_pretty(),
+        ),
+        Err(e) => respond_error(stream, &e),
+    }
+}
+
+/// All error bodies share one JSON shape: `{"error": .., "status": ..}`.
+fn error_body(msg: &str, status: u16) -> Value {
+    let mut o = Object::new();
+    o.insert("error", msg);
+    o.insert("status", status as u64);
+    Value::Obj(o)
+}
+
+fn error_json(e: &ServeError) -> Value {
+    error_body(&e.to_string(), e.http_status())
+}
+
+fn respond_error(stream: &mut TcpStream, e: &ServeError) -> Result<()> {
+    respond_err_msg(stream, e.http_status(), &e.to_string())
+}
+
+fn respond_err_msg(
+    stream: &mut TcpStream,
+    status: u16,
+    msg: &str,
+) -> Result<()> {
+    respond(
+        stream,
+        status,
+        "application/json",
+        &error_body(msg, status).to_string_pretty(),
+    )
+}
+
+fn respond_422(stream: &mut TcpStream, msg: &str) -> Result<()> {
+    respond_err_msg(stream, 422, msg)
+}
+
+fn respond_405(stream: &mut TcpStream, allow: &str) -> Result<()> {
+    respond_with_headers(
+        stream,
+        405,
+        "application/json",
+        &[("Allow", allow)],
+        &error_body("method not allowed", 405).to_string_pretty(),
+    )
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
     }
 }
 
@@ -187,18 +467,79 @@ fn respond(
     ctype: &str,
     body: &str,
 ) -> Result<()> {
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        _ => "Internal Server Error",
-    };
-    write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    respond_with_headers(stream, status, ctype, &[], body)
+}
+
+fn respond_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        reason_phrase(status),
         body.len()
-    )?;
+    );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    write!(stream, "{head}\r\n{body}")?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_parsing() {
+        let req = parse_query("user=3&top_k=5&trace=1").unwrap();
+        assert_eq!(req.user, 3);
+        assert_eq!(req.top_k, Some(5));
+        assert!(req.trace);
+
+        let req = parse_query("user=0").unwrap();
+        assert_eq!(req.user, 0);
+        assert!(req.top_k.is_none());
+        assert!(!req.trace);
+
+        let req = parse_query("user=1&deadline_ms=250").unwrap();
+        assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+
+        for bad in [
+            "",
+            "top_k=5",
+            "user=x",
+            "user=1&top_k=0",
+            "user=1&top_k=ten",
+            "user=1&deadline_ms=-5",
+            "user=1&trace=yes",
+            "user=1&frobnicate=2",
+        ] {
+            assert!(parse_query(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn reason_phrases_cover_served_statuses() {
+        for (status, phrase) in [
+            (200, "OK"),
+            (400, "Bad Request"),
+            (404, "Not Found"),
+            (405, "Method Not Allowed"),
+            (413, "Payload Too Large"),
+            (422, "Unprocessable Entity"),
+            (429, "Too Many Requests"),
+            (500, "Internal Server Error"),
+            (504, "Gateway Timeout"),
+        ] {
+            assert_eq!(reason_phrase(status), phrase);
+        }
+    }
 }

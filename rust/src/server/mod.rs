@@ -1,4 +1,5 @@
-//! Minimal HTTP face for the serving stack (`aif serve`).
+//! Versioned HTTP face for the serving stack (`aif serve`): `/healthz`,
+//! `/metrics` and `/v1/score` over any [`crate::coordinator::PreRanker`].
 
 pub mod http;
 

@@ -67,6 +67,12 @@ impl ThreadPool {
             .expect("pool worker died");
     }
 
+    /// Jobs spawned but not yet finished (queued + running) — the
+    /// backpressure signal for bounded-concurrency callers.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
     /// Busy-wait (with yield) until every spawned job has finished.
     pub fn wait_idle(&self) {
         while self.in_flight.load(Ordering::Acquire) != 0 {

@@ -10,7 +10,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::Merger;
+use crate::coordinator::{PreRanker, ScoreRequest};
+use crate::features::World;
 use crate::util::rng::Pcg64;
 
 /// Per-request online sample.
@@ -49,14 +50,16 @@ impl ArmReport {
 /// Run a multi-arm A/B test.  `arms[0]` is the control.  `slate` is how
 /// many of the pre-ranked top-K are displayed (the downstream stages are
 /// identity here — pre-rank quality differences flow straight to CTR).
-pub fn run(
-    arms: &[(&str, Arc<Merger>)],
+/// `world` is the click/revenue oracle the arms are judged against — a
+/// simulator concern, which is why it isn't part of the serving trait.
+pub fn run<P: PreRanker + ?Sized>(
+    world: &World,
+    arms: &[(&str, Arc<P>)],
     n_requests: u64,
     slate: usize,
     seed: u64,
 ) -> Result<Vec<ArmReport>> {
     assert!(!arms.is_empty());
-    let world = Arc::clone(&arms[0].1.world);
     let mut per_arm: Vec<Vec<Sample>> =
         (0..arms.len()).map(|_| Vec::new()).collect();
     let mut rt_sum: Vec<f64> = vec![0.0; arms.len()];
@@ -68,19 +71,20 @@ pub fn run(
         let arm = (crate::cache::RequestKey::new(0, &format!("u{user}")).0
             as usize)
             % arms.len();
-        let merger = &arms[arm].1;
-        let result = merger.handle(id, user)?;
+        let ranker = &arms[arm].1;
+        let result =
+            ranker.score(ScoreRequest::user(user).with_request_id(id))?;
         rt_sum[arm] += result.timings.total.as_secs_f64();
 
         // Display the slate; oracle user clicks.
-        let shown = &result.top_k[..slate.min(result.top_k.len())];
+        let shown = &result.items[..slate.min(result.items.len())];
         let mut clicks = 0u32;
         let mut revenue = 0.0f32;
-        for &(item, _) in shown {
-            let p = world.click_prob(user, item);
+        for s in shown {
+            let p = world.click_prob(user, s.item);
             if rng.chance(p as f64) {
                 clicks += 1;
-                revenue += world.bid(item);
+                revenue += world.bid(s.item);
             }
         }
         per_arm[arm].push(Sample {

@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::{ServingConfig, SimMode};
-use crate::coordinator::Merger;
+use crate::coordinator::{Merger, PreRanker};
 use crate::features::World;
 use crate::lsh::Hasher;
 use crate::nearline::{N2oTable, NearlineWorker};
@@ -68,16 +68,16 @@ pub fn run_table4(artifacts_dir: &str, scale: ExpScale) -> Result<String> {
     for (name, cfg) in ServingConfig::table4_rows() {
         let cfg = cfg_with_dir(cfg, artifacts_dir);
         log::info!("table4: bringing up {name}");
-        let merger = Arc::new(Merger::build(cfg)?);
+        let ranker: Arc<dyn PreRanker> = Arc::new(Merger::build(cfg)?);
         let load = runner::closed_loop(
             name,
-            &merger,
+            &ranker,
             scale.requests,
             scale.clients,
             42,
         );
-        let (mq, _) = runner::max_qps(&merger, scale.qps_step_requests, 43);
-        let extra = merger.extra_storage_bytes() > (1 << 20);
+        let (mq, _) = runner::max_qps(&ranker, scale.qps_step_requests, 43);
+        let extra = ranker.extra_storage_bytes() > (1 << 20);
         println!(
             "{}  maxQPS {:8.2}  extra_storage {}",
             load.render(),
@@ -487,10 +487,12 @@ pub fn run_abtest(
         log::info!("abtest: bringing up {display}");
         mergers.push((display, Arc::new(Merger::build(cfg)?)));
     }
-    let arms: Vec<(&str, Arc<Merger>)> = mergers
+    let world = Arc::clone(&mergers[0].1.world);
+    let arms: Vec<(&str, Arc<dyn PreRanker>)> = mergers
         .iter()
-        .map(|(n, m)| (*n, Arc::clone(m)))
+        .map(|(n, m)| (*n, Arc::clone(m) as Arc<dyn PreRanker>))
         .collect();
-    let reports = super::abtest::run(&arms, n_requests, slate, 4242)?;
+    let reports =
+        super::abtest::run(&world, &arms, n_requests, slate, 4242)?;
     Ok(super::abtest::render(&reports))
 }

@@ -1,11 +1,11 @@
-//! Load generation: closed-loop and open-loop drivers over a [`Merger`],
-//! plus the saturation sweep that measures maxQPS (Table 4).
+//! Load generation: closed-loop and open-loop drivers over any
+//! [`PreRanker`], plus the saturation sweep that measures maxQPS (Table 4).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Merger;
+use crate::coordinator::{PreRanker, ScoreRequest};
 use crate::util::rng::{Pcg64, Zipf};
 
 /// Aggregate results of one load run.
@@ -62,21 +62,21 @@ impl UserSampler {
 /// Closed-loop run: `n_clients` threads each issue requests back-to-back
 /// until `n_requests` total are served.  Throughput at high `n_clients`
 /// approaches maxQPS.
-pub fn closed_loop(
+pub fn closed_loop<P: PreRanker + ?Sized + 'static>(
     name: &str,
-    merger: &Arc<Merger>,
+    ranker: &Arc<P>,
     n_requests: u64,
     n_clients: usize,
     seed: u64,
 ) -> LoadReport {
-    merger.metrics.reset();
+    ranker.metrics().reset();
     let issued = Arc::new(AtomicU64::new(0));
     let errors = Arc::new(AtomicU64::new(0));
-    let sampler = Arc::new(UserSampler::new(merger.world.n_users));
+    let sampler = Arc::new(UserSampler::new(ranker.n_users()));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
-        let merger = Arc::clone(merger);
+        let ranker = Arc::clone(ranker);
         let issued = Arc::clone(&issued);
         let errors = Arc::clone(&errors);
         let sampler = Arc::clone(&sampler);
@@ -88,7 +88,8 @@ pub fn closed_loop(
                     break;
                 }
                 let user = sampler.sample(&mut rng);
-                if merger.handle(id, user).is_err() {
+                let req = ScoreRequest::user(user).with_request_id(id);
+                if ranker.score(req).is_err() {
                     errors.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -98,21 +99,21 @@ pub fn closed_loop(
         let _ = h.join();
     }
     let wall = t0.elapsed();
-    report(name, merger, n_requests, errors.load(Ordering::Relaxed), wall)
+    report(name, ranker, n_requests, errors.load(Ordering::Relaxed), wall)
 }
 
 /// Open-loop run at a fixed arrival rate (Poisson): measures latency at a
 /// target load without coordinated omission.
-pub fn open_loop(
+pub fn open_loop<P: PreRanker + ?Sized + 'static>(
     name: &str,
-    merger: &Arc<Merger>,
+    ranker: &Arc<P>,
     n_requests: u64,
     rate_qps: f64,
     seed: u64,
 ) -> LoadReport {
-    merger.metrics.reset();
+    ranker.metrics().reset();
     let errors = Arc::new(AtomicU64::new(0));
-    let sampler = UserSampler::new(merger.world.n_users);
+    let sampler = UserSampler::new(ranker.n_users());
     let mut rng = Pcg64::with_stream(seed, 0);
     let t0 = Instant::now();
     let mut next_at = t0;
@@ -126,10 +127,11 @@ pub fn open_loop(
             std::thread::sleep(next_at - now);
         }
         let user = sampler.sample(&mut rng);
-        let merger = Arc::clone(merger);
+        let ranker = Arc::clone(ranker);
         let errors = Arc::clone(&errors);
         handles.push(std::thread::spawn(move || {
-            if merger.handle(id, user).is_err() {
+            let req = ScoreRequest::user(user).with_request_id(id);
+            if ranker.score(req).is_err() {
                 errors.fetch_add(1, Ordering::Relaxed);
             }
         }));
@@ -144,13 +146,13 @@ pub fn open_loop(
         let _ = h.join();
     }
     let wall = t0.elapsed();
-    report(name, merger, n_requests, errors.load(Ordering::Relaxed), wall)
+    report(name, ranker, n_requests, errors.load(Ordering::Relaxed), wall)
 }
 
 /// maxQPS: closed-loop saturation with a client ladder; returns the peak
 /// observed throughput (the paper's maxQPS column).
-pub fn max_qps(
-    merger: &Arc<Merger>,
+pub fn max_qps<P: PreRanker + ?Sized + 'static>(
+    ranker: &Arc<P>,
     requests_per_step: u64,
     seed: u64,
 ) -> (f64, Vec<LoadReport>) {
@@ -159,7 +161,7 @@ pub fn max_qps(
     for clients in [2usize, 4, 8, 16] {
         let r = closed_loop(
             &format!("clients={clients}"),
-            merger,
+            ranker,
             requests_per_step,
             clients,
             seed,
@@ -175,14 +177,14 @@ pub fn max_qps(
     (best, reports)
 }
 
-fn report(
+fn report<P: PreRanker + ?Sized>(
     name: &str,
-    merger: &Arc<Merger>,
+    ranker: &Arc<P>,
     n_requests: u64,
     n_errors: u64,
     wall: Duration,
 ) -> LoadReport {
-    let m = &merger.metrics;
+    let m = ranker.metrics();
     LoadReport {
         name: name.to_string(),
         n_requests,
@@ -194,6 +196,6 @@ fn report(
         avg_prerank_ms: m.prerank_rt.mean() * 1e3,
         p99_prerank_ms: m.prerank_rt.percentile(99.0) * 1e3,
         avg_retrieval_ms: m.retrieval_rt.mean() * 1e3,
-        extra_storage_bytes: merger.extra_storage_bytes(),
+        extra_storage_bytes: ranker.extra_storage_bytes(),
     }
 }

@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use aif::cache::{RequestKey, UserVecCache};
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, ScoreRequest};
 use aif::features::LatencyModel;
 use aif::nearline::{N2oEntry, N2oTable};
 
@@ -102,10 +102,11 @@ fn merger_survives_concurrent_nearline_updates() {
         }
     });
     for id in 0..6u64 {
+        let user = (id as usize * 29) % merger.world.n_users;
         let r = merger
-            .handle(id, (id as usize * 29) % merger.world.n_users)
+            .score(ScoreRequest::user(user).with_request_id(id))
             .unwrap();
-        assert_eq!(r.top_k.len(), 64);
+        assert_eq!(r.items.len(), 64);
     }
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     updater.join().unwrap();

@@ -1,0 +1,301 @@
+//! Integration tests of the `/v1` HTTP surface.
+//!
+//! The server is generic over [`PreRanker`], so these run against a stub
+//! service — no artifacts required: status codes, reason phrases, JSON
+//! shapes and the `Allow` header are all asserted over a real TCP socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use aif::coordinator::{
+    PhaseTimings, PreRanker, ScoreRequest, ScoreResponse, ScoredItem,
+    ServeError,
+};
+use aif::metrics::ServingMetrics;
+use aif::server::HttpServer;
+use aif::util::json::Value;
+
+/// Stub pipeline: `N_CANDIDATES` fake candidates, descending scores.
+struct MockRanker {
+    metrics: ServingMetrics,
+}
+
+const N_USERS: usize = 100;
+const N_CANDIDATES: usize = 50;
+const DEFAULT_TOP_K: usize = 16;
+
+impl PreRanker for MockRanker {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        if req.user >= N_USERS {
+            return Err(ServeError::UnknownUser(req.user));
+        }
+        let top_k = req.top_k.unwrap_or(DEFAULT_TOP_K);
+        if top_k == 0 {
+            return Err(ServeError::BadRequest("top_k must be >= 1".into()));
+        }
+        let n = top_k.min(N_CANDIDATES);
+        let items = (0..n as u32)
+            .map(|i| ScoredItem {
+                item: i,
+                score: 1.0 - i as f32 * 0.001,
+            })
+            .collect();
+        let zero = Duration::ZERO;
+        let timings = PhaseTimings {
+            total: zero,
+            retrieval: zero,
+            user_async: None,
+            prerank: zero,
+        };
+        self.metrics.record_request(
+            timings.total,
+            timings.prerank,
+            timings.user_async,
+            timings.retrieval,
+        );
+        Ok(ScoreResponse {
+            request_id: req.request_id.unwrap_or(1),
+            user: req.user,
+            variant: "mock".into(),
+            items,
+            timings,
+            trace: None,
+        })
+    }
+
+    fn variant_name(&self) -> &str {
+        "mock"
+    }
+
+    fn n_users(&self) -> usize {
+        N_USERS
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+}
+
+fn start_server() -> HttpServer {
+    let ranker: Arc<dyn PreRanker> = Arc::new(MockRanker {
+        metrics: ServingMetrics::new(),
+    });
+    HttpServer::start(ranker, "127.0.0.1:0", 2).expect("server starts")
+}
+
+/// Send a raw request; return (status, header block, body).
+fn raw_request(addr: &str, raw: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(raw.as_bytes()).expect("write");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read");
+    let text = String::from_utf8(buf).expect("utf8 response");
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .unwrap_or((text.as_str(), ""));
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    (status, head.to_string(), body.to_string())
+}
+
+fn get(addr: &str, path: &str) -> (u16, String, String) {
+    raw_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn post(addr: &str, path: &str, body: &str) -> (u16, String, String) {
+    raw_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+#[test]
+fn healthz_and_metrics() {
+    let server = start_server();
+    let (status, _, body) = get(&server.addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok");
+
+    let (status, _, body) = get(&server.addr, "/metrics");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).expect("metrics is JSON");
+    assert!(v.get("requests").is_some());
+    assert!(v.get("qps").is_some());
+    server.shutdown();
+}
+
+#[test]
+fn score_happy_path_honors_top_k() {
+    let server = start_server();
+    let (status, _, body) = get(&server.addr, "/v1/score?user=3&top_k=4");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).expect("JSON body");
+    assert_eq!(v.req("user").as_usize(), Some(3));
+    assert_eq!(v.req("variant").as_str(), Some("mock"));
+    let items = v.req("items").as_arr().unwrap();
+    assert_eq!(items.len(), 4, "requested top-K is honored");
+    assert!(items[0].get("item").is_some());
+    assert!(items[0].get("score").is_some());
+
+    // Default top-K when the param is absent.
+    let (_, _, body) = get(&server.addr, "/v1/score?user=3");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("items").as_arr().unwrap().len(), DEFAULT_TOP_K);
+    server.shutdown();
+}
+
+#[test]
+fn top_k_clamps_to_candidate_count() {
+    let server = start_server();
+    let (status, _, body) =
+        get(&server.addr, "/v1/score?user=1&top_k=10000");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("items").as_arr().unwrap().len(), N_CANDIDATES);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_user_is_404() {
+    let server = start_server();
+    let (status, head, body) = get(&server.addr, "/v1/score?user=99999");
+    assert_eq!(status, 404);
+    assert!(head.starts_with("HTTP/1.1 404 Not Found"), "{head}");
+    let v = Value::parse(&body).expect("error body is JSON");
+    assert!(v.req("error").as_str().unwrap().contains("unknown user"));
+    server.shutdown();
+}
+
+#[test]
+fn bad_query_params_are_400() {
+    let server = start_server();
+    for path in [
+        "/v1/score",
+        "/v1/score?user=abc",
+        "/v1/score?user=1&top_k=0",
+        "/v1/score?user=1&nope=2",
+    ] {
+        let (status, _, _) = get(&server.addr, path);
+        assert_eq!(status, 400, "{path}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn post_single_and_batch() {
+    let server = start_server();
+    let (status, _, body) =
+        post(&server.addr, "/v1/score", r#"{"user": 1, "top_k": 2}"#);
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("items").as_arr().unwrap().len(), 2);
+
+    // Batch: knobs are shared; per-user failures come back inline.
+    let (status, _, body) = post(
+        &server.addr,
+        "/v1/score",
+        r#"{"users": [1, 2, 99999], "top_k": 1}"#,
+    );
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).unwrap();
+    let results = v.req("results").as_arr().unwrap();
+    assert_eq!(results.len(), 3);
+    assert_eq!(results[0].req("items").as_arr().unwrap().len(), 1);
+    assert_eq!(results[1].req("user").as_usize(), Some(2));
+    assert!(results[2].get("error").is_some(), "bad user fails inline");
+    assert_eq!(results[2].req("status").as_usize(), Some(404));
+    server.shutdown();
+}
+
+#[test]
+fn malformed_body_is_400_and_bad_shape_is_422() {
+    let server = start_server();
+    let (status, _, body) = post(&server.addr, "/v1/score", "{not json");
+    assert_eq!(status, 400);
+    assert!(body.contains("malformed JSON"));
+
+    // Parses as JSON, but the shape is invalid -> 422 with the right
+    // reason phrase (previously mislabeled "Internal Server Error").
+    let (status, head, _) =
+        post(&server.addr, "/v1/score", r#"{"user": "three"}"#);
+    assert_eq!(status, 422);
+    assert!(
+        head.starts_with("HTTP/1.1 422 Unprocessable Entity"),
+        "{head}"
+    );
+
+    let (status, _, _) =
+        post(&server.addr, "/v1/score", r#"{"users": []}"#);
+    assert_eq!(status, 422);
+    server.shutdown();
+}
+
+#[test]
+fn unsupported_methods_are_405_with_allow() {
+    let server = start_server();
+    let (status, head, _) = raw_request(
+        &server.addr,
+        "DELETE /v1/score HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    assert!(
+        head.starts_with("HTTP/1.1 405 Method Not Allowed"),
+        "{head}"
+    );
+    let allow = head
+        .lines()
+        .find(|l| l.to_ascii_lowercase().starts_with("allow:"))
+        .expect("Allow header present");
+    assert!(allow.contains("GET") && allow.contains("POST"), "{allow}");
+
+    let (status, head, _) = raw_request(
+        &server.addr,
+        "POST /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+         Connection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    let allow = head
+        .lines()
+        .find(|l| l.to_ascii_lowercase().starts_with("allow:"))
+        .expect("Allow header present");
+    assert!(allow.contains("GET") && !allow.contains("POST"), "{allow}");
+    server.shutdown();
+}
+
+#[test]
+fn unversioned_score_is_gone_and_unknown_paths_404() {
+    let server = start_server();
+    let (status, _, body) = get(&server.addr, "/score?user=1");
+    assert_eq!(status, 404);
+    assert!(body.contains("/v1/score"), "points at the new surface");
+    let (status, _, _) = get(&server.addr, "/nope");
+    assert_eq!(status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn metrics_count_served_requests() {
+    let server = start_server();
+    for _ in 0..3 {
+        let (status, _, _) = get(&server.addr, "/v1/score?user=1");
+        assert_eq!(status, 200);
+    }
+    let (_, _, body) = get(&server.addr, "/metrics");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("requests").as_usize(), Some(3));
+    server.shutdown();
+}

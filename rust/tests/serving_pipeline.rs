@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::coordinator::{Merger, ScoreRequest, ServeError};
 use aif::features::LatencyModel;
 
 fn have_artifacts() -> bool {
@@ -41,14 +41,22 @@ fn aif_pipeline_serves_requests() {
     let merger =
         Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
     for id in 0..4u64 {
-        let r = merger.handle(id, (id as usize * 37) % merger.world.n_users)
+        let user = (id as usize * 37) % merger.world.n_users;
+        let r = merger
+            .score(ScoreRequest::user(user).with_request_id(id))
             .unwrap();
-        assert_eq!(r.top_k.len(), 64);
+        assert_eq!(r.items.len(), 64);
+        assert_eq!(r.user, user);
+        assert_eq!(r.request_id, id);
+        assert_eq!(r.variant, "aif");
         // Scores sorted descending, all probabilities.
-        for w in r.top_k.windows(2) {
-            assert!(w[0].1 >= w[1].1);
+        for w in r.items.windows(2) {
+            assert!(w[0].score >= w[1].score);
         }
-        assert!(r.top_k.iter().all(|&(_, s)| (0.0..=1.0).contains(&s)));
+        assert!(r
+            .items
+            .iter()
+            .all(|s| (0.0..=1.0).contains(&s.score)));
         // Async phase ran and overlapped with retrieval.
         assert!(r.timings.user_async.is_some());
     }
@@ -67,8 +75,10 @@ fn base_pipeline_is_sequential() {
     }
     let merger =
         Arc::new(Merger::build(test_cfg("base", SimMode::Off)).unwrap());
-    let r = merger.handle(1, 7).unwrap();
-    assert_eq!(r.top_k.len(), 64);
+    let r = merger
+        .score(ScoreRequest::user(7).with_request_id(1))
+        .unwrap();
+    assert_eq!(r.items.len(), 64);
     assert!(r.timings.user_async.is_none(), "no async phase in base");
 }
 
@@ -80,8 +90,10 @@ fn sync_sim_pipeline_works() {
     }
     let merger =
         Arc::new(Merger::build(test_cfg("t4_sim", SimMode::Sync)).unwrap());
-    let r = merger.handle(2, 11).unwrap();
-    assert_eq!(r.top_k.len(), 64);
+    let r = merger
+        .score(ScoreRequest::user(11).with_request_id(2))
+        .unwrap();
+    assert_eq!(r.items.len(), 64);
 }
 
 #[test]
@@ -92,8 +104,10 @@ fn lsh_long_term_pipeline_works() {
     }
     let merger =
         Arc::new(Merger::build(test_cfg("t4_lsh", SimMode::Off)).unwrap());
-    let r = merger.handle(3, 13).unwrap();
-    assert_eq!(r.top_k.len(), 64);
+    let r = merger
+        .score(ScoreRequest::user(13).with_request_id(3))
+        .unwrap();
+    assert_eq!(r.items.len(), 64);
 }
 
 #[test]
@@ -106,7 +120,70 @@ fn aif_and_base_rank_differently_but_validly() {
         Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
     let base =
         Arc::new(Merger::build(test_cfg("base", SimMode::Off)).unwrap());
-    let ra = aif.handle(10, 3).unwrap();
-    let rb = base.handle(10, 3).unwrap();
-    assert_eq!(ra.top_k.len(), rb.top_k.len());
+    let ra = aif
+        .score(ScoreRequest::user(3).with_request_id(10))
+        .unwrap();
+    let rb = base
+        .score(ScoreRequest::user(3).with_request_id(10))
+        .unwrap();
+    assert_eq!(ra.items.len(), rb.items.len());
+}
+
+#[test]
+fn typed_api_validates_and_honors_request_knobs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let merger =
+        Arc::new(Merger::build(test_cfg("base", SimMode::Off)).unwrap());
+
+    // Per-request top_k override is honored...
+    let r = merger.score(ScoreRequest::user(3).with_top_k(5)).unwrap();
+    assert_eq!(r.items.len(), 5);
+    // ...and clamped to the candidate count instead of erroring.
+    let r = merger
+        .score(ScoreRequest::user(3).with_top_k(10_000))
+        .unwrap();
+    assert_eq!(r.items.len(), 512);
+
+    // Typed errors instead of anyhow.
+    assert!(matches!(
+        merger.score(ScoreRequest::user(usize::MAX)),
+        Err(ServeError::UnknownUser(_))
+    ));
+    assert!(matches!(
+        merger.score(ScoreRequest::user(1).with_top_k(0)),
+        Err(ServeError::BadRequest(_))
+    ));
+    assert!(matches!(
+        merger.score(ScoreRequest::user(1).with_candidates(vec![])),
+        Err(ServeError::BadRequest(_))
+    ));
+    assert!(matches!(
+        merger
+            .score(ScoreRequest::user(1).with_candidates(vec![u32::MAX])),
+        Err(ServeError::BadRequest(_))
+    ));
+
+    // Candidate override scores exactly the requested set.
+    let r = merger
+        .score(ScoreRequest::user(1).with_candidates(vec![1, 2, 3]))
+        .unwrap();
+    assert_eq!(r.items.len(), 3);
+    assert!(r.items.iter().all(|s| [1, 2, 3].contains(&s.item)));
+
+    // Trace reports the stage breakdown.
+    let r = merger
+        .score(ScoreRequest::user(1).with_trace(true))
+        .unwrap();
+    let t = r.trace.expect("trace requested");
+    assert_eq!(t.n_candidates, 512);
+    assert!(t.stages.iter().any(|s| s.stage == "prerank"));
+    assert!(t.stages.iter().any(|s| s.stage == "retrieval"));
+
+    // A request id is allocated when absent.
+    let a = merger.score(ScoreRequest::user(1)).unwrap();
+    let b = merger.score(ScoreRequest::user(1)).unwrap();
+    assert_ne!(a.request_id, b.request_id);
 }
