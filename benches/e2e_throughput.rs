@@ -1,16 +1,33 @@
-//! Headline end-to-end bench: AIF vs the sequential baseline under the same
-//! closed-loop load — the serving half of the paper's deployment claim.
+//! Headline end-to-end bench: AIF vs the sequential baseline under the
+//! same closed-loop load — plus the cross-request coalescing comparison:
+//! the same AIF pipeline with the dispatch-layer knob off and on, across
+//! a client ladder (coalescing only pays once >= 8 requests are in
+//! flight), and a score-invariance check that the two dispatch modes
+//! produce identical top-K for identical seeds.
 
 use std::sync::Arc;
 
 use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::{Merger, PreRanker};
+use aif::coordinator::{Merger, PreRanker, ScoreRequest};
 use aif::workload::runner;
+
+fn aif_cfg(dir: &str, coalesce: bool) -> ServingConfig {
+    let mut cfg = ServingConfig {
+        variant: "aif".into(),
+        sim_mode: SimMode::Precached,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    };
+    cfg.coalesce.enabled = coalesce;
+    cfg
+}
 
 fn main() {
     let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
     let n = if quick { 24 } else { 96 };
+
+    // ---- baseline vs AIF (as before) -----------------------------------
     for (name, variant, sim) in [
         ("base", "base", SimMode::Off),
         ("aif", "aif", SimMode::Precached),
@@ -28,5 +45,70 @@ fn main() {
         let (mq, _) = runner::max_qps(&ranker, n / 2, 12);
         println!("  maxQPS {mq:.2}  extra storage {:.2} MiB",
             ranker.extra_storage_bytes() as f64 / (1 << 20) as f64);
+    }
+
+    // ---- coalescing off vs on under concurrency -------------------------
+    // Same pipeline, same seeds; only the dispatch layer differs.  The
+    // `coalesce` block of /metrics carries rows-per-execution and queue
+    // waits for the "on" rows.
+    let clients: &[usize] = if quick { &[2, 8] } else { &[2, 8, 16] };
+    let per_step = (n as u64) * 2;
+    let mut sustained = [0.0f64; 2];
+    for (i, on) in [false, true].into_iter().enumerate() {
+        let label = if on { "aif+coalesce" } else { "aif-solo" };
+        let merger =
+            Arc::new(Merger::build(aif_cfg(&dir, on)).expect("merger"));
+        if on && !merger.coalescing() {
+            println!(
+                "{label}: manifest has no *_mu artifact — regenerate with \
+                 `make artifacts` for the coalescing rows"
+            );
+            continue;
+        }
+        let ranker: Arc<dyn PreRanker> = merger;
+        for r in
+            runner::concurrency_sweep(label, &ranker, clients, per_step, 21)
+        {
+            println!("{}", r.render());
+            sustained[i] = sustained[i].max(r.qps);
+        }
+    }
+    if sustained[1] > 0.0 {
+        println!(
+            "coalescing sustained QPS: off {:.2} -> on {:.2} ({:+.1}%)",
+            sustained[0],
+            sustained[1],
+            (sustained[1] / sustained[0] - 1.0) * 100.0
+        );
+    }
+
+    // ---- score invariance: identical top-K with the knob on and off -----
+    let solo = Arc::new(Merger::build(aif_cfg(&dir, false)).expect("merger"));
+    let coal = Arc::new(Merger::build(aif_cfg(&dir, true)).expect("merger"));
+    if coal.coalescing() {
+        let candidates: Vec<u32> = (0..777u32).collect();
+        let mut mismatches = 0usize;
+        for user in [1usize, 42, 77, 1000] {
+            let req = |id| {
+                ScoreRequest::user(user)
+                    .with_request_id(id)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(64)
+            };
+            let a = solo.score(req(1)).expect("solo scores");
+            let b = coal.score(req(2)).expect("coalesced scores");
+            let ia: Vec<u32> = a.items.iter().map(|s| s.item).collect();
+            let ib: Vec<u32> = b.items.iter().map(|s| s.item).collect();
+            if ia != ib {
+                mismatches += 1;
+                println!("user {user}: top-K DIVERGED under coalescing");
+            }
+        }
+        assert_eq!(
+            mismatches, 0,
+            "coalescing must be score-invariant: identical top-K for \
+             identical seeds"
+        );
+        println!("score invariance: top-K identical with coalescing on/off");
     }
 }

@@ -174,6 +174,28 @@ def export_goldens(world, w_hash, all_params, out_dir, b, l):
         scores = model.head_fn(v, all_params[vname], use_kernels=False)(
             *args)[0]
         put(f"head_{vname}.scores", scores)
+
+    # Coalesced-head invariance anchor: the same request packed into the
+    # mu flavor (all rows on slot 0, padded by repeating the last row)
+    # must reproduce head_aif's scores on the real rows.  The rust
+    # integration suite asserts this — coalescing is score-invariant.
+    v = variants.AIF
+    b_mu, u_slots = 2 * b, dims.MU_SLOTS
+    mu_ctx = {
+        "u_vec": jnp.tile(u_vec, (u_slots, 1)),
+        "bea_v": jnp.tile(bea_v[None], (u_slots, 1, 1)),
+        "din_base": jnp.tile(din_base, (u_slots, 1)),
+        "din_g": jnp.tile(din_g[None], (u_slots, 1, 1)),
+        "row_user": jnp.zeros((b_mu,), jnp.float32),
+    }
+    for name in ("item_vec", "bea_w", "item_sign", "tiers_in", "sim_cross"):
+        rowed = jnp.asarray(full[name])
+        pad = jnp.repeat(rowed[-1:], b_mu - b, axis=0)
+        mu_ctx[name] = jnp.concatenate([rowed, pad], axis=0)
+    mu_sig = model.serving_inputs_mu(v, b=b_mu, u=u_slots)
+    mu_args = [mu_ctx[name] for name, _ in mu_sig]
+    put("head_aif_mu.scores",
+        model.head_fn_mu(v, all_params["aif"])(*mu_args)[0])
     return files
 
 
@@ -292,6 +314,20 @@ def main():
     # aif_noprecache: same head, truncated SIM assembly on the rust side.
     manifest["variants"]["aif_noprecache"] = dict(
         manifest["variants"]["aif"], sim_budget=0.25)
+
+    # ---- coalesced (multi-user) head flavors --------------------------------
+    # One `head_<variant>_mu` per coalescible variant: 2x the mini-batch
+    # rows gathered over up to MU_SLOTS concurrent requests by `row_user`.
+    # The rust BatchCoalescer packs cross-request jobs into these; a
+    # manifest without them degrades to per-request execution.
+    b_mu, u_slots = 2 * b, dims.MU_SLOTS
+    for v in variants.SERVING:
+        if not model.mu_supported(v):
+            continue
+        emit(f"head_{v.name}_mu",
+             model.head_fn_mu(v, all_params[v.name]),
+             model.serving_inputs_mu(v, b=b_mu, u=u_slots),
+             [{"name": "scores", "shape": [b_mu]}])
     # Pallas flavor of the anchor head (the LSH hot-spot kernel computing
     # DIN + SimTier fused — the TPU deployment shape), cross-checked
     # against head_aif by the rust integration tests.

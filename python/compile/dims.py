@@ -36,6 +36,9 @@ D_ITEM_RAW = 96  # concatenated item attribute embedding width (Eq.4 input)
 B_MINI = 256       # pre-ranking mini-batch (paper: ~1e3)
 N_CANDIDATES = 4096  # retrieval output per request (paper: ~1e4)
 TOP_K = 128        # pre-ranking output (paper: ~1e2)
+# Cross-request coalescing (`head_*_mu` artifacts): rows per merged
+# execution are 2x the mini-batch, gathered over up to MU_SLOTS requests.
+MU_SLOTS = 8
 
 # --- synthetic world -------------------------------------------------------
 N_USERS = 2048

@@ -290,3 +290,103 @@ def head_fn(variant, params, use_kernels=True, pallas=False):
         return (forward(variant, params, ctx, use_kernels=use_kernels),)
 
     return fn
+
+
+# --------------------------------------------------------------------------
+# Multi-user ("mu") head flavor — cross-request coalesced serving.
+# --------------------------------------------------------------------------
+def mu_supported(variant):
+    """Whether a variant's head can serve coalesced multi-user batches.
+
+    The mu flavor gathers per-row user context through a ``row_user``
+    index, so the request-level operands must be compact: the async user
+    vector (plus BEA vectors / hoisted DIN factors).  Variants that feed
+    ``[L, .]`` sequence operands into the head (mm/id similarity, inline
+    user towers) cannot coalesce across users.
+    """
+    pure_lsh = variant.din_sim == "lsh" and variant.tier_sim == "lsh"
+    return variant.user == "async" and (not variant.has_long or pure_lsh)
+
+
+def serving_inputs_mu(variant, b=2 * dims.B_MINI, u=dims.MU_SLOTS):
+    """Ordered (name, shape) head inputs for the coalesced flavor.
+
+    Request-level operands come first, stacked over ``u`` user slots; the
+    row-aligned operands follow unchanged at ``b`` merged rows; the
+    trailing ``row_user`` operand maps each row to its user slot.  The
+    rust side mirrors this ordering in
+    ``coordinator::merger::expected_input_names_mu``.
+    """
+    assert mu_supported(variant), variant.name
+    sig = [("u_vec", (u, dims.D))]
+    if variant.bea == "bridge":
+        sig.append(("bea_v", (u, variant.n_bridge, dims.D_BEA)))
+    if variant.has_long:
+        sig.append(("din_base", (u, dims.D)))
+        sig.append(("din_g", (u, dims.D_LSH_BITS, dims.D)))
+    if variant.item == "nearline":
+        sig.append(("item_vec", (b, dims.D)))
+    else:
+        sig.append(("item_raw", (b, dims.D_ITEM_RAW)))
+    if variant.bea == "bridge" and variant.item == "nearline":
+        sig.append(("bea_w", (b, variant.n_bridge)))
+    if variant.has_long:
+        sig.append(("item_sign", (b, dims.D_LSH_BITS)))
+        sig.append(("tiers_in", (b, dims.N_TIERS)))
+    if variant.sim_cross:
+        sig.append(("sim_cross", (b, dims.D_SIM_CROSS)))
+    sig.append(("row_user", (b,)))
+    return sig
+
+
+def forward_mu(variant, params, ctx):
+    """Coalesced forward: identical per-row math to ``forward``, with the
+    request-level operands gathered per row by ``row_user``.  Scores are
+    therefore invariant to how rows are packed across requests — the
+    property the rust benches and the golden fixture pin down.
+    """
+    idx = ctx["row_user"].astype(jnp.int32)                  # [B]
+    u = ctx["u_vec"][idx]                                    # [B, D]
+
+    item_proj = None
+    if "item_vec" in ctx:
+        item_vec = ctx["item_vec"]
+    else:
+        item_vec, item_proj = ref.item_mlp(ctx["item_raw"], params["item"])
+    feats = [item_vec, u]
+
+    if variant.bea == "bridge":
+        bea_v = ctx["bea_v"][idx]                            # [B, n, d']
+        if "bea_w" in ctx:
+            bea_w = ctx["bea_w"]
+        else:
+            if item_proj is None:
+                item_proj = ctx["item_raw"] @ params["item"]["w_proj"].T
+            bea_w = ref.bea_item_weights(item_proj,
+                                         params["bea"]["bridges"])
+        # Per-row bea_combine against each row's own user slot.
+        feats.append(jnp.einsum("bn,bnd->bd", bea_w, bea_v))
+
+    if variant.has_long:
+        # Hoisted DIN factors, one set per user slot (§4.2): the per-row
+        # rank-1 update contracts against the row's gathered din_g.
+        din = ctx["din_base"][idx] + jnp.einsum(
+            "bk,bkd->bd", ctx["item_sign"], ctx["din_g"][idx])
+        feats.extend([din, ctx["tiers_in"]])
+
+    if variant.sim_cross:
+        feats.append(ctx["sim_cross"])
+
+    x = jnp.concatenate(feats, axis=-1)
+    return ref.score_mlp(x, params["score"])
+
+
+def head_fn_mu(variant, params):
+    """Positional-arg coalesced head matching ``serving_inputs_mu``."""
+    names = [n for n, _ in serving_inputs_mu(variant)]
+
+    def fn(*args):
+        ctx = dict(zip(names, args))
+        return (forward_mu(variant, params, ctx),)
+
+    return fn

@@ -18,6 +18,35 @@ pub enum SimMode {
     Precached,
 }
 
+/// Cross-request dynamic micro-batching knobs (runtime::coalescer).
+/// Off by default: the sequential baseline path is byte-for-byte
+/// unchanged unless `enabled` is set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoalesceConfig {
+    /// Route head executions through the `BatchCoalescer` (requires the
+    /// variant's `*_mu` artifact in the manifest; silently falls back to
+    /// the per-request path when absent).
+    pub enabled: bool,
+    /// Max queue dwell before a forced flush, microseconds.
+    pub window_us: u64,
+    /// Real-row cap per merged execution; 0 = the `_mu` artifact batch.
+    pub max_coalesced_batch: usize,
+    /// Jobs whose remaining deadline budget is below this skip the
+    /// coalescing window entirely.
+    pub bypass_margin_ms: f64,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig {
+            enabled: false,
+            window_us: 200,
+            max_coalesced_batch: 0,
+            bypass_margin_ms: 5.0,
+        }
+    }
+}
+
 /// One serving pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -46,6 +75,9 @@ pub struct ServingConfig {
     pub lru_shards: usize,
     pub user_cache_shards: usize,
     pub arena_retain: usize,
+
+    /// Cross-request head-execution coalescing (ISSUE 2 tentpole).
+    pub coalesce: CoalesceConfig,
 
     pub artifacts_dir: String,
 }
@@ -86,6 +118,7 @@ impl Default for ServingConfig {
             lru_shards: 16,
             user_cache_shards: 16,
             arena_retain: 32,
+            coalesce: CoalesceConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -125,6 +158,24 @@ impl ServingConfig {
         num!(lru_shards, "lru_shards", usize);
         if let Some(x) = get("artifacts_dir").and_then(Value::as_str) {
             c.artifacts_dir = x.to_string();
+        }
+        if let Some(co) = get("coalesce") {
+            if let Some(b) = co.get("enabled").and_then(Value::as_bool) {
+                c.coalesce.enabled = b;
+            }
+            if let Some(x) = co.get("window_us").and_then(Value::as_f64) {
+                c.coalesce.window_us = x as u64;
+            }
+            if let Some(x) =
+                co.get("max_coalesced_batch").and_then(Value::as_f64)
+            {
+                c.coalesce.max_coalesced_batch = x as usize;
+            }
+            if let Some(x) =
+                co.get("bypass_margin_ms").and_then(Value::as_f64)
+            {
+                c.coalesce.bypass_margin_ms = x;
+            }
         }
         for (key, slot) in [
             ("retrieval_latency", &mut c.retrieval_latency),
@@ -231,5 +282,30 @@ mod tests {
     fn rejects_bad_sim_mode() {
         let v = Value::parse(r#"{"sim_mode":"bogus"}"#).unwrap();
         assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn coalesce_defaults_off_and_parses() {
+        let c = ServingConfig::default();
+        assert!(!c.coalesce.enabled, "sequential baseline unchanged");
+        assert_eq!(c.coalesce.window_us, 200);
+        assert_eq!(c.coalesce.max_coalesced_batch, 0);
+
+        let v = Value::parse(
+            r#"{"coalesce": {"enabled": true, "window_us": 500,
+                 "max_coalesced_batch": 384, "bypass_margin_ms": 2.5}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert!(c.coalesce.enabled);
+        assert_eq!(c.coalesce.window_us, 500);
+        assert_eq!(c.coalesce.max_coalesced_batch, 384);
+        assert!((c.coalesce.bypass_margin_ms - 2.5).abs() < 1e-9);
+
+        // Partial objects keep the remaining defaults.
+        let v = Value::parse(r#"{"coalesce": {"enabled": true}}"#).unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert!(c.coalesce.enabled);
+        assert_eq!(c.coalesce.window_us, 200);
     }
 }

@@ -50,6 +50,83 @@ pub fn merge_scores(
     out
 }
 
+/// One job's placement inside a coalesced execution: rows
+/// `[offset, offset + rows)` of the merged batch belong to job `job`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackSlot {
+    /// Index of the job in the submitted order.
+    pub job: usize,
+    /// Row offset of the job's first row in the merged execution.
+    pub offset: usize,
+    /// Real (unpadded) rows the job contributes.
+    pub rows: usize,
+}
+
+/// Gather/scatter plan for packing whole per-request head jobs into
+/// coalesced executions (runtime::coalescer uses this; the properties in
+/// `prop_invariants` pin its invariants).
+///
+/// Strictly FIFO greedy: jobs fill an execution in submission order until
+/// the next job would exceed `max_rows` real rows or `max_slots` user
+/// slots, then a new execution starts.  Jobs are never split, so each
+/// execution covers a consecutive run of jobs and a job's scores come
+/// back as one contiguous slice.
+///
+/// Every `rows[i]` must be `1..=max_rows`; `max_slots >= 1`.
+pub fn pack_jobs(
+    rows: &[usize],
+    max_rows: usize,
+    max_slots: usize,
+) -> Vec<Vec<PackSlot>> {
+    assert!(max_rows > 0 && max_slots > 0);
+    let mut execs: Vec<Vec<PackSlot>> = Vec::new();
+    let mut cur: Vec<PackSlot> = Vec::new();
+    let mut used = 0usize;
+    for (job, &r) in rows.iter().enumerate() {
+        assert!(
+            r >= 1 && r <= max_rows,
+            "job {job}: {r} rows outside 1..={max_rows}"
+        );
+        let fits = used + r <= max_rows && cur.len() < max_slots;
+        if !cur.is_empty() && !fits {
+            execs.push(std::mem::take(&mut cur));
+            used = 0;
+        }
+        cur.push(PackSlot {
+            job,
+            offset: used,
+            rows: r,
+        });
+        used += r;
+    }
+    if !cur.is_empty() {
+        execs.push(cur);
+    }
+    execs
+}
+
+/// Scatter one merged score vector back to its jobs: returns, in `plan`
+/// order, each job's contiguous score slice.  `scores` may be padded past
+/// the last real row (the merged execution pads to the artifact batch).
+pub fn scatter_scores(
+    plan: &[PackSlot],
+    scores: &[f32],
+) -> Vec<(usize, Vec<f32>)> {
+    plan.iter()
+        .map(|s| {
+            assert!(
+                s.offset + s.rows <= scores.len(),
+                "job {} rows {}..{} exceed {} scores",
+                s.job,
+                s.offset,
+                s.offset + s.rows,
+                scores.len()
+            );
+            (s.job, scores[s.offset..s.offset + s.rows].to_vec())
+        })
+        .collect()
+}
+
 /// Top-k (item, score) pairs, descending score, stable on ties.
 pub fn top_k(items: &[u32], scores: &[f32], k: usize) -> Vec<(u32, f32)> {
     assert_eq!(items.len(), scores.len());
@@ -108,5 +185,42 @@ mod tests {
         let top = top_k(&[1, 2], &[0.5, 0.6], 10);
         assert_eq!(top.len(), 2);
         assert_eq!(top[0].0, 2);
+    }
+
+    #[test]
+    fn pack_jobs_fifo_rows_and_slots() {
+        // 3+3 fill a 6-row exec; 4 overflows into the next; slot cap 2
+        // closes the third exec after two jobs even with rows to spare.
+        let plan = pack_jobs(&[3, 3, 4, 1, 1, 1], 6, 2);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(
+            plan[0],
+            vec![
+                PackSlot {
+                    job: 0,
+                    offset: 0,
+                    rows: 3
+                },
+                PackSlot {
+                    job: 1,
+                    offset: 3,
+                    rows: 3
+                },
+            ]
+        );
+        assert_eq!(plan[1][0].job, 2);
+        assert_eq!(plan[1][1], PackSlot { job: 3, offset: 4, rows: 1 });
+        assert_eq!(plan[2].len(), 2);
+    }
+
+    #[test]
+    fn scatter_scores_slices_by_offset() {
+        let plan = pack_jobs(&[2, 3], 8, 4);
+        assert_eq!(plan.len(), 1);
+        // Padded to 8 rows; only the first 5 are real.
+        let scores = [10., 11., 20., 21., 22., 0., 0., 0.];
+        let out = scatter_scores(&plan[0], &scores);
+        assert_eq!(out[0], (0, vec![10., 11.]));
+        assert_eq!(out[1], (1, vec![20., 21., 22.]));
     }
 }

@@ -41,7 +41,10 @@ use crate::lsh::{self, Hasher};
 use crate::metrics::ServingMetrics;
 use crate::nearline::{N2oSnapshot, N2oTable, NearlineWorker};
 use crate::retrieval::Retriever;
-use crate::runtime::{Manifest, RtpPool, Tensor, VariantSpec};
+use crate::runtime::{
+    BatchCoalescer, CoalescerConfig, HeadExecutor, HeadJob, Manifest,
+    RtpPool, Tensor, VariantSpec,
+};
 use crate::util::threadpool::ThreadPool;
 
 /// Auto-allocated request ids live at and above this bound; callers must
@@ -83,6 +86,10 @@ pub struct Merger {
     score_pool: Arc<ThreadPool>,
     pub batch: usize,
     head_artifact: String,
+    /// Cross-request dispatch scheduler + the `*_mu` artifact it serves
+    /// (None = sequential per-request executions, the baseline path).
+    coalescer: Option<Arc<BatchCoalescer>>,
+    mu_artifact: Option<String>,
     /// Request-id allocator for requests that don't bring their own.
     /// Lives in the top half of the id space so auto-allocated ids can
     /// never collide with caller-supplied ones (which would alias
@@ -117,6 +124,36 @@ impl Merger {
         }
         if variant.item == "nearline" {
             artifacts.push("item_tower".into());
+        }
+        // Cross-request coalescing rides on the multi-user (`*_mu`) head
+        // flavor; resolve it before the fleet spins up so every worker
+        // compiles it.  Absence (older artifact sets) degrades to the
+        // per-request path with a warning instead of failing startup.
+        let mu_artifact = if cfg.coalesce.enabled {
+            let name = format!("{}_mu", variant.artifact);
+            if !coalesce_eligible(&variant) {
+                log::warn!(
+                    "coalescing requested but variant {} is not eligible \
+                     (needs async user + precomputable long-term head); \
+                     serving per-request executions",
+                    variant.name
+                );
+                None
+            } else if !manifest.artifacts.contains_key(&name) {
+                log::warn!(
+                    "coalescing requested but artifact {name:?} is not in \
+                     the manifest (re-run `make artifacts`); serving \
+                     per-request executions"
+                );
+                None
+            } else {
+                Some(name)
+            }
+        } else {
+            None
+        };
+        if let Some(name) = &mu_artifact {
+            artifacts.push(name.clone());
         }
         let rtp = Arc::new(RtpPool::new(
             Arc::clone(&manifest),
@@ -165,6 +202,49 @@ impl Merger {
             variant.artifact
         );
 
+        // Bring up the coalescer against the validated `_mu` signature.
+        let metrics = Arc::new(ServingMetrics::new());
+        let coalescer = match &mu_artifact {
+            Some(name) => {
+                let spec = manifest.artifact(name)?;
+                let expected_mu = expected_input_names_mu(&variant);
+                let actual_mu: Vec<String> =
+                    spec.inputs.iter().map(|s| s.name.clone()).collect();
+                anyhow::ensure!(
+                    expected_mu == actual_mu,
+                    "coalesced head {name} signature mismatch: assembling \
+                     {expected_mu:?}, manifest says {actual_mu:?}"
+                );
+                let exec_rows = spec.outputs[0].shape[0];
+                let max_slots = spec.inputs[0].shape[0];
+                anyhow::ensure!(
+                    exec_rows >= batch && max_slots >= 1,
+                    "coalesced head {name}: {exec_rows} rows / {max_slots} \
+                     slots cannot hold a {batch}-row mini-batch"
+                );
+                let max_rows = match cfg.coalesce.max_coalesced_batch {
+                    0 => exec_rows,
+                    n => n.clamp(batch, exec_rows),
+                };
+                Some(Arc::new(BatchCoalescer::new(
+                    Arc::clone(&rtp) as Arc<dyn HeadExecutor>,
+                    CoalescerConfig {
+                        exec_rows,
+                        max_rows,
+                        max_slots,
+                        window: Duration::from_micros(
+                            cfg.coalesce.window_us,
+                        ),
+                        bypass_margin: Duration::from_secs_f64(
+                            cfg.coalesce.bypass_margin_ms / 1e3,
+                        ),
+                    },
+                    Arc::clone(&metrics.coalesce),
+                )))
+            }
+            None => None,
+        };
+
         Ok(Merger {
             router: Router::new(cfg.n_rtp_workers, 64),
             user_cache: Arc::new(UserVecCache::new(cfg.user_cache_shards)),
@@ -173,12 +253,14 @@ impl Merger {
                 cfg.lru_shards,
             )),
             arena: ArenaPool::new(cfg.arena_retain),
-            metrics: Arc::new(ServingMetrics::new()),
+            metrics,
             async_pool: Arc::new(ThreadPool::new(cfg.n_async_workers)),
             // Batch-scoring tasks block on RTP replies; give them their own
             // pool (2x the fleet) so they never starve the phase-1 tasks.
             score_pool: Arc::new(ThreadPool::new(cfg.n_rtp_workers + 2)),
             head_artifact: variant.artifact.clone(),
+            coalescer,
+            mu_artifact,
             req_ids: AtomicU64::new(AUTO_REQUEST_ID_BASE),
             manifest,
             variant,
@@ -367,7 +449,9 @@ impl Merger {
 
         // ---- phase 2: real-time pre-ranking ------------------------------
         let t_p = Instant::now();
-        let scores = self.prerank(key, user, &candidates)?;
+        let deadline_at = req.deadline.map(|budget| t_total + budget);
+        let (scores, coalesce) =
+            self.prerank(key, user, &candidates, deadline_at)?;
         let prerank = t_p.elapsed();
         check_deadline(req.deadline, t_total)?;
 
@@ -404,9 +488,16 @@ impl Merger {
                 stage: "prerank",
                 elapsed: prerank,
             });
+            if coalesce.batches > 0 {
+                stages.push(StageSpan {
+                    stage: "coalesce_wait",
+                    elapsed: coalesce.max_queue_wait,
+                });
+            }
             Some(ScoreTrace {
                 n_candidates: candidates.len(),
                 n_batches: candidates.len().div_ceil(self.batch),
+                coalesced_batches: coalesce.batches,
                 stages,
             })
         } else {
@@ -432,7 +523,8 @@ impl Merger {
         key: RequestKey,
         user: usize,
         candidates: &[u32],
-    ) -> Result<Vec<f32>> {
+        deadline: Option<Instant>,
+    ) -> Result<(Vec<f32>, CoalesceAgg)> {
         let v = &self.variant;
 
         // -- request-level user-side tensors --------------------------------
@@ -515,7 +607,7 @@ impl Merger {
         // -- per-mini-batch fan-out -----------------------------------------
         let batches = batcher::split(candidates, self.batch);
         let n_batches = batches.len();
-        let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
+        let (tx, rx) = channel::<(usize, Result<BatchOutcome>)>();
         for mb in &batches {
             let items: Vec<u32> = mb.items.to_vec();
             let index = mb.index;
@@ -547,6 +639,7 @@ impl Merger {
                         seq_sign_packed,
                         seq_len,
                         seq_mm: seq_mm_t,
+                        deadline,
                     },
                 );
                 let _ = tx.send((index, result));
@@ -555,15 +648,24 @@ impl Merger {
         drop(tx);
 
         let mut per_batch: Vec<Option<Vec<f32>>> = vec![None; n_batches];
+        let mut agg = CoalesceAgg::default();
         for _ in 0..n_batches {
             let (idx, result) = rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("batch worker died"))?;
-            per_batch[idx] = Some(result?);
+            let outcome = result?;
+            if let Some(wait) = outcome.queue_wait {
+                agg.batches += 1;
+                agg.max_queue_wait = agg.max_queue_wait.max(wait);
+            }
+            per_batch[idx] = Some(outcome.scores);
         }
         let per_batch: Vec<Vec<f32>> =
             per_batch.into_iter().map(|b| b.unwrap()).collect();
-        Ok(batcher::merge_scores(candidates.len(), self.batch, &per_batch))
+        Ok((
+            batcher::merge_scores(candidates.len(), self.batch, &per_batch),
+            agg,
+        ))
     }
 
     /// Clone the shared handles needed inside batch tasks.
@@ -581,7 +683,15 @@ impl Merger {
             batch: self.batch,
             n_tiers: self.manifest.dim("N_TIERS"),
             head_artifact: self.head_artifact.clone(),
+            coalescer: self.coalescer.clone(),
+            mu_artifact: self.mu_artifact.clone(),
         }
+    }
+
+    /// Whether this pipeline is routing head executions through the
+    /// cross-request coalescer.
+    pub fn coalescing(&self) -> bool {
+        self.coalescer.is_some()
     }
 
     /// §5.3 storage accounting: extra resident bytes vs the baseline.
@@ -636,6 +746,23 @@ fn check_deadline(
     }
 }
 
+/// Per-request aggregate of the coalesced dispatch path (zeroed when the
+/// request ran plain per-request executions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoalesceAgg {
+    /// Mini-batches of this request that went through the coalescer.
+    pub batches: usize,
+    /// Worst queue dwell any of them paid.
+    pub max_queue_wait: Duration,
+}
+
+/// One mini-batch's scores plus how its execution was dispatched.
+struct BatchOutcome {
+    scores: Vec<f32>,
+    /// Some(wait) when the batch went through the coalescer.
+    queue_wait: Option<Duration>,
+}
+
 /// Request-level tensors shared by every mini-batch of the request.
 struct BatchCtx {
     profile: Option<Tensor>,
@@ -648,6 +775,8 @@ struct BatchCtx {
     seq_sign_packed: Option<Arc<Vec<u8>>>,
     seq_len: usize,
     seq_mm: Option<Tensor>,
+    /// Absolute request deadline, for the coalescer's bypass decision.
+    deadline: Option<Instant>,
 }
 
 /// The Send-able subset of the Merger used inside batch tasks.
@@ -664,6 +793,8 @@ struct BatchScorer {
     batch: usize,
     n_tiers: usize,
     head_artifact: String,
+    coalescer: Option<Arc<BatchCoalescer>>,
+    mu_artifact: Option<String>,
 }
 
 impl BatchScorer {
@@ -673,7 +804,7 @@ impl BatchScorer {
         items: &[u32],
         snapshot: Option<&N2oSnapshot>,
         ctx: BatchCtx,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<BatchOutcome> {
         let v = &self.variant;
         let mut inputs: Vec<Tensor> = Vec::with_capacity(8);
 
@@ -790,11 +921,39 @@ impl BatchScorer {
             inputs.push(t);
         }
 
+        // Dispatch: through the cross-request coalescer when enabled, as
+        // a plain per-request execution otherwise.  Both paths score the
+        // same rows through the same math — coalescing is score-invariant
+        // (the bench pins identical top-K with the knob on and off).
+        if let (Some(co), Some(mu)) = (&self.coalescer, &self.mu_artifact) {
+            let (user_inputs, row_inputs) =
+                split_head_inputs(&self.variant, inputs);
+            let (reply, rx) = channel();
+            co.submit(HeadJob {
+                artifact: mu.clone(),
+                rows: items.len(),
+                row_inputs,
+                user_inputs,
+                deadline: ctx.deadline,
+                reply,
+            });
+            let js = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("coalescer dropped the reply"))??;
+            return Ok(BatchOutcome {
+                scores: js.scores,
+                queue_wait: Some(js.queue_wait),
+            });
+        }
+
         let scores = self.rtp.call1(&self.head_artifact, inputs)?;
         self.metrics
             .rtp_calls
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(scores.data().to_vec())
+        Ok(BatchOutcome {
+            scores: scores.data().to_vec(),
+            queue_wait: None,
+        })
     }
 }
 
@@ -840,6 +999,74 @@ pub fn expected_input_names(v: &VariantSpec) -> Vec<String> {
     sig.into_iter().map(String::from).collect()
 }
 
+/// Whether a variant's head can serve coalesced multi-user batches.  The
+/// `_mu` artifact gathers per-row user context by a `row_user` index, so
+/// the request-level operands must be compact: the async user vector plus
+/// (for long-term variants) the hoisted DIN factors.  Variants that feed
+/// `[L, .]` sequence operands into the head cannot coalesce.
+pub fn coalesce_eligible(v: &VariantSpec) -> bool {
+    v.user == "async" && (!v.has_long() || v.tiers_precomputed())
+}
+
+/// Head inputs that are request-level (one slot per request in the `_mu`
+/// artifact) as opposed to row-aligned.
+fn is_user_level_input(name: &str) -> bool {
+    matches!(
+        name,
+        "u_vec"
+            | "bea_v"
+            | "din_base"
+            | "din_g"
+            | "profile"
+            | "seq_short"
+            | "seq_emb"
+            | "seq_sign"
+            | "seq_mm"
+    )
+}
+
+/// Expected input names of the coalesced (`*_mu`) head flavor, mirroring
+/// python `model.serving_inputs_mu`: request-level operands first (slot-
+/// stacked), then the row-aligned operands, then the `row_user` gather
+/// index.
+pub fn expected_input_names_mu(v: &VariantSpec) -> Vec<String> {
+    let base = expected_input_names(v);
+    let mut sig: Vec<String> = base
+        .iter()
+        .filter(|n| is_user_level_input(n))
+        .cloned()
+        .collect();
+    sig.extend(base.iter().filter(|n| !is_user_level_input(n)).cloned());
+    sig.push("row_user".into());
+    sig
+}
+
+/// Split assembled regular-head inputs into the `_mu` job halves:
+/// request-level tensors (squeezed to slot shape) and row-aligned
+/// tensors, each in `expected_input_names_mu` order.
+fn split_head_inputs(
+    v: &VariantSpec,
+    inputs: Vec<Tensor>,
+) -> (Vec<Tensor>, Vec<Tensor>) {
+    let names = expected_input_names(v);
+    debug_assert_eq!(names.len(), inputs.len());
+    let mut user = Vec::new();
+    let mut rows = Vec::new();
+    for (name, t) in names.iter().zip(inputs) {
+        if is_user_level_input(name) {
+            // `[1, w]` request vectors stack as `[U, w]` slots.
+            if t.shape.len() > 1 && t.shape[0] == 1 {
+                user.push(t.reshaped(t.shape[1..].to_vec()));
+            } else {
+                user.push(t);
+            }
+        } else {
+            rows.push(t);
+        }
+    }
+    (user, rows)
+}
+
 /// Packed signature rows for a sequence of item ids (static table).
 pub fn packed_signs(world: &World, items: &[u32]) -> Vec<u8> {
     let pl = world.w_hash.shape()[0].div_ceil(8);
@@ -860,4 +1087,120 @@ pub fn packed_signs_padded(world: &World, items: &[u32], batch: usize) -> Vec<u8
         packed.extend_from_slice(last);
     }
     packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aif_variant() -> VariantSpec {
+        VariantSpec {
+            name: "aif".into(),
+            artifact: "head_aif".into(),
+            user: "async".into(),
+            item: "nearline".into(),
+            bea: "bridge".into(),
+            din_sim: "lsh".into(),
+            tier_sim: "lsh".into(),
+            sim_cross: true,
+            sim_budget: 1.0,
+        }
+    }
+
+    #[test]
+    fn eligibility_needs_async_user_and_hoisted_long_term() {
+        let aif = aif_variant();
+        assert!(coalesce_eligible(&aif));
+
+        let mut base = aif_variant();
+        base.user = "cheap".into();
+        assert!(
+            !coalesce_eligible(&base),
+            "inline user towers cannot coalesce"
+        );
+
+        let mut mm = aif_variant();
+        mm.din_sim = "mm".into();
+        assert!(
+            !coalesce_eligible(&mm),
+            "[L,.] operands in the head cannot coalesce"
+        );
+
+        let mut nolong = aif_variant();
+        nolong.din_sim = "none".into();
+        nolong.tier_sim = "none".into();
+        assert!(coalesce_eligible(&nolong));
+    }
+
+    #[test]
+    fn mu_signature_orders_user_slots_first() {
+        let v = aif_variant();
+        assert_eq!(
+            expected_input_names(&v),
+            vec![
+                "u_vec",
+                "item_vec",
+                "bea_v",
+                "bea_w",
+                "din_base",
+                "din_g",
+                "item_sign",
+                "tiers_in",
+                "sim_cross"
+            ]
+        );
+        assert_eq!(
+            expected_input_names_mu(&v),
+            vec![
+                "u_vec",
+                "bea_v",
+                "din_base",
+                "din_g",
+                "item_vec",
+                "bea_w",
+                "item_sign",
+                "tiers_in",
+                "sim_cross",
+                "row_user"
+            ]
+        );
+    }
+
+    #[test]
+    fn split_head_inputs_matches_mu_halves() {
+        let v = aif_variant();
+        let b = 4;
+        // Shapes as the regular head assembles them.
+        let inputs = vec![
+            Tensor::zeros(vec![1, 32]),  // u_vec
+            Tensor::zeros(vec![b, 32]),  // item_vec
+            Tensor::zeros(vec![8, 32]),  // bea_v
+            Tensor::zeros(vec![b, 8]),   // bea_w
+            Tensor::zeros(vec![1, 32]),  // din_base
+            Tensor::zeros(vec![64, 32]), // din_g
+            Tensor::zeros(vec![b, 64]),  // item_sign
+            Tensor::zeros(vec![b, 8]),   // tiers_in
+            Tensor::zeros(vec![b, 32]),  // sim_cross
+        ];
+        let (user, rows) = split_head_inputs(&v, inputs);
+        // Slot shapes: leading request axis of 1 squeezed away.
+        let user_shapes: Vec<Vec<usize>> =
+            user.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(
+            user_shapes,
+            vec![vec![32], vec![8, 32], vec![32], vec![64, 32]]
+        );
+        let row_shapes: Vec<Vec<usize>> =
+            rows.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(
+            row_shapes,
+            vec![
+                vec![b, 32],
+                vec![b, 8],
+                vec![b, 64],
+                vec![b, 8],
+                vec![b, 32]
+            ]
+        );
+    }
 }

@@ -197,6 +197,10 @@ pub struct StageSpan {
 pub struct ScoreTrace {
     pub n_candidates: usize,
     pub n_batches: usize,
+    /// Mini-batches dispatched through the cross-request coalescer (0 on
+    /// the sequential baseline path).  When nonzero, `stages` carries a
+    /// `coalesce_wait` span with the worst queue dwell paid.
+    pub coalesced_batches: usize,
     pub stages: Vec<StageSpan>,
 }
 
@@ -242,6 +246,7 @@ impl ScoreResponse {
             let mut t = Object::new();
             t.insert("n_candidates", trace.n_candidates);
             t.insert("n_batches", trace.n_batches);
+            t.insert("coalesced_batches", trace.coalesced_batches);
             let stages: Vec<Value> = trace
                 .stages
                 .iter()
@@ -438,6 +443,7 @@ mod tests {
             trace: Some(ScoreTrace {
                 n_candidates: 512,
                 n_batches: 2,
+                coalesced_batches: 2,
                 stages: vec![StageSpan {
                     stage: "prerank",
                     elapsed: Duration::from_millis(8),
@@ -455,6 +461,10 @@ mod tests {
         assert_eq!(
             v.req("trace").req("n_candidates").as_usize(),
             Some(512)
+        );
+        assert_eq!(
+            v.req("trace").req("coalesced_batches").as_usize(),
+            Some(2)
         );
         assert!(v.req("user_async_ms").as_f64().unwrap() > 4.0);
     }

@@ -59,7 +59,9 @@ fn main() {
 fn usage() {
     eprintln!(
         "usage: aif <quickstart|serve|replay|abtest|nearline|table1|table3|\
-         table4|fig6> [--artifacts DIR] [--variant NAME] [--requests N]"
+         table4|fig6> [--artifacts DIR] [--variant NAME] [--requests N]\n\
+         coalescing: [--coalesce true] [--coalesce-window-us US] \
+         [--max-coalesced-batch ROWS] [--bypass-margin-ms MS]"
     );
 }
 
@@ -72,6 +74,15 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         Some(path) => ServingConfig::from_file(path)?,
         None => ServingConfig::default(),
     };
+    let mut coalesce = cfg.coalesce.clone();
+    coalesce.enabled = args.bool_or("coalesce", coalesce.enabled);
+    coalesce.window_us =
+        args.usize_or("coalesce-window-us", coalesce.window_us as usize)
+            as u64;
+    coalesce.max_coalesced_batch = args
+        .usize_or("max-coalesced-batch", coalesce.max_coalesced_batch);
+    coalesce.bypass_margin_ms =
+        args.f64_or("bypass-margin-ms", coalesce.bypass_margin_ms);
     Ok(ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -79,16 +90,22 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         n_http_workers: args.usize_or("http-workers", cfg.n_http_workers),
         n_candidates: args.usize_or("candidates", cfg.n_candidates),
         top_k: args.usize_or("top-k", cfg.top_k),
+        coalesce,
         ..cfg
     })
 }
 
 fn build_merger_from(cfg: ServingConfig) -> anyhow::Result<Arc<Merger>> {
     eprintln!(
-        "bringing up variant={} (rtp={}, candidates={}) ...",
-        cfg.variant, cfg.n_rtp_workers, cfg.n_candidates
+        "bringing up variant={} (rtp={}, candidates={}, coalesce={}) ...",
+        cfg.variant, cfg.n_rtp_workers, cfg.n_candidates,
+        cfg.coalesce.enabled
     );
-    Ok(Arc::new(Merger::build(cfg)?))
+    let merger = Arc::new(Merger::build(cfg)?);
+    if merger.coalescing() {
+        eprintln!("cross-request coalescing active");
+    }
+    Ok(merger)
 }
 
 fn build_merger(args: &Args) -> anyhow::Result<Arc<Merger>> {

@@ -100,6 +100,86 @@ impl Histogram {
     }
 }
 
+/// Lock-free log2-bucketed histogram over plain counts (batch sizes, rows
+/// per execution, jobs per flush) — the non-latency sibling of
+/// [`Histogram`].
+pub struct ValueHistogram {
+    /// Bucket `k` holds values in `[2^(k-1), 2^k)`; bucket 0 holds 0.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+const N_VALUE_BUCKETS: usize = 65;
+
+impl Default for ValueHistogram {
+    fn default() -> Self {
+        ValueHistogram {
+            buckets: (0..N_VALUE_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ValueHistogram {
+    pub fn new() -> ValueHistogram {
+        Self::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        let bucket = (64 - v.leading_zeros()) as usize;
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Percentile as an upper bucket bound (2x relative error).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        self.max()
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +233,22 @@ mod tests {
         h.reset();
         assert_eq!(h.count(), 0);
         assert_eq!(h.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn value_histogram_moments() {
+        let v = ValueHistogram::new();
+        for x in [0u64, 1, 2, 256, 256, 512] {
+            v.record(x);
+        }
+        assert_eq!(v.count(), 6);
+        assert_eq!(v.max(), 512);
+        assert!((v.mean() - (1027.0 / 6.0)).abs() < 1e-9, "{}", v.mean());
+        // p50 is the 3rd of 6 values (2) -> its bucket's upper bound, 4.
+        assert_eq!(v.percentile(50.0), 4);
+        assert_eq!(v.percentile(99.0), 1024);
+        v.reset();
+        assert_eq!(v.count(), 0);
+        assert_eq!(v.max(), 0);
     }
 }

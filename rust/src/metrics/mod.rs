@@ -5,5 +5,5 @@
 pub mod histogram;
 pub mod report;
 
-pub use histogram::Histogram;
-pub use report::ServingMetrics;
+pub use histogram::{Histogram, ValueHistogram};
+pub use report::{CoalesceStats, ServingMetrics};

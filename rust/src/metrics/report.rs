@@ -2,10 +2,73 @@
 //! the `/metrics` endpoint report).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
-use super::histogram::Histogram;
+use super::histogram::{Histogram, ValueHistogram};
 use crate::util::json::{Object, Value};
+
+/// Cross-request batch-coalescing counters (runtime::coalescer records
+/// into these; `/metrics` and the load reports read them).  All zeros when
+/// coalescing is off — the sequential baseline is unchanged.
+#[derive(Default)]
+pub struct CoalesceStats {
+    /// Merged head executions dispatched to the RTP fleet.
+    pub executions: AtomicU64,
+    /// Per-request jobs that went through the coalescer.
+    pub jobs: AtomicU64,
+    /// Jobs that skipped the coalescing window (deadline bypass).
+    pub bypass_jobs: AtomicU64,
+    /// Padding rows executed (the waste coalescing exists to shrink).
+    pub padded_rows: AtomicU64,
+    /// Real rows per merged execution (the coalesced-batch-size histogram).
+    pub exec_rows: ValueHistogram,
+    /// Jobs merged per execution.
+    pub exec_jobs: ValueHistogram,
+    /// Per-job queue dwell before dispatch.
+    pub queue_wait: Histogram,
+}
+
+impl CoalesceStats {
+    /// Record one merged execution of `jobs` jobs totaling `rows` real
+    /// rows, padded up to `exec_rows` artifact rows.
+    pub fn record_execution(&self, jobs: u64, rows: u64, exec_rows: u64) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(jobs, Ordering::Relaxed);
+        self.padded_rows
+            .fetch_add(exec_rows.saturating_sub(rows), Ordering::Relaxed);
+        self.exec_rows.record(rows);
+        self.exec_jobs.record(jobs);
+    }
+
+    pub fn snapshot(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("executions", self.executions.load(Ordering::Relaxed));
+        o.insert("jobs", self.jobs.load(Ordering::Relaxed));
+        o.insert("bypass_jobs", self.bypass_jobs.load(Ordering::Relaxed));
+        o.insert("padded_rows", self.padded_rows.load(Ordering::Relaxed));
+        o.insert("rows_per_exec_avg", self.exec_rows.mean());
+        o.insert("rows_per_exec_max", self.exec_rows.max());
+        o.insert("jobs_per_exec_avg", self.exec_jobs.mean());
+        o.insert("jobs_per_exec_max", self.exec_jobs.max());
+        o.insert("queue_wait_avg_ms", self.queue_wait.mean() * 1e3);
+        o.insert(
+            "queue_wait_p99_ms",
+            self.queue_wait.percentile(99.0) * 1e3,
+        );
+        Value::Obj(o)
+    }
+
+    pub fn reset(&self) {
+        self.executions.store(0, Ordering::Relaxed);
+        self.jobs.store(0, Ordering::Relaxed);
+        self.bypass_jobs.store(0, Ordering::Relaxed);
+        self.padded_rows.store(0, Ordering::Relaxed);
+        self.exec_rows.reset();
+        self.exec_jobs.reset();
+        self.queue_wait.reset();
+    }
+}
 
 #[derive(Default)]
 pub struct ServingMetrics {
@@ -26,6 +89,9 @@ pub struct ServingMetrics {
     /// Async-phase time hidden under retrieval (the latency the paper's
     /// design removes from the critical path).
     pub overlap_saved_nanos: AtomicU64,
+    /// Cross-request coalescing counters (`Arc` so the coalescer's
+    /// dispatch thread records without holding the whole metrics struct).
+    pub coalesce: Arc<CoalesceStats>,
 }
 
 impl ServingMetrics {
@@ -73,12 +139,20 @@ impl ServingMetrics {
         o.insert("retrieval_rt", hist(&self.retrieval_rt));
         o.insert("requests", self.requests.load(Ordering::Relaxed));
         o.insert("errors", self.errors.load(Ordering::Relaxed));
-        o.insert("rtp_calls", self.rtp_calls.load(Ordering::Relaxed));
+        // Total fleet executions: direct per-request calls plus merged
+        // coalesced executions (which are one fleet call each) — so the
+        // counter stays meaningful whichever way dispatch is configured.
+        o.insert(
+            "rtp_calls",
+            self.rtp_calls.load(Ordering::Relaxed)
+                + self.coalesce.executions.load(Ordering::Relaxed),
+        );
         o.insert("items_scored", self.items_scored.load(Ordering::Relaxed));
         o.insert(
             "overlap_saved_ms_total",
             self.overlap_saved_nanos.load(Ordering::Relaxed) as f64 / 1e6,
         );
+        o.insert("coalesce", self.coalesce.snapshot());
         o.insert("qps", self.qps(wall));
         Value::Obj(o)
     }
@@ -93,6 +167,7 @@ impl ServingMetrics {
         self.rtp_calls.store(0, Ordering::Relaxed);
         self.items_scored.store(0, Ordering::Relaxed);
         self.overlap_saved_nanos.store(0, Ordering::Relaxed);
+        self.coalesce.reset();
     }
 }
 
@@ -115,5 +190,29 @@ mod tests {
         // 5ms async fully hidden under 10ms retrieval.
         let saved = snap.req("overlap_saved_ms_total").as_f64().unwrap();
         assert!((saved - 5.0).abs() < 0.01, "{saved}");
+        // Coalescing block is present (zeroed when coalescing is off).
+        assert_eq!(
+            snap.req("coalesce").req("executions").as_usize(),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn coalesce_stats_record_and_reset() {
+        let m = ServingMetrics::new();
+        m.coalesce.record_execution(3, 300, 512);
+        m.coalesce.record_execution(1, 100, 512);
+        m.coalesce.queue_wait.record(Duration::from_micros(150));
+        let snap = m.coalesce.snapshot();
+        assert_eq!(snap.req("executions").as_usize(), Some(2));
+        assert_eq!(snap.req("jobs").as_usize(), Some(4));
+        assert_eq!(snap.req("padded_rows").as_usize(), Some(212 + 412));
+        assert!(
+            (snap.req("rows_per_exec_avg").as_f64().unwrap() - 200.0).abs()
+                < 1e-9
+        );
+        m.reset();
+        assert_eq!(m.coalesce.executions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.coalesce.queue_wait.count(), 0);
     }
 }

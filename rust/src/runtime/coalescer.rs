@@ -1,0 +1,735 @@
+//! Cross-request dynamic micro-batching between the Merger and the RTP
+//! fleet.
+//!
+//! The pre-rank phase splits each candidate set into mini-batches "for
+//! separate and parallel model inference" (paper §1), but one request's
+//! final partial batch still pays a full padded head execution.  Under
+//! concurrent traffic the fleet therefore runs many small, padded
+//! executions instead of a few full ones.  The [`BatchCoalescer`] fixes
+//! that at the dispatch layer:
+//!
+//! * per-request head-execution **jobs** ([`HeadJob`]) queue per artifact;
+//! * jobs targeting the same artifact **coalesce across requests** into
+//!   one execution of the multi-user (`*_mu`) head flavor, packing up to
+//!   `max_rows` real rows from up to `max_slots` requests (the `_mu`
+//!   artifact gathers each row's user context by the `row_user` operand);
+//! * a queue **flushes** when full or when its oldest job has waited
+//!   `window`; a job whose deadline budget is nearly spent **bypasses**
+//!   the window and forces an immediate flush;
+//! * the merged score tensor is **scattered** back to per-request reply
+//!   channels by row range — `coordinator::batcher::pack_jobs` is the
+//!   single source of truth for the gather/scatter offsets (property-
+//!   tested in `rust/tests/prop_invariants.rs`);
+//! * **shutdown drains**: dropping the coalescer executes everything
+//!   still queued before joining, so no reply channel is ever dropped
+//!   (pinned by `rust/tests/coalescer_stress.rs`).
+//!
+//! The coalescer is generic over a [`HeadExecutor`] (implemented by
+//! [`super::RtpPool`]) so the concurrency tests drive it with a
+//! deterministic in-process executor and no artifacts.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::tensor::Tensor;
+use crate::coordinator::batcher::pack_jobs;
+use crate::metrics::CoalesceStats;
+use crate::util::threadpool::ThreadPool;
+
+/// Something that can run a head artifact asynchronously.  `RtpPool`
+/// implements this; tests substitute a deterministic in-process executor.
+pub trait HeadExecutor: Send + Sync + 'static {
+    fn execute_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Receiver<Result<Vec<Tensor>>>;
+}
+
+/// One per-request head-execution job.
+pub struct HeadJob {
+    /// The coalesced (`*_mu`) artifact this job targets.
+    pub artifact: String,
+    /// Real (unpadded) row count; must be `<= max_rows`.
+    pub rows: usize,
+    /// Row-aligned inputs, `[>= rows, ...]` each — only the first `rows`
+    /// first-axis rows are read, so padded tensors are fine.
+    pub row_inputs: Vec<Tensor>,
+    /// Request-level inputs in slot shape (no leading slot axis): the
+    /// merged execution stacks one slot per job.
+    pub user_inputs: Vec<Tensor>,
+    /// Absolute deadline; a job submitted with less than `bypass_margin`
+    /// remaining skips the coalescing window.
+    pub deadline: Option<Instant>,
+    pub reply: Sender<Result<JobScores>>,
+}
+
+/// What a job gets back.
+#[derive(Debug, Clone)]
+pub struct JobScores {
+    /// Exactly `rows` scores, in the job's row order.
+    pub scores: Vec<f32>,
+    /// Queue dwell between submit and dispatch.
+    pub queue_wait: Duration,
+    /// Real rows in the merged execution that served this job.
+    pub coalesced_rows: usize,
+    /// Jobs merged into that execution (1 = no coalescing happened).
+    pub coalesced_jobs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CoalescerConfig {
+    /// Artifact batch: every merged execution pads to this many rows.
+    pub exec_rows: usize,
+    /// Real-row pack cap per execution (`<= exec_rows`).
+    pub max_rows: usize,
+    /// User slots per execution (the `_mu` artifact's `U`).
+    pub max_slots: usize,
+    /// Max queue dwell before a forced flush.
+    pub window: Duration,
+    /// Jobs with less remaining deadline budget than this skip the wait.
+    pub bypass_margin: Duration,
+}
+
+enum Msg {
+    Job(HeadJob),
+    Shutdown,
+}
+
+/// The scheduler: one dispatch thread owning per-artifact queues, plus a
+/// small scatter pool that waits on RTP replies and fans scores back out.
+pub struct BatchCoalescer {
+    tx: Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    cfg: CoalescerConfig,
+}
+
+impl BatchCoalescer {
+    pub fn new(
+        executor: Arc<dyn HeadExecutor>,
+        cfg: CoalescerConfig,
+        stats: Arc<CoalesceStats>,
+    ) -> BatchCoalescer {
+        assert!(cfg.max_rows >= 1 && cfg.max_rows <= cfg.exec_rows);
+        assert!(cfg.max_slots >= 1);
+        let (tx, rx) = channel::<Msg>();
+        let cfg2 = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("aif-coalescer".into())
+            .spawn(move || {
+                Dispatcher {
+                    cfg: cfg2,
+                    executor,
+                    stats,
+                    scatter: ThreadPool::new(4),
+                    queues: HashMap::new(),
+                }
+                .run(rx)
+            })
+            .expect("spawn coalescer");
+        BatchCoalescer {
+            tx,
+            handle: Some(handle),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &CoalescerConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a job.  Replies always arrive — immediately with an error
+    /// for malformed jobs or a dead scheduler, via the scatter path
+    /// otherwise.
+    pub fn submit(&self, job: HeadJob) {
+        if job.rows == 0 {
+            let _ = job.reply.send(Ok(JobScores {
+                scores: Vec::new(),
+                queue_wait: Duration::ZERO,
+                coalesced_rows: 0,
+                coalesced_jobs: 0,
+            }));
+            return;
+        }
+        if job.rows > self.cfg.max_rows {
+            let _ = job.reply.send(Err(anyhow!(
+                "job of {} rows exceeds max_coalesced_batch {}",
+                job.rows,
+                self.cfg.max_rows
+            )));
+            return;
+        }
+        if let Err(std::sync::mpsc::SendError(Msg::Job(job))) =
+            self.tx.send(Msg::Job(job))
+        {
+            let _ = job
+                .reply
+                .send(Err(anyhow!("coalescer dispatch thread is gone")));
+        }
+    }
+}
+
+impl Drop for BatchCoalescer {
+    /// Drain, then join: every queued job executes (or errors) before the
+    /// coalescer is gone.
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Pending {
+    job: HeadJob,
+    enqueued: Instant,
+}
+
+struct Dispatcher {
+    cfg: CoalescerConfig,
+    executor: Arc<dyn HeadExecutor>,
+    stats: Arc<CoalesceStats>,
+    scatter: ThreadPool,
+    queues: HashMap<String, VecDeque<Pending>>,
+}
+
+impl Dispatcher {
+    fn run(mut self, rx: Receiver<Msg>) {
+        loop {
+            let msg = match self.next_flush_at() {
+                Some(at) => {
+                    let now = Instant::now();
+                    if at <= now {
+                        self.flush_expired(now);
+                        continue;
+                    }
+                    match rx.recv_timeout(at - now) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => {
+                            self.flush_expired(Instant::now());
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => Msg::Shutdown,
+                    }
+                }
+                None => match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => Msg::Shutdown,
+                },
+            };
+            match msg {
+                Msg::Job(job) => {
+                    let bypass = job.deadline.is_some_and(|d| {
+                        d.saturating_duration_since(Instant::now())
+                            <= self.cfg.bypass_margin
+                    });
+                    let artifact = job.artifact.clone();
+                    self.queues.entry(artifact.clone()).or_default().push_back(
+                        Pending {
+                            job,
+                            enqueued: Instant::now(),
+                        },
+                    );
+                    if bypass {
+                        self.stats
+                            .bypass_jobs
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    // Full executions always leave now; a bypass flushes
+                    // the whole queue (riders merge in for free).
+                    self.flush(&artifact, bypass);
+                }
+                Msg::Shutdown => break,
+            }
+        }
+        // Drain everything still queued so no reply channel is dropped.
+        let artifacts: Vec<String> = self.queues.keys().cloned().collect();
+        for a in artifacts {
+            self.flush(&a, true);
+        }
+        // `self.scatter` drops here, joining in-flight scatter tasks.
+    }
+
+    /// Earliest `enqueued + window` over all queued jobs.
+    fn next_flush_at(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|p| p.enqueued + self.cfg.window))
+            .min()
+    }
+
+    fn flush_expired(&mut self, now: Instant) {
+        let expired: Vec<String> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front()
+                    .is_some_and(|p| now >= p.enqueued + self.cfg.window)
+            })
+            .map(|(a, _)| a.clone())
+            .collect();
+        for a in expired {
+            self.flush(&a, true);
+        }
+    }
+
+    /// Emit merged executions for one artifact queue.  Without `force`,
+    /// only full packs (closed by the row or slot cap) leave; the
+    /// remainder keeps waiting on its window.  With `force`, the queue
+    /// drains completely.
+    fn flush(&mut self, artifact: &str, force: bool) {
+        loop {
+            let Some(queue) = self.queues.get_mut(artifact) else {
+                return;
+            };
+            if queue.is_empty() {
+                self.queues.remove(artifact);
+                return;
+            }
+            let rows: Vec<usize> = queue.iter().map(|p| p.job.rows).collect();
+            let plan =
+                pack_jobs(&rows, self.cfg.max_rows, self.cfg.max_slots);
+            let first = &plan[0];
+            let first_rows: usize = first.iter().map(|s| s.rows).sum();
+            let full = plan.len() > 1
+                || first_rows == self.cfg.max_rows
+                || first.len() == self.cfg.max_slots;
+            if !force && !full {
+                return;
+            }
+            let pack: Vec<Pending> =
+                queue.drain(..first.len()).collect();
+            self.execute_pack(artifact, pack);
+        }
+    }
+
+    /// Merge one pack into a single execution and hand scatter-back to
+    /// the scatter pool.
+    fn execute_pack(&self, artifact: &str, pack: Vec<Pending>) {
+        let now = Instant::now();
+        let rows_total: usize = pack.iter().map(|p| p.job.rows).sum();
+        let waits: Vec<Duration> = pack
+            .iter()
+            .map(|p| now.saturating_duration_since(p.enqueued))
+            .collect();
+        for w in &waits {
+            self.stats.queue_wait.record(*w);
+        }
+        self.stats.record_execution(
+            pack.len() as u64,
+            rows_total as u64,
+            self.cfg.exec_rows as u64,
+        );
+        let inputs = match merge_inputs(
+            &pack,
+            self.cfg.exec_rows,
+            self.cfg.max_slots,
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in pack {
+                    let _ = p.job.reply.send(Err(anyhow!("{msg}")));
+                }
+                return;
+            }
+        };
+        let rx = self.executor.execute_async(artifact, inputs);
+        let n_jobs = pack.len();
+        self.scatter.spawn(move || {
+            let result = rx
+                .recv()
+                .map_err(|_| anyhow!("RTP worker dropped the reply"))
+                .and_then(|r| r);
+            match result {
+                Ok(outs) => scatter_back(pack, waits, outs, rows_total, n_jobs),
+                Err(e) => {
+                    let msg = format!("coalesced execution failed: {e:#}");
+                    for p in pack {
+                        let _ = p.job.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Slice the merged score tensor back out by row range.
+fn scatter_back(
+    pack: Vec<Pending>,
+    waits: Vec<Duration>,
+    outs: Vec<Tensor>,
+    rows_total: usize,
+    n_jobs: usize,
+) {
+    let scores = match outs.first() {
+        Some(t) if t.len() >= rows_total => t,
+        Some(t) => {
+            let msg = format!(
+                "merged execution returned {} scores for {rows_total} rows",
+                t.len()
+            );
+            for p in pack {
+                let _ = p.job.reply.send(Err(anyhow!("{msg}")));
+            }
+            return;
+        }
+        None => {
+            for p in pack {
+                let _ = p
+                    .job
+                    .reply
+                    .send(Err(anyhow!("merged execution returned no output")));
+            }
+            return;
+        }
+    };
+    let data = scores.data();
+    let mut offset = 0;
+    for (p, wait) in pack.into_iter().zip(waits) {
+        let rows = p.job.rows;
+        let _ = p.job.reply.send(Ok(JobScores {
+            scores: data[offset..offset + rows].to_vec(),
+            queue_wait: wait,
+            coalesced_rows: rows_total,
+            coalesced_jobs: n_jobs,
+        }));
+        offset += rows;
+    }
+}
+
+/// Build the merged `_mu` input list: per-request tensors stacked into
+/// user slots (padded to the artifact's fixed `max_slots` by repeating
+/// the last job's slot — compiled artifacts are static-shaped), row-
+/// aligned tensors concatenated by real rows (padded to `exec_rows` by
+/// repeating the last real row), plus the row→slot index operand last.
+fn merge_inputs(
+    pack: &[Pending],
+    exec_rows: usize,
+    max_slots: usize,
+) -> Result<Vec<Tensor>> {
+    let first = &pack[0].job;
+    let n_user = first.user_inputs.len();
+    let n_row = first.row_inputs.len();
+    for p in pack.iter().skip(1) {
+        anyhow::ensure!(
+            p.job.user_inputs.len() == n_user
+                && p.job.row_inputs.len() == n_row,
+            "jobs for one artifact disagree on input arity"
+        );
+    }
+    let n_slots = pack.len();
+    anyhow::ensure!(n_slots <= max_slots, "pack exceeds max_slots");
+    let mut inputs = Vec::with_capacity(n_user + n_row + 1);
+
+    // User slots: [max_slots, slot shape...]; unused slots repeat the
+    // last job's slot (padding rows' row_user points there too).
+    for i in 0..n_user {
+        let slot_shape = first.user_inputs[i].shape.clone();
+        let slot_len: usize = slot_shape.iter().product();
+        let mut data = Vec::with_capacity(max_slots * slot_len);
+        for p in pack {
+            let t = &p.job.user_inputs[i];
+            anyhow::ensure!(
+                t.shape == slot_shape,
+                "user input {i}: slot shape {:?} != {:?}",
+                t.shape,
+                slot_shape
+            );
+            data.extend_from_slice(t.data());
+        }
+        let last = data[(n_slots - 1) * slot_len..].to_vec();
+        for _ in n_slots..max_slots {
+            data.extend_from_slice(&last);
+        }
+        let mut shape = vec![max_slots];
+        shape.extend_from_slice(&slot_shape);
+        inputs.push(Tensor::new(shape, data));
+    }
+
+    // Row-aligned inputs: the first `rows` rows of each job, padded to
+    // `exec_rows` with the last real row.
+    for i in 0..n_row {
+        let t0 = &first.row_inputs[i];
+        anyhow::ensure!(
+            !t0.shape.is_empty() && t0.shape[0] >= first.rows,
+            "row input {i}: shape {:?} has fewer rows than the job",
+            t0.shape
+        );
+        let width: usize = t0.shape[1..].iter().product::<usize>().max(1);
+        let mut data = Vec::with_capacity(exec_rows * width);
+        for p in pack {
+            let t = &p.job.row_inputs[i];
+            anyhow::ensure!(
+                t.shape[1..] == t0.shape[1..]
+                    && t.shape[0] >= p.job.rows,
+                "row input {i}: shape {:?} incompatible with {:?}",
+                t.shape,
+                t0.shape
+            );
+            data.extend_from_slice(&t.data()[..p.job.rows * width]);
+        }
+        let rows_total = data.len() / width;
+        anyhow::ensure!(rows_total <= exec_rows, "pack exceeds exec_rows");
+        let last = data[(rows_total - 1) * width..].to_vec();
+        for _ in rows_total..exec_rows {
+            data.extend_from_slice(&last);
+        }
+        let mut shape = vec![exec_rows];
+        shape.extend_from_slice(&t0.shape[1..]);
+        inputs.push(Tensor::new(shape, data));
+    }
+
+    // row_user: slot index per row; padding rows point at the last slot.
+    let mut row_user = Vec::with_capacity(exec_rows);
+    for (slot, p) in pack.iter().enumerate() {
+        row_user.extend(std::iter::repeat(slot as f32).take(p.job.rows));
+    }
+    while row_user.len() < exec_rows {
+        row_user.push((n_slots - 1) as f32);
+    }
+    inputs.push(Tensor::new(vec![exec_rows], row_user));
+    Ok(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(
+        artifact: &str,
+        user_val: f32,
+        rows: &[f32],
+        deadline: Option<Instant>,
+    ) -> (HeadJob, Receiver<Result<JobScores>>) {
+        let (tx, rx) = channel();
+        (
+            HeadJob {
+                artifact: artifact.into(),
+                rows: rows.len(),
+                row_inputs: vec![Tensor::new(
+                    vec![rows.len(), 1],
+                    rows.to_vec(),
+                )],
+                user_inputs: vec![Tensor::new(vec![1], vec![user_val])],
+                deadline,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    /// Deterministic mu-gather executor: score[r] =
+    /// user[row_user[r]] * 1000 + row_val[r].
+    struct GatherExec;
+
+    impl HeadExecutor for GatherExec {
+        fn execute_async(
+            &self,
+            _artifact: &str,
+            inputs: Vec<Tensor>,
+        ) -> Receiver<Result<Vec<Tensor>>> {
+            let (tx, rx) = channel();
+            let users = inputs[0].data();
+            let rows = inputs[1].data();
+            let idx = inputs[2].data();
+            let scores: Vec<f32> = rows
+                .iter()
+                .zip(idx.iter())
+                .map(|(&v, &s)| users[s as usize] * 1000.0 + v)
+                .collect();
+            let n = scores.len();
+            let _ = tx.send(Ok(vec![Tensor::new(vec![n], scores)]));
+            rx
+        }
+    }
+
+    fn coalescer(window_ms: u64, max_rows: usize, slots: usize) -> (
+        BatchCoalescer,
+        Arc<CoalesceStats>,
+    ) {
+        let stats = Arc::new(CoalesceStats::default());
+        let c = BatchCoalescer::new(
+            Arc::new(GatherExec),
+            CoalescerConfig {
+                exec_rows: max_rows,
+                max_rows,
+                max_slots: slots,
+                window: Duration::from_millis(window_ms),
+                bypass_margin: Duration::from_millis(2),
+            },
+            Arc::clone(&stats),
+        );
+        (c, stats)
+    }
+
+    #[test]
+    fn two_jobs_coalesce_within_the_window() {
+        let (c, stats) = coalescer(400, 8, 4);
+        let (j1, r1) = job("a", 1.0, &[1.0, 2.0], None);
+        let (j2, r2) = job("a", 2.0, &[5.0], None);
+        c.submit(j1);
+        c.submit(j2);
+        let s1 = r1.recv().unwrap().unwrap();
+        let s2 = r2.recv().unwrap().unwrap();
+        assert_eq!(s1.scores, vec![1001.0, 1002.0]);
+        assert_eq!(s2.scores, vec![2005.0]);
+        assert_eq!(s1.coalesced_jobs, 2, "merged into one execution");
+        assert_eq!(s1.coalesced_rows, 3);
+        assert_eq!(
+            stats
+                .executions
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        drop(c);
+    }
+
+    #[test]
+    fn full_pack_flushes_before_the_window() {
+        let (c, _) = coalescer(60_000, 3, 4);
+        let (j1, r1) = job("a", 1.0, &[1.0, 2.0], None);
+        let (j2, r2) = job("a", 2.0, &[5.0], None);
+        let t0 = Instant::now();
+        c.submit(j1);
+        c.submit(j2);
+        assert_eq!(r1.recv().unwrap().unwrap().scores, vec![1001.0, 1002.0]);
+        assert_eq!(r2.recv().unwrap().unwrap().scores, vec![2005.0]);
+        assert!(t0.elapsed() < Duration::from_secs(30), "no window wait");
+    }
+
+    #[test]
+    fn deadline_bypass_skips_the_window() {
+        let (c, stats) = coalescer(60_000, 8, 4);
+        let t0 = Instant::now();
+        let (j, r) =
+            job("a", 3.0, &[7.0], Some(Instant::now()));
+        c.submit(j);
+        let s = r.recv().unwrap().unwrap();
+        assert_eq!(s.scores, vec![3007.0]);
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        assert_eq!(
+            stats
+                .bypass_jobs
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn artifacts_never_mix() {
+        let (c, stats) = coalescer(100, 8, 4);
+        let (ja, ra) = job("a", 1.0, &[1.0], None);
+        let (jb, rb) = job("b", 2.0, &[1.0], None);
+        c.submit(ja);
+        c.submit(jb);
+        assert_eq!(ra.recv().unwrap().unwrap().coalesced_jobs, 1);
+        assert_eq!(rb.recv().unwrap().unwrap().coalesced_jobs, 1);
+        assert_eq!(
+            stats
+                .executions
+                .load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+    }
+
+    /// Compiled artifacts are static-shaped: every merged execution must
+    /// arrive padded to exactly [max_slots, ...] user slots and
+    /// [exec_rows, ...] rows, regardless of how many jobs coalesced —
+    /// `Engine::execute` hard-rejects anything else.
+    struct StaticShapeExec {
+        exec_rows: usize,
+        slots: usize,
+    }
+
+    impl HeadExecutor for StaticShapeExec {
+        fn execute_async(
+            &self,
+            _artifact: &str,
+            inputs: Vec<Tensor>,
+        ) -> Receiver<Result<Vec<Tensor>>> {
+            let (tx, rx) = channel();
+            assert_eq!(inputs[0].shape, vec![self.slots, 1], "user slots");
+            assert_eq!(inputs[1].shape, vec![self.exec_rows, 1], "rows");
+            assert_eq!(inputs[2].shape, vec![self.exec_rows], "row_user");
+            let idx = inputs[2].data();
+            assert!(
+                idx.iter().all(|&s| (s as usize) < self.slots),
+                "row_user points inside the slot range"
+            );
+            let users = inputs[0].data();
+            let rows = inputs[1].data();
+            let scores: Vec<f32> = rows
+                .iter()
+                .zip(idx.iter())
+                .map(|(&v, &s)| users[s as usize] * 1000.0 + v)
+                .collect();
+            let n = scores.len();
+            let _ = tx.send(Ok(vec![Tensor::new(vec![n], scores)]));
+            rx
+        }
+    }
+
+    #[test]
+    fn merged_inputs_keep_the_artifact_static_shapes() {
+        // 2 jobs into a 5-slot / 16-row artifact: slots and rows both
+        // need padding; scores still come back exact.
+        let stats = Arc::new(CoalesceStats::default());
+        let c = BatchCoalescer::new(
+            Arc::new(StaticShapeExec {
+                exec_rows: 16,
+                slots: 5,
+            }),
+            CoalescerConfig {
+                exec_rows: 16,
+                max_rows: 16,
+                max_slots: 5,
+                window: Duration::from_millis(200),
+                bypass_margin: Duration::from_millis(1),
+            },
+            stats,
+        );
+        let (j1, r1) = job("a", 1.0, &[1.0, 2.0, 3.0], None);
+        let (j2, r2) = job("a", 2.0, &[7.0], None);
+        c.submit(j1);
+        c.submit(j2);
+        assert_eq!(
+            r1.recv().unwrap().unwrap().scores,
+            vec![1001.0, 1002.0, 1003.0]
+        );
+        assert_eq!(r2.recv().unwrap().unwrap().scores, vec![2007.0]);
+    }
+
+    #[test]
+    fn oversized_and_empty_jobs_reply_immediately() {
+        let (c, _) = coalescer(60_000, 2, 4);
+        let (j, r) = job("a", 1.0, &[1.0, 2.0, 3.0], None);
+        c.submit(j);
+        assert!(r.recv().unwrap().is_err(), "3 rows > max 2");
+        let (j, r) = job("a", 1.0, &[], None);
+        c.submit(j);
+        assert!(r.recv().unwrap().unwrap().scores.is_empty());
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs() {
+        let (c, _) = coalescer(60_000, 64, 8);
+        let rxs: Vec<_> = (0..5)
+            .map(|i| {
+                let (j, r) =
+                    job("a", i as f32, &[i as f32 + 0.5], None);
+                c.submit(j);
+                r
+            })
+            .collect();
+        drop(c); // must flush, not abandon
+        for (i, r) in rxs.into_iter().enumerate() {
+            let s = r.recv().expect("reply delivered on shutdown").unwrap();
+            assert_eq!(s.scores, vec![i as f32 * 1000.0 + i as f32 + 0.5]);
+        }
+    }
+}

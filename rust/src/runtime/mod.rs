@@ -5,11 +5,15 @@
 //! with the python AOT path; `Tensor` is the host-side currency.
 
 pub mod artifact;
+pub mod coalescer;
 pub mod engine;
 pub mod pool;
 pub mod tensor;
 
 pub use artifact::{Manifest, Table, VariantSpec};
+pub use coalescer::{
+    BatchCoalescer, CoalescerConfig, HeadExecutor, HeadJob, JobScores,
+};
 pub use engine::Engine;
 pub use pool::RtpPool;
 pub use tensor::Tensor;

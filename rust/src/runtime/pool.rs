@@ -112,3 +112,15 @@ impl RtpPool {
         Ok(out.pop().unwrap())
     }
 }
+
+/// The fleet is the production executor behind the cross-request
+/// [`super::BatchCoalescer`].
+impl super::coalescer::HeadExecutor for RtpPool {
+    fn execute_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Receiver<Result<Vec<Tensor>>> {
+        self.call_async(artifact, inputs)
+    }
+}

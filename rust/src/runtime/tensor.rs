@@ -54,6 +54,21 @@ impl Tensor {
         &self.data[i * w..(i + 1) * w]
     }
 
+    /// Same storage under a new shape (no copy — the data is `Arc`-backed).
+    /// The element count must match.
+    pub fn reshaped(&self, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        Tensor {
+            shape,
+            data: Arc::clone(&self.data),
+        }
+    }
+
     /// Approximate byte footprint (what the N2O/caching accounting reports).
     pub fn size_bytes(&self) -> usize {
         self.data.len() * 4 + self.shape.len() * 8
@@ -121,6 +136,14 @@ mod tests {
     fn clone_shares_storage() {
         let a = Tensor::new(vec![2], vec![1., 2.]);
         let b = a.clone();
+        assert_eq!(a.data().as_ptr(), b.data().as_ptr());
+    }
+
+    #[test]
+    fn reshaped_shares_storage() {
+        let a = Tensor::new(vec![1, 4], vec![1., 2., 3., 4.]);
+        let b = a.reshaped(vec![4]);
+        assert_eq!(b.shape, vec![4]);
         assert_eq!(a.data().as_ptr(), b.data().as_ptr());
     }
 }

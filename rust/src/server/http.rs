@@ -2,7 +2,10 @@
 //! vendored set; DESIGN.md §10.4):
 //!
 //! * `GET  /healthz` — liveness.
-//! * `GET  /metrics` — JSON metrics snapshot.
+//! * `GET  /metrics` — JSON metrics snapshot, including the `coalesce`
+//!   block (merged executions, rows/jobs per execution, queue-wait
+//!   percentiles) when the pipeline runs the cross-request coalescer —
+//!   zeros otherwise.
 //! * `GET  /v1/score?user=<id>[&top_k=K][&trace=1][&deadline_ms=D]`
 //! * `POST /v1/score` — JSON `ScoreRequest` body; `{"users": [..]}`
 //!   batches share the optional knobs and answer `{"results": [..]}`.

@@ -73,6 +73,28 @@ pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
     Gen::new(move |rng| lo + rng.f64() * (hi - lo))
 }
 
+/// Pair of independent generators with component-wise shrinking.
+pub fn tuple2<A: Clone + 'static, B: Clone + 'static>(
+    a: Gen<A>,
+    b: Gen<B>,
+) -> Gen<(A, B)> {
+    let (make_a, shrink_a) = (a.make, a.shrink);
+    let (make_b, shrink_b) = (b.make, b.shrink);
+    Gen {
+        make: Box::new(move |rng| (make_a(rng), make_b(rng))),
+        shrink: Box::new(move |(x, y): &(A, B)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for sx in shrink_a(x) {
+                out.push((sx, y.clone()));
+            }
+            for sy in shrink_b(y) {
+                out.push((x.clone(), sy));
+            }
+            out
+        }),
+    }
+}
+
 /// Vector of length in [0, max_len) with element-removal + element shrink.
 pub fn vec_of<T: Clone + 'static>(
     elem: Gen<T>,
@@ -211,6 +233,28 @@ mod tests {
             PropResult::Fail { shrunk, .. } => {
                 // Greedy shrink should land near the boundary.
                 assert!(shrunk >= 500 && shrunk <= 520, "shrunk to {shrunk}");
+            }
+            PropResult::Pass => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn tuple2_shrinks_componentwise() {
+        let gen = tuple2(usize_in(0, 100), usize_in(0, 100));
+        match forall(&gen, 500, 3, |&(a, b)| {
+            if a + b < 120 {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b} >= 120"))
+            }
+        }) {
+            PropResult::Fail {
+                case: (ca, cb),
+                shrunk: (a, b),
+                ..
+            } => {
+                assert!(a + b >= 120, "shrunk case still fails");
+                assert!(a + b <= ca + cb, "shrinking never grows the case");
             }
             PropResult::Pass => panic!("should have failed"),
         }

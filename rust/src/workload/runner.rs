@@ -149,6 +149,31 @@ pub fn open_loop<P: PreRanker + ?Sized + 'static>(
     report(name, ranker, n_requests, errors.load(Ordering::Relaxed), wall)
 }
 
+/// Closed-loop ladder at explicit client counts — the grid that
+/// `benches/e2e_throughput.rs` uses to compare coalescing on vs off
+/// under concurrent load (the dispatch layer only pays off once several
+/// requests are in flight, so the interesting rows are >= 8 clients).
+pub fn concurrency_sweep<P: PreRanker + ?Sized + 'static>(
+    name_prefix: &str,
+    ranker: &Arc<P>,
+    clients: &[usize],
+    requests_per_step: u64,
+    seed: u64,
+) -> Vec<LoadReport> {
+    clients
+        .iter()
+        .map(|&c| {
+            closed_loop(
+                &format!("{name_prefix} clients={c}"),
+                ranker,
+                requests_per_step,
+                c,
+                seed,
+            )
+        })
+        .collect()
+}
+
 /// maxQPS: closed-loop saturation with a client ladder; returns the peak
 /// observed throughput (the paper's maxQPS column).
 pub fn max_qps<P: PreRanker + ?Sized + 'static>(

@@ -1,0 +1,246 @@
+//! Deterministic concurrency harness for the cross-request
+//! [`BatchCoalescer`]: N threads x M requests with a seeded `Pcg64`
+//! workload through a pure in-process executor, asserting that every
+//! request gets back exactly its own scores (no cross-request scatter
+//! leaks), that per-artifact queues never mix, and that shutdown drains —
+//! no reply channel is ever dropped.  No artifacts or PJRT involved.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aif::metrics::CoalesceStats;
+use aif::runtime::{
+    BatchCoalescer, CoalescerConfig, HeadExecutor, HeadJob, JobScores,
+    Tensor,
+};
+use aif::util::rng::Pcg64;
+
+/// Deterministic mu-gather executor mirroring the `_mu` artifact
+/// contract: inputs are `[user_slots [U,1], row_vals [B,1], row_user
+/// [B]]` and `score[r] = mult * user[row_user[r]] + row_vals[r]`.  The
+/// per-artifact multiplier makes any cross-artifact mixing show up as a
+/// wrong score, not just a wrong count.
+struct GatherExec;
+
+/// Power-of-two multipliers keep every score an exactly representable
+/// f32 integer (all terms stay below 2^24), so the assertions are
+/// bitwise-exact rather than tolerance-based.
+fn artifact_mult(artifact: &str) -> f32 {
+    match artifact {
+        "mu_a" => 131_072.0,    // 2^17
+        "mu_b" => 1_048_576.0,  // 2^20
+        other => panic!("unexpected artifact {other:?}"),
+    }
+}
+
+impl HeadExecutor for GatherExec {
+    fn execute_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Receiver<Result<Vec<Tensor>, anyhow::Error>> {
+        let (tx, rx) = channel();
+        let mult = artifact_mult(artifact);
+        let users = inputs[0].data();
+        let rows = inputs[1].data();
+        let idx = inputs[2].data();
+        assert_eq!(rows.len(), idx.len(), "row inputs align with row_user");
+        let scores: Vec<f32> = rows
+            .iter()
+            .zip(idx.iter())
+            .map(|(&v, &s)| mult * users[s as usize] + v)
+            .collect();
+        let n = scores.len();
+        let _ = tx.send(Ok(vec![Tensor::new(vec![n], scores)]));
+        rx
+    }
+}
+
+fn coalescer(cfg: CoalescerConfig) -> (BatchCoalescer, Arc<CoalesceStats>) {
+    let stats = Arc::new(CoalesceStats::default());
+    let c = BatchCoalescer::new(
+        Arc::new(GatherExec),
+        cfg,
+        Arc::clone(&stats),
+    );
+    (c, stats)
+}
+
+/// One request's job: row values encoding (request, row), a user value
+/// encoding the request, and the exact scores the executor must return.
+/// Every term is an integer below 2^24, so f32 arithmetic is exact.
+fn make_job(
+    artifact: &str,
+    request: u32,
+    n_rows: usize,
+) -> (HeadJob, Vec<f32>, Receiver<Result<JobScores, anyhow::Error>>) {
+    let user_val = (request % 8) as f32;
+    let rows: Vec<f32> = (0..n_rows)
+        .map(|r| (request * 64 + r as u32) as f32)
+        .collect();
+    let expect: Vec<f32> = rows
+        .iter()
+        .map(|v| artifact_mult(artifact) * user_val + v)
+        .collect();
+    let (reply, rx): (Sender<Result<JobScores, anyhow::Error>>, _) =
+        channel();
+    (
+        HeadJob {
+            artifact: artifact.into(),
+            rows: n_rows,
+            row_inputs: vec![Tensor::new(vec![n_rows, 1], rows)],
+            user_inputs: vec![Tensor::new(vec![1], vec![user_val])],
+            deadline: None,
+            reply,
+        },
+        expect,
+        rx,
+    )
+}
+
+#[test]
+fn stress_no_scatter_leaks_across_requests() {
+    const N_THREADS: usize = 8;
+    const M_REQUESTS: usize = 200;
+    let (c, stats) = coalescer(CoalescerConfig {
+        exec_rows: 64,
+        max_rows: 64,
+        max_slots: 4,
+        window: Duration::from_micros(200),
+        bypass_margin: Duration::from_millis(2),
+    });
+    let c = Arc::new(c);
+    let mut handles = Vec::new();
+    for t in 0..N_THREADS {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::with_stream(0xC0A1E5CE, t as u64);
+            for m in 0..M_REQUESTS {
+                let request = (t * M_REQUESTS + m) as u32;
+                // Both artifacts, skewed toward partial batches so most
+                // executions coalesce several requests.
+                let artifact = if rng.chance(0.25) { "mu_b" } else { "mu_a" };
+                let n_rows = 1 + rng.below(48) as usize;
+                let (job, expect, rx) = make_job(artifact, request, n_rows);
+                c.submit(job);
+                let got = rx
+                    .recv()
+                    .expect("reply channel alive")
+                    .expect("execution succeeds");
+                assert_eq!(
+                    got.scores, expect,
+                    "request {request} got someone else's rows"
+                );
+                assert!(got.coalesced_jobs >= 1);
+                assert!(got.coalesced_rows >= n_rows);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no worker panicked");
+    }
+    let total = (N_THREADS * M_REQUESTS) as u64;
+    let jobs = stats.jobs.load(std::sync::atomic::Ordering::Relaxed);
+    let execs = stats
+        .executions
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(jobs, total, "every job was dispatched exactly once");
+    assert!(execs <= jobs, "executions never exceed jobs");
+    drop(c);
+}
+
+#[test]
+fn seeded_workload_is_exact_under_forced_merging() {
+    // Single-threaded, giant window: all jobs of a wave must merge into
+    // full packs deterministically, and each must still get exactly its
+    // own slice back.
+    let (c, stats) = coalescer(CoalescerConfig {
+        exec_rows: 32,
+        max_rows: 32,
+        max_slots: 3,
+        window: Duration::from_millis(300),
+        bypass_margin: Duration::from_millis(1),
+    });
+    let mut rng = Pcg64::new(0xA1F);
+    let mut pending = Vec::new();
+    for request in 0..40u32 {
+        let n_rows = 1 + rng.below(16) as usize;
+        let (job, expect, rx) = make_job("mu_a", request, n_rows);
+        c.submit(job);
+        pending.push((request, expect, rx));
+    }
+    for (request, expect, rx) in pending {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.scores, expect, "request {request}");
+    }
+    let execs = stats
+        .executions
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(execs < 40, "forced merging produced fewer executions: {execs}");
+    drop(c);
+}
+
+#[test]
+fn shutdown_drains_every_reply_channel() {
+    // Jobs parked behind an hour-long window; dropping the coalescer must
+    // flush them through the executor rather than dropping the repliers.
+    let (c, _) = coalescer(CoalescerConfig {
+        exec_rows: 256,
+        max_rows: 256,
+        max_slots: 8,
+        window: Duration::from_secs(3600),
+        bypass_margin: Duration::from_millis(1),
+    });
+    let mut pending = Vec::new();
+    for request in 0..30u32 {
+        let (job, expect, rx) = make_job("mu_a", request, 5);
+        c.submit(job);
+        pending.push((expect, rx));
+    }
+    drop(c);
+    for (expect, rx) in pending {
+        let got = rx
+            .recv()
+            .expect("no reply channel dropped on shutdown")
+            .expect("drained jobs execute, not error");
+        assert_eq!(got.scores, expect);
+    }
+}
+
+#[test]
+fn deadline_bypass_jumps_the_window() {
+    let (c, stats) = coalescer(CoalescerConfig {
+        exec_rows: 64,
+        max_rows: 64,
+        max_slots: 8,
+        window: Duration::from_secs(3600),
+        bypass_margin: Duration::from_millis(5),
+    });
+    let (mut job, expect, rx) = make_job("mu_a", 7, 3);
+    job.deadline = Some(Instant::now() + Duration::from_millis(1));
+    let t0 = Instant::now();
+    c.submit(job);
+    let got = rx.recv().unwrap().unwrap();
+    assert_eq!(got.scores, expect);
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "bypass must not wait out the hour-long window"
+    );
+    assert_eq!(
+        stats.bypass_jobs.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    // A job with plenty of budget does not bypass; it rides the next
+    // flush (here: shutdown drain).
+    let (mut job, expect, rx) = make_job("mu_a", 8, 2);
+    job.deadline = Some(Instant::now() + Duration::from_secs(3600));
+    c.submit(job);
+    drop(c);
+    assert_eq!(rx.recv().unwrap().unwrap().scores, expect);
+    assert_eq!(
+        stats.bypass_jobs.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "far deadlines do not bypass"
+    );
+}

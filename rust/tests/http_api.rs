@@ -135,6 +135,10 @@ fn healthz_and_metrics() {
     let v = Value::parse(&body).expect("metrics is JSON");
     assert!(v.get("requests").is_some());
     assert!(v.get("qps").is_some());
+    // Coalescing counters ride along (zeroed when the knob is off).
+    let co = v.req("coalesce");
+    assert_eq!(co.req("executions").as_usize(), Some(0));
+    assert!(co.get("queue_wait_p99_ms").is_some());
     server.shutdown();
 }
 

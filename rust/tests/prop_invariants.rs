@@ -75,6 +75,140 @@ fn prop_merge_scores_strips_padding_exactly() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Cross-request coalescing: pack_jobs / scatter_scores offsets.
+// ---------------------------------------------------------------------
+
+/// Generator for (n_candidates, batch, max_rows, max_slots) coalescing
+/// shapes, with `batch <= max_rows` as the coalescer enforces.
+fn coalesce_shape_gen() -> Gen<(usize, usize, usize, usize)> {
+    Gen::new(|rng: &mut Pcg64| {
+        let n = 1 + rng.below(3000) as usize;
+        let batch = 1 + rng.below(300) as usize;
+        let max_rows = batch * (1 + rng.below(4) as usize);
+        let max_slots = 1 + rng.below(6) as usize;
+        (n, batch, max_rows, max_slots)
+    })
+}
+
+#[test]
+fn prop_pack_jobs_partitions_fifo_within_caps() {
+    check(
+        "pack_jobs partitions",
+        &coalesce_shape_gen(),
+        300,
+        |&(n, batch, max_rows, max_slots)| {
+            let cands: Vec<u32> = (0..n as u32).collect();
+            let rows: Vec<usize> = batcher::split(&cands, batch)
+                .iter()
+                .map(|b| b.items.len())
+                .collect();
+            let plan = batcher::pack_jobs(&rows, max_rows, max_slots);
+            let mut next_job = 0usize;
+            for exec in &plan {
+                if exec.is_empty() {
+                    return Err("empty execution".into());
+                }
+                if exec.len() > max_slots {
+                    return Err(format!("{} slots > {max_slots}", exec.len()));
+                }
+                let total: usize = exec.iter().map(|s| s.rows).sum();
+                if total > max_rows {
+                    return Err(format!("{total} rows > {max_rows}"));
+                }
+                let mut offset = 0usize;
+                for slot in exec {
+                    // FIFO: jobs appear exactly once, in submission order,
+                    // at prefix-sum offsets.
+                    if slot.job != next_job {
+                        return Err(format!(
+                            "job {} out of order (expected {next_job})",
+                            slot.job
+                        ));
+                    }
+                    if slot.offset != offset || slot.rows != rows[slot.job] {
+                        return Err(format!("bad slot {slot:?}"));
+                    }
+                    next_job += 1;
+                    offset += slot.rows;
+                }
+            }
+            if next_job != rows.len() {
+                return Err(format!(
+                    "{next_job} of {} jobs packed",
+                    rows.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coalesced_scatter_equals_per_request_merge() {
+    // End to end: split a request into mini-batches, pack them through the
+    // coalescer's plan, score the merged (padded) executions, scatter the
+    // slices back, merge per-request — identical to scoring per-request.
+    // Scores encode the global candidate index; padding rows repeat the
+    // last real row exactly like runtime::coalescer::merge_inputs does.
+    check(
+        "coalesced merge == merge_scores",
+        &coalesce_shape_gen(),
+        300,
+        |&(n, batch, max_rows, max_slots)| {
+            let cands: Vec<u32> = (0..n as u32).collect();
+            let jobs = batcher::split(&cands, batch);
+            let rows: Vec<usize> =
+                jobs.iter().map(|b| b.items.len()).collect();
+            let plan = batcher::pack_jobs(&rows, max_rows, max_slots);
+            let mut per_batch: Vec<Option<Vec<f32>>> =
+                vec![None; jobs.len()];
+            for exec in &plan {
+                // Gather: concatenate each job's real rows...
+                let mut merged: Vec<f32> = Vec::new();
+                for slot in exec {
+                    if slot.offset != merged.len() {
+                        return Err(format!(
+                            "gather offset {} != {}",
+                            slot.offset,
+                            merged.len()
+                        ));
+                    }
+                    merged.extend(
+                        jobs[slot.job].items.iter().map(|&g| g as f32),
+                    );
+                }
+                // ...then pad to the artifact batch with the last row,
+                // as the merged execution does.
+                let last = *merged.last().unwrap();
+                merged.resize(max_rows, last);
+                // Scatter the "scores" back by offset.
+                for (job, scores) in
+                    batcher::scatter_scores(exec, &merged)
+                {
+                    if per_batch[job].is_some() {
+                        return Err(format!("job {job} scattered twice"));
+                    }
+                    per_batch[job] = Some(scores);
+                }
+            }
+            let per_batch: Vec<Vec<f32>> = per_batch
+                .into_iter()
+                .map(|b| b.ok_or("job never scattered".to_string()))
+                .collect::<Result<_, _>>()?;
+            let merged = batcher::merge_scores(n, batch, &per_batch);
+            for (g, v) in merged.iter().enumerate() {
+                if *v != g as f32 {
+                    return Err(format!(
+                        "candidate {g} scored {v} after coalescing"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_top_k_is_truly_maximal() {
     let gen = vec_of(usize_in(0, 10_000), 600);

@@ -181,6 +181,87 @@ fn pallas_flavor_matches_ref_flavor() {
 }
 
 #[test]
+fn coalesced_head_matches_regular_head() {
+    // The `_mu` flavor with the whole request on slot 0 (padding rows
+    // repeating the last row) must reproduce head_aif's scores on the
+    // real rows — coalescing is score-invariant by construction.
+    let Some(m) = manifest() else { return };
+    if m.artifact("head_aif_mu").is_err() {
+        eprintln!("skipping: artifacts predate head_aif_mu");
+        return;
+    }
+    let mut engine = Engine::new().unwrap();
+    engine.load(&m, "head_aif_mu").unwrap();
+    let expect = m.load_golden("head_aif_mu.scores").unwrap();
+    let solo = m.load_golden("head_aif.scores").unwrap();
+    let b = solo.len();
+    // The golden packs the fixture request into the mu layout; replay it.
+    let spec = m.artifact("head_aif_mu").unwrap().clone();
+    let b_mu = spec.outputs[0].shape[0];
+    let slots = spec.inputs[0].shape[0];
+    let tile = |t: &Tensor, reps: usize| {
+        let mut data = Vec::with_capacity(t.len() * reps);
+        for _ in 0..reps {
+            data.extend_from_slice(t.data());
+        }
+        let mut shape = vec![reps];
+        shape.extend_from_slice(if t.shape[0] == 1 {
+            &t.shape[1..]
+        } else {
+            &t.shape[..]
+        });
+        Tensor::new(shape, data)
+    };
+    let pad_rows = |t: &Tensor| {
+        let w: usize = t.shape[1..].iter().product();
+        let mut data = t.data().to_vec();
+        let last = data[(b - 1) * w..b * w].to_vec();
+        for _ in b..b_mu {
+            data.extend_from_slice(&last);
+        }
+        let mut shape = vec![b_mu];
+        shape.extend_from_slice(&t.shape[1..]);
+        Tensor::new(shape, data)
+    };
+    let user = m
+        .load_golden("user_tower.u_vec")
+        .and_then(|u| {
+            Ok((
+                u,
+                m.load_golden("user_tower.bea_v")?,
+                m.load_golden("user_tower.din_base")?,
+                m.load_golden("user_tower.din_g")?,
+            ))
+        })
+        .unwrap();
+    let inputs = vec![
+        tile(&user.0, slots),
+        tile(&user.1, slots),
+        tile(&user.2, slots),
+        tile(&user.3, slots),
+        pad_rows(&m.load_golden("item_tower.item_vec").unwrap()),
+        pad_rows(&m.load_golden("item_tower.bea_w").unwrap()),
+        pad_rows(&m.load_golden("item_sign").unwrap()),
+        pad_rows(&m.load_golden("tiers_in").unwrap()),
+        pad_rows(&m.load_golden("sim_cross").unwrap()),
+        Tensor::zeros(vec![b_mu]), // every row on slot 0
+    ];
+    let scores = engine.execute1("head_aif_mu", &inputs).unwrap();
+    let d = scores.max_abs_diff(&expect);
+    assert!(d < TOL, "head_aif_mu golden diff {d}");
+    // The real rows match the per-request head exactly.
+    for (i, (mu, one)) in scores
+        .data()
+        .iter()
+        .take(b)
+        .zip(solo.data().iter())
+        .enumerate()
+    {
+        assert!((mu - one).abs() < TOL, "row {i}: mu {mu} vs solo {one}");
+    }
+}
+
+#[test]
 fn engine_rejects_bad_shapes() {
     let Some(m) = manifest() else { return };
     let mut engine = Engine::new().unwrap();

@@ -1,0 +1,623 @@
+//! Deterministic stand-in for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The serving stack programs against a small slice of the real crate's
+//! API: `PjRtClient::cpu`, HLO-text parsing, `compile`, `execute`, and the
+//! `Literal` host currency.  Build images without the native XLA toolchain
+//! (like this one) vendor this crate in its place so the whole workspace
+//! builds, unit-tests and load-tests; swapping the real bindings back is a
+//! one-line change in the root `Cargo.toml`.
+//!
+//! Semantics: shapes are taken from the artifact's HLO text (the `ENTRY
+//! ... -> (f32[...], ...)` return signature), and output values are a
+//! deterministic pseudo-random function of the *inputs that feed each
+//! output row* — NOT the compiled model's numerics.  Two properties are
+//! preserved on purpose, because the coordinator's tests lean on them:
+//!
+//! 1. **Row determinism** — an output row depends only on that row's
+//!    row-aligned input slices plus the request-level operands, so a
+//!    candidate scores identically regardless of batch composition or
+//!    padding (score-invariance under re-batching).
+//! 2. **Multi-user gather** — when the last input is a rank-1 row→slot
+//!    index (the coalesced `row_user` operand), request-level operands are
+//!    read per-slot, so a coalesced execution reproduces what the per-
+//!    request execution of the same rows would produce.
+//!
+//! Golden-fixture tests (`rust/tests/runtime_roundtrip.rs`) compare
+//! against python oracle outputs and are only meaningful under the real
+//! bindings; they already skip when `artifacts/` is absent.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Error type mirroring the real crate's (string payloads only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// Element types the serving stack touches (everything is f32 on the
+/// wire; see DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    Tuple,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: a dense f32 array or a tuple of literals.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: Arc<Vec<f32>> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal::Array {
+            dims: vec![data.len() as i64],
+            data: Arc::new(data.to_vec()),
+        }
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal::Tuple(elems)
+    }
+
+    /// Reinterpret under a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    return err(format!(
+                        "reshape to {dims:?}: {} elements != {n}",
+                        data.len()
+                    ));
+                }
+                Ok(Literal::Array {
+                    dims: dims.to_vec(),
+                    data: Arc::clone(data),
+                })
+            }
+            Literal::Tuple(_) => err("cannot reshape a tuple literal"),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape {
+                dims: dims.clone(),
+                ty: ElementType::F32,
+            }),
+            Literal::Tuple(_) => err("tuple literal has no array shape"),
+        }
+    }
+
+    /// Typed host copy (f32 only, like everything the stack serves).
+    pub fn to_vec<T: FromLiteralElem>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => Ok(T::from_f32_slice(data)),
+            Literal::Tuple(_) => err("tuple literal has no flat data"),
+        }
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(std::mem::take(elems)),
+            Literal::Array { .. } => {
+                err("decompose_tuple on a non-tuple literal")
+            }
+        }
+    }
+
+    fn raw(&self) -> Result<(&[i64], &[f32])> {
+        match self {
+            Literal::Array { dims, data } => Ok((dims, data)),
+            Literal::Tuple(_) => err("tuple literal where array expected"),
+        }
+    }
+}
+
+/// Sealed-ish conversion trait so `to_vec::<f32>()` type-checks like the
+/// real bindings.
+pub trait FromLiteralElem: Sized {
+    fn from_f32_slice(data: &[f32]) -> Vec<Self>;
+}
+
+impl FromLiteralElem for f32 {
+    fn from_f32_slice(data: &[f32]) -> Vec<f32> {
+        data.to_vec()
+    }
+}
+
+/// Parsed HLO module: only the piece the stub needs — the ENTRY return
+/// signature (one shape per tuple element).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    output_shapes: Vec<Vec<usize>>,
+}
+
+impl HloModuleProto {
+    /// Parse HLO **text** (the interchange format `aot.py` emits) and
+    /// extract the ENTRY computation's return shapes.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+
+    /// Both HLO text styles are handled: the signature form
+    /// (`ENTRY %main (...) -> (f32[...], ...) {`) and the bare form
+    /// `as_hlo_text` emits (`ENTRY main.81 {` with the return type on the
+    /// ENTRY computation's `ROOT` line).
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        let lines: Vec<&str> = text.lines().collect();
+        let entry_at = lines
+            .iter()
+            .position(|l| l.trim_start().starts_with("ENTRY "))
+            .ok_or_else(|| Error("no ENTRY line in HLO text".into()))?;
+        let entry = lines[entry_at];
+        let type_text: String = if let Some(rhs) = entry.split("->").nth(1) {
+            rhs.to_string()
+        } else {
+            // Scan the ENTRY body (up to the top-level closing brace) for
+            // its ROOT instruction; the type sits between `=` and the
+            // opcode: `ROOT tuple.80 = (f32[128]{0}) tuple(divide.79)`.
+            let mut root = None;
+            for l in &lines[entry_at + 1..] {
+                if l.starts_with('}') {
+                    break;
+                }
+                if l.trim_start().starts_with("ROOT ") {
+                    root = Some(*l);
+                }
+            }
+            let root = root.ok_or_else(|| {
+                Error("ENTRY computation has no ROOT".into())
+            })?;
+            let rhs = root.split('=').nth(1).ok_or_else(|| {
+                Error(format!("unparseable ROOT line: {root:?}"))
+            })?;
+            let rhs = rhs.trim_start();
+            if let Some(stripped) = rhs.strip_prefix('(') {
+                match stripped.find(')') {
+                    Some(close) => stripped[..close].to_string(),
+                    None => rhs.to_string(),
+                }
+            } else {
+                rhs.split_whitespace().next().unwrap_or("").to_string()
+            }
+        };
+        let output_shapes = parse_shapes(&type_text);
+        if output_shapes.is_empty() {
+            return err(format!(
+                "unparseable ENTRY return type: {type_text:?}"
+            ));
+        }
+        Ok(HloModuleProto { output_shapes })
+    }
+}
+
+/// Every `ty[dims]` occurrence in an HLO type string (layout `{..}`
+/// annotations use braces, so brackets always delimit dims).
+fn parse_shapes(s: &str) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'[' {
+            let close = match s[i + 1..].find(']') {
+                Some(c) => i + 1 + c,
+                None => break,
+            };
+            let body = &s[i + 1..close];
+            let dims: Option<Vec<usize>> = if body.trim().is_empty() {
+                Some(Vec::new())
+            } else {
+                body.split(',').map(|d| d.trim().parse().ok()).collect()
+            };
+            if let Some(d) = dims {
+                out.push(d);
+            }
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// "Computation": the stub carries the parsed module through compile.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            module: proto.clone(),
+        }
+    }
+}
+
+/// "PJRT client": host CPU evaluation, no native code.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            output_shapes: comp.module.output_shapes.clone(),
+        })
+    }
+}
+
+/// "Device buffer": host literal behind the buffer API.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable: deterministic pseudo-evaluation (see module docs).
+pub struct PjRtLoadedExecutable {
+    output_shapes: Vec<Vec<usize>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over host literals; returns `[replica][output]` buffers
+    /// holding one tuple literal, like the real bindings under
+    /// `return_tuple=True`.
+    pub fn execute<T: AsLiteral>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let inputs: Vec<&Literal> =
+            args.iter().map(|a| a.as_literal()).collect();
+        let mut elems = Vec::with_capacity(self.output_shapes.len());
+        for (o, shape) in self.output_shapes.iter().enumerate() {
+            elems.push(pseudo_output(o, shape, &inputs)?);
+        }
+        Ok(vec![vec![PjRtBuffer {
+            literal: Literal::Tuple(elems),
+        }]])
+    }
+}
+
+/// Argument-side conversion, so `execute::<xla::Literal>` reads the same
+/// as with the real bindings.
+pub trait AsLiteral {
+    fn as_literal(&self) -> &Literal;
+}
+
+impl AsLiteral for Literal {
+    fn as_literal(&self) -> &Literal {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic pseudo-evaluation
+// ---------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_f32(h: u64, data: &[f32]) -> u64 {
+    let mut h = h;
+    for v in data {
+        h = fnv(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// First-axis row `r` of a literal's data (`[n, rest...]` -> `rest` slice).
+fn axis0_slice(dims: &[i64], data: &[f32], r: usize) -> &[f32] {
+    let n = dims.first().copied().unwrap_or(1).max(1) as usize;
+    let stride = data.len() / n.max(1);
+    &data[r * stride..(r + 1) * stride]
+}
+
+/// The coalesced `row_user` operand: rank-1, `rows` long, small
+/// non-negative integers.  Returns the per-row slot indices if so.
+fn detect_row_user(inputs: &[&Literal], rows: usize) -> Option<Vec<usize>> {
+    let (dims, data) = inputs.last()?.raw().ok()?;
+    if dims.len() != 1 || data.len() != rows {
+        return None;
+    }
+    let mut idx = Vec::with_capacity(rows);
+    for &v in data.iter() {
+        if v < 0.0 || v.fract() != 0.0 || v > 4096.0 {
+            return None;
+        }
+        idx.push(v as usize);
+    }
+    Some(idx)
+}
+
+/// One output tensor: each first-axis row hashes the input pieces that
+/// feed that row — the row's slice of every row-aligned operand, plus
+/// the request-level operands (whole, or the row's user-slot block when
+/// a `row_user` index is present).  Per-piece hashes combine with XOR,
+/// so values are invariant both to re-batching/padding AND to the operand
+/// *ordering* difference between the per-request and `_mu` head flavors.
+fn pseudo_output(
+    out_idx: usize,
+    shape: &[usize],
+    inputs: &[&Literal],
+) -> Result<Literal> {
+    let rows = shape.first().copied().unwrap_or(1).max(1);
+    let total: usize = shape.iter().product::<usize>().max(1);
+    let row_width = total / rows;
+
+    let row_user = detect_row_user(inputs, rows);
+    let mut slot_inputs: Vec<(&[i64], &[f32])> = Vec::new();
+    let mut row_inputs: Vec<(&[i64], &[f32])> = Vec::new();
+    let mut global_h = 0u64;
+    let n_inputs = inputs.len();
+    for (i, lit) in inputs.iter().enumerate() {
+        let (dims, data) = lit.raw()?;
+        if row_user.is_some() && i == n_inputs - 1 {
+            continue; // the gather index itself does not enter the hash
+        }
+        if dims.first().copied().unwrap_or(1) as usize == rows && rows > 1 {
+            row_inputs.push((dims, data));
+        } else if row_user.is_some() {
+            slot_inputs.push((dims, data));
+        } else {
+            global_h ^= fnv_f32(FNV_OFFSET, data);
+        }
+    }
+
+    let base = global_h
+        ^ (out_idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ 0xa1f;
+    let mut out = Vec::with_capacity(total);
+    for r in 0..rows {
+        let mut h = base;
+        for &(dims, data) in &row_inputs {
+            h ^= fnv_f32(FNV_OFFSET, axis0_slice(dims, data, r));
+        }
+        if let Some(idx) = &row_user {
+            let slot = idx[r];
+            for &(dims, data) in &slot_inputs {
+                let n_slots = dims.first().copied().unwrap_or(1) as usize;
+                let piece = if slot < n_slots {
+                    axis0_slice(dims, data, slot)
+                } else {
+                    data
+                };
+                h ^= fnv_f32(FNV_OFFSET, piece);
+            }
+        }
+        for c in 0..row_width {
+            let hc = fnv(
+                h.wrapping_mul(FNV_PRIME),
+                &(c as u64).to_le_bytes(),
+            );
+            // Uniform in (0, 1): scores stay probability-shaped.
+            out.push(((hc >> 40) as f32 + 0.5) / (1u64 << 24) as f32);
+        }
+    }
+    Ok(Literal::Array {
+        dims: shape.iter().map(|&d| d as i64).collect(),
+        data: Arc::new(out),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn parses_entry_return_shapes() {
+        let hlo = "\
+HloModule jit_fn\n\
+%sub (x: f32[4]) -> f32[4] {\n\
+  ROOT %x = f32[4]{0} parameter(0)\n\
+}\n\
+ENTRY %main.42 (Arg_0.1: f32[1,32], Arg_1.2: f32[256,32]) -> (f32[256], f32[8,16]) {\n\
+  ROOT %tuple = (f32[256]{0}, f32[8,16]{1,0}) tuple()\n\
+}\n";
+        let m = HloModuleProto::from_text(hlo).unwrap();
+        assert_eq!(m.output_shapes, vec![vec![256], vec![8, 16]]);
+    }
+
+    #[test]
+    fn parses_bare_entry_with_root_type() {
+        // The `as_hlo_text` style aot.py actually emits: no signature on
+        // the ENTRY line; the return type lives on the ROOT instruction.
+        let hlo = "\
+HloModule jit_fn, entry_computation_layout={...}\n\
+region_0.42 {\n\
+  ROOT maximum.59 = f32[128,128]{1,0} maximum(Arg_0.56, broadcast.58)\n\
+}\n\
+ENTRY main.81 {\n\
+  Arg_0.1 = f32[8,32]{1,0} parameter(0)\n\
+  divide.79 = f32[128]{0} divide(Arg_0.1, Arg_0.1)\n\
+  ROOT tuple.80 = (f32[128]{0}) tuple(divide.79)\n\
+}\n";
+        let m = HloModuleProto::from_text(hlo).unwrap();
+        assert_eq!(m.output_shapes, vec![vec![128]]);
+    }
+
+    #[test]
+    fn execute_is_deterministic_and_shaped() {
+        let m = HloModuleProto::from_text(
+            "ENTRY %e (a: f32[4,2]) -> (f32[4]) { }",
+        )
+        .unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&XlaComputation::from_proto(&m))
+            .unwrap();
+        let arg = Literal::vec1(&[1., 2., 3., 4., 5., 6., 7., 8.])
+            .reshape(&[4, 2])
+            .unwrap();
+        let mut t1 = exe.execute::<Literal>(&[arg.clone()]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let mut t2 = exe.execute::<Literal>(&[arg]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let o1 = t1.decompose_tuple().unwrap();
+        let o2 = t2.decompose_tuple().unwrap();
+        let v1 = o1[0].to_vec::<f32>().unwrap();
+        let v2 = o2[0].to_vec::<f32>().unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(v1.len(), 4);
+        assert!(v1.iter().all(|s| (0.0..1.0).contains(s)));
+    }
+
+    #[test]
+    fn rows_are_invariant_under_rebatching() {
+        // Same per-row content in a 2-row and a 4-row execution (padded by
+        // repetition) must score identically row-by-row.
+        let m2 = HloModuleProto::from_text(
+            "ENTRY %e (u: f32[1,3], it: f32[2,2]) -> (f32[2]) { }",
+        )
+        .unwrap();
+        let m4 = HloModuleProto::from_text(
+            "ENTRY %e (u: f32[1,3], it: f32[4,2]) -> (f32[4]) { }",
+        )
+        .unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let e2 = client.compile(&XlaComputation::from_proto(&m2)).unwrap();
+        let e4 = client.compile(&XlaComputation::from_proto(&m4)).unwrap();
+        let u = Literal::vec1(&[0.1, 0.2, 0.3]).reshape(&[1, 3]).unwrap();
+        let small = Literal::vec1(&[1., 2., 3., 4.])
+            .reshape(&[2, 2])
+            .unwrap();
+        let big = Literal::vec1(&[9., 9., 9., 9., 1., 2., 3., 4.])
+            .reshape(&[4, 2])
+            .unwrap();
+        let s2 = e2.execute::<Literal>(&[u.clone(), small]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .decompose_tuple()
+            .unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        let s4 = e4.execute::<Literal>(&[u, big]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .decompose_tuple()
+            .unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(s2, s4[2..].to_vec(), "row scores track row content");
+    }
+
+    #[test]
+    fn row_user_gather_matches_per_request_execution() {
+        // A coalesced execution with two user slots must reproduce the
+        // per-request scores of each half.
+        let solo = HloModuleProto::from_text(
+            "ENTRY %e (u: f32[1,2], it: f32[2,2]) -> (f32[2]) { }",
+        )
+        .unwrap();
+        let mu = HloModuleProto::from_text(
+            "ENTRY %e (u: f32[2,2], it: f32[4,2], ru: f32[4]) -> (f32[4]) { }",
+        )
+        .unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let e_solo =
+            client.compile(&XlaComputation::from_proto(&solo)).unwrap();
+        let e_mu = client.compile(&XlaComputation::from_proto(&mu)).unwrap();
+
+        let ua = Literal::vec1(&[0.1, 0.2]).reshape(&[1, 2]).unwrap();
+        let ub = Literal::vec1(&[0.7, 0.9]).reshape(&[1, 2]).unwrap();
+        let rows_a = Literal::vec1(&[1., 2., 3., 4.])
+            .reshape(&[2, 2])
+            .unwrap();
+        let rows_b = Literal::vec1(&[5., 6., 7., 8.])
+            .reshape(&[2, 2])
+            .unwrap();
+        let run = |exe: &PjRtLoadedExecutable, args: Vec<Literal>| {
+            exe.execute::<Literal>(&args).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap()
+                .decompose_tuple()
+                .unwrap()[0]
+                .to_vec::<f32>()
+                .unwrap()
+        };
+        let sa = run(&e_solo, vec![ua, rows_a]);
+        let sb = run(&e_solo, vec![ub, rows_b]);
+
+        let u_slots = Literal::vec1(&[0.1, 0.2, 0.7, 0.9])
+            .reshape(&[2, 2])
+            .unwrap();
+        let rows = Literal::vec1(&[1., 2., 3., 4., 5., 6., 7., 8.])
+            .reshape(&[4, 2])
+            .unwrap();
+        let row_user = Literal::vec1(&[0., 0., 1., 1.]);
+        let merged = run(&e_mu, vec![u_slots, rows, row_user]);
+        assert_eq!(merged[..2], sa[..]);
+        assert_eq!(merged[2..], sb[..]);
+    }
+}
