@@ -1,6 +1,9 @@
 //! Table 4 reproduction: avgRT / p99RT / maxQPS / extra-storage deltas for
 //! every pipeline increment (Base, +Async-Vectors, +SIM, +Pre-Caching,
-//! +BEA, +Long-term, +LSH, AIF) under identical load.
+//! +BEA, +Long-term, +LSH, AIF) under identical load — all 8 rows served
+//! as scenarios over ONE shared `ServingCore` — followed by the
+//! shared-core vs per-Merger comparison: resident extra-storage bytes
+//! saved, with identical top-K asserted per variant.
 //! AIF_QUICK=1 shrinks the run.
 
 fn main() {
@@ -10,6 +13,13 @@ fn main() {
         Ok(report) => println!("{report}"),
         Err(e) => {
             eprintln!("table4 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    match aif::workload::experiments::run_shared_core_comparison(&dir) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("shared-core comparison failed: {e:#}");
             std::process::exit(1);
         }
     }

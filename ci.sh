@@ -16,14 +16,20 @@ cargo test -q --manifest-path rust/xla_stub/Cargo.toml
 echo "== coalescer stress (release) =="
 cargo test --release -q --test coalescer_stress
 
+echo "== scenario registry stress (release) =="
+# Hot reload/add/remove under concurrent traffic + bitwise equivalence
+# with dedicated per-variant Mergers, over the synthetic fixture set.
+cargo test --release -q --test scenario_registry
+
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound
-# raised in the same PR, with the reason in the diff.
+# raised in the same PR, with the reason in the diff.  Covers the library,
+# the integration tests, the benches and the examples.
 MAX_IGNORED=0
-ignored=$(grep -rn '#\[ignore' rust/ --include='*.rs' | wc -l)
+ignored=$(grep -rn '#\[ignore' rust/ benches/ examples/ --include='*.rs' | wc -l)
 if [ "$ignored" -gt "$MAX_IGNORED" ]; then
     echo "error: $ignored '#[ignore' markers found (bound: $MAX_IGNORED)."
-    grep -rn '#\[ignore' rust/ --include='*.rs' || true
+    grep -rn '#\[ignore' rust/ benches/ examples/ --include='*.rs' || true
     exit 1
 fi
 echo "ignored tests: $ignored (bound $MAX_IGNORED)"

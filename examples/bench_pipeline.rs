@@ -23,7 +23,7 @@ fn main() {
         let n = 8;
         let mut prerank = 0.0;
         for i in 0..n {
-            let req = ScoreRequest::user((i as usize*13)%m.world.n_users).with_request_id(100+i);
+            let req = ScoreRequest::user((i as usize*13)%m.world().n_users).with_request_id(100+i);
             let r = m.score(req).unwrap();
             prerank += r.timings.prerank.as_secs_f64(); }
         println!("{name:14} total {:6.2} ms/req  prerank {:6.2} ms/req",

@@ -30,14 +30,17 @@ fn main() -> anyhow::Result<()> {
         ScoreRequest::user(user).with_request_id(1).with_trace(true),
     )?;
 
-    println!("\ntop-10 of {} candidates:", merger.cfg.n_candidates);
+    println!(
+        "\ntop-10 of {} candidates:",
+        merger.default_engine().cfg.n_candidates
+    );
     for (rank, s) in result.items.iter().take(10).enumerate() {
         println!(
             "  #{:<3} item {:<6} score {:.4}  oracle pCTR {:.4}",
             rank + 1,
             s.item,
             s.score,
-            merger.world.click_prob(user, s.item)
+            merger.world().click_prob(user, s.item)
         );
     }
     if let Some(trace) = &result.trace {
@@ -61,9 +64,9 @@ fn main() -> anyhow::Result<()> {
     println!("  total            {:>8.2} ms", ms(t.total));
     println!(
         "\nN2O table: {:.2} MiB for {} items (raw features {:.2} MiB)",
-        merger.n2o.size_bytes() as f64 / (1 << 20) as f64,
-        merger.n2o.n_items(),
-        merger.world.item_feature_bytes() as f64 / (1 << 20) as f64
+        merger.core().n2o.size_bytes() as f64 / (1 << 20) as f64,
+        merger.core().n2o.n_items(),
+        merger.world().item_feature_bytes() as f64 / (1 << 20) as f64
     );
     Ok(())
 }

@@ -1,8 +1,10 @@
 //! END-TO-END DRIVER (the validation run recorded in EXPERIMENTS.md):
 //! serve batched requests through the full AIF stack and the sequential
-//! baseline under identical load, and report the headline serving
-//! comparison — latency (avgRT/p99RT), throughput, overlap savings — plus
-//! a live A/B on ranking quality (CTR / RPM with bootstrap CIs).
+//! baseline — registered as TWO scenarios over ONE shared `ServingCore`
+//! (one RTP fleet, one N2O table, one cache cluster) — under identical
+//! load, and report the headline serving comparison — latency
+//! (avgRT/p99RT), throughput, overlap savings — plus a live A/B on
+//! ranking quality (CTR / RPM with bootstrap CIs).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_e2e
@@ -10,8 +12,8 @@
 
 use std::sync::Arc;
 
-use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::Merger;
+use aif::config::{ScenarioConfig, ServingConfig, SimMode};
+use aif::coordinator::{Merger, PreRanker};
 use aif::workload::{abtest, runner};
 
 fn main() -> anyhow::Result<()> {
@@ -21,29 +23,42 @@ fn main() -> anyhow::Result<()> {
     let n_load = if quick { 32 } else { 128 };
     let n_ab = if quick { 128 } else { 768 };
 
-    let base_cfg = ServingConfig {
-        variant: "base".into(),
-        sim_mode: SimMode::Off,
+    // Both arms as scenarios over one core.
+    let template = ServingConfig {
         artifacts_dir: artifacts.clone(),
         ..Default::default()
     };
-    let aif_cfg = ServingConfig {
-        variant: "aif".into(),
-        sim_mode: SimMode::Precached,
-        artifacts_dir: artifacts.clone(),
-        ..Default::default()
-    };
+    let mut cfg = template.clone();
+    cfg.scenarios = vec![
+        ScenarioConfig {
+            variant: "base".into(),
+            sim_mode: SimMode::Off,
+            ..ScenarioConfig::from_serving("Base", &template)
+        },
+        ScenarioConfig {
+            variant: "aif".into(),
+            sim_mode: SimMode::Precached,
+            ..ScenarioConfig::from_serving("AIF", &template)
+        },
+    ];
+    cfg.default_scenario = Some("AIF".into());
 
-    println!("== bringing up both pipelines ==");
-    let base = Arc::new(Merger::build(base_cfg)?);
-    let aif = Arc::new(Merger::build(aif_cfg)?);
+    println!("== bringing up both pipelines over one shared core ==");
+    let merger = Arc::new(Merger::build(cfg)?);
+    let base: Arc<dyn PreRanker> =
+        merger.registry().get(Some("Base")).expect("Base registered");
+    let aif = merger.registry().get(Some("AIF")).expect("AIF registered");
 
     // ---- serving comparison under identical closed-loop load -------------
     println!("\n== serving load ({n_load} requests, 4 clients each) ==");
     let rb = runner::closed_loop("Base (sequential)", &base, n_load, 4, 7);
     println!("{}", rb.render());
-    let ra = runner::closed_loop("AIF (async)", &aif, n_load, 4, 7);
-    println!("{}", ra.render());
+    let ra = {
+        let arm: Arc<dyn PreRanker> = Arc::clone(&aif) as Arc<dyn PreRanker>;
+        let r = runner::closed_loop("AIF (async)", &arm, n_load, 4, 7);
+        println!("{}", r.render());
+        r
+    };
 
     let saved = aif
         .metrics
@@ -72,17 +87,18 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  user-side latency hidden under retrieval: {saved:.2} ms/req");
     println!(
-        "  AIF extra storage: {:.2} MiB (N2O + pre-cache)",
-        ra.extra_storage_bytes as f64 / (1 << 20) as f64
+        "  shared-core extra storage (N2O + pre-cache, counted once for \
+         both scenarios): {:.2} MiB",
+        merger.core().shared_storage_bytes() as f64 / (1 << 20) as f64
     );
 
     // ---- online A/B on ranking quality ------------------------------------
     println!("\n== online A/B ({n_ab} requests, 50/50 user split, slate=10) ==");
-    let arms = vec![
+    let arms: Vec<(&str, Arc<dyn PreRanker>)> = vec![
         ("Base", Arc::clone(&base)),
-        ("AIF", Arc::clone(&aif)),
+        ("AIF", Arc::clone(&aif) as Arc<dyn PreRanker>),
     ];
-    let reports = abtest::run(&base.world, &arms, n_ab, 10, 4242)?;
+    let reports = abtest::run(merger.world(), &arms, n_ab, 10, 4242)?;
     print!("{}", abtest::render(&reports));
 
     let control = &reports[0];

@@ -116,6 +116,14 @@ impl<K: Eq + Hash + Clone, V> Shard<K, V> {
     fn len(&self) -> usize {
         self.map.len()
     }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.slab.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
 }
 
 /// Cache statistics (hit ratio drives the Table-4 pre-caching rows).
@@ -204,6 +212,14 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Drop every cached entry (benchmark isolation between runs sharing
+    /// one cache cluster).  Hit/miss statistics are left untouched.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +248,24 @@ mod tests {
         c.insert(1, 11);
         assert_eq!(c.get(&1), Some(11));
         assert_eq!(c.get(&2), Some(20));
+    }
+
+    #[test]
+    fn clear_empties_and_cache_stays_usable() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(8, 2);
+        for i in 0..8 {
+            c.insert(i, i * 10);
+        }
+        assert!(!c.is_empty());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&3), None);
+        // Insert/evict machinery still intact after the wipe.
+        for i in 0..16 {
+            c.insert(i, i);
+        }
+        assert!(c.len() <= 8);
+        assert_eq!(c.get(&15), Some(15));
     }
 
     #[test]

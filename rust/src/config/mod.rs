@@ -47,6 +47,96 @@ impl Default for CoalesceConfig {
     }
 }
 
+/// One named scenario served by the shared [`ServingCore`]: the
+/// scenario-*specific* knobs only (variant, SIM handling, candidate count,
+/// result size, dispatch-layer coalescing).  Everything else — fleet size,
+/// stores, latency models, caches — is interaction-independent state owned
+/// once by the core and shared by every registered scenario.
+///
+/// [`ServingCore`]: ../coordinator/struct.ServingCore.html
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Registry name (routing key of `ScoreRequest.scenario`).
+    pub name: String,
+    /// Serving variant (manifest registry name; picks the head artifact).
+    pub variant: String,
+    pub sim_mode: SimMode,
+    /// SIM parse budget (w/o pre-caching the deadline truncates parsing).
+    pub sim_budget: f64,
+    pub n_candidates: usize,
+    /// Default result size; per-request `top_k` overrides it.
+    pub top_k: usize,
+    /// Cross-request head-execution coalescing for this scenario's head.
+    /// Scenarios sharing a head artifact share one coalescer queue (the
+    /// first registration's knobs win).
+    pub coalesce: CoalesceConfig,
+}
+
+impl ScenarioConfig {
+    /// Derive one scenario from the flat (single-variant) config fields —
+    /// the backward-compatible shape every pre-registry entry point used.
+    pub fn from_serving(name: &str, cfg: &ServingConfig) -> ScenarioConfig {
+        ScenarioConfig {
+            name: name.to_string(),
+            variant: cfg.variant.clone(),
+            sim_mode: cfg.sim_mode,
+            sim_budget: cfg.sim_budget,
+            n_candidates: cfg.n_candidates,
+            top_k: cfg.top_k,
+            coalesce: cfg.coalesce.clone(),
+        }
+    }
+
+    fn from_json(name: &str, v: &Value, base: &ServingConfig) -> Result<Self> {
+        let mut s = ScenarioConfig::from_serving(name, base);
+        if let Some(x) = v.get("variant").and_then(Value::as_str) {
+            s.variant = x.to_string();
+        }
+        if let Some(x) = v.get("sim_mode").and_then(Value::as_str) {
+            s.sim_mode = parse_sim_mode(x)?;
+        }
+        if let Some(x) = v.get("sim_budget").and_then(Value::as_f64) {
+            s.sim_budget = x;
+        }
+        if let Some(x) = v.get("n_candidates").and_then(Value::as_f64) {
+            s.n_candidates = x as usize;
+        }
+        if let Some(x) = v.get("top_k").and_then(Value::as_f64) {
+            s.top_k = x as usize;
+        }
+        if let Some(co) = v.get("coalesce") {
+            parse_coalesce(co, &mut s.coalesce);
+        }
+        Ok(s)
+    }
+}
+
+/// Parse a `sim_mode` string ("off" | "sync" | "precached") — shared by
+/// the JSON config path and the CLI `--scenarios` flag.
+pub fn parse_sim_mode(x: &str) -> Result<SimMode> {
+    Ok(match x {
+        "off" => SimMode::Off,
+        "sync" => SimMode::Sync,
+        "precached" => SimMode::Precached,
+        other => anyhow::bail!("unknown sim_mode {other:?}"),
+    })
+}
+
+fn parse_coalesce(co: &Value, out: &mut CoalesceConfig) {
+    if let Some(b) = co.get("enabled").and_then(Value::as_bool) {
+        out.enabled = b;
+    }
+    if let Some(x) = co.get("window_us").and_then(Value::as_f64) {
+        out.window_us = x as u64;
+    }
+    if let Some(x) = co.get("max_coalesced_batch").and_then(Value::as_f64) {
+        out.max_coalesced_batch = x as usize;
+    }
+    if let Some(x) = co.get("bypass_margin_ms").and_then(Value::as_f64) {
+        out.bypass_margin_ms = x;
+    }
+}
+
 /// One serving pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -80,6 +170,15 @@ pub struct ServingConfig {
     pub coalesce: CoalesceConfig,
 
     pub artifacts_dir: String,
+
+    /// Named scenario blocks served over ONE shared core.  Empty (the
+    /// default) means single-scenario mode: one scenario is derived from
+    /// the flat `variant`/`sim_mode`/... fields above, named after the
+    /// variant.
+    pub scenarios: Vec<ScenarioConfig>,
+    /// Which scenario serves requests that don't name one.  `None` =
+    /// first scenario.
+    pub default_scenario: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -120,6 +219,8 @@ impl Default for ServingConfig {
             arena_retain: 32,
             coalesce: CoalesceConfig::default(),
             artifacts_dir: "artifacts".into(),
+            scenarios: Vec::new(),
+            default_scenario: None,
         }
     }
 }
@@ -133,12 +234,7 @@ impl ServingConfig {
             c.variant = x.to_string();
         }
         if let Some(x) = get("sim_mode").and_then(Value::as_str) {
-            c.sim_mode = match x {
-                "off" => SimMode::Off,
-                "sync" => SimMode::Sync,
-                "precached" => SimMode::Precached,
-                other => anyhow::bail!("unknown sim_mode {other:?}"),
-            };
+            c.sim_mode = parse_sim_mode(x)?;
         }
         macro_rules! num {
             ($field:ident, $key:literal, $ty:ty) => {
@@ -160,22 +256,22 @@ impl ServingConfig {
             c.artifacts_dir = x.to_string();
         }
         if let Some(co) = get("coalesce") {
-            if let Some(b) = co.get("enabled").and_then(Value::as_bool) {
-                c.coalesce.enabled = b;
+            parse_coalesce(co, &mut c.coalesce);
+        }
+        // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
+        // Each block starts from the flat fields and overrides.
+        if let Some(sc) = get("scenarios") {
+            let obj = sc.as_obj().ok_or_else(|| {
+                anyhow::anyhow!("\"scenarios\" must be an object of blocks")
+            })?;
+            let mut blocks = Vec::with_capacity(obj.len());
+            for (name, block) in obj.iter() {
+                blocks.push(ScenarioConfig::from_json(name, block, &c)?);
             }
-            if let Some(x) = co.get("window_us").and_then(Value::as_f64) {
-                c.coalesce.window_us = x as u64;
-            }
-            if let Some(x) =
-                co.get("max_coalesced_batch").and_then(Value::as_f64)
-            {
-                c.coalesce.max_coalesced_batch = x as usize;
-            }
-            if let Some(x) =
-                co.get("bypass_margin_ms").and_then(Value::as_f64)
-            {
-                c.coalesce.bypass_margin_ms = x;
-            }
+            c.scenarios = blocks;
+        }
+        if let Some(x) = get("default_scenario").and_then(Value::as_str) {
+            c.default_scenario = Some(x.to_string());
         }
         for (key, slot) in [
             ("retrieval_latency", &mut c.retrieval_latency),
@@ -200,6 +296,29 @@ impl ServingConfig {
             }
         }
         Ok(c)
+    }
+
+    /// The scenario list this config serves: the named blocks, or (when
+    /// none are declared) one scenario derived from the flat fields and
+    /// named after the variant.
+    pub fn effective_scenarios(&self) -> Vec<ScenarioConfig> {
+        if self.scenarios.is_empty() {
+            vec![ScenarioConfig::from_serving(&self.variant, self)]
+        } else {
+            self.scenarios.clone()
+        }
+    }
+
+    /// The scenario that serves requests not naming one.
+    pub fn default_scenario_name(&self) -> String {
+        match &self.default_scenario {
+            Some(n) => n.clone(),
+            None => self
+                .scenarios
+                .first()
+                .map(|s| s.name.clone())
+                .unwrap_or_else(|| self.variant.clone()),
+        }
     }
 
     pub fn from_file(path: &str) -> Result<ServingConfig> {
@@ -276,6 +395,52 @@ mod tests {
         let v = Value::parse(r#"{"n_http_workers": 9}"#).unwrap();
         let c = ServingConfig::from_json(&v).unwrap();
         assert_eq!(c.n_http_workers, 9);
+    }
+
+    #[test]
+    fn single_scenario_derives_from_flat_fields() {
+        let c = ServingConfig::default();
+        let scenarios = c.effective_scenarios();
+        assert_eq!(scenarios.len(), 1);
+        assert_eq!(scenarios[0].name, "aif");
+        assert_eq!(scenarios[0].variant, "aif");
+        assert_eq!(scenarios[0].top_k, c.top_k);
+        assert_eq!(c.default_scenario_name(), "aif");
+    }
+
+    #[test]
+    fn scenario_blocks_parse_and_override() {
+        let v = Value::parse(
+            r#"{"variant": "aif", "top_k": 32, "default_scenario": "b",
+                "scenarios": {
+                  "a": {"variant": "base", "sim_mode": "off"},
+                  "b": {"n_candidates": 128,
+                        "coalesce": {"enabled": true}}
+                }}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.scenarios.len(), 2);
+        let a = c.scenarios.iter().find(|s| s.name == "a").unwrap();
+        assert_eq!(a.variant, "base");
+        assert_eq!(a.sim_mode, SimMode::Off);
+        assert_eq!(a.top_k, 32, "blocks inherit the flat fields");
+        let b = c.scenarios.iter().find(|s| s.name == "b").unwrap();
+        assert_eq!(b.variant, "aif");
+        assert_eq!(b.n_candidates, 128);
+        assert!(b.coalesce.enabled);
+        assert_eq!(c.default_scenario_name(), "b");
+        assert_eq!(c.effective_scenarios().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_scenario_shapes() {
+        let v = Value::parse(r#"{"scenarios": [1, 2]}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+        let v =
+            Value::parse(r#"{"scenarios": {"a": {"sim_mode": "nope"}}}"#)
+                .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
     }
 
     #[test]

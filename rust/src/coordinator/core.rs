@@ -1,0 +1,281 @@
+//! `ServingCore` — the interaction-independent, scenario-agnostic half of
+//! the serving stack (DESIGN.md §13).
+//!
+//! AIF's premise is that state independent of the user-item interaction is
+//! computed once and shared: the RTP fleet and its compiled executables,
+//! the feature store and world tables, the nearline N2O table and its
+//! builder, the user-async / SIM caches, the arena pool, the request-id
+//! allocator and the cross-request coalescer queues.  One `ServingCore`
+//! owns exactly that set; any number of lightweight
+//! [`super::ScenarioEngine`]s serve scenario-specific pipelines over it,
+//! managed by a [`super::ScenarioRegistry`].  A fleet that used to pay N
+//! full substrate copies for N served variants pays one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::router::Router;
+use crate::cache::{ArenaPool, ShardedLru, UserVecCache};
+use crate::config::{CoalesceConfig, ServingConfig};
+use crate::features::{FeatureStore, World};
+use crate::lsh::Hasher;
+use crate::metrics::CoalesceStats;
+use crate::nearline::{N2oTable, NearlineWorker};
+use crate::runtime::{
+    BatchCoalescer, CoalescerConfig, HeadExecutor, Manifest, RtpPool,
+};
+use crate::util::threadpool::ThreadPool;
+
+/// Auto-allocated request ids live at and above this bound; callers must
+/// stay below it so the two spaces can never alias a `RequestKey`.
+pub const AUTO_REQUEST_ID_BASE: u64 = 1 << 63;
+
+/// SIM LRU key: (budget in micro-units, user, category).  The parse
+/// budget truncates the cached subsequence, so scenarios with different
+/// budgets must not share entries; scenarios with equal budgets do.
+pub type SimKey = (u32, u32, u32);
+
+/// Quantized budget component of a [`SimKey`].
+pub fn sim_budget_key(budget: f64) -> u32 {
+    (budget * 1e6).round() as u32
+}
+
+/// One per-`*_mu`-artifact coalescer slot: the queue is shared by every
+/// scenario serving that artifact (refcounted via `Weak`; it drains and
+/// shuts down when the last engine drops), while its stats persist across
+/// engine reloads for metrics continuity.
+struct CoalescerSlot {
+    co: Weak<BatchCoalescer>,
+    stats: Arc<CoalesceStats>,
+}
+
+/// All interaction-independent serving state, shared by every scenario.
+pub struct ServingCore {
+    /// Core (scenario-agnostic) configuration: fleet sizes, latency
+    /// models, cache capacities, artifacts dir.  The flat variant fields
+    /// are only a template for single-scenario setups.
+    pub cfg: ServingConfig,
+    pub manifest: Arc<Manifest>,
+    pub world: Arc<World>,
+    pub store: Arc<FeatureStore>,
+    pub rtp: Arc<RtpPool>,
+    pub router: Router,
+    pub user_cache: Arc<UserVecCache>,
+    /// (budget key, user, category) -> parsed SIM subsequence.
+    pub sim_cache: Arc<ShardedLru<SimKey, Arc<Vec<u32>>>>,
+    pub n2o: Arc<N2oTable>,
+    pub hasher: Arc<Hasher>,
+    pub arena: Arc<ArenaPool>,
+    pub(crate) async_pool: Arc<ThreadPool>,
+    pub(crate) score_pool: Arc<ThreadPool>,
+    pub batch: usize,
+    /// Request-id allocator for requests that don't bring their own.
+    /// Lives in the top half of the id space so auto-allocated ids can
+    /// never collide with caller-supplied ones (which would alias
+    /// `RequestKey`s in the async-variant user cache).
+    req_ids: AtomicU64,
+    /// Engine-instance ids (salt the per-request cache keys so two
+    /// scenarios serving the same (request id, user) never collide).
+    engine_ids: AtomicU64,
+    /// Whether the N2O full build has run (first nearline scenario
+    /// triggers it; later ones reuse the table).
+    nearline_built: Mutex<bool>,
+    coalescers: Mutex<HashMap<String, CoalescerSlot>>,
+}
+
+impl ServingCore {
+    /// Bring up the shared substrate.  No scenario state is built here —
+    /// engines register against the core afterwards (artifacts hot-load
+    /// per scenario, the nearline build runs when the first nearline
+    /// scenario arrives).
+    pub fn build(cfg: ServingConfig) -> Result<Arc<ServingCore>> {
+        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let world = Arc::new(World::load(&manifest)?);
+        let store = Arc::new(FeatureStore::new(
+            Arc::clone(&world),
+            cfg.user_store_latency.clone(),
+            cfg.item_store_latency.clone(),
+        ));
+        let rtp = Arc::new(RtpPool::new(
+            Arc::clone(&manifest),
+            Vec::new(),
+            cfg.n_rtp_workers,
+        ));
+        let hasher = Arc::new(Hasher::from_table(&world.w_hash));
+        let batch = manifest.batch;
+        let n2o = Arc::new(N2oTable::new(
+            world.n_items,
+            manifest.dim("D"),
+            manifest.dim("N_BRIDGE"),
+            manifest.dim("D_LSH_BITS"),
+        ));
+        Ok(Arc::new(ServingCore {
+            router: Router::new(cfg.n_rtp_workers, 64),
+            user_cache: Arc::new(UserVecCache::new(cfg.user_cache_shards)),
+            sim_cache: Arc::new(ShardedLru::new(
+                cfg.lru_capacity,
+                cfg.lru_shards,
+            )),
+            arena: ArenaPool::new(cfg.arena_retain),
+            async_pool: Arc::new(ThreadPool::new(cfg.n_async_workers)),
+            // Batch-scoring tasks block on RTP replies; give them their own
+            // pool (2x the fleet) so they never starve the phase-1 tasks.
+            score_pool: Arc::new(ThreadPool::new(cfg.n_rtp_workers + 2)),
+            req_ids: AtomicU64::new(AUTO_REQUEST_ID_BASE),
+            engine_ids: AtomicU64::new(0),
+            nearline_built: Mutex::new(false),
+            coalescers: Mutex::new(HashMap::new()),
+            manifest,
+            world,
+            store,
+            rtp,
+            n2o,
+            hasher,
+            batch,
+            cfg,
+        }))
+    }
+
+    /// Allocate a request id from the auto half of the id space.
+    pub fn next_request_id(&self) -> u64 {
+        self.req_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate a unique engine-instance id (cache-key salt).
+    pub(crate) fn next_engine_id(&self) -> u64 {
+        self.engine_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Run the nearline N2O full build exactly once (first nearline
+    /// scenario).  Subsequent callers return immediately — the table is
+    /// shared, which is the point.
+    pub fn ensure_nearline(&self) -> Result<()> {
+        let mut built = self.nearline_built.lock().unwrap();
+        if *built {
+            return Ok(());
+        }
+        self.rtp
+            .ensure_artifacts(&["item_tower".to_string()])
+            .context("loading item_tower for the nearline build")?;
+        let worker = NearlineWorker::new(
+            Arc::clone(&self.rtp),
+            Arc::clone(&self.world),
+            Arc::clone(&self.hasher),
+            Arc::clone(&self.n2o),
+            self.batch,
+        );
+        let report = worker.full_build(1).context("nearline full build")?;
+        log::info!(
+            "N2O full build: {} items, {} executions, {:?}, {} bytes",
+            report.n_items,
+            report.executions,
+            report.elapsed,
+            report.table_bytes
+        );
+        *built = true;
+        Ok(())
+    }
+
+    /// The shared coalescer queue for one `*_mu` artifact.  The first
+    /// scenario to ask creates it (with its knobs); later scenarios on the
+    /// same head share the queue — cross-scenario micro-batching falls out
+    /// of the shared dispatch layer for free.  Differing knobs log a
+    /// warning and keep the first registration's configuration.
+    pub fn coalescer_for(
+        &self,
+        mu_artifact: &str,
+        knobs: &CoalesceConfig,
+        exec_rows: usize,
+        max_slots: usize,
+    ) -> (Arc<BatchCoalescer>, Arc<CoalesceStats>) {
+        let mut map = self.coalescers.lock().unwrap();
+        if let Some(slot) = map.get(mu_artifact) {
+            if let Some(co) = slot.co.upgrade() {
+                let want = Self::coalescer_config(
+                    knobs, exec_rows, max_slots, self.batch,
+                );
+                let have = co.config();
+                if have.window != want.window
+                    || have.max_rows != want.max_rows
+                    || have.bypass_margin != want.bypass_margin
+                {
+                    log::warn!(
+                        "scenario requests different coalescing knobs for \
+                         {mu_artifact}; keeping the first registration's"
+                    );
+                }
+                return (co, Arc::clone(&slot.stats));
+            }
+        }
+        // Stats survive engine churn so /metrics keeps continuity.
+        let stats = map
+            .get(mu_artifact)
+            .map(|s| Arc::clone(&s.stats))
+            .unwrap_or_default();
+        let co = Arc::new(BatchCoalescer::new(
+            Arc::clone(&self.rtp) as Arc<dyn HeadExecutor>,
+            Self::coalescer_config(knobs, exec_rows, max_slots, self.batch),
+            Arc::clone(&stats),
+        ));
+        map.insert(
+            mu_artifact.to_string(),
+            CoalescerSlot {
+                co: Arc::downgrade(&co),
+                stats: Arc::clone(&stats),
+            },
+        );
+        (co, stats)
+    }
+
+    fn coalescer_config(
+        knobs: &CoalesceConfig,
+        exec_rows: usize,
+        max_slots: usize,
+        batch: usize,
+    ) -> CoalescerConfig {
+        let max_rows = match knobs.max_coalesced_batch {
+            0 => exec_rows,
+            n => n.clamp(batch, exec_rows),
+        };
+        CoalescerConfig {
+            exec_rows,
+            max_rows,
+            max_slots,
+            window: Duration::from_micros(knobs.window_us),
+            bypass_margin: Duration::from_secs_f64(
+                knobs.bypass_margin_ms / 1e3,
+            ),
+        }
+    }
+
+    /// Whether a live coalescer queue exists for `mu_artifact` (used by
+    /// tests to assert cross-scenario sharing).
+    pub fn live_coalescers(&self) -> usize {
+        self.coalescers
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.co.strong_count() > 0)
+            .count()
+    }
+
+    /// §5.3 storage accounting, shared-core half: resident bytes of the
+    /// substrate components that exist ONCE regardless of how many
+    /// scenarios use them (N2O table, SIM pre-cache LRU, arena pool).
+    /// Per-scenario deltas come from
+    /// [`super::ScenarioEngine::extra_storage_bytes`]; reports sum this
+    /// once plus the deltas instead of re-counting shared memory per
+    /// ranker.
+    pub fn shared_storage_bytes(&self) -> usize {
+        let mut total = 0;
+        total += self.n2o.size_bytes();
+        // LRU entries: ids only (parsed subsequences).
+        total += self.sim_cache.len() * self.world.l_sim_sub * 4;
+        total += self.arena.pooled_bytes();
+        total
+    }
+}

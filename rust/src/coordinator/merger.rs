@@ -1,711 +1,145 @@
-//! The Merger — the system's central coordinator (paper §3.1, Figures 2-5).
+//! The Merger — the system's serving facade (paper §3.1, Figures 2-5).
 //!
-//! One config-driven request pipeline covers the sequential baseline and
-//! every AIF increment of Table 4:
+//! Historically a ~1.2k-line monolith owning the whole substrate for ONE
+//! variant; now a thin composition of the two halves it was split into
+//! (DESIGN.md §13):
 //!
-//! ```text
-//! score(request):
-//!   phase 1 (only if variant.user == "async"):
-//!       ├─ fetch user features ─ user_tower on the consistent-hashed RTP
-//!       │  worker ─ cache UserAsync under hash(request_id, nickname)
-//!       ├─ pre-warm the SIM LRU for every user-category combination
-//!       └─ ... all OVERLAPPED with the retrieval stage
-//!   retrieval (blocks for the modeled upstream latency)
-//!   phase 2 (real-time pre-rank):
-//!       ├─ take cached UserAsync (or fetch/compute user-side inline —
-//!       │  the sequential baseline path)
-//!       ├─ split candidates into mini-batches; per batch, concurrently:
-//!       │    fetch item features (inline variants) or read the N2O
-//!       │    snapshot (nearline variants), assemble head inputs, execute
-//!       │    the head artifact on the RTP fleet
-//!       └─ merge scores, top-K
-//! ```
+//! * [`ServingCore`] — all interaction-independent, scenario-agnostic
+//!   state (RTP fleet, feature store, world, nearline N2O table, caches,
+//!   coalescer queues), built once;
+//! * [`ScenarioRegistry`] — named [`ScenarioEngine`]s over that core, one
+//!   per served scenario, hot add/remove/reload.
+//!
+//! `Merger::build` keeps its one-call bring-up contract: it builds the
+//! core and registers every scenario block of the config (one derived
+//! from the flat fields when none are declared).  `score` routes by
+//! `ScoreRequest.scenario`, defaulting to the configured scenario, so
+//! every pre-registry call site works unchanged.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::batcher;
-use super::router::Router;
+use super::core::ServingCore;
+use super::scenario::{ScenarioEngine, ScenarioRegistry};
 use super::service::{
-    PreRanker, ScoreRequest, ScoreResponse, ScoreTrace, ScoredItem,
-    ServeError, StageSpan,
+    PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest, ScoreResponse,
+    ServeError,
 };
-use crate::cache::{ArenaPool, RequestKey, ShardedLru, UserAsync, UserVecCache};
-use crate::config::{ServingConfig, SimMode};
-use crate::features::{assembly, FeatureStore, World};
-use crate::lsh::{self, Hasher};
+use crate::config::ServingConfig;
 use crate::metrics::ServingMetrics;
-use crate::nearline::{N2oSnapshot, N2oTable, NearlineWorker};
-use crate::retrieval::Retriever;
-use crate::runtime::{
-    BatchCoalescer, CoalescerConfig, HeadExecutor, HeadJob, Manifest,
-    RtpPool, Tensor, VariantSpec,
+use crate::util::json::Value;
+
+// Helpers that predate the split keep their `coordinator::merger::` paths.
+pub use super::core::AUTO_REQUEST_ID_BASE;
+pub use super::scenario::{
+    coalesce_eligible, expected_input_names, expected_input_names_mu,
+    packed_signs, packed_signs_padded,
 };
-use crate::util::threadpool::ThreadPool;
-
-/// Auto-allocated request ids live at and above this bound; callers must
-/// stay below it so the two spaces can never alias a `RequestKey`.
-pub const AUTO_REQUEST_ID_BASE: u64 = 1 << 63;
-
-/// Per-request phase timings.
-#[derive(Debug, Clone, Copy)]
-pub struct PhaseTimings {
-    pub total: Duration,
-    pub retrieval: Duration,
-    pub user_async: Option<Duration>,
-    pub prerank: Duration,
-}
-
-#[derive(Debug)]
-pub struct RequestResult {
-    pub top_k: Vec<(u32, f32)>,
-    pub timings: PhaseTimings,
-}
 
 pub struct Merger {
-    pub cfg: ServingConfig,
-    pub manifest: Arc<Manifest>,
-    pub variant: VariantSpec,
-    pub world: Arc<World>,
-    pub store: Arc<FeatureStore>,
-    pub retriever: Arc<Retriever>,
-    pub rtp: Arc<RtpPool>,
-    pub router: Router,
-    pub user_cache: Arc<UserVecCache>,
-    /// (user, category) -> parsed SIM subsequence.
-    pub sim_cache: Arc<ShardedLru<(u32, u32), Arc<Vec<u32>>>>,
-    pub n2o: Arc<N2oTable>,
-    pub hasher: Arc<Hasher>,
-    pub arena: Arc<ArenaPool>,
-    pub metrics: Arc<ServingMetrics>,
-    async_pool: Arc<ThreadPool>,
-    score_pool: Arc<ThreadPool>,
-    pub batch: usize,
-    head_artifact: String,
-    /// Cross-request dispatch scheduler + the `*_mu` artifact it serves
-    /// (None = sequential per-request executions, the baseline path).
-    coalescer: Option<Arc<BatchCoalescer>>,
-    mu_artifact: Option<String>,
-    /// Request-id allocator for requests that don't bring their own.
-    /// Lives in the top half of the id space so auto-allocated ids can
-    /// never collide with caller-supplied ones (which would alias
-    /// `RequestKey`s in the async-variant user cache).
-    req_ids: AtomicU64,
+    core: Arc<ServingCore>,
+    registry: Arc<ScenarioRegistry>,
+    /// The default scenario's metrics + variant, cached so the
+    /// [`PreRanker`] accessors can hand out references (reloads carry the
+    /// metrics `Arc` over, and the default scenario cannot be removed, so
+    /// both stay valid for the Merger's lifetime).
+    default_metrics: Arc<ServingMetrics>,
+    default_variant: String,
+    /// Requests that failed ROUTING (unknown scenario) — kept separate so
+    /// no scenario's error metric is charged for traffic it never saw.
+    routing_errors: AtomicU64,
 }
 
 impl Merger {
-    /// Bring up the full serving stack for one pipeline configuration.
-    /// Runs the nearline full build when the variant reads the N2O table.
+    /// Bring up the shared core and register every scenario of the config.
+    /// Runs the nearline full build when any scenario reads the N2O table.
     pub fn build(cfg: ServingConfig) -> Result<Merger> {
-        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-        let variant = manifest.variant(&cfg.variant)?.clone();
-        let world = Arc::new(World::load(&manifest)?);
-        let store = Arc::new(FeatureStore::new(
-            Arc::clone(&world),
-            cfg.user_store_latency.clone(),
-            cfg.item_store_latency.clone(),
-        ));
-        let retriever = Arc::new(Retriever::new(
-            Arc::clone(&world),
-            cfg.n_candidates,
-            cfg.retrieval_latency.clone(),
-        ));
-
-        // Artifact set this pipeline needs.
-        let mut artifacts = vec![variant.artifact.clone()];
-        if variant.user == "async" || variant.has_long() {
-            // The user tower also supplies seq_emb for the non-async
-            // long-term rows (computed on the request path there).
-            artifacts.push("user_tower".into());
-        }
-        if variant.item == "nearline" {
-            artifacts.push("item_tower".into());
-        }
-        // Cross-request coalescing rides on the multi-user (`*_mu`) head
-        // flavor; resolve it before the fleet spins up so every worker
-        // compiles it.  Absence (older artifact sets) degrades to the
-        // per-request path with a warning instead of failing startup.
-        let mu_artifact = if cfg.coalesce.enabled {
-            let name = format!("{}_mu", variant.artifact);
-            if !coalesce_eligible(&variant) {
-                log::warn!(
-                    "coalescing requested but variant {} is not eligible \
-                     (needs async user + precomputable long-term head); \
-                     serving per-request executions",
-                    variant.name
-                );
-                None
-            } else if !manifest.artifacts.contains_key(&name) {
-                log::warn!(
-                    "coalescing requested but artifact {name:?} is not in \
-                     the manifest (re-run `make artifacts`); serving \
-                     per-request executions"
-                );
-                None
-            } else {
-                Some(name)
-            }
-        } else {
-            None
-        };
-        if let Some(name) = &mu_artifact {
-            artifacts.push(name.clone());
-        }
-        let rtp = Arc::new(RtpPool::new(
-            Arc::clone(&manifest),
-            artifacts,
-            cfg.n_rtp_workers,
-        ));
-
-        let hasher = Arc::new(Hasher::from_table(&world.w_hash));
-        let batch = manifest.batch;
-        let n2o = Arc::new(N2oTable::new(
-            world.n_items,
-            manifest.dim("D"),
-            manifest.dim("N_BRIDGE"),
-            manifest.dim("D_LSH_BITS"),
-        ));
-        if variant.item == "nearline" {
-            let worker = NearlineWorker::new(
-                Arc::clone(&rtp),
-                Arc::clone(&world),
-                Arc::clone(&hasher),
-                Arc::clone(&n2o),
-                batch,
-            );
-            let report = worker.full_build(1).context("nearline full build")?;
-            log::info!(
-                "N2O full build: {} items, {} executions, {:?}, {} bytes",
-                report.n_items,
-                report.executions,
-                report.elapsed,
-                report.table_bytes
-            );
-        }
-
-        // Validate the head signature against what we will assemble.
-        let expected = expected_input_names(&variant);
-        let actual: Vec<String> = manifest
-            .artifact(&variant.artifact)?
-            .inputs
-            .iter()
-            .map(|s| s.name.clone())
-            .collect();
+        let scenarios = cfg.effective_scenarios();
+        let default = cfg.default_scenario_name();
         anyhow::ensure!(
-            expected == actual,
-            "head {} signature mismatch: assembling {expected:?}, \
-             manifest says {actual:?}",
-            variant.artifact
+            scenarios.iter().any(|s| s.name == default),
+            "default_scenario {default:?} does not name a scenario block"
         );
-
-        // Bring up the coalescer against the validated `_mu` signature.
-        let metrics = Arc::new(ServingMetrics::new());
-        let coalescer = match &mu_artifact {
-            Some(name) => {
-                let spec = manifest.artifact(name)?;
-                let expected_mu = expected_input_names_mu(&variant);
-                let actual_mu: Vec<String> =
-                    spec.inputs.iter().map(|s| s.name.clone()).collect();
-                anyhow::ensure!(
-                    expected_mu == actual_mu,
-                    "coalesced head {name} signature mismatch: assembling \
-                     {expected_mu:?}, manifest says {actual_mu:?}"
-                );
-                let exec_rows = spec.outputs[0].shape[0];
-                let max_slots = spec.inputs[0].shape[0];
-                anyhow::ensure!(
-                    exec_rows >= batch && max_slots >= 1,
-                    "coalesced head {name}: {exec_rows} rows / {max_slots} \
-                     slots cannot hold a {batch}-row mini-batch"
-                );
-                let max_rows = match cfg.coalesce.max_coalesced_batch {
-                    0 => exec_rows,
-                    n => n.clamp(batch, exec_rows),
-                };
-                Some(Arc::new(BatchCoalescer::new(
-                    Arc::clone(&rtp) as Arc<dyn HeadExecutor>,
-                    CoalescerConfig {
-                        exec_rows,
-                        max_rows,
-                        max_slots,
-                        window: Duration::from_micros(
-                            cfg.coalesce.window_us,
-                        ),
-                        bypass_margin: Duration::from_secs_f64(
-                            cfg.coalesce.bypass_margin_ms / 1e3,
-                        ),
-                    },
-                    Arc::clone(&metrics.coalesce),
-                )))
-            }
-            None => None,
-        };
-
+        let core = ServingCore::build(cfg)?;
+        let registry = Arc::new(ScenarioRegistry::new(
+            Arc::clone(&core),
+            default,
+        ));
+        for s in scenarios {
+            registry.add(s)?;
+        }
+        let def = registry
+            .get(None)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(Merger {
-            router: Router::new(cfg.n_rtp_workers, 64),
-            user_cache: Arc::new(UserVecCache::new(cfg.user_cache_shards)),
-            sim_cache: Arc::new(ShardedLru::new(
-                cfg.lru_capacity,
-                cfg.lru_shards,
-            )),
-            arena: ArenaPool::new(cfg.arena_retain),
-            metrics,
-            async_pool: Arc::new(ThreadPool::new(cfg.n_async_workers)),
-            // Batch-scoring tasks block on RTP replies; give them their own
-            // pool (2x the fleet) so they never starve the phase-1 tasks.
-            score_pool: Arc::new(ThreadPool::new(cfg.n_rtp_workers + 2)),
-            head_artifact: variant.artifact.clone(),
-            coalescer,
-            mu_artifact,
-            req_ids: AtomicU64::new(AUTO_REQUEST_ID_BASE),
-            manifest,
-            variant,
-            world,
-            store,
-            retriever,
-            rtp,
-            n2o,
-            hasher,
-            batch,
-            cfg,
+            default_metrics: Arc::clone(&def.metrics),
+            default_variant: def.cfg.variant.clone(),
+            routing_errors: AtomicU64::new(0),
+            core,
+            registry,
         })
     }
 
-    fn nickname(user: usize) -> String {
-        format!("user-{user}")
-    }
-
-    /// Pre-typed-API entry point, kept as a one-line compatibility shim.
-    /// The old API accepted the full u64 id space; ids are masked into
-    /// the caller half so the typed path's auto-id guard holds.
-    #[deprecated(note = "use `score(ScoreRequest::user(user))`")]
-    pub fn handle(&self, request_id: u64, user: usize) -> Result<RequestResult> {
-        let id = request_id % AUTO_REQUEST_ID_BASE;
-        let resp =
-            self.score(ScoreRequest::user(user).with_request_id(id))?;
-        Ok(RequestResult {
-            top_k: resp.items.iter().map(|s| (s.item, s.score)).collect(),
-            timings: resp.timings,
-        })
-    }
-
-    /// Serve one request end to end through the typed contract.
+    /// Serve one request end to end, routed to its scenario (the
+    /// configured default when the request doesn't name one).
     pub fn score(
         &self,
         req: ScoreRequest,
     ) -> Result<ScoreResponse, ServeError> {
-        let result = self.serve(&req);
-        if result.is_err() {
-            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-        }
-        result
+        let engine = match self.registry.get(req.scenario.as_deref()) {
+            Ok(e) => e,
+            Err(e) => {
+                // Attributed to routing, NOT to any scenario's metrics —
+                // no engine saw this request.
+                self.routing_errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        engine.score(req)
     }
 
-    fn serve(&self, req: &ScoreRequest) -> Result<ScoreResponse, ServeError> {
-        let t_total = Instant::now();
-
-        // ---- validation (before any work is scheduled) -------------------
-        let user = req.user;
-        if user >= self.world.n_users {
-            return Err(ServeError::UnknownUser(user));
-        }
-        let top_k = req.top_k.unwrap_or(self.cfg.top_k);
-        if top_k == 0 {
-            return Err(ServeError::BadRequest("top_k must be >= 1".into()));
-        }
-        if let Some(cands) = &req.candidates {
-            if cands.is_empty() {
-                return Err(ServeError::BadRequest(
-                    "candidate override must be non-empty".into(),
-                ));
-            }
-            if let Some(&bad) =
-                cands.iter().find(|&&i| (i as usize) >= self.world.n_items)
-            {
-                return Err(ServeError::BadRequest(format!(
-                    "unknown candidate item {bad}"
-                )));
-            }
-        }
-        if let Some(id) = req.request_id {
-            if id >= AUTO_REQUEST_ID_BASE {
-                return Err(ServeError::BadRequest(format!(
-                    "request_id must be < 2^63 (got {id}; the top half \
-                     is the auto-id space)"
-                )));
-            }
-        }
-        let request_id = req
-            .request_id
-            .unwrap_or_else(|| self.req_ids.fetch_add(1, Ordering::Relaxed));
-        let key = RequestKey::new(request_id, &Self::nickname(user));
-        let worker = self.router.route(key.0);
-
-        // ---- phase 1: online asynchronous user-side inference -----------
-        let async_done = if self.variant.user == "async" {
-            let (tx, rx) = channel::<Result<Duration>>();
-            let store = Arc::clone(&self.store);
-            let world = Arc::clone(&self.world);
-            let rtp = Arc::clone(&self.rtp);
-            let cache = Arc::clone(&self.user_cache);
-            let key2 = key;
-            self.async_pool.spawn(move || {
-                let t0 = Instant::now();
-                let result = (|| -> Result<()> {
-                    let uf = store.fetch_user(user);
-                    // Signatures of the long-term sequence (static table):
-                    // packed bytes feed the SimTier popcount path; the ±1
-                    // plane goes into the tower so it can emit the
-                    // linearized DIN factors.
-                    let packed = packed_signs(&world, &uf.long_seq);
-                    let plane = lsh::unpack_plane(
-                        &packed,
-                        uf.long_seq.len(),
-                        world.w_hash.shape()[0],
-                    );
-                    let mut inputs =
-                        assembly::user_tower_inputs(&world, &uf);
-                    inputs.push(plane);
-                    let rx2 = rtp.call_async_on(worker, "user_tower", inputs);
-                    let out = rx2
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("RTP reply dropped"))??;
-                    cache.put(
-                        key2,
-                        UserAsync {
-                            u_vec: out[0].clone(),
-                            bea_v: out[1].clone(),
-                            seq_emb: out[2].clone(),
-                            din_base: out[3].clone(),
-                            din_g: out[4].clone(),
-                            seq_sign_packed: Arc::new(packed),
-                            long_seq: uf.long_seq,
-                        },
-                    );
-                    Ok(())
-                })();
-                let _ = tx.send(result.map(|()| t0.elapsed()));
-            });
-            Some(rx)
-        } else {
-            None
-        };
-
-        // SIM pre-warming runs alongside retrieval too.
-        if self.variant.sim_cross && self.cfg.sim_mode == SimMode::Precached {
-            let store = Arc::clone(&self.store);
-            let world = Arc::clone(&self.world);
-            let sim_cache = Arc::clone(&self.sim_cache);
-            let budget = self.cfg.sim_budget;
-            let parse_us = self.cfg.sim_parse_us;
-            self.async_pool.spawn(move || {
-                // Only hit the remote store if any of the user's categories
-                // is cold; one multi-get covers them all (Figure 5).
-                let cats = world.user_sim_categories(user);
-                let cold = cats.iter().any(|&c| {
-                    sim_cache.get(&(user as u32, c)).is_none()
-                });
-                if cold {
-                    for (cat, sub) in
-                        store.fetch_sim_all(user, budget, parse_us)
-                    {
-                        sim_cache.insert((user as u32, cat), Arc::new(sub));
-                    }
-                }
-            });
-        }
-
-        // ---- retrieval (upstream stage; blocks) -------------------------
-        // A candidate override skips the retrieval stage entirely (the
-        // caller already knows what to score) but keeps the phase-1 overlap.
-        let t_r = Instant::now();
-        let candidates = match &req.candidates {
-            Some(c) => c.clone(),
-            None => self.retriever.retrieve(user),
-        };
-        let retrieval = t_r.elapsed();
-
-        // ---- join phase 1 -------------------------------------------------
-        let user_async = match async_done {
-            Some(rx) => Some(rx.recv().map_err(|_| {
-                ServeError::Internal("async phase died".into())
-            })??),
-            None => None,
-        };
-
-        // ---- deadline gate before the pre-rank phase ---------------------
-        if let Err(e) = check_deadline(req.deadline, t_total) {
-            // The async result was parked for phase 2; drop it so an
-            // abandoned request doesn't leak a cache entry.
-            if self.variant.user == "async" {
-                let _ = self.user_cache.take(key);
-            }
-            return Err(e);
-        }
-
-        // ---- phase 2: real-time pre-ranking ------------------------------
-        let t_p = Instant::now();
-        let deadline_at = req.deadline.map(|budget| t_total + budget);
-        let (scores, coalesce) =
-            self.prerank(key, user, &candidates, deadline_at)?;
-        let prerank = t_p.elapsed();
-        check_deadline(req.deadline, t_total)?;
-
-        let top = batcher::top_k(&candidates, &scores, top_k);
-        let timings = PhaseTimings {
-            total: t_total.elapsed(),
-            retrieval,
-            user_async,
-            prerank,
-        };
-        self.metrics.record_request(
-            timings.total,
-            timings.prerank,
-            timings.user_async,
-            timings.retrieval,
-        );
-        self.metrics
-            .items_scored
-            .fetch_add(candidates.len() as u64, Ordering::Relaxed);
-
-        let trace = if req.trace {
-            let mut stages = Vec::new();
-            if let Some(ua) = user_async {
-                stages.push(StageSpan {
-                    stage: "user_async",
-                    elapsed: ua,
-                });
-            }
-            stages.push(StageSpan {
-                stage: "retrieval",
-                elapsed: retrieval,
-            });
-            stages.push(StageSpan {
-                stage: "prerank",
-                elapsed: prerank,
-            });
-            if coalesce.batches > 0 {
-                stages.push(StageSpan {
-                    stage: "coalesce_wait",
-                    elapsed: coalesce.max_queue_wait,
-                });
-            }
-            Some(ScoreTrace {
-                n_candidates: candidates.len(),
-                n_batches: candidates.len().div_ceil(self.batch),
-                coalesced_batches: coalesce.batches,
-                stages,
-            })
-        } else {
-            None
-        };
-
-        Ok(ScoreResponse {
-            request_id,
-            user,
-            variant: self.cfg.variant.clone(),
-            items: top
-                .into_iter()
-                .map(|(item, score)| ScoredItem { item, score })
-                .collect(),
-            timings,
-            trace,
-        })
+    /// The shared substrate (fleet, stores, caches, N2O).
+    pub fn core(&self) -> &Arc<ServingCore> {
+        &self.core
     }
 
-    /// The real-time phase: score all candidates through the head artifact.
-    fn prerank(
-        &self,
-        key: RequestKey,
-        user: usize,
-        candidates: &[u32],
-        deadline: Option<Instant>,
-    ) -> Result<(Vec<f32>, CoalesceAgg)> {
-        let v = &self.variant;
-
-        // -- request-level user-side tensors --------------------------------
-        let ua: Option<UserAsync> = if v.user == "async" {
-            Some(self.user_cache.take(key).ok_or_else(|| {
-                anyhow::anyhow!("user async result missing for {key:?}")
-            })?)
-        } else {
-            None
-        };
-
-        // Sequential-baseline user-side work (on the critical path).
-        let mut profile_t = None;
-        let mut seq_short_t = None;
-        let mut seq_emb_t = None;
-        let mut din_base_t = None;
-        let mut din_g_t = None;
-        let mut seq_sign_packed: Option<Arc<Vec<u8>>> = None;
-        let mut seq_len = 0usize;
-        let mut seq_mm_t = None;
-        if v.user != "async" {
-            let uf = self.store.fetch_user(user);
-            profile_t = Some(Tensor::new(
-                vec![1, uf.profile.len()],
-                uf.profile.clone(),
-            ));
-            seq_short_t =
-                Some(assembly::gather_seq_emb(&self.world, &uf.short_seq));
-            if v.has_long() {
-                // The user-side long-term projections run here, on the
-                // request path, via a synchronous user_tower call
-                // (Table 4 "+LSH"/"+Long-term" rows).
-                let packed = packed_signs(&self.world, &uf.long_seq);
-                let plane = lsh::unpack_plane(
-                    &packed,
-                    uf.long_seq.len(),
-                    self.world.w_hash.shape()[0],
-                );
-                let mut inputs =
-                    assembly::user_tower_inputs(&self.world, &uf);
-                inputs.push(plane);
-                let out = self.rtp.call("user_tower", inputs)?;
-                self.metrics
-                    .rtp_calls
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                seq_emb_t = Some(out[2].clone());
-                din_base_t = Some(out[3].clone());
-                din_g_t = Some(out[4].clone());
-                seq_len = uf.long_seq.len();
-                seq_sign_packed = Some(Arc::new(packed));
-                if v.needs_mm() {
-                    seq_mm_t =
-                        Some(assembly::gather_mm(&self.world, &uf.long_seq));
-                }
-            }
-        } else if let Some(ua) = &ua {
-            seq_emb_t = Some(ua.seq_emb.clone());
-            din_base_t = Some(ua.din_base.clone());
-            din_g_t = Some(ua.din_g.clone());
-            seq_sign_packed = Some(Arc::clone(&ua.seq_sign_packed));
-            seq_len = ua.long_seq.len();
-            if v.needs_mm() {
-                seq_mm_t =
-                    Some(assembly::gather_mm(&self.world, &ua.long_seq));
-            }
-        }
-
-        let (u_vec_t, bea_v_t) = match &ua {
-            Some(ua) => (Some(ua.u_vec.clone()), Some(ua.bea_v.clone())),
-            None => (None, None),
-        };
-
-        // -- N2O snapshot (one consistent generation per request) -----------
-        let snapshot: Option<Arc<N2oSnapshot>> = if v.item == "nearline" {
-            Some(Arc::new(self.n2o.snapshot()))
-        } else {
-            None
-        };
-
-        // -- per-mini-batch fan-out -----------------------------------------
-        let batches = batcher::split(candidates, self.batch);
-        let n_batches = batches.len();
-        let (tx, rx) = channel::<(usize, Result<BatchOutcome>)>();
-        for mb in &batches {
-            let items: Vec<u32> = mb.items.to_vec();
-            let index = mb.index;
-            let tx = tx.clone();
-            let this = self.clone_shared();
-            let snapshot = snapshot.clone();
-            let profile_t = profile_t.clone();
-            let seq_short_t = seq_short_t.clone();
-            let u_vec_t = u_vec_t.clone();
-            let bea_v_t = bea_v_t.clone();
-            let seq_emb_t = seq_emb_t.clone();
-            let din_base_t = din_base_t.clone();
-            let din_g_t = din_g_t.clone();
-            let seq_sign_packed = seq_sign_packed.clone();
-            let seq_mm_t = seq_mm_t.clone();
-            self.score_pool.spawn(move || {
-                let result = this.score_batch(
-                    user,
-                    &items,
-                    snapshot.as_deref(),
-                    BatchCtx {
-                        profile: profile_t,
-                        seq_short: seq_short_t,
-                        u_vec: u_vec_t,
-                        bea_v: bea_v_t,
-                        seq_emb: seq_emb_t,
-                        din_base: din_base_t,
-                        din_g: din_g_t,
-                        seq_sign_packed,
-                        seq_len,
-                        seq_mm: seq_mm_t,
-                        deadline,
-                    },
-                );
-                let _ = tx.send((index, result));
-            });
-        }
-        drop(tx);
-
-        let mut per_batch: Vec<Option<Vec<f32>>> = vec![None; n_batches];
-        let mut agg = CoalesceAgg::default();
-        for _ in 0..n_batches {
-            let (idx, result) = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("batch worker died"))?;
-            let outcome = result?;
-            if let Some(wait) = outcome.queue_wait {
-                agg.batches += 1;
-                agg.max_queue_wait = agg.max_queue_wait.max(wait);
-            }
-            per_batch[idx] = Some(outcome.scores);
-        }
-        let per_batch: Vec<Vec<f32>> =
-            per_batch.into_iter().map(|b| b.unwrap()).collect();
-        Ok((
-            batcher::merge_scores(candidates.len(), self.batch, &per_batch),
-            agg,
-        ))
+    /// The scenario registry (hot add/remove/reload).
+    pub fn registry(&self) -> &Arc<ScenarioRegistry> {
+        &self.registry
     }
 
-    /// Clone the shared handles needed inside batch tasks.
-    fn clone_shared(&self) -> BatchScorer {
-        BatchScorer {
-            variant: self.variant.clone(),
-            world: Arc::clone(&self.world),
-            store: Arc::clone(&self.store),
-            rtp: Arc::clone(&self.rtp),
-            sim_cache: Arc::clone(&self.sim_cache),
-            metrics: Arc::clone(&self.metrics),
-            sim_mode: self.cfg.sim_mode,
-            sim_budget: self.cfg.sim_budget,
-            sim_parse_us: self.cfg.sim_parse_us,
-            batch: self.batch,
-            n_tiers: self.manifest.dim("N_TIERS"),
-            head_artifact: self.head_artifact.clone(),
-            coalescer: self.coalescer.clone(),
-            mu_artifact: self.mu_artifact.clone(),
-        }
+    /// The engine serving the default scenario.
+    pub fn default_engine(&self) -> Arc<ScenarioEngine> {
+        self.registry
+            .get(None)
+            .expect("default scenario is always registered")
     }
 
-    /// Whether this pipeline is routing head executions through the
+    /// Shared-world accessor (oracle, candidate catalog).
+    pub fn world(&self) -> &Arc<crate::features::World> {
+        &self.core.world
+    }
+
+    /// Whether the default scenario routes head executions through the
     /// cross-request coalescer.
     pub fn coalescing(&self) -> bool {
-        self.coalescer.is_some()
+        self.default_engine().coalescing()
     }
 
-    /// §5.3 storage accounting: extra resident bytes vs the baseline.
+    /// §5.3 storage accounting: shared-core bytes ONCE plus the (thin)
+    /// per-scenario deltas — never the same N2O/cache memory re-counted
+    /// per registered scenario.
     pub fn extra_storage_bytes(&self) -> usize {
-        let mut total = 0;
-        if self.variant.item == "nearline" {
-            total += self.n2o.size_bytes();
-        }
-        if self.cfg.sim_mode == SimMode::Precached {
-            // LRU entries: ids only (parsed subsequences).
-            total += self.sim_cache.len() * self.world.l_sim_sub * 4;
-        }
-        total += self.arena.pooled_bytes();
-        total
+        self.core.shared_storage_bytes()
+            + self
+                .registry
+                .engines()
+                .iter()
+                .map(|e| e.extra_storage_bytes_delta())
+                .sum::<usize>()
     }
 }
 
@@ -715,15 +149,15 @@ impl PreRanker for Merger {
     }
 
     fn variant_name(&self) -> &str {
-        &self.cfg.variant
+        &self.default_variant
     }
 
     fn n_users(&self) -> usize {
-        self.world.n_users
+        self.core.world.n_users
     }
 
     fn metrics(&self) -> &ServingMetrics {
-        self.metrics.as_ref()
+        self.default_metrics.as_ref()
     }
 
     fn extra_storage_bytes(&self) -> usize {
@@ -731,476 +165,29 @@ impl PreRanker for Merger {
     }
 }
 
-fn check_deadline(
-    deadline: Option<Duration>,
-    t0: Instant,
-) -> Result<(), ServeError> {
-    match deadline {
-        Some(budget) if t0.elapsed() > budget => {
-            Err(ServeError::DeadlineExceeded {
-                budget_ms: budget.as_secs_f64() * 1e3,
-                elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
-            })
-        }
-        _ => Ok(()),
-    }
-}
-
-/// Per-request aggregate of the coalesced dispatch path (zeroed when the
-/// request ran plain per-request executions).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CoalesceAgg {
-    /// Mini-batches of this request that went through the coalescer.
-    pub batches: usize,
-    /// Worst queue dwell any of them paid.
-    pub max_queue_wait: Duration,
-}
-
-/// One mini-batch's scores plus how its execution was dispatched.
-struct BatchOutcome {
-    scores: Vec<f32>,
-    /// Some(wait) when the batch went through the coalescer.
-    queue_wait: Option<Duration>,
-}
-
-/// Request-level tensors shared by every mini-batch of the request.
-struct BatchCtx {
-    profile: Option<Tensor>,
-    seq_short: Option<Tensor>,
-    u_vec: Option<Tensor>,
-    bea_v: Option<Tensor>,
-    seq_emb: Option<Tensor>,
-    din_base: Option<Tensor>,
-    din_g: Option<Tensor>,
-    seq_sign_packed: Option<Arc<Vec<u8>>>,
-    seq_len: usize,
-    seq_mm: Option<Tensor>,
-    /// Absolute request deadline, for the coalescer's bypass decision.
-    deadline: Option<Instant>,
-}
-
-/// The Send-able subset of the Merger used inside batch tasks.
-struct BatchScorer {
-    variant: VariantSpec,
-    world: Arc<World>,
-    store: Arc<FeatureStore>,
-    rtp: Arc<RtpPool>,
-    sim_cache: Arc<ShardedLru<(u32, u32), Arc<Vec<u32>>>>,
-    metrics: Arc<ServingMetrics>,
-    sim_mode: SimMode,
-    sim_budget: f64,
-    sim_parse_us: f64,
-    batch: usize,
-    n_tiers: usize,
-    head_artifact: String,
-    coalescer: Option<Arc<BatchCoalescer>>,
-    mu_artifact: Option<String>,
-}
-
-impl BatchScorer {
-    fn score_batch(
-        &self,
-        user: usize,
-        items: &[u32],
-        snapshot: Option<&N2oSnapshot>,
-        ctx: BatchCtx,
-    ) -> Result<BatchOutcome> {
-        let v = &self.variant;
-        let mut inputs: Vec<Tensor> = Vec::with_capacity(8);
-
-        // user slot
-        if v.user == "async" {
-            inputs.push(ctx.u_vec.clone().expect("u_vec"));
-        } else {
-            inputs.push(ctx.profile.clone().expect("profile"));
-            inputs.push(ctx.seq_short.clone().expect("seq_short"));
-        }
-
-        // item slot (+ fetched features for inline/mm needs)
-        let needs_fetch = v.item == "inline" || v.needs_mm() || v.sim_cross;
-        let feats = if needs_fetch {
-            Some(self.store.fetch_items(items))
-        } else {
-            None
-        };
-        let mut bea_w_nearline = None;
-        let mut sign_nearline = None;
-        if v.item == "nearline" {
-            let snap = snapshot.expect("nearline snapshot");
-            let (vec_t, w_t, s_t) = snap
-                .assemble(items, self.batch)
-                .ok_or_else(|| anyhow::anyhow!("N2O rows missing"))?;
-            inputs.push(vec_t);
-            bea_w_nearline = Some(w_t);
-            sign_nearline = Some(s_t);
-        } else {
-            inputs.push(assembly::item_raw_batch(
-                feats.as_ref().unwrap(),
-                self.batch,
-            ));
-        }
-
-        // BEA slot
-        if v.bea == "bridge" {
-            inputs.push(ctx.bea_v.clone().expect("bea_v"));
-            if v.item == "nearline" {
-                inputs.push(bea_w_nearline.clone().expect("bea_w"));
-            }
-        }
-
-        // long-term slot
-        if v.tiers_precomputed() {
-            // Hoisted serving split: DIN factors from the async pass +
-            // SimTier via uint8 XNOR + popcount LUT (§4.2).  No [L, .]
-            // operand is assembled at all.
-            let item_packed =
-                packed_signs_padded(&self.world, items, self.batch);
-            let n_bits = self.world.w_hash.shape()[0];
-            let item_sign = match &sign_nearline {
-                Some(s) => s.clone(),
-                None => lsh::unpack_plane(&item_packed, self.batch, n_bits),
-            };
-            inputs.push(ctx.din_base.clone().expect("din_base"));
-            inputs.push(ctx.din_g.clone().expect("din_g"));
-            inputs.push(item_sign);
-            let seq_packed =
-                ctx.seq_sign_packed.as_ref().expect("seq packed");
-            let hist = lsh::tier_histogram(
-                &item_packed,
-                self.batch,
-                seq_packed,
-                ctx.seq_len,
-                n_bits,
-                self.n_tiers,
-            );
-            inputs.push(Tensor::new(vec![self.batch, self.n_tiers], hist));
-        } else if v.has_long() {
-            inputs.push(ctx.seq_emb.clone().expect("seq_emb"));
-            if v.needs_lsh() {
-                unreachable!("mixed lsh variants are not served");
-            }
-            if v.needs_mm() {
-                inputs.push(assembly::item_mm_batch(
-                    feats.as_ref().unwrap(),
-                    self.batch,
-                ));
-                inputs.push(ctx.seq_mm.clone().expect("seq_mm"));
-            }
-        }
-
-        // SIM cross slot
-        if v.sim_cross {
-            let cats: Vec<u32> = items
-                .iter()
-                .map(|&i| self.world.category_of(i))
-                .collect();
-            let store = &self.store;
-            let world = &self.world;
-            let sim_cache = &self.sim_cache;
-            let (mode, budget, parse_us) =
-                (self.sim_mode, self.sim_budget, self.sim_parse_us);
-            let t = assembly::sim_cross_batch(
-                world,
-                &cats,
-                self.batch,
-                |cat| match mode {
-                    SimMode::Off => Vec::new(),
-                    SimMode::Sync => store.fetch_sim_subsequence(
-                        user, cat, budget, parse_us,
-                    ),
-                    SimMode::Precached => sim_cache
-                        .get_or_insert_with((user as u32, cat), || {
-                            Arc::new(store.fetch_sim_subsequence(
-                                user, cat, budget, parse_us,
-                            ))
-                        })
-                        .as_ref()
-                        .clone(),
-                },
-            );
-            inputs.push(t);
-        }
-
-        // Dispatch: through the cross-request coalescer when enabled, as
-        // a plain per-request execution otherwise.  Both paths score the
-        // same rows through the same math — coalescing is score-invariant
-        // (the bench pins identical top-K with the knob on and off).
-        if let (Some(co), Some(mu)) = (&self.coalescer, &self.mu_artifact) {
-            let (user_inputs, row_inputs) =
-                split_head_inputs(&self.variant, inputs);
-            let (reply, rx) = channel();
-            co.submit(HeadJob {
-                artifact: mu.clone(),
-                rows: items.len(),
-                row_inputs,
-                user_inputs,
-                deadline: ctx.deadline,
-                reply,
-            });
-            let js = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("coalescer dropped the reply"))??;
-            return Ok(BatchOutcome {
-                scores: js.scores,
-                queue_wait: Some(js.queue_wait),
-            });
-        }
-
-        let scores = self.rtp.call1(&self.head_artifact, inputs)?;
-        self.metrics
-            .rtp_calls
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(BatchOutcome {
-            scores: scores.data().to_vec(),
-            queue_wait: None,
-        })
-    }
-}
-
-/// Expected head-input names, mirroring python `model.serving_inputs`.
-pub fn expected_input_names(v: &VariantSpec) -> Vec<String> {
-    let mut sig: Vec<&str> = Vec::new();
-    if v.user == "async" {
-        sig.push("u_vec");
-    } else {
-        sig.push("profile");
-        sig.push("seq_short");
-    }
-    if v.item == "nearline" {
-        sig.push("item_vec");
-    } else {
-        sig.push("item_raw");
-    }
-    if v.bea == "bridge" {
-        sig.push("bea_v");
-        if v.item == "nearline" {
-            sig.push("bea_w");
-        }
-    }
-    if v.tiers_precomputed() {
-        sig.push("din_base");
-        sig.push("din_g");
-        sig.push("item_sign");
-        sig.push("tiers_in");
-    } else if v.has_long() {
-        sig.push("seq_emb");
-        if v.needs_lsh() {
-            sig.push("item_sign");
-            sig.push("seq_sign");
-        }
-        if v.needs_mm() {
-            sig.push("item_mm");
-            sig.push("seq_mm");
-        }
-    }
-    if v.sim_cross {
-        sig.push("sim_cross");
-    }
-    sig.into_iter().map(String::from).collect()
-}
-
-/// Whether a variant's head can serve coalesced multi-user batches.  The
-/// `_mu` artifact gathers per-row user context by a `row_user` index, so
-/// the request-level operands must be compact: the async user vector plus
-/// (for long-term variants) the hoisted DIN factors.  Variants that feed
-/// `[L, .]` sequence operands into the head cannot coalesce.
-pub fn coalesce_eligible(v: &VariantSpec) -> bool {
-    v.user == "async" && (!v.has_long() || v.tiers_precomputed())
-}
-
-/// Head inputs that are request-level (one slot per request in the `_mu`
-/// artifact) as opposed to row-aligned.
-fn is_user_level_input(name: &str) -> bool {
-    matches!(
-        name,
-        "u_vec"
-            | "bea_v"
-            | "din_base"
-            | "din_g"
-            | "profile"
-            | "seq_short"
-            | "seq_emb"
-            | "seq_sign"
-            | "seq_mm"
-    )
-}
-
-/// Expected input names of the coalesced (`*_mu`) head flavor, mirroring
-/// python `model.serving_inputs_mu`: request-level operands first (slot-
-/// stacked), then the row-aligned operands, then the `row_user` gather
-/// index.
-pub fn expected_input_names_mu(v: &VariantSpec) -> Vec<String> {
-    let base = expected_input_names(v);
-    let mut sig: Vec<String> = base
-        .iter()
-        .filter(|n| is_user_level_input(n))
-        .cloned()
-        .collect();
-    sig.extend(base.iter().filter(|n| !is_user_level_input(n)).cloned());
-    sig.push("row_user".into());
-    sig
-}
-
-/// Split assembled regular-head inputs into the `_mu` job halves:
-/// request-level tensors (squeezed to slot shape) and row-aligned
-/// tensors, each in `expected_input_names_mu` order.
-fn split_head_inputs(
-    v: &VariantSpec,
-    inputs: Vec<Tensor>,
-) -> (Vec<Tensor>, Vec<Tensor>) {
-    let names = expected_input_names(v);
-    debug_assert_eq!(names.len(), inputs.len());
-    let mut user = Vec::new();
-    let mut rows = Vec::new();
-    for (name, t) in names.iter().zip(inputs) {
-        if is_user_level_input(name) {
-            // `[1, w]` request vectors stack as `[U, w]` slots.
-            if t.shape.len() > 1 && t.shape[0] == 1 {
-                user.push(t.reshaped(t.shape[1..].to_vec()));
-            } else {
-                user.push(t);
-            }
-        } else {
-            rows.push(t);
-        }
-    }
-    (user, rows)
-}
-
-/// Packed signature rows for a sequence of item ids (static table).
-pub fn packed_signs(world: &World, items: &[u32]) -> Vec<u8> {
-    let pl = world.w_hash.shape()[0].div_ceil(8);
-    let mut packed = Vec::with_capacity(items.len() * pl);
-    for &i in items {
-        packed.extend_from_slice(world.items_sign_packed.u8_row(i as usize));
-    }
-    packed
-}
-
-/// Same, padded to `batch` rows by repeating the last item.
-pub fn packed_signs_padded(world: &World, items: &[u32], batch: usize) -> Vec<u8> {
-    let mut packed = packed_signs(world, items);
-    let last = world
-        .items_sign_packed
-        .u8_row(items[items.len() - 1] as usize);
-    for _ in items.len()..batch {
-        packed.extend_from_slice(last);
-    }
-    packed
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn aif_variant() -> VariantSpec {
-        VariantSpec {
-            name: "aif".into(),
-            artifact: "head_aif".into(),
-            user: "async".into(),
-            item: "nearline".into(),
-            bea: "bridge".into(),
-            din_sim: "lsh".into(),
-            tier_sim: "lsh".into(),
-            sim_cross: true,
-            sim_budget: 1.0,
-        }
+impl ScenarioAdmin for Merger {
+    fn list_scenarios(&self) -> Vec<ScenarioInfo> {
+        self.registry.infos()
     }
 
-    #[test]
-    fn eligibility_needs_async_user_and_hoisted_long_term() {
-        let aif = aif_variant();
-        assert!(coalesce_eligible(&aif));
-
-        let mut base = aif_variant();
-        base.user = "cheap".into();
-        assert!(
-            !coalesce_eligible(&base),
-            "inline user towers cannot coalesce"
-        );
-
-        let mut mm = aif_variant();
-        mm.din_sim = "mm".into();
-        assert!(
-            !coalesce_eligible(&mm),
-            "[L,.] operands in the head cannot coalesce"
-        );
-
-        let mut nolong = aif_variant();
-        nolong.din_sim = "none".into();
-        nolong.tier_sim = "none".into();
-        assert!(coalesce_eligible(&nolong));
+    fn default_scenario(&self) -> String {
+        self.registry.default_name()
     }
 
-    #[test]
-    fn mu_signature_orders_user_slots_first() {
-        let v = aif_variant();
-        assert_eq!(
-            expected_input_names(&v),
-            vec![
-                "u_vec",
-                "item_vec",
-                "bea_v",
-                "bea_w",
-                "din_base",
-                "din_g",
-                "item_sign",
-                "tiers_in",
-                "sim_cross"
-            ]
-        );
-        assert_eq!(
-            expected_input_names_mu(&v),
-            vec![
-                "u_vec",
-                "bea_v",
-                "din_base",
-                "din_g",
-                "item_vec",
-                "bea_w",
-                "item_sign",
-                "tiers_in",
-                "sim_cross",
-                "row_user"
-            ]
-        );
+    fn routing_errors(&self) -> u64 {
+        self.routing_errors.load(Ordering::Relaxed)
     }
 
-    #[test]
-    fn split_head_inputs_matches_mu_halves() {
-        let v = aif_variant();
-        let b = 4;
-        // Shapes as the regular head assembles them.
-        let inputs = vec![
-            Tensor::zeros(vec![1, 32]),  // u_vec
-            Tensor::zeros(vec![b, 32]),  // item_vec
-            Tensor::zeros(vec![8, 32]),  // bea_v
-            Tensor::zeros(vec![b, 8]),   // bea_w
-            Tensor::zeros(vec![1, 32]),  // din_base
-            Tensor::zeros(vec![64, 32]), // din_g
-            Tensor::zeros(vec![b, 64]),  // item_sign
-            Tensor::zeros(vec![b, 8]),   // tiers_in
-            Tensor::zeros(vec![b, 32]),  // sim_cross
-        ];
-        let (user, rows) = split_head_inputs(&v, inputs);
-        // Slot shapes: leading request axis of 1 squeezed away.
-        let user_shapes: Vec<Vec<usize>> =
-            user.iter().map(|t| t.shape.clone()).collect();
-        assert_eq!(
-            user_shapes,
-            vec![vec![32], vec![8, 32], vec![32], vec![64, 32]]
-        );
-        let row_shapes: Vec<Vec<usize>> =
-            rows.iter().map(|t| t.shape.clone()).collect();
-        assert_eq!(
-            row_shapes,
-            vec![
-                vec![b, 32],
-                vec![b, 8],
-                vec![b, 64],
-                vec![b, 8],
-                vec![b, 32]
-            ]
-        );
+    fn reload_scenario(&self, name: &str) -> Result<ScenarioInfo, ServeError> {
+        let engine = self.registry.reload(name)?;
+        Ok(engine.info(name == self.registry.default_name()))
+    }
+
+    fn scenario_metrics(&self, wall: Duration) -> Vec<(String, Value)> {
+        self.registry
+            .engines()
+            .iter()
+            .map(|e| (e.name().to_string(), e.metrics.snapshot(wall)))
+            .collect()
     }
 }

@@ -1,16 +1,23 @@
-//! L3 coordinator — the paper's system contribution: the Merger two-phase
+//! L3 coordinator — the paper's system contribution: the two-phase
 //! request lifecycle, consistent-hash routing, mini-batch scheduling and
-//! the sequential baseline (all driven by one `ServingConfig`), behind the
-//! typed [`PreRanker`] serving contract.
+//! the sequential baseline, all behind the typed [`PreRanker`] serving
+//! contract — decomposed (DESIGN.md §13) into the shared
+//! [`ServingCore`], per-scenario [`ScenarioEngine`]s managed by a
+//! hot-swappable [`ScenarioRegistry`], and the thin [`Merger`] facade
+//! that composes them.
 
 pub mod batcher;
+pub mod core;
 pub mod merger;
 pub mod router;
+pub mod scenario;
 pub mod service;
 
-pub use merger::{Merger, PhaseTimings, RequestResult};
+pub use self::core::{ServingCore, AUTO_REQUEST_ID_BASE};
+pub use merger::Merger;
 pub use router::Router;
+pub use scenario::{ScenarioEngine, ScenarioRegistry};
 pub use service::{
-    PreRanker, ScoreRequest, ScoreResponse, ScoreTrace, ScoredItem,
-    ServeError, StageSpan,
+    PhaseTimings, PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest,
+    ScoreResponse, ScoreTrace, ScoredItem, ServeError, StageSpan,
 };

@@ -1,0 +1,1360 @@
+//! Per-scenario serving engines + the hot-swappable registry
+//! (DESIGN.md §13).
+//!
+//! A [`ScenarioEngine`] is the scenario-*specific* half of what used to be
+//! the Merger monolith: a variant spec, a head-artifact handle, the
+//! request pipeline (two-phase lifecycle, mini-batch fan-out) and its own
+//! metrics — everything else comes from the shared
+//! [`super::ServingCore`].  Engines are cheap: registering ten scenarios
+//! costs ten small structs over one substrate, not ten fleets.
+//!
+//! The [`ScenarioRegistry`] maps scenario names to engines: readers
+//! clone the engine `Arc` under a brief read lock and serve without
+//! further coordination; `add`/`remove`/`reload` build the replacement
+//! engine off to the side and swap it in under a short write section.
+//! In-flight requests finish on the engine they started with — hot
+//! reload is zero-downtime by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher;
+use super::core::{sim_budget_key, ServingCore, AUTO_REQUEST_ID_BASE};
+use super::service::{
+    PhaseTimings, PreRanker, ScenarioInfo, ScoreRequest, ScoreResponse,
+    ScoreTrace, ScoredItem, ServeError, StageSpan,
+};
+use crate::cache::{RequestKey, ShardedLru, UserAsync};
+use crate::config::{ScenarioConfig, SimMode};
+use crate::features::{assembly, FeatureStore, World};
+use crate::lsh;
+use crate::metrics::ServingMetrics;
+use crate::nearline::N2oSnapshot;
+use crate::retrieval::Retriever;
+use crate::runtime::{
+    BatchCoalescer, HeadJob, RtpPool, Tensor, VariantSpec,
+};
+
+/// One scenario's serving pipeline over the shared core.
+pub struct ScenarioEngine {
+    pub cfg: ScenarioConfig,
+    pub variant: VariantSpec,
+    /// Candidate generation is scenario-scoped (scenarios differ in
+    /// candidate count); the latency model comes from the core config.
+    pub retriever: Arc<Retriever>,
+    pub metrics: Arc<ServingMetrics>,
+    head_artifact: String,
+    /// Cross-request dispatch scheduler + the `*_mu` artifact it serves
+    /// (None = sequential per-request executions, the baseline path).
+    /// Shared with every other scenario on the same head artifact.
+    coalescer: Option<Arc<BatchCoalescer>>,
+    mu_artifact: Option<String>,
+    core: Arc<ServingCore>,
+    /// Unique instance id, salting the per-request user-cache keys so two
+    /// scenarios serving the same (request id, user) never alias.
+    engine_id: u64,
+    /// Bumped on every reload of this scenario name.
+    pub generation: u64,
+}
+
+impl ScenarioEngine {
+    /// Build one engine over the shared core: hot-load its artifacts into
+    /// the fleet, trigger the (once-only) nearline build when the variant
+    /// reads the N2O table, validate the head signature and attach the
+    /// (possibly shared) coalescer queue.
+    pub fn build(
+        core: &Arc<ServingCore>,
+        cfg: ScenarioConfig,
+        generation: u64,
+        carry_metrics: Option<Arc<ServingMetrics>>,
+    ) -> Result<Arc<ScenarioEngine>> {
+        let manifest = &core.manifest;
+        let variant = manifest.variant(&cfg.variant)?.clone();
+
+        // Artifact set this scenario needs.
+        let mut artifacts = vec![variant.artifact.clone()];
+        if variant.user == "async" || variant.has_long() {
+            // The user tower also supplies seq_emb for the non-async
+            // long-term rows (computed on the request path there).
+            artifacts.push("user_tower".into());
+        }
+        if variant.item == "nearline" {
+            artifacts.push("item_tower".into());
+        }
+        // Cross-request coalescing rides on the multi-user (`*_mu`) head
+        // flavor.  Absence (older artifact sets) degrades to the
+        // per-request path with a warning instead of failing registration.
+        let mu_artifact = if cfg.coalesce.enabled {
+            let name = format!("{}_mu", variant.artifact);
+            if !coalesce_eligible(&variant) {
+                log::warn!(
+                    "coalescing requested but variant {} is not eligible \
+                     (needs async user + precomputable long-term head); \
+                     serving per-request executions",
+                    variant.name
+                );
+                None
+            } else if !manifest.artifacts.contains_key(&name) {
+                log::warn!(
+                    "coalescing requested but artifact {name:?} is not in \
+                     the manifest (re-run `make artifacts`); serving \
+                     per-request executions"
+                );
+                None
+            } else {
+                Some(name)
+            }
+        } else {
+            None
+        };
+        if let Some(name) = &mu_artifact {
+            artifacts.push(name.clone());
+        }
+        core.rtp.ensure_artifacts(&artifacts)?;
+        if variant.item == "nearline" {
+            core.ensure_nearline()?;
+        }
+
+        // Validate the head signature against what we will assemble.
+        let expected = expected_input_names(&variant);
+        let actual: Vec<String> = manifest
+            .artifact(&variant.artifact)?
+            .inputs
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        anyhow::ensure!(
+            expected == actual,
+            "head {} signature mismatch: assembling {expected:?}, \
+             manifest says {actual:?}",
+            variant.artifact
+        );
+
+        // Attach the (shared) coalescer against the validated `_mu`
+        // signature.
+        let batch = core.batch;
+        let mut coalescer = None;
+        let mut co_stats = None;
+        if let Some(name) = &mu_artifact {
+            let spec = manifest.artifact(name)?;
+            let expected_mu = expected_input_names_mu(&variant);
+            let actual_mu: Vec<String> =
+                spec.inputs.iter().map(|s| s.name.clone()).collect();
+            anyhow::ensure!(
+                expected_mu == actual_mu,
+                "coalesced head {name} signature mismatch: assembling \
+                 {expected_mu:?}, manifest says {actual_mu:?}"
+            );
+            let exec_rows = spec.outputs[0].shape[0];
+            let max_slots = spec.inputs[0].shape[0];
+            anyhow::ensure!(
+                exec_rows >= batch && max_slots >= 1,
+                "coalesced head {name}: {exec_rows} rows / {max_slots} \
+                 slots cannot hold a {batch}-row mini-batch"
+            );
+            let (co, stats) =
+                core.coalescer_for(name, &cfg.coalesce, exec_rows, max_slots);
+            coalescer = Some(co);
+            co_stats = Some(stats);
+        }
+
+        // Carried (reload) metrics keep their histograms ONLY while they
+        // are wired to the same coalescer stats the rebuilt engine
+        // dispatches into; if the attachment changed, start fresh so the
+        // scenario's coalesce block never reports a disconnected object.
+        let coalesce_wiring_matches = |m: &Arc<ServingMetrics>| match &co_stats
+        {
+            Some(stats) => Arc::ptr_eq(&m.coalesce, stats),
+            None => true,
+        };
+        let metrics = match carry_metrics {
+            Some(m) if coalesce_wiring_matches(&m) => m,
+            _ => {
+                let mut m = ServingMetrics::new();
+                // Share the per-artifact coalescer counters so every
+                // scenario on the queue reports the same dispatch stats.
+                if let Some(stats) = &co_stats {
+                    m.coalesce = Arc::clone(stats);
+                }
+                Arc::new(m)
+            }
+        };
+
+        let retriever = Arc::new(Retriever::new(
+            Arc::clone(&core.world),
+            cfg.n_candidates,
+            core.cfg.retrieval_latency.clone(),
+        ));
+
+        Ok(Arc::new(ScenarioEngine {
+            engine_id: core.next_engine_id(),
+            head_artifact: variant.artifact.clone(),
+            core: Arc::clone(core),
+            coalescer,
+            mu_artifact,
+            metrics,
+            retriever,
+            variant,
+            generation,
+            cfg,
+        }))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.cfg.name
+    }
+
+    /// Admin-listing row for this engine.
+    pub fn info(&self, is_default: bool) -> ScenarioInfo {
+        ScenarioInfo {
+            name: self.cfg.name.clone(),
+            variant: self.cfg.variant.clone(),
+            is_default,
+            generation: self.generation,
+            requests: self.metrics.requests.load(Ordering::Relaxed),
+            coalescing: self.coalescing(),
+        }
+    }
+
+    pub fn core(&self) -> &Arc<ServingCore> {
+        &self.core
+    }
+
+    /// Whether this scenario routes head executions through the
+    /// cross-request coalescer.
+    pub fn coalescing(&self) -> bool {
+        self.coalescer.is_some()
+    }
+
+    /// The shared coalescer handle (tests assert cross-scenario sharing
+    /// via `Arc::ptr_eq`).
+    pub fn coalescer_handle(&self) -> Option<&Arc<BatchCoalescer>> {
+        self.coalescer.as_ref()
+    }
+
+    /// Whether this scenario relies on the shared extra-storage substrate
+    /// (N2O table / SIM pre-cache pool) — the paper's "[S]" column.
+    pub fn uses_shared_storage(&self) -> bool {
+        self.variant.item == "nearline"
+            || (self.variant.sim_cross
+                && self.cfg.sim_mode == SimMode::Precached)
+    }
+
+    /// §5.3 storage accounting, per-scenario half: resident bytes this
+    /// scenario adds ON TOP of the shared core, relative to the
+    /// sequential baseline.  Engines are deliberately thin: the only
+    /// engine-owned allocation of note (the retriever's sampling table)
+    /// exists in the baseline too, so it is not "extra" — the N2O /
+    /// pre-cache bytes are counted once in
+    /// [`ServingCore::shared_storage_bytes`], not once per scenario.
+    pub fn extra_storage_bytes_delta(&self) -> usize {
+        0
+    }
+
+    fn nickname(&self, user: usize) -> String {
+        format!("e{}-user-{user}", self.engine_id)
+    }
+
+    /// Serve one request end to end through the typed contract.
+    pub fn score(
+        &self,
+        req: ScoreRequest,
+    ) -> Result<ScoreResponse, ServeError> {
+        let result = self.serve(&req);
+        if result.is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn serve(&self, req: &ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        let t_total = Instant::now();
+        let core = &self.core;
+
+        // ---- validation (before any work is scheduled) -------------------
+        let user = req.user;
+        if user >= core.world.n_users {
+            return Err(ServeError::UnknownUser(user));
+        }
+        let top_k = req.top_k.unwrap_or(self.cfg.top_k);
+        if top_k == 0 {
+            return Err(ServeError::BadRequest("top_k must be >= 1".into()));
+        }
+        if let Some(cands) = &req.candidates {
+            if cands.is_empty() {
+                return Err(ServeError::BadRequest(
+                    "candidate override must be non-empty".into(),
+                ));
+            }
+            if let Some(&bad) =
+                cands.iter().find(|&&i| (i as usize) >= core.world.n_items)
+            {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown candidate item {bad}"
+                )));
+            }
+        }
+        if let Some(id) = req.request_id {
+            if id >= AUTO_REQUEST_ID_BASE {
+                return Err(ServeError::BadRequest(format!(
+                    "request_id must be < 2^63 (got {id}; the top half \
+                     is the auto-id space)"
+                )));
+            }
+        }
+        let request_id = req
+            .request_id
+            .unwrap_or_else(|| core.next_request_id());
+        let key = RequestKey::new(request_id, &self.nickname(user));
+        let worker = core.router.route(key.0);
+
+        // ---- phase 1: online asynchronous user-side inference -----------
+        let async_done = if self.variant.user == "async" {
+            let (tx, rx) = channel::<Result<Duration>>();
+            let store = Arc::clone(&core.store);
+            let world = Arc::clone(&core.world);
+            let rtp = Arc::clone(&core.rtp);
+            let cache = Arc::clone(&core.user_cache);
+            let key2 = key;
+            core.async_pool.spawn(move || {
+                let t0 = Instant::now();
+                let result = (|| -> Result<()> {
+                    let uf = store.fetch_user(user);
+                    // Signatures of the long-term sequence (static table):
+                    // packed bytes feed the SimTier popcount path; the ±1
+                    // plane goes into the tower so it can emit the
+                    // linearized DIN factors.
+                    let packed = packed_signs(&world, &uf.long_seq);
+                    let plane = lsh::unpack_plane(
+                        &packed,
+                        uf.long_seq.len(),
+                        world.w_hash.shape()[0],
+                    );
+                    let mut inputs =
+                        assembly::user_tower_inputs(&world, &uf);
+                    inputs.push(plane);
+                    let rx2 = rtp.call_async_on(worker, "user_tower", inputs);
+                    let out = rx2
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("RTP reply dropped"))??;
+                    cache.put(
+                        key2,
+                        UserAsync {
+                            u_vec: out[0].clone(),
+                            bea_v: out[1].clone(),
+                            seq_emb: out[2].clone(),
+                            din_base: out[3].clone(),
+                            din_g: out[4].clone(),
+                            seq_sign_packed: Arc::new(packed),
+                            long_seq: uf.long_seq,
+                        },
+                    );
+                    Ok(())
+                })();
+                let _ = tx.send(result.map(|()| t0.elapsed()));
+            });
+            Some(rx)
+        } else {
+            None
+        };
+
+        // SIM pre-warming runs alongside retrieval too.
+        if self.variant.sim_cross && self.cfg.sim_mode == SimMode::Precached
+        {
+            let store = Arc::clone(&core.store);
+            let world = Arc::clone(&core.world);
+            let sim_cache = Arc::clone(&core.sim_cache);
+            let budget = self.cfg.sim_budget;
+            let bkey = sim_budget_key(budget);
+            let parse_us = core.cfg.sim_parse_us;
+            core.async_pool.spawn(move || {
+                // Only hit the remote store if any of the user's categories
+                // is cold; one multi-get covers them all (Figure 5).
+                let cats = world.user_sim_categories(user);
+                let cold = cats.iter().any(|&c| {
+                    sim_cache.get(&(bkey, user as u32, c)).is_none()
+                });
+                if cold {
+                    for (cat, sub) in
+                        store.fetch_sim_all(user, budget, parse_us)
+                    {
+                        sim_cache
+                            .insert((bkey, user as u32, cat), Arc::new(sub));
+                    }
+                }
+            });
+        }
+
+        // ---- retrieval (upstream stage; blocks) -------------------------
+        // A candidate override skips the retrieval stage entirely (the
+        // caller already knows what to score) but keeps the phase-1 overlap.
+        let t_r = Instant::now();
+        let candidates = match &req.candidates {
+            Some(c) => c.clone(),
+            None => self.retriever.retrieve(user),
+        };
+        let retrieval = t_r.elapsed();
+
+        // ---- join phase 1 -------------------------------------------------
+        let user_async = match async_done {
+            Some(rx) => Some(rx.recv().map_err(|_| {
+                ServeError::Internal("async phase died".into())
+            })??),
+            None => None,
+        };
+
+        // ---- deadline gate before the pre-rank phase ---------------------
+        if let Err(e) = check_deadline(req.deadline, t_total) {
+            // The async result was parked for phase 2; drop it so an
+            // abandoned request doesn't leak a cache entry.
+            if self.variant.user == "async" {
+                let _ = core.user_cache.take(key);
+            }
+            return Err(e);
+        }
+
+        // ---- phase 2: real-time pre-ranking ------------------------------
+        let t_p = Instant::now();
+        let deadline_at = req.deadline.map(|budget| t_total + budget);
+        let (scores, coalesce) =
+            self.prerank(key, user, &candidates, deadline_at)?;
+        let prerank = t_p.elapsed();
+        check_deadline(req.deadline, t_total)?;
+
+        let top = batcher::top_k(&candidates, &scores, top_k);
+        let timings = PhaseTimings {
+            total: t_total.elapsed(),
+            retrieval,
+            user_async,
+            prerank,
+        };
+        self.metrics.record_request(
+            timings.total,
+            timings.prerank,
+            timings.user_async,
+            timings.retrieval,
+        );
+        self.metrics
+            .items_scored
+            .fetch_add(candidates.len() as u64, Ordering::Relaxed);
+
+        let trace = if req.trace {
+            let mut stages = Vec::new();
+            if let Some(ua) = user_async {
+                stages.push(StageSpan {
+                    stage: "user_async",
+                    elapsed: ua,
+                });
+            }
+            stages.push(StageSpan {
+                stage: "retrieval",
+                elapsed: retrieval,
+            });
+            stages.push(StageSpan {
+                stage: "prerank",
+                elapsed: prerank,
+            });
+            if coalesce.batches > 0 {
+                stages.push(StageSpan {
+                    stage: "coalesce_wait",
+                    elapsed: coalesce.max_queue_wait,
+                });
+            }
+            Some(ScoreTrace {
+                n_candidates: candidates.len(),
+                n_batches: candidates.len().div_ceil(core.batch),
+                coalesced_batches: coalesce.batches,
+                stages,
+            })
+        } else {
+            None
+        };
+
+        Ok(ScoreResponse {
+            request_id,
+            user,
+            scenario: self.cfg.name.clone(),
+            variant: self.cfg.variant.clone(),
+            items: top
+                .into_iter()
+                .map(|(item, score)| ScoredItem { item, score })
+                .collect(),
+            timings,
+            trace,
+        })
+    }
+
+    /// The real-time phase: score all candidates through the head artifact.
+    fn prerank(
+        &self,
+        key: RequestKey,
+        user: usize,
+        candidates: &[u32],
+        deadline: Option<Instant>,
+    ) -> Result<(Vec<f32>, CoalesceAgg)> {
+        let core = &self.core;
+        let v = &self.variant;
+
+        // -- request-level user-side tensors --------------------------------
+        let ua: Option<UserAsync> = if v.user == "async" {
+            Some(core.user_cache.take(key).ok_or_else(|| {
+                anyhow::anyhow!("user async result missing for {key:?}")
+            })?)
+        } else {
+            None
+        };
+
+        // Sequential-baseline user-side work (on the critical path).
+        let mut profile_t = None;
+        let mut seq_short_t = None;
+        let mut seq_emb_t = None;
+        let mut din_base_t = None;
+        let mut din_g_t = None;
+        let mut seq_sign_packed: Option<Arc<Vec<u8>>> = None;
+        let mut seq_len = 0usize;
+        let mut seq_mm_t = None;
+        if v.user != "async" {
+            let uf = core.store.fetch_user(user);
+            profile_t = Some(Tensor::new(
+                vec![1, uf.profile.len()],
+                uf.profile.clone(),
+            ));
+            seq_short_t =
+                Some(assembly::gather_seq_emb(&core.world, &uf.short_seq));
+            if v.has_long() {
+                // The user-side long-term projections run here, on the
+                // request path, via a synchronous user_tower call
+                // (Table 4 "+LSH"/"+Long-term" rows).
+                let packed = packed_signs(&core.world, &uf.long_seq);
+                let plane = lsh::unpack_plane(
+                    &packed,
+                    uf.long_seq.len(),
+                    core.world.w_hash.shape()[0],
+                );
+                let mut inputs =
+                    assembly::user_tower_inputs(&core.world, &uf);
+                inputs.push(plane);
+                let out = core.rtp.call("user_tower", inputs)?;
+                self.metrics
+                    .rtp_calls
+                    .fetch_add(1, Ordering::Relaxed);
+                seq_emb_t = Some(out[2].clone());
+                din_base_t = Some(out[3].clone());
+                din_g_t = Some(out[4].clone());
+                seq_len = uf.long_seq.len();
+                seq_sign_packed = Some(Arc::new(packed));
+                if v.needs_mm() {
+                    seq_mm_t = Some(assembly::gather_mm(
+                        &core.world,
+                        &uf.long_seq,
+                    ));
+                }
+            }
+        } else if let Some(ua) = &ua {
+            seq_emb_t = Some(ua.seq_emb.clone());
+            din_base_t = Some(ua.din_base.clone());
+            din_g_t = Some(ua.din_g.clone());
+            seq_sign_packed = Some(Arc::clone(&ua.seq_sign_packed));
+            seq_len = ua.long_seq.len();
+            if v.needs_mm() {
+                seq_mm_t =
+                    Some(assembly::gather_mm(&core.world, &ua.long_seq));
+            }
+        }
+
+        let (u_vec_t, bea_v_t) = match &ua {
+            Some(ua) => (Some(ua.u_vec.clone()), Some(ua.bea_v.clone())),
+            None => (None, None),
+        };
+
+        // -- N2O snapshot (one consistent generation per request) -----------
+        let snapshot: Option<Arc<N2oSnapshot>> = if v.item == "nearline" {
+            Some(Arc::new(core.n2o.snapshot()))
+        } else {
+            None
+        };
+
+        // -- per-mini-batch fan-out -----------------------------------------
+        let batches = batcher::split(candidates, core.batch);
+        let n_batches = batches.len();
+        let (tx, rx) = channel::<(usize, Result<BatchOutcome>)>();
+        for mb in &batches {
+            let items: Vec<u32> = mb.items.to_vec();
+            let index = mb.index;
+            let tx = tx.clone();
+            let this = self.clone_shared();
+            let snapshot = snapshot.clone();
+            let profile_t = profile_t.clone();
+            let seq_short_t = seq_short_t.clone();
+            let u_vec_t = u_vec_t.clone();
+            let bea_v_t = bea_v_t.clone();
+            let seq_emb_t = seq_emb_t.clone();
+            let din_base_t = din_base_t.clone();
+            let din_g_t = din_g_t.clone();
+            let seq_sign_packed = seq_sign_packed.clone();
+            let seq_mm_t = seq_mm_t.clone();
+            core.score_pool.spawn(move || {
+                let result = this.score_batch(
+                    user,
+                    &items,
+                    snapshot.as_deref(),
+                    BatchCtx {
+                        profile: profile_t,
+                        seq_short: seq_short_t,
+                        u_vec: u_vec_t,
+                        bea_v: bea_v_t,
+                        seq_emb: seq_emb_t,
+                        din_base: din_base_t,
+                        din_g: din_g_t,
+                        seq_sign_packed,
+                        seq_len,
+                        seq_mm: seq_mm_t,
+                        deadline,
+                    },
+                );
+                let _ = tx.send((index, result));
+            });
+        }
+        drop(tx);
+
+        let mut per_batch: Vec<Option<Vec<f32>>> = vec![None; n_batches];
+        let mut agg = CoalesceAgg::default();
+        for _ in 0..n_batches {
+            let (idx, result) = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("batch worker died"))?;
+            let outcome = result?;
+            if let Some(wait) = outcome.queue_wait {
+                agg.batches += 1;
+                agg.max_queue_wait = agg.max_queue_wait.max(wait);
+            }
+            per_batch[idx] = Some(outcome.scores);
+        }
+        let per_batch: Vec<Vec<f32>> =
+            per_batch.into_iter().map(|b| b.unwrap()).collect();
+        Ok((
+            batcher::merge_scores(candidates.len(), core.batch, &per_batch),
+            agg,
+        ))
+    }
+
+    /// Clone the shared handles needed inside batch tasks.
+    fn clone_shared(&self) -> BatchScorer {
+        let core = &self.core;
+        BatchScorer {
+            variant: self.variant.clone(),
+            world: Arc::clone(&core.world),
+            store: Arc::clone(&core.store),
+            rtp: Arc::clone(&core.rtp),
+            sim_cache: Arc::clone(&core.sim_cache),
+            metrics: Arc::clone(&self.metrics),
+            sim_mode: self.cfg.sim_mode,
+            sim_budget: self.cfg.sim_budget,
+            sim_parse_us: core.cfg.sim_parse_us,
+            batch: core.batch,
+            n_tiers: core.manifest.dim("N_TIERS"),
+            head_artifact: self.head_artifact.clone(),
+            coalescer: self.coalescer.clone(),
+            mu_artifact: self.mu_artifact.clone(),
+        }
+    }
+}
+
+impl PreRanker for ScenarioEngine {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        ScenarioEngine::score(self, req)
+    }
+
+    fn variant_name(&self) -> &str {
+        &self.cfg.variant
+    }
+
+    fn n_users(&self) -> usize {
+        self.core.world.n_users
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        self.metrics.as_ref()
+    }
+
+    fn extra_storage_bytes(&self) -> usize {
+        // The per-scenario DELTA only; shared-core bytes are reported once
+        // by `ServingCore::shared_storage_bytes` (see the Merger facade).
+        self.extra_storage_bytes_delta()
+    }
+}
+
+// ==========================================================================
+// The registry
+// ==========================================================================
+
+struct RegistryState {
+    engines: HashMap<String, Arc<ScenarioEngine>>,
+    /// Registration order (stable listings).
+    order: Vec<String>,
+    default: String,
+}
+
+/// Name -> engine map behind a reader-writer lock.  Lookups clone the
+/// engine `Arc` under a brief read lock and then serve lock-free;
+/// `add`/`reload` build the replacement engine entirely OUTSIDE the lock
+/// (artifact compiles included) and swap it in under a short write
+/// section — in-flight requests hold their own engine `Arc` and finish on
+/// it, so hot swaps are zero-downtime.
+pub struct ScenarioRegistry {
+    core: Arc<ServingCore>,
+    state: RwLock<RegistryState>,
+}
+
+impl ScenarioRegistry {
+    /// An empty registry over `core`; `default` is the scenario that
+    /// serves requests not naming one (it does not need to exist yet).
+    pub fn new(core: Arc<ServingCore>, default: String) -> ScenarioRegistry {
+        ScenarioRegistry {
+            core,
+            state: RwLock::new(RegistryState {
+                engines: HashMap::new(),
+                order: Vec::new(),
+                default,
+            }),
+        }
+    }
+
+    pub fn core(&self) -> &Arc<ServingCore> {
+        &self.core
+    }
+
+    /// Register a new scenario (hot add).  The engine is built outside the
+    /// lock — traffic keeps flowing while artifacts compile.
+    pub fn add(
+        &self,
+        cfg: ScenarioConfig,
+    ) -> Result<Arc<ScenarioEngine>> {
+        let name = cfg.name.clone();
+        anyhow::ensure!(
+            !self.state.read().unwrap().engines.contains_key(&name),
+            "scenario {name:?} is already registered"
+        );
+        let engine = ScenarioEngine::build(&self.core, cfg, 0, None)?;
+        let mut state = self.state.write().unwrap();
+        anyhow::ensure!(
+            !state.engines.contains_key(&name),
+            "scenario {name:?} was registered concurrently"
+        );
+        state.engines.insert(name.clone(), Arc::clone(&engine));
+        state.order.push(name);
+        Ok(engine)
+    }
+
+    /// Rebuild one scenario from its spec and swap it in (hot reload:
+    /// re-resolves the variant, signature validation and coalescer
+    /// attachment against the core's manifest, metrics carried over).
+    /// The manifest is the one loaded at core startup — picking up
+    /// re-exported artifact *files* still needs a process restart
+    /// (artifact hot-swap is future work); reload's job is swapping
+    /// engine state with zero downtime.  In-flight requests finish on
+    /// the old engine.  If the scenario was removed or swapped by
+    /// another admin while the replacement was building, the stale
+    /// result is discarded instead of resurrecting it.
+    pub fn reload(
+        &self,
+        name: &str,
+    ) -> Result<Arc<ScenarioEngine>, ServeError> {
+        let old = self
+            .state
+            .read()
+            .unwrap()
+            .engines
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownScenario(name.to_string()))?;
+        let engine = ScenarioEngine::build(
+            &self.core,
+            old.cfg.clone(),
+            old.generation + 1,
+            Some(Arc::clone(&old.metrics)),
+        )
+        .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
+        let mut state = self.state.write().unwrap();
+        match state.engines.get(name) {
+            // Still the engine we rebuilt from: swap.
+            Some(current) if Arc::ptr_eq(current, &old) => {
+                state
+                    .engines
+                    .insert(name.to_string(), Arc::clone(&engine));
+                Ok(engine)
+            }
+            // Removed while we were building: do NOT resurrect it.
+            None => Err(ServeError::UnknownScenario(name.to_string())),
+            // Concurrently swapped (another reload won): drop our stale
+            // build; the caller can retry against the new engine.
+            Some(_) => Err(ServeError::Internal(format!(
+                "scenario {name:?} changed during reload; retry"
+            ))),
+        }
+    }
+
+    /// Remove a scenario (hot).  The default scenario cannot be removed —
+    /// requests not naming a scenario must always have somewhere to go.
+    pub fn remove(&self, name: &str) -> Result<(), ServeError> {
+        let mut state = self.state.write().unwrap();
+        if state.default == name {
+            return Err(ServeError::BadRequest(format!(
+                "cannot remove the default scenario {name:?}"
+            )));
+        }
+        if state.engines.remove(name).is_none() {
+            return Err(ServeError::UnknownScenario(name.to_string()));
+        }
+        state.order.retain(|n| n != name);
+        Ok(())
+    }
+
+    /// Resolve a request's scenario: the named one, or the default.
+    pub fn get(
+        &self,
+        name: Option<&str>,
+    ) -> Result<Arc<ScenarioEngine>, ServeError> {
+        let state = self.state.read().unwrap();
+        let key = name.unwrap_or(state.default.as_str());
+        state
+            .engines
+            .get(key)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownScenario(key.to_string()))
+    }
+
+    pub fn default_name(&self) -> String {
+        self.state.read().unwrap().default.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.read().unwrap().engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.state.read().unwrap().order.clone()
+    }
+
+    /// Admin listing (drives `GET /v1/scenarios`).
+    pub fn infos(&self) -> Vec<ScenarioInfo> {
+        let state = self.state.read().unwrap();
+        state
+            .order
+            .iter()
+            .filter_map(|n| state.engines.get(n))
+            .map(|e| e.info(e.cfg.name == state.default))
+            .collect()
+    }
+
+    /// Engines in registration order (workload drivers iterate these).
+    pub fn engines(&self) -> Vec<Arc<ScenarioEngine>> {
+        let state = self.state.read().unwrap();
+        state
+            .order
+            .iter()
+            .filter_map(|n| state.engines.get(n).cloned())
+            .collect()
+    }
+}
+
+// ==========================================================================
+// Pipeline internals shared with the pre-registry Merger (moved verbatim)
+// ==========================================================================
+
+fn check_deadline(
+    deadline: Option<Duration>,
+    t0: Instant,
+) -> Result<(), ServeError> {
+    match deadline {
+        Some(budget) if t0.elapsed() > budget => {
+            Err(ServeError::DeadlineExceeded {
+                budget_ms: budget.as_secs_f64() * 1e3,
+                elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+            })
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Per-request aggregate of the coalesced dispatch path (zeroed when the
+/// request ran plain per-request executions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoalesceAgg {
+    /// Mini-batches of this request that went through the coalescer.
+    pub batches: usize,
+    /// Worst queue dwell any of them paid.
+    pub max_queue_wait: Duration,
+}
+
+/// One mini-batch's scores plus how its execution was dispatched.
+struct BatchOutcome {
+    scores: Vec<f32>,
+    /// Some(wait) when the batch went through the coalescer.
+    queue_wait: Option<Duration>,
+}
+
+/// Request-level tensors shared by every mini-batch of the request.
+struct BatchCtx {
+    profile: Option<Tensor>,
+    seq_short: Option<Tensor>,
+    u_vec: Option<Tensor>,
+    bea_v: Option<Tensor>,
+    seq_emb: Option<Tensor>,
+    din_base: Option<Tensor>,
+    din_g: Option<Tensor>,
+    seq_sign_packed: Option<Arc<Vec<u8>>>,
+    seq_len: usize,
+    seq_mm: Option<Tensor>,
+    /// Absolute request deadline, for the coalescer's bypass decision.
+    deadline: Option<Instant>,
+}
+
+/// The Send-able subset of the engine used inside batch tasks.
+struct BatchScorer {
+    variant: VariantSpec,
+    world: Arc<World>,
+    store: Arc<FeatureStore>,
+    rtp: Arc<RtpPool>,
+    sim_cache: Arc<ShardedLru<super::core::SimKey, Arc<Vec<u32>>>>,
+    metrics: Arc<ServingMetrics>,
+    sim_mode: SimMode,
+    sim_budget: f64,
+    sim_parse_us: f64,
+    batch: usize,
+    n_tiers: usize,
+    head_artifact: String,
+    coalescer: Option<Arc<BatchCoalescer>>,
+    mu_artifact: Option<String>,
+}
+
+impl BatchScorer {
+    fn score_batch(
+        &self,
+        user: usize,
+        items: &[u32],
+        snapshot: Option<&N2oSnapshot>,
+        ctx: BatchCtx,
+    ) -> Result<BatchOutcome> {
+        let v = &self.variant;
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(8);
+
+        // user slot
+        if v.user == "async" {
+            inputs.push(ctx.u_vec.clone().expect("u_vec"));
+        } else {
+            inputs.push(ctx.profile.clone().expect("profile"));
+            inputs.push(ctx.seq_short.clone().expect("seq_short"));
+        }
+
+        // item slot (+ fetched features for inline/mm needs)
+        let needs_fetch = v.item == "inline" || v.needs_mm() || v.sim_cross;
+        let feats = if needs_fetch {
+            Some(self.store.fetch_items(items))
+        } else {
+            None
+        };
+        let mut bea_w_nearline = None;
+        let mut sign_nearline = None;
+        if v.item == "nearline" {
+            let snap = snapshot.expect("nearline snapshot");
+            let (vec_t, w_t, s_t) = snap
+                .assemble(items, self.batch)
+                .ok_or_else(|| anyhow::anyhow!("N2O rows missing"))?;
+            inputs.push(vec_t);
+            bea_w_nearline = Some(w_t);
+            sign_nearline = Some(s_t);
+        } else {
+            inputs.push(assembly::item_raw_batch(
+                feats.as_ref().unwrap(),
+                self.batch,
+            ));
+        }
+
+        // BEA slot
+        if v.bea == "bridge" {
+            inputs.push(ctx.bea_v.clone().expect("bea_v"));
+            if v.item == "nearline" {
+                inputs.push(bea_w_nearline.clone().expect("bea_w"));
+            }
+        }
+
+        // long-term slot
+        if v.tiers_precomputed() {
+            // Hoisted serving split: DIN factors from the async pass +
+            // SimTier via uint8 XNOR + popcount LUT (§4.2).  No [L, .]
+            // operand is assembled at all.
+            let item_packed =
+                packed_signs_padded(&self.world, items, self.batch);
+            let n_bits = self.world.w_hash.shape()[0];
+            let item_sign = match &sign_nearline {
+                Some(s) => s.clone(),
+                None => lsh::unpack_plane(&item_packed, self.batch, n_bits),
+            };
+            inputs.push(ctx.din_base.clone().expect("din_base"));
+            inputs.push(ctx.din_g.clone().expect("din_g"));
+            inputs.push(item_sign);
+            let seq_packed =
+                ctx.seq_sign_packed.as_ref().expect("seq packed");
+            let hist = lsh::tier_histogram(
+                &item_packed,
+                self.batch,
+                seq_packed,
+                ctx.seq_len,
+                n_bits,
+                self.n_tiers,
+            );
+            inputs.push(Tensor::new(vec![self.batch, self.n_tiers], hist));
+        } else if v.has_long() {
+            inputs.push(ctx.seq_emb.clone().expect("seq_emb"));
+            if v.needs_lsh() {
+                unreachable!("mixed lsh variants are not served");
+            }
+            if v.needs_mm() {
+                inputs.push(assembly::item_mm_batch(
+                    feats.as_ref().unwrap(),
+                    self.batch,
+                ));
+                inputs.push(ctx.seq_mm.clone().expect("seq_mm"));
+            }
+        }
+
+        // SIM cross slot
+        if v.sim_cross {
+            let cats: Vec<u32> = items
+                .iter()
+                .map(|&i| self.world.category_of(i))
+                .collect();
+            let store = &self.store;
+            let world = &self.world;
+            let sim_cache = &self.sim_cache;
+            let (mode, budget, parse_us) =
+                (self.sim_mode, self.sim_budget, self.sim_parse_us);
+            let bkey = sim_budget_key(budget);
+            let t = assembly::sim_cross_batch(
+                world,
+                &cats,
+                self.batch,
+                |cat| match mode {
+                    SimMode::Off => Vec::new(),
+                    SimMode::Sync => store.fetch_sim_subsequence(
+                        user, cat, budget, parse_us,
+                    ),
+                    SimMode::Precached => sim_cache
+                        .get_or_insert_with((bkey, user as u32, cat), || {
+                            Arc::new(store.fetch_sim_subsequence(
+                                user, cat, budget, parse_us,
+                            ))
+                        })
+                        .as_ref()
+                        .clone(),
+                },
+            );
+            inputs.push(t);
+        }
+
+        // Dispatch: through the cross-request coalescer when enabled, as
+        // a plain per-request execution otherwise.  Both paths score the
+        // same rows through the same math — coalescing is score-invariant
+        // (the bench pins identical top-K with the knob on and off).
+        if let (Some(co), Some(mu)) = (&self.coalescer, &self.mu_artifact) {
+            let (user_inputs, row_inputs) =
+                split_head_inputs(&self.variant, inputs);
+            let (reply, rx) = channel();
+            co.submit(HeadJob {
+                artifact: mu.clone(),
+                rows: items.len(),
+                row_inputs,
+                user_inputs,
+                deadline: ctx.deadline,
+                reply,
+            });
+            let js = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("coalescer dropped the reply"))??;
+            return Ok(BatchOutcome {
+                scores: js.scores,
+                queue_wait: Some(js.queue_wait),
+            });
+        }
+
+        let scores = self.rtp.call1(&self.head_artifact, inputs)?;
+        self.metrics.rtp_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(BatchOutcome {
+            scores: scores.data().to_vec(),
+            queue_wait: None,
+        })
+    }
+}
+
+/// Expected head-input names, mirroring python `model.serving_inputs`.
+pub fn expected_input_names(v: &VariantSpec) -> Vec<String> {
+    let mut sig: Vec<&str> = Vec::new();
+    if v.user == "async" {
+        sig.push("u_vec");
+    } else {
+        sig.push("profile");
+        sig.push("seq_short");
+    }
+    if v.item == "nearline" {
+        sig.push("item_vec");
+    } else {
+        sig.push("item_raw");
+    }
+    if v.bea == "bridge" {
+        sig.push("bea_v");
+        if v.item == "nearline" {
+            sig.push("bea_w");
+        }
+    }
+    if v.tiers_precomputed() {
+        sig.push("din_base");
+        sig.push("din_g");
+        sig.push("item_sign");
+        sig.push("tiers_in");
+    } else if v.has_long() {
+        sig.push("seq_emb");
+        if v.needs_lsh() {
+            sig.push("item_sign");
+            sig.push("seq_sign");
+        }
+        if v.needs_mm() {
+            sig.push("item_mm");
+            sig.push("seq_mm");
+        }
+    }
+    if v.sim_cross {
+        sig.push("sim_cross");
+    }
+    sig.into_iter().map(String::from).collect()
+}
+
+/// Whether a variant's head can serve coalesced multi-user batches.  The
+/// `_mu` artifact gathers per-row user context by a `row_user` index, so
+/// the request-level operands must be compact: the async user vector plus
+/// (for long-term variants) the hoisted DIN factors.  Variants that feed
+/// `[L, .]` sequence operands into the head cannot coalesce.
+pub fn coalesce_eligible(v: &VariantSpec) -> bool {
+    v.user == "async" && (!v.has_long() || v.tiers_precomputed())
+}
+
+/// Head inputs that are request-level (one slot per request in the `_mu`
+/// artifact) as opposed to row-aligned.
+fn is_user_level_input(name: &str) -> bool {
+    matches!(
+        name,
+        "u_vec"
+            | "bea_v"
+            | "din_base"
+            | "din_g"
+            | "profile"
+            | "seq_short"
+            | "seq_emb"
+            | "seq_sign"
+            | "seq_mm"
+    )
+}
+
+/// Expected input names of the coalesced (`*_mu`) head flavor, mirroring
+/// python `model.serving_inputs_mu`: request-level operands first (slot-
+/// stacked), then the row-aligned operands, then the `row_user` gather
+/// index.
+pub fn expected_input_names_mu(v: &VariantSpec) -> Vec<String> {
+    let base = expected_input_names(v);
+    let mut sig: Vec<String> = base
+        .iter()
+        .filter(|n| is_user_level_input(n))
+        .cloned()
+        .collect();
+    sig.extend(base.iter().filter(|n| !is_user_level_input(n)).cloned());
+    sig.push("row_user".into());
+    sig
+}
+
+/// Request-level operands assembled with a leading request axis of 1
+/// (`[1, w]` vectors) — squeezed to slot shape before slot-stacking.
+/// Matrix operands (`bea_v [n, D]`, `din_g [d', D]`, sequence rows) keep
+/// their shape even when a dimension happens to be 1, so the merged
+/// `_mu` input rank always matches the compiled artifact.
+fn is_request_vector_input(name: &str) -> bool {
+    matches!(name, "u_vec" | "din_base" | "profile")
+}
+
+/// Split assembled regular-head inputs into the `_mu` job halves:
+/// request-level tensors (squeezed to slot shape) and row-aligned
+/// tensors, each in `expected_input_names_mu` order.
+fn split_head_inputs(
+    v: &VariantSpec,
+    inputs: Vec<Tensor>,
+) -> (Vec<Tensor>, Vec<Tensor>) {
+    let names = expected_input_names(v);
+    debug_assert_eq!(names.len(), inputs.len());
+    let mut user = Vec::new();
+    let mut rows = Vec::new();
+    for (name, t) in names.iter().zip(inputs) {
+        if is_user_level_input(name) {
+            // `[1, w]` request vectors stack as `[U, w]` slots; squeeze
+            // by NAME, not by shape — a bea_v/din_g whose first axis is
+            // legitimately 1 must keep its rank.
+            if is_request_vector_input(name)
+                && t.shape.len() > 1
+                && t.shape[0] == 1
+            {
+                user.push(t.reshaped(t.shape[1..].to_vec()));
+            } else {
+                user.push(t);
+            }
+        } else {
+            rows.push(t);
+        }
+    }
+    (user, rows)
+}
+
+/// Packed signature rows for a sequence of item ids (static table).
+pub fn packed_signs(world: &World, items: &[u32]) -> Vec<u8> {
+    let pl = world.w_hash.shape()[0].div_ceil(8);
+    let mut packed = Vec::with_capacity(items.len() * pl);
+    for &i in items {
+        packed.extend_from_slice(world.items_sign_packed.u8_row(i as usize));
+    }
+    packed
+}
+
+/// Same, padded to `batch` rows by repeating the last item.
+pub fn packed_signs_padded(world: &World, items: &[u32], batch: usize) -> Vec<u8> {
+    let mut packed = packed_signs(world, items);
+    let last = world
+        .items_sign_packed
+        .u8_row(items[items.len() - 1] as usize);
+    for _ in items.len()..batch {
+        packed.extend_from_slice(last);
+    }
+    packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aif_variant() -> VariantSpec {
+        VariantSpec {
+            name: "aif".into(),
+            artifact: "head_aif".into(),
+            user: "async".into(),
+            item: "nearline".into(),
+            bea: "bridge".into(),
+            din_sim: "lsh".into(),
+            tier_sim: "lsh".into(),
+            sim_cross: true,
+            sim_budget: 1.0,
+        }
+    }
+
+    #[test]
+    fn eligibility_needs_async_user_and_hoisted_long_term() {
+        let aif = aif_variant();
+        assert!(coalesce_eligible(&aif));
+
+        let mut base = aif_variant();
+        base.user = "cheap".into();
+        assert!(
+            !coalesce_eligible(&base),
+            "inline user towers cannot coalesce"
+        );
+
+        let mut mm = aif_variant();
+        mm.din_sim = "mm".into();
+        assert!(
+            !coalesce_eligible(&mm),
+            "[L,.] operands in the head cannot coalesce"
+        );
+
+        let mut nolong = aif_variant();
+        nolong.din_sim = "none".into();
+        nolong.tier_sim = "none".into();
+        assert!(coalesce_eligible(&nolong));
+    }
+
+    #[test]
+    fn mu_signature_orders_user_slots_first() {
+        let v = aif_variant();
+        assert_eq!(
+            expected_input_names(&v),
+            vec![
+                "u_vec",
+                "item_vec",
+                "bea_v",
+                "bea_w",
+                "din_base",
+                "din_g",
+                "item_sign",
+                "tiers_in",
+                "sim_cross"
+            ]
+        );
+        assert_eq!(
+            expected_input_names_mu(&v),
+            vec![
+                "u_vec",
+                "bea_v",
+                "din_base",
+                "din_g",
+                "item_vec",
+                "bea_w",
+                "item_sign",
+                "tiers_in",
+                "sim_cross",
+                "row_user"
+            ]
+        );
+    }
+
+    #[test]
+    fn split_head_inputs_matches_mu_halves() {
+        let v = aif_variant();
+        let b = 4;
+        // Shapes as the regular head assembles them.
+        let inputs = vec![
+            Tensor::zeros(vec![1, 32]),  // u_vec
+            Tensor::zeros(vec![b, 32]),  // item_vec
+            Tensor::zeros(vec![8, 32]),  // bea_v
+            Tensor::zeros(vec![b, 8]),   // bea_w
+            Tensor::zeros(vec![1, 32]),  // din_base
+            Tensor::zeros(vec![64, 32]), // din_g
+            Tensor::zeros(vec![b, 64]),  // item_sign
+            Tensor::zeros(vec![b, 8]),   // tiers_in
+            Tensor::zeros(vec![b, 32]),  // sim_cross
+        ];
+        let (user, rows) = split_head_inputs(&v, inputs);
+        // Slot shapes: leading request axis of 1 squeezed away.
+        let user_shapes: Vec<Vec<usize>> =
+            user.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(
+            user_shapes,
+            vec![vec![32], vec![8, 32], vec![32], vec![64, 32]]
+        );
+        let row_shapes: Vec<Vec<usize>> =
+            rows.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(
+            row_shapes,
+            vec![
+                vec![b, 32],
+                vec![b, 8],
+                vec![b, 64],
+                vec![b, 8],
+                vec![b, 32]
+            ]
+        );
+    }
+}

@@ -16,7 +16,14 @@ use std::time::Duration;
 use crate::metrics::ServingMetrics;
 use crate::util::json::{Object, Value};
 
-use super::merger::PhaseTimings;
+/// Per-request phase timings.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimings {
+    pub total: Duration,
+    pub retrieval: Duration,
+    pub user_async: Option<Duration>,
+    pub prerank: Duration,
+}
 
 /// One pre-ranking request.  Construct with [`ScoreRequest::user`] and
 /// chain `with_*` builders for the optional knobs:
@@ -47,6 +54,10 @@ pub struct ScoreRequest {
     pub deadline: Option<Duration>,
     /// Attach a per-stage [`ScoreTrace`] to the response.
     pub trace: bool,
+    /// Which registered scenario serves this request; `None` routes to
+    /// the configured default.  Unknown names fail with
+    /// [`ServeError::UnknownScenario`].
+    pub scenario: Option<String>,
 }
 
 impl ScoreRequest {
@@ -82,6 +93,11 @@ impl ScoreRequest {
         self
     }
 
+    pub fn with_scenario(mut self, scenario: impl Into<String>) -> Self {
+        self.scenario = Some(scenario.into());
+        self
+    }
+
     /// Parse one request object from a `POST /v1/score` JSON body.
     pub fn from_json(v: &Value) -> Result<ScoreRequest, ServeError> {
         let o = v.as_obj().ok_or_else(|| {
@@ -101,7 +117,7 @@ impl ScoreRequest {
             if !matches!(
                 key,
                 "user" | "users" | "top_k" | "candidates" | "deadline_ms"
-                    | "trace"
+                    | "trace" | "scenario"
             ) {
                 return Err(ServeError::BadRequest(format!(
                     "unknown field {key:?}"
@@ -132,6 +148,19 @@ impl ScoreRequest {
             req.trace = v.as_bool().ok_or_else(|| {
                 ServeError::BadRequest("\"trace\" must be a boolean".into())
             })?;
+        }
+        if let Some(v) = o.get("scenario") {
+            let s = v.as_str().ok_or_else(|| {
+                ServeError::BadRequest(
+                    "\"scenario\" must be a string".into(),
+                )
+            })?;
+            if s.is_empty() {
+                return Err(ServeError::BadRequest(
+                    "\"scenario\" must be non-empty".into(),
+                ));
+            }
+            req.scenario = Some(s.to_string());
         }
         if let Some(v) = o.get("candidates") {
             let arr = v.as_arr().ok_or_else(|| {
@@ -209,6 +238,8 @@ pub struct ScoreTrace {
 pub struct ScoreResponse {
     pub request_id: u64,
     pub user: usize,
+    /// Registered scenario that served the request.
+    pub scenario: String,
     /// Pipeline variant that served the request (Table-4 row name).
     pub variant: String,
     /// Top-K scored items, descending score.
@@ -224,6 +255,7 @@ impl ScoreResponse {
         let mut o = Object::new();
         o.insert("request_id", self.request_id);
         o.insert("user", self.user);
+        o.insert("scenario", self.scenario.as_str());
         o.insert("variant", self.variant.as_str());
         o.insert("total_ms", ms(self.timings.total));
         o.insert("retrieval_ms", ms(self.timings.retrieval));
@@ -270,6 +302,8 @@ impl ScoreResponse {
 pub enum ServeError {
     #[error("unknown user {0}")]
     UnknownUser(usize),
+    #[error("unknown scenario {0:?}")]
+    UnknownScenario(String),
     #[error(
         "deadline exceeded: {elapsed_ms:.2}ms elapsed of a \
          {budget_ms:.2}ms budget"
@@ -288,6 +322,7 @@ impl ServeError {
     pub fn http_status(&self) -> u16 {
         match self {
             ServeError::UnknownUser(_) => 404,
+            ServeError::UnknownScenario(_) => 404,
             ServeError::DeadlineExceeded { .. } => 504,
             ServeError::BadRequest(_) => 400,
             ServeError::Overloaded(_) => 429,
@@ -322,7 +357,60 @@ pub trait PreRanker: Send + Sync {
     fn metrics(&self) -> &ServingMetrics;
 
     /// §5.3 accounting: extra resident bytes vs the sequential baseline.
+    /// Multi-scenario services report shared-core bytes once plus
+    /// per-scenario deltas — never shared memory re-counted per ranker.
     fn extra_storage_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// One row of the `GET /v1/scenarios` admin listing.
+#[derive(Debug, Clone)]
+pub struct ScenarioInfo {
+    pub name: String,
+    pub variant: String,
+    pub is_default: bool,
+    /// Bumped on every hot reload of this scenario.
+    pub generation: u64,
+    /// Requests this scenario has served.
+    pub requests: u64,
+    /// Whether its head executions route through the coalescer.
+    pub coalescing: bool,
+}
+
+impl ScenarioInfo {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("name", self.name.as_str());
+        o.insert("variant", self.variant.as_str());
+        o.insert("default", self.is_default);
+        o.insert("generation", self.generation);
+        o.insert("requests", self.requests);
+        o.insert("coalescing", self.coalescing);
+        Value::Obj(o)
+    }
+}
+
+/// Admin surface of a multi-scenario service (drives `GET /v1/scenarios`,
+/// `POST /v1/scenarios/{name}/reload` and the per-scenario `/metrics`
+/// blocks).  Implemented by [`super::Merger`] over its registry; services
+/// without a registry simply don't offer it.
+pub trait ScenarioAdmin: Send + Sync {
+    /// Registered scenarios, registration order.
+    fn list_scenarios(&self) -> Vec<ScenarioInfo>;
+
+    /// Name of the scenario serving unrouted requests.
+    fn default_scenario(&self) -> String;
+
+    /// Hot-reload one scenario (rebuild from its spec, atomic swap).
+    fn reload_scenario(&self, name: &str) -> Result<ScenarioInfo, ServeError>;
+
+    /// Per-scenario metrics snapshots for `/metrics`.
+    fn scenario_metrics(&self, wall: Duration) -> Vec<(String, Value)>;
+
+    /// Requests that failed routing (unknown scenario) — attributed here
+    /// instead of to any scenario's error metric.
+    fn routing_errors(&self) -> u64 {
         0
     }
 }
@@ -355,11 +443,37 @@ mod tests {
         assert!(req.candidates.is_none());
         assert!(req.deadline.is_none());
         assert!(!req.trace);
+        assert!(req.scenario.is_none(), "unrouted -> default scenario");
+    }
+
+    #[test]
+    fn scenario_routing_knob() {
+        let req = ScoreRequest::user(3).with_scenario("video");
+        assert_eq!(req.scenario.as_deref(), Some("video"));
+
+        let v = Value::parse(r#"{"user": 1, "scenario": "video"}"#).unwrap();
+        let req = ScoreRequest::from_json(&v).unwrap();
+        assert_eq!(req.scenario.as_deref(), Some("video"));
+
+        for bad in [
+            r#"{"user": 1, "scenario": 7}"#,
+            r#"{"user": 1, "scenario": ""}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(matches!(
+                ScoreRequest::from_json(&v),
+                Err(ServeError::BadRequest(_))
+            ));
+        }
     }
 
     #[test]
     fn http_status_mapping() {
         assert_eq!(ServeError::UnknownUser(1).http_status(), 404);
+        assert_eq!(
+            ServeError::UnknownScenario("x".into()).http_status(),
+            404
+        );
         assert_eq!(
             ServeError::DeadlineExceeded {
                 budget_ms: 1.0,
@@ -423,6 +537,7 @@ mod tests {
         let resp = ScoreResponse {
             request_id: 7,
             user: 3,
+            scenario: "main".into(),
             variant: "aif".into(),
             items: vec![
                 ScoredItem {
@@ -452,6 +567,7 @@ mod tests {
         };
         let v = Value::parse(&resp.to_json().to_string()).unwrap();
         assert_eq!(v.req("user").as_usize(), Some(3));
+        assert_eq!(v.req("scenario").as_str(), Some("main"));
         assert_eq!(v.req("variant").as_str(), Some("aif"));
         assert_eq!(v.req("items").as_arr().unwrap().len(), 2);
         assert_eq!(

@@ -12,8 +12,8 @@
 
 use std::sync::Arc;
 
-use aif::config::{ServingConfig, SimMode};
-use aif::coordinator::{Merger, ScoreRequest};
+use aif::config::{ScenarioConfig, ServingConfig, SimMode};
+use aif::coordinator::{Merger, ScenarioAdmin, ScoreRequest};
 use aif::nearline::UpdateEvent;
 use aif::util::cli::Args;
 use aif::workload::{experiments, runner};
@@ -60,6 +60,8 @@ fn usage() {
     eprintln!(
         "usage: aif <quickstart|serve|replay|abtest|nearline|table1|table3|\
          table4|fig6> [--artifacts DIR] [--variant NAME] [--requests N]\n\
+         scenarios: [--scenarios NAME=VARIANT[:SIM_MODE],...] \
+         [--scenario DEFAULT_NAME]\n\
          coalescing: [--coalesce true] [--coalesce-window-us US] \
          [--max-coalesced-batch ROWS] [--bypass-margin-ms MS]"
     );
@@ -83,7 +85,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         .usize_or("max-coalesced-batch", coalesce.max_coalesced_batch);
     coalesce.bypass_margin_ms =
         args.f64_or("bypass-margin-ms", coalesce.bypass_margin_ms);
-    Ok(ServingConfig {
+    let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
         n_rtp_workers: args.usize_or("rtp-workers", cfg.n_rtp_workers),
@@ -92,13 +94,63 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         top_k: args.usize_or("top-k", cfg.top_k),
         coalesce,
         ..cfg
-    })
+    };
+    // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`
+    // (each inherits the flat fields, overriding variant and optionally
+    // sim_mode); `--scenario NAME` picks the default route.
+    if let Some(spec) = args.get("scenarios") {
+        cfg.scenarios = parse_scenarios_flag(spec, &cfg)?;
+    }
+    if let Some(name) = args.get("scenario") {
+        cfg.default_scenario = Some(name.to_string());
+    }
+    Ok(cfg)
+}
+
+fn parse_scenarios_flag(
+    spec: &str,
+    base: &ServingConfig,
+) -> anyhow::Result<Vec<ScenarioConfig>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').filter(|s| !s.is_empty()) {
+        let (name, rest) = entry.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --scenarios entry {entry:?} (want NAME=VARIANT)"
+            )
+        })?;
+        let (variant, sim) = match rest.split_once(':') {
+            Some((v, s)) => (v, Some(s)),
+            None => (rest, None),
+        };
+        anyhow::ensure!(
+            !name.is_empty() && !variant.is_empty(),
+            "bad --scenarios entry {entry:?}: name and variant must be \
+             non-empty"
+        );
+        let mut s = ScenarioConfig::from_serving(name, base);
+        s.variant = variant.to_string();
+        if let Some(mode) = sim {
+            s.sim_mode = aif::config::parse_sim_mode(mode).map_err(|e| {
+                anyhow::anyhow!("--scenarios entry {entry:?}: {e}")
+            })?;
+        }
+        out.push(s);
+    }
+    anyhow::ensure!(!out.is_empty(), "--scenarios named no scenarios");
+    Ok(out)
 }
 
 fn build_merger_from(cfg: ServingConfig) -> anyhow::Result<Arc<Merger>> {
+    let scenarios: Vec<String> = cfg
+        .effective_scenarios()
+        .iter()
+        .map(|s| format!("{}={}", s.name, s.variant))
+        .collect();
     eprintln!(
-        "bringing up variant={} (rtp={}, candidates={}, coalesce={}) ...",
-        cfg.variant, cfg.n_rtp_workers, cfg.n_candidates,
+        "bringing up scenarios [{}] default={} (rtp={}, coalesce={}) ...",
+        scenarios.join(", "),
+        cfg.default_scenario_name(),
+        cfg.n_rtp_workers,
         cfg.coalesce.enabled
     );
     let merger = Arc::new(Merger::build(cfg)?);
@@ -124,8 +176,8 @@ fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
             rank + 1,
             s.item,
             s.score,
-            merger.world.click_prob(user, s.item),
-            merger.world.bid(s.item)
+            merger.world().click_prob(user, s.item),
+            merger.world().bid(s.item)
         );
     }
     let t = result.timings;
@@ -147,11 +199,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n_http_workers = cfg.n_http_workers;
     let merger = build_merger_from(cfg)?;
     let addr = args.str_or("addr", "127.0.0.1:8787");
-    let server =
-        aif::server::HttpServer::start(merger, &addr, n_http_workers)?;
+    let admin: Arc<dyn ScenarioAdmin> = Arc::clone(&merger);
+    let server = aif::server::HttpServer::start_with_admin(
+        merger,
+        Some(admin),
+        &addr,
+        n_http_workers,
+    )?;
     println!(
-        "serving on http://{}  (try /v1/score?user=42&top_k=10, /metrics, \
-         /healthz)",
+        "serving on http://{}  (try /v1/score?user=42&top_k=10, \
+         /v1/scenarios, /metrics, /healthz)",
         server.addr
     );
     println!("Ctrl-C to stop.");

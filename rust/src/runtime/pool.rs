@@ -5,9 +5,16 @@
 //! dispatched over channels.  That is not a workaround so much as the
 //! production topology: the paper's Merger talks to an RTP *cluster*, and
 //! per-worker executable replicas are exactly how such fleets are deployed.
+//!
+//! Beyond execution, the fleet supports **hot artifact loading**
+//! ([`RtpPool::ensure_artifacts`]): the multi-scenario registry registers
+//! new scenarios at runtime, and each worker compiles the missing
+//! executables on demand — a failed compile fails the registration, never
+//! the fleet.
 
+use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -23,44 +30,115 @@ pub struct RtpRequest {
     pub reply: Sender<Result<Vec<Tensor>>>,
 }
 
+/// Fleet message: execute an artifact, or compile one into this worker.
+enum RtpMsg {
+    Exec(RtpRequest),
+    Load {
+        artifact: String,
+        reply: Sender<Result<()>>,
+    },
+}
+
 /// Fleet of PJRT workers with replicated executables.
 pub struct RtpPool {
-    workers: WorkerSet<RtpRequest>,
+    workers: WorkerSet<RtpMsg>,
     n_workers: usize,
+    /// Artifacts every worker has compiled (startup set + hot loads).
+    /// The lock also serializes concurrent `ensure_artifacts` calls.
+    loaded: Mutex<HashSet<String>>,
 }
 
 impl RtpPool {
     /// Spin up `n_workers`, each compiling every artifact in `artifacts`.
     /// Compilation failures surface as panics during startup (fail fast —
-    /// a worker that cannot serve must not join the fleet).
+    /// a worker that cannot serve must not join the fleet).  Artifacts
+    /// needed later hot-load through [`RtpPool::ensure_artifacts`], where
+    /// failures are recoverable errors instead.
     pub fn new(
         manifest: Arc<Manifest>,
         artifacts: Vec<String>,
         n_workers: usize,
     ) -> RtpPool {
+        let loaded = Mutex::new(artifacts.iter().cloned().collect());
+        let startup = artifacts;
+        let manifest2 = Arc::clone(&manifest);
         let workers = WorkerSet::new(
             n_workers,
             move |i| {
                 let mut engine = Engine::new()
                     .unwrap_or_else(|e| panic!("worker {i}: {e:#}"));
-                for name in &artifacts {
+                for name in &startup {
                     engine
-                        .load(&manifest, name)
+                        .load(&manifest2, name)
                         .unwrap_or_else(|e| panic!("worker {i}: {e:#}"));
                 }
                 engine
             },
-            |engine: &mut Engine, req: RtpRequest| {
-                let result = engine.execute(&req.artifact, &req.inputs);
-                // Receiver may have given up (timeout) — that's fine.
-                let _ = req.reply.send(result);
+            move |engine: &mut Engine, msg: RtpMsg| match msg {
+                RtpMsg::Exec(req) => {
+                    let result = engine.execute(&req.artifact, &req.inputs);
+                    // Receiver may have given up (timeout) — that's fine.
+                    let _ = req.reply.send(result);
+                }
+                RtpMsg::Load { artifact, reply } => {
+                    let _ = reply.send(engine.load(&manifest, &artifact));
+                }
             },
         );
-        RtpPool { workers, n_workers }
+        RtpPool {
+            workers,
+            n_workers,
+            loaded,
+        }
     }
 
     pub fn n_workers(&self) -> usize {
         self.n_workers
+    }
+
+    /// Compile any of `names` not yet resident into EVERY worker (hot
+    /// scenario registration).  Blocks until all workers reply; a compile
+    /// failure on any worker fails the call (the fleet keeps serving its
+    /// previously loaded set — `Engine::load` is idempotent, so a retry
+    /// after fixing the artifact is safe).
+    pub fn ensure_artifacts(&self, names: &[String]) -> Result<()> {
+        let mut loaded = self.loaded.lock().unwrap();
+        let missing: Vec<String> = names
+            .iter()
+            .filter(|n| !loaded.contains(n.as_str()))
+            .cloned()
+            .collect();
+        if missing.is_empty() {
+            return Ok(());
+        }
+        let mut replies = Vec::with_capacity(missing.len() * self.n_workers);
+        for w in 0..self.n_workers {
+            for name in &missing {
+                let (tx, rx) = channel();
+                self.workers.submit_to(
+                    w,
+                    RtpMsg::Load {
+                        artifact: name.clone(),
+                        reply: tx,
+                    },
+                );
+                replies.push(rx);
+            }
+        }
+        for rx in replies {
+            rx.recv().map_err(|_| {
+                anyhow::anyhow!("RTP worker died during artifact load")
+            })??;
+        }
+        for name in missing {
+            loaded.insert(name);
+        }
+        Ok(())
+    }
+
+    /// Whether every worker has `name` compiled.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.loaded.lock().unwrap().contains(name)
     }
 
     /// Fire a call and return the reply channel (the async half of the
@@ -71,11 +149,11 @@ impl RtpPool {
         inputs: Vec<Tensor>,
     ) -> Receiver<Result<Vec<Tensor>>> {
         let (tx, rx) = channel();
-        self.workers.submit(RtpRequest {
+        self.workers.submit(RtpMsg::Exec(RtpRequest {
             artifact: artifact.to_string(),
             inputs,
             reply: tx,
-        });
+        }));
         rx
     }
 
@@ -89,11 +167,11 @@ impl RtpPool {
         let (tx, rx) = channel();
         self.workers.submit_to(
             worker,
-            RtpRequest {
+            RtpMsg::Exec(RtpRequest {
                 artifact: artifact.to_string(),
                 inputs,
                 reply: tx,
-            },
+            }),
         );
         rx
     }

@@ -7,8 +7,17 @@
 //!   percentiles) when the pipeline runs the cross-request coalescer —
 //!   zeros otherwise.
 //! * `GET  /v1/score?user=<id>[&top_k=K][&trace=1][&deadline_ms=D]`
+//!   `[&scenario=NAME]`
 //! * `POST /v1/score` — JSON `ScoreRequest` body; `{"users": [..]}`
 //!   batches share the optional knobs and answer `{"results": [..]}`.
+//!
+//! Multi-scenario services ([`ScenarioAdmin`]) additionally expose:
+//!
+//! * `GET  /v1/scenarios` — registered scenarios (name, variant, default
+//!   flag, reload generation, served requests).
+//! * `POST /v1/scenarios/{name}/reload` — hot-reload one scenario (RCU
+//!   swap; in-flight requests finish on the old engine).
+//! * per-scenario blocks under `"scenarios"` in `/metrics`.
 //!
 //! [`ServeError`] variants map to statuses via `ServeError::http_status`
 //! (404 unknown user, 504 deadline, 400 bad request, 429 overload, 500
@@ -28,7 +37,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{PreRanker, ScoreRequest, ServeError};
+use crate::coordinator::{
+    PreRanker, ScenarioAdmin, ScoreRequest, ServeError,
+};
 use crate::util::json::{Object, Value};
 use crate::util::threadpool::ThreadPool;
 
@@ -54,6 +65,17 @@ impl HttpServer {
     /// handling runs on a pool of `n_workers` threads.
     pub fn start(
         ranker: Arc<dyn PreRanker>,
+        addr: &str,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
+        Self::start_with_admin(ranker, None, addr, n_workers)
+    }
+
+    /// Same, with the multi-scenario admin surface attached
+    /// (`/v1/scenarios`, reload endpoint, per-scenario `/metrics`).
+    pub fn start_with_admin(
+        ranker: Arc<dyn PreRanker>,
+        admin: Option<Arc<dyn ScenarioAdmin>>,
         addr: &str,
         n_workers: usize,
     ) -> Result<HttpServer> {
@@ -84,10 +106,12 @@ impl HttpServer {
                                 continue;
                             }
                             let ranker = Arc::clone(&ranker);
+                            let admin = admin.clone();
                             pool.spawn(move || {
                                 let _ = handle_conn(
                                     stream,
                                     ranker.as_ref(),
+                                    admin.as_deref(),
                                     started,
                                 );
                             });
@@ -148,6 +172,7 @@ fn shed(mut stream: TcpStream, e: &ServeError) {
 fn handle_conn(
     mut stream: TcpStream,
     ranker: &dyn PreRanker,
+    admin: Option<&dyn ScenarioAdmin>,
     started: Instant,
 ) -> Result<()> {
     stream.set_nonblocking(false)?;
@@ -189,13 +214,51 @@ fn handle_conn(
         ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
         ("GET", "/metrics") => {
             let snap = ranker.metrics().snapshot(started.elapsed());
-            respond(
-                &mut stream,
-                200,
-                "application/json",
-                &snap.to_string_pretty(),
-            )
+            let body = match admin {
+                // Multi-scenario: default-scenario snapshot at the top
+                // level (compatibility) + one block per scenario.
+                Some(a) => {
+                    let Value::Obj(mut o) = snap else {
+                        unreachable!("metrics snapshot is an object")
+                    };
+                    let mut per = Object::new();
+                    for (name, snap) in
+                        a.scenario_metrics(started.elapsed())
+                    {
+                        per.insert(name, snap);
+                    }
+                    o.insert("default_scenario", a.default_scenario());
+                    o.insert("routing_errors", a.routing_errors());
+                    o.insert("scenarios", Value::Obj(per));
+                    Value::Obj(o).to_string_pretty()
+                }
+                None => snap.to_string_pretty(),
+            };
+            respond(&mut stream, 200, "application/json", &body)
         }
+        ("GET", "/v1/scenarios") => match admin {
+            Some(a) => {
+                let mut o = Object::new();
+                o.insert("default", a.default_scenario());
+                let rows: Vec<Value> = a
+                    .list_scenarios()
+                    .iter()
+                    .map(|s| s.to_json())
+                    .collect();
+                o.insert("scenarios", Value::Arr(rows));
+                respond(
+                    &mut stream,
+                    200,
+                    "application/json",
+                    &Value::Obj(o).to_string_pretty(),
+                )
+            }
+            None => respond_err_msg(
+                &mut stream,
+                404,
+                "this server does not expose a scenario registry",
+            ),
+        },
         ("GET", "/v1/score") => match parse_query(query) {
             Ok(req) => score_one(&mut stream, ranker, req),
             Err(e) => respond_error(&mut stream, &e),
@@ -238,10 +301,37 @@ fn handle_conn(
                 ),
             }
         }
+        ("POST", p) if scenario_reload_target(p).is_some() => {
+            let name = scenario_reload_target(p).unwrap();
+            match admin {
+                Some(a) => match a.reload_scenario(name) {
+                    Ok(info) => {
+                        let mut o = Object::new();
+                        o.insert("reloaded", info.to_json());
+                        respond(
+                            &mut stream,
+                            200,
+                            "application/json",
+                            &Value::Obj(o).to_string_pretty(),
+                        )
+                    }
+                    Err(e) => respond_error(&mut stream, &e),
+                },
+                None => respond_err_msg(
+                    &mut stream,
+                    404,
+                    "this server does not expose a scenario registry",
+                ),
+            }
+        }
         (_, "/healthz") | (_, "/metrics") => {
             respond_405(&mut stream, "GET")
         }
         (_, "/v1/score") => respond_405(&mut stream, "GET, POST"),
+        (_, "/v1/scenarios") => respond_405(&mut stream, "GET"),
+        (_, p) if scenario_reload_target(p).is_some() => {
+            respond_405(&mut stream, "POST")
+        }
         ("GET", "/score") => respond_err_msg(
             &mut stream,
             404,
@@ -251,12 +341,23 @@ fn handle_conn(
     }
 }
 
+/// `/v1/scenarios/{name}/reload` -> `{name}` (None for any other path).
+fn scenario_reload_target(path: &str) -> Option<&str> {
+    let rest = path.strip_prefix("/v1/scenarios/")?;
+    let name = rest.strip_suffix("/reload")?;
+    if name.is_empty() || name.contains('/') {
+        return None;
+    }
+    Some(name)
+}
+
 /// `GET /v1/score` query string -> typed request.
 fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
     let mut user: Option<usize> = None;
     let mut top_k: Option<usize> = None;
     let mut deadline_ms: Option<f64> = None;
     let mut trace = false;
+    let mut scenario: Option<String> = None;
     for kv in query.split('&').filter(|s| !s.is_empty()) {
         let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
         match k {
@@ -298,6 +399,14 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
                     }
                 }
             }
+            "scenario" => {
+                if v.is_empty() {
+                    return Err(ServeError::BadRequest(
+                        "scenario must be non-empty".into(),
+                    ));
+                }
+                scenario = Some(v.to_string());
+            }
             other => {
                 return Err(ServeError::BadRequest(format!(
                     "unknown query param {other:?}"
@@ -314,6 +423,9 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
     }
     if let Some(ms) = deadline_ms {
         req = req.with_deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(s) = scenario {
+        req = req.with_scenario(s);
     }
     Ok(req)
 }
@@ -515,6 +627,10 @@ mod tests {
         let req = parse_query("user=1&deadline_ms=250").unwrap();
         assert_eq!(req.deadline, Some(Duration::from_millis(250)));
 
+        let req = parse_query("user=1&scenario=video").unwrap();
+        assert_eq!(req.scenario.as_deref(), Some("video"));
+        assert!(parse_query("user=1&scenario=").is_err());
+
         for bad in [
             "",
             "top_k=5",
@@ -526,6 +642,28 @@ mod tests {
             "user=1&frobnicate=2",
         ] {
             assert!(parse_query(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn reload_path_parsing() {
+        assert_eq!(
+            scenario_reload_target("/v1/scenarios/aif/reload"),
+            Some("aif")
+        );
+        assert_eq!(
+            scenario_reload_target("/v1/scenarios/a-b.c/reload"),
+            Some("a-b.c")
+        );
+        for bad in [
+            "/v1/scenarios//reload",
+            "/v1/scenarios/reload",
+            "/v1/scenarios/a/b/reload",
+            "/v1/scenarios/a",
+            "/v1/scenarios",
+            "/v2/scenarios/a/reload",
+        ] {
+            assert_eq!(scenario_reload_target(bad), None, "{bad}");
         }
     }
 

@@ -1,0 +1,452 @@
+//! Synthetic artifact-set generator for artifact-free integration tests.
+//!
+//! The real `artifacts/` directory comes from `make artifacts` (python
+//! JAX/AOT export) and is not checked in, so integration tests that need a
+//! full serving stack historically skipped in CI.  This module writes a
+//! MINIATURE but structurally complete artifact set — manifest, world
+//! tables, and HLO stubs — that the vendored deterministic `xla` stand-in
+//! (rust/xla_stub) serves end to end: the stub reads only the ENTRY
+//! return signature from each HLO file and evaluates outputs as a
+//! deterministic function of the inputs, so the whole pipeline (nearline
+//! N2O build, two-phase request lifecycle, registry hot reload,
+//! score-equivalence assertions) exercises for real.
+//!
+//! The HLO files written here are signature stubs, NOT compilable HLO —
+//! under the real `xla_extension` bindings these fixtures are meaningless
+//! (those environments have `make artifacts`; the golden-fixture tests
+//! already cover them).  Shapes are chosen so that no request-level
+//! operand's leading axis collides with a row count anywhere (the stub
+//! classifies row-aligned operands by leading-axis match).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::lsh::Hasher;
+use crate::runtime::Table;
+use crate::util::json::{Object, Value};
+use crate::util::rng::Pcg64;
+
+// Fixture dimensions (small, but with every axis distinct enough for the
+// stub's row/slot classification to be unambiguous).
+pub const N_USERS: usize = 24;
+pub const N_ITEMS: usize = 128;
+pub const BATCH: usize = 16;
+pub const L_SHORT: usize = 4;
+pub const L_LONG: usize = 12;
+pub const D: usize = 8; // item/user vector width
+pub const D_RAW: usize = 8; // profile / item_raw / mm / seq widths
+pub const N_BRIDGE: usize = 4;
+pub const D_LSH_BITS: usize = 16;
+pub const N_TIERS: usize = 4;
+pub const N_CATEGORIES: usize = 4;
+pub const L_SIM_SUB: usize = 4;
+pub const D_LATENT: usize = 4;
+/// `head_aif_mu`: merged executions of 2x the mini-batch over 4 slots.
+pub const MU_ROWS: usize = 2 * BATCH;
+pub const MU_SLOTS: usize = 4;
+
+/// Write the complete fixture artifact set into `dir` (created if
+/// needed).  Deterministic: same bytes every call.
+pub fn write(dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir.join("tables"))
+        .with_context(|| format!("creating fixture dir {dir:?}"))?;
+
+    // ---- world tables -----------------------------------------------------
+    let mut rng = Pcg64::new(0xF1C5_0A1F);
+    let f32s = |rng: &mut Pcg64, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    };
+    let ids = |rng: &mut Pcg64, n: usize, below: usize| -> Vec<u32> {
+        (0..n).map(|_| rng.below(below as u64) as u32).collect()
+    };
+
+    let users_profile = f32s(&mut rng, N_USERS * D_RAW);
+    let users_short_seq = ids(&mut rng, N_USERS * L_SHORT, N_ITEMS);
+    let users_long_seq = ids(&mut rng, N_USERS * L_LONG, N_ITEMS);
+    let users_mean_mm = f32s(&mut rng, N_USERS * D_RAW);
+    let users_cat_share: Vec<f32> = (0..N_USERS * N_CATEGORIES)
+        .map(|_| rng.f32())
+        .collect();
+    let users_z = f32s(&mut rng, N_USERS * D_LATENT);
+    let items_raw = f32s(&mut rng, N_ITEMS * D_RAW);
+    let items_mm = f32s(&mut rng, N_ITEMS * D_RAW);
+    let items_seq_emb = f32s(&mut rng, N_ITEMS * D_RAW);
+    let items_category = ids(&mut rng, N_ITEMS, N_CATEGORIES);
+    let items_bid: Vec<f32> =
+        (0..N_ITEMS).map(|_| 0.1 + rng.f32()).collect();
+    let items_z = f32s(&mut rng, N_ITEMS * D_LATENT);
+    let w_hash = f32s(&mut rng, D_LSH_BITS * D_RAW);
+
+    // Packed item signatures must agree with what the serving engine
+    // derives from w_hash x items_mm (the static signature table).
+    let hasher = Hasher::from_table(&Table::F32 {
+        shape: vec![D_LSH_BITS, D_RAW],
+        data: w_hash.clone(),
+    });
+    let mut items_sign_packed = Vec::with_capacity(N_ITEMS * 2);
+    for i in 0..N_ITEMS {
+        items_sign_packed
+            .extend_from_slice(&hasher.sign(&items_mm[i * D_RAW..(i + 1) * D_RAW]));
+    }
+
+    let mut tables = Object::new();
+    put_f32(dir, "users_profile", &[N_USERS, D_RAW], &users_profile, &mut tables)?;
+    put_f32(dir, "users_mean_mm", &[N_USERS, D_RAW], &users_mean_mm, &mut tables)?;
+    put_f32(
+        dir,
+        "users_cat_share",
+        &[N_USERS, N_CATEGORIES],
+        &users_cat_share,
+        &mut tables,
+    )?;
+    put_f32(dir, "users_z", &[N_USERS, D_LATENT], &users_z, &mut tables)?;
+    put_f32(dir, "items_raw", &[N_ITEMS, D_RAW], &items_raw, &mut tables)?;
+    put_f32(dir, "items_mm", &[N_ITEMS, D_RAW], &items_mm, &mut tables)?;
+    put_f32(
+        dir,
+        "items_seq_emb",
+        &[N_ITEMS, D_RAW],
+        &items_seq_emb,
+        &mut tables,
+    )?;
+    put_f32(dir, "items_bid", &[N_ITEMS], &items_bid, &mut tables)?;
+    put_f32(dir, "items_z", &[N_ITEMS, D_LATENT], &items_z, &mut tables)?;
+    put_f32(dir, "w_hash", &[D_LSH_BITS, D_RAW], &w_hash, &mut tables)?;
+
+    write_u32(
+        &dir.join("tables/users_short_seq.bin"),
+        &users_short_seq,
+    )?;
+    tables.insert(
+        "users_short_seq",
+        table_entry("users_short_seq", &[N_USERS, L_SHORT], "u32"),
+    );
+    write_u32(&dir.join("tables/users_long_seq.bin"), &users_long_seq)?;
+    tables.insert(
+        "users_long_seq",
+        table_entry("users_long_seq", &[N_USERS, L_LONG], "u32"),
+    );
+    write_u32(&dir.join("tables/items_category.bin"), &items_category)?;
+    tables.insert(
+        "items_category",
+        table_entry("items_category", &[N_ITEMS], "u32"),
+    );
+    std::fs::write(
+        dir.join("tables/items_sign_packed.bin"),
+        &items_sign_packed,
+    )?;
+    tables.insert(
+        "items_sign_packed",
+        table_entry(
+            "items_sign_packed",
+            &[N_ITEMS, D_LSH_BITS / 8],
+            "u8",
+        ),
+    );
+
+    // ---- artifacts (HLO signature stubs) ----------------------------------
+    let mut artifacts = Object::new();
+
+    // user_tower: mirrors assembly::user_tower_inputs + the plane operand.
+    put_artifact(
+        dir,
+        "user_tower",
+        &[
+            ("profile", vec![1, D_RAW]),
+            ("seq_short", vec![L_SHORT, D_RAW]),
+            ("seq_long", vec![L_LONG, D_RAW]),
+            ("seq_plane", vec![L_LONG, D_LSH_BITS]),
+        ],
+        &[
+            ("u_vec", vec![1, D]),
+            ("bea_v", vec![N_BRIDGE, D]),
+            ("seq_emb", vec![L_LONG, D]),
+            ("din_base", vec![1, D]),
+            ("din_g", vec![L_LONG, D]),
+        ],
+        &mut artifacts,
+    )?;
+    // item_tower: nearline N2O rows (item_vec + bea_w per item).
+    put_artifact(
+        dir,
+        "item_tower",
+        &[("item_raw", vec![BATCH, D_RAW])],
+        &[
+            ("item_vec", vec![BATCH, D]),
+            ("bea_w", vec![BATCH, N_BRIDGE]),
+        ],
+        &mut artifacts,
+    )?;
+    // head_base: the sequential baseline head.
+    put_artifact(
+        dir,
+        "head_base",
+        &[
+            ("profile", vec![1, D_RAW]),
+            ("seq_short", vec![L_SHORT, D_RAW]),
+            ("item_raw", vec![BATCH, D_RAW]),
+        ],
+        &[("scores", vec![BATCH])],
+        &mut artifacts,
+    )?;
+    // head_aif: the full pipeline head (async user, nearline items, BEA
+    // bridge, hoisted LSH long-term, SIM cross).
+    put_artifact(
+        dir,
+        "head_aif",
+        &[
+            ("u_vec", vec![1, D]),
+            ("item_vec", vec![BATCH, D]),
+            ("bea_v", vec![N_BRIDGE, D]),
+            ("bea_w", vec![BATCH, N_BRIDGE]),
+            ("din_base", vec![1, D]),
+            ("din_g", vec![L_LONG, D]),
+            ("item_sign", vec![BATCH, D_LSH_BITS]),
+            ("tiers_in", vec![BATCH, N_TIERS]),
+            ("sim_cross", vec![BATCH, D_RAW]),
+        ],
+        &[("scores", vec![BATCH])],
+        &mut artifacts,
+    )?;
+    // head_aif_mu: the coalesced multi-user flavor (slot-stacked
+    // request-level operands, row-aligned operands at MU_ROWS, row_user
+    // gather index last) — expected_input_names_mu order.
+    put_artifact(
+        dir,
+        "head_aif_mu",
+        &[
+            ("u_vec", vec![MU_SLOTS, D]),
+            ("bea_v", vec![MU_SLOTS, N_BRIDGE, D]),
+            ("din_base", vec![MU_SLOTS, D]),
+            ("din_g", vec![MU_SLOTS, L_LONG, D]),
+            ("item_vec", vec![MU_ROWS, D]),
+            ("bea_w", vec![MU_ROWS, N_BRIDGE]),
+            ("item_sign", vec![MU_ROWS, D_LSH_BITS]),
+            ("tiers_in", vec![MU_ROWS, N_TIERS]),
+            ("sim_cross", vec![MU_ROWS, D_RAW]),
+            ("row_user", vec![MU_ROWS]),
+        ],
+        &[("scores", vec![MU_ROWS])],
+        &mut artifacts,
+    )?;
+
+    // ---- variants ---------------------------------------------------------
+    let mut variants = Object::new();
+    variants.insert(
+        "base",
+        variant_entry("head_base", "cheap", "inline", "none", "none", "none", false),
+    );
+    variants.insert(
+        "aif",
+        variant_entry("head_aif", "async", "nearline", "bridge", "lsh", "lsh", true),
+    );
+
+    // ---- dims + oracle + manifest -----------------------------------------
+    let mut dims = Object::new();
+    for (k, v) in [
+        ("D", D),
+        ("D_RAW", D_RAW),
+        ("D_MM", D_RAW),
+        ("D_SEQ_RAW", D_RAW),
+        ("D_PROFILE_RAW", D_RAW),
+        ("D_ITEM_RAW", D_RAW),
+        ("N_BRIDGE", N_BRIDGE),
+        ("D_LSH_BITS", D_LSH_BITS),
+        ("N_TIERS", N_TIERS),
+        ("N_CATEGORIES", N_CATEGORIES),
+        ("L_SIM_SUB", L_SIM_SUB),
+        ("L_SHORT", L_SHORT),
+        ("D_LATENT", D_LATENT),
+        ("D_BEA", D),
+        ("M_GROUPS", N_CATEGORIES),
+        ("N_BRIDGE_MU", MU_SLOTS),
+    ] {
+        dims.insert(k, v);
+    }
+
+    let mut oracle = Object::new();
+    oracle.insert(
+        "click_w",
+        Value::Arr(vec![
+            Value::Num(0.5),
+            Value::Num(0.3),
+            Value::Num(0.2),
+        ]),
+    );
+    oracle.insert("click_b", -0.1);
+    oracle.insert("d_latent", D_LATENT);
+
+    let mut manifest = Object::new();
+    manifest.insert("batch", BATCH);
+    manifest.insert("l_long", L_LONG);
+    manifest.insert("dims", Value::Obj(dims));
+    manifest.insert("artifacts", Value::Obj(artifacts));
+    manifest.insert("variants", Value::Obj(variants));
+    manifest.insert("tables", Value::Obj(tables));
+    manifest.insert("oracle", Value::Obj(oracle));
+    manifest.insert("goldens", Value::Obj(Object::new()));
+    std::fs::write(
+        dir.join("manifest.json"),
+        Value::Obj(manifest).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+/// Write one f32 table + its manifest entry.
+fn put_f32(
+    dir: &Path,
+    name: &str,
+    shape: &[usize],
+    data: &[f32],
+    tables: &mut Object,
+) -> Result<()> {
+    write_f32(&dir.join("tables").join(format!("{name}.bin")), data)?;
+    tables.insert(name, table_entry(name, shape, "f32"));
+    Ok(())
+}
+
+/// Write one HLO signature stub + its manifest artifact entry.
+fn put_artifact(
+    dir: &Path,
+    name: &str,
+    inputs: &[(&str, Vec<usize>)],
+    outputs: &[(&str, Vec<usize>)],
+    artifacts: &mut Object,
+) -> Result<()> {
+    let file = format!("{name}.hlo.txt");
+    write_hlo_stub(&dir.join(&file), name, outputs)?;
+    let mut o = Object::new();
+    o.insert("file", file.as_str());
+    o.insert("inputs", sig_list(inputs));
+    o.insert("outputs", sig_list(outputs));
+    artifacts.insert(name, Value::Obj(o));
+    Ok(())
+}
+
+fn table_entry(name: &str, shape: &[usize], dtype: &str) -> Value {
+    let mut o = Object::new();
+    o.insert("file", format!("tables/{name}.bin").as_str());
+    o.insert("shape", shape_value(shape));
+    o.insert("dtype", dtype);
+    Value::Obj(o)
+}
+
+fn variant_entry(
+    artifact: &str,
+    user: &str,
+    item: &str,
+    bea: &str,
+    din_sim: &str,
+    tier_sim: &str,
+    sim_cross: bool,
+) -> Value {
+    let mut o = Object::new();
+    o.insert("artifact", artifact);
+    o.insert("user", user);
+    o.insert("item", item);
+    o.insert("bea", bea);
+    o.insert("din_sim", din_sim);
+    o.insert("tier_sim", tier_sim);
+    o.insert("sim_cross", sim_cross);
+    o.insert("sim_budget", 1.0);
+    Value::Obj(o)
+}
+
+fn shape_value(shape: &[usize]) -> Value {
+    Value::Arr(shape.iter().map(|&d| Value::Num(d as f64)).collect())
+}
+
+fn sig_list(sigs: &[(&str, Vec<usize>)]) -> Value {
+    Value::Arr(
+        sigs.iter()
+            .map(|(name, shape)| {
+                let mut o = Object::new();
+                o.insert("name", *name);
+                o.insert("shape", shape_value(shape));
+                Value::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// One HLO signature stub: only the ENTRY return signature matters to the
+/// deterministic stand-in runtime.
+fn write_hlo_stub(
+    path: &Path,
+    name: &str,
+    outputs: &[(&str, Vec<usize>)],
+) -> Result<()> {
+    let shapes: Vec<String> = outputs
+        .iter()
+        .map(|(_, shape)| {
+            let dims: Vec<String> =
+                shape.iter().map(|d| d.to_string()).collect();
+            format!("f32[{}]", dims.join(","))
+        })
+        .collect();
+    let text = format!(
+        "HloModule fixture_{name}\n\
+         ENTRY %main () -> ({}) {{\n\
+         }}\n",
+        shapes.join(", ")
+    );
+    std::fs::write(path, text)
+        .with_context(|| format!("writing HLO stub {path:?}"))?;
+    Ok(())
+}
+
+fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing table {path:?}"))?;
+    Ok(())
+}
+
+fn write_u32(path: &Path, data: &[u32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing table {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn fixture_manifest_loads_and_is_consistent() {
+        let dir = std::env::temp_dir().join(format!(
+            "aif-fixture-selftest-{}",
+            std::process::id()
+        ));
+        write(&dir).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.batch, BATCH);
+        assert_eq!(manifest.l_long, L_LONG);
+        assert!(manifest.variants.contains_key("aif"));
+        assert!(manifest.variants.contains_key("base"));
+        assert!(manifest.artifacts.contains_key("head_aif_mu"));
+        let world = crate::features::World::load(&manifest).unwrap();
+        assert_eq!(world.n_users, N_USERS);
+        assert_eq!(world.n_items, N_ITEMS);
+        // Signature table agrees with the hasher over the same w_hash.
+        let hasher = Hasher::from_table(&world.w_hash);
+        for i in [0usize, 7, 127] {
+            assert_eq!(
+                world.items_sign_packed.u8_row(i),
+                hasher.sign(world.items_mm.f32_row(i)).as_slice(),
+                "item {i} signature mismatch"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -6,6 +6,7 @@ pub mod base64;
 pub mod bench;
 pub mod bits;
 pub mod cli;
+pub mod fixture;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -7,8 +7,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{ServingConfig, SimMode};
-use crate::coordinator::{Merger, PreRanker};
+use crate::config::{ScenarioConfig, ServingConfig, SimMode};
+use crate::coordinator::{Merger, PreRanker, ScoreRequest};
 use crate::features::World;
 use crate::lsh::Hasher;
 use crate::nearline::{N2oTable, NearlineWorker};
@@ -63,21 +63,41 @@ pub struct Table4Row {
     pub extra_storage: bool,
 }
 
+/// One shared-core Merger whose registry holds every Table-4 row as a
+/// scenario (the sweep used to build 8 full Mergers — 8 fleets, 8 N2O
+/// tables, 8 cache clusters; now it's 8 thin engines over one substrate).
+fn build_table4_merger(artifacts_dir: &str) -> Result<Arc<Merger>> {
+    let rows = ServingConfig::table4_rows();
+    let mut core_cfg = cfg_with_dir(rows[0].1.clone(), artifacts_dir);
+    core_cfg.scenarios = rows
+        .iter()
+        .map(|(name, cfg)| ScenarioConfig::from_serving(name, cfg))
+        .collect();
+    core_cfg.default_scenario = Some(rows[0].0.to_string());
+    Ok(Arc::new(Merger::build(core_cfg)?))
+}
+
 pub fn run_table4(artifacts_dir: &str, scale: ExpScale) -> Result<String> {
+    log::info!("table4: bringing up the shared core + 8 scenarios");
+    let merger = build_table4_merger(artifacts_dir)?;
     let mut rows = Vec::new();
-    for (name, cfg) in ServingConfig::table4_rows() {
-        let cfg = cfg_with_dir(cfg, artifacts_dir);
-        log::info!("table4: bringing up {name}");
-        let ranker: Arc<dyn PreRanker> = Arc::new(Merger::build(cfg)?);
+    for engine in merger.registry().engines() {
+        // Benchmark isolation: the rows share one core, but each row must
+        // be measured from a cold SIM cache (the pre-refactor sweep built
+        // a fresh Merger per row, so "+ Pre-Caching" must not pre-warm
+        // "AIF"'s fetches).
+        merger.core().sim_cache.clear();
+        let name = engine.name().to_string();
+        let extra = engine.uses_shared_storage();
+        let ranker: Arc<dyn PreRanker> = engine;
         let load = runner::closed_loop(
-            name,
+            &name,
             &ranker,
             scale.requests,
             scale.clients,
             42,
         );
         let (mq, _) = runner::max_qps(&ranker, scale.qps_step_requests, 43);
-        let extra = ranker.extra_storage_bytes() > (1 << 20);
         println!(
             "{}  maxQPS {:8.2}  extra_storage {}",
             load.render(),
@@ -85,7 +105,7 @@ pub fn run_table4(artifacts_dir: &str, scale: ExpScale) -> Result<String> {
             if extra { "yes" } else { "no" }
         );
         rows.push(Table4Row {
-            name: name.to_string(),
+            name,
             load,
             max_qps: mq,
             extra_storage: extra,
@@ -107,7 +127,105 @@ pub fn run_table4(artifacts_dir: &str, scale: ExpScale) -> Result<String> {
         );
     }
     let mut out = t.render_deltas();
-    out.push_str("\n[S] = requires extra storage (N2O / pre-cache pool)\n");
+    out.push_str("\n[S] = uses shared extra storage (N2O / pre-cache pool)\n");
+    out.push_str(&format!(
+        "shared-core extra storage (counted ONCE across all {} scenarios): \
+         {:.2} MiB\n",
+        merger.registry().len(),
+        merger.core().shared_storage_bytes() as f64 / (1 << 20) as f64
+    ));
+    Ok(out)
+}
+
+/// Shared-core vs per-Merger comparison (bench satellite): bring up the
+/// same K variants both ways, report resident extra-storage bytes saved
+/// and assert the shared-core scenarios rank identically to dedicated
+/// single-variant Mergers on a fixed candidate set.
+pub fn run_shared_core_comparison(artifacts_dir: &str) -> Result<String> {
+    let variants: &[(&str, &str, SimMode)] = &[
+        ("Base", "base", SimMode::Off),
+        ("+ SIM", "t4_sim", SimMode::Precached),
+        ("AIF", "aif", SimMode::Precached),
+    ];
+
+    // Dedicated: one full Merger per variant (the pre-registry shape).
+    let mut dedicated: Vec<(&str, Arc<Merger>)> = Vec::new();
+    let mut dedicated_bytes = 0usize;
+    for &(name, variant, sim) in variants {
+        let cfg = ServingConfig {
+            variant: variant.into(),
+            sim_mode: sim,
+            artifacts_dir: artifacts_dir.into(),
+            ..Default::default()
+        };
+        let m = Arc::new(Merger::build(cfg)?);
+        dedicated_bytes += m.extra_storage_bytes();
+        dedicated.push((name, m));
+    }
+
+    // Shared: one core, K scenarios.
+    let template = ServingConfig {
+        artifacts_dir: artifacts_dir.into(),
+        ..Default::default()
+    };
+    let mut cfg = template.clone();
+    cfg.scenarios = variants
+        .iter()
+        .map(|&(name, variant, sim)| ScenarioConfig {
+            name: name.to_string(),
+            variant: variant.to_string(),
+            sim_mode: sim,
+            ..ScenarioConfig::from_serving(name, &template)
+        })
+        .collect();
+    cfg.default_scenario = Some("Base".to_string());
+    let shared = Arc::new(Merger::build(cfg)?);
+
+    // Identical top-K per variant on a fixed candidate override (the
+    // retrieval stage is stochastic; the scoring path must not be).
+    let candidates: Vec<u32> =
+        (0..512.min(shared.world().n_items) as u32).collect();
+    let mut checked = 0usize;
+    for (name, ded) in &dedicated {
+        for user in [1usize, 17, 42] {
+            let req = |id: u64| {
+                ScoreRequest::user(user)
+                    .with_request_id(id)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(64)
+            };
+            let a = ded.score(req(1))?;
+            let b = shared.score(req(2).with_scenario(*name))?;
+            anyhow::ensure!(
+                a.items == b.items,
+                "{name}: shared-core scores diverge from the dedicated \
+                 Merger for user {user}"
+            );
+            checked += 1;
+        }
+    }
+
+    let shared_bytes = shared.extra_storage_bytes();
+    let mut out = String::new();
+    out.push_str("\n== shared core vs per-variant Mergers ==\n");
+    out.push_str(&format!(
+        "{} dedicated Mergers: {:.2} MiB extra resident\n",
+        dedicated.len(),
+        dedicated_bytes as f64 / (1 << 20) as f64
+    ));
+    out.push_str(&format!(
+        "1 shared core x {} scenarios: {:.2} MiB extra resident\n",
+        dedicated.len(),
+        shared_bytes as f64 / (1 << 20) as f64
+    ));
+    out.push_str(&format!(
+        "saved: {:.2} MiB ({:.1}%)  |  top-K identical on {} \
+         (variant, user) pairs\n",
+        (dedicated_bytes.saturating_sub(shared_bytes)) as f64
+            / (1 << 20) as f64,
+        (1.0 - shared_bytes as f64 / dedicated_bytes.max(1) as f64) * 100.0,
+        checked
+    ));
     Ok(out)
 }
 
@@ -469,28 +587,40 @@ pub fn run_abtest(
     n_requests: u64,
     slate: usize,
 ) -> Result<String> {
-    // (display, variant, sim_mode, sim_budget, n_candidates)
-    let mut mergers: Vec<(&str, Arc<Merger>)> = Vec::new();
-    for &(display, variant, sim, budget, n_cands) in variants {
-        let cfg = ServingConfig {
-            variant: variant.into(),
+    // (display, variant, sim_mode, sim_budget, n_candidates): every arm is
+    // a registry scenario over ONE shared core — the A/B harness stops
+    // paying a full substrate copy per arm.
+    let core_cfg = ServingConfig {
+        artifacts_dir: artifacts_dir.into(),
+        // Small latencies: the A/B measures ranking quality, not RT.
+        retrieval_latency: crate::features::LatencyModel::fixed(200.0),
+        user_store_latency: crate::features::LatencyModel::fixed(30.0),
+        item_store_latency: crate::features::LatencyModel::fixed(10.0),
+        ..Default::default()
+    };
+    let mut cfg = core_cfg.clone();
+    cfg.scenarios = variants
+        .iter()
+        .map(|&(display, variant, sim, budget, n_cands)| ScenarioConfig {
+            name: display.to_string(),
+            variant: variant.to_string(),
             sim_mode: sim,
             sim_budget: budget,
             n_candidates: n_cands,
-            artifacts_dir: artifacts_dir.into(),
-            // Small latencies: the A/B measures ranking quality, not RT.
-            retrieval_latency: crate::features::LatencyModel::fixed(200.0),
-            user_store_latency: crate::features::LatencyModel::fixed(30.0),
-            item_store_latency: crate::features::LatencyModel::fixed(10.0),
-            ..Default::default()
-        };
-        log::info!("abtest: bringing up {display}");
-        mergers.push((display, Arc::new(Merger::build(cfg)?)));
-    }
-    let world = Arc::clone(&mergers[0].1.world);
-    let arms: Vec<(&str, Arc<dyn PreRanker>)> = mergers
+            ..ScenarioConfig::from_serving(display, &core_cfg)
+        })
+        .collect();
+    cfg.default_scenario = Some(variants[0].0.to_string());
+    log::info!("abtest: bringing up {} arms over one core", variants.len());
+    let merger = Arc::new(Merger::build(cfg)?);
+    let world = Arc::clone(merger.world());
+    let engines = merger.registry().engines();
+    let arms: Vec<(&str, Arc<dyn PreRanker>)> = variants
         .iter()
-        .map(|(n, m)| (*n, Arc::clone(m) as Arc<dyn PreRanker>))
+        .zip(&engines)
+        .map(|(&(display, ..), e)| {
+            (display, Arc::clone(e) as Arc<dyn PreRanker>)
+        })
         .collect();
     let reports =
         super::abtest::run(&world, &arms, n_requests, slate, 4242)?;

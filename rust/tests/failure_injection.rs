@@ -87,7 +87,7 @@ fn merger_survives_concurrent_nearline_updates() {
     }
     let merger =
         Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
-    let n2o = Arc::clone(&merger.n2o);
+    let n2o = Arc::clone(&merger.core().n2o);
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
     let updater = std::thread::spawn(move || {
@@ -102,7 +102,7 @@ fn merger_survives_concurrent_nearline_updates() {
         }
     });
     for id in 0..6u64 {
-        let user = (id as usize * 29) % merger.world.n_users;
+        let user = (id as usize * 29) % merger.world().n_users;
         let r = merger
             .score(ScoreRequest::user(user).with_request_id(id))
             .unwrap();

@@ -10,8 +10,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use aif::coordinator::{
-    PhaseTimings, PreRanker, ScoreRequest, ScoreResponse, ScoredItem,
-    ServeError,
+    PhaseTimings, PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest,
+    ScoreResponse, ScoredItem, ServeError,
 };
 use aif::metrics::ServingMetrics;
 use aif::server::HttpServer;
@@ -58,6 +58,10 @@ impl PreRanker for MockRanker {
         Ok(ScoreResponse {
             request_id: req.request_id.unwrap_or(1),
             user: req.user,
+            scenario: req
+                .scenario
+                .clone()
+                .unwrap_or_else(|| "mock".to_string()),
             variant: "mock".into(),
             items,
             timings,
@@ -83,6 +87,75 @@ fn start_server() -> HttpServer {
         metrics: ServingMetrics::new(),
     });
     HttpServer::start(ranker, "127.0.0.1:0", 2).expect("server starts")
+}
+
+/// Stub registry admin: two fixed scenarios, reload bumps a counter.
+struct MockAdmin {
+    reloads: std::sync::atomic::AtomicU64,
+    metrics: ServingMetrics,
+}
+
+impl ScenarioAdmin for MockAdmin {
+    fn list_scenarios(&self) -> Vec<ScenarioInfo> {
+        vec![
+            ScenarioInfo {
+                name: "main".into(),
+                variant: "aif".into(),
+                is_default: true,
+                generation: self
+                    .reloads
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                requests: 0,
+                coalescing: false,
+            },
+            ScenarioInfo {
+                name: "fallback".into(),
+                variant: "base".into(),
+                is_default: false,
+                generation: 0,
+                requests: 0,
+                coalescing: false,
+            },
+        ]
+    }
+
+    fn default_scenario(&self) -> String {
+        "main".into()
+    }
+
+    fn reload_scenario(
+        &self,
+        name: &str,
+    ) -> Result<ScenarioInfo, ServeError> {
+        if name != "main" && name != "fallback" {
+            return Err(ServeError::UnknownScenario(name.to_string()));
+        }
+        self.reloads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(self.list_scenarios().remove(0))
+    }
+
+    fn scenario_metrics(
+        &self,
+        wall: Duration,
+    ) -> Vec<(String, Value)> {
+        vec![
+            ("main".to_string(), self.metrics.snapshot(wall)),
+            ("fallback".to_string(), self.metrics.snapshot(wall)),
+        ]
+    }
+}
+
+fn start_admin_server() -> HttpServer {
+    let ranker: Arc<dyn PreRanker> = Arc::new(MockRanker {
+        metrics: ServingMetrics::new(),
+    });
+    let admin: Arc<dyn ScenarioAdmin> = Arc::new(MockAdmin {
+        reloads: std::sync::atomic::AtomicU64::new(0),
+        metrics: ServingMetrics::new(),
+    });
+    HttpServer::start_with_admin(ranker, Some(admin), "127.0.0.1:0", 2)
+        .expect("server starts")
 }
 
 /// Send a raw request; return (status, header block, body).
@@ -287,6 +360,79 @@ fn unversioned_score_is_gone_and_unknown_paths_404() {
     assert_eq!(status, 404);
     assert!(body.contains("/v1/score"), "points at the new surface");
     let (status, _, _) = get(&server.addr, "/nope");
+    assert_eq!(status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn scenarios_listing_reload_and_per_scenario_metrics() {
+    let server = start_admin_server();
+
+    // Listing.
+    let (status, _, body) = get(&server.addr, "/v1/scenarios");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).expect("listing is JSON");
+    assert_eq!(v.req("default").as_str(), Some("main"));
+    let rows = v.req("scenarios").as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].req("name").as_str(), Some("main"));
+    assert_eq!(rows[0].req("default").as_bool(), Some(true));
+    assert_eq!(rows[1].req("variant").as_str(), Some("base"));
+    assert!(rows[0].get("generation").is_some());
+    assert!(rows[0].get("coalescing").is_some());
+
+    // Reload endpoint bumps the generation; unknown scenario is 404.
+    let (status, _, body) =
+        post(&server.addr, "/v1/scenarios/main/reload", "");
+    assert_eq!(status, 200, "{body}");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(
+        v.req("reloaded").req("generation").as_usize(),
+        Some(1)
+    );
+    let (status, _, _) =
+        post(&server.addr, "/v1/scenarios/nope/reload", "");
+    assert_eq!(status, 404);
+
+    // Method guards.
+    let (status, head, _) = get(&server.addr, "/v1/scenarios/main/reload");
+    assert_eq!(status, 405);
+    assert!(head.to_ascii_lowercase().contains("allow: post"), "{head}");
+    let (status, head, _) = raw_request(
+        &server.addr,
+        "DELETE /v1/scenarios HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    assert!(head.to_ascii_lowercase().contains("allow: get"), "{head}");
+
+    // Per-scenario metrics blocks.
+    let (_, _, body) = get(&server.addr, "/metrics");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("default_scenario").as_str(), Some("main"));
+    let per = v.req("scenarios");
+    assert!(per.get("main").is_some());
+    assert!(per
+        .req("fallback")
+        .get("requests")
+        .is_some());
+
+    // Scenario routing rides the score endpoints.
+    let (status, _, body) =
+        get(&server.addr, "/v1/score?user=1&scenario=fallback");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("scenario").as_str(), Some("fallback"));
+    server.shutdown();
+}
+
+#[test]
+fn scenario_surface_absent_without_admin() {
+    let server = start_server();
+    let (status, _, body) = get(&server.addr, "/v1/scenarios");
+    assert_eq!(status, 404);
+    assert!(body.contains("scenario registry"), "{body}");
+    let (status, _, _) =
+        post(&server.addr, "/v1/scenarios/main/reload", "");
     assert_eq!(status, 404);
     server.shutdown();
 }

@@ -1,0 +1,392 @@
+//! Multi-scenario serving core integration tests (DESIGN.md §13), running
+//! against the synthetic fixture artifact set (`util::fixture`) over the
+//! deterministic PJRT stand-in — no `make artifacts` needed, so these run
+//! in CI:
+//!
+//! * one `ServingCore` serves >= 3 concurrently registered scenarios with
+//!   scores BITWISE-equal to dedicated single-variant Mergers;
+//! * every engine shares the single RtpPool / N2oTable substrate, and
+//!   scenarios on the same head artifact share ONE coalescer queue;
+//! * hot reload/add/remove under concurrent traffic: zero failed
+//!   requests, no lost replies, responses stay bitwise-identical across
+//!   the swap.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use aif::config::{ScenarioConfig, ServingConfig, SimMode};
+use aif::coordinator::{Merger, ScoreRequest, ServeError};
+use aif::features::LatencyModel;
+use aif::util::fixture;
+
+/// Fresh fixture dir per test (tests run in parallel).
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("aif-fixture-{}-{tag}", std::process::id()));
+    fixture::write(&dir).expect("fixture generation");
+    dir
+}
+
+/// Removes the fixture dir when the test ends (also on panic/unwind).
+struct Cleanup(PathBuf);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Fast core config: tiny modeled latencies, small candidate sets.
+fn core_cfg(dir: &PathBuf) -> ServingConfig {
+    ServingConfig {
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        n_candidates: 48,
+        top_k: 16,
+        retrieval_latency: LatencyModel::fixed(100.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+fn scenario(
+    name: &str,
+    variant: &str,
+    sim: SimMode,
+    base: &ServingConfig,
+) -> ScenarioConfig {
+    ScenarioConfig {
+        name: name.into(),
+        variant: variant.into(),
+        sim_mode: sim,
+        ..ScenarioConfig::from_serving(name, base)
+    }
+}
+
+fn dedicated(
+    dir: &PathBuf,
+    variant: &str,
+    sim: SimMode,
+) -> Arc<Merger> {
+    let cfg = ServingConfig {
+        variant: variant.into(),
+        sim_mode: sim,
+        ..core_cfg(dir)
+    };
+    Arc::new(Merger::build(cfg).expect("dedicated merger"))
+}
+
+/// Fixed candidate override: the retrieval stage is stochastic, the
+/// scoring path must not be.
+fn cands() -> Vec<u32> {
+    (0..48u32).collect()
+}
+
+#[test]
+fn shared_core_matches_dedicated_mergers_bitwise() {
+    let dir = fixture_dir("equiv");
+    let _cleanup = Cleanup(dir.clone());
+    let base = core_cfg(&dir);
+    let mut cfg = core_cfg(&dir);
+    cfg.scenarios = vec![
+        scenario("base-arm", "base", SimMode::Off, &base),
+        scenario("aif-arm", "aif", SimMode::Precached, &base),
+        scenario("aif-sync", "aif", SimMode::Sync, &base),
+    ];
+    cfg.default_scenario = Some("base-arm".into());
+    let shared = Arc::new(Merger::build(cfg).expect("shared merger"));
+    assert_eq!(shared.registry().len(), 3);
+
+    // One substrate: every engine serves over the same core, i.e. the
+    // same RtpPool / N2oTable / cache instances.
+    let engines = shared.registry().engines();
+    assert_eq!(engines.len(), 3);
+    for e in &engines[1..] {
+        assert!(
+            Arc::ptr_eq(e.core(), engines[0].core()),
+            "engines must share one ServingCore"
+        );
+    }
+    // The nearline table was built once and is fully covered.
+    assert_eq!(shared.core().n2o.coverage(), 1.0);
+
+    // Bitwise score-equivalence with dedicated single-variant Mergers.
+    let refs: Vec<(&str, Arc<Merger>)> = vec![
+        ("base-arm", dedicated(&dir, "base", SimMode::Off)),
+        ("aif-arm", dedicated(&dir, "aif", SimMode::Precached)),
+        ("aif-sync", dedicated(&dir, "aif", SimMode::Sync)),
+    ];
+    for (name, ded) in &refs {
+        for (i, user) in [1usize, 5, 11].into_iter().enumerate() {
+            let req = |id: u64| {
+                ScoreRequest::user(user)
+                    .with_request_id(id)
+                    .with_candidates(cands())
+                    .with_top_k(16)
+            };
+            let a = ded.score(req(10 + i as u64)).expect("dedicated scores");
+            let b = shared
+                .score(req(20 + i as u64).with_scenario(*name))
+                .expect("shared-core scores");
+            assert_eq!(
+                a.items, b.items,
+                "{name}/user {user}: shared-core top-K diverged from the \
+                 dedicated Merger"
+            );
+            assert_eq!(b.scenario, *name);
+        }
+    }
+
+    // Responses carry the scenario that served them; default routing
+    // goes to the configured default.
+    let r = shared
+        .score(ScoreRequest::user(2).with_candidates(cands()))
+        .unwrap();
+    assert_eq!(r.scenario, "base-arm");
+    assert_eq!(r.variant, "base");
+}
+
+#[test]
+fn scenarios_on_one_head_share_a_single_coalescer_queue() {
+    let dir = fixture_dir("coalesce");
+    let _cleanup = Cleanup(dir.clone());
+    let base = core_cfg(&dir);
+    let mut a = scenario("aif-a", "aif", SimMode::Precached, &base);
+    a.coalesce.enabled = true;
+    let mut b = scenario("aif-b", "aif", SimMode::Off, &base);
+    b.coalesce.enabled = true;
+    let mut cfg = core_cfg(&dir);
+    cfg.scenarios = vec![a, b];
+    cfg.default_scenario = Some("aif-a".into());
+    let shared = Arc::new(Merger::build(cfg).expect("shared merger"));
+
+    let engines = shared.registry().engines();
+    assert!(engines.iter().all(|e| e.coalescing()));
+    let (a, b) = (
+        engines[0].coalescer_handle().expect("aif-a coalescer"),
+        engines[1].coalescer_handle().expect("aif-b coalescer"),
+    );
+    assert!(
+        Arc::ptr_eq(a, b),
+        "two scenarios on head_aif must share ONE coalescer queue"
+    );
+    assert_eq!(shared.core().live_coalescers(), 1);
+
+    // Cross-scenario coalesced dispatch stays score-invariant: identical
+    // to a dedicated non-coalescing Merger.
+    let solo = dedicated(&dir, "aif", SimMode::Off);
+    let req = |id: u64| {
+        ScoreRequest::user(7)
+            .with_request_id(id)
+            .with_candidates(cands())
+            .with_top_k(16)
+    };
+    let want = solo.score(req(1)).unwrap();
+    let got = shared.score(req(2).with_scenario("aif-b")).unwrap();
+    assert_eq!(want.items, got.items, "coalesced == per-request scores");
+}
+
+#[test]
+fn hot_reload_and_churn_under_concurrent_traffic() {
+    let dir = fixture_dir("reload");
+    let _cleanup = Cleanup(dir.clone());
+    let base = core_cfg(&dir);
+    let mut cfg = core_cfg(&dir);
+    cfg.scenarios = vec![
+        scenario("base-arm", "base", SimMode::Off, &base),
+        scenario("aif-arm", "aif", SimMode::Precached, &base),
+    ];
+    cfg.default_scenario = Some("base-arm".into());
+    let shared = Arc::new(Merger::build(cfg).expect("shared merger"));
+
+    // Reference responses BEFORE any reload: the swap must be
+    // score-preserving, bitwise.
+    let users = [1usize, 5, 11, 17];
+    let reference: Vec<Vec<_>> = ["base-arm", "aif-arm"]
+        .iter()
+        .map(|name| {
+            users
+                .iter()
+                .map(|&u| {
+                    shared
+                        .score(
+                            ScoreRequest::user(u)
+                                .with_candidates(cands())
+                                .with_top_k(16)
+                                .with_scenario(*name),
+                        )
+                        .expect("reference scores")
+                        .items
+                })
+                .collect()
+        })
+        .collect();
+
+    const N_THREADS: usize = 4;
+    const M_REQUESTS: usize = 40;
+    let stop_churn = Arc::new(AtomicBool::new(false));
+
+    // Churn thread: hot reload "aif-arm" + add/remove a third scenario in
+    // a loop while traffic flows.
+    let churner = {
+        let shared = Arc::clone(&shared);
+        let stop = Arc::clone(&stop_churn);
+        let base = core_cfg(&dir);
+        std::thread::spawn(move || {
+            let mut reloads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                shared
+                    .registry()
+                    .reload("aif-arm")
+                    .expect("hot reload succeeds");
+                reloads += 1;
+                let churn =
+                    scenario("churn", "base", SimMode::Off, &base);
+                shared.registry().add(churn).expect("hot add succeeds");
+                shared
+                    .registry()
+                    .remove("churn")
+                    .expect("hot remove succeeds");
+                // Leave the scheduler room for the traffic threads on
+                // small CI machines.
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            reloads
+        })
+    };
+
+    // Traffic threads: every request must succeed AND return exactly the
+    // pre-reload reference scores (no lost replies: the thread loop
+    // itself completing proves every request got a response).
+    let mut handles = Vec::new();
+    for t in 0..N_THREADS {
+        let shared = Arc::clone(&shared);
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            for m in 0..M_REQUESTS {
+                let which = (t + m) % 2;
+                let name = ["base-arm", "aif-arm"][which];
+                let (ui, user) = {
+                    let i = (t * M_REQUESTS + m) % users.len();
+                    (i, users[i])
+                };
+                // Thread-unique ids: concurrent identical ids on one
+                // engine would alias the async-phase cache key.
+                let id = (t * M_REQUESTS + m) as u64 + 1000;
+                let r = shared
+                    .score(
+                        ScoreRequest::user(user)
+                            .with_request_id(id)
+                            .with_candidates(cands())
+                            .with_top_k(16)
+                            .with_scenario(name),
+                    )
+                    .expect("no failed requests during hot reload");
+                assert_eq!(
+                    r.items, reference[which][ui],
+                    "scores changed across a hot reload ({name}, user \
+                     {user})"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("traffic thread panicked");
+    }
+    stop_churn.store(true, Ordering::Relaxed);
+    let reloads = churner.join().expect("churn thread panicked");
+    assert!(reloads > 0, "at least one reload raced the traffic");
+
+    // Reload bumped the generation; the registry is back to 2 scenarios.
+    let aif = shared.registry().get(Some("aif-arm")).unwrap();
+    assert_eq!(aif.generation, reloads);
+    assert_eq!(shared.registry().len(), 2);
+    // The user-async handoff cache drained (no leaked entries across any
+    // engine generation).
+    assert!(shared.core().user_cache.is_empty());
+}
+
+#[test]
+fn registry_admin_contract() {
+    let dir = fixture_dir("admin");
+    let _cleanup = Cleanup(dir.clone());
+    let base = core_cfg(&dir);
+    let mut cfg = core_cfg(&dir);
+    cfg.scenarios = vec![
+        scenario("main", "aif", SimMode::Precached, &base),
+        scenario("fallback", "base", SimMode::Off, &base),
+    ];
+    cfg.default_scenario = Some("main".into());
+    let merger = Merger::build(cfg).expect("merger");
+    let reg = merger.registry();
+
+    // Routing: named, default, unknown.
+    let r = merger
+        .score(
+            ScoreRequest::user(1)
+                .with_candidates(cands())
+                .with_scenario("fallback"),
+        )
+        .unwrap();
+    assert_eq!(r.scenario, "fallback");
+    let main_engine = reg.get(Some("main")).unwrap();
+    let errs_before = main_engine
+        .metrics
+        .errors
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(matches!(
+        merger.score(ScoreRequest::user(1).with_scenario("nope")),
+        Err(ServeError::UnknownScenario(_))
+    ));
+    // Routing failures are not charged to any scenario's error metric.
+    assert_eq!(
+        main_engine
+            .metrics
+            .errors
+            .load(std::sync::atomic::Ordering::Relaxed),
+        errs_before
+    );
+
+    // Listing order + default flag.
+    let names = reg.names();
+    assert_eq!(names, vec!["main".to_string(), "fallback".to_string()]);
+    let infos = reg.infos();
+    assert!(infos[0].is_default && !infos[1].is_default);
+    assert_eq!(infos[0].variant, "aif");
+
+    // Duplicate add fails; unknown reload/remove are typed errors; the
+    // default cannot be removed.
+    let dup = scenario("main", "base", SimMode::Off, &core_cfg(&dir));
+    assert!(reg.add(dup).is_err());
+    assert!(matches!(
+        reg.reload("nope"),
+        Err(ServeError::UnknownScenario(_))
+    ));
+    assert!(matches!(
+        reg.remove("nope"),
+        Err(ServeError::UnknownScenario(_))
+    ));
+    assert!(matches!(
+        reg.remove("main"),
+        Err(ServeError::BadRequest(_))
+    ));
+
+    // Remove works for non-default; traffic to it then 404s.
+    reg.remove("fallback").unwrap();
+    assert_eq!(reg.len(), 1);
+    assert!(matches!(
+        merger.score(ScoreRequest::user(1).with_scenario("fallback")),
+        Err(ServeError::UnknownScenario(_))
+    ));
+
+    // Unknown variants fail registration cleanly (fleet keeps serving).
+    let bad = scenario("bad", "no_such_variant", SimMode::Off, &core_cfg(&dir));
+    assert!(reg.add(bad).is_err());
+    assert!(merger
+        .score(ScoreRequest::user(1).with_candidates(cands()))
+        .is_ok());
+}

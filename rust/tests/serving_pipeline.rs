@@ -41,7 +41,7 @@ fn aif_pipeline_serves_requests() {
     let merger =
         Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
     for id in 0..4u64 {
-        let user = (id as usize * 37) % merger.world.n_users;
+        let user = (id as usize * 37) % merger.world().n_users;
         let r = merger
             .score(ScoreRequest::user(user).with_request_id(id))
             .unwrap();
@@ -61,9 +61,9 @@ fn aif_pipeline_serves_requests() {
         assert!(r.timings.user_async.is_some());
     }
     // User cache is drained (two-phase handoff consumed).
-    assert!(merger.user_cache.is_empty());
+    assert!(merger.core().user_cache.is_empty());
     // N2O table was fully built.
-    assert_eq!(merger.n2o.coverage(), 1.0);
+    assert_eq!(merger.core().n2o.coverage(), 1.0);
     assert!(merger.extra_storage_bytes() > 0);
 }
 
