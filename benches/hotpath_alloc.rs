@@ -1,0 +1,330 @@
+//! Hot-path allocation bench (ISSUE 4): the zero-copy pre-rank pipeline
+//! vs the owned-allocation baseline, same stack, same seeds — only
+//! `ServingConfig.zero_copy` differs.
+//!
+//! Measured per scored request, via a counting global allocator wrapped
+//! around `System`:
+//!
+//! * **data allocations** — heap allocations of ≥ 1 KiB, the mini-batch
+//!   assembly buffers this PR moves into the arena (small bookkeeping
+//!   allocations — `Arc` headers, shape vecs, channel nodes — are
+//!   reported separately under total counts);
+//! * total allocations and total bytes;
+//! * p50 / p99 request latency;
+//! * arena hit rate + outstanding-buffer leak check;
+//! * N2O lock acquisitions (must be exactly ONE per request);
+//! * bitwise top-K identity between the two dispatch modes.
+//!
+//! Results are written to `BENCH_hotpath.json` (override with
+//! `AIF_BENCH_OUT`) so later PRs can ratchet on allocations/request.
+//! `AIF_QUICK=1` shrinks the run for the CI smoke; `AIF_ARTIFACTS` points
+//! at a real artifact set (otherwise a perf-profile synthetic fixture is
+//! generated — `util::fixture::FixtureDims::perf`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::{Merger, ScoreRequest};
+use aif::features::LatencyModel;
+use aif::util::bench::Stats;
+use aif::util::fixture::{self, FixtureDims};
+use aif::util::json::{Object, Value};
+
+/// Allocations at or above this size count as data-buffer allocations.
+const DATA_ALLOC_BYTES: usize = 1024;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static DATA_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        if layout.size() >= DATA_ALLOC_BYTES {
+            DATA_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[derive(Debug, Clone, Copy)]
+struct AllocSnapshot {
+    allocs: u64,
+    bytes: u64,
+    data_allocs: u64,
+}
+
+fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+        data_allocs: DATA_ALLOCS.load(Ordering::Relaxed),
+    }
+}
+
+struct RunReport {
+    allocs_per_req: f64,
+    bytes_per_req: f64,
+    data_allocs_per_req: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    qps: f64,
+}
+
+/// Serve `n` candidate-override requests and account allocations + RTs.
+fn run_load(
+    merger: &Merger,
+    n: usize,
+    n_users: usize,
+    candidates: &[u32],
+    top_k: usize,
+    id_base: u64,
+) -> RunReport {
+    // Requests are built OUTSIDE the counting window: the serving stack
+    // is what's being measured, not the load generator.
+    let reqs: Vec<ScoreRequest> = (0..n)
+        .map(|i| {
+            ScoreRequest::user(i % n_users)
+                .with_request_id(id_base + i as u64)
+                .with_candidates(candidates.to_vec())
+                .with_top_k(top_k)
+        })
+        .collect();
+    let mut samples = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    let before = snapshot();
+    for req in reqs {
+        let t = Instant::now();
+        let resp = merger.score(req).expect("bench request");
+        samples.push(t.elapsed().as_secs_f64());
+        assert_eq!(resp.items.len(), top_k);
+    }
+    let after = snapshot();
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = Stats {
+        name: "rt".into(),
+        iters: n,
+        samples,
+    };
+    RunReport {
+        allocs_per_req: (after.allocs - before.allocs) as f64 / n as f64,
+        bytes_per_req: (after.bytes - before.bytes) as f64 / n as f64,
+        data_allocs_per_req: (after.data_allocs - before.data_allocs) as f64
+            / n as f64,
+        p50_ms: stats.percentile(50.0) * 1e3,
+        p99_ms: stats.percentile(99.0) * 1e3,
+        qps: n as f64 / wall,
+    }
+}
+
+fn report_json(r: &RunReport) -> Value {
+    let mut o = Object::new();
+    o.insert("allocs_per_req", r.allocs_per_req);
+    o.insert("bytes_per_req", r.bytes_per_req);
+    o.insert("data_allocs_per_req", r.data_allocs_per_req);
+    o.insert("p50_ms", r.p50_ms);
+    o.insert("p99_ms", r.p99_ms);
+    o.insert("qps", r.qps);
+    Value::Obj(o)
+}
+
+fn cfg(dir: &str, zero_copy: bool) -> ServingConfig {
+    ServingConfig {
+        variant: "aif".into(),
+        sim_mode: SimMode::Precached,
+        artifacts_dir: dir.into(),
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        retrieval_latency: LatencyModel::fixed(50.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        zero_copy,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let (n_warm, n_measure) = if quick { (6, 16) } else { (32, 160) };
+
+    // Artifact set: the real one when AIF_ARTIFACTS names a directory
+    // with a manifest, a perf-profile synthetic fixture otherwise.
+    let (dir, fixture_dir) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-hotpath-bench-{}",
+                std::process::id()
+            ));
+            fixture::write_dims(&tmp, &FixtureDims::perf())
+                .expect("perf fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+
+    let owned = Merger::build(cfg(&dir, false)).expect("owned-path merger");
+    let zc = Merger::build(cfg(&dir, true)).expect("zero-copy merger");
+
+    let n_users = zc.world().n_users;
+    let batch = zc.core().batch;
+    let n_items = zc.world().n_items;
+    let n_cands = (16 * batch).min(n_items);
+    let candidates: Vec<u32> = (0..n_cands as u32).collect();
+    let top_k = 64.min(n_cands);
+    println!(
+        "hotpath_alloc: {n_cands} candidates x {n_measure} requests \
+         (batch {batch}, {n_users} users, warmup {n_warm})"
+    );
+
+    // ---- bitwise identity: same seeds, both dispatch modes --------------
+    for (i, user) in [0usize, 3, 7, 11].into_iter().enumerate() {
+        let user = user % n_users;
+        let req = |id| {
+            ScoreRequest::user(user)
+                .with_request_id(id)
+                .with_candidates(candidates.clone())
+                .with_top_k(top_k)
+        };
+        let a = owned.score(req(900 + i as u64)).expect("owned scores");
+        let b = zc.score(req(950 + i as u64)).expect("zero-copy scores");
+        assert_eq!(
+            a.items, b.items,
+            "user {user}: zero-copy top-K diverged from the owned path"
+        );
+    }
+    println!("score identity: top-K bitwise-identical, zero-copy on/off");
+
+    // ---- measured runs ---------------------------------------------------
+    let _ = run_load(&owned, n_warm, n_users, &candidates, top_k, 1_000);
+    let owned_run =
+        run_load(&owned, n_measure, n_users, &candidates, top_k, 10_000);
+
+    let _ = run_load(&zc, n_warm, n_users, &candidates, top_k, 2_000);
+    let locks_before = zc.core().n2o.lock_acquisitions.load(Ordering::Relaxed);
+    let zc_run =
+        run_load(&zc, n_measure, n_users, &candidates, top_k, 20_000);
+    let locks_delta = zc.core().n2o.lock_acquisitions.load(Ordering::Relaxed)
+        - locks_before;
+
+    let arena = &zc.core().arena;
+    let outstanding = arena.outstanding();
+    let hit_rate = arena.reuse_ratio();
+
+    let data_ratio = owned_run.data_allocs_per_req
+        / zc_run.data_allocs_per_req.max(1e-9);
+    let alloc_ratio =
+        owned_run.allocs_per_req / zc_run.allocs_per_req.max(1e-9);
+    let bytes_ratio =
+        owned_run.bytes_per_req / zc_run.bytes_per_req.max(1e-9);
+
+    println!(
+        "\n{:24} {:>14} {:>14} {:>12} {:>10} {:>10}",
+        "mode", "data allocs/req", "allocs/req", "KiB/req", "p50 ms", "p99 ms"
+    );
+    for (name, r) in [("owned (zero_copy off)", &owned_run), ("arena (zero_copy on)", &zc_run)] {
+        println!(
+            "{:24} {:>14.1} {:>14.1} {:>12.1} {:>10.3} {:>10.3}",
+            name,
+            r.data_allocs_per_req,
+            r.allocs_per_req,
+            r.bytes_per_req / 1024.0,
+            r.p50_ms,
+            r.p99_ms
+        );
+    }
+    println!(
+        "\ndata-alloc reduction: {data_ratio:.1}x   total allocs: \
+         {alloc_ratio:.2}x   bytes: {bytes_ratio:.2}x"
+    );
+    println!(
+        "arena hit rate {:.1}%  outstanding {}  n2o locks/request {:.2}",
+        hit_rate * 100.0,
+        outstanding,
+        locks_delta as f64 / n_measure as f64
+    );
+
+    // ---- the acceptance gates -------------------------------------------
+    assert_eq!(
+        locks_delta as usize, n_measure,
+        "zero-copy path must take exactly ONE N2O lock per request"
+    );
+    assert_eq!(
+        outstanding, 0,
+        "every pooled buffer taken during the run must be back in the pool"
+    );
+    assert!(
+        data_ratio >= 5.0,
+        "zero-copy path must cut data-buffer allocations >= 5x \
+         (owned {:.1}/req vs arena {:.1}/req = {data_ratio:.1}x)",
+        owned_run.data_allocs_per_req,
+        zc_run.data_allocs_per_req
+    );
+    if !quick {
+        assert!(
+            zc_run.p99_ms <= owned_run.p99_ms * 1.5,
+            "zero-copy p99 regressed: {:.3}ms vs owned {:.3}ms",
+            zc_run.p99_ms,
+            owned_run.p99_ms
+        );
+    }
+
+    // ---- JSON baseline ---------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let mut o = Object::new();
+    o.insert("bench", "hotpath_alloc");
+    o.insert("quick", quick);
+    o.insert("n_requests", n_measure);
+    o.insert("n_candidates", n_cands);
+    o.insert("batch", batch);
+    o.insert("data_alloc_threshold_bytes", DATA_ALLOC_BYTES);
+    o.insert("owned", report_json(&owned_run));
+    o.insert("zero_copy", report_json(&zc_run));
+    let mut ratios = Object::new();
+    ratios.insert("data_allocs", data_ratio);
+    ratios.insert("allocs", alloc_ratio);
+    ratios.insert("bytes", bytes_ratio);
+    o.insert("reduction", Value::Obj(ratios));
+    let mut arena_o = Object::new();
+    arena_o.insert("hit_rate", hit_rate);
+    arena_o.insert("outstanding", outstanding);
+    arena_o.insert(
+        "tl_hits",
+        arena.tl_hits.load(Ordering::Relaxed),
+    );
+    arena_o.insert(
+        "trimmed",
+        arena.trimmed.load(Ordering::Relaxed),
+    );
+    o.insert("arena", Value::Obj(arena_o));
+    o.insert(
+        "n2o_locks_per_request",
+        locks_delta as f64 / n_measure as f64,
+    );
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
+
+    if let Some(tmp) = fixture_dir {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}

@@ -21,6 +21,18 @@ echo "== scenario registry stress (release) =="
 # with dedicated per-variant Mergers, over the synthetic fixture set.
 cargo test --release -q --test scenario_registry
 
+echo "== benches compile =="
+cargo build --release --benches
+
+echo "== hotpath_alloc smoke (release, quick) =="
+# The zero-copy gates run for real in CI: >= 5x fewer data-buffer
+# allocations/request, one N2O lock/request, no leaked arena buffers,
+# bitwise top-K identity — over the perf-profile synthetic fixture.
+# Emits BENCH_hotpath.json (quick numbers; the checked-in baseline comes
+# from a full run).
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_hotpath_ci.json \
+    cargo bench --bench hotpath_alloc
+
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound
 # raised in the same PR, with the reason in the diff.  Covers the library,

@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // ---- [2] incremental updates via the message queue -------------------
     println!("\n[2] INCREMENTAL UPDATES (feature-change / new-item trigger)");
     let before = n2o.snapshot();
-    let before_row = before.get(3).unwrap().clone();
+    let before_row = before.get(3).unwrap().to_entry();
     let queue = UpdateQueue::start(
         Arc::clone(&worker),
         1024,
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     let after = n2o.snapshot();
     println!(
         "    snapshot isolation: old snapshot row unchanged = {}",
-        before.get(3).unwrap() == &before_row
+        before.get(3).unwrap().to_entry() == before_row
     );
     println!(
         "    new snapshot sees recomputed row (same values, same model): {}",

@@ -1,67 +1,187 @@
-//! Arena memory pool for high-frequency user-vector caching (paper §3.4:
-//! "AIF adopts an Arena memory pool for the high-frequency updates and
-//! caching of user-side features ... enhancing the efficiency of feature
-//! access and processing").
+//! Arena memory pool for the pre-rank hot path (paper §3.4: "AIF adopts
+//! an Arena memory pool for the high-frequency updates and caching of
+//! user-side features ... enhancing the efficiency of feature access and
+//! processing").
 //!
 //! Size-classed free lists of `Vec<f32>` buffers: `get(len)` hands out a
 //! zero-length buffer with capacity ≥ len from the smallest fitting class;
 //! dropping the [`PooledBuf`] returns it.  The pre-rank hot loop assembles
-//! mini-batch tensors into pooled buffers instead of fresh allocations.
+//! mini-batch tensors into pooled buffers instead of fresh allocations
+//! (`Tensor::from_pooled`), and the buffer rides the tensor back to the
+//! pool when the RTP call retires.
+//!
+//! Two tiers keep the pool mutex out of the hot loop (DESIGN.md §14):
+//!
+//! * a **thread-local cache** of up to [`TL_RETAIN`] buffers per class on
+//!   GETTER threads — a same-thread get/put cycle touches no lock at all;
+//! * [`N_SHARDS`] **sharded global free lists** behind the thread-local
+//!   tier.  A buffer remembers its getter's home shard (by
+//!   `util::tls::thread_tag`): when a consumer-only thread drops it (an
+//!   RTP worker retiring operands), it returns to that ORIGIN shard, so
+//!   the producing thread's next get hits its own shard on the first
+//!   probe; stealing across shards is the cold path.
+//!
+//! Edge cases never alias the size classes: `len == 0` and requests above
+//! the top class return an **exact-capacity untracked** buffer that is
+//! really freed on drop (accounted in `untracked`, invisible to
+//! `outstanding()`).
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::util::tls;
 
 /// Power-of-two size classes from 256 floats up to 16M floats.
 const MIN_CLASS_LOG2: u32 = 8;
 const N_CLASSES: usize = 17;
+/// Global free-list shards behind the thread-local tier.
+const N_SHARDS: usize = 8;
+/// Buffers per class a thread parks privately before spilling to a shard.
+const TL_RETAIN: usize = 4;
+/// Distinct pools one thread caches for; the oldest is evicted (dropped).
+const TL_POOLS: usize = 4;
+/// Class tag of exact-capacity escape-hatch buffers the pool never
+/// retains (len == 0 or above the top size class).
+const UNTRACKED: usize = usize::MAX;
+
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread buffer caches, keyed by pool id (a thread may serve
+    /// several pools: tests, multi-Merger processes).
+    static TL_CACHE: RefCell<Vec<TlPool>> = const { RefCell::new(Vec::new()) };
+}
+
+struct TlPool {
+    pool_id: u64,
+    classes: Vec<Vec<Vec<f32>>>,
+}
+
+struct Shard {
+    classes: Vec<Mutex<Vec<Vec<f32>>>>,
+}
 
 pub struct ArenaPool {
-    classes: Vec<Mutex<Vec<Vec<f32>>>>,
-    /// Max buffers retained per class (beyond this, drops really free).
+    /// Process-unique id keying the thread-local caches.
+    id: u64,
+    shards: Vec<Shard>,
+    /// Max buffers retained per (shard, class) beyond the thread-local
+    /// tier; spills past this really free ([`Self::trimmed`]).
     retain_per_class: usize,
+    /// Fresh heap allocations (pool misses).
     pub allocs: AtomicU64,
+    /// Gets served from a free list (thread-local or shard).
     pub reuses: AtomicU64,
+    /// Tracked buffers handed back (retained or trimmed).
+    pub returns: AtomicU64,
+    /// Tracked buffers detached for good via [`PooledBuf::take`].
+    pub detached: AtomicU64,
+    /// Returns dropped because the shard class sat at `retain_per_class`.
+    pub trimmed: AtomicU64,
+    /// Exact-capacity escape-hatch buffers (len 0 / above the top class).
+    pub untracked: AtomicU64,
+    /// Gets served lock-free from the thread-local tier.
+    pub tl_hits: AtomicU64,
 }
 
 impl ArenaPool {
     pub fn new(retain_per_class: usize) -> Arc<Self> {
         Arc::new(ArenaPool {
-            classes: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            shards: (0..N_SHARDS)
+                .map(|_| Shard {
+                    classes: (0..N_CLASSES)
+                        .map(|_| Mutex::new(Vec::new()))
+                        .collect(),
+                })
+                .collect(),
             retain_per_class,
             allocs: AtomicU64::new(0),
             reuses: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+            detached: AtomicU64::new(0),
+            trimmed: AtomicU64::new(0),
+            untracked: AtomicU64::new(0),
+            tl_hits: AtomicU64::new(0),
         })
     }
 
     fn class_of(len: usize) -> usize {
-        let bits = usize::BITS - len.saturating_sub(1).leading_zeros();
-        (bits.saturating_sub(MIN_CLASS_LOG2) as usize).min(N_CLASSES - 1)
+        debug_assert!(len > 0 && len <= Self::class_capacity(N_CLASSES - 1));
+        let bits = usize::BITS - (len - 1).leading_zeros();
+        bits.saturating_sub(MIN_CLASS_LOG2) as usize
     }
 
     fn class_capacity(class: usize) -> usize {
         1usize << (class as u32 + MIN_CLASS_LOG2)
     }
 
-    /// Take a buffer with capacity >= len; contents are cleared.
+    /// Take a buffer with capacity >= len; contents are cleared.  `len`s
+    /// of 0 or above the top size class get an exact-capacity buffer the
+    /// pool does not track (really freed on drop).
     pub fn get(self: &Arc<Self>, len: usize) -> PooledBuf {
-        let class = Self::class_of(len);
-        let mut buf = {
-            let mut free = self.classes[class].lock().unwrap();
-            free.pop()
+        if len == 0 || len > Self::class_capacity(N_CLASSES - 1) {
+            self.untracked.fetch_add(1, Ordering::Relaxed);
+            return PooledBuf {
+                buf: Vec::with_capacity(len),
+                pool: Arc::clone(self),
+                class: UNTRACKED,
+                home: 0,
+            };
         }
-        .map(|b| {
-            self.reuses.fetch_add(1, Ordering::Relaxed);
-            b
-        })
-        .unwrap_or_else(|| {
-            self.allocs.fetch_add(1, Ordering::Relaxed);
-            Vec::with_capacity(Self::class_capacity(class))
+        let class = Self::class_of(len);
+        let home = tls::thread_shard(N_SHARDS);
+        // Thread-local fast path; getting also MARKS this thread as a
+        // getter (creates its cache entry), so returns later made by
+        // consumer-only threads (RTP workers dropping operands) don't
+        // strand buffers in a cache no get() ever drains — they spill to
+        // the buffer's origin shard instead (see `put_back`).
+        let tl = TL_CACHE.with(|c| {
+            let mut caches = c.borrow_mut();
+            let slot = match caches
+                .iter()
+                .position(|p| p.pool_id == self.id)
+            {
+                Some(i) => i,
+                None => {
+                    if caches.len() >= TL_POOLS {
+                        caches.remove(0); // evicted pool's buffers drop
+                    }
+                    caches.push(TlPool {
+                        pool_id: self.id,
+                        classes: (0..N_CLASSES)
+                            .map(|_| Vec::new())
+                            .collect(),
+                    });
+                    caches.len() - 1
+                }
+            };
+            caches[slot].classes[class].pop()
         });
+        let mut buf = match tl {
+            Some(b) => {
+                self.tl_hits.fetch_add(1, Ordering::Relaxed);
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => match self.shard_pop(class) {
+                Some(b) => {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    b
+                }
+                None => {
+                    self.allocs.fetch_add(1, Ordering::Relaxed);
+                    Vec::with_capacity(Self::class_capacity(class))
+                }
+            },
+        };
         buf.clear();
         PooledBuf {
             buf,
             pool: Arc::clone(self),
             class,
+            home,
         }
     }
 
@@ -72,13 +192,64 @@ impl ArenaPool {
         b
     }
 
-    fn put_back(&self, mut buf: Vec<f32>, class: usize) {
-        let mut free = self.classes[class].lock().unwrap();
-        if free.len() < self.retain_per_class {
-            buf.clear();
-            free.push(buf);
+    /// Home shard first, then steal — stealing is the cold path that
+    /// rebalances producer/consumer thread asymmetries.
+    fn shard_pop(&self, class: usize) -> Option<Vec<f32>> {
+        let home = tls::thread_shard(N_SHARDS);
+        for i in 0..N_SHARDS {
+            let shard = &self.shards[(home + i) % N_SHARDS];
+            if let Some(b) = shard.classes[class].lock().unwrap().pop() {
+                return Some(b);
+            }
         }
-        // else: drop frees the memory
+        None
+    }
+
+    /// Hand a buffer back.  The thread-local tier takes it ONLY on
+    /// threads that also call `get` on this pool (their cache entry
+    /// exists); consumer-only threads — RTP workers dropping retired
+    /// operands — spill straight to the buffer's ORIGIN shard (`home`,
+    /// the getter thread's shard), so the next get on the producing
+    /// thread finds it on the first shard probe.
+    fn put_back(&self, mut buf: Vec<f32>, class: usize, home: usize) {
+        debug_assert_ne!(class, UNTRACKED);
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        buf.clear();
+        let spilled = TL_CACHE.with(|c| {
+            let mut caches = c.borrow_mut();
+            match caches.iter_mut().find(|p| p.pool_id == self.id) {
+                Some(p) if p.classes[class].len() < TL_RETAIN => {
+                    p.classes[class].push(buf);
+                    None
+                }
+                _ => Some(buf),
+            }
+        });
+        if let Some(buf) = spilled {
+            let mut free =
+                self.shards[home].classes[class].lock().unwrap();
+            if free.len() < self.retain_per_class {
+                free.push(buf);
+            } else {
+                self.trimmed.fetch_add(1, Ordering::Relaxed);
+                // drop really frees
+            }
+        }
+    }
+
+    /// Tracked buffers currently out (taken, neither returned nor
+    /// detached).  The leak detector of the accounting tests: after every
+    /// response of a request is dropped this must read 0.  Loads are
+    /// relaxed and not a consistent set, so a live read (`/metrics`)
+    /// racing a get/return cycle could observe returns ahead of takes —
+    /// read the give-back counters FIRST and saturate so a transient
+    /// race reads 0, never a wrapped u64.
+    pub fn outstanding(&self) -> u64 {
+        let given_back = self.returns.load(Ordering::Relaxed)
+            + self.detached.load(Ordering::Relaxed);
+        let taken = self.allocs.load(Ordering::Relaxed)
+            + self.reuses.load(Ordering::Relaxed);
+        taken.saturating_sub(given_back)
     }
 
     pub fn reuse_ratio(&self) -> f64 {
@@ -91,10 +262,14 @@ impl ArenaPool {
         }
     }
 
-    /// Bytes currently parked in free lists (§5.3 storage accounting).
+    /// Bytes currently parked in the sharded free lists (§5.3 storage
+    /// accounting).  Thread-local caches are not visible cross-thread and
+    /// are bounded (`TL_RETAIN` buffers/class/thread), so they are not
+    /// counted.
     pub fn pooled_bytes(&self) -> usize {
-        self.classes
+        self.shards
             .iter()
+            .flat_map(|s| s.classes.iter())
             .map(|c| {
                 c.lock()
                     .unwrap()
@@ -104,6 +279,21 @@ impl ArenaPool {
             })
             .sum()
     }
+
+    /// JSON-ready counter snapshot (`/metrics` arena block).
+    pub fn stats_snapshot(&self) -> crate::util::json::Value {
+        let mut o = crate::util::json::Object::new();
+        o.insert("allocs", self.allocs.load(Ordering::Relaxed));
+        o.insert("reuses", self.reuses.load(Ordering::Relaxed));
+        o.insert("returns", self.returns.load(Ordering::Relaxed));
+        o.insert("trimmed", self.trimmed.load(Ordering::Relaxed));
+        o.insert("untracked", self.untracked.load(Ordering::Relaxed));
+        o.insert("tl_hits", self.tl_hits.load(Ordering::Relaxed));
+        o.insert("outstanding", self.outstanding());
+        o.insert("reuse_ratio", self.reuse_ratio());
+        o.insert("pooled_bytes", self.pooled_bytes());
+        crate::util::json::Value::Obj(o)
+    }
 }
 
 /// RAII pooled buffer; derefs to `Vec<f32>`.
@@ -111,11 +301,29 @@ pub struct PooledBuf {
     buf: Vec<f32>,
     pool: Arc<ArenaPool>,
     class: usize,
+    /// Shard of the getter thread — where a cross-thread drop returns it.
+    home: usize,
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("len", &self.buf.len())
+            .field("capacity", &self.buf.capacity())
+            .field("tracked", &(self.class != UNTRACKED))
+            .finish()
+    }
 }
 
 impl std::ops::Deref for PooledBuf {
     type Target = Vec<f32>;
     fn deref(&self) -> &Vec<f32> {
+        &self.buf
+    }
+}
+
+impl AsRef<[f32]> for PooledBuf {
+    fn as_ref(&self) -> &[f32] {
         &self.buf
     }
 }
@@ -127,19 +335,27 @@ impl std::ops::DerefMut for PooledBuf {
 }
 
 impl PooledBuf {
-    /// Move the contents out (e.g. into a Tensor), returning an empty
-    /// buffer to the pool immediately.
+    /// Move the contents out for good; the allocation never returns to
+    /// the pool (accounted in `detached`, not a leak).
     pub fn take(mut self) -> Vec<f32> {
+        if self.class != UNTRACKED {
+            self.pool.detached.fetch_add(1, Ordering::Relaxed);
+            self.class = UNTRACKED; // Drop skips put_back
+        }
         std::mem::take(&mut self.buf)
     }
 }
 
 impl Drop for PooledBuf {
     fn drop(&mut self) {
-        let buf = std::mem::take(&mut self.buf);
-        if buf.capacity() > 0 {
-            self.pool.put_back(buf, self.class);
+        if self.class == UNTRACKED {
+            return; // exact-capacity escape hatch / detached: really free
         }
+        self.pool.put_back(
+            std::mem::take(&mut self.buf),
+            self.class,
+            self.home,
+        );
     }
 }
 
@@ -153,7 +369,7 @@ mod tests {
         assert_eq!(ArenaPool::class_of(256), 0);
         assert_eq!(ArenaPool::class_of(257), 1);
         assert_eq!(ArenaPool::class_of(512), 1);
-        assert!(ArenaPool::class_of(1 << 24) == N_CLASSES - 1);
+        assert_eq!(ArenaPool::class_of(1 << 24), N_CLASSES - 1);
     }
 
     #[test]
@@ -163,11 +379,12 @@ mod tests {
             let mut b = pool.get(1000);
             b.push(1.0);
             b.as_ptr() as usize
-        }; // returned to pool
+        }; // returned to the thread-local tier
         let b2 = pool.get(900); // same class
         assert_eq!(b2.as_ptr() as usize, ptr1, "buffer reused");
         assert!(b2.is_empty(), "reused buffer is cleared");
         assert_eq!(pool.reuses.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.tl_hits.load(Ordering::Relaxed), 1, "lock-free hit");
     }
 
     #[test]
@@ -179,21 +396,87 @@ mod tests {
     }
 
     #[test]
-    fn retain_limit_bounds_pool() {
-        let pool = ArenaPool::new(2);
-        let bufs: Vec<_> = (0..5).map(|_| pool.get(1000)).collect();
-        drop(bufs);
-        // Only 2 retained.
-        let parked = pool.pooled_bytes();
-        assert!(parked <= 2 * 1024 * 4 + 64, "parked {parked}");
+    fn zero_len_and_oversize_get_exact_untracked_buffers() {
+        let pool = ArenaPool::new(4);
+        let b = pool.get(0);
+        assert_eq!(b.capacity(), 0, "len 0 never lands in a class");
+        drop(b);
+        let over = (1 << 24) + 1;
+        let b = pool.get(over);
+        assert_eq!(
+            b.capacity(),
+            over,
+            "above the top class: exact capacity, no class rounding"
+        );
+        drop(b);
+        assert_eq!(pool.untracked.load(Ordering::Relaxed), 2);
+        // Untracked buffers neither count as taken nor as returned.
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.allocs.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.returns.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.pooled_bytes(), 0, "escape hatch is never parked");
     }
 
     #[test]
-    fn take_detaches_contents() {
+    fn retain_limit_trims_shard_spills() {
+        let pool = ArenaPool::new(2);
+        // TL_RETAIN park thread-locally; the rest spill to the home
+        // shard, which retains retain_per_class and trims the overflow.
+        let n = TL_RETAIN + 5;
+        let bufs: Vec<_> = (0..n).map(|_| pool.get(1000)).collect();
+        drop(bufs);
+        assert_eq!(pool.returns.load(Ordering::Relaxed), n as u64);
+        assert_eq!(pool.trimmed.load(Ordering::Relaxed), 3, "5 spills - 2 kept");
+        let parked = pool.pooled_bytes();
+        assert!(parked <= 2 * 1024 * 4, "parked {parked}");
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn take_detaches_contents_without_leak_accounting() {
         let pool = ArenaPool::new(4);
         let mut b = pool.get(10);
         b.extend_from_slice(&[1.0, 2.0]);
         let v = b.take();
         assert_eq!(v, vec![1.0, 2.0]);
+        assert_eq!(pool.detached.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.outstanding(), 0, "take is not a leak");
+    }
+
+    #[test]
+    fn cross_thread_returns_balance_the_books() {
+        // Buffers allocated here, dropped on another thread (the RTP-
+        // retire pattern): outstanding settles to 0, and because the
+        // dropping thread never get()s, EVERY buffer lands back in the
+        // getter's origin shard — nothing strands in a consumer-only
+        // thread-local cache.
+        let pool = ArenaPool::new(8);
+        let n = TL_RETAIN + 2;
+        let bufs: Vec<_> =
+            (0..n).map(|_| pool.get_zeroed(2000)).collect();
+        std::thread::spawn(move || drop(bufs)).join().unwrap();
+        assert_eq!(pool.outstanding(), 0);
+        let parked = pool.pooled_bytes();
+        assert!(
+            parked >= n * 2048 * 4,
+            "all {n} cross-thread returns reach the origin shard \
+             (parked {parked})"
+        );
+        let before = pool.reuses.load(Ordering::Relaxed);
+        let _b = pool.get(2000);
+        assert_eq!(pool.reuses.load(Ordering::Relaxed), before + 1);
+        assert_eq!(pool.outstanding(), 1);
+    }
+
+    #[test]
+    fn outstanding_tracks_live_buffers() {
+        let pool = ArenaPool::new(4);
+        let a = pool.get(300);
+        let b = pool.get(5000);
+        assert_eq!(pool.outstanding(), 2);
+        drop(a);
+        assert_eq!(pool.outstanding(), 1);
+        drop(b);
+        assert_eq!(pool.outstanding(), 0);
     }
 }

@@ -165,6 +165,11 @@ pub struct ServingConfig {
     pub lru_shards: usize,
     pub user_cache_shards: usize,
     pub arena_retain: usize,
+    /// Zero-copy hot path (DESIGN.md §14): assemble mini-batch tensors
+    /// into arena-pooled buffers instead of fresh heap allocations.
+    /// Score-invariant (property-tested bitwise-identical); off restores
+    /// the owned-allocation path for before/after benchmarking.
+    pub zero_copy: bool,
 
     /// Cross-request head-execution coalescing (ISSUE 2 tentpole).
     pub coalesce: CoalesceConfig,
@@ -217,6 +222,7 @@ impl Default for ServingConfig {
             lru_shards: 16,
             user_cache_shards: 16,
             arena_retain: 32,
+            zero_copy: true,
             coalesce: CoalesceConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
@@ -254,6 +260,9 @@ impl ServingConfig {
         num!(lru_shards, "lru_shards", usize);
         if let Some(x) = get("artifacts_dir").and_then(Value::as_str) {
             c.artifacts_dir = x.to_string();
+        }
+        if let Some(b) = get("zero_copy").and_then(Value::as_bool) {
+            c.zero_copy = b;
         }
         if let Some(co) = get("coalesce") {
             parse_coalesce(co, &mut c.coalesce);
@@ -441,6 +450,15 @@ mod tests {
             Value::parse(r#"{"scenarios": {"a": {"sim_mode": "nope"}}}"#)
                 .unwrap();
         assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn zero_copy_defaults_on_and_parses() {
+        let c = ServingConfig::default();
+        assert!(c.zero_copy, "arena-backed hot path is the default");
+        let v = Value::parse(r#"{"zero_copy": false}"#).unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert!(!c.zero_copy);
     }
 
     #[test]

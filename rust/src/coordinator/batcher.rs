@@ -29,14 +29,31 @@ pub fn split(candidates: &[u32], batch: usize) -> Vec<MiniBatch<'_>> {
 }
 
 /// Merge per-batch padded scores back into a flat score vector aligned
-/// with the original candidate order.
-pub fn merge_scores(
+/// with the original candidate order.  Generic over the per-batch score
+/// container so direct RTP outputs (`Tensor`) merge without an
+/// intermediate `to_vec`.
+pub fn merge_scores<S: AsRef<[f32]>>(
     n_candidates: usize,
     batch: usize,
-    per_batch: &[Vec<f32>],
+    per_batch: &[S],
 ) -> Vec<f32> {
     let mut out = Vec::with_capacity(n_candidates);
+    merge_scores_into(n_candidates, batch, per_batch, &mut out);
+    out
+}
+
+/// [`merge_scores`] into a caller-provided buffer (cleared first) — the
+/// zero-copy request path merges into an arena buffer.
+pub fn merge_scores_into<S: AsRef<[f32]>>(
+    n_candidates: usize,
+    batch: usize,
+    per_batch: &[S],
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(n_candidates);
     for (i, scores) in per_batch.iter().enumerate() {
+        let scores = scores.as_ref();
         let start = i * batch;
         let real = (n_candidates - start).min(batch);
         assert!(
@@ -47,7 +64,6 @@ pub fn merge_scores(
         out.extend_from_slice(&scores[..real]);
     }
     assert_eq!(out.len(), n_candidates);
-    out
 }
 
 /// One job's placement inside a coalesced execution: rows

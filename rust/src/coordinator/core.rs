@@ -145,6 +145,13 @@ impl ServingCore {
         self.req_ids.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// The arena handle the zero-copy hot path assembles into — `None`
+    /// when `zero_copy` is off (the owned-allocation baseline the
+    /// hotpath bench compares against).
+    pub fn zero_copy_arena(&self) -> Option<Arc<ArenaPool>> {
+        self.cfg.zero_copy.then(|| Arc::clone(&self.arena))
+    }
+
     /// Allocate a unique engine-instance id (cache-key salt).
     pub(crate) fn next_engine_id(&self) -> u64 {
         self.engine_ids.fetch_add(1, Ordering::Relaxed)
@@ -216,10 +223,11 @@ impl ServingCore {
             .get(mu_artifact)
             .map(|s| Arc::clone(&s.stats))
             .unwrap_or_default();
-        let co = Arc::new(BatchCoalescer::new(
+        let co = Arc::new(BatchCoalescer::with_arena(
             Arc::clone(&self.rtp) as Arc<dyn HeadExecutor>,
             Self::coalescer_config(knobs, exec_rows, max_slots, self.batch),
             Arc::clone(&stats),
+            self.zero_copy_arena(),
         ));
         map.insert(
             mu_artifact.to_string(),

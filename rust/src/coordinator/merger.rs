@@ -190,4 +190,8 @@ impl ScenarioAdmin for Merger {
             .map(|e| (e.name().to_string(), e.metrics.snapshot(wall)))
             .collect()
     }
+
+    fn arena_stats(&self) -> Option<Value> {
+        Some(self.core.arena.stats_snapshot())
+    }
 }

@@ -29,7 +29,9 @@ use super::service::{
     PhaseTimings, PreRanker, ScenarioInfo, ScoreRequest, ScoreResponse,
     ScoreTrace, ScoredItem, ServeError, StageSpan,
 };
-use crate::cache::{RequestKey, ShardedLru, UserAsync};
+use crate::cache::{
+    ArenaPool, PooledBuf, RequestKey, ShardedLru, UserAsync,
+};
 use crate::config::{ScenarioConfig, SimMode};
 use crate::features::{assembly, FeatureStore, World};
 use crate::lsh;
@@ -48,12 +50,14 @@ pub struct ScenarioEngine {
     /// candidate count); the latency model comes from the core config.
     pub retriever: Arc<Retriever>,
     pub metrics: Arc<ServingMetrics>,
-    head_artifact: String,
     /// Cross-request dispatch scheduler + the `*_mu` artifact it serves
     /// (None = sequential per-request executions, the baseline path).
     /// Shared with every other scenario on the same head artifact.
     coalescer: Option<Arc<BatchCoalescer>>,
     mu_artifact: Option<String>,
+    /// Request-independent mini-batch scoring context, shared by every
+    /// fan-out task (one `Arc` clone per mini-batch, no per-batch state).
+    scorer: Arc<BatchScorer>,
     core: Arc<ServingCore>,
     /// Unique instance id, salting the per-request user-cache keys so two
     /// scenarios serving the same (request id, user) never alias.
@@ -191,14 +195,35 @@ impl ScenarioEngine {
             core.cfg.retrieval_latency.clone(),
         ));
 
+        // The batch scorer is request-independent: build it ONCE here so
+        // the per-request fan-out clones one `Arc` per mini-batch instead
+        // of a bag of strings and handles (DESIGN.md §14).
+        let scorer = Arc::new(BatchScorer {
+            variant: variant.clone(),
+            world: Arc::clone(&core.world),
+            store: Arc::clone(&core.store),
+            rtp: Arc::clone(&core.rtp),
+            sim_cache: Arc::clone(&core.sim_cache),
+            metrics: Arc::clone(&metrics),
+            sim_mode: cfg.sim_mode,
+            sim_budget: cfg.sim_budget,
+            sim_parse_us: core.cfg.sim_parse_us,
+            batch: core.batch,
+            n_tiers: core.manifest.dim("N_TIERS"),
+            head_artifact: variant.artifact.clone(),
+            coalescer: coalescer.clone(),
+            mu_artifact: mu_artifact.clone(),
+            arena: core.zero_copy_arena(),
+        });
+
         Ok(Arc::new(ScenarioEngine {
             engine_id: core.next_engine_id(),
-            head_artifact: variant.artifact.clone(),
             core: Arc::clone(core),
             coalescer,
             mu_artifact,
             metrics,
             retriever,
+            scorer,
             variant,
             generation,
             cfg,
@@ -263,16 +288,19 @@ impl ScenarioEngine {
     /// Serve one request end to end through the typed contract.
     pub fn score(
         &self,
-        req: ScoreRequest,
+        mut req: ScoreRequest,
     ) -> Result<ScoreResponse, ServeError> {
-        let result = self.serve(&req);
+        let result = self.serve(&mut req);
         if result.is_err() {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
         }
         result
     }
 
-    fn serve(&self, req: &ScoreRequest) -> Result<ScoreResponse, ServeError> {
+    fn serve(
+        &self,
+        req: &mut ScoreRequest,
+    ) -> Result<ScoreResponse, ServeError> {
         let t_total = Instant::now();
         let core = &self.core;
 
@@ -320,6 +348,7 @@ impl ScenarioEngine {
             let world = Arc::clone(&core.world);
             let rtp = Arc::clone(&core.rtp);
             let cache = Arc::clone(&core.user_cache);
+            let arena = core.zero_copy_arena();
             let key2 = key;
             core.async_pool.spawn(move || {
                 let t0 = Instant::now();
@@ -330,14 +359,25 @@ impl ScenarioEngine {
                     // plane goes into the tower so it can emit the
                     // linearized DIN factors.
                     let packed = packed_signs(&world, &uf.long_seq);
-                    let plane = lsh::unpack_plane(
-                        &packed,
-                        uf.long_seq.len(),
-                        world.w_hash.shape()[0],
+                    let n_bits = world.w_hash.shape()[0];
+                    // Zero-copy: the tower operands assemble into arena
+                    // buffers too (they retire with the RTP call).
+                    let arena = arena.as_ref();
+                    let mut inputs = assembly::user_tower_inputs_opt(
+                        &world, &uf, arena,
                     );
-                    let mut inputs =
-                        assembly::user_tower_inputs(&world, &uf);
-                    inputs.push(plane);
+                    inputs.push(Tensor::build_with(
+                        arena,
+                        vec![uf.long_seq.len(), n_bits],
+                        |buf| {
+                            lsh::unpack_plane_into(
+                                &packed,
+                                uf.long_seq.len(),
+                                n_bits,
+                                buf,
+                            )
+                        },
+                    ));
                     let rx2 = rtp.call_async_on(worker, "user_tower", inputs);
                     let out = rx2
                         .recv()
@@ -394,10 +434,14 @@ impl ScenarioEngine {
         // A candidate override skips the retrieval stage entirely (the
         // caller already knows what to score) but keeps the phase-1 overlap.
         let t_r = Instant::now();
-        let candidates = match &req.candidates {
-            Some(c) => c.clone(),
+        // `Arc` so the mini-batch fan-out shares ONE candidate list
+        // (tasks capture offsets, not per-batch copies of the ids); an
+        // override vector is MOVED out of the request, not cloned.
+        let candidates: Arc<Vec<u32>> = Arc::new(match req.candidates.take()
+        {
+            Some(c) => c,
             None => self.retriever.retrieve(user),
-        };
+        });
         let retrieval = t_r.elapsed();
 
         // ---- join phase 1 -------------------------------------------------
@@ -426,7 +470,8 @@ impl ScenarioEngine {
         let prerank = t_p.elapsed();
         check_deadline(req.deadline, t_total)?;
 
-        let top = batcher::top_k(&candidates, &scores, top_k);
+        let top = batcher::top_k(&candidates, scores.as_slice(), top_k);
+        drop(scores); // arena-backed: return the merged buffer now
         let timings = PhaseTimings {
             total: t_total.elapsed(),
             retrieval,
@@ -494,9 +539,9 @@ impl ScenarioEngine {
         &self,
         key: RequestKey,
         user: usize,
-        candidates: &[u32],
+        candidates: &Arc<Vec<u32>>,
         deadline: Option<Instant>,
-    ) -> Result<(Vec<f32>, CoalesceAgg)> {
+    ) -> Result<(MergedScores, CoalesceAgg)> {
         let core = &self.core;
         let v = &self.variant;
 
@@ -580,49 +625,47 @@ impl ScenarioEngine {
         };
 
         // -- per-mini-batch fan-out -----------------------------------------
-        let batches = batcher::split(candidates, core.batch);
-        let n_batches = batches.len();
+        // The request-level context is built ONCE and shared by `Arc`:
+        // each task captures three `Arc`s and two offsets — no per-batch
+        // tensor-handle clones, no per-batch candidate copies.
+        let ctx = Arc::new(BatchCtx {
+            profile: profile_t,
+            seq_short: seq_short_t,
+            u_vec: u_vec_t,
+            bea_v: bea_v_t,
+            seq_emb: seq_emb_t,
+            din_base: din_base_t,
+            din_g: din_g_t,
+            seq_sign_packed,
+            seq_len,
+            seq_mm: seq_mm_t,
+            deadline,
+        });
+        let n = candidates.len();
+        let n_batches = n.div_ceil(core.batch);
         let (tx, rx) = channel::<(usize, Result<BatchOutcome>)>();
-        for mb in &batches {
-            let items: Vec<u32> = mb.items.to_vec();
-            let index = mb.index;
+        for index in 0..n_batches {
+            let start = index * core.batch;
+            let len = (n - start).min(core.batch);
             let tx = tx.clone();
-            let this = self.clone_shared();
+            let scorer = Arc::clone(&self.scorer);
             let snapshot = snapshot.clone();
-            let profile_t = profile_t.clone();
-            let seq_short_t = seq_short_t.clone();
-            let u_vec_t = u_vec_t.clone();
-            let bea_v_t = bea_v_t.clone();
-            let seq_emb_t = seq_emb_t.clone();
-            let din_base_t = din_base_t.clone();
-            let din_g_t = din_g_t.clone();
-            let seq_sign_packed = seq_sign_packed.clone();
-            let seq_mm_t = seq_mm_t.clone();
+            let ctx = Arc::clone(&ctx);
+            let cands = Arc::clone(candidates);
             core.score_pool.spawn(move || {
-                let result = this.score_batch(
+                let result = scorer.score_batch(
                     user,
-                    &items,
+                    &cands[start..start + len],
                     snapshot.as_deref(),
-                    BatchCtx {
-                        profile: profile_t,
-                        seq_short: seq_short_t,
-                        u_vec: u_vec_t,
-                        bea_v: bea_v_t,
-                        seq_emb: seq_emb_t,
-                        din_base: din_base_t,
-                        din_g: din_g_t,
-                        seq_sign_packed,
-                        seq_len,
-                        seq_mm: seq_mm_t,
-                        deadline,
-                    },
+                    &ctx,
                 );
                 let _ = tx.send((index, result));
             });
         }
         drop(tx);
 
-        let mut per_batch: Vec<Option<Vec<f32>>> = vec![None; n_batches];
+        let mut per_batch: Vec<Option<BatchScores>> =
+            (0..n_batches).map(|_| None).collect();
         let mut agg = CoalesceAgg::default();
         for _ in 0..n_batches {
             let (idx, result) = rx
@@ -635,33 +678,28 @@ impl ScenarioEngine {
             }
             per_batch[idx] = Some(outcome.scores);
         }
-        let per_batch: Vec<Vec<f32>> =
+        let per_batch: Vec<BatchScores> =
             per_batch.into_iter().map(|b| b.unwrap()).collect();
-        Ok((
-            batcher::merge_scores(candidates.len(), core.batch, &per_batch),
-            agg,
-        ))
-    }
-
-    /// Clone the shared handles needed inside batch tasks.
-    fn clone_shared(&self) -> BatchScorer {
-        let core = &self.core;
-        BatchScorer {
-            variant: self.variant.clone(),
-            world: Arc::clone(&core.world),
-            store: Arc::clone(&core.store),
-            rtp: Arc::clone(&core.rtp),
-            sim_cache: Arc::clone(&core.sim_cache),
-            metrics: Arc::clone(&self.metrics),
-            sim_mode: self.cfg.sim_mode,
-            sim_budget: self.cfg.sim_budget,
-            sim_parse_us: core.cfg.sim_parse_us,
-            batch: core.batch,
-            n_tiers: core.manifest.dim("N_TIERS"),
-            head_artifact: self.head_artifact.clone(),
-            coalescer: self.coalescer.clone(),
-            mu_artifact: self.mu_artifact.clone(),
-        }
+        // Zero-copy path: merge into an arena buffer (returned when the
+        // response's top-K has been cut); legacy path keeps the owned vec.
+        let merged = match core.zero_copy_arena() {
+            Some(arena) => {
+                let mut buf = arena.get(candidates.len());
+                batcher::merge_scores_into(
+                    candidates.len(),
+                    core.batch,
+                    &per_batch,
+                    &mut buf,
+                );
+                MergedScores::Pooled(buf)
+            }
+            None => MergedScores::Owned(batcher::merge_scores(
+                candidates.len(),
+                core.batch,
+                &per_batch,
+            )),
+        };
+        Ok((merged, agg))
     }
 }
 
@@ -897,9 +935,42 @@ pub struct CoalesceAgg {
     pub max_queue_wait: Duration,
 }
 
+/// One mini-batch's scores: the direct RTP output tensor (zero-copy — no
+/// `to_vec` of the padded scores) or an owned vector (coalesced replies /
+/// the legacy owned path).
+enum BatchScores {
+    Tensor(Tensor),
+    Owned(Vec<f32>),
+}
+
+impl AsRef<[f32]> for BatchScores {
+    fn as_ref(&self) -> &[f32] {
+        match self {
+            BatchScores::Tensor(t) => t.data(),
+            BatchScores::Owned(v) => v,
+        }
+    }
+}
+
+/// The request's merged score vector; arena-backed on the zero-copy path
+/// (returned to the pool right after the top-K cut).
+enum MergedScores {
+    Owned(Vec<f32>),
+    Pooled(PooledBuf),
+}
+
+impl MergedScores {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            MergedScores::Owned(v) => v,
+            MergedScores::Pooled(b) => b,
+        }
+    }
+}
+
 /// One mini-batch's scores plus how its execution was dispatched.
 struct BatchOutcome {
-    scores: Vec<f32>,
+    scores: BatchScores,
     /// Some(wait) when the batch went through the coalescer.
     queue_wait: Option<Duration>,
 }
@@ -936,6 +1007,9 @@ struct BatchScorer {
     head_artifact: String,
     coalescer: Option<Arc<BatchCoalescer>>,
     mu_artifact: Option<String>,
+    /// Arena for mini-batch tensor assembly (`None` = the owned legacy
+    /// path, kept for the hotpath bench's before/after comparison).
+    arena: Option<Arc<ArenaPool>>,
 }
 
 impl BatchScorer {
@@ -944,7 +1018,7 @@ impl BatchScorer {
         user: usize,
         items: &[u32],
         snapshot: Option<&N2oSnapshot>,
-        ctx: BatchCtx,
+        ctx: &BatchCtx,
     ) -> Result<BatchOutcome> {
         let v = &self.variant;
         let mut inputs: Vec<Tensor> = Vec::with_capacity(8);
@@ -968,16 +1042,19 @@ impl BatchScorer {
         let mut sign_nearline = None;
         if v.item == "nearline" {
             let snap = snapshot.expect("nearline snapshot");
+            // One columnar gather straight out of the pinned generation's
+            // flat chunks — pooled buffers on the zero-copy path.
             let (vec_t, w_t, s_t) = snap
-                .assemble(items, self.batch)
+                .assemble_opt(items, self.batch, self.arena.as_ref())
                 .ok_or_else(|| anyhow::anyhow!("N2O rows missing"))?;
             inputs.push(vec_t);
             bea_w_nearline = Some(w_t);
             sign_nearline = Some(s_t);
         } else {
-            inputs.push(assembly::item_raw_batch(
+            inputs.push(assembly::item_raw_batch_opt(
                 feats.as_ref().unwrap(),
                 self.batch,
+                self.arena.as_ref(),
             ));
         }
 
@@ -999,31 +1076,49 @@ impl BatchScorer {
             let n_bits = self.world.w_hash.shape()[0];
             let item_sign = match &sign_nearline {
                 Some(s) => s.clone(),
-                None => lsh::unpack_plane(&item_packed, self.batch, n_bits),
+                None => Tensor::build_with(
+                    self.arena.as_ref(),
+                    vec![self.batch, n_bits],
+                    |buf| {
+                        lsh::unpack_plane_into(
+                            &item_packed,
+                            self.batch,
+                            n_bits,
+                            buf,
+                        )
+                    },
+                ),
             };
             inputs.push(ctx.din_base.clone().expect("din_base"));
             inputs.push(ctx.din_g.clone().expect("din_g"));
             inputs.push(item_sign);
             let seq_packed =
                 ctx.seq_sign_packed.as_ref().expect("seq packed");
-            let hist = lsh::tier_histogram(
-                &item_packed,
-                self.batch,
-                seq_packed,
-                ctx.seq_len,
-                n_bits,
-                self.n_tiers,
-            );
-            inputs.push(Tensor::new(vec![self.batch, self.n_tiers], hist));
+            inputs.push(Tensor::build_with(
+                self.arena.as_ref(),
+                vec![self.batch, self.n_tiers],
+                |buf| {
+                    lsh::tier_histogram_into(
+                        &item_packed,
+                        self.batch,
+                        seq_packed,
+                        ctx.seq_len,
+                        n_bits,
+                        self.n_tiers,
+                        buf,
+                    )
+                },
+            ));
         } else if v.has_long() {
             inputs.push(ctx.seq_emb.clone().expect("seq_emb"));
             if v.needs_lsh() {
                 unreachable!("mixed lsh variants are not served");
             }
             if v.needs_mm() {
-                inputs.push(assembly::item_mm_batch(
+                inputs.push(assembly::item_mm_batch_opt(
                     feats.as_ref().unwrap(),
                     self.batch,
+                    self.arena.as_ref(),
                 ));
                 inputs.push(ctx.seq_mm.clone().expect("seq_mm"));
             }
@@ -1041,26 +1136,27 @@ impl BatchScorer {
             let (mode, budget, parse_us) =
                 (self.sim_mode, self.sim_budget, self.sim_parse_us);
             let bkey = sim_budget_key(budget);
-            let t = assembly::sim_cross_batch(
+            let subseq_of = |cat| match mode {
+                SimMode::Off => Vec::new(),
+                SimMode::Sync => store.fetch_sim_subsequence(
+                    user, cat, budget, parse_us,
+                ),
+                SimMode::Precached => sim_cache
+                    .get_or_insert_with((bkey, user as u32, cat), || {
+                        Arc::new(store.fetch_sim_subsequence(
+                            user, cat, budget, parse_us,
+                        ))
+                    })
+                    .as_ref()
+                    .clone(),
+            };
+            inputs.push(assembly::sim_cross_batch_opt(
                 world,
                 &cats,
                 self.batch,
-                |cat| match mode {
-                    SimMode::Off => Vec::new(),
-                    SimMode::Sync => store.fetch_sim_subsequence(
-                        user, cat, budget, parse_us,
-                    ),
-                    SimMode::Precached => sim_cache
-                        .get_or_insert_with((bkey, user as u32, cat), || {
-                            Arc::new(store.fetch_sim_subsequence(
-                                user, cat, budget, parse_us,
-                            ))
-                        })
-                        .as_ref()
-                        .clone(),
-                },
-            );
-            inputs.push(t);
+                subseq_of,
+                self.arena.as_ref(),
+            ));
         }
 
         // Dispatch: through the cross-request coalescer when enabled, as
@@ -1083,15 +1179,21 @@ impl BatchScorer {
                 .recv()
                 .map_err(|_| anyhow::anyhow!("coalescer dropped the reply"))??;
             return Ok(BatchOutcome {
-                scores: js.scores,
+                scores: BatchScores::Owned(js.scores),
                 queue_wait: Some(js.queue_wait),
             });
         }
 
         let scores = self.rtp.call1(&self.head_artifact, inputs)?;
         self.metrics.rtp_calls.fetch_add(1, Ordering::Relaxed);
+        // Zero-copy: keep the output tensor and merge straight from it;
+        // the legacy path copies out (the allocation the bench counts).
+        let scores = match &self.arena {
+            Some(_) => BatchScores::Tensor(scores),
+            None => BatchScores::Owned(scores.data().to_vec()),
+        };
         Ok(BatchOutcome {
-            scores: scores.data().to_vec(),
+            scores,
             queue_wait: None,
         })
     }

@@ -413,6 +413,12 @@ pub trait ScenarioAdmin: Send + Sync {
     fn routing_errors(&self) -> u64 {
         0
     }
+
+    /// Shared arena-pool counters for the `/metrics` `arena` block
+    /// (`None` when the service has no pool to report).
+    fn arena_stats(&self) -> Option<Value> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -2,65 +2,171 @@
 //! input tensors the HLO heads consume.  This is the "constructs model
 //! input tensors by indexing the model embedding matrices" step of the
 //! paper's feature-fetching phase, kept in rust on the request path.
+//!
+//! Every gather exists in two flavors sharing ONE fill routine: the owned
+//! form (`item_raw_batch`, …) allocating a fresh `Vec`, and the
+//! arena-backed `_in` form writing into an [`ArenaPool`] buffer
+//! (`Tensor::from_pooled`) so the hot loop allocates nothing.  Sharing the
+//! fill makes the two bitwise-identical by construction (property-tested
+//! in `rust/tests/prop_invariants.rs`).
+
+use std::sync::Arc;
 
 use super::store::{ItemFeatures, UserFeatures};
 use super::world::World;
+use crate::cache::ArenaPool;
 use crate::runtime::Tensor;
 
 /// Gather seq-embedding rows for a sequence of item ids -> [len, D_SEQ_RAW].
 pub fn gather_seq_emb(world: &World, seq: &[u32]) -> Tensor {
+    gather_seq_emb_opt(world, seq, None)
+}
+
+/// Arena-backed [`gather_seq_emb`].
+pub fn gather_seq_emb_in(
+    world: &World,
+    seq: &[u32],
+    arena: &Arc<ArenaPool>,
+) -> Tensor {
+    gather_seq_emb_opt(world, seq, Some(arena))
+}
+
+/// The pooled-vs-owned dispatch behind [`gather_seq_emb`] /
+/// [`gather_seq_emb_in`] — call sites holding an `Option` use this.
+pub fn gather_seq_emb_opt(
+    world: &World,
+    seq: &[u32],
+    arena: Option<&Arc<ArenaPool>>,
+) -> Tensor {
     let d = world.items_seq_emb.shape()[1];
-    let mut data = Vec::with_capacity(seq.len() * d);
-    for &i in seq {
-        data.extend_from_slice(world.items_seq_emb.f32_row(i as usize));
-    }
-    Tensor::new(vec![seq.len(), d], data)
+    Tensor::build_with(arena, vec![seq.len(), d], |out| {
+        for &i in seq {
+            out.extend_from_slice(world.items_seq_emb.f32_row(i as usize));
+        }
+    })
 }
 
 /// Gather multi-modal rows -> [len, D_MM].
 pub fn gather_mm(world: &World, seq: &[u32]) -> Tensor {
+    gather_mm_opt(world, seq, None)
+}
+
+/// Arena-backed [`gather_mm`].
+pub fn gather_mm_in(
+    world: &World,
+    seq: &[u32],
+    arena: &Arc<ArenaPool>,
+) -> Tensor {
+    gather_mm_opt(world, seq, Some(arena))
+}
+
+/// The pooled-vs-owned dispatch behind [`gather_mm`] / [`gather_mm_in`].
+pub fn gather_mm_opt(
+    world: &World,
+    seq: &[u32],
+    arena: Option<&Arc<ArenaPool>>,
+) -> Tensor {
     let d = world.items_mm.shape()[1];
-    let mut data = Vec::with_capacity(seq.len() * d);
-    for &i in seq {
-        data.extend_from_slice(world.items_mm.f32_row(i as usize));
-    }
-    Tensor::new(vec![seq.len(), d], data)
+    Tensor::build_with(arena, vec![seq.len(), d], |out| {
+        for &i in seq {
+            out.extend_from_slice(world.items_mm.f32_row(i as usize));
+        }
+    })
 }
 
 /// User tower inputs: (profile [1,P], seq_short [Ls,Ds], seq_long_raw [L,Ds]).
 pub fn user_tower_inputs(world: &World, uf: &UserFeatures) -> Vec<Tensor> {
-    let profile = Tensor::new(vec![1, uf.profile.len()], uf.profile.clone());
-    let seq_short = gather_seq_emb(world, &uf.short_seq);
-    let seq_long = gather_seq_emb(world, &uf.long_seq);
-    vec![profile, seq_short, seq_long]
+    user_tower_inputs_opt(world, uf, None)
+}
+
+/// The pooled-vs-owned dispatch behind [`user_tower_inputs`] (the async
+/// hot path passes its arena; the profile vector stays owned — it is
+/// tiny and already cloned off the fetch).
+pub fn user_tower_inputs_opt(
+    world: &World,
+    uf: &UserFeatures,
+    arena: Option<&Arc<ArenaPool>>,
+) -> Vec<Tensor> {
+    vec![
+        Tensor::new(vec![1, uf.profile.len()], uf.profile.clone()),
+        gather_seq_emb_opt(world, &uf.short_seq, arena),
+        gather_seq_emb_opt(world, &uf.long_seq, arena),
+    ]
+}
+
+fn raw_col(f: &ItemFeatures) -> &[f32] {
+    &f.raw
+}
+
+fn mm_col(f: &ItemFeatures) -> &[f32] {
+    &f.mm
 }
 
 /// Item-raw matrix for a mini-batch (padded to `batch` rows by repeating
 /// the last item — scores for padding rows are discarded downstream).
 pub fn item_raw_batch(feats: &[ItemFeatures], batch: usize) -> Tensor {
-    assert!(!feats.is_empty() && feats.len() <= batch);
-    let d = feats[0].raw.len();
-    let mut data = Vec::with_capacity(batch * d);
-    for f in feats {
-        data.extend_from_slice(&f.raw);
-    }
-    for _ in feats.len()..batch {
-        data.extend_from_slice(&feats[feats.len() - 1].raw);
-    }
-    Tensor::new(vec![batch, d], data)
+    item_batch_opt(feats, batch, raw_col, None)
+}
+
+/// Arena-backed [`item_raw_batch`].
+pub fn item_raw_batch_in(
+    feats: &[ItemFeatures],
+    batch: usize,
+    arena: &Arc<ArenaPool>,
+) -> Tensor {
+    item_batch_opt(feats, batch, raw_col, Some(arena))
+}
+
+/// The pooled-vs-owned dispatch behind [`item_raw_batch`] /
+/// [`item_raw_batch_in`].
+pub fn item_raw_batch_opt(
+    feats: &[ItemFeatures],
+    batch: usize,
+    arena: Option<&Arc<ArenaPool>>,
+) -> Tensor {
+    item_batch_opt(feats, batch, raw_col, arena)
 }
 
 /// Item multi-modal matrix for a mini-batch, padded like `item_raw_batch`.
 pub fn item_mm_batch(feats: &[ItemFeatures], batch: usize) -> Tensor {
-    let d = feats[0].mm.len();
-    let mut data = Vec::with_capacity(batch * d);
-    for f in feats {
-        data.extend_from_slice(&f.mm);
-    }
-    for _ in feats.len()..batch {
-        data.extend_from_slice(&feats[feats.len() - 1].mm);
-    }
-    Tensor::new(vec![batch, d], data)
+    item_batch_opt(feats, batch, mm_col, None)
+}
+
+/// Arena-backed [`item_mm_batch`].
+pub fn item_mm_batch_in(
+    feats: &[ItemFeatures],
+    batch: usize,
+    arena: &Arc<ArenaPool>,
+) -> Tensor {
+    item_batch_opt(feats, batch, mm_col, Some(arena))
+}
+
+/// The pooled-vs-owned dispatch behind [`item_mm_batch`] /
+/// [`item_mm_batch_in`].
+pub fn item_mm_batch_opt(
+    feats: &[ItemFeatures],
+    batch: usize,
+    arena: Option<&Arc<ArenaPool>>,
+) -> Tensor {
+    item_batch_opt(feats, batch, mm_col, arena)
+}
+
+fn item_batch_opt(
+    feats: &[ItemFeatures],
+    batch: usize,
+    col: fn(&ItemFeatures) -> &[f32],
+    arena: Option<&Arc<ArenaPool>>,
+) -> Tensor {
+    assert!(!feats.is_empty() && feats.len() <= batch);
+    let d = col(&feats[0]).len();
+    Tensor::build_with(arena, vec![batch, d], |out| {
+        for f in feats {
+            out.extend_from_slice(col(f));
+        }
+        for _ in feats.len()..batch {
+            out.extend_from_slice(col(&feats[feats.len() - 1]));
+        }
+    })
 }
 
 /// SIM cross feature: per candidate, mean seq-embedding of the user's
@@ -70,47 +176,72 @@ pub fn sim_cross_batch(
     world: &World,
     cats: &[u32],
     batch: usize,
+    subseq_of: impl FnMut(u32) -> Vec<u32>,
+) -> Tensor {
+    sim_cross_batch_opt(world, cats, batch, subseq_of, None)
+}
+
+/// Arena-backed [`sim_cross_batch`].
+pub fn sim_cross_batch_in(
+    world: &World,
+    cats: &[u32],
+    batch: usize,
+    subseq_of: impl FnMut(u32) -> Vec<u32>,
+    arena: &Arc<ArenaPool>,
+) -> Tensor {
+    sim_cross_batch_opt(world, cats, batch, subseq_of, Some(arena))
+}
+
+/// The pooled-vs-owned dispatch behind [`sim_cross_batch`] /
+/// [`sim_cross_batch_in`].
+pub fn sim_cross_batch_opt(
+    world: &World,
+    cats: &[u32],
+    batch: usize,
     mut subseq_of: impl FnMut(u32) -> Vec<u32>,
+    arena: Option<&Arc<ArenaPool>>,
 ) -> Tensor {
     let d = world.items_seq_emb.shape()[1];
-    let mut out = vec![0.0f32; batch * d];
-    // Group candidates by category so each subsequence pools once.
-    let mut by_cat: std::collections::HashMap<u32, Vec<usize>> =
-        std::collections::HashMap::new();
-    for (i, &c) in cats.iter().enumerate() {
-        by_cat.entry(c).or_default().push(i);
-    }
-    for (cat, rows) in by_cat {
-        let sub = subseq_of(cat);
-        if sub.is_empty() {
-            continue;
+    Tensor::build_with(arena, vec![batch, d], |out| {
+        out.resize(batch * d, 0.0);
+        // Group candidates by category so each subsequence pools once.
+        let mut by_cat: std::collections::HashMap<u32, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, &c) in cats.iter().enumerate() {
+            by_cat.entry(c).or_default().push(i);
         }
         let mut pooled = vec![0.0f32; d];
-        for &item in &sub {
-            for (p, v) in pooled
-                .iter_mut()
-                .zip(world.items_seq_emb.f32_row(item as usize))
-            {
-                *p += v;
+        for (cat, rows) in by_cat {
+            let sub = subseq_of(cat);
+            if sub.is_empty() {
+                continue;
+            }
+            pooled.iter_mut().for_each(|p| *p = 0.0);
+            for &item in &sub {
+                for (p, v) in pooled
+                    .iter_mut()
+                    .zip(world.items_seq_emb.f32_row(item as usize))
+                {
+                    *p += v;
+                }
+            }
+            let inv = 1.0 / sub.len() as f32;
+            for p in pooled.iter_mut() {
+                *p *= inv;
+            }
+            for &r in &rows {
+                out[r * d..(r + 1) * d].copy_from_slice(&pooled);
             }
         }
-        let inv = 1.0 / sub.len() as f32;
-        for p in pooled.iter_mut() {
-            *p *= inv;
+        // Padding rows repeat the last real row (in-buffer copy; the last
+        // real row never overlaps a padding row).
+        if cats.len() < batch && !cats.is_empty() {
+            let last = (cats.len() - 1) * d;
+            for r in cats.len()..batch {
+                out.copy_within(last..last + d, r * d);
+            }
         }
-        for &r in &rows {
-            out[r * d..(r + 1) * d].copy_from_slice(&pooled);
-        }
-    }
-    // Padding rows repeat the last real row.
-    if cats.len() < batch && !cats.is_empty() {
-        let last = (cats.len() - 1) * d;
-        let last_row = out[last..last + d].to_vec();
-        for r in cats.len()..batch {
-            out[r * d..(r + 1) * d].copy_from_slice(&last_row);
-        }
-    }
-    Tensor::new(vec![batch, d], out)
+    })
 }
 
 #[cfg(test)]
@@ -143,5 +274,20 @@ mod tests {
         let t = item_mm_batch(&items(4, 6), 4);
         assert_eq!(t.shape, vec![4, 6]);
         assert_eq!(t.row(0)[0], 0.5);
+    }
+
+    #[test]
+    fn pooled_item_batches_match_owned_bitwise() {
+        let arena = ArenaPool::new(8);
+        let feats = items(3, 4);
+        let owned = item_raw_batch(&feats, 5);
+        let pooled = item_raw_batch_in(&feats, 5, &arena);
+        assert!(pooled.is_pooled());
+        assert_eq!(owned, pooled);
+        let owned = item_mm_batch(&feats, 5);
+        let pooled = item_mm_batch_in(&feats, 5, &arena);
+        assert_eq!(owned, pooled);
+        drop(pooled);
+        assert_eq!(arena.outstanding(), 0, "pooled batches returned");
     }
 }

@@ -14,6 +14,14 @@ use std::sync::Mutex;
 use super::latency::LatencyModel;
 use super::world::World;
 use crate::util::rng::Pcg64;
+use crate::util::tls;
+
+/// Independent latency-model RNG streams.  Concurrent batched fetches
+/// used to serialize on ONE `Mutex<Pcg64>`; each thread now charges
+/// against its home stream (by `util::tls::thread_tag`), so the lock is
+/// effectively uncontended.  Streams stay deterministic: shard `s` is
+/// always `Pcg64::with_stream(seed, 2 + s)`.
+const RNG_SHARDS: usize = 8;
 
 /// Fetched user features (owned copies — the remote returns bytes).
 #[derive(Debug, Clone)]
@@ -37,9 +45,9 @@ pub struct FeatureStore {
     world: Arc<World>,
     user_latency: LatencyModel,
     item_latency: LatencyModel,
-    /// Per-thread-ish RNG behind a mutex: contention here is negligible
-    /// compared to the modeled latencies.
-    rng: Mutex<Pcg64>,
+    /// Per-shard RNG streams for the latency model (threads pick their
+    /// home shard; see [`RNG_SHARDS`]).
+    rngs: Vec<Mutex<Pcg64>>,
     pub user_fetches: AtomicU64,
     pub item_fetches: AtomicU64,
     pub bytes_served: AtomicU64,
@@ -55,7 +63,11 @@ impl FeatureStore {
             world,
             user_latency,
             item_latency,
-            rng: Mutex::new(Pcg64::with_stream(0xFEED, 2)),
+            rngs: (0..RNG_SHARDS)
+                .map(|s| {
+                    Mutex::new(Pcg64::with_stream(0xFEED, 2 + s as u64))
+                })
+                .collect(),
             user_fetches: AtomicU64::new(0),
             item_fetches: AtomicU64::new(0),
             bytes_served: AtomicU64::new(0),
@@ -68,7 +80,8 @@ impl FeatureStore {
 
     fn charge(&self, model: &LatencyModel, bytes: usize) {
         let d = {
-            let mut rng = self.rng.lock().unwrap();
+            let mut rng =
+                self.rngs[tls::thread_shard(RNG_SHARDS)].lock().unwrap();
             model.sample(bytes, &mut rng)
         };
         super::latency::spin_wait(d);

@@ -56,16 +56,29 @@ impl Hasher {
 
 /// Unpack a set of packed signatures into a ±1 plane tensor [n, n_bits].
 pub fn unpack_plane(packed: &[u8], n: usize, n_bits: usize) -> Tensor {
+    let mut data = Vec::new();
+    unpack_plane_into(packed, n, n_bits, &mut data);
+    Tensor::new(vec![n, n_bits], data)
+}
+
+/// [`unpack_plane`] into a caller-provided buffer (cleared first) — the
+/// arena-backed assembly path writes straight into pooled storage.
+pub fn unpack_plane_into(
+    packed: &[u8],
+    n: usize,
+    n_bits: usize,
+    out: &mut Vec<f32>,
+) {
     let pl = n_bits.div_ceil(8);
-    let mut data = vec![0.0f32; n * n_bits];
+    out.clear();
+    out.resize(n * n_bits, 0.0);
     for i in 0..n {
         bits::unpack_to_pm1(
             &packed[i * pl..(i + 1) * pl],
             n_bits,
-            &mut data[i * n_bits..(i + 1) * n_bits],
+            &mut out[i * n_bits..(i + 1) * n_bits],
         );
     }
-    Tensor::new(vec![n, n_bits], data)
 }
 
 /// Rust-side reference similarity between two packed signature matrices —
@@ -164,8 +177,34 @@ pub fn tier_histogram(
     n_bits: usize,
     n_tiers: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    tier_histogram_into(
+        item_packed,
+        n_items,
+        seq_packed,
+        n_seq,
+        n_bits,
+        n_tiers,
+        &mut out,
+    );
+    out
+}
+
+/// [`tier_histogram`] into a caller-provided buffer (cleared first) — the
+/// arena-backed assembly path writes straight into pooled storage.
+#[allow(clippy::too_many_arguments)]
+pub fn tier_histogram_into(
+    item_packed: &[u8],
+    n_items: usize,
+    seq_packed: &[u8],
+    n_seq: usize,
+    n_bits: usize,
+    n_tiers: usize,
+    out: &mut Vec<f32>,
+) {
     let pl = n_bits.div_ceil(8);
-    let mut out = vec![0.0f32; n_items * n_tiers];
+    out.clear();
+    out.resize(n_items * n_tiers, 0.0);
     let inv = 1.0 / n_seq as f32;
     // Tier lookup table over match counts (the paper's 1x256-style LUT,
     // sized n_bits+1 here).
@@ -197,7 +236,7 @@ pub fn tier_histogram(
                 *o = *c as f32 * inv;
             }
         }
-        return out;
+        return;
     }
     for i in 0..n_items {
         let ri = &item_packed[i * pl..(i + 1) * pl];
@@ -213,5 +252,4 @@ pub fn tier_histogram(
             *o = *c as f32 * inv;
         }
     }
-    out
 }

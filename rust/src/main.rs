@@ -63,7 +63,8 @@ fn usage() {
          scenarios: [--scenarios NAME=VARIANT[:SIM_MODE],...] \
          [--scenario DEFAULT_NAME]\n\
          coalescing: [--coalesce true] [--coalesce-window-us US] \
-         [--max-coalesced-batch ROWS] [--bypass-margin-ms MS]"
+         [--max-coalesced-batch ROWS] [--bypass-margin-ms MS]\n\
+         hot path: [--zero-copy false] (owned-allocation baseline)"
     );
 }
 
@@ -92,6 +93,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         n_http_workers: args.usize_or("http-workers", cfg.n_http_workers),
         n_candidates: args.usize_or("candidates", cfg.n_candidates),
         top_k: args.usize_or("top-k", cfg.top_k),
+        zero_copy: args.bool_or("zero-copy", cfg.zero_copy),
         coalesce,
         ..cfg
     };

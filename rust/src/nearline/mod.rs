@@ -6,6 +6,6 @@ pub mod n2o;
 pub mod queue;
 pub mod worker;
 
-pub use n2o::{N2oEntry, N2oSnapshot, N2oTable};
+pub use n2o::{N2oEntry, N2oRow, N2oSnapshot, N2oTable};
 pub use queue::{UpdateEvent, UpdateQueue};
 pub use worker::NearlineWorker;

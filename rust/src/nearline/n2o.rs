@@ -3,18 +3,34 @@
 //! Holds, per item: the compressed item vector (Eq.4), the BEA item-side
 //! attention weights (Alg.1 step 3) and the packed LSH signature (Eq.5).
 //! Supports **full** rebuilds (model update -> new generation, atomic swap)
-//! and **incremental** updates (item feature changes / new items -> in-place
-//! row upserts), mirroring the paper's "index table for N2O that supports
+//! and **incremental** updates (item feature changes / new items -> row
+//! upserts), mirroring the paper's "index table for N2O that supports
 //! both full and incremental updates ... updated synchronously whenever the
 //! original item feature index table undergoes full or incremental updates".
+//!
+//! Storage is **columnar** (DESIGN.md §14): one generation holds
+//! contiguous `item_vec` / `bea_w` / `sign_packed` matrices indexed by
+//! item id, split into fixed-size column chunks, each behind its own
+//! `Arc`.  Candidate gathers are `copy_from_slice` out of flat memory —
+//! no per-row `Vec`s exist anywhere — and an incremental upsert
+//! copy-on-writes only the touched chunks: untouched chunks are shared by
+//! pointer between the old and new generation.  A request pins one
+//! [`N2oSnapshot`] (one lock acquisition, counted) and gathers all its
+//! mini-batches from that immutable view.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::lsh;
+use crate::cache::ArenaPool;
 use crate::runtime::Tensor;
+use crate::util::bits;
 
-/// One item's nearline-computed row.
+/// Items per column chunk (the copy-on-write granularity of `upsert`).
+const N2O_CHUNK: usize = 512;
+
+/// One item's nearline-computed row — the upsert/rebuild currency.  The
+/// table stores rows columnar; this owned form only exists at the
+/// nearline-worker boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct N2oEntry {
     pub item_vec: Vec<f32>,
@@ -28,11 +44,69 @@ impl N2oEntry {
     }
 }
 
-/// One immutable generation of the table.
+/// Borrowed view of one item's row inside a generation's column chunks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct N2oRow<'a> {
+    pub item_vec: &'a [f32],
+    pub bea_w: &'a [f32],
+    pub sign_packed: &'a [u8],
+}
+
+impl N2oRow<'_> {
+    /// Owned copy (tests / debugging; the serving path never needs one).
+    pub fn to_entry(&self) -> N2oEntry {
+        N2oEntry {
+            item_vec: self.item_vec.to_vec(),
+            bea_w: self.bea_w.to_vec(),
+            sign_packed: self.sign_packed.to_vec(),
+        }
+    }
+}
+
+/// One columnar chunk of up to [`N2O_CHUNK`] items.
+#[derive(Debug, Clone)]
+struct Chunk {
+    item_vec: Vec<f32>,   // [N2O_CHUNK, d] row-major
+    bea_w: Vec<f32>,      // [N2O_CHUNK, n_bridge]
+    sign_packed: Vec<u8>, // [N2O_CHUNK, pl]
+    present: Vec<bool>,   // [N2O_CHUNK]
+}
+
+impl Chunk {
+    fn empty(d: usize, n_bridge: usize, pl: usize) -> Chunk {
+        Chunk {
+            item_vec: vec![0.0; N2O_CHUNK * d],
+            bea_w: vec![0.0; N2O_CHUNK * n_bridge],
+            sign_packed: vec![0; N2O_CHUNK * pl],
+            present: vec![false; N2O_CHUNK],
+        }
+    }
+
+    fn write(
+        &mut self,
+        off: usize,
+        e: &N2oEntry,
+        d: usize,
+        n_bridge: usize,
+        pl: usize,
+    ) {
+        assert_eq!(e.item_vec.len(), d, "item_vec width mismatch");
+        assert_eq!(e.bea_w.len(), n_bridge, "bea_w width mismatch");
+        assert_eq!(e.sign_packed.len(), pl, "sign_packed width mismatch");
+        self.item_vec[off * d..(off + 1) * d].copy_from_slice(&e.item_vec);
+        self.bea_w[off * n_bridge..(off + 1) * n_bridge]
+            .copy_from_slice(&e.bea_w);
+        self.sign_packed[off * pl..(off + 1) * pl]
+            .copy_from_slice(&e.sign_packed);
+        self.present[off] = true;
+    }
+}
+
+/// One immutable generation: chunked columnar matrices.
 #[derive(Debug)]
 struct Generation {
-    /// Dense by item id; None = not yet computed for this generation.
-    entries: Vec<Option<N2oEntry>>,
+    chunks: Vec<Arc<Chunk>>,
+    n_items: usize,
     version: u64,
 }
 
@@ -44,13 +118,23 @@ pub struct N2oTable {
     pub n_bits: usize,
     pub reads: AtomicU64,
     pub stale_reads: AtomicU64,
+    /// Every acquisition of the generation lock (read or write).  The
+    /// zero-copy contract is ONE per served request — the snapshot pin —
+    /// asserted by the hot-path stress test.
+    pub lock_acquisitions: AtomicU64,
 }
 
 impl N2oTable {
     pub fn new(n_items: usize, d: usize, n_bridge: usize, n_bits: usize) -> Self {
+        let pl = n_bits.div_ceil(8);
+        let n_chunks = n_items.div_ceil(N2O_CHUNK).max(1);
+        let empty = Arc::new(Chunk::empty(d, n_bridge, pl));
         N2oTable {
             inner: RwLock::new(Arc::new(Generation {
-                entries: vec![None; n_items],
+                // All-absent chunks share ONE zeroed allocation until a
+                // write materializes them.
+                chunks: vec![empty; n_chunks],
+                n_items,
                 version: 0,
             })),
             d,
@@ -58,55 +142,119 @@ impl N2oTable {
             n_bits,
             reads: AtomicU64::new(0),
             stale_reads: AtomicU64::new(0),
+            lock_acquisitions: AtomicU64::new(0),
         }
     }
 
+    fn packed_len(&self) -> usize {
+        self.n_bits.div_ceil(8)
+    }
+
+    /// Pin the current generation (counted lock acquisition).
+    fn read_gen(&self) -> Arc<Generation> {
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        Arc::clone(&self.inner.read().unwrap())
+    }
+
     pub fn version(&self) -> u64 {
-        self.inner.read().unwrap().version
+        self.read_gen().version
     }
 
     pub fn n_items(&self) -> usize {
-        self.inner.read().unwrap().entries.len()
+        self.read_gen().n_items
     }
 
     /// Atomic full swap to a new generation (model update trigger).
     pub fn swap_full(&self, entries: Vec<Option<N2oEntry>>, version: u64) {
+        let (d, n_bridge, pl) = (self.d, self.n_bridge, self.packed_len());
+        let n_items = entries.len();
+        let n_chunks = n_items.div_ceil(N2O_CHUNK).max(1);
+        // All-absent ranges share ONE zeroed chunk (like `new`/`upsert`
+        // extension), so a sparse rebuild doesn't resident-allocate a
+        // zero-filled chunk per 512 absent items.
+        let empty = Arc::new(Chunk::empty(d, n_bridge, pl));
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for ci in 0..n_chunks {
+            let base = ci * N2O_CHUNK;
+            let mut chunk: Option<Chunk> = None;
+            for off in 0..N2O_CHUNK.min(n_items - base) {
+                if let Some(e) = &entries[base + off] {
+                    chunk
+                        .get_or_insert_with(|| {
+                            Chunk::empty(d, n_bridge, pl)
+                        })
+                        .write(off, e, d, n_bridge, pl);
+                }
+            }
+            chunks.push(match chunk {
+                Some(c) => Arc::new(c),
+                None => Arc::clone(&empty),
+            });
+        }
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.inner.write().unwrap();
         assert!(
             version > guard.version,
             "full swap must advance the version ({} -> {version})",
             guard.version
         );
-        *guard = Arc::new(Generation { entries, version });
+        *guard = Arc::new(Generation {
+            chunks,
+            n_items,
+            version,
+        });
     }
 
     /// Incremental upsert into the current generation (item feature update
-    /// / new item from the message queue).  Copy-on-write of the generation
-    /// vector: readers holding the old Arc are unaffected.
+    /// / new item from the message queue).  Copy-on-write at chunk
+    /// granularity: only the chunks holding touched rows are cloned; the
+    /// rest are shared by `Arc` with the previous generation, and readers
+    /// holding the old snapshot are unaffected either way.
     pub fn upsert(&self, rows: Vec<(u32, N2oEntry)>) {
         if rows.is_empty() {
             return;
         }
-        let mut guard = self.inner.write().unwrap();
-        let mut entries = guard.entries.clone();
-        let max_id = rows.iter().map(|(i, _)| *i as usize).max().unwrap();
-        if max_id >= entries.len() {
-            entries.resize(max_id + 1, None); // new items extend the table
+        let (d, n_bridge, pl) = (self.d, self.n_bridge, self.packed_len());
+        // Validate BEFORE taking the write lock: a malformed row must
+        // panic the producer, not poison the generation lock and take
+        // every future request on the table down with it (swap_full
+        // likewise runs its width asserts pre-lock, in chunk building).
+        for (id, e) in &rows {
+            assert_eq!(e.item_vec.len(), d, "item {id}: item_vec width");
+            assert_eq!(e.bea_w.len(), n_bridge, "item {id}: bea_w width");
+            assert_eq!(e.sign_packed.len(), pl, "item {id}: sign width");
         }
-        for (id, e) in rows {
-            entries[id as usize] = Some(e);
+        let max_id = rows.iter().map(|(i, _)| *i as usize).max().unwrap();
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.write().unwrap();
+        let mut chunks = guard.chunks.clone(); // Arc pointers only
+        let mut n_items = guard.n_items;
+        if max_id >= n_items {
+            n_items = max_id + 1; // new items extend the table
+            let empty = Arc::new(Chunk::empty(d, n_bridge, pl));
+            while chunks.len() * N2O_CHUNK < n_items {
+                chunks.push(Arc::clone(&empty));
+            }
+        }
+        for (id, e) in &rows {
+            let (ci, off) = (*id as usize / N2O_CHUNK, *id as usize % N2O_CHUNK);
+            // First touch of a shared chunk deep-copies it; further rows
+            // into the same chunk write in place.
+            Arc::make_mut(&mut chunks[ci]).write(off, e, d, n_bridge, pl);
         }
         *guard = Arc::new(Generation {
-            entries,
+            chunks,
+            n_items,
             version: guard.version,
         });
     }
 
     /// Snapshot handle for consistent multi-row reads within one request.
+    /// This is the request's ONE lock acquisition on the table.
     pub fn snapshot(&self) -> N2oSnapshot {
         self.reads.fetch_add(1, Ordering::Relaxed);
         N2oSnapshot {
-            generation: Arc::clone(&self.inner.read().unwrap()),
+            generation: self.read_gen(),
             d: self.d,
             n_bridge: self.n_bridge,
             n_bits: self.n_bits,
@@ -114,21 +262,29 @@ impl N2oTable {
     }
 
     /// Total resident bytes (the §5.3 storage comparison numerator).
+    /// Columnar generations allocate whole chunks, so this counts the
+    /// footprint of each DISTINCT chunk allocation (absent ranges share
+    /// one zeroed chunk by `Arc` — counted once, like the memory is).
     pub fn size_bytes(&self) -> usize {
-        self.inner
-            .read()
-            .unwrap()
-            .entries
+        let g = self.read_gen();
+        let row = self.d * 4 + self.n_bridge * 4 + self.packed_len();
+        let chunk_bytes = N2O_CHUNK * row + N2O_CHUNK; // + present flags
+        let mut seen = std::collections::HashSet::new();
+        g.chunks
             .iter()
-            .flatten()
-            .map(|e| e.size_bytes())
-            .sum()
+            .filter(|c| seen.insert(Arc::as_ptr(c)))
+            .count()
+            * chunk_bytes
     }
 
     pub fn coverage(&self) -> f64 {
-        let g = self.inner.read().unwrap();
-        let have = g.entries.iter().filter(|e| e.is_some()).count();
-        have as f64 / g.entries.len().max(1) as f64
+        let g = self.read_gen();
+        let have: usize = g
+            .chunks
+            .iter()
+            .map(|c| c.present.iter().filter(|&&p| p).count())
+            .sum();
+        have as f64 / g.n_items.max(1) as f64
     }
 }
 
@@ -145,11 +301,69 @@ impl N2oSnapshot {
         self.generation.version
     }
 
-    pub fn get(&self, item: u32) -> Option<&N2oEntry> {
-        self.generation
-            .entries
-            .get(item as usize)
-            .and_then(|e| e.as_ref())
+    /// Borrowed row view into the columnar chunks (no copy, no alloc).
+    pub fn get(&self, item: u32) -> Option<N2oRow<'_>> {
+        let i = item as usize;
+        if i >= self.generation.n_items {
+            return None;
+        }
+        let (ci, off) = (i / N2O_CHUNK, i % N2O_CHUNK);
+        let c = &self.generation.chunks[ci];
+        if !c.present[off] {
+            return None;
+        }
+        let pl = self.n_bits.div_ceil(8);
+        Some(N2oRow {
+            item_vec: &c.item_vec[off * self.d..(off + 1) * self.d],
+            bea_w: &c.bea_w
+                [off * self.n_bridge..(off + 1) * self.n_bridge],
+            sign_packed: &c.sign_packed[off * pl..(off + 1) * pl],
+        })
+    }
+
+    /// Gather the head inputs for `items` into caller-provided flat
+    /// buffers, padded to `batch` rows by repeating the last item:
+    /// `vecs [batch*d]`, `ws [batch*n_bridge]`, `plane [batch*n_bits]`
+    /// (±1 f32, unpacked straight from the packed column — no
+    /// intermediate packed concatenation is built).  Returns None if any
+    /// item is missing from this generation.
+    fn gather_into(
+        &self,
+        items: &[u32],
+        batch: usize,
+        vecs: &mut Vec<f32>,
+        ws: &mut Vec<f32>,
+        plane: &mut Vec<f32>,
+    ) -> Option<()> {
+        assert!(!items.is_empty() && items.len() <= batch);
+        vecs.clear();
+        vecs.reserve(batch * self.d);
+        ws.clear();
+        ws.reserve(batch * self.n_bridge);
+        plane.clear();
+        plane.resize(batch * self.n_bits, 0.0);
+        for (r, &it) in items.iter().enumerate() {
+            let row = self.get(it)?;
+            vecs.extend_from_slice(row.item_vec);
+            ws.extend_from_slice(row.bea_w);
+            bits::unpack_to_pm1(
+                row.sign_packed,
+                self.n_bits,
+                &mut plane[r * self.n_bits..(r + 1) * self.n_bits],
+            );
+        }
+        // Padding repeats the last real row.
+        let last = self.get(items[items.len() - 1])?;
+        for r in items.len()..batch {
+            vecs.extend_from_slice(last.item_vec);
+            ws.extend_from_slice(last.bea_w);
+            bits::unpack_to_pm1(
+                last.sign_packed,
+                self.n_bits,
+                &mut plane[r * self.n_bits..(r + 1) * self.n_bits],
+            );
+        }
+        Some(())
     }
 
     /// Assemble the pre-rank head inputs for a mini-batch of items, padded
@@ -161,28 +375,58 @@ impl N2oSnapshot {
         items: &[u32],
         batch: usize,
     ) -> Option<(Tensor, Tensor, Tensor)> {
-        assert!(!items.is_empty() && items.len() <= batch);
-        let mut vecs = Vec::with_capacity(batch * self.d);
-        let mut ws = Vec::with_capacity(batch * self.n_bridge);
-        let mut packed = Vec::with_capacity(batch * self.n_bits / 8);
-        for &it in items {
-            let e = self.get(it)?;
-            vecs.extend_from_slice(&e.item_vec);
-            ws.extend_from_slice(&e.bea_w);
-            packed.extend_from_slice(&e.sign_packed);
+        self.assemble_opt(items, batch, None)
+    }
+
+    /// [`Self::assemble`] into arena-pooled tensors — the zero-copy hot
+    /// path.  Bitwise-identical output (property-tested); the buffers
+    /// return to `arena` when the RTP call retires.
+    pub fn assemble_in(
+        &self,
+        items: &[u32],
+        batch: usize,
+        arena: &Arc<ArenaPool>,
+    ) -> Option<(Tensor, Tensor, Tensor)> {
+        self.assemble_opt(items, batch, Some(arena))
+    }
+
+    /// The single pooled-vs-owned dispatch behind [`Self::assemble`] /
+    /// [`Self::assemble_in`] (call sites with an `Option` in hand use
+    /// this directly).
+    pub fn assemble_opt(
+        &self,
+        items: &[u32],
+        batch: usize,
+        arena: Option<&Arc<ArenaPool>>,
+    ) -> Option<(Tensor, Tensor, Tensor)> {
+        match arena {
+            Some(a) => {
+                let mut vecs = a.get(batch * self.d);
+                let mut ws = a.get(batch * self.n_bridge);
+                let mut plane = a.get(batch * self.n_bits);
+                self.gather_into(
+                    items, batch, &mut vecs, &mut ws, &mut plane,
+                )?;
+                Some((
+                    Tensor::from_pooled(vec![batch, self.d], vecs),
+                    Tensor::from_pooled(vec![batch, self.n_bridge], ws),
+                    Tensor::from_pooled(vec![batch, self.n_bits], plane),
+                ))
+            }
+            None => {
+                let mut vecs = Vec::new();
+                let mut ws = Vec::new();
+                let mut plane = Vec::new();
+                self.gather_into(
+                    items, batch, &mut vecs, &mut ws, &mut plane,
+                )?;
+                Some((
+                    Tensor::new(vec![batch, self.d], vecs),
+                    Tensor::new(vec![batch, self.n_bridge], ws),
+                    Tensor::new(vec![batch, self.n_bits], plane),
+                ))
+            }
         }
-        let last = self.get(items[items.len() - 1])?;
-        for _ in items.len()..batch {
-            vecs.extend_from_slice(&last.item_vec);
-            ws.extend_from_slice(&last.bea_w);
-            packed.extend_from_slice(&last.sign_packed);
-        }
-        let sign = lsh::unpack_plane(&packed, batch, self.n_bits);
-        Some((
-            Tensor::new(vec![batch, self.d], vecs),
-            Tensor::new(vec![batch, self.n_bridge], ws),
-            sign,
-        ))
     }
 }
 
@@ -234,6 +478,46 @@ mod tests {
         t.upsert(vec![(5, entry(2.0))]); // new item id beyond table
         assert_eq!(t.n_items(), 6);
         assert_eq!(t.snapshot().get(5).unwrap().item_vec[0], 2.0);
+        // Ids between the old bound and the new row are absent, not junk.
+        assert!(t.snapshot().get(3).is_none());
+    }
+
+    #[test]
+    fn upsert_extends_across_chunk_boundaries() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        let far = (2 * N2O_CHUNK + 7) as u32;
+        t.upsert(vec![(far, entry(3.0))]);
+        assert_eq!(t.n_items(), far as usize + 1);
+        let snap = t.snapshot();
+        assert_eq!(snap.get(far).unwrap().item_vec[0], 3.0);
+        assert_eq!(snap.get(0).unwrap().item_vec[0], 1.0);
+        assert!(snap.get(N2O_CHUNK as u32).is_none());
+    }
+
+    #[test]
+    fn upsert_copies_only_touched_chunks() {
+        let n = 3 * N2O_CHUNK;
+        let t = N2oTable::new(n, 4, 2, 8);
+        t.swap_full((0..n).map(|_| Some(entry(1.0))).collect(), 1);
+        let before = t.snapshot();
+        t.upsert(vec![(0, entry(2.0))]); // touches chunk 0 only
+        let after = t.snapshot();
+        // Untouched chunks are the SAME allocation (shared by Arc) —
+        // copy-on-write at chunk granularity.
+        assert!(!std::ptr::eq(
+            before.generation.chunks[0].as_ref(),
+            after.generation.chunks[0].as_ref()
+        ));
+        for ci in 1..3 {
+            assert!(
+                std::ptr::eq(
+                    before.generation.chunks[ci].as_ref(),
+                    after.generation.chunks[ci].as_ref()
+                ),
+                "chunk {ci} must be shared, not copied"
+            );
+        }
     }
 
     /// Entry whose item_vec encodes (writer tag, item id) so readers can
@@ -386,5 +670,51 @@ mod tests {
         assert_eq!(s.row(0), &[1., -1., 1., -1., -1., 1., -1., 1.]);
         // Missing item -> None.
         assert!(snap.assemble(&[0, 2], 2).is_none());
+    }
+
+    #[test]
+    fn assemble_in_is_pooled_and_bitwise_identical() {
+        let t = N2oTable::new(8, 4, 2, 8);
+        t.swap_full(
+            (0..8).map(|i| Some(tagged(0.5, i as u32))).collect(),
+            1,
+        );
+        let arena = ArenaPool::new(8);
+        let snap = t.snapshot();
+        let owned = snap.assemble(&[1, 4, 6], 5).unwrap();
+        let pooled = snap.assemble_in(&[1, 4, 6], 5, &arena).unwrap();
+        assert!(pooled.0.is_pooled() && pooled.1.is_pooled());
+        assert_eq!(owned.0, pooled.0);
+        assert_eq!(owned.1, pooled.1);
+        assert_eq!(owned.2, pooled.2);
+        drop(pooled);
+        assert_eq!(arena.outstanding(), 0, "buffers returned on drop");
+        // A missing item must not leak the partially filled buffers.
+        let t2 = N2oTable::new(4, 4, 2, 8);
+        t2.swap_full(vec![Some(entry(1.0)), None, None, None], 1);
+        assert!(t2
+            .snapshot()
+            .assemble_in(&[0, 1], 2, &arena)
+            .is_none());
+        assert_eq!(arena.outstanding(), 0);
+    }
+
+    #[test]
+    fn one_lock_acquisition_per_snapshot() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        let before = t.lock_acquisitions.load(Ordering::Relaxed);
+        let snap = t.snapshot();
+        // Gathers and row reads run on the pinned generation: no further
+        // lock traffic however many mini-batches a request assembles.
+        for _ in 0..10 {
+            let _ = snap.assemble(&[0, 1, 2, 3], 4).unwrap();
+            let _ = snap.get(2).unwrap();
+        }
+        assert_eq!(
+            t.lock_acquisitions.load(Ordering::Relaxed),
+            before + 1,
+            "one lock acquisition per request-pinned snapshot"
+        );
     }
 }

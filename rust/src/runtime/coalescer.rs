@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::tensor::Tensor;
+use crate::cache::ArenaPool;
 use crate::coordinator::batcher::pack_jobs;
 use crate::metrics::CoalesceStats;
 use crate::util::threadpool::ThreadPool;
@@ -114,6 +115,18 @@ impl BatchCoalescer {
         cfg: CoalescerConfig,
         stats: Arc<CoalesceStats>,
     ) -> BatchCoalescer {
+        Self::with_arena(executor, cfg, stats, None)
+    }
+
+    /// Like [`Self::new`], but merged `_mu` executions assemble into
+    /// arena-pooled buffers (the zero-copy path); the buffers return to
+    /// the pool when the merged RTP call retires.
+    pub fn with_arena(
+        executor: Arc<dyn HeadExecutor>,
+        cfg: CoalescerConfig,
+        stats: Arc<CoalesceStats>,
+        arena: Option<Arc<ArenaPool>>,
+    ) -> BatchCoalescer {
         assert!(cfg.max_rows >= 1 && cfg.max_rows <= cfg.exec_rows);
         assert!(cfg.max_slots >= 1);
         let (tx, rx) = channel::<Msg>();
@@ -125,6 +138,7 @@ impl BatchCoalescer {
                     cfg: cfg2,
                     executor,
                     stats,
+                    arena,
                     scatter: ThreadPool::new(4),
                     queues: HashMap::new(),
                 }
@@ -193,6 +207,8 @@ struct Dispatcher {
     cfg: CoalescerConfig,
     executor: Arc<dyn HeadExecutor>,
     stats: Arc<CoalesceStats>,
+    /// Merged-input assembly buffers come from here when set.
+    arena: Option<Arc<ArenaPool>>,
     scatter: ThreadPool,
     queues: HashMap<String, VecDeque<Pending>>,
 }
@@ -328,6 +344,7 @@ impl Dispatcher {
             &pack,
             self.cfg.exec_rows,
             self.cfg.max_slots,
+            self.arena.as_ref(),
         ) {
             Ok(t) => t,
             Err(e) => {
@@ -407,14 +424,21 @@ fn scatter_back(
 /// the last job's slot — compiled artifacts are static-shaped), row-
 /// aligned tensors concatenated by real rows (padded to `exec_rows` by
 /// repeating the last real row), plus the row→slot index operand last.
+/// With `arena` set, every merged operand assembles into a pooled buffer
+/// that returns to the pool when the merged RTP call retires.
 fn merge_inputs(
     pack: &[Pending],
     exec_rows: usize,
     max_slots: usize,
+    arena: Option<&Arc<ArenaPool>>,
 ) -> Result<Vec<Tensor>> {
     let first = &pack[0].job;
     let n_user = first.user_inputs.len();
     let n_row = first.row_inputs.len();
+    let n_slots = pack.len();
+    anyhow::ensure!(n_slots <= max_slots, "pack exceeds max_slots");
+
+    // ---- validation pass (before any buffer is taken) -------------------
     for p in pack.iter().skip(1) {
         anyhow::ensure!(
             p.job.user_inputs.len() == n_user
@@ -422,37 +446,22 @@ fn merge_inputs(
             "jobs for one artifact disagree on input arity"
         );
     }
-    let n_slots = pack.len();
-    anyhow::ensure!(n_slots <= max_slots, "pack exceeds max_slots");
-    let mut inputs = Vec::with_capacity(n_user + n_row + 1);
-
-    // User slots: [max_slots, slot shape...]; unused slots repeat the
-    // last job's slot (padding rows' row_user points there too).
     for i in 0..n_user {
-        let slot_shape = first.user_inputs[i].shape.clone();
-        let slot_len: usize = slot_shape.iter().product();
-        let mut data = Vec::with_capacity(max_slots * slot_len);
+        let slot_shape = &first.user_inputs[i].shape;
         for p in pack {
-            let t = &p.job.user_inputs[i];
             anyhow::ensure!(
-                t.shape == slot_shape,
+                &p.job.user_inputs[i].shape == slot_shape,
                 "user input {i}: slot shape {:?} != {:?}",
-                t.shape,
+                p.job.user_inputs[i].shape,
                 slot_shape
             );
-            data.extend_from_slice(t.data());
         }
-        let last = data[(n_slots - 1) * slot_len..].to_vec();
-        for _ in n_slots..max_slots {
-            data.extend_from_slice(&last);
-        }
-        let mut shape = vec![max_slots];
-        shape.extend_from_slice(&slot_shape);
-        inputs.push(Tensor::new(shape, data));
     }
-
-    // Row-aligned inputs: the first `rows` rows of each job, padded to
-    // `exec_rows` with the last real row.
+    let mut rows_total = 0usize;
+    for p in pack {
+        rows_total += p.job.rows;
+    }
+    anyhow::ensure!(rows_total <= exec_rows, "pack exceeds exec_rows");
     for i in 0..n_row {
         let t0 = &first.row_inputs[i];
         anyhow::ensure!(
@@ -460,39 +469,68 @@ fn merge_inputs(
             "row input {i}: shape {:?} has fewer rows than the job",
             t0.shape
         );
-        let width: usize = t0.shape[1..].iter().product::<usize>().max(1);
-        let mut data = Vec::with_capacity(exec_rows * width);
         for p in pack {
             let t = &p.job.row_inputs[i];
             anyhow::ensure!(
-                t.shape[1..] == t0.shape[1..]
-                    && t.shape[0] >= p.job.rows,
+                t.shape[1..] == t0.shape[1..] && t.shape[0] >= p.job.rows,
                 "row input {i}: shape {:?} incompatible with {:?}",
                 t.shape,
                 t0.shape
             );
-            data.extend_from_slice(&t.data()[..p.job.rows * width]);
         }
-        let rows_total = data.len() / width;
-        anyhow::ensure!(rows_total <= exec_rows, "pack exceeds exec_rows");
-        let last = data[(rows_total - 1) * width..].to_vec();
-        for _ in rows_total..exec_rows {
-            data.extend_from_slice(&last);
-        }
+    }
+
+    // ---- fill pass (infallible) -----------------------------------------
+    let mut inputs = Vec::with_capacity(n_user + n_row + 1);
+
+    // User slots: [max_slots, slot shape...]; unused slots repeat the
+    // last job's slot (padding rows' row_user points there too).
+    for i in 0..n_user {
+        let slot_shape = first.user_inputs[i].shape.clone();
+        let slot_len: usize = slot_shape.iter().product();
+        let mut shape = vec![max_slots];
+        shape.extend_from_slice(&slot_shape);
+        inputs.push(Tensor::build_with(arena, shape, |data| {
+            for p in pack {
+                data.extend_from_slice(p.job.user_inputs[i].data());
+            }
+            let last = (n_slots - 1) * slot_len;
+            for _ in n_slots..max_slots {
+                data.extend_from_within(last..last + slot_len);
+            }
+        }));
+    }
+
+    // Row-aligned inputs: the first `rows` rows of each job, padded to
+    // `exec_rows` with the last real row.
+    for i in 0..n_row {
+        let t0 = &first.row_inputs[i];
+        let width: usize = t0.shape[1..].iter().product::<usize>().max(1);
         let mut shape = vec![exec_rows];
         shape.extend_from_slice(&t0.shape[1..]);
-        inputs.push(Tensor::new(shape, data));
+        inputs.push(Tensor::build_with(arena, shape, |data| {
+            for p in pack {
+                data.extend_from_slice(
+                    &p.job.row_inputs[i].data()[..p.job.rows * width],
+                );
+            }
+            let last = (rows_total - 1) * width;
+            for _ in rows_total..exec_rows {
+                data.extend_from_within(last..last + width);
+            }
+        }));
     }
 
     // row_user: slot index per row; padding rows point at the last slot.
-    let mut row_user = Vec::with_capacity(exec_rows);
-    for (slot, p) in pack.iter().enumerate() {
-        row_user.extend(std::iter::repeat(slot as f32).take(p.job.rows));
-    }
-    while row_user.len() < exec_rows {
-        row_user.push((n_slots - 1) as f32);
-    }
-    inputs.push(Tensor::new(vec![exec_rows], row_user));
+    inputs.push(Tensor::build_with(arena, vec![exec_rows], |row_user| {
+        for (slot, p) in pack.iter().enumerate() {
+            row_user
+                .extend(std::iter::repeat(slot as f32).take(p.job.rows));
+        }
+        while row_user.len() < exec_rows {
+            row_user.push((n_slots - 1) as f32);
+        }
+    }));
     Ok(inputs)
 }
 

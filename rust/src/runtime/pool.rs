@@ -76,9 +76,19 @@ impl RtpPool {
             },
             move |engine: &mut Engine, msg: RtpMsg| match msg {
                 RtpMsg::Exec(req) => {
-                    let result = engine.execute(&req.artifact, &req.inputs);
+                    let RtpRequest {
+                        artifact,
+                        inputs,
+                        reply,
+                    } = req;
+                    let result = engine.execute(&artifact, &inputs);
+                    // Drop the inputs BEFORE replying: arena-backed
+                    // operand buffers are back in the pool by the time
+                    // the caller observes the scores (the accounting
+                    // tests assert outstanding == 0 post-response).
+                    drop(inputs);
                     // Receiver may have given up (timeout) — that's fine.
-                    let _ = req.reply.send(result);
+                    let _ = reply.send(result);
                 }
                 RtpMsg::Load { artifact, reply } => {
                     let _ = reply.send(engine.load(&manifest, &artifact));

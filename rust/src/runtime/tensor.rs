@@ -4,18 +4,54 @@
 //! to ±1 planes at assembly; DESIGN.md §7).
 //!
 //! Data is `Arc`-backed: per-request tensors (seq_emb, seq_sign, …) are
-//! shared across all mini-batch RTP calls of the request without copying —
-//! one of the allocation savings the Arena pool + two-phase design buys.
+//! shared across all mini-batch RTP calls of the request without copying.
+//! Storage comes in two flavors (DESIGN.md §14): plain owned vectors, and
+//! **arena-backed** buffers borrowed from a [`crate::cache::ArenaPool`]
+//! via [`Tensor::from_pooled`] — when the last clone drops (i.e. when the
+//! RTP call retires), the buffer returns to the pool instead of hitting
+//! the allocator.  The two flavors are indistinguishable to consumers:
+//! same `data()` slice, same equality, same literal conversion.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::cache::{ArenaPool, PooledBuf};
+
+#[derive(Debug, Clone)]
+enum Storage {
+    Owned(Arc<Vec<f32>>),
+    Arena(Arc<PooledBuf>),
+}
+
+impl Storage {
+    #[inline]
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Arena(b) => b,
+        }
+    }
+}
+
 /// Dense row-major f32 host tensor with cheap clones.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    data: Arc<Vec<f32>>,
+    data: Storage,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+            && self.data.as_slice() == other.data.as_slice()
+    }
+}
+
+impl AsRef<[f32]> for Tensor {
+    fn as_ref(&self) -> &[f32] {
+        self.data.as_slice()
+    }
 }
 
 impl Tensor {
@@ -23,7 +59,47 @@ impl Tensor {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor {
             shape,
-            data: Arc::new(data),
+            data: Storage::Owned(Arc::new(data)),
+        }
+    }
+
+    /// Wrap an arena buffer without copying; the buffer returns to its
+    /// pool when the last clone of this tensor drops.
+    pub fn from_pooled(shape: Vec<usize>, buf: PooledBuf) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), buf.len());
+        Tensor {
+            shape,
+            data: Storage::Arena(Arc::new(buf)),
+        }
+    }
+
+    /// Whether this tensor's storage came from an arena pool (tests pin
+    /// the zero-copy path with this).
+    pub fn is_pooled(&self) -> bool {
+        matches!(self.data, Storage::Arena(_))
+    }
+
+    /// Run `fill` into either an arena-pooled or a fresh buffer of
+    /// `shape`'s size and wrap it — THE single pooled-vs-owned dispatch
+    /// every assembly path shares, which is what makes the two storages
+    /// bitwise-identical by construction.
+    pub(crate) fn build_with(
+        arena: Option<&Arc<ArenaPool>>,
+        shape: Vec<usize>,
+        fill: impl FnOnce(&mut Vec<f32>),
+    ) -> Tensor {
+        let n: usize = shape.iter().product();
+        match arena {
+            Some(a) => {
+                let mut buf = a.get(n);
+                fill(&mut buf);
+                Tensor::from_pooled(shape, buf)
+            }
+            None => {
+                let mut v = Vec::with_capacity(n);
+                fill(&mut v);
+                Tensor::new(shape, v)
+            }
         }
     }
 
@@ -37,21 +113,21 @@ impl Tensor {
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.data.as_slice().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.data.as_slice().is_empty()
     }
 
     /// Row `i` of a rank-2 tensor.
     pub fn row(&self, i: usize) -> &[f32] {
         let w = *self.shape.last().expect("rank >= 1");
-        &self.data[i * w..(i + 1) * w]
+        &self.data.as_slice()[i * w..(i + 1) * w]
     }
 
     /// Same storage under a new shape (no copy — the data is `Arc`-backed).
@@ -59,26 +135,39 @@ impl Tensor {
     pub fn reshaped(&self, shape: Vec<usize>) -> Tensor {
         debug_assert_eq!(
             shape.iter().product::<usize>(),
-            self.data.len(),
+            self.len(),
             "reshape {:?} -> {shape:?}",
             self.shape
         );
         Tensor {
             shape,
-            data: Arc::clone(&self.data),
+            data: self.data.clone(),
         }
     }
 
     /// Approximate byte footprint (what the N2O/caching accounting reports).
     pub fn size_bytes(&self) -> usize {
-        self.data.len() * 4 + self.shape.len() * 8
+        self.len() * 4 + self.shape.len() * 8
     }
 
-    /// Convert to an XLA literal for execution.
+    /// Convert to an XLA literal for execution.  Against the vendored
+    /// stub this shares the tensor's `Arc`-backed storage — building the
+    /// execution operands copies nothing, and an arena-pooled buffer
+    /// stays out until the literal (i.e. the RTP call) drops.  Under the
+    /// real `xla_extension` bindings (which copy at this host boundary),
+    /// swap the body back to `Literal::vec1(self.data()).reshape(&dims)`.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(&self.data);
-        Ok(lit.reshape(&dims)?)
+        Ok(match &self.data {
+            Storage::Owned(v) => xla::Literal::from_shared(
+                dims,
+                Arc::clone(v) as xla::SharedF32,
+            ),
+            Storage::Arena(b) => xla::Literal::from_shared(
+                dims,
+                Arc::clone(b) as xla::SharedF32,
+            ),
+        })
     }
 
     /// Read an XLA literal back into a host tensor.
@@ -98,8 +187,9 @@ impl Tensor {
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "shape mismatch");
         self.data
+            .as_slice()
             .iter()
-            .zip(other.data.iter())
+            .zip(other.data.as_slice().iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -108,6 +198,7 @@ impl Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::ArenaPool;
 
     #[test]
     fn rows_and_sizes() {
@@ -145,5 +236,41 @@ mod tests {
         let b = a.reshaped(vec![4]);
         assert_eq!(b.shape, vec![4]);
         assert_eq!(a.data().as_ptr(), b.data().as_ptr());
+    }
+
+    #[test]
+    fn pooled_tensor_equals_owned_and_returns_on_last_drop() {
+        let pool = ArenaPool::new(4);
+        let mut buf = pool.get(4);
+        buf.extend_from_slice(&[1., 2., 3., 4.]);
+        let t = Tensor::from_pooled(vec![2, 2], buf);
+        assert!(t.is_pooled());
+        let owned = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(t, owned, "storage flavor is invisible to equality");
+        assert_eq!(t.row(1), &[3., 4.]);
+        // Clones + reshapes share the one pooled buffer.
+        let c = t.clone();
+        let r = t.reshaped(vec![4]);
+        assert!(r.is_pooled());
+        assert_eq!(
+            pool.outstanding(),
+            1,
+            "clones do not multiply the pooled buffer"
+        );
+        drop(t);
+        drop(c);
+        assert_eq!(pool.outstanding(), 1, "still live via the reshape");
+        drop(r);
+        assert_eq!(pool.outstanding(), 0, "last drop returns the buffer");
+    }
+
+    #[test]
+    fn pooled_literal_round_trip() {
+        let pool = ArenaPool::new(4);
+        let mut buf = pool.get(3);
+        buf.extend_from_slice(&[1.5, -2.0, 7.25]);
+        let t = Tensor::from_pooled(vec![3], buf);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
     }
 }

@@ -229,6 +229,9 @@ fn handle_conn(
                     }
                     o.insert("default_scenario", a.default_scenario());
                     o.insert("routing_errors", a.routing_errors());
+                    if let Some(arena) = a.arena_stats() {
+                        o.insert("arena", arena);
+                    }
                     o.insert("scenarios", Value::Obj(per));
                     Value::Obj(o).to_string_pretty()
                 }

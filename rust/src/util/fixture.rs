@@ -17,6 +17,12 @@
 //! already cover them).  Shapes are chosen so that no request-level
 //! operand's leading axis collides with a row count anywhere (the stub
 //! classifies row-aligned operands by leading-axis match).
+//!
+//! Dimensions come in named profiles ([`FixtureDims`]): the tiny default
+//! used by the CI integration tests, and a larger [`FixtureDims::perf`]
+//! profile for `benches/hotpath_alloc.rs`, where data buffers must
+//! dominate bookkeeping allocations for the before/after comparison to
+//! mean anything.
 
 use std::path::Path;
 
@@ -27,8 +33,8 @@ use crate::runtime::Table;
 use crate::util::json::{Object, Value};
 use crate::util::rng::Pcg64;
 
-// Fixture dimensions (small, but with every axis distinct enough for the
-// stub's row/slot classification to be unambiguous).
+// Default fixture dimensions (small, but with every axis distinct enough
+// for the stub's row/slot classification to be unambiguous).
 pub const N_USERS: usize = 24;
 pub const N_ITEMS: usize = 128;
 pub const BATCH: usize = 16;
@@ -46,12 +52,92 @@ pub const D_LATENT: usize = 4;
 pub const MU_ROWS: usize = 2 * BATCH;
 pub const MU_SLOTS: usize = 4;
 
+/// One named set of fixture dimensions.  Constraint carried over from the
+/// stub's operand classification: no request-level operand's leading axis
+/// (1, `n_bridge`, `l_long`, `mu_slots`) may equal a row count (`batch`,
+/// `mu_rows`) or a per-output leading axis.
+#[derive(Debug, Clone)]
+pub struct FixtureDims {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub batch: usize,
+    pub l_short: usize,
+    pub l_long: usize,
+    pub d: usize,
+    pub d_raw: usize,
+    pub n_bridge: usize,
+    pub d_lsh_bits: usize,
+    pub n_tiers: usize,
+    pub n_categories: usize,
+    pub l_sim_sub: usize,
+    pub d_latent: usize,
+    pub mu_rows: usize,
+    pub mu_slots: usize,
+}
+
+impl Default for FixtureDims {
+    fn default() -> Self {
+        FixtureDims {
+            n_users: N_USERS,
+            n_items: N_ITEMS,
+            batch: BATCH,
+            l_short: L_SHORT,
+            l_long: L_LONG,
+            d: D,
+            d_raw: D_RAW,
+            n_bridge: N_BRIDGE,
+            d_lsh_bits: D_LSH_BITS,
+            n_tiers: N_TIERS,
+            n_categories: N_CATEGORIES,
+            l_sim_sub: L_SIM_SUB,
+            d_latent: D_LATENT,
+            mu_rows: MU_ROWS,
+            mu_slots: MU_SLOTS,
+        }
+    }
+}
+
+impl FixtureDims {
+    /// Perf-bench profile: production-shaped mini-batches (64 rows, 32-
+    /// wide vectors, 64-bit signatures) so assembly buffers are KiB-scale
+    /// and the hotpath bench measures data movement, not struct headers.
+    pub fn perf() -> FixtureDims {
+        FixtureDims {
+            n_users: 32,
+            n_items: 1024,
+            batch: 64,
+            l_short: 6,
+            l_long: 48,
+            d: 32,
+            d_raw: 32,
+            n_bridge: 8,
+            d_lsh_bits: 64,
+            n_tiers: 8,
+            n_categories: 8,
+            l_sim_sub: 8,
+            d_latent: 8,
+            mu_rows: 128,
+            mu_slots: 4,
+        }
+    }
+}
+
 /// Write the complete fixture artifact set into `dir` (created if
-/// needed).  Deterministic: same bytes every call.
+/// needed) with the default dimensions.  Deterministic: same bytes every
+/// call.
 pub fn write(dir: impl AsRef<Path>) -> Result<()> {
+    write_dims(dir, &FixtureDims::default())
+}
+
+/// [`write`] with an explicit dimension profile.
+pub fn write_dims(dir: impl AsRef<Path>, fx: &FixtureDims) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir.join("tables"))
         .with_context(|| format!("creating fixture dir {dir:?}"))?;
+    assert!(
+        fx.d_lsh_bits % 8 == 0 && fx.mu_rows >= fx.batch && fx.mu_slots >= 1,
+        "inconsistent fixture dims: {fx:?}"
+    );
 
     // ---- world tables -----------------------------------------------------
     let mut rng = Pcg64::new(0xF1C5_0A1F);
@@ -62,58 +148,72 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
         (0..n).map(|_| rng.below(below as u64) as u32).collect()
     };
 
-    let users_profile = f32s(&mut rng, N_USERS * D_RAW);
-    let users_short_seq = ids(&mut rng, N_USERS * L_SHORT, N_ITEMS);
-    let users_long_seq = ids(&mut rng, N_USERS * L_LONG, N_ITEMS);
-    let users_mean_mm = f32s(&mut rng, N_USERS * D_RAW);
-    let users_cat_share: Vec<f32> = (0..N_USERS * N_CATEGORIES)
+    let users_profile = f32s(&mut rng, fx.n_users * fx.d_raw);
+    let users_short_seq = ids(&mut rng, fx.n_users * fx.l_short, fx.n_items);
+    let users_long_seq = ids(&mut rng, fx.n_users * fx.l_long, fx.n_items);
+    let users_mean_mm = f32s(&mut rng, fx.n_users * fx.d_raw);
+    let users_cat_share: Vec<f32> = (0..fx.n_users * fx.n_categories)
         .map(|_| rng.f32())
         .collect();
-    let users_z = f32s(&mut rng, N_USERS * D_LATENT);
-    let items_raw = f32s(&mut rng, N_ITEMS * D_RAW);
-    let items_mm = f32s(&mut rng, N_ITEMS * D_RAW);
-    let items_seq_emb = f32s(&mut rng, N_ITEMS * D_RAW);
-    let items_category = ids(&mut rng, N_ITEMS, N_CATEGORIES);
+    let users_z = f32s(&mut rng, fx.n_users * fx.d_latent);
+    let items_raw = f32s(&mut rng, fx.n_items * fx.d_raw);
+    let items_mm = f32s(&mut rng, fx.n_items * fx.d_raw);
+    let items_seq_emb = f32s(&mut rng, fx.n_items * fx.d_raw);
+    let items_category = ids(&mut rng, fx.n_items, fx.n_categories);
     let items_bid: Vec<f32> =
-        (0..N_ITEMS).map(|_| 0.1 + rng.f32()).collect();
-    let items_z = f32s(&mut rng, N_ITEMS * D_LATENT);
-    let w_hash = f32s(&mut rng, D_LSH_BITS * D_RAW);
+        (0..fx.n_items).map(|_| 0.1 + rng.f32()).collect();
+    let items_z = f32s(&mut rng, fx.n_items * fx.d_latent);
+    let w_hash = f32s(&mut rng, fx.d_lsh_bits * fx.d_raw);
 
     // Packed item signatures must agree with what the serving engine
     // derives from w_hash x items_mm (the static signature table).
     let hasher = Hasher::from_table(&Table::F32 {
-        shape: vec![D_LSH_BITS, D_RAW],
+        shape: vec![fx.d_lsh_bits, fx.d_raw],
         data: w_hash.clone(),
     });
-    let mut items_sign_packed = Vec::with_capacity(N_ITEMS * 2);
-    for i in 0..N_ITEMS {
-        items_sign_packed
-            .extend_from_slice(&hasher.sign(&items_mm[i * D_RAW..(i + 1) * D_RAW]));
+    let pl = fx.d_lsh_bits / 8;
+    let mut items_sign_packed = Vec::with_capacity(fx.n_items * pl);
+    for i in 0..fx.n_items {
+        items_sign_packed.extend_from_slice(
+            &hasher.sign(&items_mm[i * fx.d_raw..(i + 1) * fx.d_raw]),
+        );
     }
 
     let mut tables = Object::new();
-    put_f32(dir, "users_profile", &[N_USERS, D_RAW], &users_profile, &mut tables)?;
-    put_f32(dir, "users_mean_mm", &[N_USERS, D_RAW], &users_mean_mm, &mut tables)?;
+    put_f32(
+        dir,
+        "users_profile",
+        &[fx.n_users, fx.d_raw],
+        &users_profile,
+        &mut tables,
+    )?;
+    put_f32(
+        dir,
+        "users_mean_mm",
+        &[fx.n_users, fx.d_raw],
+        &users_mean_mm,
+        &mut tables,
+    )?;
     put_f32(
         dir,
         "users_cat_share",
-        &[N_USERS, N_CATEGORIES],
+        &[fx.n_users, fx.n_categories],
         &users_cat_share,
         &mut tables,
     )?;
-    put_f32(dir, "users_z", &[N_USERS, D_LATENT], &users_z, &mut tables)?;
-    put_f32(dir, "items_raw", &[N_ITEMS, D_RAW], &items_raw, &mut tables)?;
-    put_f32(dir, "items_mm", &[N_ITEMS, D_RAW], &items_mm, &mut tables)?;
+    put_f32(dir, "users_z", &[fx.n_users, fx.d_latent], &users_z, &mut tables)?;
+    put_f32(dir, "items_raw", &[fx.n_items, fx.d_raw], &items_raw, &mut tables)?;
+    put_f32(dir, "items_mm", &[fx.n_items, fx.d_raw], &items_mm, &mut tables)?;
     put_f32(
         dir,
         "items_seq_emb",
-        &[N_ITEMS, D_RAW],
+        &[fx.n_items, fx.d_raw],
         &items_seq_emb,
         &mut tables,
     )?;
-    put_f32(dir, "items_bid", &[N_ITEMS], &items_bid, &mut tables)?;
-    put_f32(dir, "items_z", &[N_ITEMS, D_LATENT], &items_z, &mut tables)?;
-    put_f32(dir, "w_hash", &[D_LSH_BITS, D_RAW], &w_hash, &mut tables)?;
+    put_f32(dir, "items_bid", &[fx.n_items], &items_bid, &mut tables)?;
+    put_f32(dir, "items_z", &[fx.n_items, fx.d_latent], &items_z, &mut tables)?;
+    put_f32(dir, "w_hash", &[fx.d_lsh_bits, fx.d_raw], &w_hash, &mut tables)?;
 
     write_u32(
         &dir.join("tables/users_short_seq.bin"),
@@ -121,17 +221,17 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
     )?;
     tables.insert(
         "users_short_seq",
-        table_entry("users_short_seq", &[N_USERS, L_SHORT], "u32"),
+        table_entry("users_short_seq", &[fx.n_users, fx.l_short], "u32"),
     );
     write_u32(&dir.join("tables/users_long_seq.bin"), &users_long_seq)?;
     tables.insert(
         "users_long_seq",
-        table_entry("users_long_seq", &[N_USERS, L_LONG], "u32"),
+        table_entry("users_long_seq", &[fx.n_users, fx.l_long], "u32"),
     );
     write_u32(&dir.join("tables/items_category.bin"), &items_category)?;
     tables.insert(
         "items_category",
-        table_entry("items_category", &[N_ITEMS], "u32"),
+        table_entry("items_category", &[fx.n_items], "u32"),
     );
     std::fs::write(
         dir.join("tables/items_sign_packed.bin"),
@@ -139,11 +239,7 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
     )?;
     tables.insert(
         "items_sign_packed",
-        table_entry(
-            "items_sign_packed",
-            &[N_ITEMS, D_LSH_BITS / 8],
-            "u8",
-        ),
+        table_entry("items_sign_packed", &[fx.n_items, pl], "u8"),
     );
 
     // ---- artifacts (HLO signature stubs) ----------------------------------
@@ -154,17 +250,17 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
         dir,
         "user_tower",
         &[
-            ("profile", vec![1, D_RAW]),
-            ("seq_short", vec![L_SHORT, D_RAW]),
-            ("seq_long", vec![L_LONG, D_RAW]),
-            ("seq_plane", vec![L_LONG, D_LSH_BITS]),
+            ("profile", vec![1, fx.d_raw]),
+            ("seq_short", vec![fx.l_short, fx.d_raw]),
+            ("seq_long", vec![fx.l_long, fx.d_raw]),
+            ("seq_plane", vec![fx.l_long, fx.d_lsh_bits]),
         ],
         &[
-            ("u_vec", vec![1, D]),
-            ("bea_v", vec![N_BRIDGE, D]),
-            ("seq_emb", vec![L_LONG, D]),
-            ("din_base", vec![1, D]),
-            ("din_g", vec![L_LONG, D]),
+            ("u_vec", vec![1, fx.d]),
+            ("bea_v", vec![fx.n_bridge, fx.d]),
+            ("seq_emb", vec![fx.l_long, fx.d]),
+            ("din_base", vec![1, fx.d]),
+            ("din_g", vec![fx.l_long, fx.d]),
         ],
         &mut artifacts,
     )?;
@@ -172,10 +268,10 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
     put_artifact(
         dir,
         "item_tower",
-        &[("item_raw", vec![BATCH, D_RAW])],
+        &[("item_raw", vec![fx.batch, fx.d_raw])],
         &[
-            ("item_vec", vec![BATCH, D]),
-            ("bea_w", vec![BATCH, N_BRIDGE]),
+            ("item_vec", vec![fx.batch, fx.d]),
+            ("bea_w", vec![fx.batch, fx.n_bridge]),
         ],
         &mut artifacts,
     )?;
@@ -184,11 +280,11 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
         dir,
         "head_base",
         &[
-            ("profile", vec![1, D_RAW]),
-            ("seq_short", vec![L_SHORT, D_RAW]),
-            ("item_raw", vec![BATCH, D_RAW]),
+            ("profile", vec![1, fx.d_raw]),
+            ("seq_short", vec![fx.l_short, fx.d_raw]),
+            ("item_raw", vec![fx.batch, fx.d_raw]),
         ],
-        &[("scores", vec![BATCH])],
+        &[("scores", vec![fx.batch])],
         &mut artifacts,
     )?;
     // head_aif: the full pipeline head (async user, nearline items, BEA
@@ -197,38 +293,38 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
         dir,
         "head_aif",
         &[
-            ("u_vec", vec![1, D]),
-            ("item_vec", vec![BATCH, D]),
-            ("bea_v", vec![N_BRIDGE, D]),
-            ("bea_w", vec![BATCH, N_BRIDGE]),
-            ("din_base", vec![1, D]),
-            ("din_g", vec![L_LONG, D]),
-            ("item_sign", vec![BATCH, D_LSH_BITS]),
-            ("tiers_in", vec![BATCH, N_TIERS]),
-            ("sim_cross", vec![BATCH, D_RAW]),
+            ("u_vec", vec![1, fx.d]),
+            ("item_vec", vec![fx.batch, fx.d]),
+            ("bea_v", vec![fx.n_bridge, fx.d]),
+            ("bea_w", vec![fx.batch, fx.n_bridge]),
+            ("din_base", vec![1, fx.d]),
+            ("din_g", vec![fx.l_long, fx.d]),
+            ("item_sign", vec![fx.batch, fx.d_lsh_bits]),
+            ("tiers_in", vec![fx.batch, fx.n_tiers]),
+            ("sim_cross", vec![fx.batch, fx.d_raw]),
         ],
-        &[("scores", vec![BATCH])],
+        &[("scores", vec![fx.batch])],
         &mut artifacts,
     )?;
     // head_aif_mu: the coalesced multi-user flavor (slot-stacked
-    // request-level operands, row-aligned operands at MU_ROWS, row_user
+    // request-level operands, row-aligned operands at mu_rows, row_user
     // gather index last) — expected_input_names_mu order.
     put_artifact(
         dir,
         "head_aif_mu",
         &[
-            ("u_vec", vec![MU_SLOTS, D]),
-            ("bea_v", vec![MU_SLOTS, N_BRIDGE, D]),
-            ("din_base", vec![MU_SLOTS, D]),
-            ("din_g", vec![MU_SLOTS, L_LONG, D]),
-            ("item_vec", vec![MU_ROWS, D]),
-            ("bea_w", vec![MU_ROWS, N_BRIDGE]),
-            ("item_sign", vec![MU_ROWS, D_LSH_BITS]),
-            ("tiers_in", vec![MU_ROWS, N_TIERS]),
-            ("sim_cross", vec![MU_ROWS, D_RAW]),
-            ("row_user", vec![MU_ROWS]),
+            ("u_vec", vec![fx.mu_slots, fx.d]),
+            ("bea_v", vec![fx.mu_slots, fx.n_bridge, fx.d]),
+            ("din_base", vec![fx.mu_slots, fx.d]),
+            ("din_g", vec![fx.mu_slots, fx.l_long, fx.d]),
+            ("item_vec", vec![fx.mu_rows, fx.d]),
+            ("bea_w", vec![fx.mu_rows, fx.n_bridge]),
+            ("item_sign", vec![fx.mu_rows, fx.d_lsh_bits]),
+            ("tiers_in", vec![fx.mu_rows, fx.n_tiers]),
+            ("sim_cross", vec![fx.mu_rows, fx.d_raw]),
+            ("row_user", vec![fx.mu_rows]),
         ],
-        &[("scores", vec![MU_ROWS])],
+        &[("scores", vec![fx.mu_rows])],
         &mut artifacts,
     )?;
 
@@ -246,22 +342,22 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
     // ---- dims + oracle + manifest -----------------------------------------
     let mut dims = Object::new();
     for (k, v) in [
-        ("D", D),
-        ("D_RAW", D_RAW),
-        ("D_MM", D_RAW),
-        ("D_SEQ_RAW", D_RAW),
-        ("D_PROFILE_RAW", D_RAW),
-        ("D_ITEM_RAW", D_RAW),
-        ("N_BRIDGE", N_BRIDGE),
-        ("D_LSH_BITS", D_LSH_BITS),
-        ("N_TIERS", N_TIERS),
-        ("N_CATEGORIES", N_CATEGORIES),
-        ("L_SIM_SUB", L_SIM_SUB),
-        ("L_SHORT", L_SHORT),
-        ("D_LATENT", D_LATENT),
-        ("D_BEA", D),
-        ("M_GROUPS", N_CATEGORIES),
-        ("N_BRIDGE_MU", MU_SLOTS),
+        ("D", fx.d),
+        ("D_RAW", fx.d_raw),
+        ("D_MM", fx.d_raw),
+        ("D_SEQ_RAW", fx.d_raw),
+        ("D_PROFILE_RAW", fx.d_raw),
+        ("D_ITEM_RAW", fx.d_raw),
+        ("N_BRIDGE", fx.n_bridge),
+        ("D_LSH_BITS", fx.d_lsh_bits),
+        ("N_TIERS", fx.n_tiers),
+        ("N_CATEGORIES", fx.n_categories),
+        ("L_SIM_SUB", fx.l_sim_sub),
+        ("L_SHORT", fx.l_short),
+        ("D_LATENT", fx.d_latent),
+        ("D_BEA", fx.d),
+        ("M_GROUPS", fx.n_categories),
+        ("N_BRIDGE_MU", fx.mu_slots),
     ] {
         dims.insert(k, v);
     }
@@ -276,11 +372,11 @@ pub fn write(dir: impl AsRef<Path>) -> Result<()> {
         ]),
     );
     oracle.insert("click_b", -0.1);
-    oracle.insert("d_latent", D_LATENT);
+    oracle.insert("d_latent", fx.d_latent);
 
     let mut manifest = Object::new();
-    manifest.insert("batch", BATCH);
-    manifest.insert("l_long", L_LONG);
+    manifest.insert("batch", fx.batch);
+    manifest.insert("l_long", fx.l_long);
     manifest.insert("dims", Value::Obj(dims));
     manifest.insert("artifacts", Value::Obj(artifacts));
     manifest.insert("variants", Value::Obj(variants));
@@ -447,6 +543,24 @@ mod tests {
                 "item {i} signature mismatch"
             );
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn perf_profile_loads_with_scaled_dims() {
+        let dir = std::env::temp_dir().join(format!(
+            "aif-fixture-perf-selftest-{}",
+            std::process::id()
+        ));
+        let fx = FixtureDims::perf();
+        write_dims(&dir, &fx).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.batch, fx.batch);
+        assert_eq!(manifest.l_long, fx.l_long);
+        assert_eq!(manifest.dim("D_LSH_BITS"), fx.d_lsh_bits);
+        let world = crate::features::World::load(&manifest).unwrap();
+        assert_eq!(world.n_users, fx.n_users);
+        assert_eq!(world.n_items, fx.n_items);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -11,3 +11,4 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod threadpool;
+pub mod tls;

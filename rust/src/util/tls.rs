@@ -1,0 +1,48 @@
+//! Per-thread shard tags.  `std::thread::ThreadId::as_u64` is unstable,
+//! so shard selection (arena free lists, feature-store RNG streams) keys
+//! off a dense process-local counter assigned on first use per thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_TAG: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TAG: u64 = NEXT_TAG.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense integer identifying the calling thread (stable for the
+/// thread's lifetime; assigned in spawn-first-touch order).
+pub fn thread_tag() -> u64 {
+    TAG.with(|t| *t)
+}
+
+/// The calling thread's home shard out of `n`.
+pub fn thread_shard(n: usize) -> usize {
+    debug_assert!(n > 0);
+    (thread_tag() % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_is_stable_within_a_thread() {
+        assert_eq!(thread_tag(), thread_tag());
+    }
+
+    #[test]
+    fn tags_differ_across_threads() {
+        let mine = thread_tag();
+        let other =
+            std::thread::spawn(thread_tag).join().unwrap();
+        assert_ne!(mine, other);
+    }
+
+    #[test]
+    fn shard_in_range() {
+        for n in 1..9 {
+            assert!(thread_shard(n) < n);
+        }
+    }
+}

@@ -9,6 +9,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use aif::cache::ArenaPool;
 use aif::metrics::CoalesceStats;
 use aif::runtime::{
     BatchCoalescer, CoalescerConfig, HeadExecutor, HeadJob, JobScores,
@@ -179,6 +180,66 @@ fn seeded_workload_is_exact_under_forced_merging() {
         .load(std::sync::atomic::Ordering::Relaxed);
     assert!(execs < 40, "forced merging produced fewer executions: {execs}");
     drop(c);
+}
+
+#[test]
+fn arena_backed_merging_is_exact_and_leak_free_under_stress() {
+    // Same stress shape as above, but merged executions assemble into an
+    // arena pool: scores must stay bitwise-exact, and once the coalescer
+    // drains and joins, every pooled buffer taken for a merged input must
+    // be back in the pool (the RTP-retire return path).
+    const N_THREADS: usize = 6;
+    const M_REQUESTS: usize = 120;
+    let stats = Arc::new(CoalesceStats::default());
+    let arena = ArenaPool::new(16);
+    let c = Arc::new(BatchCoalescer::with_arena(
+        Arc::new(GatherExec),
+        CoalescerConfig {
+            exec_rows: 64,
+            max_rows: 64,
+            max_slots: 4,
+            window: Duration::from_micros(200),
+            bypass_margin: Duration::from_millis(2),
+        },
+        Arc::clone(&stats),
+        Some(Arc::clone(&arena)),
+    ));
+    let mut handles = Vec::new();
+    for t in 0..N_THREADS {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::with_stream(0xA7E4A, t as u64);
+            for m in 0..M_REQUESTS {
+                let request = (t * M_REQUESTS + m) as u32;
+                let artifact =
+                    if rng.chance(0.25) { "mu_b" } else { "mu_a" };
+                let n_rows = 1 + rng.below(48) as usize;
+                let (job, expect, rx) = make_job(artifact, request, n_rows);
+                c.submit(job);
+                let got = rx
+                    .recv()
+                    .expect("reply channel alive")
+                    .expect("execution succeeds");
+                assert_eq!(
+                    got.scores, expect,
+                    "request {request}: arena-backed merge corrupted rows"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no worker panicked");
+    }
+    drop(c); // drains queues, joins dispatch + scatter threads
+    assert_eq!(
+        arena.outstanding(),
+        0,
+        "merged-input buffers must all return once the coalescer drains"
+    );
+    assert!(
+        arena.reuses.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "steady-state merging must recycle buffers, not allocate"
+    );
 }
 
 #[test]

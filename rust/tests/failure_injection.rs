@@ -96,7 +96,7 @@ fn merger_survives_concurrent_nearline_updates() {
             // Churn rows in place (same values, new allocation).
             let snap = n2o.snapshot();
             if let Some(e) = snap.get(v % 100) {
-                n2o.upsert(vec![(v % 100, e.clone())]);
+                n2o.upsert(vec![(v % 100, e.to_entry())]);
             }
             v += 1;
         }

@@ -1,9 +1,10 @@
 //! Property-based invariants over the coordinator substrates, via the
 //! in-repo mini framework (`util::prop`) — DESIGN.md §9.
 
-use aif::cache::ShardedLru;
+use aif::cache::{ArenaPool, ShardedLru};
 use aif::coordinator::batcher;
 use aif::coordinator::Router;
+use aif::features::{assembly, ItemFeatures};
 use aif::nearline::{N2oEntry, N2oTable};
 use aif::util::bits;
 use aif::util::prop::{check, usize_in, vec_of, Gen};
@@ -324,6 +325,219 @@ fn prop_n2o_incremental_equals_full() {
             if sa.get(i) != sb.get(i) {
                 return Err(format!("row {i} diverged"));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Columnar N2O gather + arena-backed assembly: bitwise-identical to the
+// row-based/owned reference for random worlds (ISSUE 4 tentpole pin).
+// ---------------------------------------------------------------------
+#[test]
+fn prop_columnar_n2o_gather_matches_rowwise_reference() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let d = 1 + rng.below(16) as usize;
+        let n_bridge = 1 + rng.below(8) as usize;
+        let n_bits = 8 * (1 + rng.below(8) as usize);
+        // Cross the 512-item chunk boundary often.
+        let n_items = 1 + rng.below(1200) as usize;
+        let seed = rng.next_u64();
+        (d, n_bridge, n_bits, n_items, seed)
+    });
+    check(
+        "columnar gather == rowwise",
+        &gen,
+        40,
+        |&(d, n_bridge, n_bits, n_items, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let pl = n_bits / 8;
+            let table = N2oTable::new(n_items, d, n_bridge, n_bits);
+            let mut present = Vec::new();
+            let entries: Vec<Option<N2oEntry>> = (0..n_items)
+                .map(|i| {
+                    if rng.chance(0.85) {
+                        present.push(i as u32);
+                        Some(N2oEntry {
+                            item_vec: (0..d).map(|_| rng.f32()).collect(),
+                            bea_w: (0..n_bridge)
+                                .map(|_| rng.f32())
+                                .collect(),
+                            sign_packed: (0..pl)
+                                .map(|_| rng.below(256) as u8)
+                                .collect(),
+                        })
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            if present.is_empty() {
+                return Ok(());
+            }
+            table.swap_full(entries.clone(), 1);
+            let snap = table.snapshot();
+            let arena = ArenaPool::new(4);
+
+            // Random present-only subset, random padding.
+            let k = 1 + rng.below(present.len().min(64) as u64) as usize;
+            let items: Vec<u32> = (0..k)
+                .map(|_| {
+                    present[rng.below(present.len() as u64) as usize]
+                })
+                .collect();
+            let batch = k + rng.below(8) as usize;
+
+            // Row-wise reference: exactly the old per-row gather.
+            let mut vecs = Vec::new();
+            let mut ws = Vec::new();
+            let mut packed = Vec::new();
+            for &it in &items {
+                let e = entries[it as usize].as_ref().unwrap();
+                vecs.extend_from_slice(&e.item_vec);
+                ws.extend_from_slice(&e.bea_w);
+                packed.extend_from_slice(&e.sign_packed);
+            }
+            let last =
+                entries[items[k - 1] as usize].as_ref().unwrap();
+            for _ in k..batch {
+                vecs.extend_from_slice(&last.item_vec);
+                ws.extend_from_slice(&last.bea_w);
+                packed.extend_from_slice(&last.sign_packed);
+            }
+            let mut plane = vec![0.0f32; batch * n_bits];
+            for r in 0..batch {
+                bits::unpack_to_pm1(
+                    &packed[r * pl..(r + 1) * pl],
+                    n_bits,
+                    &mut plane[r * n_bits..(r + 1) * n_bits],
+                );
+            }
+
+            let (v_o, w_o, s_o) = snap
+                .assemble(&items, batch)
+                .ok_or("assemble refused a present-only subset")?;
+            let (v_p, w_p, s_p) = snap
+                .assemble_in(&items, batch, &arena)
+                .ok_or("assemble_in refused a present-only subset")?;
+            if v_o.data() != &vecs[..] || w_o.data() != &ws[..] {
+                return Err("columnar gather != rowwise".into());
+            }
+            if s_o.data() != &plane[..] {
+                return Err("columnar plane != rowwise unpack".into());
+            }
+            if v_p != v_o || w_p != w_o || s_p != s_o {
+                return Err("pooled assembly != owned assembly".into());
+            }
+            if !(v_p.is_pooled() && w_p.is_pooled() && s_p.is_pooled()) {
+                return Err("assemble_in must use arena storage".into());
+            }
+            drop((v_p, w_p, s_p));
+            if arena.outstanding() != 0 {
+                return Err(format!(
+                    "{} pooled buffers leaked",
+                    arena.outstanding()
+                ));
+            }
+            // A hole anywhere in the subset must refuse assembly.
+            if let Some(hole) =
+                (0..n_items as u32).find(|i| entries[*i as usize].is_none())
+            {
+                let mut with_hole = items.clone();
+                with_hole[0] = hole;
+                if snap.assemble(&with_hole, batch).is_some()
+                    || snap
+                        .assemble_in(&with_hole, batch, &arena)
+                        .is_some()
+                {
+                    return Err("hole not detected".into());
+                }
+                if arena.outstanding() != 0 {
+                    return Err("refused assembly leaked buffers".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pooled_item_assembly_matches_owned() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n = 1 + rng.below(24) as usize;
+        let d = 1 + rng.below(32) as usize;
+        let pad = rng.below(8) as usize;
+        let seed = rng.next_u64();
+        (n, d, pad, seed)
+    });
+    check(
+        "pooled item batches == owned",
+        &gen,
+        80,
+        |&(n, d, pad, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let feats: Vec<ItemFeatures> = (0..n)
+                .map(|i| ItemFeatures {
+                    raw: (0..d).map(|_| rng.f32()).collect(),
+                    mm: (0..d).map(|_| rng.f32()).collect(),
+                    seq_emb: vec![0.0; 4],
+                    category: i as u32 % 5,
+                })
+                .collect();
+            let batch = n + pad;
+            let arena = ArenaPool::new(4);
+            let raw_o = assembly::item_raw_batch(&feats, batch);
+            let raw_p = assembly::item_raw_batch_in(&feats, batch, &arena);
+            let mm_o = assembly::item_mm_batch(&feats, batch);
+            let mm_p = assembly::item_mm_batch_in(&feats, batch, &arena);
+            if raw_o != raw_p || mm_o != mm_p {
+                return Err("pooled batch != owned batch".into());
+            }
+            drop((raw_p, mm_p));
+            if arena.outstanding() != 0 {
+                return Err("pooled batches leaked".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Arena: accounting balances under arbitrary get/drop interleavings and
+// the edge cases take the exact-capacity escape hatch.
+// ---------------------------------------------------------------------
+#[test]
+fn prop_arena_accounting_balances() {
+    let gen = vec_of(usize_in(0, 9000), 120);
+    check("arena books balance", &gen, 60, |lens: &Vec<usize>| {
+        let pool = ArenaPool::new(3);
+        let mut held = Vec::new();
+        for (i, &len) in lens.iter().enumerate() {
+            let b = pool.get_zeroed(len);
+            if len == 0 {
+                if b.capacity() != 0 {
+                    return Err("len 0 must not land in a class".into());
+                }
+            } else if b.len() != len {
+                return Err(format!("got {} floats for {len}", b.len()));
+            }
+            if i % 3 == 0 {
+                held.push(b);
+            } // else: drop immediately
+        }
+        let live = held
+            .iter()
+            .filter(|b| b.capacity() > 0)
+            .count() as u64;
+        if pool.outstanding() != live {
+            return Err(format!(
+                "outstanding {} != live {live}",
+                pool.outstanding()
+            ));
+        }
+        drop(held);
+        if pool.outstanding() != 0 {
+            return Err("buffers leaked after drop".into());
         }
         Ok(())
     });

@@ -311,6 +311,88 @@ fn hot_reload_and_churn_under_concurrent_traffic() {
 }
 
 #[test]
+fn zero_copy_path_is_bitwise_identical_lock_frugal_and_leak_free() {
+    // ISSUE 4 acceptance, integration-shaped: the arena-backed hot path
+    // must (a) return bitwise-identical responses to the owned path,
+    // (b) take exactly ONE N2O lock per request, and (c) hold no arena
+    // buffer once the response is out.
+    let dir = fixture_dir("zerocopy");
+    let _cleanup = Cleanup(dir.clone());
+    // core_cfg defaults to the full AIF variant (async user + nearline
+    // items + SIM precached) — the hot path under test.
+    let on = Arc::new(Merger::build(core_cfg(&dir)).expect("zero-copy"));
+    let off_cfg = ServingConfig {
+        zero_copy: false,
+        ..core_cfg(&dir)
+    };
+    let off = Arc::new(Merger::build(off_cfg).expect("owned path"));
+
+    for (i, user) in [1usize, 5, 11, 17].into_iter().enumerate() {
+        let req = |id: u64| {
+            ScoreRequest::user(user)
+                .with_request_id(id)
+                .with_candidates(cands())
+                .with_top_k(16)
+        };
+        let a = off.score(req(600 + i as u64)).expect("owned scores");
+        let b = on.score(req(700 + i as u64)).expect("zero-copy scores");
+        assert_eq!(
+            a.items, b.items,
+            "user {user}: zero-copy top-K diverged from the owned path"
+        );
+    }
+
+    // One snapshot pin — one lock acquisition — per request, however
+    // many mini-batches the request fans out into.
+    let n2o = &on.core().n2o;
+    let before = n2o
+        .lock_acquisitions
+        .load(std::sync::atomic::Ordering::Relaxed);
+    const N: u64 = 12;
+    for id in 0..N {
+        let r = on
+            .score(
+                ScoreRequest::user((id as usize * 7) % 24)
+                    .with_request_id(5000 + id)
+                    .with_candidates(cands())
+                    .with_top_k(16),
+            )
+            .expect("zero-copy request");
+        assert_eq!(r.items.len(), 16);
+    }
+    let delta = n2o
+        .lock_acquisitions
+        .load(std::sync::atomic::Ordering::Relaxed)
+        - before;
+    assert_eq!(delta, N, "exactly one N2O lock acquisition per request");
+
+    // Every pooled buffer taken on those requests is back in the pool.
+    let arena = &on.core().arena;
+    assert_eq!(arena.outstanding(), 0, "arena buffers leaked");
+    assert!(
+        arena
+            .reuses
+            .load(std::sync::atomic::Ordering::Relaxed)
+            > 0,
+        "the zero-copy path must actually hit the arena"
+    );
+    // The owned-path core must not have touched its arena at all.
+    assert_eq!(
+        off.core()
+            .arena
+            .allocs
+            .load(std::sync::atomic::Ordering::Relaxed)
+            + off
+                .core()
+                .arena
+                .reuses
+                .load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "zero_copy=false must keep the legacy owned allocations"
+    );
+}
+
+#[test]
 fn registry_admin_contract() {
     let dir = fixture_dir("admin");
     let _cleanup = Cleanup(dir.clone());

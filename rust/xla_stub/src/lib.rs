@@ -72,20 +72,54 @@ impl ArrayShape {
     }
 }
 
+/// Shared literal storage: anything that dereferences to an f32 slice.
+/// The serving stack's `Tensor` hands its `Arc`-backed storage (owned or
+/// arena-pooled) straight in, so building a literal copies nothing — the
+/// buffer lives until the execution drops it.  The REAL bindings copy at
+/// this boundary (host-to-device transfer); code that must stay
+/// swap-compatible should use [`Literal::vec1`].
+pub type SharedF32 = Arc<dyn AsRef<[f32]> + Send + Sync>;
+
 /// Host literal: a dense f32 array or a tuple of literals.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub enum Literal {
-    Array { dims: Vec<i64>, data: Arc<Vec<f32>> },
+    Array { dims: Vec<i64>, data: SharedF32 },
     Tuple(Vec<Literal>),
 }
 
+impl fmt::Debug for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Literal::Array { dims, data } => f
+                .debug_struct("Literal::Array")
+                .field("dims", dims)
+                .field("len", &data.as_ref().as_ref().len())
+                .finish(),
+            Literal::Tuple(elems) => {
+                f.debug_tuple("Literal::Tuple").field(elems).finish()
+            }
+        }
+    }
+}
+
 impl Literal {
-    /// Rank-1 literal over a host slice.
+    /// Rank-1 literal over a host slice (copies, like the real bindings).
     pub fn vec1(data: &[f32]) -> Literal {
         Literal::Array {
             dims: vec![data.len() as i64],
-            data: Arc::new(data.to_vec()),
+            data: Arc::new(data.to_vec()) as SharedF32,
         }
+    }
+
+    /// Zero-copy literal over shared storage (STUB EXTENSION — absent
+    /// from the real bindings; see [`SharedF32`]).  The element count
+    /// must match the dims product.
+    pub fn from_shared(dims: Vec<i64>, data: SharedF32) -> Literal {
+        debug_assert_eq!(
+            dims.iter().product::<i64>().max(1) as usize,
+            data.as_ref().as_ref().len().max(1)
+        );
+        Literal::Array { dims, data }
     }
 
     pub fn tuple(elems: Vec<Literal>) -> Literal {
@@ -97,10 +131,10 @@ impl Literal {
         match self {
             Literal::Array { data, .. } => {
                 let n: i64 = dims.iter().product();
-                if n as usize != data.len() {
+                let len = data.as_ref().as_ref().len();
+                if n as usize != len {
                     return err(format!(
-                        "reshape to {dims:?}: {} elements != {n}",
-                        data.len()
+                        "reshape to {dims:?}: {len} elements != {n}"
                     ));
                 }
                 Ok(Literal::Array {
@@ -125,7 +159,9 @@ impl Literal {
     /// Typed host copy (f32 only, like everything the stack serves).
     pub fn to_vec<T: FromLiteralElem>(&self) -> Result<Vec<T>> {
         match self {
-            Literal::Array { data, .. } => Ok(T::from_f32_slice(data)),
+            Literal::Array { data, .. } => {
+                Ok(T::from_f32_slice(data.as_ref().as_ref()))
+            }
             Literal::Tuple(_) => err("tuple literal has no flat data"),
         }
     }
@@ -142,7 +178,9 @@ impl Literal {
 
     fn raw(&self) -> Result<(&[i64], &[f32])> {
         match self {
-            Literal::Array { dims, data } => Ok((dims, data)),
+            Literal::Array { dims, data } => {
+                Ok((dims, data.as_ref().as_ref()))
+            }
             Literal::Tuple(_) => err("tuple literal where array expected"),
         }
     }
@@ -454,7 +492,7 @@ fn pseudo_output(
     }
     Ok(Literal::Array {
         dims: shape.iter().map(|&d| d as i64).collect(),
-        data: Arc::new(out),
+        data: Arc::new(out) as SharedF32,
     })
 }
 
@@ -471,6 +509,17 @@ mod tests {
         assert_eq!(shape.ty(), ElementType::F32);
         assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn from_shared_does_not_copy() {
+        let v = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let ptr = v.as_ptr();
+        let l = Literal::from_shared(vec![3], v as SharedF32);
+        let (dims, data) = l.raw().unwrap();
+        assert_eq!(dims, &[3]);
+        assert_eq!(data.as_ptr(), ptr, "shared literal borrows, not copies");
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
     }
 
     #[test]
