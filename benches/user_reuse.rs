@@ -1,0 +1,253 @@
+//! Cross-request user-state reuse bench (ISSUE 5): zipfian user traffic
+//! through the full AIF stack with reuse ON vs the request-scoped
+//! baseline (`user_reuse = false`), same seeds, same candidates.
+//!
+//! Gates (run for real in CI via `AIF_QUICK=1`):
+//!
+//! * **>= 3x fewer `user_tower` executions** under zipfian traffic at
+//!   equal scores — the paper's "calculated just once" claim, measured;
+//! * exactly ONE tower execution per hot (user, epoch): executions ==
+//!   distinct users touched;
+//! * bitwise top-K identity between the two modes, request by request;
+//! * p99 non-regression (reuse must not slow the hot path; full runs
+//!   only — quick CI runs are too short for stable tails);
+//! * zero outstanding arena buffers after the run (cached entries are
+//!   detached, never pinning the pool).
+//!
+//! Results are written to `BENCH_user_reuse.json` (override with
+//! `AIF_BENCH_OUT`).  `AIF_ARTIFACTS` points at a real artifact set;
+//! otherwise the synthetic fixture is generated.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use aif::config::{ServingConfig, SimMode};
+use aif::coordinator::{Merger, ScoreRequest};
+use aif::features::LatencyModel;
+use aif::util::bench::Stats;
+use aif::util::fixture;
+use aif::util::json::{Object, Value};
+use aif::util::rng::{Pcg64, Zipf};
+
+fn cfg(dir: &str, user_reuse: bool) -> ServingConfig {
+    ServingConfig {
+        variant: "aif".into(),
+        sim_mode: SimMode::Precached,
+        artifacts_dir: dir.into(),
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        retrieval_latency: LatencyModel::fixed(50.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        user_reuse,
+        // No expiry mid-run: the bench isolates the reuse effect (TTL
+        // freshness trades are the serving default's job).
+        user_cache_ttl_ms: 600_000,
+        ..Default::default()
+    }
+}
+
+struct RunReport {
+    tower_execs: u64,
+    distinct_users: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    qps: f64,
+}
+
+fn report_json(r: &RunReport) -> Value {
+    let mut o = Object::new();
+    o.insert("user_tower_execs", r.tower_execs);
+    o.insert("distinct_users", r.distinct_users);
+    o.insert("p50_ms", r.p50_ms);
+    o.insert("p99_ms", r.p99_ms);
+    o.insert("qps", r.qps);
+    Value::Obj(o)
+}
+
+fn main() {
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    // Quick still clears the >= 3x gate structurally: n_requests is at
+    // least 4x the user population, so even if EVERY user is touched the
+    // reuse path executes the tower at most once per user.
+    let n_requests = if quick { 96 } else { 400 };
+
+    let (dir, fixture_dir) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-userreuse-bench-{}",
+                std::process::id()
+            ));
+            fixture::write(&tmp).expect("fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+
+    let off = Merger::build(cfg(&dir, false)).expect("request-scoped merger");
+    let on = Merger::build(cfg(&dir, true)).expect("reuse merger");
+
+    let n_users = on.world().n_users;
+    let n_items = on.world().n_items;
+    let n_cands = 64.min(n_items);
+    let candidates: Vec<u32> = (0..n_cands as u32).collect();
+    let top_k = 16.min(n_cands);
+    println!(
+        "user_reuse: {n_requests} zipfian requests over {n_users} users \
+         ({n_cands} candidates, top-{top_k})"
+    );
+
+    // ---- measured run: same zipfian user sequence through both modes ----
+    let zipf = Zipf::new(n_users, 1.1);
+    let mut rng = Pcg64::new(0x5EED_2E05E);
+    let mut distinct: HashSet<usize> = HashSet::new();
+    let mut off_samples = Vec::with_capacity(n_requests);
+    let mut on_samples = Vec::with_capacity(n_requests);
+    let off_execs0 = off.core().rtp.executions_of("user_tower");
+    let on_execs0 = on.core().rtp.executions_of("user_tower");
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let user = zipf.sample(&mut rng);
+        distinct.insert(user);
+        let req = || {
+            ScoreRequest::user(user)
+                .with_candidates(candidates.clone())
+                .with_top_k(top_k)
+        };
+        let t = Instant::now();
+        let a = off
+            .score(req().with_request_id(10_000 + i as u64))
+            .expect("cold-path request");
+        off_samples.push(t.elapsed().as_secs_f64());
+        let t = Instant::now();
+        let b = on.score(req()).expect("reuse request");
+        on_samples.push(t.elapsed().as_secs_f64());
+        assert_eq!(
+            a.items, b.items,
+            "request {i} (user {user}): reuse top-K diverged from the \
+             cold path"
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let off_execs = off.core().rtp.executions_of("user_tower") - off_execs0;
+    let on_execs = on.core().rtp.executions_of("user_tower") - on_execs0;
+    println!(
+        "score identity: top-K bitwise-identical on all {n_requests} \
+         requests, reuse on/off"
+    );
+
+    let stats = |name: &str, samples: Vec<f64>| Stats {
+        name: name.into(),
+        iters: samples.len(),
+        samples,
+    };
+    let off_stats = stats("off", off_samples);
+    let on_stats = stats("on", on_samples);
+    let off_run = RunReport {
+        tower_execs: off_execs,
+        distinct_users: distinct.len(),
+        p50_ms: off_stats.percentile(50.0) * 1e3,
+        p99_ms: off_stats.percentile(99.0) * 1e3,
+        qps: 2.0 * n_requests as f64 / wall,
+    };
+    let on_run = RunReport {
+        tower_execs: on_execs,
+        distinct_users: distinct.len(),
+        p50_ms: on_stats.percentile(50.0) * 1e3,
+        p99_ms: on_stats.percentile(99.0) * 1e3,
+        qps: off_run.qps,
+    };
+    let ratio = off_execs as f64 / (on_execs as f64).max(1e-9);
+
+    println!(
+        "\n{:26} {:>16} {:>10} {:>10}",
+        "mode", "user_tower execs", "p50 ms", "p99 ms"
+    );
+    for (name, r) in [
+        ("request-scoped (off)", &off_run),
+        ("cross-request (on)", &on_run),
+    ] {
+        println!(
+            "{:26} {:>16} {:>10.3} {:>10.3}",
+            name, r.tower_execs, r.p50_ms, r.p99_ms
+        );
+    }
+    println!(
+        "\ntower-execution reduction: {ratio:.1}x  ({} requests, {} \
+         distinct users)",
+        n_requests,
+        distinct.len()
+    );
+    let uc = &on.core().user_cache;
+    println!(
+        "user_cache: hits {}  misses {}  joins {}  resident {} B",
+        uc.stats.hits.load(std::sync::atomic::Ordering::Relaxed),
+        uc.stats.misses.load(std::sync::atomic::Ordering::Relaxed),
+        uc.stats
+            .single_flight_joins
+            .load(std::sync::atomic::Ordering::Relaxed),
+        uc.resident_bytes()
+    );
+
+    // ---- the acceptance gates -------------------------------------------
+    assert_eq!(
+        off_execs, n_requests as u64,
+        "request-scoped mode pays one tower call per request"
+    );
+    assert_eq!(
+        on_execs,
+        distinct.len() as u64,
+        "reuse must execute the tower exactly once per (user, epoch)"
+    );
+    assert!(
+        ratio >= 3.0,
+        "reuse must cut user_tower executions >= 3x under zipfian \
+         traffic (off {off_execs} vs on {on_execs} = {ratio:.1}x)"
+    );
+    assert_eq!(
+        on.core().arena.outstanding(),
+        0,
+        "cached user state must not pin arena buffers"
+    );
+    assert_eq!(uc.inflight_len(), 0, "no dangling single-flight slot");
+    if !quick {
+        assert!(
+            on_run.p99_ms <= off_run.p99_ms * 1.5,
+            "reuse p99 regressed: {:.3}ms vs {:.3}ms",
+            on_run.p99_ms,
+            off_run.p99_ms
+        );
+    }
+
+    // ---- JSON baseline ---------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_user_reuse.json".into());
+    let mut o = Object::new();
+    o.insert("bench", "user_reuse");
+    o.insert("quick", quick);
+    o.insert("n_requests", n_requests);
+    o.insert("n_users", n_users);
+    o.insert("n_candidates", n_cands);
+    o.insert("zipf_exponent", 1.1);
+    o.insert("request_scoped", report_json(&off_run));
+    o.insert("cross_request", report_json(&on_run));
+    o.insert("tower_exec_reduction", ratio);
+    o.insert(
+        "user_cache",
+        on.core().user_cache.stats_snapshot(on.core().user_epoch()),
+    );
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
+
+    if let Some(tmp) = fixture_dir {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}

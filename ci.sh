@@ -21,6 +21,12 @@ echo "== scenario registry stress (release) =="
 # with dedicated per-variant Mergers, over the synthetic fixture set.
 cargo test --release -q --test scenario_registry
 
+echo "== user reuse stress (release) =="
+# Single-flight coalescing (one user_tower call per hot (user, epoch)),
+# bitwise identity vs the request-scoped path, reload invalidation with
+# zero failed requests, no arena pinning by cached entries.
+cargo test --release -q --test user_reuse
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -32,6 +38,14 @@ echo "== hotpath_alloc smoke (release, quick) =="
 # from a full run).
 AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_hotpath_ci.json \
     cargo bench --bench hotpath_alloc
+
+echo "== user_reuse smoke (release, quick) =="
+# The reuse gates run for real in CI: >= 3x fewer user_tower executions
+# under zipfian traffic, one execution per (user, epoch), bitwise top-K
+# identity vs --user-reuse false, no arena pinning.  Emits
+# BENCH_user_reuse.json.
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_user_reuse_ci.json \
+    cargo bench --bench user_reuse
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

@@ -1,23 +1,44 @@
 //! Sharded LRU cache cluster — the SIM pre-caching substrate (paper §3.3,
 //! Figure 5: "an LRU cache cluster" holding parsed subsequences for all
-//! user-category combinations of the requesting user).
+//! user-category combinations of the requesting user) and, since the
+//! cross-request user-state cache (DESIGN.md §15), the storage layer for
+//! long-lived user-side tensors.
 //!
 //! Classic HashMap + intrusive doubly-linked list per shard (indices into a
 //! slab, no unsafe), `Mutex` per shard; keys hash to shards so concurrent
-//! requests rarely contend.
+//! requests rarely contend.  Beyond the entry-count capacity, a cache can
+//! carry a **TTL** (entries expire `ttl` after insert — staleness bound,
+//! not touch-refreshed) and a **byte budget** with a caller-supplied
+//! weigher (the LRU tail is evicted until the resident weight fits).
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 const NIL: usize = usize::MAX;
 
+/// Computes the resident weight (bytes) of a value for budget eviction.
+pub type Weigher<V> = Box<dyn Fn(&V) -> usize + Send + Sync>;
+
 struct Entry<K, V> {
     key: K,
-    value: V,
+    /// `None` only for freed slab slots — evicted values are dropped
+    /// eagerly (a byte budget that kept evictees alive would lie).
+    value: Option<V>,
     prev: usize,
     next: usize,
+    /// Insert/update time.  TTL expiry is measured from here, NOT from
+    /// the last touch — a hot entry must still go stale on schedule.
+    at: Instant,
+    weight: usize,
+}
+
+enum Probe<'a, V> {
+    Hit(&'a V),
+    Expired,
+    Absent,
 }
 
 struct Shard<K, V> {
@@ -27,6 +48,8 @@ struct Shard<K, V> {
     head: usize, // most-recent
     tail: usize, // least-recent
     capacity: usize,
+    /// Sum of live entry weights (0 when the cache has no weigher).
+    bytes: usize,
 }
 
 impl<K: Eq + Hash + Clone, V> Shard<K, V> {
@@ -38,6 +61,7 @@ impl<K: Eq + Hash + Clone, V> Shard<K, V> {
             head: NIL,
             tail: NIL,
             capacity,
+            bytes: 0,
         }
     }
 
@@ -67,49 +91,85 @@ impl<K: Eq + Hash + Clone, V> Shard<K, V> {
         }
     }
 
-    fn get(&mut self, key: &K) -> Option<&V> {
-        let idx = *self.map.get(key)?;
+    /// Unlink + unmap + free one entry, dropping its value eagerly.
+    fn remove_idx(&mut self, idx: usize) {
         self.unlink(idx);
-        self.push_front(idx);
-        Some(&self.slab[idx].value)
+        let key = self.slab[idx].key.clone();
+        self.map.remove(&key);
+        self.bytes -= self.slab[idx].weight;
+        self.slab[idx].value = None;
+        self.slab[idx].weight = 0;
+        self.free.push(idx);
     }
 
-    fn insert(&mut self, key: K, value: V) -> bool {
+    fn get(&mut self, key: &K, ttl: Option<Duration>) -> Probe<'_, V> {
+        let Some(&idx) = self.map.get(key) else {
+            return Probe::Absent;
+        };
+        if let Some(ttl) = ttl {
+            if self.slab[idx].at.elapsed() > ttl {
+                self.remove_idx(idx);
+                return Probe::Expired;
+            }
+        }
+        self.unlink(idx);
+        self.push_front(idx);
+        Probe::Hit(self.slab[idx].value.as_ref().expect("live entry"))
+    }
+
+    /// Insert/update, then evict from the tail until both the entry cap
+    /// and the byte budget hold.  Returns evicted-entry count.
+    fn insert(
+        &mut self,
+        key: K,
+        value: V,
+        weight: usize,
+        max_bytes: usize,
+    ) -> u64 {
         if let Some(&idx) = self.map.get(&key) {
-            self.slab[idx].value = value;
+            self.bytes = self.bytes - self.slab[idx].weight + weight;
+            self.slab[idx].value = Some(value);
+            self.slab[idx].weight = weight;
+            self.slab[idx].at = Instant::now();
             self.unlink(idx);
             self.push_front(idx);
-            return false;
+            return self.evict_over_budget(max_bytes);
         }
-        let mut evicted = false;
-        if self.map.len() >= self.capacity {
-            // Evict LRU.
-            let lru = self.tail;
-            self.unlink(lru);
-            let old_key = self.slab[lru].key.clone();
-            self.map.remove(&old_key);
-            self.free.push(lru);
-            evicted = true;
-        }
+        let entry = Entry {
+            key: key.clone(),
+            value: Some(value),
+            prev: NIL,
+            next: NIL,
+            at: Instant::now(),
+            weight,
+        };
         let idx = if let Some(i) = self.free.pop() {
-            self.slab[i] = Entry {
-                key: key.clone(),
-                value,
-                prev: NIL,
-                next: NIL,
-            };
+            self.slab[i] = entry;
             i
         } else {
-            self.slab.push(Entry {
-                key: key.clone(),
-                value,
-                prev: NIL,
-                next: NIL,
-            });
+            self.slab.push(entry);
             self.slab.len() - 1
         };
         self.map.insert(key, idx);
         self.push_front(idx);
+        self.bytes += weight;
+        self.evict_over_budget(max_bytes)
+    }
+
+    /// Evict LRU entries while over the entry cap or the byte budget.
+    /// The newest entry always survives — a single over-budget value
+    /// would otherwise evict itself and defeat caching entirely.
+    fn evict_over_budget(&mut self, max_bytes: usize) -> u64 {
+        let mut evicted = 0;
+        while self.map.len() > self.capacity
+            || (max_bytes > 0
+                && self.bytes > max_bytes
+                && self.map.len() > 1)
+        {
+            let lru = self.tail;
+            self.remove_idx(lru);
+            evicted += 1;
+        }
         evicted
     }
 
@@ -123,6 +183,7 @@ impl<K: Eq + Hash + Clone, V> Shard<K, V> {
         self.free.clear();
         self.head = NIL;
         self.tail = NIL;
+        self.bytes = 0;
     }
 }
 
@@ -132,6 +193,8 @@ pub struct CacheStats {
     pub hits: AtomicU64,
     pub misses: AtomicU64,
     pub evictions: AtomicU64,
+    /// TTL expiries found on probe (also counted as misses).
+    pub expired: AtomicU64,
 }
 
 impl CacheStats {
@@ -150,11 +213,29 @@ impl CacheStats {
 pub struct ShardedLru<K, V> {
     shards: Vec<Mutex<Shard<K, V>>>,
     pub stats: CacheStats,
+    ttl: Option<Duration>,
+    /// Per-shard byte budget; 0 = unlimited.
+    max_bytes_per_shard: usize,
+    weigher: Option<Weigher<V>>,
 }
 
 impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
-    /// `capacity` is total across `n_shards` shards.
+    /// `capacity` is total across `n_shards` shards.  No TTL, no byte
+    /// budget — the classic entry-count LRU.
     pub fn new(capacity: usize, n_shards: usize) -> Self {
+        Self::with_limits(capacity, n_shards, None, 0, None)
+    }
+
+    /// Full-control constructor: optional TTL (staleness bound from
+    /// insert time) and optional byte budget (`max_bytes` total across
+    /// shards, weighed by `weigher`; 0 = unlimited).
+    pub fn with_limits(
+        capacity: usize,
+        n_shards: usize,
+        ttl: Option<Duration>,
+        max_bytes: usize,
+        weigher: Option<Weigher<V>>,
+    ) -> Self {
         assert!(n_shards > 0 && capacity >= n_shards);
         let per = capacity / n_shards;
         ShardedLru {
@@ -162,6 +243,13 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
                 .map(|_| Mutex::new(Shard::new(per)))
                 .collect(),
             stats: CacheStats::default(),
+            ttl,
+            max_bytes_per_shard: if max_bytes == 0 {
+                0
+            } else {
+                max_bytes.div_ceil(n_shards)
+            },
+            weigher,
         }
     }
 
@@ -173,12 +261,17 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
 
     pub fn get(&self, key: &K) -> Option<V> {
         let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
-        match shard.get(key) {
-            Some(v) => {
+        match shard.get(key, self.ttl) {
+            Probe::Hit(v) => {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v.clone())
             }
-            None => {
+            Probe::Expired => {
+                self.stats.expired.fetch_add(1, Ordering::Relaxed);
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Probe::Absent => {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -186,12 +279,13 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
     }
 
     pub fn insert(&self, key: K, value: V) {
+        let weight = self.weigher.as_ref().map_or(0, |w| w(&value));
         let evicted = self.shards[self.shard_of(&key)]
             .lock()
             .unwrap()
-            .insert(key, value);
-        if evicted {
-            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            .insert(key, value, weight, self.max_bytes_per_shard);
+        if evicted > 0 {
+            self.stats.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
     }
 
@@ -211,6 +305,11 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Sum of live entry weights (0 without a weigher).
+    pub fn resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
     }
 
     /// Drop every cached entry (benchmark isolation between runs sharing
@@ -292,6 +391,81 @@ mod tests {
         });
         assert_eq!(v, 99);
         assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn ttl_expires_entries_on_probe() {
+        let c: ShardedLru<u32, u32> = ShardedLru::with_limits(
+            4,
+            1,
+            Some(Duration::from_millis(30)),
+            0,
+            None,
+        );
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(10), "fresh entry hits");
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(c.get(&1), None, "stale entry expires");
+        assert_eq!(c.stats.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(c.len(), 0, "expired entry was removed, not skipped");
+        // Re-insert restarts the clock.
+        c.insert(1, 11);
+        assert_eq!(c.get(&1), Some(11));
+    }
+
+    #[test]
+    fn ttl_measured_from_insert_not_last_touch() {
+        let c: ShardedLru<u32, u32> = ShardedLru::with_limits(
+            4,
+            1,
+            Some(Duration::from_millis(50)),
+            0,
+            None,
+        );
+        c.insert(1, 10);
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(20));
+            let _ = c.get(&1); // touches must NOT refresh the deadline
+        }
+        assert_eq!(c.get(&1), None, "hot entry still goes stale");
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_until_fit() {
+        // Weigher = value itself; budget of 100 "bytes" in one shard.
+        let c: ShardedLru<u32, u32> = ShardedLru::with_limits(
+            64,
+            1,
+            None,
+            100,
+            Some(Box::new(|v: &u32| *v as usize)),
+        );
+        c.insert(1, 40);
+        c.insert(2, 40);
+        assert_eq!(c.resident_bytes(), 80);
+        c.insert(3, 40); // 120 > 100: evict LRU (key 1)
+        assert_eq!(c.get(&1), None, "oldest evicted to fit the budget");
+        assert_eq!(c.resident_bytes(), 80);
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 1);
+        // A single over-budget entry survives (never self-evicts).
+        c.clear();
+        c.insert(9, 400);
+        assert_eq!(c.get(&9), Some(400));
+        assert_eq!(c.resident_bytes(), 400);
+    }
+
+    #[test]
+    fn update_adjusts_resident_bytes() {
+        let c: ShardedLru<u32, u32> = ShardedLru::with_limits(
+            8,
+            1,
+            None,
+            1000,
+            Some(Box::new(|v: &u32| *v as usize)),
+        );
+        c.insert(1, 30);
+        c.insert(1, 70);
+        assert_eq!(c.resident_bytes(), 70, "update replaces the weight");
     }
 
     #[test]

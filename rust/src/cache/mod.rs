@@ -1,5 +1,6 @@
 //! Caching substrates: the SIM pre-cache LRU cluster (§3.3), the Arena
-//! memory pool (§3.4) and the request-scoped user-vector cache (§3.1/§3.4).
+//! memory pool (§3.4) and the cross-request user-state cache with its
+//! single-flight layer (§3.1/§3.4, DESIGN.md §15).
 
 pub mod arena;
 pub mod lru;
@@ -7,4 +8,7 @@ pub mod user_cache;
 
 pub use arena::{ArenaPool, PooledBuf};
 pub use lru::{CacheStats, ShardedLru};
-pub use user_cache::{RequestKey, UserAsync, UserVecCache};
+pub use user_cache::{
+    Claim, Flight, FlightGuard, RequestKey, SimPrewarm, UserAsync,
+    UserKey, UserSide, UserStateCache, UserVecCache,
+};

@@ -1,18 +1,38 @@
-//! User-side async-result cache (paper §3.4, "Online Asynchronous
-//! Inference" engineering).
+//! User-side async-result caching (paper §3.4, "Online Asynchronous
+//! Inference" engineering) — DESIGN.md §15.
 //!
-//! Phase 1 (during retrieval) writes the async-inferred user tensors under
-//! a key hashed from (request id, user nickname); phase 2 (pre-ranking)
-//! takes them back.  Consistent hashing over that key pins both phases to
-//! the same RTP worker / cache node, guaranteeing the user-side features
-//! seen by async inference and by the pre-ranking model are identical.
-//! Transport between phases is Base64-encoded (paper §5.3) and the decoded
-//! tensors land in pooled arena buffers.
+//! AIF's headline claim is that interaction-independent components are
+//! "calculated just once".  The original phase-1 handoff keyed results by
+//! (request id, nickname), so two back-to-back requests for the same user
+//! re-ran the full user tower.  [`UserStateCache`] replaces that with a
+//! **cross-request** store keyed by [`UserKey`] `(engine, user, epoch)`:
+//!
+//! * entries live in a [`ShardedLru`] with a TTL (staleness bound) and a
+//!   byte budget (weighed by [`UserAsync::size_bytes`]);
+//! * a **single-flight in-flight map** coalesces concurrent misses: N
+//!   requests for a hot user join ONE `user_tower` RTP call, parking on a
+//!   shared [`Flight`] result slot — the loser of the insert race never
+//!   issues a duplicate call;
+//! * `epoch` is bumped on scenario reload and on feature-store / nearline
+//!   version changes (composed by `ServingCore::user_epoch`), so stale
+//!   state is invalidated by KEY — old entries simply stop matching and
+//!   age out via TTL/LRU.
+//!
+//! Cached tensors are [detached][UserAsync::detached] to owned storage on
+//! insert: a long-lived cache entry must never pin an `ArenaPool` buffer.
+//!
+//! The pre-reuse request-scoped behavior ([`UserVecCache`]: phase 1 puts
+//! under a hash of (request id, nickname), phase 2 takes exactly once,
+//! Base64 transport accounting per §5.3) is preserved bit-for-bit behind
+//! `user_reuse = false` — consistent hashing over that key pins both
+//! phases to the same RTP worker either way.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
+use super::lru::ShardedLru;
 use crate::runtime::Tensor;
 
 /// Everything the online-async phase produced for one request.
@@ -42,6 +62,31 @@ impl UserAsync {
             + self.seq_sign_packed.len()
             + self.long_seq.len() * 4
     }
+
+    /// Copy of `self` whose tensors own their storage: arena-backed
+    /// tensors are deep-copied, owned ones share their `Arc`.  Cache
+    /// inserts go through this so a long-lived entry can never pin a
+    /// pooled buffer.
+    pub fn detached(&self) -> UserAsync {
+        UserAsync {
+            u_vec: self.u_vec.detached(),
+            bea_v: self.bea_v.detached(),
+            seq_emb: self.seq_emb.detached(),
+            din_base: self.din_base.detached(),
+            din_g: self.din_g.detached(),
+            seq_sign_packed: Arc::clone(&self.seq_sign_packed),
+            long_seq: self.long_seq.clone(),
+        }
+    }
+
+    /// Whether any tensor still rides arena storage (leak tests).
+    pub fn is_pooled(&self) -> bool {
+        self.u_vec.is_pooled()
+            || self.bea_v.is_pooled()
+            || self.seq_emb.is_pooled()
+            || self.din_base.is_pooled()
+            || self.din_g.is_pooled()
+    }
 }
 
 /// Request-scoped key: hash of (request id, user nickname).
@@ -65,7 +110,509 @@ impl RequestKey {
     }
 }
 
-/// Sharded store of in-flight async results.
+/// Cross-request cache key.  `engine` salts per-scenario state (a reload
+/// allocates a fresh engine id), `epoch` invalidates by version: entries
+/// written under an older epoch never match and age out on their own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct UserKey {
+    pub engine: u64,
+    pub user: u32,
+    pub epoch: u64,
+}
+
+impl UserKey {
+    pub fn new(engine: u64, user: u32, epoch: u64) -> UserKey {
+        UserKey {
+            engine,
+            user,
+            epoch,
+        }
+    }
+
+    /// FNV-1a over the key fields — stable across processes, so
+    /// consistent-hash worker routing stays reproducible (all requests
+    /// for one (user, epoch) pin to one RTP worker, §3.4).
+    pub fn hash64(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self
+            .engine
+            .to_le_bytes()
+            .iter()
+            .chain(self.user.to_le_bytes().iter())
+            .chain(self.epoch.to_le_bytes().iter())
+        {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// How one request obtained its user-side tensors (`ScoreTrace`
+/// `user_side` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UserSide {
+    /// Cache probe returned a live entry; phase 1 was skipped entirely.
+    Hit,
+    /// Cold (user, epoch): this request led the single-flight and paid
+    /// the `user_tower` call.  Also every request under
+    /// `user_reuse = false`.
+    Miss,
+    /// Another request's flight was already computing this (user, epoch);
+    /// this request parked on its result slot instead of duplicating the
+    /// call.
+    Joined,
+}
+
+impl UserSide {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            UserSide::Hit => "hit",
+            UserSide::Miss => "miss",
+            UserSide::Joined => "joined",
+        }
+    }
+}
+
+/// What a flight resolves to: the (shared) async result plus the leader's
+/// compute time, or the leader's error (stringly — `anyhow::Error` is not
+/// `Clone`, and every waiter needs a copy).
+pub type FlightResult = Result<(Arc<UserAsync>, Duration), String>;
+
+/// Shared result slot of one in-flight `user_tower` computation.  The
+/// leader publishes exactly once; any number of waiters park on `wait`.
+pub struct Flight {
+    slot: Mutex<Option<FlightResult>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn publish(&self, result: FlightResult) {
+        let mut slot = self.slot.lock().unwrap();
+        debug_assert!(slot.is_none(), "flight published twice");
+        *slot = Some(result);
+        self.cv.notify_all();
+    }
+
+    /// Block until the leader publishes; every waiter gets a clone.
+    pub fn wait(&self) -> FlightResult {
+        let mut slot = self.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        slot.as_ref().unwrap().clone()
+    }
+}
+
+/// RAII completion guard for a single-flight leader.  The leader's task
+/// calls [`FlightGuard::complete`] with its result; if the task unwinds
+/// first (a panic anywhere in the compute path), `Drop` publishes an
+/// error and retires the flight, so waiters FAIL instead of hanging
+/// forever — the legacy channel path failed cleanly on panic (the
+/// dropped `Sender` errored the `recv`), and so must this one.
+pub struct FlightGuard {
+    cache: Arc<UserStateCache>,
+    key: UserKey,
+    flight: Arc<Flight>,
+    done: bool,
+}
+
+impl FlightGuard {
+    pub fn new(
+        cache: Arc<UserStateCache>,
+        key: UserKey,
+        flight: Arc<Flight>,
+    ) -> FlightGuard {
+        FlightGuard {
+            cache,
+            key,
+            flight,
+            done: false,
+        }
+    }
+
+    /// Complete the flight with the leader's result (exactly once).
+    pub fn complete(
+        mut self,
+        result: Result<(UserAsync, Duration), String>,
+    ) {
+        self.done = true;
+        self.cache.complete(self.key, &self.flight, result);
+    }
+}
+
+impl Drop for FlightGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            self.cache.complete(
+                self.key,
+                &self.flight,
+                Err("user async task panicked before completing".into()),
+            );
+        }
+    }
+}
+
+/// RAII SIM pre-warm slot: released on drop, so a panicking warmer task
+/// re-opens the slot instead of disabling pre-warming for that user.
+pub struct SimPrewarm {
+    cache: Arc<UserStateCache>,
+    budget_key: u32,
+    user: u32,
+}
+
+impl Drop for SimPrewarm {
+    fn drop(&mut self) {
+        self.cache.end_sim_prewarm(self.budget_key, self.user);
+    }
+}
+
+/// Outcome of [`UserStateCache::claim`].
+pub enum Claim {
+    /// Live cached entry — skip the async phase.
+    Hit(Arc<UserAsync>),
+    /// This request leads: compute and [`UserStateCache::complete`] the
+    /// flight (exactly one claimant per (user, epoch) gets this).
+    Lead(Arc<Flight>),
+    /// Another request is computing — park on the flight at join time.
+    Join(Arc<Flight>),
+}
+
+/// Counters behind the `/metrics` `user_cache` block.
+#[derive(Debug, Default)]
+pub struct UserCacheStats {
+    pub hits: AtomicU64,
+    /// Cold claims that led a flight (== `user_tower` computations).
+    pub misses: AtomicU64,
+    /// Claims that joined an existing flight instead of duplicating it.
+    pub single_flight_joins: AtomicU64,
+    pub inserts: AtomicU64,
+    /// SIM pre-warm spawns skipped because one was already in flight.
+    pub sim_prewarm_dedup: AtomicU64,
+    /// §5.3 Base64 transport accounting (u_vec + bea_v per computation).
+    pub bytes_transferred: AtomicU64,
+}
+
+enum Mode {
+    Shared {
+        lru: ShardedLru<UserKey, Arc<UserAsync>>,
+        /// Single-flight map: key -> in-flight computation.  Sharded by
+        /// `UserKey::hash64` like the LRU, so hot-key coordination never
+        /// funnels through one mutex.
+        inflight: Vec<Mutex<HashMap<UserKey, Arc<Flight>>>>,
+        /// (budget key, user) pairs with a SIM pre-warm task in flight —
+        /// concurrent requests for a hot user spawn ONE warmer.
+        sim_inflight: Mutex<HashSet<(u32, u32)>>,
+    },
+    RequestScoped(UserVecCache),
+}
+
+/// The user-side state cache: shared cross-request mode (the default), or
+/// the legacy request-scoped handoff (`user_reuse = false`).
+pub struct UserStateCache {
+    mode: Mode,
+    /// Reload-driven half of the epoch (`ServingCore::user_epoch` adds
+    /// the nearline and feature-store versions on top).
+    epoch: AtomicU64,
+    pub stats: UserCacheStats,
+}
+
+impl UserStateCache {
+    /// Cross-request mode: `entries` total across `n_shards`, optional
+    /// TTL, `max_bytes` byte budget (0 = unlimited).
+    pub fn shared(
+        entries: usize,
+        ttl: Option<Duration>,
+        max_bytes: usize,
+        n_shards: usize,
+    ) -> UserStateCache {
+        let n_shards = n_shards.max(1);
+        UserStateCache {
+            mode: Mode::Shared {
+                lru: ShardedLru::with_limits(
+                    entries.max(n_shards),
+                    n_shards,
+                    ttl,
+                    max_bytes,
+                    Some(Box::new(|ua: &Arc<UserAsync>| ua.size_bytes())),
+                ),
+                inflight: (0..n_shards)
+                    .map(|_| Mutex::new(HashMap::new()))
+                    .collect(),
+                sim_inflight: Mutex::new(HashSet::new()),
+            },
+            epoch: AtomicU64::new(0),
+            stats: UserCacheStats::default(),
+        }
+    }
+
+    /// Legacy request-scoped mode (`--user-reuse false`): today's
+    /// two-phase put/take handoff, bit-for-bit.
+    pub fn request_scoped(n_shards: usize) -> UserStateCache {
+        UserStateCache {
+            mode: Mode::RequestScoped(UserVecCache::new(n_shards)),
+            epoch: AtomicU64::new(0),
+            stats: UserCacheStats::default(),
+        }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        matches!(self.mode, Mode::Shared { .. })
+    }
+
+    /// Reload-driven epoch component.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Invalidate every live entry by moving the key space forward.
+    pub fn bump_epoch(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn shared_parts(
+        &self,
+    ) -> (
+        &ShardedLru<UserKey, Arc<UserAsync>>,
+        &[Mutex<HashMap<UserKey, Arc<Flight>>>],
+    ) {
+        match &self.mode {
+            Mode::Shared { lru, inflight, .. } => {
+                (lru, inflight.as_slice())
+            }
+            Mode::RequestScoped(_) => {
+                unreachable!("single-flight API on a request-scoped cache")
+            }
+        }
+    }
+
+    /// Probe the cache and, on miss, race for the flight: exactly one
+    /// claimant per (user, epoch) gets [`Claim::Lead`]; everyone else
+    /// hits or joins.  Shared mode only.
+    pub fn claim(&self, key: UserKey) -> Claim {
+        let (lru, inflight) = self.shared_parts();
+        if let Some(ua) = lru.get(&key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Claim::Hit(ua);
+        }
+        let shard =
+            &inflight[(key.hash64() as usize) % inflight.len()];
+        let mut map = shard.lock().unwrap();
+        // Double-check under the shard lock: a leader completing between
+        // the probe above and this lock inserts into the LRU BEFORE
+        // removing its flight, so one of these two re-checks must see it.
+        if let Some(ua) = lru.get(&key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Claim::Hit(ua);
+        }
+        if let Some(flight) = map.get(&key) {
+            self.stats
+                .single_flight_joins
+                .fetch_add(1, Ordering::Relaxed);
+            return Claim::Join(Arc::clone(flight));
+        }
+        let flight = Arc::new(Flight::new());
+        map.insert(key, Arc::clone(&flight));
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        Claim::Lead(flight)
+    }
+
+    /// Leader completion: detach + insert on success, publish to every
+    /// waiter, retire the flight.  Errors are published but NOT cached —
+    /// the next claimant retries.
+    pub fn complete(
+        &self,
+        key: UserKey,
+        flight: &Flight,
+        result: Result<(UserAsync, Duration), String>,
+    ) {
+        let (lru, inflight) = self.shared_parts();
+        let published: FlightResult = match result {
+            Ok((ua, elapsed)) => {
+                // Account the Base64 transport of the compact user
+                // vectors once per computation (§5.3) — hits are served
+                // node-local under consistent hashing and move nothing.
+                let wire =
+                    crate::util::base64::encoded_len_f32(ua.u_vec.len())
+                        + crate::util::base64::encoded_len_f32(
+                            ua.bea_v.len(),
+                        );
+                self.stats
+                    .bytes_transferred
+                    .fetch_add(wire as u64, Ordering::Relaxed);
+                // Detach: the cache outlives the request; it must not
+                // pin arena-pooled RTP buffers.
+                let ua = Arc::new(ua.detached());
+                lru.insert(key, Arc::clone(&ua));
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+                Ok((ua, elapsed))
+            }
+            Err(e) => Err(e),
+        };
+        // Retire AFTER the LRU insert (a claimant that misses the flight
+        // is guaranteed to find the entry — see the claim double-check)
+        // but BEFORE publishing: the moment any waiter unparks, the
+        // in-flight map is already quiescent, so `inflight_len() == 0`
+        // holds deterministically once every request has returned.
+        inflight[(key.hash64() as usize) % inflight.len()]
+            .lock()
+            .unwrap()
+            .remove(&key);
+        flight.publish(published);
+    }
+
+    /// Try to become the one SIM pre-warmer for (budget, user).  `false`
+    /// means another request's warmer is already in flight — skip the
+    /// spawn (the cache will be warm either way).
+    pub fn begin_sim_prewarm(&self, budget_key: u32, user: u32) -> bool {
+        match &self.mode {
+            Mode::Shared { sim_inflight, .. } => {
+                let fresh = sim_inflight
+                    .lock()
+                    .unwrap()
+                    .insert((budget_key, user));
+                if !fresh {
+                    self.stats
+                        .sim_prewarm_dedup
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                fresh
+            }
+            Mode::RequestScoped(_) => true,
+        }
+    }
+
+    /// Pre-warm task finished (success or not): allow the next spawn.
+    pub fn end_sim_prewarm(&self, budget_key: u32, user: u32) {
+        if let Mode::Shared { sim_inflight, .. } = &self.mode {
+            sim_inflight.lock().unwrap().remove(&(budget_key, user));
+        }
+    }
+
+    /// [`Self::begin_sim_prewarm`] as an RAII slot: `None` when another
+    /// request's warmer is already in flight; dropping the slot (normal
+    /// completion OR an unwinding warmer) releases it.
+    pub fn sim_prewarm(
+        self: &Arc<Self>,
+        budget_key: u32,
+        user: u32,
+    ) -> Option<SimPrewarm> {
+        self.begin_sim_prewarm(budget_key, user).then(|| SimPrewarm {
+            cache: Arc::clone(self),
+            budget_key,
+            user,
+        })
+    }
+
+    // ---- legacy request-scoped handoff (user_reuse = false) ------------
+
+    pub fn put(&self, key: RequestKey, value: UserAsync) {
+        match &self.mode {
+            Mode::RequestScoped(c) => c.put(key, value),
+            Mode::Shared { .. } => {
+                unreachable!("request-scoped put on the shared user cache")
+            }
+        }
+    }
+
+    pub fn take(&self, key: RequestKey) -> Option<UserAsync> {
+        match &self.mode {
+            Mode::RequestScoped(c) => c.take(key),
+            Mode::Shared { .. } => {
+                unreachable!("request-scoped take on the shared user cache")
+            }
+        }
+    }
+
+    // ---- introspection --------------------------------------------------
+
+    /// Live cached entries (shared) / parked request results (legacy).
+    pub fn entries(&self) -> usize {
+        match &self.mode {
+            Mode::Shared { lru, .. } => lru.len(),
+            Mode::RequestScoped(c) => c.len(),
+        }
+    }
+
+    /// Flights currently computing.  0 when the system is quiescent —
+    /// the leak check the request-scoped `is_empty` used to provide.
+    pub fn inflight_len(&self) -> usize {
+        match &self.mode {
+            Mode::Shared { inflight, .. } => {
+                inflight.iter().map(|s| s.lock().unwrap().len()).sum()
+            }
+            Mode::RequestScoped(c) => c.len(),
+        }
+    }
+
+    /// Resident bytes of the cached user-side tensors.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.mode {
+            Mode::Shared { lru, .. } => lru.resident_bytes(),
+            Mode::RequestScoped(_) => 0,
+        }
+    }
+
+    /// JSON block for `/metrics` (`composed_epoch` is the full epoch the
+    /// serving keys carry: reload bumps + substrate versions).
+    pub fn stats_snapshot(
+        &self,
+        composed_epoch: u64,
+    ) -> crate::util::json::Value {
+        let mut o = crate::util::json::Object::new();
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        match &self.mode {
+            Mode::Shared { lru, .. } => {
+                o.insert("mode", "shared");
+                o.insert("hits", ld(&self.stats.hits));
+                o.insert("misses", ld(&self.stats.misses));
+                o.insert(
+                    "single_flight_joins",
+                    ld(&self.stats.single_flight_joins),
+                );
+                o.insert("inserts", ld(&self.stats.inserts));
+                o.insert(
+                    "evictions",
+                    ld(&lru.stats.evictions),
+                );
+                o.insert("expired", ld(&lru.stats.expired));
+                o.insert("entries", self.entries());
+                o.insert("resident_bytes", self.resident_bytes());
+                o.insert("inflight", self.inflight_len());
+                o.insert(
+                    "sim_prewarm_dedup",
+                    ld(&self.stats.sim_prewarm_dedup),
+                );
+                o.insert("epoch", composed_epoch);
+            }
+            Mode::RequestScoped(c) => {
+                o.insert("mode", "request_scoped");
+                o.insert("puts", ld(&c.puts));
+                o.insert("takes", ld(&c.takes));
+                o.insert("misses", ld(&c.misses));
+                o.insert("entries", c.len());
+                o.insert("epoch", composed_epoch);
+            }
+        }
+        let wire = match &self.mode {
+            Mode::Shared { .. } => ld(&self.stats.bytes_transferred),
+            Mode::RequestScoped(c) => ld(&c.bytes_transferred),
+        };
+        o.insert("bytes_transferred", wire);
+        crate::util::json::Value::Obj(o)
+    }
+}
+
+/// Sharded store of in-flight async results — the legacy request-scoped
+/// engine behind [`UserStateCache::request_scoped`] (phase 1 puts, phase 2
+/// takes exactly once).
 pub struct UserVecCache {
     shards: Vec<Mutex<HashMap<RequestKey, UserAsync>>>,
     pub puts: AtomicU64,
@@ -96,9 +643,10 @@ impl UserVecCache {
     pub fn put(&self, key: RequestKey, value: UserAsync) {
         // Account the Base64 transport of the compact user vectors (the
         // big tensors stay node-local under consistent hashing; only u_vec
-        // and bea_v travel with the pre-rank request, §5.3).
-        let wire = crate::util::base64::encode_f32(value.u_vec.data()).len()
-            + crate::util::base64::encode_f32(value.bea_v.data()).len();
+        // and bea_v travel with the pre-rank request, §5.3).  Closed-form
+        // length: same counter value, no throwaway encode.
+        let wire = crate::util::base64::encoded_len_f32(value.u_vec.len())
+            + crate::util::base64::encoded_len_f32(value.bea_v.len());
         self.bytes_transferred
             .fetch_add(wire as u64, Ordering::Relaxed);
         let mut shard = self.shard(key).lock().unwrap();
@@ -157,6 +705,15 @@ mod tests {
     }
 
     #[test]
+    fn user_key_hash_is_stable_and_distinct() {
+        let a = UserKey::new(1, 7, 0);
+        assert_eq!(a.hash64(), UserKey::new(1, 7, 0).hash64());
+        assert_ne!(a.hash64(), UserKey::new(2, 7, 0).hash64());
+        assert_ne!(a.hash64(), UserKey::new(1, 8, 0).hash64());
+        assert_ne!(a.hash64(), UserKey::new(1, 7, 1).hash64());
+    }
+
+    #[test]
     fn put_take_roundtrip_consumes() {
         let cache = UserVecCache::new(4);
         let k = RequestKey::new(7, "u7");
@@ -174,5 +731,159 @@ mod tests {
         let cache = UserVecCache::new(1);
         cache.put(RequestKey::new(1, "x"), dummy(2.0));
         assert!(cache.bytes_transferred.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn claim_hit_after_complete() {
+        let cache = UserStateCache::shared(64, None, 0, 4);
+        let key = UserKey::new(0, 5, 0);
+        let Claim::Lead(flight) = cache.claim(key) else {
+            panic!("first claim must lead");
+        };
+        cache.complete(
+            key,
+            &flight,
+            Ok((dummy(3.0), Duration::from_millis(1))),
+        );
+        let (ua, _) = flight.wait().unwrap();
+        assert_eq!(ua.u_vec.data(), &[3.0, 3.0]);
+        match cache.claim(key) {
+            Claim::Hit(ua) => assert_eq!(ua.u_vec.data(), &[3.0, 3.0]),
+            _ => panic!("completed key must hit"),
+        }
+        assert_eq!(cache.inflight_len(), 0, "flight retired");
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        assert!(cache.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn concurrent_claims_share_one_flight() {
+        let cache = Arc::new(UserStateCache::shared(64, None, 0, 4));
+        let key = UserKey::new(1, 9, 0);
+        let Claim::Lead(flight) = cache.claim(key) else {
+            panic!("first claim must lead");
+        };
+        // While the leader is "computing", every other claim joins.
+        let mut waiters = Vec::new();
+        for _ in 0..6 {
+            let cache = Arc::clone(&cache);
+            waiters.push(std::thread::spawn(move || {
+                match cache.claim(key) {
+                    Claim::Lead(_) => panic!("duplicate leader"),
+                    Claim::Hit(ua) => ua.u_vec.data()[0],
+                    Claim::Join(f) => {
+                        f.wait().unwrap().0.u_vec.data()[0]
+                    }
+                }
+            }));
+        }
+        // Give the waiters time to park, then publish.
+        std::thread::sleep(Duration::from_millis(20));
+        cache.complete(
+            key,
+            &flight,
+            Ok((dummy(4.0), Duration::from_millis(1))),
+        );
+        for w in waiters {
+            assert_eq!(w.join().unwrap(), 4.0);
+        }
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.inflight_len(), 0);
+    }
+
+    #[test]
+    fn unwound_leader_fails_waiters_instead_of_hanging() {
+        let cache = Arc::new(UserStateCache::shared(64, None, 0, 4));
+        let key = UserKey::new(0, 4, 0);
+        let Claim::Lead(flight) = cache.claim(key) else {
+            panic!("lead");
+        };
+        let guard =
+            FlightGuard::new(Arc::clone(&cache), key, Arc::clone(&flight));
+        let waiter = {
+            let flight = Arc::clone(&flight);
+            std::thread::spawn(move || flight.wait())
+        };
+        // The leader's task panics before completing: the guard must
+        // publish an error and retire the flight.
+        let leader = std::thread::spawn(move || {
+            let _guard = guard;
+            panic!("compute exploded");
+        });
+        assert!(leader.join().is_err());
+        assert!(
+            waiter.join().unwrap().is_err(),
+            "waiters must fail, not hang"
+        );
+        assert_eq!(cache.inflight_len(), 0, "flight retired by the guard");
+        assert!(
+            matches!(cache.claim(key), Claim::Lead(_)),
+            "next claimant retries as a fresh leader"
+        );
+    }
+
+    #[test]
+    fn errors_propagate_but_are_not_cached() {
+        let cache = UserStateCache::shared(64, None, 0, 4);
+        let key = UserKey::new(0, 2, 0);
+        let Claim::Lead(flight) = cache.claim(key) else {
+            panic!("lead");
+        };
+        cache.complete(key, &flight, Err("tower down".into()));
+        assert!(flight.wait().is_err());
+        assert_eq!(cache.entries(), 0, "errors must not be cached");
+        assert!(
+            matches!(cache.claim(key), Claim::Lead(_)),
+            "next claimant retries as a fresh leader"
+        );
+    }
+
+    #[test]
+    fn epoch_changes_the_key_space() {
+        let cache = UserStateCache::shared(64, None, 0, 4);
+        let k0 = UserKey::new(0, 3, cache.epoch());
+        let Claim::Lead(f) = cache.claim(k0) else { panic!() };
+        cache.complete(k0, &f, Ok((dummy(1.0), Duration::ZERO)));
+        assert!(matches!(cache.claim(k0), Claim::Hit(_)));
+        let e = cache.bump_epoch();
+        let k1 = UserKey::new(0, 3, e);
+        assert!(
+            matches!(cache.claim(k1), Claim::Lead(_)),
+            "bumped epoch must miss (old state invalidated by key)"
+        );
+    }
+
+    #[test]
+    fn sim_prewarm_single_flight() {
+        let cache = UserStateCache::shared(64, None, 0, 4);
+        assert!(cache.begin_sim_prewarm(7, 1));
+        assert!(!cache.begin_sim_prewarm(7, 1), "duplicate deduped");
+        assert!(cache.begin_sim_prewarm(7, 2), "other user unaffected");
+        cache.end_sim_prewarm(7, 1);
+        assert!(cache.begin_sim_prewarm(7, 1), "slot reopens after end");
+        assert_eq!(
+            cache.stats.sim_prewarm_dedup.load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn sim_prewarm_slot_releases_on_drop_and_unwind() {
+        let cache = Arc::new(UserStateCache::shared(64, None, 0, 4));
+        let slot = cache.sim_prewarm(3, 8).expect("first slot");
+        assert!(cache.sim_prewarm(3, 8).is_none(), "in flight: deduped");
+        drop(slot);
+        let slot = cache.sim_prewarm(3, 8).expect("slot reopened");
+        // A panicking warmer must release the slot too.
+        let t = std::thread::spawn(move || {
+            let _slot = slot;
+            panic!("warmer exploded");
+        });
+        assert!(t.join().is_err());
+        assert!(
+            cache.sim_prewarm(3, 8).is_some(),
+            "slot must reopen after an unwound warmer"
+        );
     }
 }

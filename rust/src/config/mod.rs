@@ -164,6 +164,20 @@ pub struct ServingConfig {
     pub lru_capacity: usize,
     pub lru_shards: usize,
     pub user_cache_shards: usize,
+    /// Cross-request user-state reuse (DESIGN.md §15): cache async
+    /// user-side tensors by (engine, user, epoch) with single-flight
+    /// dedup, so back-to-back requests for one user pay one `user_tower`
+    /// call.  Score-identical; `false` restores the request-scoped
+    /// put/take handoff bit-for-bit.
+    pub user_reuse: bool,
+    /// Max cached (user, epoch) entries across shards.
+    pub user_cache_entries: usize,
+    /// Staleness bound for cached user state, milliseconds from insert
+    /// (0 = no TTL).
+    pub user_cache_ttl_ms: u64,
+    /// Byte budget for cached user-side tensors (0 = unlimited); the LRU
+    /// tail is evicted until the resident bytes fit.
+    pub user_cache_bytes: usize,
     pub arena_retain: usize,
     /// Zero-copy hot path (DESIGN.md §14): assemble mini-batch tensors
     /// into arena-pooled buffers instead of fresh heap allocations.
@@ -221,6 +235,13 @@ impl Default for ServingConfig {
             lru_capacity: 8192,
             lru_shards: 16,
             user_cache_shards: 16,
+            user_reuse: true,
+            user_cache_entries: 8192,
+            // Freshness bound: online-async state may be reused for at
+            // most 2s before the tower re-runs (the paper's "0s fresh"
+            // column becomes "<= TTL fresh" with reuse on).
+            user_cache_ttl_ms: 2_000,
+            user_cache_bytes: 64 << 20,
             arena_retain: 32,
             zero_copy: true,
             coalesce: CoalesceConfig::default(),
@@ -258,6 +279,12 @@ impl ServingConfig {
         num!(sim_parse_us, "sim_parse_us", f64);
         num!(lru_capacity, "lru_capacity", usize);
         num!(lru_shards, "lru_shards", usize);
+        num!(user_cache_entries, "user_cache_entries", usize);
+        num!(user_cache_ttl_ms, "user_cache_ttl_ms", u64);
+        num!(user_cache_bytes, "user_cache_bytes", usize);
+        if let Some(b) = get("user_reuse").and_then(Value::as_bool) {
+            c.user_reuse = b;
+        }
         if let Some(x) = get("artifacts_dir").and_then(Value::as_str) {
             c.artifacts_dir = x.to_string();
         }
@@ -459,6 +486,26 @@ mod tests {
         let v = Value::parse(r#"{"zero_copy": false}"#).unwrap();
         let c = ServingConfig::from_json(&v).unwrap();
         assert!(!c.zero_copy);
+    }
+
+    #[test]
+    fn user_reuse_defaults_on_and_parses() {
+        let c = ServingConfig::default();
+        assert!(c.user_reuse, "cross-request reuse is the default");
+        assert_eq!(c.user_cache_entries, 8192);
+        assert_eq!(c.user_cache_ttl_ms, 2_000);
+        assert_eq!(c.user_cache_bytes, 64 << 20);
+
+        let v = Value::parse(
+            r#"{"user_reuse": false, "user_cache_entries": 512,
+                "user_cache_ttl_ms": 0, "user_cache_bytes": 1048576}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert!(!c.user_reuse);
+        assert_eq!(c.user_cache_entries, 512);
+        assert_eq!(c.user_cache_ttl_ms, 0);
+        assert_eq!(c.user_cache_bytes, 1 << 20);
     }
 
     #[test]

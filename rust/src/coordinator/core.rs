@@ -19,7 +19,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::router::Router;
-use crate::cache::{ArenaPool, ShardedLru, UserVecCache};
+use crate::cache::{ArenaPool, ShardedLru, UserStateCache};
 use crate::config::{CoalesceConfig, ServingConfig};
 use crate::features::{FeatureStore, World};
 use crate::lsh::Hasher;
@@ -64,7 +64,10 @@ pub struct ServingCore {
     pub store: Arc<FeatureStore>,
     pub rtp: Arc<RtpPool>,
     pub router: Router,
-    pub user_cache: Arc<UserVecCache>,
+    /// Cross-request user-state cache + single-flight layer (DESIGN.md
+    /// §15), or the legacy request-scoped handoff when
+    /// `cfg.user_reuse = false`.
+    pub user_cache: Arc<UserStateCache>,
     /// (budget key, user, category) -> parsed SIM subsequence.
     pub sim_cache: Arc<ShardedLru<SimKey, Arc<Vec<u32>>>>,
     pub n2o: Arc<N2oTable>,
@@ -113,9 +116,21 @@ impl ServingCore {
             manifest.dim("N_BRIDGE"),
             manifest.dim("D_LSH_BITS"),
         ));
+        let user_cache = Arc::new(if cfg.user_reuse {
+            UserStateCache::shared(
+                cfg.user_cache_entries,
+                (cfg.user_cache_ttl_ms > 0).then(|| {
+                    Duration::from_millis(cfg.user_cache_ttl_ms)
+                }),
+                cfg.user_cache_bytes,
+                cfg.user_cache_shards,
+            )
+        } else {
+            UserStateCache::request_scoped(cfg.user_cache_shards)
+        });
         Ok(Arc::new(ServingCore {
             router: Router::new(cfg.n_rtp_workers, 64),
-            user_cache: Arc::new(UserVecCache::new(cfg.user_cache_shards)),
+            user_cache,
             sim_cache: Arc::new(ShardedLru::new(
                 cfg.lru_capacity,
                 cfg.lru_shards,
@@ -143,6 +158,17 @@ impl ServingCore {
     /// Allocate a request id from the auto half of the id space.
     pub fn next_request_id(&self) -> u64 {
         self.req_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// The user-state epoch cache keys carry (DESIGN.md §15): reload
+    /// bumps + the nearline generation + the feature-store version, each
+    /// monotone non-decreasing, so the sum is strictly increasing across
+    /// every invalidation event and an epoch value is never reused.
+    /// Atomic loads only — the hot path pays no lock here.
+    pub fn user_epoch(&self) -> u64 {
+        self.user_cache.epoch()
+            + self.n2o.version_hint()
+            + self.store.version()
     }
 
     /// The arena handle the zero-copy hot path assembles into — `None`
@@ -284,6 +310,8 @@ impl ServingCore {
         // LRU entries: ids only (parsed subsequences).
         total += self.sim_cache.len() * self.world.l_sim_sub * 4;
         total += self.arena.pooled_bytes();
+        // Cross-request user-state entries (0 in request-scoped mode).
+        total += self.user_cache.resident_bytes();
         total
     }
 }

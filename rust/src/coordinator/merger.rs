@@ -194,4 +194,12 @@ impl ScenarioAdmin for Merger {
     fn arena_stats(&self) -> Option<Value> {
         Some(self.core.arena.stats_snapshot())
     }
+
+    fn user_cache_stats(&self) -> Option<Value> {
+        Some(
+            self.core
+                .user_cache
+                .stats_snapshot(self.core.user_epoch()),
+        )
+    }
 }

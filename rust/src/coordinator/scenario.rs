@@ -30,7 +30,8 @@ use super::service::{
     ScoreTrace, ScoredItem, ServeError, StageSpan,
 };
 use crate::cache::{
-    ArenaPool, PooledBuf, RequestKey, ShardedLru, UserAsync,
+    ArenaPool, Claim, Flight, FlightGuard, PooledBuf, RequestKey,
+    ShardedLru, UserAsync, UserKey, UserSide,
 };
 use crate::config::{ScenarioConfig, SimMode};
 use crate::features::{assembly, FeatureStore, World};
@@ -338,96 +339,142 @@ impl ScenarioEngine {
         let request_id = req
             .request_id
             .unwrap_or_else(|| core.next_request_id());
-        let key = RequestKey::new(request_id, &self.nickname(user));
-        let worker = core.router.route(key.0);
 
         // ---- phase 1: online asynchronous user-side inference -----------
-        let async_done = if self.variant.user == "async" {
-            let (tx, rx) = channel::<Result<Duration>>();
-            let store = Arc::clone(&core.store);
-            let world = Arc::clone(&core.world);
-            let rtp = Arc::clone(&core.rtp);
-            let cache = Arc::clone(&core.user_cache);
-            let arena = core.zero_copy_arena();
-            let key2 = key;
-            core.async_pool.spawn(move || {
-                let t0 = Instant::now();
-                let result = (|| -> Result<()> {
-                    let uf = store.fetch_user(user);
-                    // Signatures of the long-term sequence (static table):
-                    // packed bytes feed the SimTier popcount path; the ±1
-                    // plane goes into the tower so it can emit the
-                    // linearized DIN factors.
-                    let packed = packed_signs(&world, &uf.long_seq);
-                    let n_bits = world.w_hash.shape()[0];
-                    // Zero-copy: the tower operands assemble into arena
-                    // buffers too (they retire with the RTP call).
-                    let arena = arena.as_ref();
-                    let mut inputs = assembly::user_tower_inputs_opt(
-                        &world, &uf, arena,
-                    );
-                    inputs.push(Tensor::build_with(
-                        arena,
-                        vec![uf.long_seq.len(), n_bits],
-                        |buf| {
-                            lsh::unpack_plane_into(
-                                &packed,
-                                uf.long_seq.len(),
-                                n_bits,
-                                buf,
-                            )
-                        },
-                    ));
-                    let rx2 = rtp.call_async_on(worker, "user_tower", inputs);
-                    let out = rx2
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("RTP reply dropped"))??;
-                    cache.put(
-                        key2,
-                        UserAsync {
-                            u_vec: out[0].clone(),
-                            bea_v: out[1].clone(),
-                            seq_emb: out[2].clone(),
-                            din_base: out[3].clone(),
-                            din_g: out[4].clone(),
-                            seq_sign_packed: Arc::new(packed),
-                            long_seq: uf.long_seq,
-                        },
-                    );
-                    Ok(())
-                })();
-                let _ = tx.send(result.map(|()| t0.elapsed()));
-            });
-            Some(rx)
-        } else {
-            None
-        };
-
-        // SIM pre-warming runs alongside retrieval too.
-        if self.variant.sim_cross && self.cfg.sim_mode == SimMode::Precached
-        {
-            let store = Arc::clone(&core.store);
-            let world = Arc::clone(&core.world);
-            let sim_cache = Arc::clone(&core.sim_cache);
-            let budget = self.cfg.sim_budget;
-            let bkey = sim_budget_key(budget);
-            let parse_us = core.cfg.sim_parse_us;
-            core.async_pool.spawn(move || {
-                // Only hit the remote store if any of the user's categories
-                // is cold; one multi-get covers them all (Figure 5).
-                let cats = world.user_sim_categories(user);
-                let cold = cats.iter().any(|&c| {
-                    sim_cache.get(&(bkey, user as u32, c)).is_none()
-                });
-                if cold {
-                    for (cat, sub) in
-                        store.fetch_sim_all(user, budget, parse_us)
-                    {
-                        sim_cache
-                            .insert((bkey, user as u32, cat), Arc::new(sub));
+        // Cross-request reuse (the default, DESIGN.md §15): probe the
+        // shared cache keyed by (engine, user, epoch).  A hit skips the
+        // async phase entirely — phase 1 collapses to this probe.  A cold
+        // key races for the single-flight slot: exactly ONE request leads
+        // the `user_tower` call, concurrent requests for the same hot
+        // user park on its result.  `user_reuse = false` keeps the
+        // request-scoped put/take handoff bit-for-bit.
+        let mut user_side: Option<UserSide> = None;
+        let mut legacy_key: Option<RequestKey> = None;
+        let phase1 = if self.variant.user == "async" {
+            if core.user_cache.is_shared() {
+                let ukey = UserKey::new(
+                    self.engine_id,
+                    user as u32,
+                    core.user_epoch(),
+                );
+                match core.user_cache.claim(ukey) {
+                    Claim::Hit(ua) => {
+                        user_side = Some(UserSide::Hit);
+                        Phase1::Ready(ua)
+                    }
+                    Claim::Join(flight) => {
+                        user_side = Some(UserSide::Joined);
+                        Phase1::Flight(flight)
+                    }
+                    Claim::Lead(flight) => {
+                        user_side = Some(UserSide::Miss);
+                        // Consistent-hash pinning by the SHARED key: every
+                        // phase of every request for this (user, epoch)
+                        // lands on one RTP worker (§3.4).
+                        let worker = core.router.route(ukey.hash64());
+                        let store = Arc::clone(&core.store);
+                        let world = Arc::clone(&core.world);
+                        let rtp = Arc::clone(&core.rtp);
+                        let arena = core.zero_copy_arena();
+                        // Guarded completion: if the task unwinds, the
+                        // guard publishes an error and retires the
+                        // flight — waiters fail instead of hanging.
+                        let guard = FlightGuard::new(
+                            Arc::clone(&core.user_cache),
+                            ukey,
+                            Arc::clone(&flight),
+                        );
+                        core.async_pool.spawn(move || {
+                            let t0 = Instant::now();
+                            let result = compute_user_async(
+                                &store,
+                                &world,
+                                &rtp,
+                                arena.as_ref(),
+                                worker,
+                                user,
+                            );
+                            // Waiters (and this request) resolve through
+                            // the flight; abandonment of any one request
+                            // cannot orphan the computation.
+                            guard.complete(
+                                result
+                                    .map(|ua| (ua, t0.elapsed()))
+                                    .map_err(|e| format!("{e:#}")),
+                            );
+                        });
+                        Phase1::Flight(flight)
                     }
                 }
-            });
+            } else {
+                user_side = Some(UserSide::Miss);
+                let key = RequestKey::new(request_id, &self.nickname(user));
+                legacy_key = Some(key);
+                let worker = core.router.route(key.0);
+                let (tx, rx) = channel::<Result<Duration>>();
+                let store = Arc::clone(&core.store);
+                let world = Arc::clone(&core.world);
+                let rtp = Arc::clone(&core.rtp);
+                let cache = Arc::clone(&core.user_cache);
+                let arena = core.zero_copy_arena();
+                core.async_pool.spawn(move || {
+                    let t0 = Instant::now();
+                    let result = compute_user_async(
+                        &store,
+                        &world,
+                        &rtp,
+                        arena.as_ref(),
+                        worker,
+                        user,
+                    )
+                    .map(|ua| {
+                        cache.put(key, ua);
+                        t0.elapsed()
+                    });
+                    let _ = tx.send(result);
+                });
+                Phase1::Legacy(rx)
+            }
+        } else {
+            Phase1::None
+        };
+
+        // SIM pre-warming runs alongside retrieval too.  With the shared
+        // cache it dedups through the same single-flight layer: N
+        // concurrent requests for a hot user spawn ONE warmer.
+        if self.variant.sim_cross && self.cfg.sim_mode == SimMode::Precached
+        {
+            let budget = self.cfg.sim_budget;
+            let bkey = sim_budget_key(budget);
+            if let Some(slot) =
+                core.user_cache.sim_prewarm(bkey, user as u32)
+            {
+                let store = Arc::clone(&core.store);
+                let world = Arc::clone(&core.world);
+                let sim_cache = Arc::clone(&core.sim_cache);
+                let parse_us = core.cfg.sim_parse_us;
+                core.async_pool.spawn(move || {
+                    // Slot released on every exit, panics included.
+                    let _slot = slot;
+                    // Only hit the remote store if any of the user's
+                    // categories is cold; one multi-get covers them all
+                    // (Figure 5).
+                    let cats = world.user_sim_categories(user);
+                    let cold = cats.iter().any(|&c| {
+                        sim_cache.get(&(bkey, user as u32, c)).is_none()
+                    });
+                    if cold {
+                        for (cat, sub) in
+                            store.fetch_sim_all(user, budget, parse_us)
+                        {
+                            sim_cache.insert(
+                                (bkey, user as u32, cat),
+                                Arc::new(sub),
+                            );
+                        }
+                    }
+                });
+            }
         }
 
         // ---- retrieval (upstream stage; blocks) -------------------------
@@ -445,28 +492,68 @@ impl ScenarioEngine {
         let retrieval = t_r.elapsed();
 
         // ---- join phase 1 -------------------------------------------------
-        let user_async = match async_done {
-            Some(rx) => Some(rx.recv().map_err(|_| {
-                ServeError::Internal("async phase died".into())
-            })??),
-            None => None,
-        };
+        // `user_async` is the time THIS request spent on / waiting for
+        // the user side: the leader's compute time, a joiner's park time,
+        // `None` on a cache hit (no async phase ran at all).
+        let (mut ua, user_async): (Option<Arc<UserAsync>>, Option<Duration>) =
+            match &phase1 {
+                Phase1::None => (None, None),
+                Phase1::Ready(ua) => (Some(Arc::clone(ua)), None),
+                Phase1::Flight(flight) => {
+                    let t_w = Instant::now();
+                    match flight.wait() {
+                        Ok((ua, computed)) => {
+                            let d = if user_side == Some(UserSide::Joined)
+                            {
+                                t_w.elapsed()
+                            } else {
+                                computed
+                            };
+                            (Some(ua), Some(d))
+                        }
+                        Err(e) => {
+                            return Err(ServeError::Internal(format!(
+                                "user async phase failed: {e}"
+                            )))
+                        }
+                    }
+                }
+                Phase1::Legacy(rx) => {
+                    let d = rx.recv().map_err(|_| {
+                        ServeError::Internal("async phase died".into())
+                    })??;
+                    (None, Some(d)) // resolved by take() below
+                }
+            };
 
         // ---- deadline gate before the pre-rank phase ---------------------
         if let Err(e) = check_deadline(req.deadline, t_total) {
-            // The async result was parked for phase 2; drop it so an
-            // abandoned request doesn't leak a cache entry.
-            if self.variant.user == "async" {
+            // Request-scoped entries are keyed by THIS request and must
+            // not leak when it is abandoned.  Shared entries stay: they
+            // are reusable state other requests for this user will hit —
+            // abandoning one request must not evict it (the LRU's
+            // TTL/byte budget bounds residency instead).
+            if let Some(key) = legacy_key {
                 let _ = core.user_cache.take(key);
             }
             return Err(e);
+        }
+        if let Some(key) = legacy_key {
+            // Legacy two-phase handoff: phase 2 consumes exactly once.
+            ua = Some(Arc::new(core.user_cache.take(key).ok_or_else(
+                || {
+                    ServeError::Internal(format!(
+                        "user async result missing for {key:?}"
+                    ))
+                },
+            )?));
         }
 
         // ---- phase 2: real-time pre-ranking ------------------------------
         let t_p = Instant::now();
         let deadline_at = req.deadline.map(|budget| t_total + budget);
         let (scores, coalesce) =
-            self.prerank(key, user, &candidates, deadline_at)?;
+            self.prerank(user, ua.as_deref(), &candidates, deadline_at)?;
         let prerank = t_p.elapsed();
         check_deadline(req.deadline, t_total)?;
 
@@ -514,6 +601,7 @@ impl ScenarioEngine {
                 n_candidates: candidates.len(),
                 n_batches: candidates.len().div_ceil(core.batch),
                 coalesced_batches: coalesce.batches,
+                user_side: user_side.map(UserSide::as_str),
                 stages,
             })
         } else {
@@ -534,25 +622,19 @@ impl ScenarioEngine {
         })
     }
 
-    /// The real-time phase: score all candidates through the head artifact.
+    /// The real-time phase: score all candidates through the head
+    /// artifact.  `ua` is the request's resolved user-side state (async
+    /// variants; `None` otherwise) — cache hit, single-flight result or
+    /// legacy take, all bitwise-identical by construction.
     fn prerank(
         &self,
-        key: RequestKey,
         user: usize,
+        ua: Option<&UserAsync>,
         candidates: &Arc<Vec<u32>>,
         deadline: Option<Instant>,
     ) -> Result<(MergedScores, CoalesceAgg)> {
         let core = &self.core;
         let v = &self.variant;
-
-        // -- request-level user-side tensors --------------------------------
-        let ua: Option<UserAsync> = if v.user == "async" {
-            Some(core.user_cache.take(key).ok_or_else(|| {
-                anyhow::anyhow!("user async result missing for {key:?}")
-            })?)
-        } else {
-            None
-        };
 
         // Sequential-baseline user-side work (on the critical path).
         let mut profile_t = None;
@@ -825,6 +907,12 @@ impl ScenarioRegistry {
                 state
                     .engines
                     .insert(name.to_string(), Arc::clone(&engine));
+                // Invalidate cached cross-request user state: reload is a
+                // version event, so the epoch moves and old entries stop
+                // matching (they age out via TTL/LRU, no sweep needed).
+                // The fresh engine id already salts the new keys; the
+                // bump additionally covers engines sharing the core.
+                self.core.user_cache.bump_epoch();
                 Ok(engine)
             }
             // Removed while we were building: do NOT resurrect it.
@@ -909,6 +997,64 @@ impl ScenarioRegistry {
 // ==========================================================================
 // Pipeline internals shared with the pre-registry Merger (moved verbatim)
 // ==========================================================================
+
+/// Phase-1 state of one request: how its user-side tensors will arrive.
+enum Phase1 {
+    /// Variant has no async user side.
+    None,
+    /// Shared-cache hit — the tensors are already here.
+    Ready(Arc<UserAsync>),
+    /// A single-flight computation (led by this request or joined) will
+    /// publish into the shared slot.
+    Flight(Arc<Flight>),
+    /// Legacy request-scoped path: the spawned task puts under this
+    /// request's key and reports its elapsed time here.
+    Legacy(std::sync::mpsc::Receiver<Result<Duration>>),
+}
+
+/// The online asynchronous user-side computation (paper §3.1 phase 1):
+/// fetch user features, sign the long-term sequence, run the user tower
+/// on the pinned worker.  ONE implementation shared by the single-flight
+/// leader and the legacy request-scoped task — which is what makes the
+/// two modes bitwise-identical by construction.
+fn compute_user_async(
+    store: &FeatureStore,
+    world: &World,
+    rtp: &RtpPool,
+    arena: Option<&Arc<ArenaPool>>,
+    worker: usize,
+    user: usize,
+) -> Result<UserAsync> {
+    let uf = store.fetch_user(user);
+    // Signatures of the long-term sequence (static table): packed bytes
+    // feed the SimTier popcount path; the ±1 plane goes into the tower so
+    // it can emit the linearized DIN factors.
+    let packed = packed_signs(world, &uf.long_seq);
+    let n_bits = world.w_hash.shape()[0];
+    // Zero-copy: the tower operands assemble into arena buffers too
+    // (they retire with the RTP call).
+    let mut inputs = assembly::user_tower_inputs_opt(world, &uf, arena);
+    inputs.push(Tensor::build_with(
+        arena,
+        vec![uf.long_seq.len(), n_bits],
+        |buf| {
+            lsh::unpack_plane_into(&packed, uf.long_seq.len(), n_bits, buf)
+        },
+    ));
+    let rx = rtp.call_async_on(worker, "user_tower", inputs);
+    let out = rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("RTP reply dropped"))??;
+    Ok(UserAsync {
+        u_vec: out[0].clone(),
+        bea_v: out[1].clone(),
+        seq_emb: out[2].clone(),
+        din_base: out[3].clone(),
+        din_g: out[4].clone(),
+        seq_sign_packed: Arc::new(packed),
+        long_seq: uf.long_seq,
+    })
+}
 
 fn check_deadline(
     deadline: Option<Duration>,

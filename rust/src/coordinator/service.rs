@@ -230,6 +230,12 @@ pub struct ScoreTrace {
     /// the sequential baseline path).  When nonzero, `stages` carries a
     /// `coalesce_wait` span with the worst queue dwell paid.
     pub coalesced_batches: usize,
+    /// How the user-side tensors were obtained on an async-user variant
+    /// (DESIGN.md §15): `"hit"` (cache probe, phase 1 skipped), `"miss"`
+    /// (this request led the single-flight and paid the tower call) or
+    /// `"joined"` (parked on another request's in-flight computation).
+    /// `None` on variants without an async user side.
+    pub user_side: Option<&'static str>,
     pub stages: Vec<StageSpan>,
 }
 
@@ -279,6 +285,9 @@ impl ScoreResponse {
             t.insert("n_candidates", trace.n_candidates);
             t.insert("n_batches", trace.n_batches);
             t.insert("coalesced_batches", trace.coalesced_batches);
+            if let Some(side) = trace.user_side {
+                t.insert("user_side", side);
+            }
             let stages: Vec<Value> = trace
                 .stages
                 .iter()
@@ -417,6 +426,13 @@ pub trait ScenarioAdmin: Send + Sync {
     /// Shared arena-pool counters for the `/metrics` `arena` block
     /// (`None` when the service has no pool to report).
     fn arena_stats(&self) -> Option<Value> {
+        None
+    }
+
+    /// Cross-request user-state cache counters for the `/metrics`
+    /// `user_cache` block (hits, misses, single-flight joins, evictions,
+    /// resident bytes, epoch; `None` when the service has no such cache).
+    fn user_cache_stats(&self) -> Option<Value> {
         None
     }
 }
@@ -565,6 +581,7 @@ mod tests {
                 n_candidates: 512,
                 n_batches: 2,
                 coalesced_batches: 2,
+                user_side: Some("hit"),
                 stages: vec![StageSpan {
                     stage: "prerank",
                     elapsed: Duration::from_millis(8),
@@ -588,6 +605,7 @@ mod tests {
             v.req("trace").req("coalesced_batches").as_usize(),
             Some(2)
         );
+        assert_eq!(v.req("trace").req("user_side").as_str(), Some("hit"));
         assert!(v.req("user_async_ms").as_f64().unwrap() > 4.0);
     }
 }

@@ -51,6 +51,11 @@ pub struct FeatureStore {
     pub user_fetches: AtomicU64,
     pub item_fetches: AtomicU64,
     pub bytes_served: AtomicU64,
+    /// Store content version.  Bumped when the backing user-feature data
+    /// is refreshed wholesale (nearline re-ingest); the user-state cache
+    /// folds this into its epoch so cached tensors derived from stale
+    /// features stop matching.
+    version: AtomicU64,
 }
 
 impl FeatureStore {
@@ -71,11 +76,23 @@ impl FeatureStore {
             user_fetches: AtomicU64::new(0),
             item_fetches: AtomicU64::new(0),
             bytes_served: AtomicU64::new(0),
+            version: AtomicU64::new(0),
         }
     }
 
     pub fn world(&self) -> &World {
         &self.world
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Signal a wholesale refresh of the stored user features.  Cached
+    /// cross-request user state keyed under the old version is
+    /// invalidated on the next request (epoch mismatch).
+    pub fn bump_version(&self) -> u64 {
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
     }
 
     fn charge(&self, model: &LatencyModel, bytes: usize) {

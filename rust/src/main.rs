@@ -64,7 +64,10 @@ fn usage() {
          [--scenario DEFAULT_NAME]\n\
          coalescing: [--coalesce true] [--coalesce-window-us US] \
          [--max-coalesced-batch ROWS] [--bypass-margin-ms MS]\n\
-         hot path: [--zero-copy false] (owned-allocation baseline)"
+         hot path: [--zero-copy false] (owned-allocation baseline)\n\
+         user reuse: [--user-reuse false] (request-scoped baseline) \
+         [--user-cache-entries N] [--user-cache-ttl-ms MS] \
+         [--user-cache-bytes B]"
     );
 }
 
@@ -94,6 +97,14 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         n_candidates: args.usize_or("candidates", cfg.n_candidates),
         top_k: args.usize_or("top-k", cfg.top_k),
         zero_copy: args.bool_or("zero-copy", cfg.zero_copy),
+        user_reuse: args.bool_or("user-reuse", cfg.user_reuse),
+        user_cache_entries: args
+            .usize_or("user-cache-entries", cfg.user_cache_entries),
+        user_cache_ttl_ms: args
+            .usize_or("user-cache-ttl-ms", cfg.user_cache_ttl_ms as usize)
+            as u64,
+        user_cache_bytes: args
+            .usize_or("user-cache-bytes", cfg.user_cache_bytes),
         coalesce,
         ..cfg
     };

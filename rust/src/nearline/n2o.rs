@@ -122,6 +122,11 @@ pub struct N2oTable {
     /// zero-copy contract is ONE per served request — the snapshot pin —
     /// asserted by the hot-path stress test.
     pub lock_acquisitions: AtomicU64,
+    /// Lock-free mirror of the current generation's version, kept in sync
+    /// by `swap_full`.  The user-state cache folds this into its epoch on
+    /// EVERY request, which must not cost a lock (the hot path's budget
+    /// is one N2O lock per request: the snapshot pin).
+    version_hint: AtomicU64,
 }
 
 impl N2oTable {
@@ -143,6 +148,7 @@ impl N2oTable {
             reads: AtomicU64::new(0),
             stale_reads: AtomicU64::new(0),
             lock_acquisitions: AtomicU64::new(0),
+            version_hint: AtomicU64::new(0),
         }
     }
 
@@ -203,6 +209,15 @@ impl N2oTable {
             n_items,
             version,
         });
+        // Published while the write lock is held, so the hint can never
+        // lag behind a generation a reader could already observe.
+        self.version_hint.store(version, Ordering::Release);
+    }
+
+    /// Current generation version without touching the lock (incremental
+    /// upserts keep the version, so only `swap_full` moves this).
+    pub fn version_hint(&self) -> u64 {
+        self.version_hint.load(Ordering::Acquire)
     }
 
     /// Incremental upsert into the current generation (item feature update

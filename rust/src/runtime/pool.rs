@@ -12,9 +12,10 @@
 //! executables on demand — a failed compile fails the registration, never
 //! the fleet.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -46,6 +47,13 @@ pub struct RtpPool {
     /// Artifacts every worker has compiled (startup set + hot loads).
     /// The lock also serializes concurrent `ensure_artifacts` calls.
     loaded: Mutex<HashSet<String>>,
+    /// Executions dispatched per artifact — the ground truth the
+    /// user-reuse bench and stress tests gate on ("exactly one
+    /// `user_tower` call per (user, epoch)").  Steady state is a shared
+    /// read lock + one relaxed atomic add: concurrent mini-batch
+    /// dispatchers never serialize here (the write lock is taken only on
+    /// an artifact's FIRST dispatch).
+    exec_counts: RwLock<HashMap<String, AtomicU64>>,
 }
 
 impl RtpPool {
@@ -99,7 +107,38 @@ impl RtpPool {
             workers,
             n_workers,
             loaded,
+            exec_counts: RwLock::new(HashMap::new()),
         }
+    }
+
+    /// Count one dispatched execution of `artifact`.  Shared read lock +
+    /// relaxed atomic on the steady-state path (no allocation, no
+    /// exclusion between concurrent dispatchers); the key string is only
+    /// cloned — under the write lock — on the artifact's first dispatch.
+    fn note_exec(&self, artifact: &str) {
+        {
+            let counts = self.exec_counts.read().unwrap();
+            if let Some(c) = counts.get(artifact) {
+                c.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.exec_counts
+            .write()
+            .unwrap()
+            .entry(artifact.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Executions dispatched for one artifact since startup.
+    pub fn executions_of(&self, artifact: &str) -> u64 {
+        self.exec_counts
+            .read()
+            .unwrap()
+            .get(artifact)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn n_workers(&self) -> usize {
@@ -158,6 +197,7 @@ impl RtpPool {
         artifact: &str,
         inputs: Vec<Tensor>,
     ) -> Receiver<Result<Vec<Tensor>>> {
+        self.note_exec(artifact);
         let (tx, rx) = channel();
         self.workers.submit(RtpMsg::Exec(RtpRequest {
             artifact: artifact.to_string(),
@@ -174,6 +214,7 @@ impl RtpPool {
         artifact: &str,
         inputs: Vec<Tensor>,
     ) -> Receiver<Result<Vec<Tensor>>> {
+        self.note_exec(artifact);
         let (tx, rx) = channel();
         self.workers.submit_to(
             worker,

@@ -79,6 +79,19 @@ impl Tensor {
         matches!(self.data, Storage::Arena(_))
     }
 
+    /// A tensor guaranteed to own its storage: arena-backed data is
+    /// deep-copied onto the heap, owned data is shared (`Arc` clone).
+    /// Long-lived holders (the cross-request user-state cache) go through
+    /// this so they can never pin a pooled buffer.
+    pub fn detached(&self) -> Tensor {
+        match &self.data {
+            Storage::Owned(_) => self.clone(),
+            Storage::Arena(_) => {
+                Tensor::new(self.shape.clone(), self.data().to_vec())
+            }
+        }
+    }
+
     /// Run `fill` into either an arena-pooled or a fresh buffer of
     /// `shape`'s size and wrap it — THE single pooled-vs-owned dispatch
     /// every assembly path shares, which is what makes the two storages

@@ -232,6 +232,9 @@ fn handle_conn(
                     if let Some(arena) = a.arena_stats() {
                         o.insert("arena", arena);
                     }
+                    if let Some(uc) = a.user_cache_stats() {
+                        o.insert("user_cache", uc);
+                    }
                     o.insert("scenarios", Value::Obj(per));
                     Value::Obj(o).to_string_pretty()
                 }

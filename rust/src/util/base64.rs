@@ -76,6 +76,13 @@ pub fn encode_f32(values: &[f32]) -> String {
     encode(&bytes)
 }
 
+/// Length of `encode_f32` for `n` floats WITHOUT materializing the
+/// string (padded RFC 4648: 4 output chars per 3 input bytes) — the
+/// §5.3 transport accounting only needs the size.
+pub fn encoded_len_f32(n: usize) -> usize {
+    (n * 4).div_ceil(3) * 4
+}
+
 pub fn decode_f32(text: &str) -> Result<Vec<f32>, DecodeError> {
     let bytes = decode(text)?;
     Ok(bytes
@@ -121,5 +128,13 @@ mod tests {
     #[test]
     fn rejects_invalid() {
         assert!(decode("a!b=").is_err());
+    }
+
+    #[test]
+    fn encoded_len_matches_encode_f32() {
+        for n in [0usize, 1, 2, 3, 7, 8, 32, 100] {
+            let v = vec![1.25f32; n];
+            assert_eq!(encoded_len_f32(n), encode_f32(&v).len(), "n={n}");
+        }
     }
 }

@@ -305,9 +305,10 @@ fn hot_reload_and_churn_under_concurrent_traffic() {
     let aif = shared.registry().get(Some("aif-arm")).unwrap();
     assert_eq!(aif.generation, reloads);
     assert_eq!(shared.registry().len(), 2);
-    // The user-async handoff cache drained (no leaked entries across any
-    // engine generation).
-    assert!(shared.core().user_cache.is_empty());
+    // No single-flight computation is left dangling across any engine
+    // generation (the quiescence check the request-scoped `is_empty`
+    // used to provide; shared entries persist by design).
+    assert_eq!(shared.core().user_cache.inflight_len(), 0);
 }
 
 #[test]

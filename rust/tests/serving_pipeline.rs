@@ -40,6 +40,7 @@ fn aif_pipeline_serves_requests() {
     }
     let merger =
         Arc::new(Merger::build(test_cfg("aif", SimMode::Precached)).unwrap());
+    let mut seen_users = std::collections::HashSet::new();
     for id in 0..4u64 {
         let user = (id as usize * 37) % merger.world().n_users;
         let r = merger
@@ -57,11 +58,17 @@ fn aif_pipeline_serves_requests() {
             .items
             .iter()
             .all(|s| (0.0..=1.0).contains(&s.score)));
-        // Async phase ran and overlapped with retrieval.
-        assert!(r.timings.user_async.is_some());
+        // Async phase ran and overlapped with retrieval — on the first
+        // request per user; repeats may hit the cross-request cache and
+        // skip phase 1 entirely.
+        if seen_users.insert(user) {
+            assert!(r.timings.user_async.is_some());
+        }
     }
-    // User cache is drained (two-phase handoff consumed).
-    assert!(merger.core().user_cache.is_empty());
+    // No single-flight computation is left dangling, and the shared
+    // cache holds at most one entry per distinct user served.
+    assert_eq!(merger.core().user_cache.inflight_len(), 0);
+    assert!(merger.core().user_cache.entries() <= 4);
     // N2O table was fully built.
     assert_eq!(merger.core().n2o.coverage(), 1.0);
     assert!(merger.extra_storage_bytes() > 0);

@@ -1,0 +1,434 @@
+//! Cross-request user-state reuse integration tests (DESIGN.md §15),
+//! running against the synthetic fixture artifact set over the
+//! deterministic PJRT stand-in — no `make artifacts` needed, so these run
+//! in CI:
+//!
+//! * N concurrent requests for one user coalesce into exactly ONE
+//!   `user_tower` execution per (user, epoch) through the single-flight
+//!   layer;
+//! * reuse is bitwise score-identical to the cold request-scoped path
+//!   (`user_reuse = false`), and `ScoreTrace.user_side` records
+//!   hit / miss / joined;
+//! * a hot reload mid-traffic invalidates cached state (epoch bump, tower
+//!   re-runs) with zero failed requests;
+//! * a deadline-abandoned request KEEPS the shared entry (other requests
+//!   reuse it) while the legacy path still drops its request-scoped one;
+//! * cached entries are detached from the arena — no pooled buffer is
+//!   pinned by a cache resident, before or after eviction.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use aif::cache::{ArenaPool, Claim, UserAsync, UserKey, UserStateCache};
+use aif::config::ServingConfig;
+use aif::coordinator::{Merger, ScenarioAdmin, ScoreRequest, ServeError};
+use aif::features::LatencyModel;
+use aif::runtime::Tensor;
+use aif::util::fixture;
+
+/// Fresh fixture dir per test (tests run in parallel).
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("aif-userreuse-{}-{tag}", std::process::id()));
+    fixture::write(&dir).expect("fixture generation");
+    dir
+}
+
+/// Removes the fixture dir when the test ends (also on panic/unwind).
+struct Cleanup(PathBuf);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Fast config over the full AIF variant (async user side, nearline
+/// items, SIM precached).  Long TTL: nothing expires mid-test.
+fn core_cfg(dir: &PathBuf) -> ServingConfig {
+    ServingConfig {
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        n_candidates: 48,
+        top_k: 16,
+        retrieval_latency: LatencyModel::fixed(100.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        user_cache_ttl_ms: 60_000,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+/// Fixed candidate override: the retrieval stage is stochastic, the
+/// scoring path must not be.
+fn cands() -> Vec<u32> {
+    (0..48u32).collect()
+}
+
+fn tower_execs(m: &Merger) -> u64 {
+    m.core().rtp.executions_of("user_tower")
+}
+
+#[test]
+fn concurrent_requests_share_one_tower_call() {
+    let dir = fixture_dir("singleflight");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Arc::new(Merger::build(core_cfg(&dir)).expect("merger"));
+    assert_eq!(tower_execs(&merger), 0, "no tower call before traffic");
+
+    const N: usize = 8;
+    let barrier = Arc::new(Barrier::new(N));
+    let mut handles = Vec::new();
+    for _ in 0..N {
+        let merger = Arc::clone(&merger);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            merger
+                .score(
+                    ScoreRequest::user(7)
+                        .with_candidates(cands())
+                        .with_top_k(16)
+                        .with_trace(true),
+                )
+                .expect("concurrent request")
+        }));
+    }
+    let responses: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // One tower execution total: the single-flight leader's.
+    assert_eq!(
+        tower_execs(&merger),
+        1,
+        "N concurrent requests for one user must share ONE user_tower call"
+    );
+    for r in &responses[1..] {
+        assert_eq!(r.items, responses[0].items, "divergent scores");
+    }
+    // Exactly one miss led the flight; everyone else hit or joined.
+    let sides: Vec<&str> = responses
+        .iter()
+        .map(|r| r.trace.as_ref().unwrap().user_side.unwrap())
+        .collect();
+    assert_eq!(
+        sides.iter().filter(|s| **s == "miss").count(),
+        1,
+        "sides: {sides:?}"
+    );
+    assert!(
+        sides.iter().all(|s| matches!(*s, "miss" | "hit" | "joined")),
+        "sides: {sides:?}"
+    );
+    let uc = &merger.core().user_cache;
+    assert_eq!(uc.stats.misses.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        uc.stats.hits.load(Ordering::Relaxed)
+            + uc.stats.single_flight_joins.load(Ordering::Relaxed),
+        (N - 1) as u64
+    );
+    assert_eq!(uc.inflight_len(), 0, "flight retired");
+    assert_eq!(uc.entries(), 1);
+    assert!(uc.resident_bytes() > 0);
+
+    // The `/metrics` user_cache block carries the observability fields.
+    let snap = merger.user_cache_stats().expect("user_cache block");
+    assert_eq!(snap.req("mode").as_str(), Some("shared"));
+    assert_eq!(snap.req("misses").as_usize(), Some(1));
+    assert!(snap.req("single_flight_joins").as_usize().is_some());
+    assert!(snap.req("evictions").as_usize().is_some());
+    assert!(snap.req("resident_bytes").as_usize().unwrap() > 0);
+    assert!(snap.req("epoch").as_usize().is_some());
+}
+
+#[test]
+fn reuse_is_bitwise_identical_to_cold_path() {
+    let dir = fixture_dir("bitwise");
+    let _cleanup = Cleanup(dir.clone());
+    let on = Arc::new(Merger::build(core_cfg(&dir)).expect("reuse on"));
+    let off_cfg = ServingConfig {
+        user_reuse: false,
+        ..core_cfg(&dir)
+    };
+    let off = Arc::new(Merger::build(off_cfg).expect("reuse off"));
+
+    let users = [1usize, 5, 11];
+    for (i, &user) in users.iter().enumerate() {
+        for round in 0..2 {
+            let req = || {
+                ScoreRequest::user(user)
+                    .with_candidates(cands())
+                    .with_top_k(16)
+                    .with_trace(true)
+            };
+            let a = off
+                .score(req().with_request_id((100 + 10 * i + round) as u64))
+                .expect("cold-path scores");
+            let b = on.score(req()).expect("reuse scores");
+            assert_eq!(
+                a.items, b.items,
+                "user {user} round {round}: reuse diverged from cold path"
+            );
+            // Trace: reuse path misses once then hits; the cold path
+            // recomputes every time.
+            let side = |r: &aif::coordinator::ScoreResponse| {
+                r.trace.as_ref().unwrap().user_side.unwrap()
+            };
+            assert_eq!(side(&a), "miss");
+            assert_eq!(
+                side(&b),
+                if round == 0 { "miss" } else { "hit" }
+            );
+            if round == 1 {
+                assert!(
+                    b.timings.user_async.is_none(),
+                    "a hit must skip the async phase entirely"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        tower_execs(&on),
+        users.len() as u64,
+        "one tower call per distinct user with reuse on"
+    );
+    assert_eq!(
+        tower_execs(&off),
+        2 * users.len() as u64,
+        "one tower call per REQUEST with reuse off"
+    );
+}
+
+#[test]
+fn reload_invalidates_without_failed_requests() {
+    let dir = fixture_dir("reload");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Arc::new(Merger::build(core_cfg(&dir)).expect("merger"));
+    let name = merger.registry().default_name();
+
+    // Warm, hit, then reload: the epoch moves and the tower re-runs.
+    let req = || {
+        ScoreRequest::user(3).with_candidates(cands()).with_top_k(16)
+    };
+    let before = merger.score(req()).expect("warm request");
+    assert_eq!(tower_execs(&merger), 1);
+    let _ = merger.score(req()).expect("hit request");
+    assert_eq!(tower_execs(&merger), 1, "second request hits the cache");
+    let epoch_before = merger.core().user_epoch();
+    merger.registry().reload(&name).expect("hot reload");
+    assert!(
+        merger.core().user_epoch() > epoch_before,
+        "reload must bump the user-state epoch"
+    );
+    let after = merger.score(req()).expect("post-reload request");
+    assert_eq!(
+        tower_execs(&merger),
+        2,
+        "post-reload request must recompute (old epoch invalidated)"
+    );
+    assert_eq!(before.items, after.items, "reload changed the scores");
+
+    // Reload churn under concurrent traffic: zero failed requests.
+    let stop = Arc::new(AtomicBool::new(false));
+    let churner = {
+        let merger = Arc::clone(&merger);
+        let stop = Arc::clone(&stop);
+        let name = name.clone();
+        std::thread::spawn(move || {
+            let mut reloads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                merger.registry().reload(&name).expect("reload succeeds");
+                reloads += 1;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            reloads
+        })
+    };
+    let users = [1usize, 5, 11, 17];
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let merger = Arc::clone(&merger);
+        handles.push(std::thread::spawn(move || {
+            for m in 0..25usize {
+                let user = users[(t + m) % users.len()];
+                let r = merger
+                    .score(
+                        ScoreRequest::user(user)
+                            .with_candidates(cands())
+                            .with_top_k(16),
+                    )
+                    .expect("no failed requests during reload churn");
+                assert_eq!(r.items.len(), 16);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("traffic thread panicked");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let reloads = churner.join().expect("churn thread panicked");
+    assert!(reloads > 0, "at least one reload raced the traffic");
+    assert_eq!(merger.core().user_cache.inflight_len(), 0);
+}
+
+/// The feature-store leg of the epoch contract: `bump_version` (a
+/// wholesale re-ingest of user features) must invalidate cached user
+/// state on the next request, exactly like a reload or a nearline swap.
+#[test]
+fn feature_store_version_bump_invalidates() {
+    let dir = fixture_dir("storever");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Arc::new(Merger::build(core_cfg(&dir)).expect("merger"));
+    let req = || {
+        ScoreRequest::user(5).with_candidates(cands()).with_top_k(16)
+    };
+    let before = merger.score(req()).expect("warm request");
+    let _ = merger.score(req()).expect("hit request");
+    assert_eq!(tower_execs(&merger), 1);
+    let epoch = merger.core().user_epoch();
+    merger.core().store.bump_version();
+    assert!(
+        merger.core().user_epoch() > epoch,
+        "store version feeds the composed epoch"
+    );
+    let after = merger.score(req()).expect("post-bump request");
+    assert_eq!(
+        tower_execs(&merger),
+        2,
+        "a store version bump must recompute the user side"
+    );
+    // The fixture data didn't actually change, so scores are identical.
+    assert_eq!(before.items, after.items);
+}
+
+#[test]
+fn abandoned_deadline_keeps_shared_entry() {
+    let dir = fixture_dir("deadline");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Arc::new(Merger::build(core_cfg(&dir)).expect("merger"));
+
+    // A deadline nobody can meet: the request is abandoned at the gate
+    // AFTER phase 1 resolved.
+    let doomed = merger.score(
+        ScoreRequest::user(9)
+            .with_candidates(cands())
+            .with_top_k(16)
+            .with_deadline(Duration::from_nanos(1)),
+    );
+    assert!(
+        matches!(doomed, Err(ServeError::DeadlineExceeded { .. })),
+        "{doomed:?}"
+    );
+    // The shared entry survives the abandonment: the next request for
+    // this user reuses it instead of re-running the tower.
+    let ok = merger
+        .score(
+            ScoreRequest::user(9).with_candidates(cands()).with_top_k(16),
+        )
+        .expect("follow-up request");
+    assert_eq!(ok.items.len(), 16);
+    assert_eq!(
+        tower_execs(&merger),
+        1,
+        "abandonment of one request must not evict reusable user state"
+    );
+
+    // Legacy contrast: the request-scoped entry is keyed by the doomed
+    // request and is correctly dropped at the gate (no leak) — the
+    // follow-up pays a fresh tower call.
+    let off_cfg = ServingConfig {
+        user_reuse: false,
+        ..core_cfg(&dir)
+    };
+    let off = Arc::new(Merger::build(off_cfg).expect("reuse off"));
+    let doomed = off.score(
+        ScoreRequest::user(9)
+            .with_request_id(1)
+            .with_candidates(cands())
+            .with_top_k(16)
+            .with_deadline(Duration::from_nanos(1)),
+    );
+    assert!(matches!(doomed, Err(ServeError::DeadlineExceeded { .. })));
+    assert_eq!(
+        off.core().user_cache.entries(),
+        0,
+        "request-scoped entry must not leak after abandonment"
+    );
+    let _ = off
+        .score(
+            ScoreRequest::user(9)
+                .with_request_id(2)
+                .with_candidates(cands())
+                .with_top_k(16),
+        )
+        .expect("follow-up request");
+    assert_eq!(tower_execs(&off), 2, "no reuse on the legacy path");
+}
+
+/// Satellite: cache inserts detach arena-backed tensors, so a long-lived
+/// entry can never pin a pooled buffer — asserted through the
+/// single-flight insert path, before and after eviction.
+#[test]
+fn cached_entries_pin_no_arena_buffers() {
+    let pool = ArenaPool::new(8);
+    let pooled_tensor = |shape: Vec<usize>, v: f32| {
+        let n: usize = shape.iter().product();
+        let mut buf = pool.get(n);
+        buf.extend(std::iter::repeat(v).take(n));
+        Tensor::from_pooled(shape, buf)
+    };
+    let pooled_ua = |v: f32| UserAsync {
+        u_vec: pooled_tensor(vec![1, 8], v),
+        bea_v: pooled_tensor(vec![4, 8], v),
+        seq_emb: pooled_tensor(vec![6, 8], v),
+        din_base: pooled_tensor(vec![1, 8], v),
+        din_g: pooled_tensor(vec![6, 8], v),
+        seq_sign_packed: Arc::new(vec![0xA5, 0x3C]),
+        long_seq: vec![1, 2, 3],
+    };
+
+    // Capacity 2 over 2 shards: the third distinct key evicts.
+    let cache = UserStateCache::shared(2, None, 0, 2);
+    let key = UserKey::new(0, 1, 0);
+    let Claim::Lead(flight) = cache.claim(key) else {
+        panic!("first claim must lead");
+    };
+    let ua = pooled_ua(1.5);
+    assert!(ua.is_pooled(), "precondition: tensors ride the arena");
+    assert!(pool.outstanding() > 0);
+    cache.complete(key, &flight, Ok((ua, Duration::ZERO)));
+
+    // The insert detached: every pooled buffer is back, yet the cached
+    // entry is alive and carries the same values.
+    assert_eq!(
+        pool.outstanding(),
+        0,
+        "cache insert must not pin arena buffers"
+    );
+    let Claim::Hit(cached) = cache.claim(key) else {
+        panic!("must hit");
+    };
+    assert!(!cached.is_pooled(), "cached tensors are owned");
+    assert_eq!(cached.u_vec.data(), &[1.5; 8][..]);
+
+    // Evict by filling past capacity with fresh pooled entries; the
+    // books stay balanced with entries coming AND going.
+    for user in 2..8u32 {
+        let k = UserKey::new(0, user, 0);
+        let Claim::Lead(f) = cache.claim(k) else {
+            panic!("cold key must lead");
+        };
+        cache.complete(k, &f, Ok((pooled_ua(user as f32), Duration::ZERO)));
+    }
+    assert!(cache.entries() <= 2, "capacity enforced");
+    drop(cached);
+    assert_eq!(
+        pool.outstanding(),
+        0,
+        "no arena buffer pinned by evicted or resident entries"
+    );
+}
