@@ -27,6 +27,13 @@ echo "== user reuse stress (release) =="
 # zero failed requests, no arena pinning by cached entries.
 cargo test --release -q --test user_reuse
 
+echo "== warm restart (release) =="
+# Kill-and-restart durability: node B warm-boots to a digest-verified,
+# bitwise-identical N2O table (zero item_tower executions), replays the
+# published delta, resumes the version sequence; checkpointing under
+# concurrent traffic keeps the one-N2O-lock-per-request budget.
+cargo test --release -q --test warm_restart
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -46,6 +53,15 @@ echo "== user_reuse smoke (release, quick) =="
 # BENCH_user_reuse.json.
 AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_user_reuse_ci.json \
     cargo bench --bench user_reuse
+
+echo "== warm_restart smoke (release, quick) =="
+# The durability gates run for real in CI: zero failed requests while
+# checkpoints race traffic, one N2O lock/request, node B restores with
+# zero item_tower executions and bitwise-identical top-K.  Emits
+# BENCH_warm_restart.json (the timing gate restore < cold build runs on
+# full perf-fixture runs).
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_warm_restart_ci.json \
+    cargo bench --bench warm_restart
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

@@ -377,6 +377,14 @@ impl UserStateCache {
         self.epoch.fetch_add(1, Ordering::Relaxed) + 1
     }
 
+    /// Warm-boot path: resume the epoch sequence at least at `e` (the
+    /// reload component recorded in the restored snapshot manifest).
+    /// Monotone — never moves the epoch backwards, since a rewind would
+    /// resurrect keys already handed out.
+    pub fn restore_epoch(&self, e: u64) {
+        self.epoch.fetch_max(e, Ordering::Relaxed);
+    }
+
     fn shared_parts(
         &self,
     ) -> (

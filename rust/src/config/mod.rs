@@ -47,6 +47,52 @@ impl Default for CoalesceConfig {
     }
 }
 
+/// Durable state store + warm-restart knobs (DESIGN.md §16).  Off by
+/// default: with `backend = "none"` nothing is written, nothing is
+/// restored, and the serving stack behaves exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageConfig {
+    /// "none" (default), "mem" (in-process, tests/demos) or "fs"
+    /// (directory tree with atomic writes; S3-shaped keys).
+    pub backend: String,
+    /// Root directory of the "fs" backend.
+    pub dir: String,
+    /// Period of the background checkpoint publisher, milliseconds
+    /// (0 = manual checkpoints only, via `POST /v1/checkpoint`).
+    pub checkpoint_interval_ms: u64,
+    /// Restore the newest snapshot + delta queue at boot instead of
+    /// cold-rebuilding the N2O table.
+    pub warm_boot: bool,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            backend: "none".into(),
+            dir: "aif_state".into(),
+            checkpoint_interval_ms: 0,
+            warm_boot: true,
+        }
+    }
+}
+
+fn parse_storage(st: &Value, out: &mut StorageConfig) {
+    if let Some(x) = st.get("backend").and_then(Value::as_str) {
+        out.backend = x.to_string();
+    }
+    if let Some(x) = st.get("dir").and_then(Value::as_str) {
+        out.dir = x.to_string();
+    }
+    if let Some(x) =
+        st.get("checkpoint_interval_ms").and_then(Value::as_f64)
+    {
+        out.checkpoint_interval_ms = x as u64;
+    }
+    if let Some(b) = st.get("warm_boot").and_then(Value::as_bool) {
+        out.warm_boot = b;
+    }
+}
+
 /// One named scenario served by the shared [`ServingCore`]: the
 /// scenario-*specific* knobs only (variant, SIM handling, candidate count,
 /// result size, dispatch-layer coalescing).  Everything else — fleet size,
@@ -188,6 +234,9 @@ pub struct ServingConfig {
     /// Cross-request head-execution coalescing (ISSUE 2 tentpole).
     pub coalesce: CoalesceConfig,
 
+    /// Durable state store + warm restart (ISSUE 6 tentpole).
+    pub storage: StorageConfig,
+
     pub artifacts_dir: String,
 
     /// Named scenario blocks served over ONE shared core.  Empty (the
@@ -245,6 +294,7 @@ impl Default for ServingConfig {
             arena_retain: 32,
             zero_copy: true,
             coalesce: CoalesceConfig::default(),
+            storage: StorageConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
             default_scenario: None,
@@ -293,6 +343,9 @@ impl ServingConfig {
         }
         if let Some(co) = get("coalesce") {
             parse_coalesce(co, &mut c.coalesce);
+        }
+        if let Some(st) = get("storage") {
+            parse_storage(st, &mut c.storage);
         }
         // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
         // Each block starts from the flat fields and overrides.
@@ -506,6 +559,31 @@ mod tests {
         assert_eq!(c.user_cache_entries, 512);
         assert_eq!(c.user_cache_ttl_ms, 0);
         assert_eq!(c.user_cache_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn storage_defaults_off_and_parses() {
+        let c = ServingConfig::default();
+        assert_eq!(c.storage.backend, "none", "durability is opt-in");
+        assert_eq!(c.storage.checkpoint_interval_ms, 0);
+        assert!(c.storage.warm_boot);
+
+        let v = Value::parse(
+            r#"{"storage": {"backend": "fs", "dir": "/tmp/aif_state",
+                 "checkpoint_interval_ms": 250, "warm_boot": false}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.storage.backend, "fs");
+        assert_eq!(c.storage.dir, "/tmp/aif_state");
+        assert_eq!(c.storage.checkpoint_interval_ms, 250);
+        assert!(!c.storage.warm_boot);
+
+        // Partial blocks keep remaining defaults.
+        let v = Value::parse(r#"{"storage": {"backend": "mem"}}"#).unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.storage.backend, "mem");
+        assert!(c.storage.warm_boot);
     }
 
     #[test]

@@ -28,6 +28,10 @@ use crate::nearline::{N2oTable, NearlineWorker};
 use crate::runtime::{
     BatchCoalescer, CoalescerConfig, HeadExecutor, Manifest, RtpPool,
 };
+use crate::storage::{
+    CheckpointOutcome, Checkpointer, FsStorage, MemStorage, Readiness,
+    ReadyState, Storage,
+};
 use crate::util::threadpool::ThreadPool;
 
 /// Auto-allocated request ids live at and above this bound; callers must
@@ -88,6 +92,19 @@ pub struct ServingCore {
     /// triggers it; later ones reuse the table).
     nearline_built: Mutex<bool>,
     coalescers: Mutex<HashMap<String, CoalescerSlot>>,
+    /// Durable state store (DESIGN.md §16), `None` when
+    /// `cfg.storage.backend = "none"`.
+    pub storage: Option<Arc<Checkpointer>>,
+    /// Warm-boot state machine behind `/readyz` (always present; cores
+    /// without storage go Starting -> Building -> Ready).
+    pub readiness: Arc<Readiness>,
+    /// Checkpoint barrier: generation swaps (nearline full builds,
+    /// registry reloads) and checkpoint capture serialize on this, so a
+    /// snapshot never straddles a swap.  Counts crossings.
+    pub checkpoint_barrier: Arc<Mutex<u64>>,
+    /// Wall-clock of the last cold N2O full build, for the warm-restart
+    /// bench's restore-vs-rebuild comparison (0 = never cold-built).
+    nearline_build_ms: AtomicU64,
 }
 
 impl ServingCore {
@@ -128,6 +145,26 @@ impl ServingCore {
         } else {
             UserStateCache::request_scoped(cfg.user_cache_shards)
         });
+        let checkpoint_barrier = Arc::new(Mutex::new(0u64));
+        let backend: Option<Arc<dyn Storage>> =
+            match cfg.storage.backend.as_str() {
+                "none" | "" => None,
+                "mem" => Some(Arc::new(MemStorage::new())),
+                "fs" => Some(Arc::new(
+                    FsStorage::new(&cfg.storage.dir)
+                        .map_err(|e| anyhow::anyhow!("{e}"))
+                        .context("opening fs storage backend")?,
+                )),
+                other => {
+                    anyhow::bail!(
+                        "unknown storage backend {other:?} \
+                         (expected none|mem|fs)"
+                    )
+                }
+            };
+        let storage = backend.map(|b| {
+            Arc::new(Checkpointer::new(b, Arc::clone(&checkpoint_barrier)))
+        });
         Ok(Arc::new(ServingCore {
             router: Router::new(cfg.n_rtp_workers, 64),
             user_cache,
@@ -144,6 +181,10 @@ impl ServingCore {
             engine_ids: AtomicU64::new(0),
             nearline_built: Mutex::new(false),
             coalescers: Mutex::new(HashMap::new()),
+            storage,
+            readiness: Arc::new(Readiness::new()),
+            checkpoint_barrier,
+            nearline_build_ms: AtomicU64::new(0),
             manifest,
             world,
             store,
@@ -183,25 +224,80 @@ impl ServingCore {
         self.engine_ids.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Run the nearline N2O full build exactly once (first nearline
+    /// Establish the nearline N2O table exactly once (first nearline
     /// scenario).  Subsequent callers return immediately — the table is
     /// shared, which is the point.
+    ///
+    /// With a storage backend and `warm_boot` on, this first tries the
+    /// warm path: restore the newest snapshot, replay its delta queue
+    /// and digest-verify the result — zero `item_tower` executions, and
+    /// readiness flips to `Ready` only after verification.  A missing or
+    /// corrupt snapshot falls back to the cold full build (`Building`).
     pub fn ensure_nearline(&self) -> Result<()> {
         let mut built = self.nearline_built.lock().unwrap();
         if *built {
             return Ok(());
         }
+        if self.cfg.storage.warm_boot {
+            if let Some(cp) = &self.storage {
+                match cp.restore(&self.n2o, &self.readiness) {
+                    // A v0 checkpoint describes a table that never had a
+                    // full build — restoring it would boot into no data.
+                    // Fall through to the cold build (which then swaps to
+                    // version_hint + 1).
+                    Ok(Some(report)) if report.version == 0 => {
+                        log::warn!(
+                            "N2O warm boot: checkpoint {} predates any \
+                             full build; cold building",
+                            report.manifest_key
+                        );
+                    }
+                    Ok(Some(report)) => {
+                        log::info!(
+                            "N2O warm boot: restored v{} ({} items, {} \
+                             deltas replayed, verified) from {} in {}ms",
+                            report.version,
+                            report.n_items,
+                            report.deltas_replayed,
+                            report.manifest_key,
+                            report.elapsed_ms
+                        );
+                        // Resume the composed user-state epoch at least
+                        // where the dead process left it: the n2o
+                        // component came back with the table, so raise
+                        // the reload component by whatever remains.
+                        let base = self.n2o.version_hint()
+                            + self.store.version();
+                        self.user_cache.restore_epoch(
+                            report.user_epoch.saturating_sub(base),
+                        );
+                        *built = true;
+                        self.readiness.set(ReadyState::Ready);
+                        return Ok(());
+                    }
+                    Ok(None) => {
+                        log::info!(
+                            "N2O warm boot: store has no checkpoint yet; \
+                             cold building"
+                        );
+                    }
+                    Err(e) => {
+                        log::warn!(
+                            "N2O warm boot failed ({e}); cold building"
+                        );
+                    }
+                }
+            }
+        }
+        self.readiness.set(ReadyState::Building);
         self.rtp
             .ensure_artifacts(&["item_tower".to_string()])
             .context("loading item_tower for the nearline build")?;
-        let worker = NearlineWorker::new(
-            Arc::clone(&self.rtp),
-            Arc::clone(&self.world),
-            Arc::clone(&self.hasher),
-            Arc::clone(&self.n2o),
-            self.batch,
-        );
-        let report = worker.full_build(1).context("nearline full build")?;
+        let worker = self.nearline_worker();
+        let new_version = self.n2o.version_hint() + 1;
+        let report = worker
+            .full_build(new_version)
+            .context("nearline full build")?;
         log::info!(
             "N2O full build: {} items, {} executions, {:?}, {} bytes",
             report.n_items,
@@ -209,8 +305,57 @@ impl ServingCore {
             report.elapsed,
             report.table_bytes
         );
+        self.nearline_build_ms
+            .store(report.elapsed.as_millis() as u64, Ordering::Relaxed);
         *built = true;
+        self.readiness.set(ReadyState::Ready);
         Ok(())
+    }
+
+    /// A nearline worker over the shared table, with its generation
+    /// swaps serialized against checkpoint capture.
+    pub fn nearline_worker(&self) -> NearlineWorker {
+        NearlineWorker::new(
+            Arc::clone(&self.rtp),
+            Arc::clone(&self.world),
+            Arc::clone(&self.hasher),
+            Arc::clone(&self.n2o),
+            self.batch,
+        )
+        .with_barrier(Arc::clone(&self.checkpoint_barrier))
+    }
+
+    /// Milliseconds the last cold full build took (0 = warm boot or no
+    /// build yet) — the denominator of the restore-vs-rebuild gate.
+    pub fn nearline_build_ms(&self) -> u64 {
+        self.nearline_build_ms.load(Ordering::Relaxed)
+    }
+
+    /// Publish one checkpoint of the current serving state.  Driven
+    /// periodically by the Merger's checkpoint thread and on demand via
+    /// `POST /v1/checkpoint`.  Errors if no storage backend is
+    /// configured.
+    pub fn checkpoint_now(&self) -> Result<CheckpointOutcome> {
+        let cp = self
+            .storage
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no storage backend configured"))?;
+        cp.checkpoint(
+            &self.n2o,
+            self.user_epoch(),
+            &self.cfg.artifacts_dir,
+        )
+        .map_err(|e| anyhow::anyhow!("checkpoint failed: {e}"))
+    }
+
+    /// The `/metrics` storage block: checkpointer counters plus the
+    /// backend name and readiness state.  `None` without a backend.
+    pub fn storage_stats(&self) -> Option<crate::util::json::Object> {
+        let cp = self.storage.as_ref()?;
+        let mut o = cp.stats_snapshot();
+        o.insert("backend", self.cfg.storage.backend.as_str());
+        o.insert("readiness", self.readiness.get().name());
+        Some(o)
     }
 
     /// The shared coalescer queue for one `*_mu` artifact.  The first

@@ -16,7 +16,7 @@
 //! `ScoreRequest.scenario`, defaulting to the configured scenario, so
 //! every pre-registry call site works unchanged.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -30,7 +30,7 @@ use super::service::{
 };
 use crate::config::ServingConfig;
 use crate::metrics::ServingMetrics;
-use crate::util::json::Value;
+use crate::util::json::{Object, Value};
 
 // Helpers that predate the split keep their `coordinator::merger::` paths.
 pub use super::core::AUTO_REQUEST_ID_BASE;
@@ -51,6 +51,61 @@ pub struct Merger {
     /// Requests that failed ROUTING (unknown scenario) — kept separate so
     /// no scenario's error metric is charged for traffic it never saw.
     routing_errors: AtomicU64,
+    /// Background checkpoint publisher (DESIGN.md §16), present when a
+    /// storage backend and `checkpoint_interval_ms > 0` are configured.
+    /// Held only for its Drop (stop + join).
+    _checkpoint_driver: Option<CheckpointDriver>,
+}
+
+/// Periodic checkpoint thread; stops and joins on drop so a Merger
+/// tear-down never leaves a publisher writing to a dead store.
+struct CheckpointDriver {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CheckpointDriver {
+    fn start(core: Arc<ServingCore>, interval: Duration) -> CheckpointDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("aif-checkpoint".into())
+            .spawn(move || {
+                let tick = Duration::from_millis(5).min(interval);
+                let mut since = Duration::ZERO;
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    since += tick;
+                    if since < interval {
+                        continue;
+                    }
+                    since = Duration::ZERO;
+                    // Nothing to publish before the first nearline
+                    // generation exists; checkpointing an empty v0 table
+                    // would warm-boot the next process into no data.
+                    if core.n2o.version_hint() == 0 {
+                        continue;
+                    }
+                    if let Err(e) = core.checkpoint_now() {
+                        log::warn!("periodic checkpoint failed: {e:#}");
+                    }
+                }
+            })
+            .expect("spawning the checkpoint thread");
+        CheckpointDriver {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for CheckpointDriver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl Merger {
@@ -74,12 +129,26 @@ impl Merger {
         let def = registry
             .get(None)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let interval_ms = core.cfg.storage.checkpoint_interval_ms;
+        let checkpoint_driver = (core.storage.is_some() && interval_ms > 0)
+            .then(|| {
+                CheckpointDriver::start(
+                    Arc::clone(&core),
+                    Duration::from_millis(interval_ms),
+                )
+            });
+        // Every scenario is registered and any nearline boot (warm or
+        // cold) has completed by now — `build` is synchronous.  Cores
+        // whose scenarios never touch the N2O table would otherwise sit
+        // in "starting" forever.
+        core.readiness.set(crate::storage::ReadyState::Ready);
         Ok(Merger {
             default_metrics: Arc::clone(&def.metrics),
             default_variant: def.cfg.variant.clone(),
             routing_errors: AtomicU64::new(0),
             core,
             registry,
+            _checkpoint_driver: checkpoint_driver,
         })
     }
 
@@ -201,5 +270,31 @@ impl ScenarioAdmin for Merger {
                 .user_cache
                 .stats_snapshot(self.core.user_epoch()),
         )
+    }
+
+    fn storage_stats(&self) -> Option<Value> {
+        self.core.storage_stats().map(Value::from)
+    }
+
+    fn readiness(&self) -> Value {
+        Value::from(self.core.readiness.as_json())
+    }
+
+    fn trigger_checkpoint(&self) -> Result<Value, ServeError> {
+        if self.core.storage.is_none() {
+            return Err(ServeError::BadRequest(
+                "no storage backend configured".into(),
+            ));
+        }
+        let outcome = self
+            .core
+            .checkpoint_now()
+            .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
+        let mut o = Object::new();
+        o.insert("outcome", outcome.name());
+        if let Some(stats) = self.core.storage_stats() {
+            o.insert("storage", stats);
+        }
+        Ok(Value::from(o))
     }
 }

@@ -900,6 +900,13 @@ impl ScenarioRegistry {
             Some(Arc::clone(&old.metrics)),
         )
         .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
+        // Checkpoint barrier (DESIGN.md §16): the engine swap + epoch
+        // bump is a version event, and a checkpoint captured halfway
+        // through it would pair the old epoch with the new engine.
+        // Serialize against checkpoint capture; the barrier is taken
+        // BEFORE the registry write lock (same order everywhere).
+        let mut crossings = self.core.checkpoint_barrier.lock().unwrap();
+        *crossings += 1;
         let mut state = self.state.write().unwrap();
         match state.engines.get(name) {
             // Still the engine we rebuilt from: swap.

@@ -435,6 +435,33 @@ pub trait ScenarioAdmin: Send + Sync {
     fn user_cache_stats(&self) -> Option<Value> {
         None
     }
+
+    /// Durable-store counters for the `/metrics` `storage` block and
+    /// `GET /v1/storage` (snapshots written, bytes, checkpoint age,
+    /// restore duration, delta replays; `None` when no backend is
+    /// configured).
+    fn storage_stats(&self) -> Option<Value> {
+        None
+    }
+
+    /// Readiness report for `GET /readyz` — `{"ready": bool, "state":
+    /// name}` per the DESIGN.md §16 warm-boot state machine.  Services
+    /// without a boot sequence are born ready.
+    fn readiness(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("ready", true);
+        o.insert("state", "ready");
+        Value::Obj(o)
+    }
+
+    /// Force a checkpoint now (`POST /v1/checkpoint`); answers with the
+    /// outcome and fresh storage counters, or `BadRequest` when no
+    /// backend is configured.
+    fn trigger_checkpoint(&self) -> Result<Value, ServeError> {
+        Err(ServeError::BadRequest(
+            "no storage backend configured".into(),
+        ))
+    }
 }
 
 #[cfg(test)]

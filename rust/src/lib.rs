@@ -17,6 +17,7 @@ pub mod retrieval;
 pub mod lsh;
 pub mod cache;
 pub mod nearline;
+pub mod storage;
 pub mod coordinator;
 pub mod metrics;
 pub mod workload;

@@ -67,7 +67,9 @@ fn usage() {
          hot path: [--zero-copy false] (owned-allocation baseline)\n\
          user reuse: [--user-reuse false] (request-scoped baseline) \
          [--user-cache-entries N] [--user-cache-ttl-ms MS] \
-         [--user-cache-bytes B]"
+         [--user-cache-bytes B]\n\
+         durable state: [--storage-backend none|mem|fs] [--storage-dir D] \
+         [--checkpoint-interval-ms MS] [--warm-boot false]"
     );
 }
 
@@ -89,6 +91,14 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         .usize_or("max-coalesced-batch", coalesce.max_coalesced_batch);
     coalesce.bypass_margin_ms =
         args.f64_or("bypass-margin-ms", coalesce.bypass_margin_ms);
+    let mut storage = cfg.storage.clone();
+    storage.backend = args.str_or("storage-backend", &storage.backend);
+    storage.dir = args.str_or("storage-dir", &storage.dir);
+    storage.checkpoint_interval_ms = args.usize_or(
+        "checkpoint-interval-ms",
+        storage.checkpoint_interval_ms as usize,
+    ) as u64;
+    storage.warm_boot = args.bool_or("warm-boot", storage.warm_boot);
     let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -106,6 +116,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         user_cache_bytes: args
             .usize_or("user-cache-bytes", cfg.user_cache_bytes),
         coalesce,
+        storage,
         ..cfg
     };
     // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`

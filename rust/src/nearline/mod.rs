@@ -6,6 +6,9 @@ pub mod n2o;
 pub mod queue;
 pub mod worker;
 
-pub use n2o::{N2oEntry, N2oRow, N2oSnapshot, N2oTable};
+pub use n2o::{
+    N2oChunkView, N2oEntry, N2oExport, N2oRow, N2oSnapshot, N2oTable,
+    RestoredChunk, N2O_CHUNK,
+};
 pub use queue::{UpdateEvent, UpdateQueue};
 pub use worker::NearlineWorker;

@@ -25,8 +25,9 @@ use crate::cache::ArenaPool;
 use crate::runtime::Tensor;
 use crate::util::bits;
 
-/// Items per column chunk (the copy-on-write granularity of `upsert`).
-const N2O_CHUNK: usize = 512;
+/// Items per column chunk (the copy-on-write granularity of `upsert`,
+/// and the unit of snapshot/delta serialization in `storage::snapshot`).
+pub const N2O_CHUNK: usize = 512;
 
 /// One item's nearline-computed row — the upsert/rebuild currency.  The
 /// table stores rows columnar; this owned form only exists at the
@@ -122,6 +123,13 @@ pub struct N2oTable {
     /// zero-copy contract is ONE per served request — the snapshot pin —
     /// asserted by the hot-path stress test.
     pub lock_acquisitions: AtomicU64,
+    /// Subset of `lock_acquisitions` taken by maintenance paths that are
+    /// NOT on behalf of a request: checkpoint exports, snapshot restores
+    /// and delta replays.  `lock_acquisitions - maintenance_lock_acquisitions`
+    /// is the request-attributable count, which lets the warm-restart
+    /// bench assert the one-lock-per-request budget while a checkpointer
+    /// runs concurrently.
+    pub maintenance_lock_acquisitions: AtomicU64,
     /// Lock-free mirror of the current generation's version, kept in sync
     /// by `swap_full`.  The user-state cache folds this into its epoch on
     /// EVERY request, which must not cost a lock (the hot path's budget
@@ -148,6 +156,7 @@ impl N2oTable {
             reads: AtomicU64::new(0),
             stale_reads: AtomicU64::new(0),
             lock_acquisitions: AtomicU64::new(0),
+            maintenance_lock_acquisitions: AtomicU64::new(0),
             version_hint: AtomicU64::new(0),
         }
     }
@@ -301,6 +310,107 @@ impl N2oTable {
             .sum();
         have as f64 / g.n_items.max(1) as f64
     }
+
+    /// Pin the current generation for serialization (checkpointing).
+    /// Chunks are exposed in stable ascending item-id order, so two
+    /// exports of the same generation serialize byte-identically.
+    /// Counted as a MAINTENANCE lock acquisition: it shows up in
+    /// `lock_acquisitions` (nothing touches the lock uncounted) but also
+    /// in `maintenance_lock_acquisitions`, so request-budget assertions
+    /// can subtract it out.
+    pub fn export(&self) -> N2oExport {
+        self.maintenance_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        N2oExport {
+            generation: self.read_gen(),
+            d: self.d,
+            n_bridge: self.n_bridge,
+            n_bits: self.n_bits,
+        }
+    }
+
+    /// Install a deserialized generation (warm boot).  Unlike
+    /// [`Self::swap_full`] this accepts `version == current` so a
+    /// restore into a fresh table (version 0) or an idempotent re-restore
+    /// is legal, and it resumes the epoch sequence by restoring the
+    /// persisted `version_hint` instead of resetting it — a reset would
+    /// silently un-invalidate `UserStateCache` entries keyed on the
+    /// composed epoch.  `None` chunks are all-absent and share one zeroed
+    /// allocation, like `new`/`swap_full`.
+    pub fn restore(
+        &self,
+        chunks: Vec<Option<RestoredChunk>>,
+        n_items: usize,
+        version: u64,
+        version_hint: u64,
+    ) {
+        let (d, n_bridge, pl) = (self.d, self.n_bridge, self.packed_len());
+        assert!(
+            chunks.len() * N2O_CHUNK >= n_items && !chunks.is_empty(),
+            "restore: {} chunks cannot hold {} items",
+            chunks.len(),
+            n_items
+        );
+        assert!(
+            version_hint >= version,
+            "restore: version_hint {version_hint} behind version {version}"
+        );
+        let empty = Arc::new(Chunk::empty(d, n_bridge, pl));
+        let chunks: Vec<Arc<Chunk>> = chunks
+            .into_iter()
+            .map(|rc| match rc {
+                Some(rc) => Arc::new(rc.into_chunk(d, n_bridge, pl)),
+                None => Arc::clone(&empty),
+            })
+            .collect();
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.maintenance_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.write().unwrap();
+        assert!(
+            version >= guard.version,
+            "restore must not rewind the version ({} -> {version})",
+            guard.version
+        );
+        *guard = Arc::new(Generation {
+            chunks,
+            n_items,
+            version,
+        });
+        self.version_hint.store(version_hint, Ordering::Release);
+    }
+
+    /// Apply per-chunk patches from a delta file (warm-boot replay).
+    /// Keeps the generation version (deltas are keyed by the base full
+    /// snapshot's version, like `upsert` keeps the version); extends the
+    /// table when the delta grew it.
+    pub fn patch_chunks(
+        &self,
+        n_items: usize,
+        patches: Vec<(usize, RestoredChunk)>,
+    ) {
+        let (d, n_bridge, pl) = (self.d, self.n_bridge, self.packed_len());
+        let patches: Vec<(usize, Arc<Chunk>)> = patches
+            .into_iter()
+            .map(|(ci, rc)| (ci, Arc::new(rc.into_chunk(d, n_bridge, pl))))
+            .collect();
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.maintenance_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.write().unwrap();
+        let mut chunks = guard.chunks.clone(); // Arc pointers only
+        let n_items = n_items.max(guard.n_items);
+        let empty = Arc::new(Chunk::empty(d, n_bridge, pl));
+        while chunks.len() * N2O_CHUNK < n_items {
+            chunks.push(Arc::clone(&empty));
+        }
+        for (ci, chunk) in patches {
+            assert!(ci < chunks.len(), "patch chunk {ci} out of range");
+            chunks[ci] = chunk;
+        }
+        *guard = Arc::new(Generation {
+            chunks,
+            n_items,
+            version: guard.version,
+        });
+    }
 }
 
 /// Immutable view of one generation.
@@ -441,6 +551,94 @@ impl N2oSnapshot {
                     Tensor::new(vec![batch, self.n_bits], plane),
                 ))
             }
+        }
+    }
+}
+
+/// Pinned generation view for serialization.  Iteration over
+/// [`Self::chunk`] 0..n_chunks is the table's stable order: ascending
+/// item id, `N2O_CHUNK` items per chunk.
+pub struct N2oExport {
+    generation: Arc<Generation>,
+    d: usize,
+    n_bridge: usize,
+    n_bits: usize,
+}
+
+/// Borrowed columnar view of one chunk, exactly as resident in memory.
+#[derive(Clone, Copy)]
+pub struct N2oChunkView<'a> {
+    pub item_vec: &'a [f32],
+    pub bea_w: &'a [f32],
+    pub sign_packed: &'a [u8],
+    pub present: &'a [bool],
+}
+
+impl N2oChunkView<'_> {
+    pub fn any_present(&self) -> bool {
+        self.present.iter().any(|&p| p)
+    }
+}
+
+impl N2oExport {
+    pub fn version(&self) -> u64 {
+        self.generation.version
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.generation.n_items
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.generation.chunks.len()
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.d, self.n_bridge, self.n_bits)
+    }
+
+    pub fn chunk(&self, i: usize) -> N2oChunkView<'_> {
+        let c = &self.generation.chunks[i];
+        N2oChunkView {
+            item_vec: &c.item_vec,
+            bea_w: &c.bea_w,
+            sign_packed: &c.sign_packed,
+            present: &c.present,
+        }
+    }
+
+    /// True when chunk `i` is the SAME allocation in both exports
+    /// (copy-on-write upserts share untouched chunks by `Arc`).  The
+    /// checkpointer uses this to emit per-chunk deltas: only chunks whose
+    /// pointer changed since the last published snapshot are rewritten.
+    pub fn chunk_shared_with(&self, other: &N2oExport, i: usize) -> bool {
+        match (self.generation.chunks.get(i), other.generation.chunks.get(i)) {
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// Owned columnar chunk deserialized from a snapshot or delta file —
+/// the restore-side mirror of [`N2oChunkView`].
+pub struct RestoredChunk {
+    pub item_vec: Vec<f32>,
+    pub bea_w: Vec<f32>,
+    pub sign_packed: Vec<u8>,
+    pub present: Vec<bool>,
+}
+
+impl RestoredChunk {
+    fn into_chunk(self, d: usize, n_bridge: usize, pl: usize) -> Chunk {
+        assert_eq!(self.item_vec.len(), N2O_CHUNK * d, "item_vec size");
+        assert_eq!(self.bea_w.len(), N2O_CHUNK * n_bridge, "bea_w size");
+        assert_eq!(self.sign_packed.len(), N2O_CHUNK * pl, "sign size");
+        assert_eq!(self.present.len(), N2O_CHUNK, "present size");
+        Chunk {
+            item_vec: self.item_vec,
+            bea_w: self.bea_w,
+            sign_packed: self.sign_packed,
+            present: self.present,
         }
     }
 }
@@ -731,5 +929,85 @@ mod tests {
             before + 1,
             "one lock acquisition per request-pinned snapshot"
         );
+    }
+
+    #[test]
+    fn export_counts_as_maintenance_lock() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        let total = t.lock_acquisitions.load(Ordering::Relaxed);
+        let maint = t.maintenance_lock_acquisitions.load(Ordering::Relaxed);
+        let _ex = t.export();
+        assert_eq!(t.lock_acquisitions.load(Ordering::Relaxed), total + 1);
+        assert_eq!(
+            t.maintenance_lock_acquisitions.load(Ordering::Relaxed),
+            maint + 1,
+            "export must be attributable to maintenance"
+        );
+    }
+
+    #[test]
+    fn export_shares_untouched_chunks_across_upsert() {
+        let n = 2 * N2O_CHUNK;
+        let t = N2oTable::new(n, 4, 2, 8);
+        t.swap_full((0..n).map(|_| Some(entry(1.0))).collect(), 1);
+        let before = t.export();
+        t.upsert(vec![(0, entry(2.0))]);
+        let after = t.export();
+        assert!(!before.chunk_shared_with(&after, 0));
+        assert!(before.chunk_shared_with(&after, 1));
+    }
+
+    #[test]
+    fn restore_resumes_version_hint_sequence() {
+        let src = N2oTable::new(4, 4, 2, 8);
+        src.swap_full(vec![Some(entry(1.0)); 4], 7);
+        let ex = src.export();
+        let dst = N2oTable::new(4, 4, 2, 8);
+        let chunks = (0..ex.n_chunks())
+            .map(|i| {
+                let c = ex.chunk(i);
+                Some(RestoredChunk {
+                    item_vec: c.item_vec.to_vec(),
+                    bea_w: c.bea_w.to_vec(),
+                    sign_packed: c.sign_packed.to_vec(),
+                    present: c.present.to_vec(),
+                })
+            })
+            .collect();
+        dst.restore(chunks, ex.n_items(), ex.version(), src.version_hint());
+        assert_eq!(dst.version(), 7);
+        assert_eq!(dst.version_hint(), 7, "epoch sequence resumes");
+        assert_eq!(
+            dst.snapshot().get(2).unwrap().to_entry(),
+            src.snapshot().get(2).unwrap().to_entry()
+        );
+        // A subsequent rebuild continues past the restored version.
+        dst.swap_full(vec![Some(entry(3.0)); 4], 8);
+        assert_eq!(dst.version_hint(), 8);
+    }
+
+    #[test]
+    fn patch_chunks_applies_delta_and_extends() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 3);
+        let pl = 1;
+        let mut patched = Chunk::empty(4, 2, pl);
+        patched.write(1, &entry(9.0), 4, 2, pl);
+        let rc = RestoredChunk {
+            item_vec: patched.item_vec.clone(),
+            bea_w: patched.bea_w.clone(),
+            sign_packed: patched.sign_packed.clone(),
+            present: patched.present.clone(),
+        };
+        // Patch chunk 2 with a larger n_items: extends through chunk 2.
+        t.patch_chunks(2 * N2O_CHUNK + 10, vec![(2, rc)]);
+        assert_eq!(t.version(), 3, "delta replay keeps the version");
+        assert_eq!(t.n_items(), 2 * N2O_CHUNK + 10);
+        let snap = t.snapshot();
+        let id = (2 * N2O_CHUNK + 1) as u32;
+        assert_eq!(snap.get(id).unwrap().item_vec[0], 9.0);
+        assert!(snap.get((2 * N2O_CHUNK) as u32).is_none());
+        assert_eq!(snap.get(0).unwrap().item_vec[0], 1.0);
     }
 }

@@ -7,7 +7,7 @@
 //! **Incremental** builds recompute only the touched items (feature update
 //! / new item trigger, via the message queue).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -23,6 +23,11 @@ pub struct NearlineWorker {
     pub hasher: Arc<Hasher>,
     pub table: Arc<N2oTable>,
     pub batch: usize,
+    /// Checkpoint barrier (DESIGN.md §16): when set, the generation swap
+    /// at the end of `full_build` is serialized against checkpoint
+    /// capture, so a snapshot never straddles a swap.  The u64 counts
+    /// barrier crossings (observability only).
+    barrier: Option<Arc<Mutex<u64>>>,
 }
 
 impl NearlineWorker {
@@ -39,7 +44,14 @@ impl NearlineWorker {
             hasher,
             table,
             batch,
+            barrier: None,
         }
+    }
+
+    /// Serialize generation swaps against checkpoint capture.
+    pub fn with_barrier(mut self, barrier: Arc<Mutex<u64>>) -> Self {
+        self.barrier = Some(barrier);
+        self
     }
 
     fn item_raw_tensor(&self, items: &[u32]) -> Tensor {
@@ -118,7 +130,19 @@ impl NearlineWorker {
                 });
             }
         }
-        self.table.swap_full(entries, new_version);
+        // Swap under the checkpoint barrier (if any): the checkpointer
+        // holds the same mutex across its capture, so a manifest is
+        // always entirely-before or entirely-after this swap.  Lock
+        // order is barrier -> generation lock, and the checkpointer only
+        // ever pins (read-locks) the generation — no deadlock.
+        match &self.barrier {
+            Some(b) => {
+                let mut crossings = b.lock().unwrap();
+                *crossings += 1;
+                self.table.swap_full(entries, new_version);
+            }
+            None => self.table.swap_full(entries, new_version),
+        }
         Ok(FullBuildReport {
             n_items: n,
             executions,

@@ -1,7 +1,12 @@
 //! Versioned HTTP/1.1 surface over any [`PreRanker`] (no hyper in the
 //! vendored set; DESIGN.md §10.4):
 //!
-//! * `GET  /healthz` — liveness.
+//! * `GET  /healthz` — liveness: answers 200 whenever the process can
+//!   accept connections, even mid warm boot.
+//! * `GET  /readyz` — readiness: 200 `{"ready": true, ...}` once the
+//!   DESIGN.md §16 boot state machine reaches `ready`, 503 with the
+//!   current state (`restoring`, `replaying`, `verifying`, `building`)
+//!   while a warm or cold boot is still in flight.
 //! * `GET  /metrics` — JSON metrics snapshot, including the `coalesce`
 //!   block (merged executions, rows/jobs per execution, queue-wait
 //!   percentiles) when the pipeline runs the cross-request coalescer —
@@ -17,7 +22,12 @@
 //!   flag, reload generation, served requests).
 //! * `POST /v1/scenarios/{name}/reload` — hot-reload one scenario (RCU
 //!   swap; in-flight requests finish on the old engine).
-//! * per-scenario blocks under `"scenarios"` in `/metrics`.
+//! * `GET  /v1/storage` — durable-store counters (404 when no backend
+//!   is configured).
+//! * `POST /v1/checkpoint` — force a checkpoint now; answers with the
+//!   outcome (`full`/`delta`/`meta_only`/`skipped`) and fresh counters.
+//! * per-scenario blocks under `"scenarios"` in `/metrics`, plus a
+//!   `storage` block when a durable backend is configured.
 //!
 //! [`ServeError`] variants map to statuses via `ServeError::http_status`
 //! (404 unknown user, 504 deadline, 400 bad request, 429 overload, 500
@@ -212,6 +222,33 @@ fn handle_conn(
     };
     match (method.as_str(), path) {
         ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
+        ("GET", "/readyz") => {
+            // Liveness and readiness are deliberately split: /healthz
+            // answers 200 during a warm boot (the process is alive),
+            // while /readyz gates traffic until restore + replay +
+            // verification have finished.
+            let report = match admin {
+                Some(a) => a.readiness(),
+                None => {
+                    let mut o = Object::new();
+                    o.insert("ready", true);
+                    o.insert("state", "ready");
+                    Value::Obj(o)
+                }
+            };
+            let ready = report
+                .as_obj()
+                .and_then(|o| o.get("ready"))
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false);
+            let status = if ready { 200 } else { 503 };
+            respond(
+                &mut stream,
+                status,
+                "application/json",
+                &report.to_string_pretty(),
+            )
+        }
         ("GET", "/metrics") => {
             let snap = ranker.metrics().snapshot(started.elapsed());
             let body = match admin {
@@ -234,6 +271,9 @@ fn handle_conn(
                     }
                     if let Some(uc) = a.user_cache_stats() {
                         o.insert("user_cache", uc);
+                    }
+                    if let Some(st) = a.storage_stats() {
+                        o.insert("storage", st);
                     }
                     o.insert("scenarios", Value::Obj(per));
                     Value::Obj(o).to_string_pretty()
@@ -263,6 +303,37 @@ fn handle_conn(
                 &mut stream,
                 404,
                 "this server does not expose a scenario registry",
+            ),
+        },
+        ("GET", "/v1/storage") => {
+            match admin.and_then(|a| a.storage_stats()) {
+                Some(stats) => respond(
+                    &mut stream,
+                    200,
+                    "application/json",
+                    &stats.to_string_pretty(),
+                ),
+                None => respond_err_msg(
+                    &mut stream,
+                    404,
+                    "no durable storage configured",
+                ),
+            }
+        }
+        ("POST", "/v1/checkpoint") => match admin {
+            Some(a) => match a.trigger_checkpoint() {
+                Ok(v) => respond(
+                    &mut stream,
+                    200,
+                    "application/json",
+                    &v.to_string_pretty(),
+                ),
+                Err(e) => respond_error(&mut stream, &e),
+            },
+            None => respond_err_msg(
+                &mut stream,
+                404,
+                "no durable storage configured",
             ),
         },
         ("GET", "/v1/score") => match parse_query(query) {
@@ -330,9 +401,9 @@ fn handle_conn(
                 ),
             }
         }
-        (_, "/healthz") | (_, "/metrics") => {
-            respond_405(&mut stream, "GET")
-        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/readyz")
+        | (_, "/v1/storage") => respond_405(&mut stream, "GET"),
+        (_, "/v1/checkpoint") => respond_405(&mut stream, "POST"),
         (_, "/v1/score") => respond_405(&mut stream, "GET, POST"),
         (_, "/v1/scenarios") => respond_405(&mut stream, "GET"),
         (_, p) if scenario_reload_target(p).is_some() => {

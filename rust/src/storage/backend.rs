@@ -1,0 +1,406 @@
+//! Pluggable storage backends with an S3-shaped API.
+//!
+//! The `Storage` trait is intentionally small: opaque byte blobs under
+//! string keys, prefix listing, and a conditional `put_if_not_exists`
+//! used for leader-safe manifest allocation (exactly one writer wins a
+//! given key). `MemStorage` backs tests; `FsStorage` maps keys onto a
+//! directory tree with atomic rename-based writes so a real object
+//! store can slot in behind the same trait later.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum StorageError {
+    #[error("key not found: {0}")]
+    NotFound(String),
+    #[error("corrupt blob at {key}: {reason}")]
+    Corrupt { key: String, reason: String },
+    #[error("io error at {key}: {source}")]
+    Io {
+        key: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+pub type Result<T> = std::result::Result<T, StorageError>;
+
+/// Versioned-key blob store. Keys use `/` as a hierarchy separator
+/// (like S3 object keys); values are opaque byte blobs.
+pub trait Storage: Send + Sync {
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+    fn put(&self, key: &str, value: &[u8]) -> Result<()>;
+    /// Atomic create: returns `Ok(true)` if this call created the key,
+    /// `Ok(false)` if the key already existed (value left untouched).
+    fn put_if_not_exists(&self, key: &str, value: &[u8]) -> Result<bool>;
+    /// All keys with the given prefix, in sorted (lexicographic) order.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+    fn delete(&self, key: &str) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected). Vendored so snapshot files are
+// self-checking without pulling in a dependency.
+// ---------------------------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// MemStorage
+// ---------------------------------------------------------------------------
+
+/// In-process backend: a mutex-guarded ordered map. `Arc<Vec<u8>>`
+/// values keep `get` cheap to clone out under the lock.
+#[derive(Default)]
+pub struct MemStorage {
+    blobs: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    puts: AtomicU64,
+}
+
+impl MemStorage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn puts(&self) -> u64 {
+        self.puts.load(Ordering::Relaxed)
+    }
+}
+
+impl Storage for MemStorage {
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let blobs = self.blobs.lock().unwrap();
+        blobs
+            .get(key)
+            .map(|v| v.as_ref().clone())
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))
+    }
+
+    fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        let mut blobs = self.blobs.lock().unwrap();
+        blobs.insert(key.to_string(), Arc::new(value.to_vec()));
+        Ok(())
+    }
+
+    fn put_if_not_exists(&self, key: &str, value: &[u8]) -> Result<bool> {
+        let mut blobs = self.blobs.lock().unwrap();
+        if blobs.contains_key(key) {
+            return Ok(false);
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        blobs.insert(key.to_string(), Arc::new(value.to_vec()));
+        Ok(true)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let blobs = self.blobs.lock().unwrap();
+        Ok(blobs
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let mut blobs = self.blobs.lock().unwrap();
+        blobs.remove(key);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FsStorage
+// ---------------------------------------------------------------------------
+
+/// Filesystem backend rooted at a directory. Key `a/b/c` maps to
+/// `<root>/a/b/c`. Writes land in a temp file first and are installed
+/// with `rename` (atomic on POSIX); `put_if_not_exists` installs with
+/// `hard_link`, which fails if the destination exists — giving the same
+/// exactly-one-winner semantics as a conditional S3 PUT.
+pub struct FsStorage {
+    root: PathBuf,
+    tmp_seq: AtomicU64,
+}
+
+impl FsStorage {
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root).map_err(|e| StorageError::Io {
+            key: root.display().to_string(),
+            source: e,
+        })?;
+        Ok(FsStorage { root, tmp_seq: AtomicU64::new(0) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn key_path(&self, key: &str) -> Result<PathBuf> {
+        // Reject path traversal; keys are plain `/`-separated names.
+        if key.is_empty()
+            || key.split('/').any(|c| {
+                c.is_empty() || c == "." || c == ".." || c.starts_with(".tmp-")
+            })
+        {
+            return Err(StorageError::Corrupt {
+                key: key.to_string(),
+                reason: "invalid key".into(),
+            });
+        }
+        Ok(self.root.join(key))
+    }
+
+    /// Write `value` to a unique temp file next to `path`, fsync'd.
+    fn stage(&self, path: &Path, key: &str, value: &[u8]) -> Result<PathBuf> {
+        let parent = path.parent().unwrap_or(&self.root);
+        fs::create_dir_all(parent).map_err(|e| StorageError::Io {
+            key: key.to_string(),
+            source: e,
+        })?;
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = parent.join(format!(
+            ".tmp-{}-{}-{}",
+            std::process::id(),
+            seq,
+            path.file_name().and_then(|n| n.to_str()).unwrap_or("blob")
+        ));
+        let write = (|| {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(value)?;
+            f.sync_all()
+        })();
+        if let Err(e) = write {
+            let _ = fs::remove_file(&tmp);
+            return Err(StorageError::Io { key: key.to_string(), source: e });
+        }
+        Ok(tmp)
+    }
+}
+
+impl Storage for FsStorage {
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.key_path(key)?;
+        match fs::read(&path) {
+            Ok(v) => Ok(v),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(StorageError::NotFound(key.to_string()))
+            }
+            Err(e) => Err(StorageError::Io { key: key.to_string(), source: e }),
+        }
+    }
+
+    fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        let path = self.key_path(key)?;
+        let tmp = self.stage(&path, key, value)?;
+        fs::rename(&tmp, &path).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            StorageError::Io { key: key.to_string(), source: e }
+        })
+    }
+
+    fn put_if_not_exists(&self, key: &str, value: &[u8]) -> Result<bool> {
+        let path = self.key_path(key)?;
+        let tmp = self.stage(&path, key, value)?;
+        let linked = fs::hard_link(&tmp, &path);
+        let _ = fs::remove_file(&tmp);
+        match linked {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Ok(false)
+            }
+            Err(e) => Err(StorageError::Io { key: key.to_string(), source: e }),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => {
+                    return Err(StorageError::Io {
+                        key: prefix.to_string(),
+                        source: e,
+                    })
+                }
+            };
+            for entry in entries {
+                let entry = entry.map_err(|e| StorageError::Io {
+                    key: prefix.to_string(),
+                    source: e,
+                })?;
+                let path = entry.path();
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with(".tmp-") {
+                    continue;
+                }
+                if path.is_dir() {
+                    stack.push(path);
+                } else if let Ok(rel) = path.strip_prefix(&self.root) {
+                    let key = rel
+                        .components()
+                        .map(|c| c.as_os_str().to_string_lossy())
+                        .collect::<Vec<_>>()
+                        .join("/");
+                    if key.starts_with(prefix) {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.key_path(key)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(StorageError::Io { key: key.to_string(), source: e }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("aif_storage_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn exercise(store: &dyn Storage) {
+        assert!(matches!(store.get("a/b"), Err(StorageError::NotFound(_))));
+        store.put("a/b", b"one").unwrap();
+        assert_eq!(store.get("a/b").unwrap(), b"one");
+        store.put("a/b", b"two").unwrap();
+        assert_eq!(store.get("a/b").unwrap(), b"two");
+
+        assert!(!store.put_if_not_exists("a/b", b"three").unwrap());
+        assert_eq!(store.get("a/b").unwrap(), b"two");
+        assert!(store.put_if_not_exists("a/c", b"new").unwrap());
+        assert_eq!(store.get("a/c").unwrap(), b"new");
+
+        store.put("z/deep/key", b"z").unwrap();
+        assert_eq!(store.list("a/").unwrap(), vec!["a/b", "a/c"]);
+        assert_eq!(store.list("").unwrap(), vec!["a/b", "a/c", "z/deep/key"]);
+
+        store.delete("a/b").unwrap();
+        store.delete("a/b").unwrap(); // idempotent
+        assert!(matches!(store.get("a/b"), Err(StorageError::NotFound(_))));
+        assert_eq!(store.list("a/").unwrap(), vec!["a/c"]);
+    }
+
+    #[test]
+    fn mem_storage_basic_ops() {
+        exercise(&MemStorage::new());
+    }
+
+    #[test]
+    fn fs_storage_basic_ops() {
+        let dir = tmp_dir("basic");
+        exercise(&FsStorage::new(&dir).unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fs_storage_rejects_traversal_keys() {
+        let dir = tmp_dir("traversal");
+        let s = FsStorage::new(&dir).unwrap();
+        for bad in ["../escape", "a//b", "", "a/./b", ".tmp-x"] {
+            assert!(s.put(bad, b"x").is_err(), "key {bad:?} must be rejected");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fs_storage_list_skips_temp_files() {
+        let dir = tmp_dir("tmpskip");
+        let s = FsStorage::new(&dir).unwrap();
+        s.put("k", b"v").unwrap();
+        fs::write(dir.join(".tmp-999-0-k"), b"partial").unwrap();
+        assert_eq!(s.list("").unwrap(), vec!["k"]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_if_not_exists_race_has_one_winner() {
+        let dir = tmp_dir("race");
+        let fs_store: Arc<dyn Storage> =
+            Arc::new(FsStorage::new(&dir).unwrap());
+        let mem_store: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        for store in [fs_store, mem_store] {
+            let wins: Vec<bool> = std::thread::scope(|scope| {
+                (0..8)
+                    .map(|i| {
+                        let store = &store;
+                        scope.spawn(move || {
+                            store
+                                .put_if_not_exists(
+                                    "meta/manifest-0.json",
+                                    format!("writer-{i}").as_bytes(),
+                                )
+                                .unwrap()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            assert_eq!(
+                wins.iter().filter(|&&w| w).count(),
+                1,
+                "exactly one writer must win"
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

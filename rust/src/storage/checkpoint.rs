@@ -1,0 +1,622 @@
+//! Checkpointer: periodic durable publication of serving state, and the
+//! warm-boot restore path (DESIGN.md §16).
+//!
+//! Publication is incremental: the first checkpoint of a generation
+//! writes a full snapshot; later checkpoints of the SAME generation
+//! write per-chunk deltas discovered by `Arc` pointer comparison against
+//! the previously published export (copy-on-write upserts make the diff
+//! free).  Every checkpoint ends with a manifest — allocated with
+//! `put_if_not_exists` so concurrent publishers get exactly one winner
+//! per id — and a `meta/LATEST` pointer naming the newest consistent
+//! set.
+//!
+//! Capture happens under the checkpoint barrier shared with
+//! `NearlineWorker::full_build` and `ScenarioRegistry::reload`, so a
+//! manifest never records state that straddles a generation swap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::nearline::{N2oExport, N2oTable};
+use crate::util::json::{Object, Value};
+
+use super::backend::{Result, Storage, StorageError};
+use super::snapshot::{self, digest_hex};
+use super::{ReadyState, Readiness};
+
+const LATEST_KEY: &str = "meta/LATEST";
+
+fn full_key(version: u64) -> String {
+    format!("n2o/v{version:012}/full.n2o")
+}
+
+fn delta_key(version: u64, seq: u64) -> String {
+    format!("n2o/v{version:012}/delta-{seq:06}.n2o")
+}
+
+fn manifest_key(id: u64) -> String {
+    format!("meta/manifest-{id:012}.json")
+}
+
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// What one `checkpoint()` call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointOutcome {
+    /// Nothing changed since the last published checkpoint; no writes.
+    Skipped,
+    /// New generation (or first checkpoint): full snapshot written.
+    Full,
+    /// Same generation, changed chunks: delta written.
+    Delta,
+    /// Chunks unchanged but metadata (epoch / hint) moved: manifest only.
+    MetaOnly,
+}
+
+impl CheckpointOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CheckpointOutcome::Skipped => "skipped",
+            CheckpointOutcome::Full => "full",
+            CheckpointOutcome::Delta => "delta",
+            CheckpointOutcome::MetaOnly => "meta_only",
+        }
+    }
+}
+
+/// Result of a successful warm-boot restore.
+#[derive(Debug)]
+pub struct RestoreReport {
+    pub manifest_key: String,
+    pub version: u64,
+    pub version_hint: u64,
+    pub n_items: usize,
+    pub deltas_replayed: usize,
+    pub user_epoch: u64,
+    pub elapsed_ms: u64,
+}
+
+/// The last published state, kept for pointer-diffing the next delta.
+struct Published {
+    export: N2oExport,
+    base_version: u64,
+    digest: u64,
+    version_hint: u64,
+    user_epoch: u64,
+    full_key: String,
+    delta_keys: Vec<String>,
+    next_seq: u64,
+}
+
+#[derive(Default)]
+struct CkptState {
+    published: Option<Published>,
+    next_manifest_id: Option<u64>,
+}
+
+pub struct Checkpointer {
+    store: Arc<dyn Storage>,
+    barrier: Arc<Mutex<u64>>,
+    state: Mutex<CkptState>,
+    // Stats (the `/metrics` storage block).
+    fulls_written: AtomicU64,
+    deltas_written: AtomicU64,
+    manifests_written: AtomicU64,
+    bytes_written: AtomicU64,
+    skipped_unchanged: AtomicU64,
+    last_checkpoint_unix_ms: AtomicU64,
+    restored: AtomicU64,
+    restore_ms: AtomicU64,
+    delta_replays: AtomicU64,
+}
+
+impl Checkpointer {
+    pub fn new(store: Arc<dyn Storage>, barrier: Arc<Mutex<u64>>) -> Self {
+        Checkpointer {
+            store,
+            barrier,
+            state: Mutex::new(CkptState::default()),
+            fulls_written: AtomicU64::new(0),
+            deltas_written: AtomicU64::new(0),
+            manifests_written: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+            skipped_unchanged: AtomicU64::new(0),
+            last_checkpoint_unix_ms: AtomicU64::new(0),
+            restored: AtomicU64::new(0),
+            restore_ms: AtomicU64::new(0),
+            delta_replays: AtomicU64::new(0),
+        }
+    }
+
+    pub fn store(&self) -> &Arc<dyn Storage> {
+        &self.store
+    }
+
+    fn put_counted(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.store.put(key, bytes)?;
+        self.bytes_written
+            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Publish the current state.  `user_epoch` is the composed user
+    /// cache epoch; `artifacts_dir` records which compiled-artifact
+    /// manifest this snapshot was built against.
+    pub fn checkpoint(
+        &self,
+        table: &N2oTable,
+        user_epoch: u64,
+        artifacts_dir: &str,
+    ) -> Result<CheckpointOutcome> {
+        let mut state = self.state.lock().unwrap();
+        // Capture under the barrier: export + version_hint are taken as
+        // one consistent pair, with no generation swap in between.  The
+        // barrier is released before serialization — the pinned export
+        // is immutable, so the expensive part runs without blocking
+        // rebuilds or reloads.
+        let (ex, hint) = {
+            let mut crossings = self.barrier.lock().unwrap();
+            *crossings += 1;
+            (table.export(), table.version_hint())
+        };
+        let digest = snapshot::state_digest(&ex);
+
+        let outcome = match &mut state.published {
+            Some(p) if p.base_version == ex.version() => {
+                if p.digest == digest
+                    && p.version_hint == hint
+                    && p.user_epoch == user_epoch
+                {
+                    self.skipped_unchanged.fetch_add(1, Ordering::Relaxed);
+                    return Ok(CheckpointOutcome::Skipped);
+                }
+                let outcome =
+                    match snapshot::encode_delta(&p.export, &ex, p.next_seq) {
+                        Some(bytes) => {
+                            let key = delta_key(ex.version(), p.next_seq);
+                            self.put_counted(&key, &bytes)?;
+                            self.deltas_written
+                                .fetch_add(1, Ordering::Relaxed);
+                            p.delta_keys.push(key);
+                            p.next_seq += 1;
+                            CheckpointOutcome::Delta
+                        }
+                        None => CheckpointOutcome::MetaOnly,
+                    };
+                p.export = ex;
+                p.digest = digest;
+                p.version_hint = hint;
+                p.user_epoch = user_epoch;
+                outcome
+            }
+            _ => {
+                let bytes = snapshot::encode_full(&ex, hint);
+                let key = full_key(ex.version());
+                self.put_counted(&key, &bytes)?;
+                self.fulls_written.fetch_add(1, Ordering::Relaxed);
+                state.published = Some(Published {
+                    base_version: ex.version(),
+                    digest,
+                    version_hint: hint,
+                    user_epoch,
+                    full_key: key,
+                    delta_keys: Vec::new(),
+                    next_seq: 1,
+                    export: ex,
+                });
+                CheckpointOutcome::Full
+            }
+        };
+        self.write_manifest(&mut state, user_epoch, artifacts_dir)?;
+        Ok(outcome)
+    }
+
+    fn write_manifest(
+        &self,
+        state: &mut CkptState,
+        user_epoch: u64,
+        artifacts_dir: &str,
+    ) -> Result<()> {
+        if state.next_manifest_id.is_none() {
+            // First manifest from this process: resume the id sequence
+            // past whatever an earlier incarnation published.
+            let max = self
+                .store
+                .list("meta/manifest-")?
+                .iter()
+                .filter_map(|k| parse_manifest_id(k))
+                .max();
+            state.next_manifest_id = Some(max.map_or(0, |m| m + 1));
+        }
+        let p = state.published.as_ref().expect("published before manifest");
+
+        let mut n2o = Object::new();
+        n2o.insert("version", p.base_version);
+        n2o.insert("version_hint", p.version_hint);
+        n2o.insert("n_items", p.export.n_items());
+        n2o.insert("digest", digest_hex(p.digest));
+        n2o.insert("full", p.full_key.as_str());
+        n2o.insert(
+            "deltas",
+            p.delta_keys
+                .iter()
+                .map(|k| Value::from(k.as_str()))
+                .collect::<Vec<Value>>(),
+        );
+        let mut user_cache = Object::new();
+        user_cache.insert("epoch", user_epoch);
+        let mut artifacts = Object::new();
+        artifacts.insert("dir", artifacts_dir);
+
+        let mut id = state.next_manifest_id.unwrap();
+        let key = loop {
+            let mut m = Object::new();
+            m.insert("checkpoint_id", id);
+            m.insert("created_unix_ms", unix_ms());
+            m.insert("n2o", n2o.clone());
+            m.insert("user_cache", user_cache.clone());
+            m.insert("artifacts", artifacts.clone());
+            let body = Value::from(m).to_string_pretty();
+            let key = manifest_key(id);
+            // Leader-safe id allocation: losing the race means another
+            // publisher took this id — step past it and retry.
+            if self.store.put_if_not_exists(key.as_str(), body.as_bytes())? {
+                self.bytes_written
+                    .fetch_add(body.len() as u64, Ordering::Relaxed);
+                break key;
+            }
+            id += 1;
+        };
+        state.next_manifest_id = Some(id + 1);
+        self.store.put(LATEST_KEY, key.as_bytes())?;
+        self.manifests_written.fetch_add(1, Ordering::Relaxed);
+        self.last_checkpoint_unix_ms.store(unix_ms(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Warm-boot restore: newest manifest -> full snapshot -> delta
+    /// replay -> digest verification.  Returns `Ok(None)` when the store
+    /// holds no checkpoint yet (cold boot).  Advances `readiness`
+    /// through Restoring/Replaying/Verifying; the caller flips Ready.
+    pub fn restore(
+        &self,
+        table: &N2oTable,
+        readiness: &Readiness,
+    ) -> Result<Option<RestoreReport>> {
+        let t0 = Instant::now();
+        let manifest_key = match self.store.get(LATEST_KEY) {
+            Ok(b) => String::from_utf8_lossy(&b).trim().to_string(),
+            Err(StorageError::NotFound(_)) => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        let corrupt = |reason: &str| StorageError::Corrupt {
+            key: manifest_key.clone(),
+            reason: reason.to_string(),
+        };
+        let manifest_bytes = self.store.get(&manifest_key)?;
+        let manifest = Value::parse(
+            std::str::from_utf8(&manifest_bytes)
+                .map_err(|_| corrupt("manifest is not utf-8"))?,
+        )
+        .map_err(|e| corrupt(&format!("manifest parse: {e:?}")))?;
+        let root = manifest.as_obj().ok_or_else(|| corrupt("not an object"))?;
+        let n2o = root
+            .get("n2o")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| corrupt("missing n2o block"))?;
+        let version = n2o
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| corrupt("missing n2o.version"))?
+            as u64;
+        let version_hint = n2o
+            .get("version_hint")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| corrupt("missing n2o.version_hint"))?
+            as u64;
+        let want_digest = n2o
+            .get("digest")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| corrupt("missing n2o.digest"))?
+            .to_string();
+        let full_key = n2o
+            .get("full")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| corrupt("missing n2o.full"))?
+            .to_string();
+        let delta_keys: Vec<String> = n2o
+            .get("deltas")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| corrupt("missing n2o.deltas"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let user_epoch = root
+            .get("user_cache")
+            .and_then(|v| v.as_obj())
+            .and_then(|o| o.get("epoch"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+
+        // Phase 1: restore the full snapshot.
+        readiness.set(ReadyState::Restoring);
+        let full =
+            snapshot::decode_full(&self.store.get(&full_key)?, &full_key)?;
+        if (full.d, full.n_bridge, full.n_bits)
+            != (table.d, table.n_bridge, table.n_bits)
+        {
+            return Err(StorageError::Corrupt {
+                key: full_key,
+                reason: format!(
+                    "dims mismatch: snapshot ({},{},{}) vs table ({},{},{})",
+                    full.d,
+                    full.n_bridge,
+                    full.n_bits,
+                    table.d,
+                    table.n_bridge,
+                    table.n_bits
+                ),
+            });
+        }
+        if full.version != version {
+            return Err(StorageError::Corrupt {
+                key: full_key,
+                reason: format!(
+                    "full snapshot version {} != manifest version {version}",
+                    full.version
+                ),
+            });
+        }
+        table.restore(full.chunks, full.n_items, version, version_hint);
+
+        // Phase 2: replay the delta queue in published order.
+        readiness.set(ReadyState::Replaying);
+        let mut replayed = 0usize;
+        for key in &delta_keys {
+            let delta = snapshot::decode_delta(&self.store.get(key)?, key)?;
+            if delta.base_version != version {
+                return Err(StorageError::Corrupt {
+                    key: key.clone(),
+                    reason: format!(
+                        "delta base {} != snapshot version {version}",
+                        delta.base_version
+                    ),
+                });
+            }
+            table.patch_chunks(delta.n_items, delta.patches);
+            replayed += 1;
+        }
+
+        // Phase 3: verify the restored state is bitwise-identical to
+        // what the manifest recorded, BEFORE the caller flips readiness.
+        readiness.set(ReadyState::Verifying);
+        let ex = table.export();
+        let digest = snapshot::state_digest(&ex);
+        if digest_hex(digest) != want_digest {
+            return Err(StorageError::Corrupt {
+                key: manifest_key,
+                reason: format!(
+                    "restored digest {} != manifest digest {want_digest}",
+                    digest_hex(digest)
+                ),
+            });
+        }
+
+        // Seed the publication state so the NEXT checkpoint diffs
+        // against the restored export instead of rewriting a full.
+        let n_items = ex.n_items();
+        {
+            let mut state = self.state.lock().unwrap();
+            state.published = Some(Published {
+                base_version: version,
+                digest,
+                version_hint,
+                user_epoch,
+                full_key: full_key.clone(),
+                next_seq: replayed as u64 + 1,
+                delta_keys,
+                export: ex,
+            });
+        }
+
+        let elapsed_ms = t0.elapsed().as_millis() as u64;
+        self.restored.store(1, Ordering::Relaxed);
+        self.restore_ms.store(elapsed_ms, Ordering::Relaxed);
+        self.delta_replays
+            .fetch_add(replayed as u64, Ordering::Relaxed);
+        Ok(Some(RestoreReport {
+            manifest_key,
+            version,
+            version_hint,
+            n_items,
+            deltas_replayed: replayed,
+            user_epoch,
+            elapsed_ms,
+        }))
+    }
+
+    /// The `/metrics` storage block (same shape discipline as the
+    /// arena / user_cache blocks).
+    pub fn stats_snapshot(&self) -> Object {
+        let mut o = Object::new();
+        o.insert(
+            "snapshots_full",
+            self.fulls_written.load(Ordering::Relaxed),
+        );
+        o.insert(
+            "snapshots_delta",
+            self.deltas_written.load(Ordering::Relaxed),
+        );
+        o.insert(
+            "manifests",
+            self.manifests_written.load(Ordering::Relaxed),
+        );
+        o.insert("bytes_written", self.bytes_written.load(Ordering::Relaxed));
+        o.insert(
+            "skipped_unchanged",
+            self.skipped_unchanged.load(Ordering::Relaxed),
+        );
+        let last_ms = self.last_checkpoint_unix_ms.load(Ordering::Relaxed);
+        o.insert("last_checkpoint_unix_ms", last_ms);
+        o.insert(
+            "last_checkpoint_age_ms",
+            if last_ms == 0 {
+                -1i64
+            } else {
+                unix_ms().saturating_sub(last_ms) as i64
+            },
+        );
+        o.insert("restored", self.restored.load(Ordering::Relaxed) == 1);
+        o.insert("restore_ms", self.restore_ms.load(Ordering::Relaxed));
+        o.insert(
+            "delta_replays",
+            self.delta_replays.load(Ordering::Relaxed),
+        );
+        o.insert("barrier_crossings", *self.barrier.lock().unwrap());
+        o
+    }
+}
+
+fn parse_manifest_id(key: &str) -> Option<u64> {
+    key.strip_prefix("meta/manifest-")?
+        .strip_suffix(".json")?
+        .parse()
+        .ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nearline::N2oEntry;
+    use crate::storage::MemStorage;
+
+    fn entry(v: f32, id: u32) -> N2oEntry {
+        N2oEntry {
+            item_vec: vec![v, id as f32, 0.0, 1.0],
+            bea_w: vec![v; 2],
+            sign_packed: vec![id as u8],
+        }
+    }
+
+    fn checkpointer() -> Checkpointer {
+        Checkpointer::new(
+            Arc::new(MemStorage::new()),
+            Arc::new(Mutex::new(0)),
+        )
+    }
+
+    #[test]
+    fn full_then_delta_then_skip() {
+        let cp = checkpointer();
+        let t = N2oTable::new(8, 4, 2, 8);
+        t.swap_full((0..8).map(|i| Some(entry(1.0, i as u32))).collect(), 1);
+        assert_eq!(
+            cp.checkpoint(&t, 0, "art").unwrap(),
+            CheckpointOutcome::Full
+        );
+        assert_eq!(
+            cp.checkpoint(&t, 0, "art").unwrap(),
+            CheckpointOutcome::Skipped
+        );
+        t.upsert(vec![(3, entry(9.0, 3))]);
+        assert_eq!(
+            cp.checkpoint(&t, 0, "art").unwrap(),
+            CheckpointOutcome::Delta
+        );
+        // Epoch-only movement publishes a manifest without new blobs.
+        assert_eq!(
+            cp.checkpoint(&t, 1, "art").unwrap(),
+            CheckpointOutcome::MetaOnly
+        );
+        // A rebuild (new generation) forces a full snapshot again.
+        t.swap_full((0..8).map(|i| Some(entry(2.0, i as u32))).collect(), 2);
+        assert_eq!(
+            cp.checkpoint(&t, 1, "art").unwrap(),
+            CheckpointOutcome::Full
+        );
+    }
+
+    #[test]
+    fn restore_round_trip_with_deltas() {
+        let store: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let cp =
+            Checkpointer::new(Arc::clone(&store), Arc::new(Mutex::new(0)));
+        let src = N2oTable::new(8, 4, 2, 8);
+        src.swap_full(
+            (0..8).map(|i| Some(entry(1.0, i as u32))).collect(),
+            4,
+        );
+        cp.checkpoint(&src, 10, "art").unwrap();
+        src.upsert(vec![(2, entry(7.0, 2)), (9, entry(8.0, 9))]);
+        cp.checkpoint(&src, 11, "art").unwrap();
+
+        let cp2 = Checkpointer::new(store, Arc::new(Mutex::new(0)));
+        let dst = N2oTable::new(8, 4, 2, 8);
+        let readiness = Readiness::new();
+        let report = cp2.restore(&dst, &readiness).unwrap().unwrap();
+        assert_eq!(report.version, 4);
+        assert_eq!(report.deltas_replayed, 1);
+        assert_eq!(report.user_epoch, 11);
+        assert_eq!(dst.version_hint(), 4);
+        assert_eq!(dst.n_items(), 10);
+        assert_eq!(dst.snapshot().get(9).unwrap().item_vec[0], 8.0);
+        assert_eq!(
+            snapshot::state_digest(&dst.export()),
+            snapshot::state_digest(&src.export())
+        );
+        // Restore seeds publication state: an unchanged re-checkpoint
+        // from the restored process skips instead of rewriting a full.
+        assert_eq!(
+            cp2.checkpoint(&dst, 11, "art").unwrap(),
+            CheckpointOutcome::Skipped
+        );
+    }
+
+    #[test]
+    fn restore_on_empty_store_is_none() {
+        let cp = checkpointer();
+        let t = N2oTable::new(4, 4, 2, 8);
+        assert!(cp.restore(&t, &Readiness::new()).unwrap().is_none());
+    }
+
+    #[test]
+    fn restore_rejects_dims_mismatch() {
+        let store: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let cp =
+            Checkpointer::new(Arc::clone(&store), Arc::new(Mutex::new(0)));
+        let src = N2oTable::new(4, 4, 2, 8);
+        src.swap_full(vec![Some(entry(1.0, 0)); 4], 1);
+        cp.checkpoint(&src, 0, "art").unwrap();
+        let cp2 = Checkpointer::new(store, Arc::new(Mutex::new(0)));
+        let dst = N2oTable::new(4, 6, 2, 8); // d=6, snapshot has d=4
+        assert!(matches!(
+            cp2.restore(&dst, &Readiness::new()),
+            Err(StorageError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn manifest_ids_resume_across_incarnations() {
+        let store: Arc<dyn Storage> = Arc::new(MemStorage::new());
+        let cp =
+            Checkpointer::new(Arc::clone(&store), Arc::new(Mutex::new(0)));
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0, 0)); 4], 1);
+        cp.checkpoint(&t, 0, "art").unwrap();
+        t.upsert(vec![(0, entry(2.0, 0))]);
+        cp.checkpoint(&t, 0, "art").unwrap();
+
+        let cp2 =
+            Checkpointer::new(Arc::clone(&store), Arc::new(Mutex::new(0)));
+        t.upsert(vec![(1, entry(3.0, 1))]);
+        cp2.checkpoint(&t, 0, "art").unwrap();
+        let manifests = store.list("meta/manifest-").unwrap();
+        assert_eq!(manifests.len(), 3, "no id collision: {manifests:?}");
+    }
+}

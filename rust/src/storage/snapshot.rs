@@ -1,0 +1,482 @@
+//! Snapshot serialization: columnar N2O generations to/from versioned,
+//! checksummed blobs (DESIGN.md §16).
+//!
+//! Two file kinds, both little-endian with a CRC32 trailer over every
+//! preceding byte:
+//!
+//! * **Full** (`AIFSNAP1`): dims header + every chunk of one generation
+//!   in stable ascending-id order.  All-absent chunks are a single flag
+//!   byte (they share one zeroed allocation in memory, and on disk they
+//!   cost nothing).
+//! * **Delta** (`AIFDELT1`): the chunks whose `Arc` pointer changed
+//!   since the previously published export — copy-on-write upserts make
+//!   "changed since last checkpoint" a pointer comparison, not a diff.
+//!
+//! The snapshot header carries the table's lock-free `version_hint`
+//! mirror so a restored table RESUMES the epoch sequence: resetting it
+//! would silently un-invalidate `UserStateCache` entries keyed on the
+//! composed epoch.
+
+use crate::nearline::{N2oExport, RestoredChunk, N2O_CHUNK};
+
+use super::backend::{crc32, Result, StorageError};
+
+pub const FULL_MAGIC: &[u8; 8] = b"AIFSNAP1";
+pub const DELTA_MAGIC: &[u8; 8] = b"AIFDELT1";
+
+/// Decoded full snapshot, ready for `N2oTable::restore`.
+pub struct FullSnapshot {
+    pub d: usize,
+    pub n_bridge: usize,
+    pub n_bits: usize,
+    pub version: u64,
+    pub version_hint: u64,
+    pub n_items: usize,
+    pub chunks: Vec<Option<RestoredChunk>>,
+}
+
+/// Decoded delta, ready for `N2oTable::patch_chunks`.
+pub struct DeltaFile {
+    pub base_version: u64,
+    pub seq: u64,
+    pub n_items: usize,
+    pub patches: Vec<(usize, RestoredChunk)>,
+}
+
+// -- little-endian writers ---------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_bools(out: &mut Vec<u8>, vs: &[bool]) {
+    out.extend(vs.iter().map(|&b| b as u8));
+}
+
+fn seal(mut out: Vec<u8>) -> Vec<u8> {
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+// -- checked little-endian reader -------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    key: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    fn corrupt(&self, reason: &str) -> StorageError {
+        StorageError::Corrupt {
+            key: self.key.to_string(),
+            reason: reason.to_string(),
+        }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(self.corrupt("truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn bools(&mut self, n: usize) -> Result<Vec<bool>> {
+        Ok(self.bytes(n)?.iter().map(|&b| b != 0).collect())
+    }
+}
+
+/// Verify the CRC32 trailer and return the body (everything before it).
+fn verify<'a>(bytes: &'a [u8], key: &str) -> Result<&'a [u8]> {
+    if bytes.len() < 12 {
+        return Err(StorageError::Corrupt {
+            key: key.to_string(),
+            reason: "too short for header + checksum".into(),
+        });
+    }
+    let (body, trailer) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(trailer.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        return Err(StorageError::Corrupt {
+            key: key.to_string(),
+            reason: format!("checksum mismatch: {got:#010x} != {want:#010x}"),
+        });
+    }
+    Ok(body)
+}
+
+fn put_chunk_payload(
+    out: &mut Vec<u8>,
+    c: &crate::nearline::N2oChunkView<'_>,
+) {
+    put_f32s(out, c.item_vec);
+    put_f32s(out, c.bea_w);
+    out.extend_from_slice(c.sign_packed);
+    put_bools(out, c.present);
+}
+
+fn read_chunk_payload(
+    r: &mut Reader<'_>,
+    d: usize,
+    n_bridge: usize,
+    pl: usize,
+) -> Result<RestoredChunk> {
+    Ok(RestoredChunk {
+        item_vec: r.f32s(N2O_CHUNK * d)?,
+        bea_w: r.f32s(N2O_CHUNK * n_bridge)?,
+        sign_packed: r.bytes(N2O_CHUNK * pl)?.to_vec(),
+        present: r.bools(N2O_CHUNK)?,
+    })
+}
+
+/// Serialize a pinned generation as a full snapshot.  `version_hint` is
+/// the table's lock-free mirror, captured under the checkpoint barrier
+/// alongside the export so the pair is consistent.
+pub fn encode_full(ex: &N2oExport, version_hint: u64) -> Vec<u8> {
+    let (d, n_bridge, n_bits) = ex.dims();
+    let mut out = Vec::new();
+    out.extend_from_slice(FULL_MAGIC);
+    put_u32(&mut out, d as u32);
+    put_u32(&mut out, n_bridge as u32);
+    put_u32(&mut out, n_bits as u32);
+    put_u64(&mut out, ex.version());
+    put_u64(&mut out, version_hint);
+    put_u64(&mut out, ex.n_items() as u64);
+    put_u64(&mut out, ex.n_chunks() as u64);
+    for i in 0..ex.n_chunks() {
+        let c = ex.chunk(i);
+        if c.any_present() {
+            out.push(1);
+            put_chunk_payload(&mut out, &c);
+        } else {
+            out.push(0);
+        }
+    }
+    seal(out)
+}
+
+pub fn decode_full(bytes: &[u8], key: &str) -> Result<FullSnapshot> {
+    let body = verify(bytes, key)?;
+    let mut r = Reader { buf: body, pos: 0, key };
+    if r.bytes(8)? != FULL_MAGIC {
+        return Err(r.corrupt("bad magic (not a full snapshot)"));
+    }
+    let d = r.u32()? as usize;
+    let n_bridge = r.u32()? as usize;
+    let n_bits = r.u32()? as usize;
+    let version = r.u64()?;
+    let version_hint = r.u64()?;
+    let n_items = r.u64()? as usize;
+    let n_chunks = r.u64()? as usize;
+    if n_chunks == 0 || n_chunks * N2O_CHUNK < n_items {
+        return Err(r.corrupt("chunk count cannot hold n_items"));
+    }
+    let pl = n_bits.div_ceil(8);
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        let flag = r.bytes(1)?[0];
+        chunks.push(match flag {
+            0 => None,
+            1 => Some(read_chunk_payload(&mut r, d, n_bridge, pl)?),
+            _ => return Err(r.corrupt("bad chunk flag")),
+        });
+    }
+    if r.pos != body.len() {
+        return Err(r.corrupt("trailing bytes after last chunk"));
+    }
+    Ok(FullSnapshot {
+        d,
+        n_bridge,
+        n_bits,
+        version,
+        version_hint,
+        n_items,
+        chunks,
+    })
+}
+
+/// Serialize the chunks that changed between two exports of the SAME
+/// generation version (incremental upserts keep the version; a version
+/// change means a full rebuild happened and callers must write a full
+/// snapshot instead).  Returns `None` when nothing changed.
+pub fn encode_delta(
+    prev: &N2oExport,
+    cur: &N2oExport,
+    seq: u64,
+) -> Option<Vec<u8>> {
+    assert_eq!(
+        prev.version(),
+        cur.version(),
+        "delta requires same base version"
+    );
+    let changed: Vec<usize> = (0..cur.n_chunks())
+        .filter(|&i| {
+            !cur.chunk_shared_with(prev, i) && cur.chunk(i).any_present()
+        })
+        .collect();
+    if changed.is_empty() && cur.n_items() == prev.n_items() {
+        return None;
+    }
+    let (d, n_bridge, n_bits) = cur.dims();
+    let mut out = Vec::new();
+    out.extend_from_slice(DELTA_MAGIC);
+    put_u32(&mut out, d as u32);
+    put_u32(&mut out, n_bridge as u32);
+    put_u32(&mut out, n_bits as u32);
+    put_u64(&mut out, cur.version());
+    put_u64(&mut out, seq);
+    put_u64(&mut out, cur.n_items() as u64);
+    put_u32(&mut out, changed.len() as u32);
+    for i in changed {
+        put_u32(&mut out, i as u32);
+        put_chunk_payload(&mut out, &cur.chunk(i));
+    }
+    Some(seal(out))
+}
+
+pub fn decode_delta(bytes: &[u8], key: &str) -> Result<DeltaFile> {
+    let body = verify(bytes, key)?;
+    let mut r = Reader { buf: body, pos: 0, key };
+    if r.bytes(8)? != DELTA_MAGIC {
+        return Err(r.corrupt("bad magic (not a delta)"));
+    }
+    let d = r.u32()? as usize;
+    let n_bridge = r.u32()? as usize;
+    let n_bits = r.u32()? as usize;
+    let base_version = r.u64()?;
+    let seq = r.u64()?;
+    let n_items = r.u64()? as usize;
+    let n_patches = r.u32()? as usize;
+    let pl = n_bits.div_ceil(8);
+    let mut patches = Vec::with_capacity(n_patches);
+    for _ in 0..n_patches {
+        let ci = r.u32()? as usize;
+        patches.push((ci, read_chunk_payload(&mut r, d, n_bridge, pl)?));
+    }
+    if r.pos != body.len() {
+        return Err(r.corrupt("trailing bytes after last patch"));
+    }
+    Ok(DeltaFile {
+        base_version,
+        seq,
+        n_items,
+        patches,
+    })
+}
+
+/// FNV-1a digest over the full columnar state of an export, in stable
+/// chunk order.  Scoring is deterministic given the N2O state, the
+/// compiled artifacts and the user state, so digest equality between the
+/// capture-side export and the restored table IS the bitwise-identity
+/// check for restored scores — verified before readiness flips, and
+/// re-verified end-to-end (actual top-K bytes) by the warm-restart
+/// tests.
+pub fn state_digest(ex: &N2oExport) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    let (d, n_bridge, n_bits) = ex.dims();
+    mix(&(d as u64).to_le_bytes());
+    mix(&(n_bridge as u64).to_le_bytes());
+    mix(&(n_bits as u64).to_le_bytes());
+    mix(&ex.version().to_le_bytes());
+    mix(&(ex.n_items() as u64).to_le_bytes());
+    mix(&(ex.n_chunks() as u64).to_le_bytes());
+    for i in 0..ex.n_chunks() {
+        let c = ex.chunk(i);
+        for v in c.item_vec {
+            mix(&v.to_le_bytes());
+        }
+        for v in c.bea_w {
+            mix(&v.to_le_bytes());
+        }
+        mix(c.sign_packed);
+        for &p in c.present {
+            mix(&[p as u8]);
+        }
+    }
+    h
+}
+
+/// Render a u64 digest as a fixed-width hex string for JSON manifests
+/// (u64 does not survive a round-trip through JSON's f64 numbers).
+pub fn digest_hex(d: u64) -> String {
+    format!("{d:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nearline::{N2oEntry, N2oTable};
+
+    fn entry(v: f32, id: u32) -> N2oEntry {
+        N2oEntry {
+            item_vec: vec![v, id as f32, -v, 0.25],
+            bea_w: vec![v; 2],
+            sign_packed: vec![id as u8],
+        }
+    }
+
+    fn build_table(n: usize) -> N2oTable {
+        let t = N2oTable::new(n, 4, 2, 8);
+        t.swap_full(
+            (0..n)
+                .map(|i| {
+                    (i % 3 != 2).then(|| entry(0.5 + i as f32, i as u32))
+                })
+                .collect(),
+            5,
+        );
+        t
+    }
+
+    fn restore_into(full: FullSnapshot) -> N2oTable {
+        let t = N2oTable::new(full.n_items, full.d, full.n_bridge, full.n_bits);
+        t.restore(full.chunks, full.n_items, full.version, full.version_hint);
+        t
+    }
+
+    #[test]
+    fn full_round_trip_is_bitwise_identical() {
+        let src = build_table(N2O_CHUNK + 37);
+        let bytes = encode_full(&src.export(), src.version_hint());
+        let full = decode_full(&bytes, "k").unwrap();
+        let dst = restore_into(full);
+        assert_eq!(dst.version(), 5);
+        assert_eq!(dst.version_hint(), 5);
+        assert_eq!(state_digest(&dst.export()), state_digest(&src.export()));
+        let (a, b) = (src.snapshot(), dst.snapshot());
+        for i in 0..src.n_items() as u32 {
+            match (a.get(i), b.get(i)) {
+                (Some(x), Some(y)) => assert_eq!(x.to_entry(), y.to_entry()),
+                (None, None) => {}
+                _ => panic!("presence mismatch at {i}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_and_truncated_snapshots_are_rejected() {
+        let src = build_table(16);
+        let bytes = encode_full(&src.export(), src.version_hint());
+        for i in [0, 12, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                matches!(
+                    decode_full(&bad, "k"),
+                    Err(StorageError::Corrupt { .. })
+                ),
+                "flip at byte {i} must be caught"
+            );
+        }
+        for cut in [0, 4, 11, bytes.len() - 1] {
+            assert!(matches!(
+                decode_full(&bytes[..cut], "k"),
+                Err(StorageError::Corrupt { .. })
+            ));
+        }
+        // A delta blob is not a full snapshot.
+        let delta_as_full = {
+            let t2 = build_table(16);
+            t2.upsert(vec![(1, entry(9.0, 1))]);
+            encode_delta(&src.export(), &t2.export(), 1).unwrap()
+        };
+        assert!(decode_full(&delta_as_full, "k").is_err());
+    }
+
+    #[test]
+    fn delta_round_trip_patches_to_equality() {
+        let src = build_table(2 * N2O_CHUNK);
+        let base = src.export();
+        let full_bytes = encode_full(&base, src.version_hint());
+
+        // Mutate chunk 1 only, plus grow the table into chunk 2.
+        src.upsert(vec![
+            (N2O_CHUNK as u32 + 3, entry(77.0, N2O_CHUNK as u32 + 3)),
+            (2 * N2O_CHUNK as u32 + 1, entry(88.0, 1)),
+        ]);
+        let cur = src.export();
+        let delta_bytes = encode_delta(&base, &cur, 1).unwrap();
+
+        let dst = restore_into(decode_full(&full_bytes, "k").unwrap());
+        let delta = decode_delta(&delta_bytes, "k").unwrap();
+        assert_eq!(delta.base_version, 5);
+        assert_eq!(delta.seq, 1);
+        dst.patch_chunks(delta.n_items, delta.patches);
+        assert_eq!(state_digest(&dst.export()), state_digest(&cur));
+        assert_eq!(
+            dst.snapshot()
+                .get(2 * N2O_CHUNK as u32 + 1)
+                .unwrap()
+                .item_vec[0],
+            88.0
+        );
+    }
+
+    #[test]
+    fn unchanged_export_produces_no_delta() {
+        let src = build_table(64);
+        let a = src.export();
+        let b = src.export();
+        assert!(encode_delta(&a, &b, 1).is_none());
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let src = build_table(100);
+        let a = encode_full(&src.export(), src.version_hint());
+        let b = encode_full(&src.export(), src.version_hint());
+        assert_eq!(a, b, "stable chunk order -> byte-identical snapshots");
+    }
+
+    #[test]
+    fn digest_distinguishes_single_bit_changes() {
+        let a = build_table(32);
+        let b = build_table(32);
+        assert_eq!(state_digest(&a.export()), state_digest(&b.export()));
+        // Perturb one value by exactly one ULP — an additive epsilon
+        // could round away and leave the table bit-identical.
+        let mut e = entry(0.5 + 7.0, 7);
+        e.item_vec[0] = f32::from_bits(e.item_vec[0].to_bits() ^ 1);
+        b.upsert(vec![(7, e)]);
+        assert_ne!(state_digest(&a.export()), state_digest(&b.export()));
+    }
+}

@@ -15,7 +15,7 @@ use aif::coordinator::{
 };
 use aif::metrics::ServingMetrics;
 use aif::server::HttpServer;
-use aif::util::json::Value;
+use aif::util::json::{Object, Value};
 
 /// Stub pipeline: `N_CANDIDATES` fake candidates, descending scores.
 struct MockRanker {
@@ -90,9 +90,27 @@ fn start_server() -> HttpServer {
 }
 
 /// Stub registry admin: two fixed scenarios, reload bumps a counter.
+/// Optional durable-store surface (`storage = true`) and a flippable
+/// readiness flag drive the `/readyz`, `/v1/storage` and
+/// `/v1/checkpoint` tests.
 struct MockAdmin {
     reloads: std::sync::atomic::AtomicU64,
     metrics: ServingMetrics,
+    ready: std::sync::atomic::AtomicBool,
+    storage: bool,
+    checkpoints: std::sync::atomic::AtomicU64,
+}
+
+impl MockAdmin {
+    fn new(storage: bool) -> MockAdmin {
+        MockAdmin {
+            reloads: std::sync::atomic::AtomicU64::new(0),
+            metrics: ServingMetrics::new(),
+            ready: std::sync::atomic::AtomicBool::new(true),
+            storage,
+            checkpoints: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
 }
 
 impl ScenarioAdmin for MockAdmin {
@@ -144,18 +162,62 @@ impl ScenarioAdmin for MockAdmin {
             ("fallback".to_string(), self.metrics.snapshot(wall)),
         ]
     }
+
+    fn storage_stats(&self) -> Option<Value> {
+        self.storage.then(|| {
+            let mut o = Object::new();
+            o.insert(
+                "snapshots_full",
+                self.checkpoints
+                    .load(std::sync::atomic::Ordering::Relaxed),
+            );
+            o.insert("bytes_written", 123u64);
+            Value::Obj(o)
+        })
+    }
+
+    fn readiness(&self) -> Value {
+        let ready =
+            self.ready.load(std::sync::atomic::Ordering::Relaxed);
+        let mut o = Object::new();
+        o.insert("ready", ready);
+        o.insert("state", if ready { "ready" } else { "restoring" });
+        Value::Obj(o)
+    }
+
+    fn trigger_checkpoint(&self) -> Result<Value, ServeError> {
+        if !self.storage {
+            return Err(ServeError::BadRequest(
+                "no storage backend configured".into(),
+            ));
+        }
+        self.checkpoints
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut o = Object::new();
+        o.insert("outcome", "full");
+        Ok(Value::Obj(o))
+    }
 }
 
 fn start_admin_server() -> HttpServer {
+    start_admin_server_with(MockAdmin::new(false)).0
+}
+
+fn start_admin_server_with(
+    admin: MockAdmin,
+) -> (HttpServer, Arc<MockAdmin>) {
     let ranker: Arc<dyn PreRanker> = Arc::new(MockRanker {
         metrics: ServingMetrics::new(),
     });
-    let admin: Arc<dyn ScenarioAdmin> = Arc::new(MockAdmin {
-        reloads: std::sync::atomic::AtomicU64::new(0),
-        metrics: ServingMetrics::new(),
-    });
-    HttpServer::start_with_admin(ranker, Some(admin), "127.0.0.1:0", 2)
-        .expect("server starts")
+    let admin = Arc::new(admin);
+    let server = HttpServer::start_with_admin(
+        ranker,
+        Some(Arc::clone(&admin) as Arc<dyn ScenarioAdmin>),
+        "127.0.0.1:0",
+        2,
+    )
+    .expect("server starts");
+    (server, admin)
 }
 
 /// Send a raw request; return (status, header block, body).
@@ -433,6 +495,120 @@ fn scenario_surface_absent_without_admin() {
     assert!(body.contains("scenario registry"), "{body}");
     let (status, _, _) =
         post(&server.addr, "/v1/scenarios/main/reload", "");
+    assert_eq!(status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn readyz_gates_on_admin_state_and_defaults_to_ready() {
+    // No admin: the server is born ready.
+    let server = start_server();
+    let (status, _, body) = get(&server.addr, "/readyz");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).expect("readiness is JSON");
+    assert_eq!(v.req("ready").as_bool(), Some(true));
+    // Liveness stays 200 regardless of readiness.
+    let (status, _, _) = get(&server.addr, "/healthz");
+    assert_eq!(status, 200);
+    server.shutdown();
+
+    // Admin-backed: 503 with the boot state while not ready, 200 after.
+    let (server, admin) = start_admin_server_with(MockAdmin::new(false));
+    admin
+        .ready
+        .store(false, std::sync::atomic::Ordering::Relaxed);
+    let (status, head, body) = get(&server.addr, "/readyz");
+    assert_eq!(status, 503);
+    assert!(
+        head.starts_with("HTTP/1.1 503 Service Unavailable"),
+        "{head}"
+    );
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("ready").as_bool(), Some(false));
+    assert_eq!(v.req("state").as_str(), Some("restoring"));
+    let (status, _, _) = get(&server.addr, "/healthz");
+    assert_eq!(status, 200, "liveness != readiness");
+
+    admin
+        .ready
+        .store(true, std::sync::atomic::Ordering::Relaxed);
+    let (status, _, body) = get(&server.addr, "/readyz");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("state").as_str(), Some("ready"));
+
+    // Method guard.
+    let (status, head, _) = raw_request(
+        &server.addr,
+        "POST /readyz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+         Connection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    assert!(head.to_ascii_lowercase().contains("allow: get"), "{head}");
+    server.shutdown();
+}
+
+#[test]
+fn storage_surface_with_backend() {
+    let (server, admin) = start_admin_server_with(MockAdmin::new(true));
+
+    let (status, _, body) = get(&server.addr, "/v1/storage");
+    assert_eq!(status, 200);
+    let v = Value::parse(&body).expect("storage stats are JSON");
+    assert_eq!(v.req("snapshots_full").as_usize(), Some(0));
+    assert_eq!(v.req("bytes_written").as_usize(), Some(123));
+
+    // Forced checkpoint: outcome comes back, the counter moves.
+    let (status, _, body) = post(&server.addr, "/v1/checkpoint", "");
+    assert_eq!(status, 200, "{body}");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.req("outcome").as_str(), Some("full"));
+    assert_eq!(
+        admin
+            .checkpoints
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+
+    // The /metrics snapshot carries the storage block.
+    let (_, _, body) = get(&server.addr, "/metrics");
+    let v = Value::parse(&body).unwrap();
+    assert!(v.req("storage").get("snapshots_full").is_some());
+
+    // Method guards.
+    let (status, head, _) = raw_request(
+        &server.addr,
+        "POST /v1/storage HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+         Connection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    assert!(head.to_ascii_lowercase().contains("allow: get"), "{head}");
+    let (status, head, _) = get(&server.addr, "/v1/checkpoint");
+    assert_eq!(status, 405);
+    assert!(head.to_ascii_lowercase().contains("allow: post"), "{head}");
+    server.shutdown();
+}
+
+#[test]
+fn storage_surface_absent_without_backend() {
+    // Admin without a configured backend: stats 404, checkpoint 400.
+    let server = start_admin_server();
+    let (status, _, body) = get(&server.addr, "/v1/storage");
+    assert_eq!(status, 404);
+    assert!(body.contains("no durable storage"), "{body}");
+    let (status, _, body) = post(&server.addr, "/v1/checkpoint", "");
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("no storage backend"), "{body}");
+    let (_, _, body) = get(&server.addr, "/metrics");
+    let v = Value::parse(&body).unwrap();
+    assert!(v.get("storage").is_none(), "no storage block");
+    server.shutdown();
+
+    // No admin at all: both 404.
+    let server = start_server();
+    let (status, _, _) = get(&server.addr, "/v1/storage");
+    assert_eq!(status, 404);
+    let (status, _, _) = post(&server.addr, "/v1/checkpoint", "");
     assert_eq!(status, 404);
     server.shutdown();
 }

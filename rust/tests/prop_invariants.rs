@@ -6,6 +6,9 @@ use aif::coordinator::batcher;
 use aif::coordinator::Router;
 use aif::features::{assembly, ItemFeatures};
 use aif::nearline::{N2oEntry, N2oTable};
+use aif::storage::{
+    decode_full, encode_full, state_digest, FsStorage, MemStorage, Storage,
+};
 use aif::util::bits;
 use aif::util::prop::{check, usize_in, vec_of, Gen};
 use aif::util::rng::Pcg64;
@@ -574,6 +577,207 @@ fn prop_packed_similarity_equals_plane_dot() {
 // ---------------------------------------------------------------------
 // Tier histogram: rows are distributions; matches the float binning.
 // ---------------------------------------------------------------------
+// ---------------------------------------------------------------------
+// Durable snapshots (DESIGN.md §16): serialize -> restore is bitwise
+// lossless, any corruption is rejected by the checksum, and
+// put_if_not_exists races admit exactly one winner.
+// ---------------------------------------------------------------------
+
+/// Random-table generator shared by the snapshot properties: dims, a
+/// size that often crosses the 512-item chunk boundary, and a seed.
+fn snapshot_table_gen() -> Gen<(usize, usize, usize, usize, u64)> {
+    Gen::new(|rng: &mut Pcg64| {
+        let d = 1 + rng.below(12) as usize;
+        let n_bridge = 1 + rng.below(6) as usize;
+        let n_bits = 8 * (1 + rng.below(6) as usize);
+        let n_items = 1 + rng.below(1400) as usize;
+        let seed = rng.next_u64();
+        (d, n_bridge, n_bits, n_items, seed)
+    })
+}
+
+fn random_table(
+    d: usize,
+    n_bridge: usize,
+    n_bits: usize,
+    n_items: usize,
+    seed: u64,
+) -> N2oTable {
+    let mut rng = Pcg64::new(seed);
+    let pl = n_bits / 8;
+    let table = N2oTable::new(n_items, d, n_bridge, n_bits);
+    let entries: Vec<Option<N2oEntry>> = (0..n_items)
+        .map(|_| {
+            rng.chance(0.8).then(|| N2oEntry {
+                item_vec: (0..d).map(|_| rng.f32()).collect(),
+                bea_w: (0..n_bridge).map(|_| rng.f32()).collect(),
+                sign_packed: (0..pl).map(|_| rng.below(256) as u8).collect(),
+            })
+        })
+        .collect();
+    table.swap_full(entries, 1 + seed % 9);
+    table
+}
+
+#[test]
+fn prop_snapshot_round_trip_is_bitwise_lossless() {
+    check(
+        "snapshot round trip",
+        &snapshot_table_gen(),
+        40,
+        |&(d, n_bridge, n_bits, n_items, seed)| {
+            let src = random_table(d, n_bridge, n_bits, n_items, seed);
+            let ex = src.export();
+            let bytes = encode_full(&ex, src.version_hint());
+            let full = decode_full(&bytes, "prop")
+                .map_err(|e| format!("decode: {e}"))?;
+            let dst =
+                N2oTable::new(full.n_items, full.d, full.n_bridge, full.n_bits);
+            dst.restore(
+                full.chunks,
+                full.n_items,
+                full.version,
+                full.version_hint,
+            );
+            if state_digest(&dst.export()) != state_digest(&ex) {
+                return Err("restored digest diverged".into());
+            }
+            if dst.version() != src.version()
+                || dst.version_hint() != src.version_hint()
+            {
+                return Err("version sequence not resumed".into());
+            }
+            let (a, b) = (src.snapshot(), dst.snapshot());
+            for i in 0..n_items as u32 {
+                match (a.get(i), b.get(i)) {
+                    (Some(x), Some(y)) => {
+                        if x.to_entry() != y.to_entry() {
+                            return Err(format!("row {i} diverged"));
+                        }
+                    }
+                    (None, None) => {}
+                    _ => return Err(format!("presence mismatch at {i}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_snapshot_checksum_rejects_any_corruption() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n_items = 1 + rng.below(900) as usize;
+        let seed = rng.next_u64();
+        let pos_pick = rng.next_u64();
+        let mask = 1 + rng.below(255) as u8;
+        let truncate = rng.chance(0.5);
+        (n_items, seed, pos_pick, mask, truncate)
+    });
+    check(
+        "checksum catches corruption",
+        &gen,
+        60,
+        |&(n_items, seed, pos_pick, mask, truncate)| {
+            let src = random_table(3, 2, 16, n_items, seed);
+            let bytes = encode_full(&src.export(), src.version_hint());
+            let mangled = if truncate {
+                bytes[..(pos_pick % bytes.len() as u64) as usize].to_vec()
+            } else {
+                let mut bad = bytes.clone();
+                let at = (pos_pick % bytes.len() as u64) as usize;
+                bad[at] ^= mask;
+                bad
+            };
+            match decode_full(&mangled, "prop") {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!(
+                    "corruption survived (truncate={truncate}, \
+                     pos={pos_pick}, mask={mask:#04x})"
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_put_if_not_exists_has_exactly_one_winner() {
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let racers = 2 + rng.below(7) as usize;
+        let seed = rng.next_u64();
+        (racers, seed)
+    });
+    check(
+        "one create wins",
+        &gen,
+        20,
+        |&(racers, seed)| {
+            let dir = std::env::temp_dir().join(format!(
+                "aif-propstore-{}-{seed:x}",
+                std::process::id()
+            ));
+            let fs_store = FsStorage::new(&dir)
+                .map_err(|e| format!("fs backend: {e}"))?;
+            let backends: Vec<std::sync::Arc<dyn Storage>> = vec![
+                std::sync::Arc::new(MemStorage::new()),
+                std::sync::Arc::new(fs_store),
+            ];
+            let result = (|| {
+                for store in &backends {
+                    let barrier = std::sync::Arc::new(
+                        std::sync::Barrier::new(racers),
+                    );
+                    let mut handles = Vec::new();
+                    for who in 0..racers {
+                        let store = std::sync::Arc::clone(store);
+                        let barrier = std::sync::Arc::clone(&barrier);
+                        handles.push(std::thread::spawn(move || {
+                            barrier.wait();
+                            store
+                                .put_if_not_exists(
+                                    "meta/race",
+                                    format!("writer-{who}").as_bytes(),
+                                )
+                                .map(|won| (who, won))
+                        }));
+                    }
+                    let outcomes: Vec<(usize, bool)> = handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join()
+                                .map_err(|_| "racer panicked".to_string())?
+                                .map_err(|e| e.to_string())
+                        })
+                        .collect::<Result<_, String>>()?;
+                    let winners: Vec<usize> = outcomes
+                        .iter()
+                        .filter(|(_, won)| *won)
+                        .map(|(who, _)| *who)
+                        .collect();
+                    if winners.len() != 1 {
+                        return Err(format!(
+                            "{} winners of {racers} racers",
+                            winners.len()
+                        ));
+                    }
+                    let stored = store
+                        .get("meta/race")
+                        .map_err(|e| e.to_string())?;
+                    if stored != format!("writer-{}", winners[0]).into_bytes()
+                    {
+                        return Err(
+                            "stored blob is not the winner's".into()
+                        );
+                    }
+                }
+                Ok(())
+            })();
+            let _ = std::fs::remove_dir_all(&dir);
+            result
+        },
+    );
+}
+
 #[test]
 fn prop_tier_histogram_is_distribution() {
     let gen = Gen::new(|rng: &mut Pcg64| {
