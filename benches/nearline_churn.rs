@@ -1,0 +1,277 @@
+//! Nearline churn bench (ISSUE 7): streaming item updates through the
+//! bounded update queue while zipfian serving traffic scores against the
+//! same N2O table.  The fixture model is deterministic, so recomputing an
+//! item writes a bitwise-identical row — any top-K divergence under churn
+//! is a real consistency bug, not noise.
+//!
+//! Gates (run for real in CI via `AIF_QUICK=1`):
+//!
+//! * sustained update throughput (>= 100k upserts/min in full runs,
+//!   >= 20k in quick CI smoke) concurrent with serving;
+//! * bitwise top-K identity, request by request, against the quiescent
+//!   baseline captured before churn started;
+//! * the one-N2O-lock-per-request budget holds across the churn window:
+//!   queue upserts and compaction are maintenance-counted, so
+//!   `lock_acquisitions - maintenance_lock_acquisitions` moves by exactly
+//!   the number of requests served;
+//! * zero lost updates under injected RTP failures: `failed_updates == 0`,
+//!   the retry path requeued work, and every published id carries an
+//!   `updated_at` watermark;
+//! * bounded staleness: the queue fully drains and the enqueue-to-visible
+//!   histogram stays finite (max < 30s).
+//!
+//! Results are written to `BENCH_nearline_churn.json` (override with
+//! `AIF_BENCH_OUT`).  `AIF_ARTIFACTS` points at a real artifact set;
+//! otherwise the synthetic fixture is generated.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use aif::config::{BackpressurePolicy, NearlineConfig, ServingConfig, SimMode};
+use aif::coordinator::{Merger, ScoreRequest};
+use aif::features::LatencyModel;
+use aif::nearline::{UpdateApplier, UpdateEvent, UpdateQueue};
+use aif::util::fixture;
+use aif::util::json::{Object, Value};
+use aif::util::rng::{Pcg64, Zipf};
+
+fn cfg(dir: &str) -> ServingConfig {
+    ServingConfig {
+        variant: "aif".into(),
+        sim_mode: SimMode::Precached,
+        artifacts_dir: dir.into(),
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        retrieval_latency: LatencyModel::fixed(50.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let (n_waves, events_per_wave) = if quick { (10, 6) } else { (40, 8) };
+    let rate_floor_per_min = if quick { 20_000.0 } else { 100_000.0 };
+
+    let (dir, fixture_dir) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-nlchurn-bench-{}",
+                std::process::id()
+            ));
+            fixture::write(&tmp).expect("fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+
+    let merger = Merger::build(cfg(&dir)).expect("merger");
+    let core = Arc::clone(merger.core());
+    let n_users = merger.world().n_users;
+    let n_items = merger.world().n_items;
+    let n_cands = 64.min(n_items);
+    let candidates: Vec<u32> = (0..n_cands as u32).collect();
+    let top_k = 16.min(n_cands);
+    println!(
+        "nearline_churn: {n_waves} waves x {events_per_wave} events over \
+         {n_items} items, serving {n_users} zipfian users concurrently"
+    );
+
+    // Churn rides its own queue + worker (same shared table) so the bench
+    // controls fault injection; the serving stack is untouched.
+    let worker = Arc::new(core.nearline_worker());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&worker) as Arc<dyn UpdateApplier>,
+        NearlineConfig {
+            queue_capacity: 1 << 14,
+            policy: BackpressurePolicy::Block,
+            max_batch: 1024,
+            linger_ms: 0.5,
+            retry_limit: 3,
+            hot_min_touches: 4,
+            compact_every: 2,
+        },
+        Some(Arc::clone(&core.heat)),
+    );
+
+    // ---- quiescent baseline: one top-K per user, table untouched --------
+    let request = |user: usize| {
+        ScoreRequest::user(user)
+            .with_candidates(candidates.clone())
+            .with_top_k(top_k)
+    };
+    let baseline: Vec<Vec<aif::coordinator::ScoredItem>> = (0..n_users)
+        .map(|u| merger.score(request(u)).expect("baseline request").items)
+        .collect();
+
+    // ---- churn window: serving threads vs update waves ------------------
+    let locks0 = core.n2o.lock_acquisitions.load(Ordering::Relaxed);
+    let maint0 = core
+        .n2o
+        .maintenance_lock_acquisitions
+        .load(Ordering::Relaxed);
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let (n_requests, wall) = std::thread::scope(|s| {
+        let serve = |seed: u64| {
+            let merger = &merger;
+            let baseline = &baseline;
+            let stop = &stop;
+            let request = &request;
+            move || {
+                let zipf = Zipf::new(n_users, 1.1);
+                let mut rng = Pcg64::new(seed);
+                let mut served = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let user = zipf.sample(&mut rng);
+                    let got = merger.score(request(user)).expect("churn request");
+                    assert_eq!(
+                        got.items,
+                        baseline[user],
+                        "user {user}: top-K diverged under churn"
+                    );
+                    served += 1;
+                }
+                served
+            }
+        };
+        let t1 = s.spawn(serve(0xC0FFEE));
+        let t2 = s.spawn(serve(0xBEEF));
+
+        // Round-robin 64-id slices cover the whole catalog; every third
+        // wave injects one RTP failure to exercise requeue-not-drop.
+        let slice = 64.min(n_items);
+        let mut at = 0usize;
+        for wave in 0..n_waves {
+            if wave % 3 == 0 {
+                worker.inject_failures(1);
+            }
+            for _ in 0..events_per_wave {
+                let ids: Vec<u32> = (0..slice).map(|k| ((at + k) % n_items) as u32).collect();
+                at = (at + slice) % n_items;
+                let out = q.publish(UpdateEvent::ItemFeatures(ids));
+                assert_eq!(
+                    out,
+                    aif::nearline::PublishOutcome::Enqueued,
+                    "block policy never rejects"
+                );
+            }
+            q.flush();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        (t1.join().unwrap() + t2.join().unwrap(), wall)
+    });
+    let locks = core.n2o.lock_acquisitions.load(Ordering::Relaxed) - locks0;
+    let maint = core
+        .n2o
+        .maintenance_lock_acquisitions
+        .load(Ordering::Relaxed)
+        - maint0;
+
+    let st = &q.stats;
+    let applied = st.applied_items.load(Ordering::Relaxed);
+    let upserts_per_min = applied as f64 * 60.0 / wall;
+    let stale_max_s = st.apply_latency.max();
+    println!(
+        "churn window: {wall:.2}s, {n_requests} requests \
+         ({:.0} req/s), {applied} rows applied ({upserts_per_min:.0} \
+         upserts/min)",
+        n_requests as f64 / wall
+    );
+    println!(
+        "queue: enqueued {} coalesced {} hot {} requeued {} failed {} \
+         compactions {}",
+        st.enqueued_items.load(Ordering::Relaxed),
+        st.coalesced_items.load(Ordering::Relaxed),
+        st.hot_items.load(Ordering::Relaxed),
+        st.requeued_items.load(Ordering::Relaxed),
+        st.failed_updates.load(Ordering::Relaxed),
+        st.compactions.load(Ordering::Relaxed),
+    );
+    println!(
+        "staleness: mean {:.2}ms p99 {:.2}ms max {:.2}ms",
+        st.apply_latency.mean() * 1e3,
+        st.apply_latency.percentile(99.0) * 1e3,
+        stale_max_s * 1e3,
+    );
+    println!(
+        "lock budget: {locks} acquisitions, {maint} maintenance, \
+         {n_requests} requests"
+    );
+
+    // ---- the acceptance gates -------------------------------------------
+    assert_eq!(q.depth(), 0, "queue fully drained after the churn window");
+    assert!(
+        upserts_per_min >= rate_floor_per_min,
+        "sustained churn too slow: {upserts_per_min:.0} upserts/min \
+         (floor {rate_floor_per_min:.0})"
+    );
+    assert_eq!(
+        locks - maint,
+        n_requests,
+        "queue upserts/compaction leaked into the per-request lock budget"
+    );
+    assert_eq!(
+        st.failed_updates.load(Ordering::Relaxed),
+        0,
+        "injected RTP failures must be retried, never dropped"
+    );
+    assert!(
+        st.requeued_items.load(Ordering::Relaxed) > 0,
+        "fault injection never hit the retry path"
+    );
+    assert_eq!(st.rejected_items.load(Ordering::Relaxed), 0);
+    // Every id the round-robin publisher actually covered must carry a
+    // visibility watermark (with big real-artifact catalogs one pass may
+    // not wrap the whole item space).
+    let covered = (n_waves * events_per_wave * 64.min(n_items)).min(n_items);
+    for id in 0..covered as u32 {
+        assert!(
+            q.updated_at_ms(id).is_some(),
+            "item {id} was published but never became visible"
+        );
+    }
+    assert!(
+        stale_max_s < 30.0,
+        "unbounded staleness: {stale_max_s:.1}s enqueue-to-visible"
+    );
+    assert!(
+        st.compactions.load(Ordering::Relaxed) >= 1,
+        "compaction cadence never fired"
+    );
+
+    // ---- JSON baseline ---------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_nearline_churn.json".into());
+    let mut o = Object::new();
+    o.insert("bench", "nearline_churn");
+    o.insert("quick", quick);
+    o.insert("n_waves", n_waves);
+    o.insert("events_per_wave", events_per_wave);
+    o.insert("n_items", n_items);
+    o.insert("n_requests", n_requests);
+    o.insert("churn_wall_s", wall);
+    o.insert("req_per_s", n_requests as f64 / wall);
+    o.insert("upserts_per_min", upserts_per_min);
+    o.insert("request_lock_delta", locks - maint);
+    o.insert("queue", Value::Obj(q.stats_snapshot()));
+    o.insert("nearline", Value::from(core.nearline_stats()));
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
+
+    q.shutdown();
+    if let Some(tmp) = fixture_dir {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}

@@ -34,6 +34,13 @@ echo "== warm restart (release) =="
 # concurrent traffic keeps the one-N2O-lock-per-request budget.
 cargo test --release -q --test warm_restart
 
+echo "== nearline churn (release) =="
+# Streaming update-queue semantics: duplicate-id coalescing, ModelSwap
+# subsumption, block/reject backpressure, bounded retries with nothing
+# silently dropped, shutdown drain, and one maintenance-counted N2O
+# write lock per drained batch.
+cargo test --release -q --test nearline_churn
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -62,6 +69,15 @@ echo "== warm_restart smoke (release, quick) =="
 # full perf-fixture runs).
 AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_warm_restart_ci.json \
     cargo bench --bench warm_restart
+
+echo "== nearline_churn smoke (release, quick) =="
+# The churn gates run for real in CI: bitwise top-K identity while item
+# updates stream, zero lost updates under injected RTP failures, queue
+# fully drained, request lock budget preserved.  Emits
+# BENCH_nearline_churn.json (the 100k upserts/min floor runs on full
+# runs; quick uses a reduced floor).
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_nearline_churn_ci.json \
+    cargo bench --bench nearline_churn
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

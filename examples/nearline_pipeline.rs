@@ -67,11 +67,12 @@ fn main() -> anyhow::Result<()> {
     queue.publish(UpdateEvent::ItemFeatures(vec![3, 4, 5]));
     queue.publish(UpdateEvent::ItemFeatures(vec![4, 5, 6, 7]));
     queue.publish(UpdateEvent::ItemFeatures((100..150).collect()));
-    std::thread::sleep(Duration::from_millis(500));
+    queue.flush();
     println!(
         "    {} rows recomputed (coalesced from 57 published ids)",
         queue
-            .incremental_updates
+            .stats
+            .applied_items
             .load(std::sync::atomic::Ordering::Relaxed)
     );
     // Snapshot isolation: the pre-update snapshot still serves old rows.
@@ -88,12 +89,7 @@ fn main() -> anyhow::Result<()> {
     // ---- [3] model swap: atomic generation bump --------------------------
     println!("\n[3] MODEL SWAP (atomic full-generation replacement)");
     queue.publish(UpdateEvent::ModelSwap { version: 2 });
-    for _ in 0..600 {
-        if n2o.version() == 2 {
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(25));
-    }
+    queue.flush();
     println!(
         "    version {} -> coverage {:.1}%",
         n2o.version(),

@@ -93,6 +93,91 @@ fn parse_storage(st: &Value, out: &mut StorageConfig) {
     }
 }
 
+/// What `UpdateQueue::publish` does when the bounded queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Producer blocks until the drain thread frees capacity (lossless;
+    /// the producer inherits the consumer's pace).
+    Block,
+    /// Publish returns `Rejected` immediately and the rejection is
+    /// counted (lossy but non-blocking; the producer decides what to do).
+    Reject,
+}
+
+/// Parse a backpressure policy string ("block" | "reject") — shared by
+/// the JSON config path and the CLI flags.
+pub fn parse_backpressure(x: &str) -> Result<BackpressurePolicy> {
+    Ok(match x {
+        "block" => BackpressurePolicy::Block,
+        "reject" => BackpressurePolicy::Reject,
+        other => anyhow::bail!("unknown backpressure policy {other:?}"),
+    })
+}
+
+/// Streaming nearline update-queue knobs (DESIGN.md §17).  The defaults
+/// give a bounded, lossless queue with a hot-item priority lane and
+/// periodic chunk compaction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NearlineConfig {
+    /// Max pending item ids across both lanes (the queue bound).
+    pub queue_capacity: usize,
+    /// What `publish` does when the queue is full.
+    pub policy: BackpressurePolicy,
+    /// Max coalesced item ids applied per drained batch.
+    pub max_batch: usize,
+    /// Batching linger: how long the drain thread waits (condvar timeout,
+    /// not busy-wait) for more events after the first, milliseconds.
+    pub linger_ms: f64,
+    /// How many times a failed batch is requeued before its ids are
+    /// declared lost (`failed_updates`).
+    pub retry_limit: u32,
+    /// Serving touches at which an item routes to the priority lane
+    /// (0 disables the hot lane).
+    pub hot_min_touches: u32,
+    /// Run chunk compaction + heat decay every N applied batches
+    /// (0 disables the cadence).
+    pub compact_every: u64,
+}
+
+impl Default for NearlineConfig {
+    fn default() -> Self {
+        NearlineConfig {
+            queue_capacity: 65_536,
+            policy: BackpressurePolicy::Block,
+            max_batch: 1024,
+            linger_ms: 2.0,
+            retry_limit: 3,
+            hot_min_touches: 32,
+            compact_every: 64,
+        }
+    }
+}
+
+fn parse_nearline(nl: &Value, out: &mut NearlineConfig) -> Result<()> {
+    if let Some(x) = nl.get("queue_capacity").and_then(Value::as_f64) {
+        out.queue_capacity = x as usize;
+    }
+    if let Some(x) = nl.get("policy").and_then(Value::as_str) {
+        out.policy = parse_backpressure(x)?;
+    }
+    if let Some(x) = nl.get("max_batch").and_then(Value::as_f64) {
+        out.max_batch = x as usize;
+    }
+    if let Some(x) = nl.get("linger_ms").and_then(Value::as_f64) {
+        out.linger_ms = x;
+    }
+    if let Some(x) = nl.get("retry_limit").and_then(Value::as_f64) {
+        out.retry_limit = x as u32;
+    }
+    if let Some(x) = nl.get("hot_min_touches").and_then(Value::as_f64) {
+        out.hot_min_touches = x as u32;
+    }
+    if let Some(x) = nl.get("compact_every").and_then(Value::as_f64) {
+        out.compact_every = x as u64;
+    }
+    Ok(())
+}
+
 /// One named scenario served by the shared [`ServingCore`]: the
 /// scenario-*specific* knobs only (variant, SIM handling, candidate count,
 /// result size, dispatch-layer coalescing).  Everything else — fleet size,
@@ -237,6 +322,9 @@ pub struct ServingConfig {
     /// Durable state store + warm restart (ISSUE 6 tentpole).
     pub storage: StorageConfig,
 
+    /// Streaming nearline update queue (ISSUE 7 tentpole).
+    pub nearline: NearlineConfig,
+
     pub artifacts_dir: String,
 
     /// Named scenario blocks served over ONE shared core.  Empty (the
@@ -295,6 +383,7 @@ impl Default for ServingConfig {
             zero_copy: true,
             coalesce: CoalesceConfig::default(),
             storage: StorageConfig::default(),
+            nearline: NearlineConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
             default_scenario: None,
@@ -346,6 +435,9 @@ impl ServingConfig {
         }
         if let Some(st) = get("storage") {
             parse_storage(st, &mut c.storage);
+        }
+        if let Some(nl) = get("nearline") {
+            parse_nearline(nl, &mut c.nearline)?;
         }
         // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
         // Each block starts from the flat fields and overrides.
@@ -584,6 +676,43 @@ mod tests {
         let c = ServingConfig::from_json(&v).unwrap();
         assert_eq!(c.storage.backend, "mem");
         assert!(c.storage.warm_boot);
+    }
+
+    #[test]
+    fn nearline_defaults_bounded_and_parses() {
+        let c = ServingConfig::default();
+        assert_eq!(c.nearline.queue_capacity, 65_536);
+        assert_eq!(c.nearline.policy, BackpressurePolicy::Block);
+        assert_eq!(c.nearline.max_batch, 1024);
+        assert_eq!(c.nearline.retry_limit, 3);
+        assert_eq!(c.nearline.hot_min_touches, 32);
+        assert_eq!(c.nearline.compact_every, 64);
+
+        let v = Value::parse(
+            r#"{"nearline": {"queue_capacity": 256, "policy": "reject",
+                 "max_batch": 64, "linger_ms": 0.5, "retry_limit": 1,
+                 "hot_min_touches": 8, "compact_every": 0}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.nearline.queue_capacity, 256);
+        assert_eq!(c.nearline.policy, BackpressurePolicy::Reject);
+        assert_eq!(c.nearline.max_batch, 64);
+        assert!((c.nearline.linger_ms - 0.5).abs() < 1e-9);
+        assert_eq!(c.nearline.retry_limit, 1);
+        assert_eq!(c.nearline.hot_min_touches, 8);
+        assert_eq!(c.nearline.compact_every, 0);
+
+        // Partial blocks keep remaining defaults.
+        let v = Value::parse(r#"{"nearline": {"max_batch": 32}}"#).unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.nearline.max_batch, 32);
+        assert_eq!(c.nearline.policy, BackpressurePolicy::Block);
+
+        let v =
+            Value::parse(r#"{"nearline": {"policy": "drop-newest"}}"#)
+                .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -24,7 +24,10 @@ use crate::config::{CoalesceConfig, ServingConfig};
 use crate::features::{FeatureStore, World};
 use crate::lsh::Hasher;
 use crate::metrics::CoalesceStats;
-use crate::nearline::{N2oTable, NearlineWorker};
+use crate::nearline::{
+    ItemHeat, N2oTable, NearlineWorker, PublishOutcome, UpdateEvent,
+    UpdateQueue,
+};
 use crate::runtime::{
     BatchCoalescer, CoalescerConfig, HeadExecutor, Manifest, RtpPool,
 };
@@ -105,6 +108,14 @@ pub struct ServingCore {
     /// Wall-clock of the last cold N2O full build, for the warm-restart
     /// bench's restore-vs-rebuild comparison (0 = never cold-built).
     nearline_build_ms: AtomicU64,
+    /// Serving-traffic heat per item (DESIGN.md §17): the scoring path
+    /// touches each request's returned top-K, and the update queue's
+    /// priority lane routes hot items ahead of cold ones.
+    pub heat: Arc<ItemHeat>,
+    /// Streaming nearline update queue, started lazily by the first
+    /// [`Self::update_queue`] call (serve mode starts it when a nearline
+    /// scenario registers).
+    nearline_queue: Mutex<Option<Arc<UpdateQueue>>>,
 }
 
 impl ServingCore {
@@ -185,6 +196,8 @@ impl ServingCore {
             readiness: Arc::new(Readiness::new()),
             checkpoint_barrier,
             nearline_build_ms: AtomicU64::new(0),
+            heat: Arc::new(ItemHeat::new(world.n_items)),
+            nearline_queue: Mutex::new(None),
             manifest,
             world,
             store,
@@ -329,6 +342,68 @@ impl ServingCore {
     /// build yet) — the denominator of the restore-vs-rebuild gate.
     pub fn nearline_build_ms(&self) -> u64 {
         self.nearline_build_ms.load(Ordering::Relaxed)
+    }
+
+    /// The streaming update queue over the shared N2O table, started on
+    /// first use (ensures the table exists first, so updates stream into
+    /// a built generation).  One queue per core; later callers share it.
+    pub fn update_queue(&self) -> Result<Arc<UpdateQueue>> {
+        if let Some(q) = &*self.nearline_queue.lock().unwrap() {
+            return Ok(Arc::clone(q));
+        }
+        // Build the table outside the queue slot lock (the full build is
+        // slow and ensure_nearline has its own once-guard).
+        self.ensure_nearline()?;
+        let mut slot = self.nearline_queue.lock().unwrap();
+        if let Some(q) = &*slot {
+            return Ok(Arc::clone(q));
+        }
+        let worker = Arc::new(self.nearline_worker());
+        let q = Arc::new(UpdateQueue::start_with(
+            worker,
+            self.cfg.nearline.clone(),
+            Some(Arc::clone(&self.heat)),
+        ));
+        *slot = Some(Arc::clone(&q));
+        Ok(q)
+    }
+
+    /// The running update queue, if any (no side effects).
+    pub fn nearline_queue(&self) -> Option<Arc<UpdateQueue>> {
+        self.nearline_queue.lock().unwrap().clone()
+    }
+
+    /// Publish one nearline update, starting the queue if needed.
+    pub fn publish_update(&self, ev: UpdateEvent) -> Result<PublishOutcome> {
+        Ok(self.update_queue()?.publish(ev))
+    }
+
+    /// The `/metrics` nearline block: table shape/fragmentation (one
+    /// maintenance-counted pin), heat-lane stats, and — once the update
+    /// queue is running — its depth/backpressure/staleness counters.
+    pub fn nearline_stats(&self) -> crate::util::json::Object {
+        let mut o = crate::util::json::Object::new();
+        let t = self.n2o.table_stats();
+        let mut table = crate::util::json::Object::new();
+        table.insert("version", t.version);
+        table.insert("n_items", t.n_items);
+        table.insert("chunks", t.chunks);
+        table.insert("distinct_chunks", t.distinct_chunks);
+        table.insert("resident_bytes", t.resident_bytes);
+        table.insert("coverage", t.coverage);
+        o.insert("table", table);
+        let thr = self.cfg.nearline.hot_min_touches;
+        let (hot_slots, max_heat) = self.heat.stats(thr);
+        let mut heat = crate::util::json::Object::new();
+        heat.insert("touches", self.heat.touches.load(Ordering::Relaxed));
+        heat.insert("hot_slots", hot_slots);
+        heat.insert("max_heat", max_heat as u64);
+        heat.insert("hot_min_touches", thr as u64);
+        o.insert("heat", heat);
+        if let Some(q) = self.nearline_queue() {
+            o.insert("queue", q.stats_snapshot());
+        }
+        o
     }
 
     /// Publish one checkpoint of the current serving state.  Driven

@@ -137,6 +137,18 @@ impl Merger {
                     Duration::from_millis(interval_ms),
                 )
             });
+        // Any scenario serving a nearline variant gets the streaming
+        // update queue (DESIGN.md §17) — its table is already built by
+        // registration, so this just starts the drain thread and wires
+        // the `/metrics` nearline queue block.
+        if registry
+            .engines()
+            .iter()
+            .any(|e| e.variant.item == "nearline")
+        {
+            core.update_queue()
+                .map_err(|e| anyhow::anyhow!("nearline update queue: {e:#}"))?;
+        }
         // Every scenario is registered and any nearline boot (warm or
         // cold) has completed by now — `build` is synchronous.  Cores
         // whose scenarios never touch the N2O table would otherwise sit
@@ -274,6 +286,10 @@ impl ScenarioAdmin for Merger {
 
     fn storage_stats(&self) -> Option<Value> {
         self.core.storage_stats().map(Value::from)
+    }
+
+    fn nearline_stats(&self) -> Option<Value> {
+        Some(Value::from(self.core.nearline_stats()))
     }
 
     fn readiness(&self) -> Value {

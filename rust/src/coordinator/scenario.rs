@@ -559,6 +559,10 @@ impl ScenarioEngine {
 
         let top = batcher::top_k(&candidates, scores.as_slice(), top_k);
         drop(scores); // arena-backed: return the merged buffer now
+        // Served items are what traffic actually cares about: feed the
+        // heat signal that routes the update queue's priority lane
+        // (wait-free relaxed counters; the hot path takes no lock here).
+        core.heat.touch(top.iter().map(|&(item, _)| item));
         let timings = PhaseTimings {
             total: t_total.elapsed(),
             retrieval,

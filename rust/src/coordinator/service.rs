@@ -454,6 +454,14 @@ pub trait ScenarioAdmin: Send + Sync {
         Value::Obj(o)
     }
 
+    /// Nearline pipeline counters for the `/metrics` `nearline` block
+    /// (table shape/fragmentation, heat-lane stats, update-queue depth/
+    /// backpressure/staleness; `None` when the service has no nearline
+    /// substrate).
+    fn nearline_stats(&self) -> Option<Value> {
+        None
+    }
+
     /// Force a checkpoint now (`POST /v1/checkpoint`); answers with the
     /// outcome and fresh storage counters, or `BadRequest` when no
     /// backend is configured.

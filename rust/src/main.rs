@@ -69,7 +69,11 @@ fn usage() {
          [--user-cache-entries N] [--user-cache-ttl-ms MS] \
          [--user-cache-bytes B]\n\
          durable state: [--storage-backend none|mem|fs] [--storage-dir D] \
-         [--checkpoint-interval-ms MS] [--warm-boot false]"
+         [--checkpoint-interval-ms MS] [--warm-boot false]\n\
+         nearline churn: [--nearline-queue-capacity ITEMS] \
+         [--nearline-policy block|reject] [--nearline-max-batch ROWS] \
+         [--nearline-linger-ms MS] [--nearline-retry-limit N] \
+         [--nearline-hot-min-touches N] [--nearline-compact-every BATCHES]"
     );
 }
 
@@ -99,6 +103,26 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         storage.checkpoint_interval_ms as usize,
     ) as u64;
     storage.warm_boot = args.bool_or("warm-boot", storage.warm_boot);
+    let mut nearline = cfg.nearline.clone();
+    nearline.queue_capacity = args
+        .usize_or("nearline-queue-capacity", nearline.queue_capacity);
+    if let Some(p) = args.get("nearline-policy") {
+        nearline.policy = aif::config::parse_backpressure(p)?;
+    }
+    nearline.max_batch =
+        args.usize_or("nearline-max-batch", nearline.max_batch);
+    nearline.linger_ms =
+        args.f64_or("nearline-linger-ms", nearline.linger_ms);
+    nearline.retry_limit = args
+        .usize_or("nearline-retry-limit", nearline.retry_limit as usize)
+        as u32;
+    nearline.hot_min_touches = args.usize_or(
+        "nearline-hot-min-touches",
+        nearline.hot_min_touches as usize,
+    ) as u32;
+    nearline.compact_every = args
+        .usize_or("nearline-compact-every", nearline.compact_every as usize)
+        as u64;
     let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -117,6 +141,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
             .usize_or("user-cache-bytes", cfg.user_cache_bytes),
         coalesce,
         storage,
+        nearline,
         ..cfg
     };
     // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`
@@ -338,26 +363,20 @@ fn cmd_nearline(args: &Args) -> anyhow::Result<()> {
     let v_before = n2o.version();
     queue.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3, 500, 501]));
     queue.publish(UpdateEvent::ItemFeatures(vec![2, 3, 777]));
-    std::thread::sleep(std::time::Duration::from_millis(400));
+    queue.flush();
     println!(
         "    coalesced incremental updates applied: {} \
          (version unchanged: {})",
         queue
-            .incremental_updates
+            .stats
+            .applied_items
             .load(std::sync::atomic::Ordering::Relaxed),
         n2o.version() == v_before
     );
 
     println!("[3] model swap (full rebuild, atomic generation bump)...");
     queue.publish(UpdateEvent::ModelSwap { version: 2 });
-    std::thread::sleep(std::time::Duration::from_millis(100));
-    // Wait for rebuild to land.
-    for _ in 0..600 {
-        if n2o.version() == 2 {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
+    queue.flush();
     println!("    table version now {}", n2o.version());
     queue.shutdown();
     Ok(())

@@ -1,0 +1,112 @@
+//! Serving-traffic heat for items — the signal behind the update queue's
+//! priority refresh lane (COLD's compute/effectiveness framing: spend
+//! refresh compute where the traffic is).
+//!
+//! The serving path calls [`ItemHeat::touch`] with the items it actually
+//! returned (the top-K), so heat tracks *served* popularity, which under
+//! zipfian traffic concentrates on a small head.  Counters live in a
+//! fixed power-of-two table of relaxed atomics indexed by `id & mask`:
+//! touches are wait-free and cost one `fetch_add` per served item, which
+//! keeps the hot path's zero-lock budget intact.  Collisions can only
+//! over-report heat (two ids sharing a slot), which errs toward refreshing
+//! more items sooner — acceptable for a priority hint.  [`ItemHeat::decay`]
+//! halves every slot; the queue calls it on its compaction cadence so heat
+//! follows traffic shifts instead of accumulating forever.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+pub struct ItemHeat {
+    slots: Vec<AtomicU32>,
+    mask: usize,
+    /// Total touches since start (observability).
+    pub touches: AtomicU64,
+}
+
+impl ItemHeat {
+    /// `capacity` is rounded up to a power of two (min 1024 slots).
+    pub fn new(capacity: usize) -> ItemHeat {
+        let n = capacity.next_power_of_two().max(1024);
+        ItemHeat {
+            slots: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            mask: n - 1,
+            touches: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one serving of each item (called with a request's top-K).
+    pub fn touch<I: IntoIterator<Item = u32>>(&self, items: I) {
+        let mut n = 0u64;
+        for id in items {
+            self.slots[id as usize & self.mask].fetch_add(1, Ordering::Relaxed);
+            n += 1;
+        }
+        if n > 0 {
+            self.touches.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn heat(&self, id: u32) -> u32 {
+        self.slots[id as usize & self.mask].load(Ordering::Relaxed)
+    }
+
+    pub fn is_hot(&self, id: u32, min_touches: u32) -> bool {
+        min_touches > 0 && self.heat(id) >= min_touches
+    }
+
+    /// Halve every slot (periodic, from the queue's maintenance cadence).
+    pub fn decay(&self) {
+        for s in &self.slots {
+            // Racy read-modify-write is fine: a lost concurrent touch
+            // only under-counts by one during the decay sweep.
+            let v = s.load(Ordering::Relaxed);
+            if v > 0 {
+                s.store(v / 2, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// (hot slots above threshold, max slot heat) — for `/metrics`.
+    pub fn stats(&self, min_touches: u32) -> (usize, u32) {
+        let mut hot = 0usize;
+        let mut max = 0u32;
+        for s in &self.slots {
+            let v = s.load(Ordering::Relaxed);
+            if min_touches > 0 && v >= min_touches {
+                hot += 1;
+            }
+            max = max.max(v);
+        }
+        (hot, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_heat_and_threshold() {
+        let h = ItemHeat::new(16); // rounds up to 1024
+        h.touch([3u32, 3, 3, 7]);
+        assert_eq!(h.heat(3), 3);
+        assert_eq!(h.heat(7), 1);
+        assert_eq!(h.heat(9), 0);
+        assert!(h.is_hot(3, 2));
+        assert!(!h.is_hot(7, 2));
+        assert!(!h.is_hot(3, 0), "threshold 0 disables the hot lane");
+        assert_eq!(h.touches.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn decay_halves() {
+        let h = ItemHeat::new(1024);
+        h.touch(std::iter::repeat(5u32).take(9));
+        h.decay();
+        assert_eq!(h.heat(5), 4);
+        h.decay();
+        h.decay();
+        assert_eq!(h.heat(5), 1);
+        let (hot, max) = h.stats(1);
+        assert_eq!((hot, max), (1, 1));
+    }
+}

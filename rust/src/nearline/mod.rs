@@ -2,13 +2,18 @@
 //! the N2O index table, the update-triggered nearline worker and the
 //! incremental message queue.
 
+pub mod heat;
 pub mod n2o;
 pub mod queue;
 pub mod worker;
 
+pub use heat::ItemHeat;
 pub use n2o::{
-    N2oChunkView, N2oEntry, N2oExport, N2oRow, N2oSnapshot, N2oTable,
-    RestoredChunk, N2O_CHUNK,
+    CompactReport, N2oChunkView, N2oEntry, N2oExport, N2oRow, N2oSnapshot,
+    N2oTable, RestoredChunk, TableStats, N2O_CHUNK,
 };
-pub use queue::{UpdateEvent, UpdateQueue};
+pub use queue::{
+    IncrementalReport, PublishOutcome, QueueStats, UpdateApplier,
+    UpdateEvent, UpdateQueue, Watermarks,
+};
 pub use worker::NearlineWorker;

@@ -235,6 +235,18 @@ impl N2oTable {
     /// rest are shared by `Arc` with the previous generation, and readers
     /// holding the old snapshot are unaffected either way.
     pub fn upsert(&self, rows: Vec<(u32, N2oEntry)>) {
+        self.upsert_rows(rows, false)
+    }
+
+    /// [`Self::upsert`] counted as a MAINTENANCE lock acquisition.  The
+    /// streaming update queue applies its drained batches through this,
+    /// so `lock_acquisitions - maintenance_lock_acquisitions` stays equal
+    /// to the served-request count while churn runs concurrently.
+    pub fn upsert_maintenance(&self, rows: Vec<(u32, N2oEntry)>) {
+        self.upsert_rows(rows, true)
+    }
+
+    fn upsert_rows(&self, rows: Vec<(u32, N2oEntry)>, maintenance: bool) {
         if rows.is_empty() {
             return;
         }
@@ -250,6 +262,10 @@ impl N2oTable {
         }
         let max_id = rows.iter().map(|(i, _)| *i as usize).max().unwrap();
         self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        if maintenance {
+            self.maintenance_lock_acquisitions
+                .fetch_add(1, Ordering::Relaxed);
+        }
         let mut guard = self.inner.write().unwrap();
         let mut chunks = guard.chunks.clone(); // Arc pointers only
         let mut n_items = guard.n_items;
@@ -411,6 +427,121 @@ impl N2oTable {
             version: guard.version,
         });
     }
+
+    /// Re-deduplicate all-absent chunks (maintenance-counted write lock).
+    ///
+    /// Long-running upsert streams fragment a generation: every table
+    /// extension (`upsert` past the end, `patch_chunks`, `restore`)
+    /// allocates its OWN zeroed chunk for the absent tail, so a process
+    /// that keeps appending sparse ids accumulates distinct all-zero
+    /// allocations that `size_bytes` (and the memory) pay for.  Compaction
+    /// rewrites every all-absent chunk to point at ONE shared zeroed
+    /// allocation.  Present chunks keep their exact `Arc` pointers — the
+    /// checkpointer's `Arc::ptr_eq` delta diffing still sees them as
+    /// unchanged — and the generation version does not move.  Absent rows
+    /// are never readable (`get`/`assemble` check `present`), so swapping
+    /// which zeroed allocation backs them is invisible to readers; old
+    /// snapshots pin the old chunks until they drop, so reclamation is
+    /// eventual, not immediate.
+    pub fn compact(&self) -> CompactReport {
+        let (d, n_bridge, pl) = (self.d, self.n_bridge, self.packed_len());
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.maintenance_lock_acquisitions
+            .fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.write().unwrap();
+        let distinct = |cs: &[Arc<Chunk>]| {
+            let mut seen = std::collections::HashSet::new();
+            cs.iter().filter(|c| seen.insert(Arc::as_ptr(c))).count()
+        };
+        let distinct_before = distinct(&guard.chunks);
+        let mut chunks = guard.chunks.clone(); // Arc pointers only
+        // The first all-absent chunk becomes the canonical zero chunk;
+        // every other all-absent chunk is redirected to it.
+        let mut zero: Option<Arc<Chunk>> = None;
+        let mut changed = false;
+        for c in chunks.iter_mut() {
+            if c.present.iter().any(|&p| p) {
+                continue;
+            }
+            match &zero {
+                None => zero = Some(Arc::clone(c)),
+                Some(z) => {
+                    if !Arc::ptr_eq(c, z) {
+                        *c = Arc::clone(z);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        let distinct_after = distinct(&chunks);
+        if changed {
+            *guard = Arc::new(Generation {
+                chunks,
+                n_items: guard.n_items,
+                version: guard.version,
+            });
+        }
+        let row = d * 4 + n_bridge * 4 + pl;
+        let chunk_bytes = N2O_CHUNK * row + N2O_CHUNK;
+        CompactReport {
+            chunks: guard.chunks.len(),
+            distinct_before,
+            distinct_after,
+            bytes_reclaimed: (distinct_before - distinct_after) * chunk_bytes,
+        }
+    }
+
+    /// One maintenance-counted pin answering every `/metrics` question
+    /// about the table, so stats polling never perturbs the
+    /// request-attributable lock count.
+    pub fn table_stats(&self) -> TableStats {
+        self.maintenance_lock_acquisitions
+            .fetch_add(1, Ordering::Relaxed);
+        let g = self.read_gen();
+        let mut seen = std::collections::HashSet::new();
+        let distinct = g
+            .chunks
+            .iter()
+            .filter(|c| seen.insert(Arc::as_ptr(c)))
+            .count();
+        let row = self.d * 4 + self.n_bridge * 4 + self.packed_len();
+        let chunk_bytes = N2O_CHUNK * row + N2O_CHUNK;
+        let present: usize = g
+            .chunks
+            .iter()
+            .map(|c| c.present.iter().filter(|&&p| p).count())
+            .sum();
+        TableStats {
+            version: g.version,
+            n_items: g.n_items,
+            chunks: g.chunks.len(),
+            distinct_chunks: distinct,
+            resident_bytes: distinct * chunk_bytes,
+            coverage: present as f64 / g.n_items.max(1) as f64,
+        }
+    }
+}
+
+/// What [`N2oTable::compact`] did (counts are generation-chunk pointers;
+/// reclamation of the old allocations is eventual — pinned snapshots keep
+/// them alive until dropped).
+#[derive(Debug, Clone, Copy)]
+pub struct CompactReport {
+    pub chunks: usize,
+    pub distinct_before: usize,
+    pub distinct_after: usize,
+    pub bytes_reclaimed: usize,
+}
+
+/// Point-in-time table facts from one maintenance-counted pin.
+#[derive(Debug, Clone, Copy)]
+pub struct TableStats {
+    pub version: u64,
+    pub n_items: usize,
+    pub chunks: usize,
+    pub distinct_chunks: usize,
+    pub resident_bytes: usize,
+    pub coverage: f64,
 }
 
 /// Immutable view of one generation.
@@ -1009,5 +1140,89 @@ mod tests {
         assert_eq!(snap.get(id).unwrap().item_vec[0], 9.0);
         assert!(snap.get((2 * N2O_CHUNK) as u32).is_none());
         assert_eq!(snap.get(0).unwrap().item_vec[0], 1.0);
+    }
+
+    #[test]
+    fn maintenance_upsert_is_maintenance_counted() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        let base = t.lock_acquisitions.load(Ordering::Relaxed);
+        let base_m = t.maintenance_lock_acquisitions.load(Ordering::Relaxed);
+        t.upsert_maintenance(vec![(0, entry(1.0))]);
+        assert_eq!(t.lock_acquisitions.load(Ordering::Relaxed), base + 1);
+        assert_eq!(
+            t.maintenance_lock_acquisitions.load(Ordering::Relaxed),
+            base_m + 1,
+            "queue-driven upserts must not count against the request budget"
+        );
+        // The legacy path stays request-attributable.
+        t.upsert(vec![(1, entry(2.0))]);
+        assert_eq!(t.lock_acquisitions.load(Ordering::Relaxed), base + 2);
+        assert_eq!(
+            t.maintenance_lock_acquisitions.load(Ordering::Relaxed),
+            base_m + 1
+        );
+    }
+
+    #[test]
+    fn sparse_extension_fragments_and_compact_rededups() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        // Each extending upsert allocates its own zeroed tail chunk, so a
+        // long sparse append stream fragments the generation.
+        let k_rounds = 12u32;
+        for k in 1..=k_rounds {
+            let id = 2 * k * N2O_CHUNK as u32;
+            t.upsert(vec![(id, entry(k as f32))]);
+        }
+        let stats = t.table_stats();
+        assert!(
+            stats.distinct_chunks > 4,
+            "expected fragmentation, got {} distinct chunks",
+            stats.distinct_chunks
+        );
+        let bytes_before = t.size_bytes();
+
+        let report = t.compact();
+        assert_eq!(report.distinct_before, stats.distinct_chunks);
+        assert!(report.distinct_after < report.distinct_before);
+        assert!(report.bytes_reclaimed > 0);
+        // Exactly one zero allocation remains: distinct = present chunks
+        // (chunk 0 + one per written id) + 1 shared zero chunk.
+        assert_eq!(report.distinct_after, k_rounds as usize + 2);
+        assert!(t.size_bytes() < bytes_before);
+
+        // Content and version are untouched.
+        assert_eq!(t.version(), 1);
+        let snap = t.snapshot();
+        assert_eq!(snap.get(0).unwrap().item_vec[0], 1.0);
+        for k in 1..=k_rounds {
+            let id = 2 * k * N2O_CHUNK as u32;
+            assert_eq!(snap.get(id).unwrap().item_vec[0], k as f32);
+            assert!(snap.get(id - 1).is_none(), "absent rows stay absent");
+        }
+        // Idempotent: a second compaction finds nothing to reclaim.
+        let again = t.compact();
+        assert_eq!(again.bytes_reclaimed, 0);
+        assert_eq!(again.distinct_after, report.distinct_after);
+    }
+
+    #[test]
+    fn compact_preserves_present_chunk_pointers() {
+        let t = N2oTable::new(4, 4, 2, 8);
+        t.swap_full(vec![Some(entry(1.0)); 4], 1);
+        t.upsert(vec![(4 * N2O_CHUNK as u32, entry(2.0))]);
+        t.upsert(vec![(8 * N2O_CHUNK as u32, entry(3.0))]);
+        let before = t.export();
+        t.compact();
+        let after = t.export();
+        assert_eq!(before.n_chunks(), after.n_chunks());
+        for ci in [0usize, 4, 8] {
+            // Present chunks keep their exact allocation: the checkpoint
+            // delta differ (Arc::ptr_eq) must see them as unchanged.
+            assert!(
+                before.chunk_shared_with(&after, ci),
+                "compaction must not reallocate present chunk {ci}"
+            );
+        }
     }
 }

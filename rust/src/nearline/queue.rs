@@ -1,20 +1,49 @@
 //! Incremental message queue (paper §4.2 "Update Methods": "we employ an
 //! incremental message queue that dynamically processes updates, enabling
 //! seamless integration of new entries without recalculating existing
-//! signatures").
+//! signatures") — production-shaped (DESIGN.md §17).
 //!
-//! A background thread drains events with batching (up to `max_batch` or
-//! `linger`), coalesces duplicate item ids, and applies them through the
-//! [`NearlineWorker`].
+//! Topology: producers publish [`UpdateEvent`]s into a **bounded** two-lane
+//! store (a hot lane for items the serving path marked popular via
+//! [`ItemHeat`], a cold lane for the rest) guarded by one mutex and two
+//! condvars.  A background drain thread takes the first event with a
+//! blocking wait, lingers on a **condvar timeout against the batch
+//! deadline** (no busy-wait) to batch bursts, coalesces duplicate ids, and
+//! applies the whole drained batch through ONE [`UpdateApplier`] call —
+//! which for the real worker means one `N2oTable` write lock per batch.
+//!
+//! Guarantees:
+//! - **Bounded**: at most `queue_capacity` pending item ids; `publish`
+//!   blocks or rejects (configurable [`BackpressurePolicy`]) when full.
+//!   An event larger than the whole capacity is admitted alone when the
+//!   queue is empty, so a misconfigured producer stalls instead of
+//!   deadlocking.
+//! - **Lossless**: failed batches are requeued (front of the hot lane,
+//!   original enqueue timestamp, bounded by `retry_limit`); only
+//!   exhausted retries increment `failed_updates` — nothing disappears
+//!   with just a log line.  Shutdown drains every pending event before
+//!   the thread exits (mirroring the coalescer's drain-on-drop).
+//! - **Subsumption**: a pending `ModelSwap` takes priority and, on
+//!   success, absorbs every incremental event that was enqueued before
+//!   the build started (the full build recomputed them); events arriving
+//!   *during* the build stay queued.
+//! - **Observable**: depth/drop/retry counters, an enqueue-to-visible
+//!   staleness histogram, `oldest_pending_ms`, and a per-item
+//!   `updated_at` watermark, all surfaced through `/metrics`.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-use super::worker::NearlineWorker;
+use anyhow::Result;
+
+use super::heat::ItemHeat;
+use super::n2o::CompactReport;
+use crate::config::{BackpressurePolicy, NearlineConfig};
+use crate::metrics::Histogram;
+use crate::util::json::Object;
 
 /// Nearline update triggers.
 #[derive(Debug, Clone)]
@@ -27,118 +56,730 @@ pub enum UpdateEvent {
     Shutdown,
 }
 
+/// What [`UpdateQueue::publish`] did with the event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishOutcome {
+    Enqueued,
+    /// Dropped by the `Reject` backpressure policy (counted in
+    /// `rejected_items`).
+    Rejected,
+    /// The queue is shutting down; the event was not accepted.
+    Closed,
+}
+
+/// Result of applying one drained incremental batch.
+#[derive(Debug, Default)]
+pub struct IncrementalReport {
+    /// Rows actually written to the table.
+    pub applied: usize,
+    /// Item ids whose computation failed (candidates for requeue).
+    pub failed: Vec<u32>,
+    pub last_error: Option<String>,
+}
+
+/// The queue's downstream: how drained work is applied.  The real
+/// implementation is `NearlineWorker`; tests substitute a mock so queue
+/// semantics are checkable without artifacts or an RTP fleet.
+pub trait UpdateApplier: Send + Sync {
+    /// Apply one coalesced batch of item ids.  Partial failure is
+    /// reported, not thrown: successfully computed rows must already be
+    /// written when this returns.
+    fn apply_incremental(&self, items: &[u32]) -> IncrementalReport;
+    /// Full rebuild to `version` (ModelSwap trigger).
+    fn apply_full(&self, version: u64) -> Result<()>;
+    /// Periodic chunk compaction (cadence: `compact_every` batches).
+    fn compact(&self) -> Option<CompactReport> {
+        None
+    }
+}
+
+/// Per-item `updated_at` watermark (unix ms), grown on demand.  `0`
+/// means "never updated through the queue".
+#[derive(Default)]
+pub struct Watermarks {
+    slots: RwLock<Vec<AtomicU64>>,
+}
+
+impl Watermarks {
+    fn note(&self, ids: &[u32], now_ms: u64) {
+        let need = match ids.iter().max() {
+            Some(&m) => m as usize + 1,
+            None => return,
+        };
+        {
+            let r = self.slots.read().unwrap();
+            if r.len() >= need {
+                for &i in ids {
+                    r[i as usize].store(now_ms, Ordering::Relaxed);
+                }
+                return;
+            }
+        }
+        let mut w = self.slots.write().unwrap();
+        while w.len() < need {
+            w.push(AtomicU64::new(0));
+        }
+        for &i in ids {
+            w[i as usize].store(now_ms, Ordering::Relaxed);
+        }
+    }
+
+    /// When `id` was last made visible by the queue (unix ms).
+    pub fn updated_at_ms(&self, id: u32) -> Option<u64> {
+        let r = self.slots.read().unwrap();
+        match r.get(id as usize).map(|s| s.load(Ordering::Relaxed)) {
+            Some(0) | None => None,
+            Some(ms) => Some(ms),
+        }
+    }
+
+    /// (items with a watermark, oldest unix ms, newest unix ms).
+    pub fn summary(&self) -> (usize, u64, u64) {
+        let r = self.slots.read().unwrap();
+        let mut n = 0usize;
+        let (mut oldest, mut newest) = (u64::MAX, 0u64);
+        for s in r.iter() {
+            let v = s.load(Ordering::Relaxed);
+            if v > 0 {
+                n += 1;
+                oldest = oldest.min(v);
+                newest = newest.max(v);
+            }
+        }
+        if n == 0 {
+            (0, 0, 0)
+        } else {
+            (n, oldest, newest)
+        }
+    }
+}
+
+/// Queue counters (all relaxed atomics; written by producers and the
+/// drain thread, read by `/metrics`).
+#[derive(Default)]
+pub struct QueueStats {
+    pub enqueued_events: AtomicU64,
+    pub enqueued_items: AtomicU64,
+    /// Items routed to the priority lane at publish time.
+    pub hot_items: AtomicU64,
+    pub rejected_items: AtomicU64,
+    /// Publishes that had to wait under the `Block` policy.
+    pub blocked_publishes: AtomicU64,
+    pub peak_depth_items: AtomicU64,
+    /// Duplicate ids merged away by batch coalescing.
+    pub coalesced_items: AtomicU64,
+    pub applied_items: AtomicU64,
+    pub applied_batches: AtomicU64,
+    pub full_rebuilds: AtomicU64,
+    pub failed_full_builds: AtomicU64,
+    /// Incremental items absorbed by a successful full rebuild.
+    pub subsumed_items: AtomicU64,
+    pub retried_batches: AtomicU64,
+    pub requeued_items: AtomicU64,
+    /// Items lost after exhausting `retry_limit` — the "never silently
+    /// discarded" counter.
+    pub failed_updates: AtomicU64,
+    pub compactions: AtomicU64,
+    pub compact_bytes_reclaimed: AtomicU64,
+    /// Enqueue-to-visible latency of applied batches.
+    pub apply_latency: Histogram,
+    /// Per-item `updated_at` watermark.
+    pub watermarks: Watermarks,
+}
+
+/// One pending `ItemFeatures` event.
+struct Pending {
+    ids: Vec<u32>,
+    at: Instant,
+    attempts: u32,
+}
+
+struct Lanes {
+    hot: VecDeque<Pending>,
+    cold: VecDeque<Pending>,
+    /// Coalesced pending ModelSwap: (target version, enqueued at,
+    /// attempts).
+    swap: Option<(u64, Instant, u32)>,
+    /// Pending item ids across both lanes (the bounded quantity).
+    depth_items: usize,
+    /// Earliest enqueue time of the batch currently being applied (kept
+    /// so `oldest_pending_ms` covers in-flight work too).
+    in_flight_since: Option<Instant>,
+    shutdown: bool,
+}
+
+impl Lanes {
+    fn has_work(&self) -> bool {
+        !self.hot.is_empty() || !self.cold.is_empty() || self.swap.is_some()
+    }
+
+    fn oldest_at(&self) -> Option<Instant> {
+        [
+            self.hot.front().map(|p| p.at),
+            self.cold.front().map(|p| p.at),
+            self.swap.map(|(_, at, _)| at),
+            self.in_flight_since,
+        ]
+        .into_iter()
+        .flatten()
+        .min()
+    }
+}
+
+struct Shared {
+    state: Mutex<Lanes>,
+    /// Signaled on enqueue and shutdown (drain thread waits here).
+    not_empty: Condvar,
+    /// Signaled when capacity frees up (blocked producers wait here).
+    not_full: Condvar,
+    /// Signaled when the queue goes idle (for `flush`).
+    idle: Condvar,
+    cfg: NearlineConfig,
+    heat: Option<Arc<ItemHeat>>,
+    stats: Arc<QueueStats>,
+}
+
+/// Work taken from the lanes by the drain thread.
+enum Work {
+    Swap {
+        version: u64,
+        at: Instant,
+        attempts: u32,
+        /// Lane cuts (event counts) at build start: on success, this many
+        /// events are popped as subsumed.
+        cut_hot: usize,
+        cut_cold: usize,
+    },
+    Incremental {
+        ids: Vec<u32>,
+        /// (enqueue time, attempts) of every contributing event.
+        events: Vec<(Instant, u32)>,
+        earliest: Instant,
+        max_attempts: u32,
+    },
+}
+
 pub struct UpdateQueue {
-    tx: Sender<UpdateEvent>,
-    handle: Option<JoinHandle<()>>,
-    pub incremental_updates: Arc<AtomicU64>,
-    pub full_rebuilds: Arc<AtomicU64>,
+    shared: Arc<Shared>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    pub stats: Arc<QueueStats>,
+}
+
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 impl UpdateQueue {
+    /// Backward-compatible constructor: given batching knobs, everything
+    /// else (capacity, policy, retries) keeps [`NearlineConfig`] defaults
+    /// and no heat signal is wired (all items ride the cold lane).
     pub fn start(
-        worker: Arc<NearlineWorker>,
+        applier: Arc<dyn UpdateApplier>,
         max_batch: usize,
         linger: Duration,
     ) -> UpdateQueue {
-        let (tx, rx) = channel::<UpdateEvent>();
-        let incremental_updates = Arc::new(AtomicU64::new(0));
-        let full_rebuilds = Arc::new(AtomicU64::new(0));
-        let inc = Arc::clone(&incremental_updates);
-        let full = Arc::clone(&full_rebuilds);
+        let cfg = NearlineConfig {
+            max_batch,
+            linger_ms: linger.as_secs_f64() * 1e3,
+            ..NearlineConfig::default()
+        };
+        Self::start_with(applier, cfg, None)
+    }
+
+    pub fn start_with(
+        applier: Arc<dyn UpdateApplier>,
+        mut cfg: NearlineConfig,
+        heat: Option<Arc<ItemHeat>>,
+    ) -> UpdateQueue {
+        cfg.queue_capacity = cfg.queue_capacity.max(1);
+        cfg.max_batch = cfg.max_batch.max(1);
+        let stats = Arc::new(QueueStats::default());
+        let shared = Arc::new(Shared {
+            state: Mutex::new(Lanes {
+                hot: VecDeque::new(),
+                cold: VecDeque::new(),
+                swap: None,
+                depth_items: 0,
+                in_flight_since: None,
+                shutdown: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            idle: Condvar::new(),
+            cfg,
+            heat,
+            stats: Arc::clone(&stats),
+        });
+        let sh = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("aif-nearline-queue".into())
-            .spawn(move || {
-                let mut stop = false;
-                while !stop {
-                    // Block for the first event.
-                    let first = match rx.recv() {
-                        Ok(e) => e,
-                        Err(_) => break,
-                    };
-                    let mut items: BTreeSet<u32> = BTreeSet::new();
-                    let mut model_swap: Option<u64> = None;
-                    let mut absorb = |e: UpdateEvent,
-                                      items: &mut BTreeSet<u32>,
-                                      stop: &mut bool| {
-                        match e {
-                            UpdateEvent::ItemFeatures(ids) => {
-                                items.extend(ids);
-                            }
-                            UpdateEvent::ModelSwap { version } => {
-                                model_swap = Some(
-                                    model_swap.map_or(version, |v| {
-                                        v.max(version)
-                                    }),
-                                );
-                            }
-                            UpdateEvent::Shutdown => *stop = true,
+            .spawn(move || drain_loop(&sh, applier.as_ref()))
+            .expect("spawn nearline queue");
+        UpdateQueue {
+            shared,
+            handle: Mutex::new(Some(handle)),
+            stats,
+        }
+    }
+
+    pub fn publish(&self, event: UpdateEvent) -> PublishOutcome {
+        let sh = &self.shared;
+        match event {
+            UpdateEvent::Shutdown => {
+                self.begin_shutdown();
+                PublishOutcome::Enqueued
+            }
+            UpdateEvent::ModelSwap { version } => {
+                let mut st = sh.state.lock().unwrap();
+                if st.shutdown {
+                    return PublishOutcome::Closed;
+                }
+                // Coalesce to the max requested version (building an
+                // older checkpoint would be wasted work).
+                st.swap = Some(match st.swap.take() {
+                    Some((v, at, att)) => (v.max(version), at, att),
+                    None => (version, Instant::now(), 0),
+                });
+                sh.stats.enqueued_events.fetch_add(1, Ordering::Relaxed);
+                sh.not_empty.notify_all();
+                PublishOutcome::Enqueued
+            }
+            UpdateEvent::ItemFeatures(ids) => {
+                if ids.is_empty() {
+                    return PublishOutcome::Enqueued; // no-op by contract
+                }
+                let n = ids.len();
+                let mut st = sh.state.lock().unwrap();
+                if st.shutdown {
+                    return PublishOutcome::Closed;
+                }
+                let mut waited = false;
+                // Oversized events (n > capacity) are admitted alone
+                // when the queue is empty: blocking forever on capacity
+                // that can never exist would deadlock the producer.
+                while st.depth_items > 0
+                    && st.depth_items + n > sh.cfg.queue_capacity
+                {
+                    match sh.cfg.policy {
+                        BackpressurePolicy::Reject => {
+                            sh.stats
+                                .rejected_items
+                                .fetch_add(n as u64, Ordering::Relaxed);
+                            return PublishOutcome::Rejected;
                         }
-                    };
-                    absorb(first, &mut items, &mut stop);
-                    // Linger to batch bursts.
-                    let deadline = Instant::now() + linger;
-                    while items.len() < max_batch && !stop {
-                        match rx.try_recv() {
-                            Ok(e) => absorb(e, &mut items, &mut stop),
-                            Err(TryRecvError::Empty) => {
-                                if Instant::now() >= deadline {
-                                    break;
-                                }
-                                std::thread::sleep(Duration::from_micros(
-                                    200,
-                                ));
+                        BackpressurePolicy::Block => {
+                            if !waited {
+                                waited = true;
+                                sh.stats.blocked_publishes.fetch_add(1, Ordering::Relaxed);
                             }
-                            Err(TryRecvError::Disconnected) => {
-                                stop = true;
+                            st = sh.not_full.wait(st).unwrap();
+                            if st.shutdown {
+                                return PublishOutcome::Closed;
                             }
-                        }
-                    }
-                    // A model swap subsumes incremental work.
-                    if let Some(version) = model_swap {
-                        if let Err(e) = worker.full_build(version) {
-                            log::error!("nearline full build failed: {e:#}");
-                        } else {
-                            full.fetch_add(1, Ordering::Relaxed);
-                        }
-                    } else if !items.is_empty() {
-                        let ids: Vec<u32> = items.into_iter().collect();
-                        match worker.incremental(&ids) {
-                            Ok(n) => {
-                                inc.fetch_add(n as u64, Ordering::Relaxed);
-                            }
-                            Err(e) => log::error!(
-                                "nearline incremental failed: {e:#}"
-                            ),
                         }
                     }
                 }
-            })
-            .expect("spawn nearline queue");
-        UpdateQueue {
-            tx,
-            handle: Some(handle),
-            incremental_updates,
-            full_rebuilds,
+                let at = Instant::now();
+                let (hot, cold) = match (&sh.heat, sh.cfg.hot_min_touches) {
+                    (Some(h), thr) if thr > 0 => {
+                        ids.into_iter().partition(|&id| h.is_hot(id, thr))
+                    }
+                    _ => (Vec::new(), ids),
+                };
+                let n_hot = hot.len();
+                if !hot.is_empty() {
+                    st.hot.push_back(Pending { ids: hot, at, attempts: 0 });
+                }
+                if !cold.is_empty() {
+                    st.cold.push_back(Pending {
+                        ids: cold,
+                        at,
+                        attempts: 0,
+                    });
+                }
+                st.depth_items += n;
+                sh.stats.enqueued_events.fetch_add(1, Ordering::Relaxed);
+                sh.stats
+                    .enqueued_items
+                    .fetch_add(n as u64, Ordering::Relaxed);
+                sh.stats
+                    .hot_items
+                    .fetch_add(n_hot as u64, Ordering::Relaxed);
+                sh.stats
+                    .peak_depth_items
+                    .fetch_max(st.depth_items as u64, Ordering::Relaxed);
+                sh.not_empty.notify_all();
+                PublishOutcome::Enqueued
+            }
         }
     }
 
-    pub fn publish(&self, event: UpdateEvent) {
-        let _ = self.tx.send(event);
+    /// Pending item ids across both lanes (excludes the in-flight batch).
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().depth_items
     }
 
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(UpdateEvent::Shutdown);
-        if let Some(h) = self.handle.take() {
+    /// Age of the oldest pending (or in-flight) work, milliseconds.
+    pub fn oldest_pending_ms(&self) -> f64 {
+        let st = self.shared.state.lock().unwrap();
+        st.oldest_at()
+            .map(|at| at.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+
+    /// When `id` was last made visible by the queue (unix ms).
+    pub fn updated_at_ms(&self, id: u32) -> Option<u64> {
+        self.stats.watermarks.updated_at_ms(id)
+    }
+
+    /// Block until every pending event has been applied (tests/benches;
+    /// returns immediately once the queue is idle).
+    pub fn flush(&self) {
+        let tick = Duration::from_millis(50);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.has_work() || st.in_flight_since.is_some() {
+            let (g, _) = self.shared.idle.wait_timeout(st, tick).unwrap();
+            st = g;
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Drain pending events, stop the thread, and join it.  Idempotent;
+    /// usable through an `Arc` (unlike the consuming [`Self::shutdown`]).
+    pub fn stop(&self) {
+        self.begin_shutdown();
+        if let Some(h) = self.handle.lock().unwrap().take() {
             let _ = h.join();
         }
+    }
+
+    pub fn shutdown(self) {
+        self.stop();
+    }
+
+    /// Counters + gauges for `/metrics` (one short lock for the gauges).
+    pub fn stats_snapshot(&self) -> Object {
+        let s = &self.stats;
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut o = Object::new();
+        let (depth, oldest_ms) = {
+            let st = self.shared.state.lock().unwrap();
+            (
+                st.depth_items,
+                st.oldest_at()
+                    .map(|at| at.elapsed().as_secs_f64() * 1e3)
+                    .unwrap_or(0.0),
+            )
+        };
+        o.insert("depth_items", depth);
+        o.insert("oldest_pending_ms", oldest_ms);
+        o.insert("capacity_items", self.shared.cfg.queue_capacity);
+        o.insert(
+            "policy",
+            match self.shared.cfg.policy {
+                BackpressurePolicy::Block => "block",
+                BackpressurePolicy::Reject => "reject",
+            },
+        );
+        o.insert("enqueued_events", ld(&s.enqueued_events));
+        o.insert("enqueued_items", ld(&s.enqueued_items));
+        o.insert("hot_items", ld(&s.hot_items));
+        o.insert("rejected_items", ld(&s.rejected_items));
+        o.insert("blocked_publishes", ld(&s.blocked_publishes));
+        o.insert("peak_depth_items", ld(&s.peak_depth_items));
+        o.insert("coalesced_items", ld(&s.coalesced_items));
+        o.insert("applied_items", ld(&s.applied_items));
+        o.insert("applied_batches", ld(&s.applied_batches));
+        o.insert("full_rebuilds", ld(&s.full_rebuilds));
+        o.insert("failed_full_builds", ld(&s.failed_full_builds));
+        o.insert("subsumed_items", ld(&s.subsumed_items));
+        o.insert("retried_batches", ld(&s.retried_batches));
+        o.insert("requeued_items", ld(&s.requeued_items));
+        o.insert("failed_updates", ld(&s.failed_updates));
+        o.insert("compactions", ld(&s.compactions));
+        o.insert("compact_bytes_reclaimed", ld(&s.compact_bytes_reclaimed));
+        let mut lat = Object::new();
+        lat.insert("count", s.apply_latency.count());
+        lat.insert("mean_ms", s.apply_latency.mean() * 1e3);
+        lat.insert("p99_ms", s.apply_latency.percentile(99.0) * 1e3);
+        lat.insert("max_ms", s.apply_latency.max() * 1e3);
+        o.insert("apply_latency", lat);
+        let (n, oldest, newest) = s.watermarks.summary();
+        let now = unix_ms();
+        let mut wm = Object::new();
+        wm.insert("items_updated", n);
+        wm.insert(
+            "oldest_update_age_ms",
+            if n == 0 { 0 } else { now.saturating_sub(oldest) },
+        );
+        wm.insert(
+            "newest_update_age_ms",
+            if n == 0 { 0 } else { now.saturating_sub(newest) },
+        );
+        o.insert("updated_at", wm);
+        o
     }
 }
 
 impl Drop for UpdateQueue {
     fn drop(&mut self) {
-        let _ = self.tx.send(UpdateEvent::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.stop();
+    }
+}
+
+/// Take the next unit of work.  Swap first (it subsumes); otherwise pop
+/// hot-lane events, then cold, coalescing ids until `max_batch`.
+fn take_work(st: &mut Lanes, max_batch: usize, stats: &QueueStats) -> Work {
+    if let Some((version, at, attempts)) = st.swap.take() {
+        st.in_flight_since = Some(at);
+        return Work::Swap {
+            version,
+            at,
+            attempts,
+            cut_hot: st.hot.len(),
+            cut_cold: st.cold.len(),
+        };
+    }
+    let mut ids: BTreeSet<u32> = BTreeSet::new();
+    let mut events: Vec<(Instant, u32)> = Vec::new();
+    let mut popped_items = 0usize;
+    let mut earliest: Option<Instant> = None;
+    let mut max_attempts = 0u32;
+    while ids.len() < max_batch {
+        let p = match st.hot.pop_front().or_else(|| st.cold.pop_front()) {
+            Some(p) => p,
+            None => break,
+        };
+        popped_items += p.ids.len();
+        ids.extend(&p.ids);
+        earliest = Some(earliest.map_or(p.at, |e: Instant| e.min(p.at)));
+        max_attempts = max_attempts.max(p.attempts);
+        events.push((p.at, p.attempts));
+    }
+    st.depth_items -= popped_items;
+    let unique = ids.len();
+    stats
+        .coalesced_items
+        .fetch_add((popped_items - unique) as u64, Ordering::Relaxed);
+    let earliest = earliest.unwrap_or_else(Instant::now);
+    st.in_flight_since = Some(earliest);
+    Work::Incremental {
+        ids: ids.into_iter().collect(),
+        events,
+        earliest,
+        max_attempts,
+    }
+}
+
+fn drain_loop(sh: &Shared, applier: &dyn UpdateApplier) {
+    let stats = &sh.stats;
+    let mut batches_since_compact = 0u64;
+    loop {
+        // Wait for work (or exit once shutdown has drained everything).
+        let work = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.has_work() {
+                    break;
+                }
+                if st.shutdown {
+                    sh.idle.notify_all();
+                    return;
+                }
+                st = sh.not_empty.wait(st).unwrap();
+            }
+            // Linger for batching: a timed condvar wait against the batch
+            // deadline (not a sleep loop), cut short by a filling batch,
+            // a pending swap, or shutdown (which drains at full speed).
+            let linger =
+                Duration::from_secs_f64(sh.cfg.linger_ms.max(0.0) / 1e3);
+            if !st.shutdown && !linger.is_zero() && st.swap.is_none() {
+                let deadline = Instant::now() + linger;
+                while st.depth_items < sh.cfg.max_batch
+                    && st.swap.is_none()
+                    && !st.shutdown
+                {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, t) = sh
+                        .not_empty
+                        .wait_timeout(st, deadline - now)
+                        .unwrap();
+                    st = g;
+                    if t.timed_out() {
+                        break;
+                    }
+                }
+            }
+            take_work(&mut st, sh.cfg.max_batch, stats)
+        };
+
+        match work {
+            Work::Swap { version, at, attempts, cut_hot, cut_cold } => {
+                match applier.apply_full(version) {
+                    Ok(()) => {
+                        stats.full_rebuilds.fetch_add(1, Ordering::Relaxed);
+                        stats.apply_latency.record(at.elapsed());
+                        let now = unix_ms();
+                        let mut subsumed: Vec<u32> = Vec::new();
+                        let mut st = sh.state.lock().unwrap();
+                        // The rebuild recomputed the whole catalog, so
+                        // every event enqueued before it started is done.
+                        for _ in 0..cut_hot {
+                            if let Some(p) = st.hot.pop_front() {
+                                st.depth_items -= p.ids.len();
+                                subsumed.extend(p.ids);
+                            }
+                        }
+                        for _ in 0..cut_cold {
+                            if let Some(p) = st.cold.pop_front() {
+                                st.depth_items -= p.ids.len();
+                                subsumed.extend(p.ids);
+                            }
+                        }
+                        st.in_flight_since = None;
+                        drop(st);
+                        stats
+                            .subsumed_items
+                            .fetch_add(subsumed.len() as u64, Ordering::Relaxed);
+                        stats.watermarks.note(&subsumed, now);
+                    }
+                    Err(e) => {
+                        let mut st = sh.state.lock().unwrap();
+                        st.in_flight_since = None;
+                        if attempts < sh.cfg.retry_limit {
+                            stats.retried_batches.fetch_add(1, Ordering::Relaxed);
+                            // Keep the original timestamp: staleness is
+                            // measured from first enqueue.
+                            st.swap = Some(match st.swap.take() {
+                                Some((v, _, a)) => {
+                                    (v.max(version), at, a.max(attempts + 1))
+                                }
+                                None => (version, at, attempts + 1),
+                            });
+                            log::warn!(
+                                "nearline full build failed \
+                                 (attempt {}): {e:#}",
+                                attempts + 1
+                            );
+                        } else {
+                            stats.failed_full_builds.fetch_add(1, Ordering::Relaxed);
+                            log::error!(
+                                "nearline full build to version {version} \
+                                 abandoned after {} attempts: {e:#}",
+                                attempts + 1
+                            );
+                        }
+                    }
+                }
+            }
+            Work::Incremental { ids, events, earliest, max_attempts } => {
+                if ids.is_empty() {
+                    let mut st = sh.state.lock().unwrap();
+                    st.in_flight_since = None;
+                    continue;
+                }
+                let report = applier.apply_incremental(&ids);
+                let failed: BTreeSet<u32> =
+                    report.failed.iter().copied().collect();
+                let applied: Vec<u32> = ids
+                    .iter()
+                    .copied()
+                    .filter(|id| !failed.contains(id))
+                    .collect();
+                if !applied.is_empty() {
+                    stats
+                        .applied_items
+                        .fetch_add(applied.len() as u64, Ordering::Relaxed);
+                    stats.applied_batches.fetch_add(1, Ordering::Relaxed);
+                    stats.watermarks.note(&applied, unix_ms());
+                    for (at, _) in &events {
+                        stats.apply_latency.record(at.elapsed());
+                    }
+                    batches_since_compact += 1;
+                }
+                if !failed.is_empty() {
+                    let attempts = max_attempts + 1;
+                    if attempts > sh.cfg.retry_limit {
+                        stats
+                            .failed_updates
+                            .fetch_add(failed.len() as u64, Ordering::Relaxed);
+                        log::error!(
+                            "nearline incremental abandoned {} items \
+                             after {attempts} attempts: {}",
+                            failed.len(),
+                            report
+                                .last_error
+                                .as_deref()
+                                .unwrap_or("unknown error")
+                        );
+                    } else {
+                        let failed: Vec<u32> = failed.into_iter().collect();
+                        let n = failed.len();
+                        stats.retried_batches.fetch_add(1, Ordering::Relaxed);
+                        stats.requeued_items.fetch_add(n as u64, Ordering::Relaxed);
+                        log::warn!(
+                            "nearline incremental requeueing {n} items \
+                             (attempt {attempts}): {}",
+                            report
+                                .last_error
+                                .as_deref()
+                                .unwrap_or("unknown error")
+                        );
+                        let mut st = sh.state.lock().unwrap();
+                        // Front of the hot lane, original timestamp:
+                        // retries are the oldest work we hold.  Requeue
+                        // bypasses capacity — losing data to our own
+                        // bound would defeat the retry.
+                        st.hot.push_front(Pending {
+                            ids: failed,
+                            at: earliest,
+                            attempts,
+                        });
+                        st.depth_items += n;
+                    }
+                }
+                let mut st = sh.state.lock().unwrap();
+                st.in_flight_since = None;
+                drop(st);
+
+                // Maintenance cadence: compaction + heat decay.
+                if sh.cfg.compact_every > 0
+                    && batches_since_compact >= sh.cfg.compact_every
+                {
+                    batches_since_compact = 0;
+                    if let Some(r) = applier.compact() {
+                        stats.compactions.fetch_add(1, Ordering::Relaxed);
+                        stats
+                            .compact_bytes_reclaimed
+                            .fetch_add(r.bytes_reclaimed as u64, Ordering::Relaxed);
+                    }
+                    if let Some(h) = &sh.heat {
+                        h.decay();
+                    }
+                }
+            }
+        }
+
+        // Capacity freed / possibly idle: wake producers and flushers.
+        let st = sh.state.lock().unwrap();
+        let idle = !st.has_work() && st.in_flight_since.is_none();
+        drop(st);
+        sh.not_full.notify_all();
+        if idle {
+            sh.idle.notify_all();
         }
     }
 }

@@ -7,12 +7,14 @@
 //! **Incremental** builds recompute only the touched items (feature update
 //! / new item trigger, via the message queue).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::n2o::{N2oEntry, N2oTable};
+use super::n2o::{CompactReport, N2oEntry, N2oTable};
+use super::queue::{IncrementalReport, UpdateApplier};
 use crate::features::World;
 use crate::lsh::Hasher;
 use crate::runtime::{RtpPool, Tensor};
@@ -28,6 +30,10 @@ pub struct NearlineWorker {
     /// capture, so a snapshot never straddles a swap.  The u64 counts
     /// barrier crossings (observability only).
     barrier: Option<Arc<Mutex<u64>>>,
+    /// Fault injection (tests/benches): each pending count makes one
+    /// upcoming item_tower chunk computation fail, exercising the
+    /// queue's retry path without touching the RTP fleet.
+    inject_failures: AtomicU64,
 }
 
 impl NearlineWorker {
@@ -45,6 +51,7 @@ impl NearlineWorker {
             table,
             batch,
             barrier: None,
+            inject_failures: AtomicU64::new(0),
         }
     }
 
@@ -54,28 +61,46 @@ impl NearlineWorker {
         self
     }
 
+    /// Make the next `n` incremental chunk computations fail (tests).
+    pub fn inject_failures(&self, n: u64) {
+        self.inject_failures.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn take_injected_failure(&self) -> bool {
+        self.inject_failures
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                v.checked_sub(1)
+            })
+            .is_ok()
+    }
+
     fn item_raw_tensor(&self, items: &[u32]) -> Tensor {
+        assert!(
+            !items.is_empty(),
+            "item_raw_tensor needs at least one item to pad from"
+        );
         let d = self.world.items_raw.shape()[1];
         let mut data = Vec::with_capacity(self.batch * d);
         for &i in items {
             data.extend_from_slice(self.world.items_raw.f32_row(i as usize));
         }
+        // Pad short batches by repeating the last real row.
+        let last = items[items.len() - 1] as usize;
+        let pad = self.world.items_raw.f32_row(last);
         for _ in items.len()..self.batch {
-            data.extend_from_slice(
-                self.world
-                    .items_raw
-                    .f32_row(items[items.len() - 1] as usize),
-            );
+            data.extend_from_slice(pad);
         }
         Tensor::new(vec![self.batch, d], data)
     }
 
-    /// Compute N2O rows for a chunk of items (one item_tower execution).
-    fn compute_chunk(&self, items: &[u32]) -> Result<Vec<(u32, N2oEntry)>> {
-        let input = self.item_raw_tensor(items);
-        let out = self.rtp.call("item_tower", vec![input])?;
+    /// Append N2O rows decoded from one item_tower output.
+    fn push_rows(
+        &self,
+        items: &[u32],
+        out: &[Tensor],
+        rows: &mut Vec<(u32, N2oEntry)>,
+    ) {
         let (item_vec, bea_w) = (&out[0], &out[1]);
-        let mut rows = Vec::with_capacity(items.len());
         for (k, &id) in items.iter().enumerate() {
             rows.push((
                 id,
@@ -88,7 +113,6 @@ impl NearlineWorker {
                 },
             ));
         }
-        Ok(rows)
     }
 
     /// Full catalog rebuild -> atomic generation swap.  Issues up to
@@ -152,14 +176,77 @@ impl NearlineWorker {
     }
 
     /// Incremental update for specific items (message-queue trigger).
-    pub fn incremental(&self, items: &[u32]) -> Result<usize> {
-        let mut updated = 0;
-        for chunk in items.chunks(self.batch) {
-            let rows = self.compute_chunk(chunk)?;
-            updated += rows.len();
-            self.table.upsert(rows);
+    ///
+    /// Computation is pipelined through the RTP fleet like `full_build`
+    /// (up to `n_workers` chunks in flight), then every successful row is
+    /// written in ONE maintenance-counted `N2oTable` upsert — one write
+    /// lock per drained queue batch, however many chunks it spans.
+    /// Failed chunks don't abort the batch: their ids come back in
+    /// [`IncrementalReport::failed`] for the queue to retry, while the
+    /// successful rows are already visible.  `incremental(&[])` is a
+    /// no-op.
+    pub fn incremental(&self, items: &[u32]) -> IncrementalReport {
+        if items.is_empty() {
+            return IncrementalReport::default();
         }
-        Ok(updated)
+        let chunks: Vec<&[u32]> = items.chunks(self.batch).collect();
+        let n_inflight = self.rtp.n_workers().max(1);
+        let mut rows: Vec<(u32, N2oEntry)> = Vec::with_capacity(items.len());
+        let mut failed: Vec<u32> = Vec::new();
+        let mut last_error: Option<String> = None;
+        let mut pending = std::collections::VecDeque::new();
+        let mut next = 0usize;
+        while next < chunks.len() || !pending.is_empty() {
+            while pending.len() < n_inflight && next < chunks.len() {
+                let chunk = chunks[next];
+                next += 1;
+                if self.take_injected_failure() {
+                    failed.extend_from_slice(chunk);
+                    last_error = Some("injected RTP failure".into());
+                    continue;
+                }
+                let input = self.item_raw_tensor(chunk);
+                let rx = self.rtp.call_async("item_tower", vec![input]);
+                pending.push_back((chunk, rx));
+            }
+            let Some((chunk, rx)) = pending.pop_front() else {
+                continue;
+            };
+            match rx.recv() {
+                Ok(Ok(out)) => self.push_rows(chunk, &out, &mut rows),
+                Ok(Err(e)) => {
+                    failed.extend_from_slice(chunk);
+                    last_error = Some(format!("{e:#}"));
+                }
+                Err(_) => {
+                    failed.extend_from_slice(chunk);
+                    last_error = Some("RTP worker dropped reply".into());
+                }
+            }
+        }
+        let applied = rows.len();
+        if !rows.is_empty() {
+            self.table.upsert_maintenance(rows);
+        }
+        IncrementalReport {
+            applied,
+            failed,
+            last_error,
+        }
+    }
+}
+
+impl UpdateApplier for NearlineWorker {
+    fn apply_incremental(&self, items: &[u32]) -> IncrementalReport {
+        self.incremental(items)
+    }
+
+    fn apply_full(&self, version: u64) -> Result<()> {
+        self.full_build(version).map(|_| ())
+    }
+
+    fn compact(&self) -> Option<CompactReport> {
+        Some(self.table.compact())
     }
 }
 

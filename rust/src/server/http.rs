@@ -275,6 +275,9 @@ fn handle_conn(
                     if let Some(st) = a.storage_stats() {
                         o.insert("storage", st);
                     }
+                    if let Some(nl) = a.nearline_stats() {
+                        o.insert("nearline", nl);
+                    }
                     o.insert("scenarios", Value::Obj(per));
                     Value::Obj(o).to_string_pretty()
                 }

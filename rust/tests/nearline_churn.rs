@@ -1,0 +1,456 @@
+//! Streaming nearline pipeline tests (DESIGN.md §17): queue semantics
+//! against a mock applier (coalescing, subsumption, backpressure, retry,
+//! shutdown drain) plus worker-level checks over the synthetic fixture
+//! (empty-batch no-op, one write lock per drained batch, fault-injected
+//! retries that lose nothing).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use aif::config::{BackpressurePolicy, NearlineConfig};
+use aif::features::World;
+use aif::lsh::Hasher;
+use aif::nearline::{
+    IncrementalReport, N2oTable, NearlineWorker, PublishOutcome,
+    UpdateApplier, UpdateEvent, UpdateQueue,
+};
+use aif::runtime::{Manifest, RtpPool};
+use aif::util::fixture;
+
+// ---------------------------------------------------------------- mock --
+
+/// Scriptable applier: records every batch, optionally blocks on a gate
+/// (so tests control exactly which events share a drained batch) and
+/// fails a chosen id set for a budgeted number of batches.
+#[derive(Default)]
+struct MockApplier {
+    batches: Mutex<Vec<Vec<u32>>>,
+    full_versions: Mutex<Vec<u64>>,
+    /// Held by the test to park the drain thread inside an apply.
+    gate: Mutex<()>,
+    in_apply: AtomicBool,
+    /// Separate park for full builds, so a test can release incremental
+    /// applies while still holding the build mid-flight.
+    gate_full: Mutex<()>,
+    in_full: AtomicBool,
+    fail_ids: Mutex<BTreeSet<u32>>,
+    /// How many more applies report `fail_ids` as failed.
+    fail_budget: AtomicU64,
+    fail_full_budget: AtomicU64,
+}
+
+impl MockApplier {
+    fn wait_in_apply(&self) {
+        while !self.in_apply.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn wait_in_full(&self) {
+        while !self.in_full.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn applied_ids(&self) -> Vec<u32> {
+        let batches = self.batches.lock().unwrap();
+        batches.iter().flatten().copied().collect()
+    }
+}
+
+impl UpdateApplier for MockApplier {
+    fn apply_incremental(&self, items: &[u32]) -> IncrementalReport {
+        self.in_apply.store(true, Ordering::Release);
+        let _g = self.gate.lock().unwrap();
+        self.in_apply.store(false, Ordering::Release);
+        let failing = self
+            .fail_budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                v.checked_sub(1)
+            })
+            .is_ok();
+        let fail_ids = self.fail_ids.lock().unwrap();
+        let (failed, ok): (Vec<u32>, Vec<u32>) = items
+            .iter()
+            .partition(|&&id| failing && fail_ids.contains(&id));
+        self.batches.lock().unwrap().push(ok.clone());
+        IncrementalReport {
+            applied: ok.len(),
+            failed,
+            last_error: failing.then(|| "scripted failure".into()),
+        }
+    }
+
+    fn apply_full(&self, version: u64) -> anyhow::Result<()> {
+        self.in_full.store(true, Ordering::Release);
+        let _g = self.gate_full.lock().unwrap();
+        self.in_full.store(false, Ordering::Release);
+        let failing = self
+            .fail_full_budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                v.checked_sub(1)
+            })
+            .is_ok();
+        anyhow::ensure!(!failing, "scripted full-build failure");
+        self.full_versions.lock().unwrap().push(version);
+        Ok(())
+    }
+}
+
+fn cfg(capacity: usize, policy: BackpressurePolicy) -> NearlineConfig {
+    NearlineConfig {
+        queue_capacity: capacity,
+        policy,
+        max_batch: 1024,
+        linger_ms: 1.0,
+        retry_limit: 3,
+        hot_min_touches: 0,
+        compact_every: 0,
+    }
+}
+
+// -------------------------------------------------- queue (mock) tests --
+
+#[test]
+fn duplicate_ids_coalesce_into_one_apply() {
+    let mock = Arc::new(MockApplier::default());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    // Park the drain thread on a decoy so the three overlapping events
+    // are all pending when the next batch is taken.
+    let gate = mock.gate.lock().unwrap();
+    q.publish(UpdateEvent::ItemFeatures(vec![900]));
+    mock.wait_in_apply();
+    q.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3]));
+    q.publish(UpdateEvent::ItemFeatures(vec![2, 3, 4]));
+    q.publish(UpdateEvent::ItemFeatures(vec![3, 4, 5]));
+    drop(gate);
+    q.flush();
+
+    let batches = mock.batches.lock().unwrap().clone();
+    assert_eq!(batches.len(), 2, "decoy batch + one coalesced batch");
+    assert_eq!(batches[1], vec![1, 2, 3, 4, 5], "sorted unique union");
+    assert_eq!(q.stats.coalesced_items.load(Ordering::Relaxed), 4);
+    assert_eq!(q.stats.applied_items.load(Ordering::Relaxed), 6);
+    assert_eq!(q.stats.failed_updates.load(Ordering::Relaxed), 0);
+    // Every published id has a visibility watermark.
+    for id in [1, 2, 3, 4, 5, 900] {
+        assert!(q.updated_at_ms(id).is_some(), "watermark for {id}");
+    }
+    q.shutdown();
+}
+
+#[test]
+fn model_swap_subsumes_prior_incrementals_but_not_later_ones() {
+    let mock = Arc::new(MockApplier::default());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    // Queue incrementals BEFORE the swap while the drain thread is
+    // parked in a decoy apply, so the swap sees them as pending.  The
+    // full-build gate is held too, parking the build the moment the
+    // drain thread reaches it.
+    let gate = mock.gate.lock().unwrap();
+    let gate_full = mock.gate_full.lock().unwrap();
+    q.publish(UpdateEvent::ItemFeatures(vec![700]));
+    mock.wait_in_apply();
+    q.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3]));
+    q.publish(UpdateEvent::ModelSwap { version: 7 });
+    drop(gate);
+    // Publish an event mid-build: it must NOT be subsumed.
+    mock.wait_in_full();
+    q.publish(UpdateEvent::ItemFeatures(vec![9]));
+    drop(gate_full);
+    q.flush();
+
+    assert_eq!(*mock.full_versions.lock().unwrap(), vec![7]);
+    assert_eq!(q.stats.subsumed_items.load(Ordering::Relaxed), 3);
+    let applied = mock.applied_ids();
+    assert!(!applied.contains(&1), "pre-swap event was subsumed");
+    assert!(applied.contains(&9), "mid-build event was applied");
+    for id in [1, 2, 3, 9] {
+        assert!(q.updated_at_ms(id).is_some(), "watermark for {id}");
+    }
+    q.shutdown();
+}
+
+#[test]
+fn reject_policy_counts_drops_when_full() {
+    let mock = Arc::new(MockApplier::default());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(4, BackpressurePolicy::Reject),
+        None,
+    );
+    let gate = mock.gate.lock().unwrap();
+    q.publish(UpdateEvent::ItemFeatures(vec![100]));
+    mock.wait_in_apply(); // decoy in flight; lanes empty again
+    assert_eq!(
+        q.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3])),
+        PublishOutcome::Enqueued
+    );
+    assert_eq!(
+        q.publish(UpdateEvent::ItemFeatures(vec![4, 5, 6])),
+        PublishOutcome::Rejected,
+        "3 pending + 3 new > capacity 4"
+    );
+    drop(gate);
+    q.flush();
+    assert_eq!(q.stats.rejected_items.load(Ordering::Relaxed), 3);
+    let applied = mock.applied_ids();
+    assert!(applied.contains(&1) && !applied.contains(&4));
+    q.shutdown();
+}
+
+#[test]
+fn block_policy_stalls_producer_until_capacity_frees() {
+    let mock = Arc::new(MockApplier::default());
+    let q = Arc::new(UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(4, BackpressurePolicy::Block),
+        None,
+    ));
+    let gate = mock.gate.lock().unwrap();
+    q.publish(UpdateEvent::ItemFeatures(vec![100]));
+    mock.wait_in_apply();
+    q.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3]));
+    let q2 = Arc::clone(&q);
+    let producer = std::thread::spawn(move || {
+        q2.publish(UpdateEvent::ItemFeatures(vec![4, 5, 6]))
+    });
+    // The producer must be parked on the capacity condvar.
+    while q.stats.blocked_publishes.load(Ordering::Relaxed) == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    drop(gate); // drain resumes -> capacity frees -> producer completes
+    assert_eq!(producer.join().unwrap(), PublishOutcome::Enqueued);
+    q.flush();
+    let applied: BTreeSet<u32> = mock.applied_ids().into_iter().collect();
+    for id in [1, 2, 3, 4, 5, 6, 100] {
+        assert!(applied.contains(&id), "blocked publish still landed {id}");
+    }
+    assert_eq!(q.stats.rejected_items.load(Ordering::Relaxed), 0);
+    q.stop();
+}
+
+#[test]
+fn shutdown_drains_every_pending_event() {
+    let mock = Arc::new(MockApplier::default());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    let mut published: BTreeSet<u32> = BTreeSet::new();
+    for i in 0..20u32 {
+        let ids: Vec<u32> = (i * 10..i * 10 + 7).collect();
+        published.extend(&ids);
+        assert_eq!(
+            q.publish(UpdateEvent::ItemFeatures(ids)),
+            PublishOutcome::Enqueued
+        );
+    }
+    q.shutdown(); // drains, then joins
+    let applied: BTreeSet<u32> = mock.applied_ids().into_iter().collect();
+    assert_eq!(applied, published, "no event lost across shutdown");
+    // The queue is closed to new work after shutdown begins.
+    assert_eq!(q.stats.failed_updates.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn failed_batch_requeues_and_eventually_applies() {
+    let mock = Arc::new(MockApplier::default());
+    *mock.fail_ids.lock().unwrap() = BTreeSet::from([2]);
+    mock.fail_budget.store(2, Ordering::Relaxed);
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    q.publish(UpdateEvent::ItemFeatures(vec![1, 2, 3]));
+    q.flush();
+    assert_eq!(q.stats.failed_updates.load(Ordering::Relaxed), 0);
+    assert_eq!(q.stats.retried_batches.load(Ordering::Relaxed), 2);
+    assert_eq!(q.stats.requeued_items.load(Ordering::Relaxed), 2);
+    assert_eq!(q.stats.applied_items.load(Ordering::Relaxed), 3);
+    assert!(q.updated_at_ms(2).is_some(), "retried id became visible");
+    q.shutdown();
+}
+
+#[test]
+fn retry_exhaustion_is_counted_not_silent() {
+    let mock = Arc::new(MockApplier::default());
+    *mock.fail_ids.lock().unwrap() = BTreeSet::from([5]);
+    mock.fail_budget.store(u64::MAX, Ordering::Relaxed);
+    let mut c = cfg(1 << 16, BackpressurePolicy::Block);
+    c.retry_limit = 1;
+    let q = UpdateQueue::start_with(Arc::clone(&mock) as Arc<dyn UpdateApplier>, c, None);
+    q.publish(UpdateEvent::ItemFeatures(vec![5]));
+    q.flush();
+    assert_eq!(
+        q.stats.failed_updates.load(Ordering::Relaxed),
+        1,
+        "exhausted retries are accounted, not dropped with a log line"
+    );
+    assert_eq!(q.updated_at_ms(5), None);
+    assert_eq!(q.depth(), 0, "exhausted item no longer pending");
+    q.shutdown();
+}
+
+#[test]
+fn failed_full_build_retries_then_lands() {
+    let mock = Arc::new(MockApplier::default());
+    mock.fail_full_budget.store(1, Ordering::Relaxed);
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    q.publish(UpdateEvent::ModelSwap { version: 3 });
+    q.flush();
+    assert_eq!(*mock.full_versions.lock().unwrap(), vec![3]);
+    assert_eq!(q.stats.retried_batches.load(Ordering::Relaxed), 1);
+    assert_eq!(q.stats.full_rebuilds.load(Ordering::Relaxed), 1);
+    assert_eq!(q.stats.failed_full_builds.load(Ordering::Relaxed), 0);
+    q.shutdown();
+}
+
+#[test]
+fn empty_event_is_a_noop() {
+    let mock = Arc::new(MockApplier::default());
+    let q = UpdateQueue::start_with(
+        Arc::clone(&mock) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    assert_eq!(
+        q.publish(UpdateEvent::ItemFeatures(vec![])),
+        PublishOutcome::Enqueued
+    );
+    q.flush();
+    assert_eq!(q.depth(), 0);
+    assert_eq!(q.stats.enqueued_items.load(Ordering::Relaxed), 0);
+    assert!(mock.batches.lock().unwrap().is_empty());
+    q.shutdown();
+}
+
+// ------------------------------------------- worker (fixture) tests --
+
+fn fixture_dir(tag: &str) -> PathBuf {
+    let name = format!("aif-nlchurn-{}-{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    fixture::write(&dir).expect("fixture generation");
+    dir
+}
+
+struct Cleanup(PathBuf);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn worker_over(dir: &PathBuf) -> (Arc<NearlineWorker>, Arc<N2oTable>) {
+    let manifest = Arc::new(Manifest::load(dir.to_str().unwrap()).expect("manifest"));
+    let world = Arc::new(World::load(&manifest).expect("world"));
+    let rtp = Arc::new(RtpPool::new(
+        Arc::clone(&manifest),
+        vec!["item_tower".into()],
+        2,
+    ));
+    let hasher = Arc::new(Hasher::from_table(&world.w_hash));
+    let table = Arc::new(N2oTable::new(
+        world.n_items,
+        manifest.dim("D"),
+        manifest.dim("N_BRIDGE"),
+        manifest.dim("D_LSH_BITS"),
+    ));
+    let worker = Arc::new(NearlineWorker::new(
+        rtp,
+        world,
+        hasher,
+        Arc::clone(&table),
+        manifest.batch,
+    ));
+    (worker, table)
+}
+
+#[test]
+fn worker_empty_incremental_is_noop_and_batch_takes_one_lock() {
+    let dir = fixture_dir("worker");
+    let _cleanup = Cleanup(dir.clone());
+    let (worker, table) = worker_over(&dir);
+    worker.full_build(1).expect("full build");
+
+    // Satellite fix: `incremental(&[])` must not panic in
+    // `item_raw_tensor` and must not touch the table.
+    let locks0 = table.lock_acquisitions.load(Ordering::Relaxed);
+    let report = worker.incremental(&[]);
+    assert_eq!(report.applied, 0);
+    assert!(report.failed.is_empty());
+    assert_eq!(table.lock_acquisitions.load(Ordering::Relaxed), locks0);
+
+    // A multi-chunk batch (3 × batch size) lands in ONE write lock, and
+    // that lock is maintenance-counted (request budget untouched).
+    let before = table.snapshot();
+    let n = worker.batch * 3;
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let locks0 = table.lock_acquisitions.load(Ordering::Relaxed);
+    let maint0 = table.maintenance_lock_acquisitions.load(Ordering::Relaxed);
+    let report = worker.incremental(&ids);
+    assert_eq!(report.applied, n);
+    assert_eq!(
+        table.lock_acquisitions.load(Ordering::Relaxed) - locks0,
+        1,
+        "one write lock per drained batch, not per chunk"
+    );
+    assert_eq!(
+        table.maintenance_lock_acquisitions.load(Ordering::Relaxed) - maint0,
+        1
+    );
+    // Deterministic model -> recompute writes bitwise-identical rows.
+    let after = table.snapshot();
+    let (b, a) = (before.get(5).unwrap(), after.get(5).unwrap());
+    assert_eq!(b.to_entry(), a.to_entry(), "recompute is bitwise stable");
+}
+
+#[test]
+fn injected_failures_requeue_through_queue_without_loss() {
+    let dir = fixture_dir("faults");
+    let _cleanup = Cleanup(dir.clone());
+    let (worker, table) = worker_over(&dir);
+    worker.full_build(1).expect("full build");
+
+    // Direct worker call first: the failed chunk's ids come back.
+    worker.inject_failures(1);
+    let report = worker.incremental(&[3, 4]);
+    assert_eq!(report.applied, 0);
+    assert_eq!(report.failed, vec![3, 4]);
+    assert!(report.last_error.is_some());
+
+    // Through the queue: the retry path heals the injected failure.
+    let q = UpdateQueue::start_with(
+        Arc::clone(&worker) as Arc<dyn UpdateApplier>,
+        cfg(1 << 16, BackpressurePolicy::Block),
+        None,
+    );
+    worker.inject_failures(1);
+    q.publish(UpdateEvent::ItemFeatures(vec![7, 8, 9]));
+    q.flush();
+    assert_eq!(q.stats.failed_updates.load(Ordering::Relaxed), 0);
+    assert!(q.stats.requeued_items.load(Ordering::Relaxed) > 0);
+    for id in [7, 8, 9] {
+        assert!(q.updated_at_ms(id).is_some(), "watermark for {id}");
+    }
+    assert_eq!(table.version(), 1, "incrementals never bump the version");
+    q.shutdown();
+}
