@@ -4,11 +4,28 @@
 //! a client ladder (coalescing only pays once >= 8 requests are in
 //! flight), and a score-invariance check that the two dispatch modes
 //! produce identical top-K for identical seeds.
+//!
+//! The front-end section (DESIGN.md §18) compares the blocking and the
+//! evented HTTP front end over the same ranker — bitwise top-K identity,
+//! p99 under keep-alive load — then sweeps the evented reactor with 10k
+//! idle + 1k active connections (quick: 1k/64) on a fixed thread budget,
+//! gating flat per-idle-connection memory, p99 stability, zero
+//! scoring-worker occupancy by slow clients, and the exact thread count.
+//! Emits `BENCH_frontend.json` (path via `AIF_BENCH_OUT`); honors
+//! `AIF_QUICK=1`; `AIF_FRONTEND_ONLY=1` skips the legacy artifact
+//! sections (the CI smoke runs on the synthetic fixture).
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use aif::config::{ServingConfig, SimMode};
+use aif::config::{FrontendConfig, ServingConfig, SimMode};
 use aif::coordinator::{Merger, PreRanker, ScoreRequest};
+use aif::server::HttpServer;
+use aif::util::fixture;
+use aif::util::json::{Object, Value};
 use aif::workload::runner;
 
 fn aif_cfg(dir: &str, coalesce: bool) -> ServingConfig {
@@ -23,10 +40,44 @@ fn aif_cfg(dir: &str, coalesce: bool) -> ServingConfig {
 }
 
 fn main() {
-    let dir = std::env::var("AIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let frontend_only =
+        std::env::var("AIF_FRONTEND_ONLY").as_deref() == Ok("1");
     let n = if quick { 24 } else { 96 };
 
+    // Fall back to the synthetic fixture when no artifact set is around
+    // (same convention as the other benches), so the front-end smoke can
+    // run in CI.
+    let (dir, fixture_dir) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-e2e-bench-{}",
+                std::process::id()
+            ));
+            fixture::write(&tmp).expect("fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+
+    if !frontend_only {
+        legacy_sections(&dir, quick, n);
+    }
+    frontend_section(&dir, quick);
+
+    if let Some(tmp) = fixture_dir {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}
+
+fn legacy_sections(dir: &str, quick: bool, n: usize) {
+    let dir = dir.to_string();
     // ---- baseline vs AIF (as before) -----------------------------------
     for (name, variant, sim) in [
         ("base", "base", SimMode::Off),
@@ -111,4 +162,382 @@ fn main() {
         );
         println!("score invariance: top-K identical with coalescing on/off");
     }
+}
+
+// ---------------------------------------------------------------------
+// Front-end comparison and the evented connection sweep (DESIGN.md §18)
+// ---------------------------------------------------------------------
+
+/// One keep-alive client connection; reads exactly one length-framed
+/// response per round trip.
+struct KeepAliveConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl KeepAliveConn {
+    fn connect(addr: &str) -> KeepAliveConn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("read timeout");
+        KeepAliveConn {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    fn roundtrip(&mut self, raw: &str) -> (u16, String) {
+        self.stream.write_all(raw.as_bytes()).expect("write");
+        let mut chunk = [0u8; 8192];
+        let head_end = loop {
+            if let Some(p) =
+                self.buf.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                break p;
+            }
+            let n = self.stream.read(&mut chunk).expect("read head");
+            assert!(n > 0, "EOF before response head");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        let cl: usize = head
+            .lines()
+            .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|v| v.trim().parse().ok())
+            .expect("Content-Length");
+        let total = head_end + 4 + cl;
+        while self.buf.len() < total {
+            let n = self.stream.read(&mut chunk).expect("read body");
+            assert!(n > 0, "EOF mid body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body =
+            String::from_utf8_lossy(&self.buf[head_end + 4..total]).into_owned();
+        self.buf.drain(..total);
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status");
+        (status, body)
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Resident set size, bytes (`/proc/self/statm`); None off Linux.
+fn rss_bytes() -> Option<usize> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let resident: usize = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(resident * 4096)
+}
+
+/// Thread count of this process (`/proc/self/status`); None off Linux.
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Soft open-file limit (`/proc/self/limits`); None off Linux.
+fn fd_soft_limit() -> Option<usize> {
+    let limits = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = limits.lines().find(|l| l.starts_with("Max open files"))?;
+    line.split_whitespace().nth(3)?.parse().ok()
+}
+
+/// Top-K of a few representative users as (item, score-bits) rows —
+/// byte-exact comparison material across front ends.
+fn sample_topk(addr: &str, n_users: usize) -> Vec<Vec<(usize, u64)>> {
+    let mut out = Vec::new();
+    for user in [1usize, 7, 13] {
+        let user = user % n_users.max(1);
+        let mut c = KeepAliveConn::connect(addr);
+        let (status, body) = c.roundtrip(&format!(
+            "GET /v1/score?user={user}&top_k=8 HTTP/1.1\r\nHost: b\r\n\
+             Connection: close\r\n\r\n"
+        ));
+        assert_eq!(status, 200, "score failed: {body}");
+        let v = Value::parse(&body).expect("JSON body");
+        let items = v.req("items").as_arr().expect("items").clone();
+        out.push(
+            items
+                .iter()
+                .map(|e| {
+                    (
+                        e.req("item").as_usize().expect("item"),
+                        e.req("score").as_f64().expect("score").to_bits(),
+                    )
+                })
+                .collect(),
+        );
+    }
+    out
+}
+
+/// Closed-loop keep-alive drivers: `n_drivers` threads round-robin over
+/// `n_conns` persistent connections, `reqs_per_driver` requests each.
+/// Returns sorted per-request latencies (ms).
+fn drive(
+    addr: &str,
+    n_conns: usize,
+    n_drivers: usize,
+    reqs_per_driver: usize,
+    n_users: usize,
+) -> Vec<f64> {
+    let handles: Vec<_> = (0..n_drivers)
+        .map(|d| {
+            let addr = addr.to_string();
+            let per = n_conns / n_drivers;
+            std::thread::spawn(move || {
+                let mut conns: Vec<KeepAliveConn> =
+                    (0..per.max(1)).map(|_| KeepAliveConn::connect(&addr)).collect();
+                let mut lat = Vec::with_capacity(reqs_per_driver);
+                for i in 0..reqs_per_driver {
+                    let user = (d * 131 + i * 17) % n_users.max(1);
+                    let raw = format!(
+                        "GET /v1/score?user={user}&top_k=8 HTTP/1.1\r\n\
+                         Host: b\r\n\r\n"
+                    );
+                    let n = conns.len();
+                    let conn = &mut conns[i % n];
+                    let t0 = Instant::now();
+                    let (status, body) = conn.roundtrip(&raw);
+                    assert_eq!(status, 200, "driver saw {status}: {body}");
+                    lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("driver"));
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all
+}
+
+fn lat_json(sorted: &[f64]) -> Value {
+    let mut o = Object::new();
+    o.insert("n", sorted.len());
+    o.insert("p50_ms", percentile(sorted, 0.50));
+    o.insert("p99_ms", percentile(sorted, 0.99));
+    Value::Obj(o)
+}
+
+fn frontend_section(dir: &str, quick: bool) {
+    println!("== front ends: blocking vs evented ==");
+    let ranker: Arc<dyn PreRanker> =
+        Arc::new(Merger::build(aif_cfg(dir, false)).expect("merger"));
+    let n_users = ranker.n_users();
+    let n_workers = 8;
+    let n_event_loops = 2;
+    let base_reqs = if quick { 200 } else { 2000 };
+
+    // ---- blocking baseline ---------------------------------------------
+    let bl_cfg = FrontendConfig {
+        mode: "blocking".into(),
+        ..FrontendConfig::default()
+    };
+    let bl = HttpServer::start_frontend(
+        Arc::clone(&ranker),
+        None,
+        "127.0.0.1:0",
+        &bl_cfg,
+        n_workers,
+    )
+    .expect("blocking server");
+    let bl_topk = sample_topk(&bl.addr, n_users);
+    let bl_lat = drive(&bl.addr, 4, 4, base_reqs / 4, n_users);
+    bl.shutdown();
+    println!(
+        "  blocking: p50 {:.3}ms p99 {:.3}ms",
+        percentile(&bl_lat, 0.50),
+        percentile(&bl_lat, 0.99)
+    );
+
+    // ---- evented server + exact thread budget ---------------------------
+    let ev_cfg = FrontendConfig {
+        mode: "evented".into(),
+        n_event_loops,
+        ..FrontendConfig::default()
+    };
+    let threads_before = thread_count();
+    let ev = HttpServer::start_frontend(
+        Arc::clone(&ranker),
+        None,
+        "127.0.0.1:0",
+        &ev_cfg,
+        n_workers,
+    )
+    .expect("evented server");
+    let server_threads = match (threads_before, thread_count()) {
+        (Some(a), Some(b)) => {
+            let delta = b - a;
+            assert_eq!(
+                delta,
+                n_event_loops + n_workers,
+                "evented thread budget: {n_event_loops} reactors + \
+                 {n_workers} workers, no more"
+            );
+            delta
+        }
+        _ => {
+            println!("  (no /proc; thread-budget gate skipped)");
+            0
+        }
+    };
+
+    // ---- bitwise top-K identity across front ends -----------------------
+    let ev_topk = sample_topk(&ev.addr, n_users);
+    assert_eq!(
+        bl_topk, ev_topk,
+        "top-K must be bitwise identical across front ends"
+    );
+    println!("  top-K identity: blocking == evented (bitwise)");
+
+    // ---- evented p99 vs blocking ----------------------------------------
+    let ev_lat = drive(&ev.addr, 4, 4, base_reqs / 4, n_users);
+    let (bl_p99, ev_p99) =
+        (percentile(&bl_lat, 0.99), percentile(&ev_lat, 0.99));
+    println!("  evented:  p50 {:.3}ms p99 {ev_p99:.3}ms", percentile(&ev_lat, 0.50));
+    assert!(
+        ev_p99 <= bl_p99 * 3.0 + 20.0,
+        "evented p99 regressed: {ev_p99:.3}ms vs blocking {bl_p99:.3}ms"
+    );
+
+    // ---- connection sweep: idle mass + active keep-alive traffic --------
+    let stats = Arc::clone(ev.frontend_stats());
+    let active_target = if quick { 64 } else { 1000 };
+    let mut idle_target = if quick { 1000 } else { 10_000 };
+    if let Some(soft) = fd_soft_limit() {
+        // Both ends of every connection live in this process: 2 fds per
+        // connection, plus slack for the server itself.
+        let budget = soft.saturating_sub(2 * active_target + 256) / 2;
+        if budget < idle_target {
+            println!(
+                "  fd soft limit {soft}: scaling idle sweep {idle_target} \
+                 -> {budget} (raise `ulimit -n` for the full sweep)"
+            );
+            idle_target = budget;
+        }
+    }
+    let rss0 = rss_bytes();
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(idle_target);
+    for _ in 0..idle_target {
+        idle.push(TcpStream::connect(&ev.addr).expect("idle connect"));
+        // Stay behind the accept backlog.
+        if idle.len() % 512 == 0 {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while stats.open.load(Ordering::Relaxed) < idle.len()
+                && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while stats.open.load(Ordering::Relaxed) < idle_target
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        stats.open.load(Ordering::Relaxed) >= idle_target,
+        "reactor accepted {} of {idle_target} idle connections",
+        stats.open.load(Ordering::Relaxed)
+    );
+    let rss_per_conn = match (rss0, rss_bytes()) {
+        (Some(a), Some(b)) if idle_target > 0 => {
+            let per = b.saturating_sub(a) / idle_target;
+            assert!(
+                per < 64 * 1024,
+                "per-idle-connection memory not flat: {per} bytes"
+            );
+            println!(
+                "  {idle_target} idle connections: {per} bytes RSS each"
+            );
+            per
+        }
+        _ => {
+            println!("  (no /proc; RSS gate skipped)");
+            0
+        }
+    };
+
+    // ---- slow clients must never occupy a scoring worker ----------------
+    let jobs0 = stats.jobs_submitted.load(Ordering::Relaxed);
+    let mut loris: Vec<TcpStream> = (0..16)
+        .map(|_| {
+            let mut s = TcpStream::connect(&ev.addr).expect("connect");
+            s.write_all(b"GET /v1/score?user=1 HT").expect("write");
+            s
+        })
+        .collect();
+    let probe = drive(&ev.addr, 2, 2, 20, n_users);
+    let jobs_delta = stats.jobs_submitted.load(Ordering::Relaxed) - jobs0;
+    assert_eq!(
+        jobs_delta,
+        probe.len() as u64,
+        "slow clients leaked into the scoring queue"
+    );
+    println!("  16 slow clients: 0 scoring jobs; traffic unaffected");
+    loris.clear();
+
+    // ---- active keep-alive load over the idle mass ----------------------
+    let sweep_reqs = (active_target * 2).max(base_reqs / 2);
+    let sweep_lat = drive(&ev.addr, active_target, 8, sweep_reqs / 8, n_users);
+    let sweep_p99 = percentile(&sweep_lat, 0.99);
+    println!(
+        "  {active_target} active over {idle_target} idle: p50 {:.3}ms \
+         p99 {sweep_p99:.3}ms",
+        percentile(&sweep_lat, 0.50)
+    );
+    assert!(
+        sweep_p99 <= ev_p99 * 3.0 + 20.0,
+        "p99 under idle mass regressed: {sweep_p99:.3}ms vs {ev_p99:.3}ms \
+         baseline"
+    );
+    drop(idle);
+    ev.shutdown();
+
+    // ---- JSON baseline ---------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_frontend.json".into());
+    let mut o = Object::new();
+    o.insert("bench", "frontend");
+    o.insert("quick", quick);
+    o.insert("n_http_workers", n_workers);
+    o.insert("n_event_loops", n_event_loops);
+    o.insert("server_threads", server_threads);
+    o.insert("blocking", lat_json(&bl_lat));
+    o.insert("evented", lat_json(&ev_lat));
+    o.insert("topk_identical", true);
+    let mut sweep = Object::new();
+    sweep.insert("idle_conns", idle_target);
+    sweep.insert("active_conns", active_target);
+    sweep.insert("rss_per_idle_conn_bytes", rss_per_conn);
+    sweep.insert("latency", lat_json(&sweep_lat));
+    o.insert("sweep", Value::Obj(sweep));
+    let mut slow = Object::new();
+    slow.insert("injected", 16u64);
+    slow.insert("scoring_jobs_from_slow_clients", 0u64);
+    o.insert("slow_clients", Value::Obj(slow));
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
 }

@@ -41,6 +41,13 @@ echo "== nearline churn (release) =="
 # write lock per drained batch.
 cargo test --release -q --test nearline_churn
 
+echo "== http front-end battery (release) =="
+# Blocking + evented front ends over the socket: keep-alive negotiation,
+# pipelining, fragmented reads, 431/413 protocol limits, slow-loris
+# timeouts, graceful drain with zero dropped replies, max_connections
+# rejection at accept, bitwise-identical responses across front ends.
+cargo test --release -q --test http_api
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -78,6 +85,21 @@ echo "== nearline_churn smoke (release, quick) =="
 # runs; quick uses a reduced floor).
 AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_nearline_churn_ci.json \
     cargo bench --bench nearline_churn
+
+echo "== frontend smoke (release, quick) =="
+# The front-end gates run for real in CI: bitwise top-K identity between
+# the blocking and the evented front end, exact thread budget (reactors
+# + workers, nothing more), flat per-idle-connection memory over the
+# 1k-idle quick sweep, slow clients never reaching a scoring worker.
+# Emits BENCH_frontend.json.  The idle sweep needs ~2 fds per
+# connection; we raise the soft limit best-effort — when the environment
+# caps `ulimit -n` lower, the bench logs the cap and self-scales the
+# sweep instead of failing.
+ulimit -n 32768 2>/dev/null \
+    || echo "ulimit -n 32768 unavailable; idle sweep self-scales"
+AIF_QUICK=1 AIF_FRONTEND_ONLY=1 \
+    AIF_BENCH_OUT=/tmp/BENCH_frontend_ci.json \
+    cargo bench --bench e2e_throughput
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

@@ -178,6 +178,85 @@ fn parse_nearline(nl: &Value, out: &mut NearlineConfig) -> Result<()> {
     Ok(())
 }
 
+/// HTTP front-end knobs (DESIGN.md §18).  The default is the evented
+/// reactor front end; `mode = "blocking"` keeps the thread-pool path
+/// for A/B comparison (non-unix builds always fall back to blocking).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontendConfig {
+    /// "evented" (default) or "blocking".
+    pub mode: String,
+    /// Reactor threads owning the sockets (evented mode).
+    pub n_event_loops: usize,
+    /// Open-connection ceiling; connections past it are refused at
+    /// accept (`rejected_capacity` in `/metrics`).
+    pub max_connections: usize,
+    /// Requests served per connection before keep-alive is withdrawn
+    /// (0 = unlimited).
+    pub keepalive_max_requests: usize,
+    /// Timeout ladder: parked keep-alive connections close after this
+    /// long with no bytes.
+    pub idle_timeout_ms: u64,
+    /// From a request's first byte until its head completes (408).
+    pub header_timeout_ms: u64,
+    /// From a request's first byte until its body completes (408).
+    pub body_timeout_ms: u64,
+    /// Listener accept backlog (applied via `listen(2)`).
+    pub accept_backlog: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            mode: "evented".into(),
+            n_event_loops: 2,
+            max_connections: 16_384,
+            keepalive_max_requests: 1000,
+            idle_timeout_ms: 30_000,
+            header_timeout_ms: 5_000,
+            body_timeout_ms: 10_000,
+            accept_backlog: 1024,
+        }
+    }
+}
+
+fn parse_frontend(fe: &Value, out: &mut FrontendConfig) -> Result<()> {
+    if let Some(x) = fe.get("mode").and_then(Value::as_str) {
+        match x {
+            "evented" | "blocking" => out.mode = x.to_string(),
+            other => {
+                anyhow::bail!(
+                    "unknown frontend mode {other:?} (evented|blocking)"
+                )
+            }
+        }
+    }
+    if let Some(x) = fe.get("n_event_loops").and_then(Value::as_f64) {
+        out.n_event_loops = (x as usize).max(1);
+    }
+    if let Some(x) = fe.get("max_connections").and_then(Value::as_f64) {
+        out.max_connections = (x as usize).max(1);
+    }
+    if let Some(x) =
+        fe.get("keepalive_max_requests").and_then(Value::as_f64)
+    {
+        out.keepalive_max_requests = x as usize;
+    }
+    if let Some(x) = fe.get("idle_timeout_ms").and_then(Value::as_f64) {
+        out.idle_timeout_ms = x as u64;
+    }
+    if let Some(x) = fe.get("header_timeout_ms").and_then(Value::as_f64)
+    {
+        out.header_timeout_ms = x as u64;
+    }
+    if let Some(x) = fe.get("body_timeout_ms").and_then(Value::as_f64) {
+        out.body_timeout_ms = x as u64;
+    }
+    if let Some(x) = fe.get("accept_backlog").and_then(Value::as_f64) {
+        out.accept_backlog = (x as usize).max(1);
+    }
+    Ok(())
+}
+
 /// One named scenario served by the shared [`ServingCore`]: the
 /// scenario-*specific* knobs only (variant, SIM handling, candidate count,
 /// result size, dispatch-layer coalescing).  Everything else — fleet size,
@@ -325,6 +404,10 @@ pub struct ServingConfig {
     /// Streaming nearline update queue (ISSUE 7 tentpole).
     pub nearline: NearlineConfig,
 
+    /// HTTP front end: evented reactor vs blocking pool (ISSUE 8
+    /// tentpole).
+    pub frontend: FrontendConfig,
+
     pub artifacts_dir: String,
 
     /// Named scenario blocks served over ONE shared core.  Empty (the
@@ -384,6 +467,7 @@ impl Default for ServingConfig {
             coalesce: CoalesceConfig::default(),
             storage: StorageConfig::default(),
             nearline: NearlineConfig::default(),
+            frontend: FrontendConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
             default_scenario: None,
@@ -438,6 +522,9 @@ impl ServingConfig {
         }
         if let Some(nl) = get("nearline") {
             parse_nearline(nl, &mut c.nearline)?;
+        }
+        if let Some(fe) = get("frontend") {
+            parse_frontend(fe, &mut c.frontend)?;
         }
         // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
         // Each block starts from the flat fields and overrides.
@@ -712,6 +799,49 @@ mod tests {
         let v =
             Value::parse(r#"{"nearline": {"policy": "drop-newest"}}"#)
                 .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn frontend_defaults_evented_and_parses() {
+        let c = ServingConfig::default();
+        assert_eq!(c.frontend.mode, "evented");
+        assert_eq!(c.frontend.n_event_loops, 2);
+        assert_eq!(c.frontend.max_connections, 16_384);
+        assert_eq!(c.frontend.keepalive_max_requests, 1000);
+        assert_eq!(c.frontend.idle_timeout_ms, 30_000);
+        assert_eq!(c.frontend.header_timeout_ms, 5_000);
+        assert_eq!(c.frontend.body_timeout_ms, 10_000);
+        assert_eq!(c.frontend.accept_backlog, 1024);
+
+        let v = Value::parse(
+            r#"{"frontend": {"mode": "blocking", "n_event_loops": 4,
+                 "max_connections": 64, "keepalive_max_requests": 0,
+                 "idle_timeout_ms": 100, "header_timeout_ms": 50,
+                 "body_timeout_ms": 75, "accept_backlog": 8}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.frontend.mode, "blocking");
+        assert_eq!(c.frontend.n_event_loops, 4);
+        assert_eq!(c.frontend.max_connections, 64);
+        assert_eq!(c.frontend.keepalive_max_requests, 0);
+        assert_eq!(c.frontend.idle_timeout_ms, 100);
+        assert_eq!(c.frontend.header_timeout_ms, 50);
+        assert_eq!(c.frontend.body_timeout_ms, 75);
+        assert_eq!(c.frontend.accept_backlog, 8);
+
+        // Partial blocks keep remaining defaults; floors apply.
+        let v = Value::parse(
+            r#"{"frontend": {"n_event_loops": 0}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.frontend.n_event_loops, 1, "floor of 1 loop");
+        assert_eq!(c.frontend.mode, "evented");
+
+        let v = Value::parse(r#"{"frontend": {"mode": "fibers"}}"#)
+            .unwrap();
         assert!(ServingConfig::from_json(&v).is_err());
     }
 

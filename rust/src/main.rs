@@ -73,7 +73,11 @@ fn usage() {
          nearline churn: [--nearline-queue-capacity ITEMS] \
          [--nearline-policy block|reject] [--nearline-max-batch ROWS] \
          [--nearline-linger-ms MS] [--nearline-retry-limit N] \
-         [--nearline-hot-min-touches N] [--nearline-compact-every BATCHES]"
+         [--nearline-hot-min-touches N] [--nearline-compact-every BATCHES]\n\
+         front end: [--frontend evented|blocking] [--event-loops N] \
+         [--max-connections N] [--keepalive-max-requests N] \
+         [--idle-timeout-ms MS] [--header-timeout-ms MS] \
+         [--body-timeout-ms MS] [--accept-backlog N] [--http-workers N]"
     );
 }
 
@@ -123,6 +127,33 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
     nearline.compact_every = args
         .usize_or("nearline-compact-every", nearline.compact_every as usize)
         as u64;
+    let mut frontend = cfg.frontend.clone();
+    if let Some(mode) = args.get("frontend") {
+        anyhow::ensure!(
+            mode == "evented" || mode == "blocking",
+            "unknown --frontend {mode:?} (evented|blocking)"
+        );
+        frontend.mode = mode.to_string();
+    }
+    frontend.n_event_loops =
+        args.usize_or("event-loops", frontend.n_event_loops).max(1);
+    frontend.max_connections = args
+        .usize_or("max-connections", frontend.max_connections)
+        .max(1);
+    frontend.keepalive_max_requests = args
+        .usize_or("keepalive-max-requests", frontend.keepalive_max_requests);
+    frontend.idle_timeout_ms = args
+        .usize_or("idle-timeout-ms", frontend.idle_timeout_ms as usize)
+        as u64;
+    frontend.header_timeout_ms = args
+        .usize_or("header-timeout-ms", frontend.header_timeout_ms as usize)
+        as u64;
+    frontend.body_timeout_ms = args
+        .usize_or("body-timeout-ms", frontend.body_timeout_ms as usize)
+        as u64;
+    frontend.accept_backlog = args
+        .usize_or("accept-backlog", frontend.accept_backlog)
+        .max(1);
     let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -142,6 +173,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         coalesce,
         storage,
         nearline,
+        frontend,
         ..cfg
     };
     // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`
@@ -246,19 +278,22 @@ fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = resolve_cfg(args)?;
     let n_http_workers = cfg.n_http_workers;
+    let frontend = cfg.frontend.clone();
     let merger = build_merger_from(cfg)?;
     let addr = args.str_or("addr", "127.0.0.1:8787");
     let admin: Arc<dyn ScenarioAdmin> = Arc::clone(&merger);
-    let server = aif::server::HttpServer::start_with_admin(
+    let server = aif::server::HttpServer::start_frontend(
         merger,
         Some(admin),
         &addr,
+        &frontend,
         n_http_workers,
     )?;
     println!(
-        "serving on http://{}  (try /v1/score?user=42&top_k=10, \
-         /v1/scenarios, /metrics, /healthz)",
-        server.addr
+        "serving on http://{}  ({} front end; try \
+         /v1/score?user=42&top_k=10, /v1/scenarios, /metrics, /healthz)",
+        server.addr,
+        server.frontend_stats().mode(),
     );
     println!("Ctrl-C to stop.");
     loop {

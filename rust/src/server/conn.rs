@@ -1,0 +1,558 @@
+//! Incremental HTTP/1.1 request parsing shared by BOTH front ends
+//! (DESIGN.md §18.2).
+//!
+//! [`RequestParser`] is a push-based state machine: bytes go in via
+//! [`RequestParser::push`] in whatever fragments the socket produced
+//! (byte-at-a-time, a whole pipeline of requests in one read — the
+//! framing is invariant under fragmentation, property-tested in
+//! `rust/tests/prop_invariants.rs`), and complete [`Request`]s come out
+//! of [`RequestParser::next`].  The parser enforces the protocol-level
+//! resource bounds — [`MAX_HEADER_BYTES`] (431) and [`MAX_BODY_BYTES`]
+//! (413) — so a slow or hostile client is refused *before* any scoring
+//! worker sees it.  Keep-alive negotiation
+//! ([`Request::keep_alive_requested`]) is the one shared helper both the
+//! blocking and the evented front end use to decide the `Connection`
+//! response header.
+
+/// Largest accepted request head (request line + headers), bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Largest accepted request body, bytes.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One fully parsed HTTP request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    /// Raw request target (`/v1/score?user=1`).
+    pub target: String,
+    /// `true` for `HTTP/1.0` (default close), `false` for `HTTP/1.1`.
+    pub http10: bool,
+    /// Header (name, value) pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `target` split into (path, query).
+    pub fn path_query(&self) -> (&str, &str) {
+        match self.target.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (self.target.as_str(), ""),
+        }
+    }
+
+    /// The ONE keep-alive negotiation rule, shared by both front ends
+    /// (ISSUE 8 satellite): an explicit `Connection: close` wins, an
+    /// explicit `keep-alive` token wins next, otherwise the HTTP
+    /// version decides (1.1 defaults open, 1.0 defaults close).
+    pub fn keep_alive_requested(&self) -> bool {
+        keep_alive(self.http10, self.header("connection"))
+    }
+}
+
+/// See [`Request::keep_alive_requested`]; exposed standalone so tests
+/// and the property suite can drive the table directly.
+pub fn keep_alive(http10: bool, connection: Option<&str>) -> bool {
+    if let Some(v) = connection {
+        let has = |tok: &str| {
+            v.split(',').any(|t| t.trim().eq_ignore_ascii_case(tok))
+        };
+        if has("close") {
+            return false;
+        }
+        if has("keep-alive") {
+            return true;
+        }
+    }
+    !http10
+}
+
+/// Protocol-level parse failure: the HTTP status to answer with before
+/// closing, plus a human-readable reason.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl ParseError {
+    fn new(status: u16, message: impl Into<String>) -> ParseError {
+        ParseError {
+            status,
+            message: message.into(),
+        }
+    }
+}
+
+/// Head fields carried while the body is still streaming in.
+#[derive(Debug)]
+struct PendingHead {
+    method: String,
+    target: String,
+    http10: bool,
+    headers: Vec<(String, String)>,
+    body_len: usize,
+    expects_continue: bool,
+}
+
+#[derive(Debug)]
+enum State {
+    /// Scanning for the end of the request head.
+    Head,
+    /// Head parsed; accumulating `body_len` body bytes.
+    Body(PendingHead),
+    /// A protocol error was reported; the connection is done.
+    Failed,
+}
+
+/// Push-based incremental request parser (one per connection).
+#[derive(Debug)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    /// Resume offset for the head-terminator scan (no O(n²) rescans).
+    scan: usize,
+    state: State,
+    /// Set when a head with `Expect: 100-continue` is parsed and its
+    /// body has not fully arrived; cleared by [`take_continue`].
+    ///
+    /// [`take_continue`]: RequestParser::take_continue
+    wants_continue: bool,
+    /// Requests fully parsed so far (keep-alive bookkeeping).
+    parsed: u64,
+}
+
+impl Default for RequestParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser {
+            buf: Vec::new(),
+            scan: 0,
+            state: State::Head,
+            wants_continue: false,
+            parsed: 0,
+        }
+    }
+
+    /// Feed bytes exactly as they came off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed into a request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// A request has started arriving but is not complete yet — drives
+    /// the header/body rungs of the reactor's timeout ladder.
+    pub fn mid_request(&self) -> bool {
+        match self.state {
+            State::Head => !self.buf.is_empty(),
+            State::Body(_) => true,
+            State::Failed => false,
+        }
+    }
+
+    /// Headers are complete and body bytes are still outstanding.
+    pub fn in_body(&self) -> bool {
+        matches!(self.state, State::Body(_))
+    }
+
+    /// Total requests this parser has emitted.
+    pub fn parsed_requests(&self) -> u64 {
+        self.parsed
+    }
+
+    /// True exactly once after a head with `Expect: 100-continue`
+    /// arrives whose body is still pending: the caller owes the client
+    /// an interim `100 Continue` before more body bytes will come.
+    pub fn take_continue(&mut self) -> bool {
+        std::mem::take(&mut self.wants_continue)
+    }
+
+    /// Advance: `Ok(Some(_))` for each complete request (call until
+    /// `Ok(None)` to drain pipelined requests), `Ok(None)` when more
+    /// bytes are needed, `Err(_)` on a protocol violation (terminal:
+    /// answer with `status` and close).
+    pub fn next(&mut self) -> Result<Option<Request>, ParseError> {
+        loop {
+            match &mut self.state {
+                State::Failed => {
+                    return Err(ParseError::new(400, "connection failed"))
+                }
+                State::Head => {
+                    let Some((head_end, body_start)) =
+                        find_head_end(&self.buf, &mut self.scan)
+                    else {
+                        if self.buf.len() > MAX_HEADER_BYTES {
+                            return Err(self.fail(ParseError::new(
+                                431,
+                                format!(
+                                    "request head exceeds {MAX_HEADER_BYTES} \
+                                     bytes"
+                                ),
+                            )));
+                        }
+                        return Ok(None);
+                    };
+                    let head = match parse_head(&self.buf[..head_end]) {
+                        Ok(h) => h,
+                        Err(e) => return Err(self.fail(e)),
+                    };
+                    self.buf.drain(..body_start);
+                    self.scan = 0;
+                    if head.expects_continue
+                        && head.body_len > self.buf.len()
+                    {
+                        self.wants_continue = true;
+                    }
+                    self.state = State::Body(head);
+                }
+                State::Body(head) => {
+                    if self.buf.len() < head.body_len {
+                        return Ok(None);
+                    }
+                    let body: Vec<u8> =
+                        self.buf.drain(..head.body_len).collect();
+                    self.scan = 0;
+                    self.wants_continue = false;
+                    let State::Body(head) =
+                        std::mem::replace(&mut self.state, State::Head)
+                    else {
+                        unreachable!()
+                    };
+                    self.parsed += 1;
+                    return Ok(Some(Request {
+                        method: head.method,
+                        target: head.target,
+                        http10: head.http10,
+                        headers: head.headers,
+                        body,
+                    }));
+                }
+            }
+        }
+    }
+
+    fn fail(&mut self, e: ParseError) -> ParseError {
+        self.state = State::Failed;
+        self.buf.clear();
+        e
+    }
+}
+
+/// Find the head terminator (`\r\n\r\n`, or the lenient `\n\n`):
+/// returns (head length, offset where the body starts).  `scan` resumes
+/// where the previous call left off.
+fn find_head_end(
+    buf: &[u8],
+    scan: &mut usize,
+) -> Option<(usize, usize)> {
+    let start = scan.saturating_sub(3);
+    for i in start..buf.len() {
+        if buf[i] == b'\n' {
+            if i >= 3 && &buf[i - 3..=i] == b"\r\n\r\n" {
+                *scan = 0;
+                return Some((i - 3, i + 1));
+            }
+            if i >= 1 && buf[i - 1] == b'\n' {
+                *scan = 0;
+                return Some((i - 1, i + 1));
+            }
+        }
+    }
+    *scan = buf.len();
+    None
+}
+
+fn parse_head(head: &[u8]) -> Result<PendingHead, ParseError> {
+    let text = std::str::from_utf8(head).map_err(|_| {
+        ParseError::new(400, "request head is not valid UTF-8")
+    })?;
+    let mut lines = text.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(ParseError::new(
+            400,
+            format!("malformed request line {request_line:?}"),
+        ));
+    };
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        other => {
+            return Err(ParseError::new(
+                505,
+                format!("unsupported protocol version {other:?}"),
+            ))
+        }
+    };
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut body_len: Option<usize> = None;
+    let mut expects_continue = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ParseError::new(
+                400,
+                format!("malformed header line {line:?}"),
+            ));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        match name.as_str() {
+            "content-length" => {
+                let n: usize = value.parse().map_err(|_| {
+                    ParseError::new(
+                        400,
+                        format!("bad Content-Length {value:?}"),
+                    )
+                })?;
+                if let Some(prev) = body_len {
+                    if prev != n {
+                        return Err(ParseError::new(
+                            400,
+                            "conflicting Content-Length headers",
+                        ));
+                    }
+                }
+                if n > MAX_BODY_BYTES {
+                    return Err(ParseError::new(
+                        413,
+                        format!(
+                            "request body of {n} bytes exceeds the \
+                             {MAX_BODY_BYTES}-byte limit"
+                        ),
+                    ));
+                }
+                body_len = Some(n);
+            }
+            "transfer-encoding" => {
+                return Err(ParseError::new(
+                    501,
+                    "transfer encodings are not supported; send \
+                     Content-Length",
+                ));
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expects_continue = true;
+                }
+            }
+            _ => {}
+        }
+        headers.push((name, value));
+    }
+    Ok(PendingHead {
+        method: method.to_string(),
+        target: target.to_string(),
+        http10,
+        headers,
+        body_len: body_len.unwrap_or(0),
+        expects_continue,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(parser: &mut RequestParser) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = parser.next().expect("valid stream") {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn whole_request_in_one_push() {
+        let mut p = RequestParser::new();
+        p.push(b"GET /v1/score?user=1 HTTP/1.1\r\nHost: t\r\n\r\n");
+        let reqs = parse_all(&mut p);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].method, "GET");
+        assert_eq!(reqs[0].path_query(), ("/v1/score", "user=1"));
+        assert!(!reqs[0].http10);
+        assert!(reqs[0].body.is_empty());
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn byte_at_a_time_fragmentation() {
+        let raw = b"POST /v1/score HTTP/1.1\r\nContent-Length: 11\r\n\
+                    Content-Type: application/json\r\n\r\n{\"user\": 1}";
+        let mut p = RequestParser::new();
+        let mut got = Vec::new();
+        for b in raw.iter() {
+            p.push(std::slice::from_ref(b));
+            got.extend(parse_all(&mut p));
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].body, b"{\"user\": 1}");
+        assert_eq!(got[0].header("content-type"), Some("application/json"));
+        assert!(!p.mid_request(), "parser returns to idle");
+    }
+
+    #[test]
+    fn pipelined_requests_in_one_read() {
+        let mut p = RequestParser::new();
+        p.push(
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\n\
+              Content-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\n\r\n",
+        );
+        let reqs = parse_all(&mut p);
+        let targets: Vec<&str> =
+            reqs.iter().map(|r| r.target.as_str()).collect();
+        assert_eq!(targets, ["/a", "/b", "/c"]);
+        assert_eq!(reqs[1].body, b"hi");
+    }
+
+    #[test]
+    fn mid_request_and_in_body_phases() {
+        let mut p = RequestParser::new();
+        assert!(!p.mid_request());
+        p.push(b"GET / HT");
+        assert!(p.next().unwrap().is_none());
+        assert!(p.mid_request() && !p.in_body());
+        p.push(b"TP/1.1\r\nContent-Length: 4\r\n\r\nab");
+        assert!(p.next().unwrap().is_none());
+        assert!(p.in_body());
+        p.push(b"cd");
+        assert!(p.next().unwrap().is_some());
+        assert!(!p.mid_request());
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut p = RequestParser::new();
+        p.push(b"GET / HTTP/1.1\r\nX-Pad: ");
+        // Never terminate the head; the parser must refuse at the bound.
+        let pad = vec![b'a'; MAX_HEADER_BYTES + 16];
+        p.push(&pad);
+        let e = p.next().unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_before_any_body_byte() {
+        let mut p = RequestParser::new();
+        p.push(
+            format!(
+                "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            )
+            .as_bytes(),
+        );
+        let e = p.next().unwrap_err();
+        assert_eq!(e.status, 413);
+    }
+
+    #[test]
+    fn protocol_violations_map_to_statuses() {
+        for (raw, status) in [
+            ("GET /\r\n\r\n", 400u16),
+            ("GET / HTTP/2.0\r\n\r\n", 505),
+            ("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+            ("GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),
+            (
+                "GET / HTTP/1.1\r\nContent-Length: 1\r\n\
+                 Content-Length: 2\r\n\r\n",
+                400,
+            ),
+            (
+                "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                501,
+            ),
+        ] {
+            let mut p = RequestParser::new();
+            p.push(raw.as_bytes());
+            let e = p.next().unwrap_err();
+            assert_eq!(e.status, status, "{raw:?}");
+            // Terminal: the parser stays failed.
+            assert!(p.next().is_err(), "{raw:?} must stay failed");
+        }
+    }
+
+    #[test]
+    fn lenient_bare_lf_framing() {
+        let mut p = RequestParser::new();
+        p.push(b"GET /lf HTTP/1.1\nHost: t\n\n");
+        let reqs = parse_all(&mut p);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].target, "/lf");
+    }
+
+    #[test]
+    fn expect_continue_fires_once_and_only_with_pending_body() {
+        let mut p = RequestParser::new();
+        p.push(
+            b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\
+              Expect: 100-continue\r\n\r\n",
+        );
+        assert!(p.next().unwrap().is_none());
+        assert!(p.take_continue(), "continue owed once");
+        assert!(!p.take_continue(), "and only once");
+        p.push(b"body");
+        assert!(p.next().unwrap().is_some());
+
+        // Body already buffered with the head: no interim response owed.
+        let mut p = RequestParser::new();
+        p.push(
+            b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\
+              Expect: 100-continue\r\n\r\nok",
+        );
+        assert!(p.next().unwrap().is_some());
+        assert!(!p.take_continue());
+    }
+
+    #[test]
+    fn keep_alive_negotiation_table() {
+        // (http10, connection header, expected)
+        for (http10, conn, want) in [
+            (false, None, true),
+            (true, None, false),
+            (false, Some("close"), false),
+            (false, Some("Close"), false),
+            (true, Some("keep-alive"), true),
+            (true, Some("Keep-Alive"), true),
+            (false, Some("keep-alive"), true),
+            (false, Some("upgrade, close"), false),
+            (true, Some("something-else"), false),
+            (false, Some("something-else"), true),
+        ] {
+            assert_eq!(
+                keep_alive(http10, conn),
+                want,
+                "http10={http10} conn={conn:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parsed_requests_counts() {
+        let mut p = RequestParser::new();
+        p.push(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n");
+        let _ = parse_all(&mut p);
+        assert_eq!(p.parsed_requests(), 2);
+    }
+}

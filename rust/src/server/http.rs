@@ -1,5 +1,5 @@
 //! Versioned HTTP/1.1 surface over any [`PreRanker`] (no hyper in the
-//! vendored set; DESIGN.md §10.4):
+//! vendored set; DESIGN.md §10.4, §18):
 //!
 //! * `GET  /healthz` — liveness: answers 200 whenever the process can
 //!   accept connections, even mid warm boot.
@@ -8,220 +8,299 @@
 //!   current state (`restoring`, `replaying`, `verifying`, `building`)
 //!   while a warm or cold boot is still in flight.
 //! * `GET  /metrics` — JSON metrics snapshot, including the `coalesce`
-//!   block (merged executions, rows/jobs per execution, queue-wait
-//!   percentiles) when the pipeline runs the cross-request coalescer —
-//!   zeros otherwise.
+//!   block when the pipeline runs the cross-request coalescer and a
+//!   `frontend` block (connections, keep-alive reuse, timeouts, queue
+//!   depth) for whichever front end is serving.
 //! * `GET  /v1/score?user=<id>[&top_k=K][&trace=1][&deadline_ms=D]`
 //!   `[&scenario=NAME]`
 //! * `POST /v1/score` — JSON `ScoreRequest` body; `{"users": [..]}`
 //!   batches share the optional knobs and answer `{"results": [..]}`.
 //!
-//! Multi-scenario services ([`ScenarioAdmin`]) additionally expose:
+//! Multi-scenario services ([`ScenarioAdmin`]) additionally expose
+//! `GET /v1/scenarios`, `POST /v1/scenarios/{name}/reload`,
+//! `GET /v1/storage` and `POST /v1/checkpoint`.
 //!
-//! * `GET  /v1/scenarios` — registered scenarios (name, variant, default
-//!   flag, reload generation, served requests).
-//! * `POST /v1/scenarios/{name}/reload` — hot-reload one scenario (RCU
-//!   swap; in-flight requests finish on the old engine).
-//! * `GET  /v1/storage` — durable-store counters (404 when no backend
-//!   is configured).
-//! * `POST /v1/checkpoint` — force a checkpoint now; answers with the
-//!   outcome (`full`/`delta`/`meta_only`/`skipped`) and fresh counters.
-//! * per-scenario blocks under `"scenarios"` in `/metrics`, plus a
-//!   `storage` block when a durable backend is configured.
+//! Two front ends serve this surface over ONE shared application layer
+//! ([`dispatch`]) and ONE shared incremental parser
+//! ([`crate::server::conn`]), so their responses are bitwise-identical
+//! by construction:
 //!
-//! [`ServeError`] variants map to statuses via `ServeError::http_status`
-//! (404 unknown user, 504 deadline, 400 bad request, 429 overload, 500
-//! internal).  Malformed JSON is 400; a well-formed body whose shape is
-//! invalid at parse time is 422 (semantic validation inside the pipeline
-//! — e.g. an out-of-range candidate id — still maps through
-//! `http_status`, i.e. 400).  Connections are served by a bounded
-//! [`ThreadPool`] (`n_http_workers` in `ServingConfig`) instead of a
-//! thread per connection; past a queue-depth bound the accept loop sheds
-//! load with 429 instead of queueing unboundedly.
+//! * **blocking** (`FrontendConfig.mode = "blocking"`): a bounded
+//!   [`ThreadPool`] where each connection occupies a worker for its
+//!   lifetime.  Keep-alive is honored (budgeted by
+//!   `keepalive_max_requests`), slow clients are cut by the
+//!   header/body/idle timeout ladder, and past a queue-depth bound the
+//!   accept loop sheds load with 429.
+//! * **evented** (`"evented"`, default; `server::reactor`): a handful
+//!   of event-loop threads own every socket via non-blocking
+//!   readiness polling; parsed requests are handed to `n_http_workers`
+//!   scoring workers through a bounded job queue.  10k+ idle
+//!   connections cost no threads.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::FrontendConfig;
 use crate::coordinator::{
     PreRanker, ScenarioAdmin, ScoreRequest, ServeError,
 };
+use crate::server::conn::{Request, RequestParser};
 use crate::util::json::{Object, Value};
 use crate::util::threadpool::ThreadPool;
 
-/// Largest accepted request body, bytes.
-const MAX_BODY_BYTES: usize = 1 << 20;
 /// Largest `users` batch in one POST.
 const MAX_BATCH_USERS: usize = 256;
-/// Connections in flight per worker beyond which new ones get 429.
-const OVERLOAD_QUEUE_FACTOR: usize = 8;
-/// Socket read/write timeout: a stalled client can hold a pool worker
-/// for at most this long (and can never wedge shutdown joins).
+/// Connections in flight per blocking worker beyond which new ones get
+/// 429 (also the per-worker bound of the evented job queue).
+pub(crate) const OVERLOAD_QUEUE_FACTOR: usize = 8;
+/// Blocking-mode read slice: how often a parked keep-alive worker
+/// re-checks its timeout ladder and the drain flag.
+const BLOCKING_POLL: Duration = Duration::from_millis(100);
+/// Socket write timeout of the blocking path.
 const IO_TIMEOUT: Duration = Duration::from_secs(5);
 
-pub struct HttpServer {
-    pub addr: String,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+// ---------------------------------------------------------------------
+// Front-end counters (the `frontend` block of /metrics)
+// ---------------------------------------------------------------------
+
+/// Shared counters for whichever front end is serving.  Everything is a
+/// monotonic count except `open`/`queue_depth` (gauges).
+#[derive(Debug)]
+pub struct FrontendStats {
+    mode: &'static str,
+    pub accepted: AtomicU64,
+    pub open: AtomicUsize,
+    pub open_peak: AtomicUsize,
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub keepalive_reuses: AtomicU64,
+    /// 429s shed because the worker pool / job queue was saturated.
+    pub shed_overload: AtomicU64,
+    /// Connections refused at accept because `max_connections` was hit.
+    pub rejected_capacity: AtomicU64,
+    pub parse_errors: AtomicU64,
+    pub timed_out_idle: AtomicU64,
+    pub timed_out_header: AtomicU64,
+    pub timed_out_body: AtomicU64,
+    pub timed_out_write: AtomicU64,
+    /// Readiness wakeups delivered by the poller (evented mode only).
+    pub read_wakeups: AtomicU64,
+    pub write_wakeups: AtomicU64,
+    /// Parsed requests waiting for a scoring worker (evented mode).
+    pub queue_depth: AtomicUsize,
+    pub jobs_submitted: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
 }
 
-impl HttpServer {
-    /// Bind and serve in a background thread.  `addr` like "127.0.0.1:0"
-    /// (port 0 = ephemeral; the bound address is in `.addr`).  Connection
-    /// handling runs on a pool of `n_workers` threads.
-    pub fn start(
-        ranker: Arc<dyn PreRanker>,
-        addr: &str,
-        n_workers: usize,
-    ) -> Result<HttpServer> {
-        Self::start_with_admin(ranker, None, addr, n_workers)
-    }
-
-    /// Same, with the multi-scenario admin surface attached
-    /// (`/v1/scenarios`, reload endpoint, per-scenario `/metrics`).
-    pub fn start_with_admin(
-        ranker: Arc<dyn PreRanker>,
-        admin: Option<Arc<dyn ScenarioAdmin>>,
-        addr: &str,
-        n_workers: usize,
-    ) -> Result<HttpServer> {
-        let listener = TcpListener::bind(addr)?;
-        let bound = listener.local_addr()?.to_string();
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let started = Instant::now();
-        let n_workers = n_workers.max(1);
-        let handle = std::thread::Builder::new()
-            .name("aif-http".into())
-            .spawn(move || {
-                let pool = ThreadPool::new(n_workers);
-                let overload_at = n_workers * OVERLOAD_QUEUE_FACTOR;
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if pool.in_flight() >= overload_at {
-                                // Shed load here in the accept thread —
-                                // never queue more than the pool can
-                                // drain promptly.
-                                let e = ServeError::Overloaded(format!(
-                                    "{} connections in flight",
-                                    pool.in_flight()
-                                ));
-                                shed(stream, &e);
-                                continue;
-                            }
-                            let ranker = Arc::clone(&ranker);
-                            let admin = admin.clone();
-                            pool.spawn(move || {
-                                let _ = handle_conn(
-                                    stream,
-                                    ranker.as_ref(),
-                                    admin.as_deref(),
-                                    started,
-                                );
-                            });
-                        }
-                        Err(ref e)
-                            if e.kind()
-                                == std::io::ErrorKind::WouldBlock =>
-                        {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                // `pool` drops here: in-flight connections drain, workers
-                // join.
-            })?;
-        Ok(HttpServer {
-            addr: bound,
-            stop,
-            handle: Some(handle),
-        })
-    }
-
-    /// The one stop path shared by `shutdown` and `Drop`.
-    fn stop_and_join(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+impl FrontendStats {
+    pub fn new(mode: &'static str) -> FrontendStats {
+        FrontendStats {
+            mode,
+            accepted: AtomicU64::new(0),
+            open: AtomicUsize::new(0),
+            open_peak: AtomicUsize::new(0),
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            keepalive_reuses: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
+            rejected_capacity: AtomicU64::new(0),
+            parse_errors: AtomicU64::new(0),
+            timed_out_idle: AtomicU64::new(0),
+            timed_out_header: AtomicU64::new(0),
+            timed_out_body: AtomicU64::new(0),
+            timed_out_write: AtomicU64::new(0),
+            read_wakeups: AtomicU64::new(0),
+            write_wakeups: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            jobs_submitted: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
         }
     }
 
-    pub fn shutdown(mut self) {
-        self.stop_and_join();
+    pub fn mode(&self) -> &'static str {
+        self.mode
+    }
+
+    /// Track the `open` gauge and its high-water mark together.
+    pub fn conn_opened(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        let now = self.open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.open_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        o.insert("mode", self.mode);
+        o.insert("accepted", g(&self.accepted));
+        o.insert("open", self.open.load(Ordering::Relaxed) as u64);
+        o.insert(
+            "open_peak",
+            self.open_peak.load(Ordering::Relaxed) as u64,
+        );
+        o.insert("requests", g(&self.requests));
+        o.insert("responses", g(&self.responses));
+        o.insert("keepalive_reuses", g(&self.keepalive_reuses));
+        o.insert("shed_overload", g(&self.shed_overload));
+        o.insert("rejected_capacity", g(&self.rejected_capacity));
+        o.insert("parse_errors", g(&self.parse_errors));
+        let mut t = Object::new();
+        t.insert("idle", g(&self.timed_out_idle));
+        t.insert("header", g(&self.timed_out_header));
+        t.insert("body", g(&self.timed_out_body));
+        t.insert("write", g(&self.timed_out_write));
+        o.insert("timed_out", Value::Obj(t));
+        o.insert("read_wakeups", g(&self.read_wakeups));
+        o.insert("write_wakeups", g(&self.write_wakeups));
+        o.insert(
+            "queue_depth",
+            self.queue_depth.load(Ordering::Relaxed) as u64,
+        );
+        o.insert("jobs_submitted", g(&self.jobs_submitted));
+        o.insert("bytes_in", g(&self.bytes_in));
+        o.insert("bytes_out", g(&self.bytes_out));
+        Value::Obj(o)
     }
 }
 
-impl Drop for HttpServer {
-    fn drop(&mut self) {
-        self.stop_and_join();
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+/// One application-level response, independent of the front end that
+/// writes it.  The `Connection` header is decided by the front end at
+/// serialization time ([`Response::serialize`]).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    /// `Allow` header for 405s.
+    pub allow: Option<&'static str>,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Value) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            allow: None,
+            body: v.to_string_pretty(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            allow: None,
+            body: body.to_string(),
+        }
+    }
+
+    /// All error bodies share one JSON shape:
+    /// `{"error": .., "status": ..}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &error_body(msg, status))
+    }
+
+    pub fn from_serve_error(e: &ServeError) -> Response {
+        Response::error(e.http_status(), &e.to_string())
+    }
+
+    fn method_not_allowed(allow: &'static str) -> Response {
+        let mut r = Response::error(405, "method not allowed");
+        r.allow = Some(allow);
+        r
+    }
+
+    /// Serialize head + body; `keep_alive` picks the `Connection`
+    /// response header (the negotiated result, not the request wish).
+    pub fn serialize(&self, keep_alive: bool) -> Vec<u8> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            reason_phrase(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        let mut out = Vec::with_capacity(
+            head.len() + self.body.len() + 32,
+        );
+        out.extend_from_slice(head.as_bytes());
+        if let Some(allow) = self.allow {
+            out.extend_from_slice(b"Allow: ");
+            out.extend_from_slice(allow.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(self.body.as_bytes());
+        out
     }
 }
 
-/// Overload path, run in the accept thread: best-effort and strictly
-/// non-blocking — overload must cost neither threads nor accept-loop
-/// stalls.  Drain whatever the client already buffered (usually the whole
-/// request, so the close doesn't RST the 429 away), write the canned
-/// reply, hang up.  A client that hasn't sent its request yet just gets
-/// the drop.
-fn shed(mut stream: TcpStream, e: &ServeError) {
-    if stream.set_nonblocking(true).is_err() {
-        return;
-    }
-    let mut sink = [0u8; 4096];
-    let _ = stream.read(&mut sink);
-    let _ = respond_error(&mut stream, e);
+fn error_body(msg: &str, status: u16) -> Value {
+    let mut o = Object::new();
+    o.insert("error", msg);
+    o.insert("status", status as u64);
+    Value::Obj(o)
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
+fn error_json(e: &ServeError) -> Value {
+    error_body(&e.to_string(), e.http_status())
+}
+
+pub(crate) fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared application layer
+// ---------------------------------------------------------------------
+
+/// Route one fully parsed request to the serving stack.  BOTH front
+/// ends call this and nothing else — response bodies are identical
+/// across front ends by construction.
+pub(crate) fn dispatch(
+    req: &Request,
     ranker: &dyn PreRanker,
     admin: Option<&dyn ScenarioAdmin>,
     started: Instant,
-) -> Result<()> {
-    stream.set_nonblocking(false)?;
-    // A silent or trickling client may hold this worker for at most
-    // IO_TIMEOUT — it must never wedge the pool (or the shutdown joins).
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
-    stream.set_write_timeout(Some(IO_TIMEOUT))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let target = parts.next().unwrap_or("/").to_string();
-    // Drain headers, keeping Content-Length and Expect.
-    let mut content_length = 0usize;
-    let mut expect_continue = false;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        if h == "\r\n" || h == "\n" || h.is_empty() {
-            break;
-        }
-        if let Some((name, value)) = h.split_once(':') {
-            let name = name.trim();
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().unwrap_or(0);
-            } else if name.eq_ignore_ascii_case("expect")
-                && value.trim().eq_ignore_ascii_case("100-continue")
-            {
-                expect_continue = true;
-            }
-        }
-    }
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p, q),
-        None => (target.as_str(), ""),
-    };
-    match (method.as_str(), path) {
-        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
+    frontend: &FrontendStats,
+) -> Response {
+    let (path, query) = req.path_query();
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => Response::text(200, "ok"),
         ("GET", "/readyz") => {
             // Liveness and readiness are deliberately split: /healthz
             // answers 200 during a warm boot (the process is alive),
@@ -241,49 +320,39 @@ fn handle_conn(
                 .and_then(|o| o.get("ready"))
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false);
-            let status = if ready { 200 } else { 503 };
-            respond(
-                &mut stream,
-                status,
-                "application/json",
-                &report.to_string_pretty(),
-            )
+            Response::json(if ready { 200 } else { 503 }, &report)
         }
         ("GET", "/metrics") => {
             let snap = ranker.metrics().snapshot(started.elapsed());
-            let body = match admin {
+            let Value::Obj(mut o) = snap else {
+                unreachable!("metrics snapshot is an object")
+            };
+            o.insert("frontend", frontend.to_json());
+            if let Some(a) = admin {
                 // Multi-scenario: default-scenario snapshot at the top
                 // level (compatibility) + one block per scenario.
-                Some(a) => {
-                    let Value::Obj(mut o) = snap else {
-                        unreachable!("metrics snapshot is an object")
-                    };
-                    let mut per = Object::new();
-                    for (name, snap) in
-                        a.scenario_metrics(started.elapsed())
-                    {
-                        per.insert(name, snap);
-                    }
-                    o.insert("default_scenario", a.default_scenario());
-                    o.insert("routing_errors", a.routing_errors());
-                    if let Some(arena) = a.arena_stats() {
-                        o.insert("arena", arena);
-                    }
-                    if let Some(uc) = a.user_cache_stats() {
-                        o.insert("user_cache", uc);
-                    }
-                    if let Some(st) = a.storage_stats() {
-                        o.insert("storage", st);
-                    }
-                    if let Some(nl) = a.nearline_stats() {
-                        o.insert("nearline", nl);
-                    }
-                    o.insert("scenarios", Value::Obj(per));
-                    Value::Obj(o).to_string_pretty()
+                let mut per = Object::new();
+                for (name, snap) in a.scenario_metrics(started.elapsed())
+                {
+                    per.insert(name, snap);
                 }
-                None => snap.to_string_pretty(),
-            };
-            respond(&mut stream, 200, "application/json", &body)
+                o.insert("default_scenario", a.default_scenario());
+                o.insert("routing_errors", a.routing_errors());
+                if let Some(arena) = a.arena_stats() {
+                    o.insert("arena", arena);
+                }
+                if let Some(uc) = a.user_cache_stats() {
+                    o.insert("user_cache", uc);
+                }
+                if let Some(st) = a.storage_stats() {
+                    o.insert("storage", st);
+                }
+                if let Some(nl) = a.nearline_stats() {
+                    o.insert("nearline", nl);
+                }
+                o.insert("scenarios", Value::Obj(per));
+            }
+            Response::json(200, &Value::Obj(o))
         }
         ("GET", "/v1/scenarios") => match admin {
             Some(a) => {
@@ -295,87 +364,48 @@ fn handle_conn(
                     .map(|s| s.to_json())
                     .collect();
                 o.insert("scenarios", Value::Arr(rows));
-                respond(
-                    &mut stream,
-                    200,
-                    "application/json",
-                    &Value::Obj(o).to_string_pretty(),
-                )
+                Response::json(200, &Value::Obj(o))
             }
-            None => respond_err_msg(
-                &mut stream,
+            None => Response::error(
                 404,
                 "this server does not expose a scenario registry",
             ),
         },
         ("GET", "/v1/storage") => {
             match admin.and_then(|a| a.storage_stats()) {
-                Some(stats) => respond(
-                    &mut stream,
-                    200,
-                    "application/json",
-                    &stats.to_string_pretty(),
-                ),
-                None => respond_err_msg(
-                    &mut stream,
-                    404,
-                    "no durable storage configured",
-                ),
+                Some(stats) => Response::json(200, &stats),
+                None => {
+                    Response::error(404, "no durable storage configured")
+                }
             }
         }
         ("POST", "/v1/checkpoint") => match admin {
             Some(a) => match a.trigger_checkpoint() {
-                Ok(v) => respond(
-                    &mut stream,
-                    200,
-                    "application/json",
-                    &v.to_string_pretty(),
-                ),
-                Err(e) => respond_error(&mut stream, &e),
+                Ok(v) => Response::json(200, &v),
+                Err(e) => Response::from_serve_error(&e),
             },
-            None => respond_err_msg(
-                &mut stream,
-                404,
-                "no durable storage configured",
-            ),
+            None => Response::error(404, "no durable storage configured"),
         },
         ("GET", "/v1/score") => match parse_query(query) {
-            Ok(req) => score_one(&mut stream, ranker, req),
-            Err(e) => respond_error(&mut stream, &e),
+            Ok(sreq) => score_one(ranker, sreq),
+            Err(e) => Response::from_serve_error(&e),
         },
         ("POST", "/v1/score") => {
-            if content_length == 0 {
-                return respond_err_msg(
-                    &mut stream,
+            if req.body.is_empty() {
+                return Response::error(
                     400,
                     "missing request body (Content-Length)",
                 );
             }
-            if content_length > MAX_BODY_BYTES {
-                return respond_err_msg(
-                    &mut stream,
-                    413,
-                    "request body too large",
-                );
-            }
-            if expect_continue {
-                // Standards-following clients (curl on >~1KiB bodies)
-                // wait for this interim response before sending the body.
-                write!(stream, "HTTP/1.1 100 Continue\r\n\r\n")?;
-            }
-            let mut body = vec![0u8; content_length];
-            reader.read_exact(&mut body)?;
-            let Ok(text) = String::from_utf8(body) else {
-                return respond_err_msg(
-                    &mut stream,
+            let Ok(text) = std::str::from_utf8(&req.body) else {
+                return Response::error(
                     400,
                     "request body is not UTF-8",
                 );
             };
-            match Value::parse(&text) {
-                Ok(v) => score_body(&mut stream, ranker, &v),
-                Err(e) => respond_err_msg(
-                    &mut stream,
+            match Value::parse(text) {
+                Ok(v) => score_body(ranker, &v),
+                Err(e) => Response::error(
                     400,
                     &format!("malformed JSON: {e}"),
                 ),
@@ -388,36 +418,30 @@ fn handle_conn(
                     Ok(info) => {
                         let mut o = Object::new();
                         o.insert("reloaded", info.to_json());
-                        respond(
-                            &mut stream,
-                            200,
-                            "application/json",
-                            &Value::Obj(o).to_string_pretty(),
-                        )
+                        Response::json(200, &Value::Obj(o))
                     }
-                    Err(e) => respond_error(&mut stream, &e),
+                    Err(e) => Response::from_serve_error(&e),
                 },
-                None => respond_err_msg(
-                    &mut stream,
+                None => Response::error(
                     404,
                     "this server does not expose a scenario registry",
                 ),
             }
         }
         (_, "/healthz") | (_, "/metrics") | (_, "/readyz")
-        | (_, "/v1/storage") => respond_405(&mut stream, "GET"),
-        (_, "/v1/checkpoint") => respond_405(&mut stream, "POST"),
-        (_, "/v1/score") => respond_405(&mut stream, "GET, POST"),
-        (_, "/v1/scenarios") => respond_405(&mut stream, "GET"),
+        | (_, "/v1/storage") => Response::method_not_allowed("GET"),
+        (_, "/v1/checkpoint") => Response::method_not_allowed("POST"),
+        (_, "/v1/score") => Response::method_not_allowed("GET, POST"),
+        (_, "/v1/scenarios") => Response::method_not_allowed("GET"),
         (_, p) if scenario_reload_target(p).is_some() => {
-            respond_405(&mut stream, "POST")
+            Response::method_not_allowed("POST")
         }
-        ("GET", "/score") => respond_err_msg(
-            &mut stream,
+        ("GET", "/score") => Response::error(
             404,
-            "the unversioned /score endpoint is gone; use /v1/score?user=<id>",
+            "the unversioned /score endpoint is gone; use \
+             /v1/score?user=<id>",
         ),
-        _ => respond_err_msg(&mut stream, 404, "not found"),
+        _ => Response::error(404, "not found"),
     }
 }
 
@@ -511,44 +535,40 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
 }
 
 /// Parsed `POST /v1/score` body: single request or `users` batch.
-fn score_body(
-    stream: &mut TcpStream,
-    ranker: &dyn PreRanker,
-    body: &Value,
-) -> Result<()> {
+fn score_body(ranker: &dyn PreRanker, body: &Value) -> Response {
+    let unprocessable = |msg: &str| Response::error(422, msg);
     let Some(obj) = body.as_obj() else {
-        return respond_422(stream, "body must be a JSON object");
+        return unprocessable("body must be a JSON object");
     };
     let Some(users_v) = obj.get("users") else {
         // Single-request form.
         return match ScoreRequest::from_json(body) {
-            Ok(req) => score_one(stream, ranker, req),
+            Ok(req) => score_one(ranker, req),
             // The body parsed as JSON but its shape is invalid -> 422.
             Err(e @ ServeError::BadRequest(_)) => {
-                respond_422(stream, &e.to_string())
+                unprocessable(&e.to_string())
             }
-            Err(e) => respond_error(stream, &e),
+            Err(e) => Response::from_serve_error(&e),
         };
     };
     // Batch form: {"users": [..], ...shared knobs...}.
     let Some(users) = users_v.as_arr() else {
-        return respond_422(stream, "\"users\" must be an array");
+        return unprocessable("\"users\" must be an array");
     };
     if users.is_empty() {
-        return respond_422(stream, "\"users\" must be non-empty");
+        return unprocessable("\"users\" must be non-empty");
     }
     if users.len() > MAX_BATCH_USERS {
-        return respond_422(
-            stream,
-            &format!("at most {MAX_BATCH_USERS} users per batch"),
-        );
+        return unprocessable(&format!(
+            "at most {MAX_BATCH_USERS} users per batch"
+        ));
     }
     if obj.contains("user") {
-        return respond_422(stream, "give either \"user\" or \"users\"");
+        return unprocessable("give either \"user\" or \"users\"");
     }
     let template = match ScoreRequest::options_from_json(obj) {
         Ok(t) => t,
-        Err(e) => return respond_422(stream, &e.to_string()),
+        Err(e) => return unprocessable(&e.to_string()),
     };
     let mut results: Vec<Value> = Vec::with_capacity(users.len());
     for u in users {
@@ -557,15 +577,14 @@ fn score_body(
             .filter(|x| *x >= 0.0 && x.fract() == 0.0)
             .map(|x| x as usize)
         else {
-            return respond_422(
-                stream,
+            return unprocessable(
                 "\"users\" entries must be non-negative integers",
             );
         };
         let mut req = template.clone();
         req.user = user;
-        // Per-user failures come back inline so one bad user doesn't void
-        // the whole batch.
+        // Per-user failures come back inline so one bad user doesn't
+        // void the whole batch.
         results.push(match ranker.score(req) {
             Ok(resp) => resp.to_json(),
             Err(e) => error_json(&e),
@@ -573,119 +592,434 @@ fn score_body(
     }
     let mut o = Object::new();
     o.insert("results", Value::Arr(results));
-    respond(
-        stream,
-        200,
-        "application/json",
-        &Value::Obj(o).to_string_pretty(),
-    )
+    Response::json(200, &Value::Obj(o))
 }
 
-fn score_one(
-    stream: &mut TcpStream,
-    ranker: &dyn PreRanker,
-    req: ScoreRequest,
-) -> Result<()> {
+fn score_one(ranker: &dyn PreRanker, req: ScoreRequest) -> Response {
     match ranker.score(req) {
-        Ok(resp) => respond(
-            stream,
-            200,
-            "application/json",
-            &resp.to_json().to_string_pretty(),
-        ),
-        Err(e) => respond_error(stream, &e),
+        Ok(resp) => Response::json(200, &resp.to_json()),
+        Err(e) => Response::from_serve_error(&e),
     }
 }
 
-/// All error bodies share one JSON shape: `{"error": .., "status": ..}`.
-fn error_body(msg: &str, status: u16) -> Value {
-    let mut o = Object::new();
-    o.insert("error", msg);
-    o.insert("status", status as u64);
-    Value::Obj(o)
+// ---------------------------------------------------------------------
+// Server shell over the two front ends
+// ---------------------------------------------------------------------
+
+enum Inner {
+    Blocking {
+        stop: Arc<AtomicBool>,
+        handle: Option<std::thread::JoinHandle<()>>,
+    },
+    #[cfg(unix)]
+    Evented(crate::server::reactor::EventedServer),
 }
 
-fn error_json(e: &ServeError) -> Value {
-    error_body(&e.to_string(), e.http_status())
+pub struct HttpServer {
+    pub addr: String,
+    stats: Arc<FrontendStats>,
+    inner: Option<Inner>,
 }
 
-fn respond_error(stream: &mut TcpStream, e: &ServeError) -> Result<()> {
-    respond_err_msg(stream, e.http_status(), &e.to_string())
-}
+impl HttpServer {
+    /// Bind and serve on the blocking thread-pool front end (back-compat
+    /// entry point; `FrontendConfig` defaults otherwise).  `addr` like
+    /// "127.0.0.1:0" (port 0 = ephemeral; the bound address is in
+    /// `.addr`).
+    pub fn start(
+        ranker: Arc<dyn PreRanker>,
+        addr: &str,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
+        Self::start_with_admin(ranker, None, addr, n_workers)
+    }
 
-fn respond_err_msg(
-    stream: &mut TcpStream,
-    status: u16,
-    msg: &str,
-) -> Result<()> {
-    respond(
-        stream,
-        status,
-        "application/json",
-        &error_body(msg, status).to_string_pretty(),
-    )
-}
+    /// Same, with the multi-scenario admin surface attached
+    /// (`/v1/scenarios`, reload endpoint, per-scenario `/metrics`).
+    pub fn start_with_admin(
+        ranker: Arc<dyn PreRanker>,
+        admin: Option<Arc<dyn ScenarioAdmin>>,
+        addr: &str,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
+        let cfg = FrontendConfig {
+            mode: "blocking".into(),
+            ..FrontendConfig::default()
+        };
+        Self::start_frontend(ranker, admin, addr, &cfg, n_workers)
+    }
 
-fn respond_422(stream: &mut TcpStream, msg: &str) -> Result<()> {
-    respond_err_msg(stream, 422, msg)
-}
+    /// Bind and serve with an explicit front-end configuration
+    /// (`mode = "blocking" | "evented"`).  `n_workers` is the scoring
+    /// worker budget in both modes.
+    pub fn start_frontend(
+        ranker: Arc<dyn PreRanker>,
+        admin: Option<Arc<dyn ScenarioAdmin>>,
+        addr: &str,
+        cfg: &FrontendConfig,
+        n_workers: usize,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let started = Instant::now();
+        let n_workers = n_workers.max(1);
+        match cfg.mode.as_str() {
+            "blocking" => Self::start_blocking(
+                ranker, admin, listener, bound, cfg, n_workers, started,
+            ),
+            "evented" => {
+                #[cfg(unix)]
+                {
+                    let stats =
+                        Arc::new(FrontendStats::new("evented"));
+                    let evented =
+                        crate::server::reactor::EventedServer::start(
+                            ranker,
+                            admin,
+                            listener,
+                            cfg.clone(),
+                            n_workers,
+                            Arc::clone(&stats),
+                            started,
+                        )?;
+                    Ok(HttpServer {
+                        addr: bound,
+                        stats,
+                        inner: Some(Inner::Evented(evented)),
+                    })
+                }
+                #[cfg(not(unix))]
+                {
+                    log::warn!(
+                        "evented front end needs a unix poller; \
+                         falling back to blocking"
+                    );
+                    Self::start_blocking(
+                        ranker, admin, listener, bound, cfg, n_workers,
+                        started,
+                    )
+                }
+            }
+            other => anyhow::bail!(
+                "unknown frontend mode {other:?} (blocking|evented)"
+            ),
+        }
+    }
 
-fn respond_405(stream: &mut TcpStream, allow: &str) -> Result<()> {
-    respond_with_headers(
-        stream,
-        405,
-        "application/json",
-        &[("Allow", allow)],
-        &error_body("method not allowed", 405).to_string_pretty(),
-    )
-}
+    fn start_blocking(
+        ranker: Arc<dyn PreRanker>,
+        admin: Option<Arc<dyn ScenarioAdmin>>,
+        listener: TcpListener,
+        bound: String,
+        cfg: &FrontendConfig,
+        n_workers: usize,
+        started: Instant,
+    ) -> Result<HttpServer> {
+        let stats = Arc::new(FrontendStats::new("blocking"));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let stats2 = Arc::clone(&stats);
+        let cfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("aif-http".into())
+            .spawn(move || {
+                blocking_accept_loop(
+                    listener, ranker, admin, stop2, stats2, cfg, n_workers,
+                    started,
+                )
+            })?;
+        Ok(HttpServer {
+            addr: bound,
+            stats,
+            inner: Some(Inner::Blocking {
+                stop,
+                handle: Some(handle),
+            }),
+        })
+    }
 
-fn reason_phrase(status: u16) -> &'static str {
-    match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        413 => "Payload Too Large",
-        422 => "Unprocessable Entity",
-        429 => "Too Many Requests",
-        500 => "Internal Server Error",
-        503 => "Service Unavailable",
-        504 => "Gateway Timeout",
-        _ => "Error",
+    /// Live front-end counters (also served as the `frontend` block of
+    /// `/metrics`).
+    pub fn frontend_stats(&self) -> &Arc<FrontendStats> {
+        &self.stats
+    }
+
+    /// The one stop path shared by `shutdown` and `Drop`: stop
+    /// accepting, drain in-flight requests, close idle connections, and
+    /// join every front-end thread.  No accepted request is dropped
+    /// without a reply.
+    fn stop_and_join(&mut self) {
+        match self.inner.take() {
+            Some(Inner::Blocking { stop, mut handle }) => {
+                stop.store(true, Ordering::Relaxed);
+                if let Some(h) = handle.take() {
+                    let _ = h.join();
+                }
+            }
+            #[cfg(unix)]
+            Some(Inner::Evented(mut e)) => e.shutdown(),
+            None => {}
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
     }
 }
 
-fn respond(
-    stream: &mut TcpStream,
-    status: u16,
-    ctype: &str,
-    body: &str,
-) -> Result<()> {
-    respond_with_headers(stream, status, ctype, &[], body)
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
 }
 
-fn respond_with_headers(
-    stream: &mut TcpStream,
-    status: u16,
-    ctype: &str,
-    extra: &[(&str, &str)],
-    body: &str,
-) -> Result<()> {
-    let mut head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n",
-        reason_phrase(status),
-        body.len()
-    );
-    for (name, value) in extra {
-        head.push_str(name);
-        head.push_str(": ");
-        head.push_str(value);
-        head.push_str("\r\n");
+// ---------------------------------------------------------------------
+// Blocking front end
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn blocking_accept_loop(
+    listener: TcpListener,
+    ranker: Arc<dyn PreRanker>,
+    admin: Option<Arc<dyn ScenarioAdmin>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<FrontendStats>,
+    cfg: FrontendConfig,
+    n_workers: usize,
+    started: Instant,
+) {
+    let pool = ThreadPool::new(n_workers);
+    let overload_at = n_workers * OVERLOAD_QUEUE_FACTOR;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stats.conn_opened();
+                if pool.in_flight() >= overload_at {
+                    // Shed load here in the accept thread — never queue
+                    // more than the pool can drain promptly.
+                    let e = ServeError::Overloaded(format!(
+                        "{} connections in flight",
+                        pool.in_flight()
+                    ));
+                    stats.shed_overload.fetch_add(1, Ordering::Relaxed);
+                    shed(stream, &e);
+                    stats.conn_closed();
+                    continue;
+                }
+                let ranker = Arc::clone(&ranker);
+                let admin = admin.clone();
+                let stats2 = Arc::clone(&stats);
+                let stop2 = Arc::clone(&stop);
+                let cfg2 = cfg.clone();
+                pool.spawn(move || {
+                    handle_blocking_conn(
+                        stream,
+                        ranker.as_ref(),
+                        admin.as_deref(),
+                        started,
+                        &stats2,
+                        &cfg2,
+                        &stop2,
+                    );
+                    stats2.conn_closed();
+                });
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
     }
-    write!(stream, "{head}\r\n{body}")?;
-    Ok(())
+    // `pool` drops here: in-flight connections drain (workers see the
+    // stop flag within one BLOCKING_POLL slice), workers join.
+}
+
+/// Overload path, run in the accept thread: best-effort and strictly
+/// non-blocking — overload must cost neither threads nor accept-loop
+/// stalls.  Drain whatever the client already buffered (usually the
+/// whole request, so the close doesn't RST the 429 away), write the
+/// canned reply, hang up.
+fn shed(mut stream: TcpStream, e: &ServeError) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut sink = [0u8; 4096];
+    let _ = stream.read(&mut sink);
+    let _ =
+        stream.write_all(&Response::from_serve_error(e).serialize(false));
+}
+
+/// Where the connection sits in the shared timeout ladder.
+enum Phase {
+    Idle { since: Instant },
+    Header { since: Instant },
+    Body { since: Instant },
+}
+
+/// One blocking connection: shared parser + shared dispatch + shared
+/// keep-alive negotiation, on a pool worker.  Reads run in
+/// `BLOCKING_POLL` slices so the timeout ladder and the drain flag are
+/// re-checked even while the client is silent.
+fn handle_blocking_conn(
+    mut stream: TcpStream,
+    ranker: &dyn PreRanker,
+    admin: Option<&dyn ScenarioAdmin>,
+    started: Instant,
+    stats: &FrontendStats,
+    cfg: &FrontendConfig,
+    stop: &AtomicBool,
+) {
+    if stream.set_read_timeout(Some(BLOCKING_POLL)).is_err()
+        || stream.set_write_timeout(Some(IO_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let mut parser = RequestParser::new();
+    let mut served: u64 = 0;
+    let mut buf = [0u8; 16 * 1024];
+    let mut phase = Phase::Idle {
+        since: Instant::now(),
+    };
+    loop {
+        // Drain every request already buffered (pipelining).
+        loop {
+            match parser.next() {
+                Ok(Some(req)) => {
+                    let keep_alive = req.keep_alive_requested()
+                        && !stop.load(Ordering::Relaxed)
+                        && (cfg.keepalive_max_requests == 0
+                            || served + 1
+                                < cfg.keepalive_max_requests as u64);
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp =
+                        dispatch(&req, ranker, admin, started, stats);
+                    let bytes = resp.serialize(keep_alive);
+                    if stream.write_all(&bytes).is_err() {
+                        return;
+                    }
+                    stats
+                        .bytes_out
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    stats.responses.fetch_add(1, Ordering::Relaxed);
+                    served += 1;
+                    if served > 1 {
+                        stats
+                            .keepalive_reuses
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    if !keep_alive {
+                        return;
+                    }
+                    phase = Phase::Idle {
+                        since: Instant::now(),
+                    };
+                }
+                Ok(None) => break,
+                Err(pe) => {
+                    stats.parse_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.write_all(
+                        &Response::error(pe.status, &pe.message)
+                            .serialize(false),
+                    );
+                    return;
+                }
+            }
+        }
+        if parser.take_continue() {
+            // Standards-following clients (curl on >~1KiB bodies) wait
+            // for this interim response before sending the body.
+            if write!(stream, "HTTP/1.1 100 Continue\r\n\r\n").is_err() {
+                return;
+            }
+        }
+        // Track ladder transitions from the parser's state.
+        phase = match phase {
+            Phase::Idle { since } if parser.in_body() => {
+                Phase::Body { since }
+            }
+            Phase::Idle { since } if parser.mid_request() => {
+                Phase::Header { since }
+            }
+            Phase::Header { since } if parser.in_body() => {
+                Phase::Body { since }
+            }
+            p => p,
+        };
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => {
+                stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                if !parser.mid_request() {
+                    // First bytes of a new request: start the header
+                    // rung of the ladder.
+                    phase = Phase::Header {
+                        since: Instant::now(),
+                    };
+                }
+                parser.push(&buf[..n]);
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let now = Instant::now();
+                let timeout_ms = |since: Instant, limit_ms: u64| {
+                    now.duration_since(since).as_millis() as u64
+                        >= limit_ms
+                };
+                match phase {
+                    Phase::Idle { since } => {
+                        // Drain: a parked keep-alive connection is the
+                        // definition of "idle" — close it promptly.
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if timeout_ms(since, cfg.idle_timeout_ms) {
+                            stats
+                                .timed_out_idle
+                                .fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                    Phase::Header { since } => {
+                        if timeout_ms(since, cfg.header_timeout_ms) {
+                            stats
+                                .timed_out_header
+                                .fetch_add(1, Ordering::Relaxed);
+                            let _ = stream.write_all(
+                                &Response::error(
+                                    408,
+                                    "timed out waiting for request \
+                                     headers",
+                                )
+                                .serialize(false),
+                            );
+                            return;
+                        }
+                    }
+                    Phase::Body { since } => {
+                        if timeout_ms(since, cfg.body_timeout_ms) {
+                            stats
+                                .timed_out_body
+                                .fetch_add(1, Ordering::Relaxed);
+                            let _ = stream.write_all(
+                                &Response::error(
+                                    408,
+                                    "timed out waiting for request body",
+                                )
+                                .serialize(false),
+                            );
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(_) => return,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -754,13 +1088,46 @@ mod tests {
             (400, "Bad Request"),
             (404, "Not Found"),
             (405, "Method Not Allowed"),
+            (408, "Request Timeout"),
             (413, "Payload Too Large"),
             (422, "Unprocessable Entity"),
             (429, "Too Many Requests"),
+            (431, "Request Header Fields Too Large"),
             (500, "Internal Server Error"),
+            (501, "Not Implemented"),
             (504, "Gateway Timeout"),
+            (505, "HTTP Version Not Supported"),
         ] {
             assert_eq!(reason_phrase(status), phrase);
         }
+    }
+
+    #[test]
+    fn serialize_negotiates_connection_header() {
+        let r = Response::text(200, "ok");
+        let open = String::from_utf8(r.serialize(true)).unwrap();
+        assert!(open.contains("Connection: keep-alive\r\n"), "{open}");
+        let closed = String::from_utf8(r.serialize(false)).unwrap();
+        assert!(closed.contains("Connection: close\r\n"), "{closed}");
+        assert!(closed.ends_with("\r\n\r\nok"), "{closed}");
+
+        let r = Response::method_not_allowed("GET, POST");
+        let s = String::from_utf8(r.serialize(false)).unwrap();
+        assert!(s.contains("Allow: GET, POST\r\n"), "{s}");
+    }
+
+    #[test]
+    fn frontend_stats_json_shape() {
+        let s = FrontendStats::new("evented");
+        s.conn_opened();
+        s.conn_opened();
+        s.conn_closed();
+        let v = s.to_json();
+        assert_eq!(v.req("mode").as_str(), Some("evented"));
+        assert_eq!(v.req("accepted").as_usize(), Some(2));
+        assert_eq!(v.req("open").as_usize(), Some(1));
+        assert_eq!(v.req("open_peak").as_usize(), Some(2));
+        assert!(v.req("timed_out").get("idle").is_some());
+        assert!(v.get("queue_depth").is_some());
     }
 }

@@ -1,6 +1,11 @@
 //! Versioned HTTP face for the serving stack (`aif serve`): `/healthz`,
-//! `/metrics` and `/v1/score` over any [`crate::coordinator::PreRanker`].
+//! `/metrics` and `/v1/score` over any [`crate::coordinator::PreRanker`],
+//! served by one of two front ends over a shared application layer —
+//! the blocking thread pool, or the evented reactor (DESIGN.md §18).
 
+pub mod conn;
 pub mod http;
+#[cfg(unix)]
+pub mod reactor;
 
-pub use http::HttpServer;
+pub use http::{FrontendStats, HttpServer};

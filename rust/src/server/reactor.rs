@@ -1,0 +1,1441 @@
+//! Readiness-based evented front end (DESIGN.md §18): `n_event_loops`
+//! reactor threads own every client socket through a non-blocking
+//! poller ([`sys::Poller`] — hand-rolled on `epoll` on Linux, `poll`
+//! elsewhere; the repo vendors rather than depends), so 10k+ idle
+//! connections cost file descriptors and a few hundred bytes of state
+//! each, never threads.
+//!
+//! Topology:
+//!
+//! * **Reactor 0** also owns the listener: it accepts, enforces
+//!   `max_connections`, and deals new connections round-robin to all
+//!   reactors through per-reactor inboxes + socketpair wakers.
+//! * Each connection is a small state machine (`Conn`): an incremental
+//!   [`RequestParser`], a bounded output buffer, and one rung of the
+//!   idle/header/body timeout ladder.  A periodic sweep (every
+//!   [`SWEEP`]) cuts slow clients by rung — a slow-loris burns a
+//!   deadline in the reactor, never a scoring worker.
+//! * A fully parsed request is handed to `n_http_workers` scoring
+//!   threads through the bounded [`JobQueue`]
+//!   (`n_workers * OVERLOAD_QUEUE_FACTOR` deep, mirroring the blocking
+//!   front end's shed bound); a full queue answers 429 immediately
+//!   from the reactor.  One request is in flight per connection, so
+//!   the output buffer is bounded by one serialized response and
+//!   pipelined requests answer in order.
+//! * Workers run the same [`dispatch`] the blocking front end runs and
+//!   serialize with the same negotiated keep-alive, so responses are
+//!   bitwise-identical across front ends by construction; completions
+//!   ride the owning reactor's inbox and are written on writable
+//!   readiness.
+//!
+//! Shutdown drains: the listener closes first, idle and mid-parse
+//! connections are cut, Busy/Writing connections finish their reply,
+//! reactors exit when empty — and only then is the job queue closed
+//! and the workers joined, so no accepted request loses its reply.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::FrontendConfig;
+use crate::coordinator::{PreRanker, ScenarioAdmin, ServeError};
+use crate::server::conn::RequestParser;
+use crate::server::http::{
+    dispatch, FrontendStats, Response, OVERLOAD_QUEUE_FACTOR,
+};
+
+/// Timeout-ladder sweep cadence (and the poller wait bound, so drain
+/// and deadlines are noticed promptly even on a silent socket set).
+const SWEEP: Duration = Duration::from_millis(250);
+/// A connection with queued output that accepts no bytes for this long
+/// is cut (`timed_out.write`).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-read scratch size.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Poller token of the listener (reactor 0 only).
+const TOKEN_ACCEPT: u64 = u64::MAX;
+/// Poller token of the inbox waker.
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+/// Connection tokens pack a slab index with a generation so an event or
+/// completion for a closed-and-reused slot is recognized as stale.
+fn conn_token(idx: usize, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn token_parts(token: u64) -> (usize, u32) {
+    ((token & 0xffff_ffff) as usize, (token >> 32) as u32)
+}
+
+// ---------------------------------------------------------------------
+// sys: the vendored poller
+// ---------------------------------------------------------------------
+
+mod sys {
+    pub use imp::Poller;
+
+    use std::os::raw::c_int;
+
+    /// One readiness event; `closed` is a hard error/hangup (the
+    /// socket is dead regardless of interest).
+    pub struct Event {
+        pub token: u64,
+        pub readable: bool,
+        pub writable: bool,
+        pub closed: bool,
+    }
+
+    extern "C" {
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+    }
+
+    /// Re-`listen(2)` an already-listening fd to widen its accept
+    /// backlog past std's default.  Best effort: POSIX leaves
+    /// re-listening unspecified (Linux applies it), so failures are
+    /// ignored.
+    pub fn widen_backlog(fd: i32, backlog: usize) {
+        let backlog = backlog.min(c_int::MAX as usize) as c_int;
+        unsafe {
+            let _ = listen(fd, backlog);
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    mod imp {
+        use super::Event;
+        use std::io;
+        use std::os::raw::c_int;
+        use std::os::unix::io::RawFd;
+        use std::time::Duration;
+
+        const EPOLLIN: u32 = 0x1;
+        const EPOLLOUT: u32 = 0x4;
+        const EPOLLERR: u32 = 0x8;
+        const EPOLLHUP: u32 = 0x10;
+        const EPOLL_CTL_ADD: c_int = 1;
+        const EPOLL_CTL_DEL: c_int = 2;
+        const EPOLL_CTL_MOD: c_int = 3;
+        const EPOLL_CLOEXEC: c_int = 0x80000;
+        const MAX_EVENTS: usize = 256;
+
+        // x86_64 packs epoll_event (i386 ABI legacy); every other
+        // architecture uses natural alignment.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        struct EpollEvent {
+            events: u32,
+            data: u64,
+        }
+
+        extern "C" {
+            fn epoll_create1(flags: c_int) -> c_int;
+            fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+            fn close(fd: c_int) -> c_int;
+        }
+
+        /// Level-triggered `epoll` poller.
+        pub struct Poller {
+            epfd: RawFd,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+                if epfd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Poller { epfd })
+            }
+
+            fn ctl(
+                &self,
+                op: c_int,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
+                let mut ev = EpollEvent {
+                    events: (if read { EPOLLIN } else { 0 })
+                        | (if write { EPOLLOUT } else { 0 }),
+                    data: token,
+                };
+                let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+                if rc < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+
+            pub fn add(
+                &self,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+            }
+
+            pub fn modify(
+                &self,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+            }
+
+            pub fn delete(&self, fd: RawFd) {
+                let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, false, false);
+            }
+
+            pub fn wait(
+                &self,
+                out: &mut Vec<Event>,
+                timeout: Duration,
+            ) -> io::Result<()> {
+                out.clear();
+                let mut raw =
+                    [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+                let timeout_ms = timeout
+                    .as_millis()
+                    .min(c_int::MAX as u128)
+                    as c_int;
+                let n = loop {
+                    let n = unsafe {
+                        epoll_wait(
+                            self.epfd,
+                            raw.as_mut_ptr(),
+                            MAX_EVENTS as c_int,
+                            timeout_ms,
+                        )
+                    };
+                    if n >= 0 {
+                        break n as usize;
+                    }
+                    let e = io::Error::last_os_error();
+                    if e.kind() != io::ErrorKind::Interrupted {
+                        return Err(e);
+                    }
+                };
+                for ev in raw.iter().take(n) {
+                    // Copy out of the (possibly packed) struct before
+                    // touching fields.
+                    let (events, data) = {
+                        let e = *ev;
+                        (e.events, e.data)
+                    };
+                    out.push(Event {
+                        token: data,
+                        readable: events & EPOLLIN != 0,
+                        writable: events & EPOLLOUT != 0,
+                        closed: events & (EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+
+        impl Drop for Poller {
+            fn drop(&mut self) {
+                unsafe {
+                    let _ = close(self.epfd);
+                }
+            }
+        }
+    }
+
+    /// `poll(2)` fallback for non-Linux unix: same surface, O(n) per
+    /// wait.  Fine for the connection counts CI runs there.
+    #[cfg(all(unix, not(target_os = "linux")))]
+    mod imp {
+        use super::Event;
+        use std::io;
+        use std::os::raw::{c_int, c_short, c_ulong};
+        use std::os::unix::io::RawFd;
+        use std::sync::Mutex;
+        use std::time::Duration;
+
+        const POLLIN: c_short = 0x1;
+        const POLLOUT: c_short = 0x4;
+        const POLLERR: c_short = 0x8;
+        const POLLHUP: c_short = 0x10;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct PollFd {
+            fd: c_int,
+            events: c_short,
+            revents: c_short,
+        }
+
+        extern "C" {
+            fn poll(
+                fds: *mut PollFd,
+                nfds: c_ulong,
+                timeout: c_int,
+            ) -> c_int;
+        }
+
+        struct Entry {
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        }
+
+        pub struct Poller {
+            entries: Mutex<Vec<Entry>>,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                Ok(Poller {
+                    entries: Mutex::new(Vec::new()),
+                })
+            }
+
+            pub fn add(
+                &self,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
+                self.entries.lock().unwrap().push(Entry {
+                    fd,
+                    token,
+                    read,
+                    write,
+                });
+                Ok(())
+            }
+
+            pub fn modify(
+                &self,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
+                let mut entries = self.entries.lock().unwrap();
+                match entries.iter_mut().find(|e| e.fd == fd) {
+                    Some(e) => {
+                        e.token = token;
+                        e.read = read;
+                        e.write = write;
+                        Ok(())
+                    }
+                    None => Err(io::Error::from(
+                        io::ErrorKind::NotFound,
+                    )),
+                }
+            }
+
+            pub fn delete(&self, fd: RawFd) {
+                self.entries.lock().unwrap().retain(|e| e.fd != fd);
+            }
+
+            pub fn wait(
+                &self,
+                out: &mut Vec<Event>,
+                timeout: Duration,
+            ) -> io::Result<()> {
+                out.clear();
+                let (mut fds, tokens): (Vec<PollFd>, Vec<u64>) = {
+                    let entries = self.entries.lock().unwrap();
+                    entries
+                        .iter()
+                        .map(|e| {
+                            (
+                                PollFd {
+                                    fd: e.fd,
+                                    events: (if e.read {
+                                        POLLIN
+                                    } else {
+                                        0
+                                    }) | (if e.write {
+                                        POLLOUT
+                                    } else {
+                                        0
+                                    }),
+                                    revents: 0,
+                                },
+                                e.token,
+                            )
+                        })
+                        .unzip()
+                };
+                let timeout_ms = timeout
+                    .as_millis()
+                    .min(c_int::MAX as u128)
+                    as c_int;
+                let n = loop {
+                    let n = unsafe {
+                        poll(
+                            fds.as_mut_ptr(),
+                            fds.len() as c_ulong,
+                            timeout_ms,
+                        )
+                    };
+                    if n >= 0 {
+                        break n;
+                    }
+                    let e = io::Error::last_os_error();
+                    if e.kind() != io::ErrorKind::Interrupted {
+                        return Err(e);
+                    }
+                };
+                if n == 0 {
+                    return Ok(());
+                }
+                for (pfd, token) in fds.iter().zip(tokens) {
+                    if pfd.revents == 0 {
+                        continue;
+                    }
+                    out.push(Event {
+                        token,
+                        readable: pfd.revents & POLLIN != 0,
+                        writable: pfd.revents & POLLOUT != 0,
+                        closed: pfd.revents & (POLLERR | POLLHUP)
+                            != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-thread plumbing
+// ---------------------------------------------------------------------
+
+/// One parsed request bound for a scoring worker.
+struct Job {
+    reactor: usize,
+    token: u64,
+    request: crate::server::conn::Request,
+    /// Negotiated at submit time (request wish + budget + drain flag).
+    keep_alive: bool,
+}
+
+/// A serialized response bound back to the owning reactor.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Bounded MPMC handoff from reactors to scoring workers.  `try_push`
+/// never blocks (a full queue is the reactor's cue to shed 429);
+/// `pop` blocks until a job arrives or the queue closes empty.
+struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct JobQueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new(cap: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(JobQueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn try_push(&self, job: Job, stats: &FrontendStats) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.jobs.len() >= self.cap {
+            return false;
+        }
+        inner.jobs.push_back(job);
+        stats
+            .queue_depth
+            .store(inner.jobs.len(), Ordering::Relaxed);
+        drop(inner);
+        self.cv.notify_one();
+        true
+    }
+
+    fn pop(&self, stats: &FrontendStats) -> Option<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.jobs.pop_front() {
+                stats
+                    .queue_depth
+                    .store(inner.jobs.len(), Ordering::Relaxed);
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Wakes a reactor blocked in its poller (one byte down a socketpair;
+/// a full pipe means a wake is already pending, which is enough).
+struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Per-reactor mailbox: connections dealt by the acceptor and
+/// completions coming back from workers.
+#[derive(Default)]
+struct Inbox {
+    new_conns: Vec<TcpStream>,
+    completions: Vec<Completion>,
+}
+
+struct ReactorShared {
+    waker: Waker,
+    inbox: Mutex<Inbox>,
+}
+
+/// State shared by the acceptor, all reactors and all workers.
+struct Shared {
+    ranker: Arc<dyn PreRanker>,
+    admin: Option<Arc<dyn ScenarioAdmin>>,
+    cfg: FrontendConfig,
+    stats: Arc<FrontendStats>,
+    started: Instant,
+    draining: AtomicBool,
+    queue: JobQueue,
+    reactors: Vec<ReactorShared>,
+}
+
+// ---------------------------------------------------------------------
+// Connection state machine
+// ---------------------------------------------------------------------
+
+/// Which rung of the timeout ladder applies while waiting for bytes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Rung {
+    /// Between requests (keep-alive park) — `idle_timeout_ms`.
+    Idle,
+    /// Mid-head — `header_timeout_ms` from the request's first byte.
+    Header,
+    /// Head done, body outstanding — `body_timeout_ms`, same epoch.
+    Body,
+}
+
+struct Conn {
+    stream: TcpStream,
+    parser: RequestParser,
+    /// Serialized response bytes not yet written (at most one response
+    /// plus an interim `100 Continue` — one request in flight per
+    /// connection bounds this buffer).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A job for this connection is queued or being scored.
+    busy: bool,
+    close_after_write: bool,
+    /// Responses completed on this connection (keep-alive budget).
+    served: u64,
+    rung: Rung,
+    /// When the current rung's clock started.
+    since: Instant,
+    /// Set while `out` is non-empty and the socket won't take bytes;
+    /// reset on any write progress.
+    write_since: Option<Instant>,
+    /// Interest currently registered with the poller (read, write).
+    interest: (bool, bool),
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            busy: false,
+            close_after_write: false,
+            served: 0,
+            rung: Rung::Idle,
+            since: Instant::now(),
+            write_since: None,
+            interest: (true, false),
+        }
+    }
+
+    fn has_output(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn queue_output(&mut self, bytes: Vec<u8>) {
+        if self.out_pos >= self.out.len() {
+            self.out = bytes;
+            self.out_pos = 0;
+        } else {
+            self.out.extend_from_slice(&bytes);
+        }
+    }
+}
+
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+// ---------------------------------------------------------------------
+// The reactor
+// ---------------------------------------------------------------------
+
+struct Reactor {
+    id: usize,
+    shared: Arc<Shared>,
+    poller: sys::Poller,
+    wake_rx: UnixStream,
+    /// Listener (reactor 0 only until drain).
+    listener: Option<TcpListener>,
+    slab: Vec<Slot>,
+    free: Vec<usize>,
+    open: usize,
+    /// Round-robin deal cursor (acceptor only).
+    next_reactor: usize,
+}
+
+impl Reactor {
+    fn run(&mut self) {
+        if self
+            .poller
+            .add(self.wake_rx.as_raw_fd(), TOKEN_WAKE, true, false)
+            .is_err()
+        {
+            log::error!("reactor {}: cannot register waker", self.id);
+            return;
+        }
+        if let Some(l) = &self.listener {
+            if self
+                .poller
+                .add(l.as_raw_fd(), TOKEN_ACCEPT, true, false)
+                .is_err()
+            {
+                log::error!("reactor 0: cannot register listener");
+                return;
+            }
+        }
+        let mut events: Vec<sys::Event> = Vec::new();
+        let mut last_sweep = Instant::now();
+        loop {
+            if self.shared.draining.load(Ordering::Relaxed) {
+                self.drain_step();
+                if self.open == 0 {
+                    return;
+                }
+            }
+            // Floor at 1ms: the poller truncates to whole
+            // milliseconds, and a 0 timeout would busy-spin for the
+            // sub-millisecond remainder before a sweep.
+            let timeout = SWEEP
+                .saturating_sub(last_sweep.elapsed())
+                .max(Duration::from_millis(1));
+            if let Err(e) = self.poller.wait(&mut events, timeout) {
+                log::error!("reactor {}: poll failed: {e}", self.id);
+                return;
+            }
+            for i in 0..events.len() {
+                let (token, readable, writable, closed) = {
+                    let ev = &events[i];
+                    (ev.token, ev.readable, ev.writable, ev.closed)
+                };
+                match token {
+                    TOKEN_WAKE => self.drain_waker(),
+                    TOKEN_ACCEPT => self.accept_burst(),
+                    t => {
+                        self.conn_event(t, readable, writable, closed)
+                    }
+                }
+            }
+            self.process_inbox();
+            if last_sweep.elapsed() >= SWEEP {
+                self.sweep();
+                last_sweep = Instant::now();
+            }
+        }
+    }
+
+    // -- accept path (reactor 0) --------------------------------------
+
+    fn accept_burst(&mut self) {
+        let n_reactors = self.shared.reactors.len();
+        loop {
+            // Scope the listener borrow: `register_conn` needs `self`.
+            let accepted = match &self.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    let stats = &self.shared.stats;
+                    if stats.open.load(Ordering::Relaxed)
+                        >= self.shared.cfg.max_connections
+                    {
+                        stats
+                            .rejected_capacity
+                            .fetch_add(1, Ordering::Relaxed);
+                        drop(stream);
+                        continue;
+                    }
+                    stats.conn_opened();
+                    let target = self.next_reactor % n_reactors;
+                    self.next_reactor =
+                        self.next_reactor.wrapping_add(1);
+                    if target == self.id {
+                        self.register_conn(stream);
+                    } else {
+                        let r = &self.shared.reactors[target];
+                        r.inbox
+                            .lock()
+                            .unwrap()
+                            .new_conns
+                            .push(stream);
+                        r.waker.wake();
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return;
+                }
+                // Transient accept failures (ECONNABORTED, EMFILE):
+                // back off until the next poll wakeup — the listener
+                // is level-triggered, so we retry within one SWEEP.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.stats.conn_closed();
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let idx = match self.free.pop() {
+            Some(idx) => idx,
+            None => {
+                self.slab.push(Slot { gen: 0, conn: None });
+                self.slab.len() - 1
+            }
+        };
+        let slot = &mut self.slab[idx];
+        slot.gen = slot.gen.wrapping_add(1);
+        let token = conn_token(idx, slot.gen);
+        if self
+            .poller
+            .add(stream.as_raw_fd(), token, true, false)
+            .is_err()
+        {
+            self.free.push(idx);
+            self.shared.stats.conn_closed();
+            return;
+        }
+        slot.conn = Some(Conn::new(stream));
+        self.open += 1;
+    }
+
+    // -- event handling ------------------------------------------------
+
+    fn drain_waker(&mut self) {
+        let mut sink = [0u8; 256];
+        while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0)
+        {
+        }
+    }
+
+    fn process_inbox(&mut self) {
+        let (new_conns, completions) = {
+            let mut inbox = self.shared.reactors[self.id]
+                .inbox
+                .lock()
+                .unwrap();
+            (
+                std::mem::take(&mut inbox.new_conns),
+                std::mem::take(&mut inbox.completions),
+            )
+        };
+        for stream in new_conns {
+            if self.shared.draining.load(Ordering::Relaxed) {
+                self.shared.stats.conn_closed();
+                continue;
+            }
+            self.register_conn(stream);
+        }
+        for c in completions {
+            self.complete(c);
+        }
+    }
+
+    fn lookup(&self, token: u64) -> Option<usize> {
+        let (idx, gen) = token_parts(token);
+        let slot = self.slab.get(idx)?;
+        if slot.gen != gen || slot.conn.is_none() {
+            return None;
+        }
+        Some(idx)
+    }
+
+    fn conn_event(
+        &mut self,
+        token: u64,
+        readable: bool,
+        writable: bool,
+        closed: bool,
+    ) {
+        let Some(idx) = self.lookup(token) else { return };
+        if closed {
+            // Hard error/hangup: the peer is gone; any in-flight reply
+            // is undeliverable (its completion is dropped by the
+            // generation guard).
+            self.close(idx);
+            return;
+        }
+        if writable {
+            self.shared
+                .stats
+                .write_wakeups
+                .fetch_add(1, Ordering::Relaxed);
+            if !self.flush(idx) {
+                return;
+            }
+            self.advance(idx);
+        }
+        if readable && self.slab[idx].conn.is_some() {
+            self.shared
+                .stats
+                .read_wakeups
+                .fetch_add(1, Ordering::Relaxed);
+            if !self.read_burst(idx) {
+                return;
+            }
+            self.advance(idx);
+        }
+    }
+
+    /// Read until `WouldBlock`; `false` if the connection was closed.
+    fn read_burst(&mut self, idx: usize) -> bool {
+        let mut buf = [0u8; READ_CHUNK];
+        loop {
+            let conn = self.slab[idx].conn.as_mut().unwrap();
+            if conn.busy || conn.has_output() || conn.close_after_write
+            {
+                // One request in flight: leave further bytes in the
+                // kernel buffer (read interest is off; this event
+                // raced a completion).
+                return true;
+            }
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.close(idx);
+                    return false;
+                }
+                Ok(n) => {
+                    self.shared
+                        .stats
+                        .bytes_in
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                    if !conn.parser.mid_request() {
+                        // First byte of a new request starts the
+                        // header rung's clock.
+                        conn.rung = Rung::Header;
+                        conn.since = Instant::now();
+                    }
+                    conn.parser.push(&buf[..n]);
+                    if n < buf.len() {
+                        return true;
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return true;
+                }
+                Err(ref e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(idx);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Pull parsed requests out of the connection and move them along:
+    /// submit to the job queue (or shed 429), answer protocol errors,
+    /// owe `100 Continue`, refresh the timeout rung and poller
+    /// interest.
+    fn advance(&mut self, idx: usize) {
+        let shared = Arc::clone(&self.shared);
+        let stats = &shared.stats;
+        let token = conn_token(idx, self.slab[idx].gen);
+        {
+            let conn = self.slab[idx].conn.as_mut().unwrap();
+            while !conn.busy
+                && !conn.has_output()
+                && !conn.close_after_write
+            {
+                match conn.parser.next() {
+                    Ok(Some(request)) => {
+                        let budget =
+                            shared.cfg.keepalive_max_requests as u64;
+                        let keep_alive = request
+                            .keep_alive_requested()
+                            && !shared
+                                .draining
+                                .load(Ordering::Relaxed)
+                            && (budget == 0
+                                || conn.served + 1 < budget);
+                        stats
+                            .requests
+                            .fetch_add(1, Ordering::Relaxed);
+                        let job = Job {
+                            reactor: self.id,
+                            token,
+                            request,
+                            keep_alive,
+                        };
+                        if shared.queue.try_push(job, stats) {
+                            stats
+                                .jobs_submitted
+                                .fetch_add(1, Ordering::Relaxed);
+                            conn.busy = true;
+                        } else {
+                            stats
+                                .shed_overload
+                                .fetch_add(1, Ordering::Relaxed);
+                            let e = ServeError::Overloaded(format!(
+                                "scoring queue full ({} jobs)",
+                                shared.queue.cap
+                            ));
+                            conn.queue_output(
+                                Response::from_serve_error(&e)
+                                    .serialize(false),
+                            );
+                            conn.close_after_write = true;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(pe) => {
+                        stats
+                            .parse_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        conn.queue_output(
+                            Response::error(pe.status, &pe.message)
+                                .serialize(false),
+                        );
+                        conn.close_after_write = true;
+                    }
+                }
+            }
+            if conn.parser.take_continue() {
+                conn.queue_output(
+                    b"HTTP/1.1 100 Continue\r\n\r\n".to_vec(),
+                );
+            }
+            // Refresh the ladder rung from the parser's state; the
+            // clock (`since`) was started at the request's first byte.
+            if !conn.busy {
+                let rung = if conn.parser.in_body() {
+                    Rung::Body
+                } else if conn.parser.mid_request() {
+                    Rung::Header
+                } else {
+                    Rung::Idle
+                };
+                if rung == Rung::Idle && conn.rung != Rung::Idle {
+                    conn.since = Instant::now();
+                }
+                conn.rung = rung;
+            }
+        }
+        if !self.flush(idx) {
+            return;
+        }
+        self.update_interest(idx);
+    }
+
+    /// Write as much queued output as the socket takes; `false` if the
+    /// connection was closed (write failure or close-after-write
+    /// completion).
+    fn flush(&mut self, idx: usize) -> bool {
+        loop {
+            let conn = self.slab[idx].conn.as_mut().unwrap();
+            if !conn.has_output() {
+                conn.out.clear();
+                conn.out_pos = 0;
+                conn.write_since = None;
+                if conn.close_after_write {
+                    self.close(idx);
+                    return false;
+                }
+                return true;
+            }
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => {
+                    self.close(idx);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.write_since = Some(Instant::now());
+                    self.shared
+                        .stats
+                        .bytes_out
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    if conn.write_since.is_none() {
+                        conn.write_since = Some(Instant::now());
+                    }
+                    return true;
+                }
+                Err(ref e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(idx);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn update_interest(&mut self, idx: usize) {
+        let token = conn_token(idx, self.slab[idx].gen);
+        let conn = self.slab[idx].conn.as_mut().unwrap();
+        let want_read = !conn.busy
+            && !conn.has_output()
+            && !conn.close_after_write;
+        let want_write = conn.has_output();
+        if (want_read, want_write) != conn.interest {
+            if self
+                .poller
+                .modify(
+                    conn.stream.as_raw_fd(),
+                    token,
+                    want_read,
+                    want_write,
+                )
+                .is_err()
+            {
+                self.close(idx);
+                return;
+            }
+            let conn = self.slab[idx].conn.as_mut().unwrap();
+            conn.interest = (want_read, want_write);
+        }
+    }
+
+    /// A worker finished a request for one of our connections.
+    fn complete(&mut self, c: Completion) {
+        let Some(idx) = self.lookup(c.token) else {
+            // The connection died while its request was being scored;
+            // the reply has nowhere to go.
+            return;
+        };
+        let stats = &self.shared.stats;
+        {
+            let conn = self.slab[idx].conn.as_mut().unwrap();
+            debug_assert!(conn.busy, "completion for a non-busy conn");
+            conn.busy = false;
+            conn.served += 1;
+            if conn.served > 1 {
+                stats
+                    .keepalive_reuses
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            stats.responses.fetch_add(1, Ordering::Relaxed);
+            conn.queue_output(c.bytes);
+            if !c.keep_alive {
+                conn.close_after_write = true;
+            }
+            // New request cycle: restart the ladder clock so a
+            // buffered pipelined fragment isn't timed against the
+            // previous request's epoch.
+            conn.rung = Rung::Idle;
+            conn.since = Instant::now();
+        }
+        if !self.flush(idx) {
+            return;
+        }
+        // Pipelined requests already buffered parse and submit now.
+        self.advance(idx);
+    }
+
+    // -- deadlines & drain --------------------------------------------
+
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let cfg = &self.shared.cfg;
+        let stats = Arc::clone(&self.shared.stats);
+        let mut cut: Vec<(usize, Option<Response>)> = Vec::new();
+        for (idx, slot) in self.slab.iter().enumerate() {
+            let Some(conn) = &slot.conn else { continue };
+            if let Some(since) = conn.write_since {
+                if conn.has_output()
+                    && now.duration_since(since) >= WRITE_TIMEOUT
+                {
+                    stats
+                        .timed_out_write
+                        .fetch_add(1, Ordering::Relaxed);
+                    cut.push((idx, None));
+                }
+                continue;
+            }
+            if conn.busy || conn.has_output() {
+                continue;
+            }
+            let over = |limit_ms: u64| {
+                now.duration_since(conn.since).as_millis() as u64
+                    >= limit_ms
+            };
+            match conn.rung {
+                Rung::Idle => {
+                    if over(cfg.idle_timeout_ms) {
+                        stats
+                            .timed_out_idle
+                            .fetch_add(1, Ordering::Relaxed);
+                        cut.push((idx, None));
+                    }
+                }
+                Rung::Header => {
+                    if over(cfg.header_timeout_ms) {
+                        stats
+                            .timed_out_header
+                            .fetch_add(1, Ordering::Relaxed);
+                        cut.push((
+                            idx,
+                            Some(Response::error(
+                                408,
+                                "timed out waiting for request \
+                                 headers",
+                            )),
+                        ));
+                    }
+                }
+                Rung::Body => {
+                    if over(cfg.body_timeout_ms) {
+                        stats
+                            .timed_out_body
+                            .fetch_add(1, Ordering::Relaxed);
+                        cut.push((
+                            idx,
+                            Some(Response::error(
+                                408,
+                                "timed out waiting for request body",
+                            )),
+                        ));
+                    }
+                }
+            }
+        }
+        for (idx, farewell) in cut {
+            match farewell {
+                Some(resp) => {
+                    {
+                        let conn =
+                            self.slab[idx].conn.as_mut().unwrap();
+                        conn.queue_output(resp.serialize(false));
+                        conn.close_after_write = true;
+                        conn.write_since = Some(now);
+                    }
+                    if self.flush(idx) {
+                        self.update_interest(idx);
+                    }
+                }
+                None => self.close(idx),
+            }
+        }
+    }
+
+    /// One drain pass: shut the listener, cut every connection that is
+    /// not mid-reply.  Busy/Writing connections finish first; the
+    /// caller re-runs this after every wakeup until `open == 0`.
+    fn drain_step(&mut self) {
+        if let Some(l) = self.listener.take() {
+            self.poller.delete(l.as_raw_fd());
+            // Dropping closes the fd: new connects are refused.
+        }
+        let idle: Vec<usize> = self
+            .slab
+            .iter()
+            .enumerate()
+            .filter_map(|(idx, slot)| match &slot.conn {
+                Some(c) if !c.busy && !c.has_output() => Some(idx),
+                _ => None,
+            })
+            .collect();
+        for idx in idle {
+            self.close(idx);
+        }
+    }
+
+    fn close(&mut self, idx: usize) {
+        let slot = &mut self.slab[idx];
+        if let Some(conn) = slot.conn.take() {
+            self.poller.delete(conn.stream.as_raw_fd());
+            drop(conn);
+            self.free.push(idx);
+            self.open -= 1;
+            self.shared.stats.conn_closed();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------
+
+fn worker_loop(shared: Arc<Shared>) {
+    let stats = Arc::clone(&shared.stats);
+    while let Some(job) = shared.queue.pop(&stats) {
+        let resp = dispatch(
+            &job.request,
+            shared.ranker.as_ref(),
+            shared.admin.as_deref(),
+            shared.started,
+            &stats,
+        );
+        let bytes = resp.serialize(job.keep_alive);
+        let r = &shared.reactors[job.reactor];
+        r.inbox.lock().unwrap().completions.push(Completion {
+            token: job.token,
+            bytes,
+            keep_alive: job.keep_alive,
+        });
+        r.waker.wake();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server handle
+// ---------------------------------------------------------------------
+
+pub struct EventedServer {
+    shared: Arc<Shared>,
+    reactors: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EventedServer {
+    pub(crate) fn start(
+        ranker: Arc<dyn PreRanker>,
+        admin: Option<Arc<dyn ScenarioAdmin>>,
+        listener: TcpListener,
+        cfg: FrontendConfig,
+        n_workers: usize,
+        stats: Arc<FrontendStats>,
+        started: Instant,
+    ) -> Result<EventedServer> {
+        sys::widen_backlog(listener.as_raw_fd(), cfg.accept_backlog);
+        let n_loops = cfg.n_event_loops.max(1);
+        let mut reactor_shared = Vec::with_capacity(n_loops);
+        let mut wake_rxs = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            let (tx, rx) = UnixStream::pair()?;
+            tx.set_nonblocking(true)?;
+            rx.set_nonblocking(true)?;
+            reactor_shared.push(ReactorShared {
+                waker: Waker { tx },
+                inbox: Mutex::new(Inbox::default()),
+            });
+            wake_rxs.push(rx);
+        }
+        let shared = Arc::new(Shared {
+            ranker,
+            admin,
+            cfg,
+            stats,
+            started,
+            draining: AtomicBool::new(false),
+            queue: JobQueue::new(
+                n_workers * OVERLOAD_QUEUE_FACTOR,
+            ),
+            reactors: reactor_shared,
+        });
+        let mut reactors = Vec::with_capacity(n_loops);
+        let mut listener = Some(listener);
+        for (id, wake_rx) in wake_rxs.into_iter().enumerate() {
+            let poller = sys::Poller::new()?;
+            let mut reactor = Reactor {
+                id,
+                shared: Arc::clone(&shared),
+                poller,
+                wake_rx,
+                listener: if id == 0 { listener.take() } else { None },
+                slab: Vec::new(),
+                free: Vec::new(),
+                open: 0,
+                next_reactor: id,
+            };
+            reactors.push(
+                std::thread::Builder::new()
+                    .name(format!("aif-reactor-{id}"))
+                    .spawn(move || reactor.run())?,
+            );
+        }
+        let mut workers = Vec::with_capacity(n_workers);
+        for id in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("aif-http-worker-{id}"))
+                    .spawn(move || worker_loop(shared))?,
+            );
+        }
+        Ok(EventedServer {
+            shared,
+            reactors,
+            workers,
+        })
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests finish
+    /// and their replies flush, close idle connections, then stop the
+    /// workers.  Reactors are joined BEFORE the job queue closes —
+    /// workers must stay alive to deliver the completions the reactors
+    /// are waiting to write out.
+    pub(crate) fn shutdown(&mut self) {
+        self.shared.draining.store(true, Ordering::Relaxed);
+        for r in &self.shared.reactors {
+            r.waker.wake();
+        }
+        for h in self.reactors.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventedServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_tokens_round_trip() {
+        for (idx, gen) in
+            [(0usize, 1u32), (7, 42), (0xffff_fffe, u32::MAX)]
+        {
+            let t = conn_token(idx, gen);
+            assert_eq!(token_parts(t), (idx, gen));
+            assert_ne!(t, TOKEN_ACCEPT);
+            assert_ne!(t, TOKEN_WAKE);
+        }
+        // Stale generations never alias live ones.
+        assert_ne!(conn_token(3, 1), conn_token(3, 2));
+    }
+
+    #[test]
+    fn waker_wakes_poller() {
+        let poller = sys::Poller::new().unwrap();
+        let (tx, rx) = UnixStream::pair().unwrap();
+        tx.set_nonblocking(true).unwrap();
+        rx.set_nonblocking(true).unwrap();
+        poller
+            .add(rx.as_raw_fd(), TOKEN_WAKE, true, false)
+            .unwrap();
+        let mut events = Vec::new();
+        // Nothing pending: times out empty.
+        poller
+            .wait(&mut events, Duration::from_millis(10))
+            .unwrap();
+        assert!(events.is_empty());
+        Waker { tx }.wake();
+        poller
+            .wait(&mut events, Duration::from_millis(1000))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == TOKEN_WAKE
+            && e.readable));
+    }
+
+    #[test]
+    fn job_queue_sheds_at_capacity_and_drains_on_close() {
+        let stats = FrontendStats::new("evented");
+        let q = JobQueue::new(2);
+        let mk = |i: u64| Job {
+            reactor: 0,
+            token: i,
+            request: crate::server::conn::Request {
+                method: "GET".into(),
+                target: "/healthz".into(),
+                http10: false,
+                headers: Vec::new(),
+                body: Vec::new(),
+            },
+            keep_alive: false,
+        };
+        assert!(q.try_push(mk(1), &stats));
+        assert!(q.try_push(mk(2), &stats));
+        assert!(!q.try_push(mk(3), &stats), "full queue sheds");
+        assert_eq!(
+            stats.queue_depth.load(Ordering::Relaxed),
+            2,
+            "depth gauge tracks"
+        );
+        q.close();
+        assert!(!q.try_push(mk(4), &stats), "closed queue sheds");
+        assert!(q.pop(&stats).is_some());
+        assert!(q.pop(&stats).is_some());
+        assert!(q.pop(&stats).is_none(), "closed + empty ends workers");
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+}

@@ -6,9 +6,11 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use aif::config::FrontendConfig;
 use aif::coordinator::{
     PhaseTimings, PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest,
     ScoreResponse, ScoredItem, ServeError,
@@ -624,4 +626,501 @@ fn metrics_count_served_requests() {
     let v = Value::parse(&body).unwrap();
     assert_eq!(v.req("requests").as_usize(), Some(3));
     server.shutdown();
+}
+
+// =====================================================================
+// Front-end battery: the same assertions against BOTH the blocking and
+// the evented front end (ISSUE 8) — keep-alive negotiation, pipelining,
+// fragmentation, protocol limits, timeouts, drain.
+// =====================================================================
+
+const MODES: [&str; 2] = ["blocking", "evented"];
+
+fn frontend_cfg(mode: &str) -> FrontendConfig {
+    FrontendConfig {
+        mode: mode.into(),
+        ..FrontendConfig::default()
+    }
+}
+
+fn start_mode_with(cfg: FrontendConfig, workers: usize) -> HttpServer {
+    let ranker: Arc<dyn PreRanker> = Arc::new(MockRanker {
+        metrics: ServingMetrics::new(),
+    });
+    HttpServer::start_frontend(ranker, None, "127.0.0.1:0", &cfg, workers)
+        .expect("server starts")
+}
+
+fn start_mode(mode: &str) -> HttpServer {
+    start_mode_with(frontend_cfg(mode), 2)
+}
+
+/// Reads exactly one response per call off a (possibly keep-alive)
+/// connection; leftover bytes stay buffered for the next call, so
+/// pipelined responses come back one at a time, in order.
+struct RespReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl RespReader {
+    fn connect(addr: &str) -> RespReader {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .expect("read timeout");
+        RespReader {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    fn send(&mut self, raw: &str) {
+        self.stream.write_all(raw.as_bytes()).expect("write request");
+    }
+
+    fn next(&mut self) -> (u16, String, String) {
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(pos) =
+                self.buf.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                break pos;
+            }
+            let n = self.stream.read(&mut chunk).expect("read head");
+            assert!(n > 0, "EOF before a full response head");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8(self.buf[..head_end].to_vec())
+            .expect("utf8 head");
+        let content_length: usize = head
+            .lines()
+            .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|v| v.trim().parse().ok())
+            .expect("Content-Length header");
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            let n = self.stream.read(&mut chunk).expect("read body");
+            assert!(n > 0, "EOF mid response body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = String::from_utf8(self.buf[head_end + 4..total].to_vec())
+            .expect("utf8 body");
+        self.buf.drain(..total);
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .expect("status code")
+            .parse()
+            .expect("numeric status");
+        (status, head, body)
+    }
+
+    /// True when the server has closed its end (no buffered leftovers).
+    fn at_eof(&mut self) -> bool {
+        if !self.buf.is_empty() {
+            return false;
+        }
+        let mut b = [0u8; 1];
+        matches!(self.stream.read(&mut b), Ok(0))
+    }
+}
+
+#[test]
+fn frontends_answer_identical_bytes() {
+    // Bitwise identity across front ends, by construction: both run the
+    // same dispatch + the same serializer.  /metrics is excluded (live
+    // counters legitimately differ).
+    // Large-but-legal head: padding stays under MAX_HEADER_BYTES.
+    let big = "x".repeat(8 * 1024);
+    let requests = [
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"
+            .to_string(),
+        "GET /v1/score?user=3&top_k=4 HTTP/1.1\r\nHost: t\r\n\
+         Connection: close\r\n\r\n"
+            .to_string(),
+        "GET /v1/score?user=99999 HTTP/1.1\r\nHost: t\r\n\
+         Connection: close\r\n\r\n"
+            .to_string(),
+        "GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n".to_string(),
+        "DELETE /v1/score HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"
+            .to_string(),
+        "GET /nope HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"
+            .to_string(),
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Length: 32\r\n\
+         Connection: close\r\n\r\n{\"users\": [1, 2, 3], \"top_k\": 2}"
+            .to_string(),
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Length: 9\r\n\
+         Connection: close\r\n\r\n{not json"
+            .to_string(),
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Length: 2000000\r\n\
+         \r\n"
+            .to_string(),
+        format!(
+            "GET /healthz HTTP/1.1\r\nHost: t\r\nX-Pad: {big}\r\n\
+             Connection: close\r\n\r\n"
+        ),
+    ];
+    let blocking = start_mode("blocking");
+    let evented = start_mode("evented");
+    for raw in &requests {
+        let a = raw_request(&blocking.addr, raw);
+        let b = raw_request(&evented.addr, raw);
+        let label = raw.lines().next().unwrap_or("");
+        assert_eq!(a, b, "front ends diverged on {label:?}");
+    }
+    blocking.shutdown();
+    evented.shutdown();
+}
+
+#[test]
+fn keep_alive_reuses_connection_and_close_is_honored() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        let mut r = RespReader::connect(&server.addr);
+        for _ in 0..3 {
+            r.send("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            let (status, head, body) = r.next();
+            assert_eq!(status, 200, "{mode}");
+            assert!(
+                head.contains("Connection: keep-alive"),
+                "{mode}: {head}"
+            );
+            assert_eq!(body, "ok", "{mode}");
+        }
+        // Explicit close is honored and echoed back.
+        r.send(
+            "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        );
+        let (status, head, _) = r.next();
+        assert_eq!(status, 200, "{mode}");
+        assert!(head.contains("Connection: close"), "{mode}: {head}");
+        assert!(r.at_eof(), "{mode}: server must close after close");
+        let stats = server.frontend_stats();
+        assert_eq!(stats.mode(), mode);
+        assert!(
+            stats.keepalive_reuses.load(Ordering::Relaxed) >= 3,
+            "{mode}: keep-alive reuse must be counted"
+        );
+        server.shutdown();
+    }
+}
+
+#[test]
+fn keepalive_budget_caps_requests_per_connection() {
+    for mode in MODES {
+        let mut cfg = frontend_cfg(mode);
+        cfg.keepalive_max_requests = 2;
+        let server = start_mode_with(cfg, 2);
+        let mut r = RespReader::connect(&server.addr);
+        r.send("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (_, head, _) = r.next();
+        assert!(head.contains("Connection: keep-alive"), "{mode}: {head}");
+        r.send("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (_, head, _) = r.next();
+        assert!(
+            head.contains("Connection: close"),
+            "{mode}: budget of 2 exhausted -> close; got {head}"
+        );
+        assert!(r.at_eof(), "{mode}: connection closes at the budget");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn http10_defaults_to_close_and_keep_alive_token_overrides() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        // HTTP/1.0 without a Connection header: close by default.
+        let (status, head, _) = raw_request(
+            &server.addr,
+            "GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n",
+        );
+        assert_eq!(status, 200, "{mode}");
+        assert!(head.contains("Connection: close"), "{mode}: {head}");
+        // HTTP/1.0 + explicit keep-alive: stays open.
+        let mut r = RespReader::connect(&server.addr);
+        r.send(
+            "GET /healthz HTTP/1.0\r\nHost: t\r\n\
+             Connection: keep-alive\r\n\r\n",
+        );
+        let (status, head, _) = r.next();
+        assert_eq!(status, 200, "{mode}");
+        assert!(head.contains("Connection: keep-alive"), "{mode}: {head}");
+        r.send("GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n");
+        let (status, _, _) = r.next();
+        assert_eq!(status, 200, "{mode}: connection stayed usable");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        let mut r = RespReader::connect(&server.addr);
+        let mut batch = String::new();
+        for user in [1usize, 2, 3] {
+            batch += &format!(
+                "GET /v1/score?user={user} HTTP/1.1\r\nHost: t\r\n\r\n"
+            );
+        }
+        r.send(&batch);
+        for user in [1usize, 2, 3] {
+            let (status, _, body) = r.next();
+            assert_eq!(status, 200, "{mode}");
+            let v = Value::parse(&body).expect("JSON body");
+            assert_eq!(v.req("user").as_usize(), Some(user), "{mode}");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn byte_at_a_time_request_parses_over_the_socket() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        let mut s = TcpStream::connect(&server.addr).expect("connect");
+        let raw =
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+        for b in raw {
+            s.write_all(std::slice::from_ref(b)).expect("write byte");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).expect("read");
+        let text = String::from_utf8(buf).expect("utf8");
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{mode}: {text}");
+        assert!(text.ends_with("ok"), "{mode}: {text}");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn oversized_header_431_and_oversized_body_413_over_the_socket() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        // An unterminated head that crosses MAX_HEADER_BYTES.  Sent in
+        // two phases (the bound trips strictly past 16 KiB) so the
+        // server has consumed every byte before it errors: the close
+        // is then a clean FIN, never an RST that could destroy the
+        // in-flight 431 reply.
+        let mut s = TcpStream::connect(&server.addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let prefix = "GET /healthz HTTP/1.1\r\nX-Pad: ";
+        let first = "a".repeat(16 * 1024 - prefix.len());
+        s.write_all(prefix.as_bytes()).expect("write");
+        s.write_all(first.as_bytes()).expect("write");
+        std::thread::sleep(Duration::from_millis(100));
+        s.write_all(&[b'a'; 1024]).expect("write");
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).expect("read 431");
+        let text = String::from_utf8(buf).expect("utf8");
+        assert!(text.starts_with("HTTP/1.1 431"), "{mode}: {text}");
+        assert!(text.contains("Connection: close"), "{mode}: {text}");
+        // Declared-oversized body is refused before any body byte.
+        let (status, _, body) = raw_request(
+            &server.addr,
+            "POST /v1/score HTTP/1.1\r\nHost: t\r\n\
+             Content-Length: 2000000\r\n\r\n",
+        );
+        assert_eq!(status, 413, "{mode}: {body}");
+        assert!(
+            server.frontend_stats().parse_errors.load(Ordering::Relaxed)
+                >= 2,
+            "{mode}"
+        );
+        server.shutdown();
+    }
+}
+
+#[test]
+fn slow_loris_times_out_without_reaching_a_scoring_worker() {
+    for mode in MODES {
+        let mut cfg = frontend_cfg(mode);
+        cfg.header_timeout_ms = 200;
+        let server = start_mode_with(cfg, 2);
+        let mut s = TcpStream::connect(&server.addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        // A partial request line, then silence.
+        s.write_all(b"GET /healthz HT").expect("write");
+        let started = Instant::now();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).expect("read 408");
+        let text = String::from_utf8(buf).expect("utf8");
+        assert!(
+            text.starts_with("HTTP/1.1 408 Request Timeout"),
+            "{mode}: {text}"
+        );
+        assert!(
+            started.elapsed() < Duration::from_secs(10),
+            "{mode}: timeout ladder must cut the slow client promptly"
+        );
+        let stats = server.frontend_stats();
+        assert_eq!(
+            stats.requests.load(Ordering::Relaxed),
+            0,
+            "{mode}: an unparsed connection must never become a request"
+        );
+        assert!(
+            stats.timed_out_header.load(Ordering::Relaxed) >= 1,
+            "{mode}"
+        );
+        server.shutdown();
+    }
+}
+
+/// MockRanker behind an artificial scoring delay, for drain tests.
+struct SlowRanker {
+    inner: MockRanker,
+    delay: Duration,
+}
+
+impl PreRanker for SlowRanker {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        std::thread::sleep(self.delay);
+        self.inner.score(req)
+    }
+
+    fn variant_name(&self) -> &str {
+        "slow-mock"
+    }
+
+    fn n_users(&self) -> usize {
+        self.inner.n_users()
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        self.inner.metrics()
+    }
+}
+
+#[test]
+fn graceful_drain_loses_no_replies() {
+    for mode in MODES {
+        let ranker: Arc<dyn PreRanker> = Arc::new(SlowRanker {
+            inner: MockRanker {
+                metrics: ServingMetrics::new(),
+            },
+            delay: Duration::from_millis(150),
+        });
+        let server = HttpServer::start_frontend(
+            ranker,
+            None,
+            "127.0.0.1:0",
+            &frontend_cfg(mode),
+            4,
+        )
+        .expect("server starts");
+        let stats = Arc::clone(server.frontend_stats());
+        let n: u64 = 6;
+        let clients: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = server.addr.clone();
+                std::thread::spawn(move || {
+                    let (status, _, body) = raw_request(
+                        &addr,
+                        &format!(
+                            "GET /v1/score?user={i} HTTP/1.1\r\nHost: t\r\n\
+                             Connection: close\r\n\r\n"
+                        ),
+                    );
+                    assert_eq!(status, 200, "{body}");
+                })
+            })
+            .collect();
+        // Wait until every request has reached the server, then drain
+        // while all of them are still being scored.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while stats.requests.load(Ordering::Relaxed) < n
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            stats.requests.load(Ordering::Relaxed),
+            n,
+            "{mode}: all requests in flight before drain"
+        );
+        server.shutdown();
+        for c in clients {
+            c.join().expect("no client lost its reply");
+        }
+        assert_eq!(
+            stats.responses.load(Ordering::Relaxed),
+            n,
+            "{mode}: drain must flush every accepted request's reply"
+        );
+        assert_eq!(
+            stats.open.load(Ordering::Relaxed),
+            0,
+            "{mode}: drain must close every connection"
+        );
+    }
+}
+
+#[test]
+fn evented_enforces_max_connections_while_idle_conns_stay_cheap() {
+    let mut cfg = frontend_cfg("evented");
+    cfg.max_connections = 8;
+    let server = start_mode_with(cfg, 2);
+    // Fill capacity with idle keep-alive connections.
+    let mut idle: Vec<TcpStream> = (0..8)
+        .map(|_| TcpStream::connect(&server.addr).expect("connect"))
+        .collect();
+    let stats = Arc::clone(server.frontend_stats());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.open.load(Ordering::Relaxed) < 8
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(stats.open.load(Ordering::Relaxed), 8);
+    // The ninth is rejected at accept: dropped without a response.
+    let mut extra = TcpStream::connect(&server.addr).expect("connect");
+    extra
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut b = [0u8; 16];
+    match extra.read(&mut b) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("rejected conn got {n} bytes"),
+    }
+    assert!(
+        stats.rejected_capacity.load(Ordering::Relaxed) >= 1,
+        "rejection must be counted"
+    );
+    // The idle connections are still live: one request round-trips.
+    let stream = idle.pop().unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let mut r = RespReader {
+        stream,
+        buf: Vec::new(),
+    };
+    r.send("GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let (status, _, body) = r.next();
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok");
+    server.shutdown();
+}
+
+#[test]
+fn metrics_expose_frontend_block_in_both_modes() {
+    for mode in MODES {
+        let server = start_mode(mode);
+        let (status, _, body) = get(&server.addr, "/metrics");
+        assert_eq!(status, 200, "{mode}");
+        let v = Value::parse(&body).expect("metrics is JSON");
+        let fe = v.req("frontend");
+        assert_eq!(fe.req("mode").as_str(), Some(mode));
+        assert!(fe.req("open").as_usize().is_some(), "{mode}");
+        assert!(fe.req("accepted").as_usize().is_some(), "{mode}");
+        assert!(fe.req("timed_out").get("idle").is_some(), "{mode}");
+        assert!(fe.get("queue_depth").is_some(), "{mode}");
+        assert!(fe.get("keepalive_reuses").is_some(), "{mode}");
+        server.shutdown();
+    }
 }

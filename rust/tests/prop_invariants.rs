@@ -801,3 +801,199 @@ fn prop_tier_histogram_is_distribution() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// HTTP request parser (server::conn): framing is invariant under
+// fragmentation, total on garbage, and bounded on unterminated heads —
+// DESIGN.md §18.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_http_parser_invariant_under_fragmentation() {
+    use aif::server::conn::RequestParser;
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n_reqs = 1 + rng.below(4) as usize;
+        let mut stream: Vec<u8> = Vec::new();
+        for _ in 0..n_reqs {
+            let eol = if rng.chance(0.7) { "\r\n" } else { "\n" };
+            let version = if rng.chance(0.25) { "1.0" } else { "1.1" };
+            let body_len =
+                if rng.chance(0.5) { rng.below(600) as usize } else { 0 };
+            let mut head = format!(
+                "POST /v1/x?u={} HTTP/{version}{eol}",
+                rng.below(1000)
+            );
+            if rng.chance(0.5) {
+                let pad = "p".repeat(rng.below(64) as usize);
+                head += &format!("X-Pad: {pad}{eol}");
+            }
+            if body_len > 0 || rng.chance(0.3) {
+                head += &format!("Content-Length: {body_len}{eol}");
+            }
+            head += eol;
+            stream.extend_from_slice(head.as_bytes());
+            for _ in 0..body_len {
+                stream.push(rng.below(256) as u8);
+            }
+        }
+        (n_reqs, stream, rng.next_u64())
+    });
+    check(
+        "parser framing invariant under fragmentation",
+        &gen,
+        300,
+        |(n_reqs, stream, seed)| {
+            // Reference: the whole stream in one push.
+            let mut whole = RequestParser::new();
+            whole.push(stream);
+            let mut reference = Vec::new();
+            loop {
+                match whole.next() {
+                    Ok(Some(r)) => reference.push(r),
+                    Ok(None) => break,
+                    Err(e) => {
+                        return Err(format!(
+                            "well-formed stream refused: {} {}",
+                            e.status, e.message
+                        ))
+                    }
+                }
+            }
+            if reference.len() != *n_reqs {
+                return Err(format!(
+                    "{} requests parsed, {n_reqs} sent",
+                    reference.len()
+                ));
+            }
+            // Same stream, random 1..=7-byte fragments.
+            let mut rng = Pcg64::new(*seed);
+            let mut frag = RequestParser::new();
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < stream.len() {
+                let end = (i + 1 + rng.below(7) as usize).min(stream.len());
+                frag.push(&stream[i..end]);
+                i = end;
+                loop {
+                    match frag.next() {
+                        Ok(Some(r)) => out.push(r),
+                        Ok(None) => break,
+                        Err(e) => {
+                            return Err(format!(
+                                "fragmented refused: {} {}",
+                                e.status, e.message
+                            ))
+                        }
+                    }
+                }
+            }
+            if out != reference {
+                return Err("fragmented parse diverged".into());
+            }
+            if frag.buffered() != 0 {
+                return Err(format!(
+                    "{} bytes left buffered",
+                    frag.buffered()
+                ));
+            }
+            if frag.parsed_requests() != *n_reqs as u64 {
+                return Err("parsed_requests counter wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_http_parser_never_panics_and_failure_is_terminal() {
+    use aif::server::conn::RequestParser;
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let n_chunks = 1 + rng.below(12) as usize;
+        let mut stream: Vec<u8> = Vec::new();
+        for _ in 0..n_chunks {
+            match rng.below(6) {
+                0 => stream.extend_from_slice(b"GET / HTTP/1.1\r\n\r\n"),
+                1 => stream.extend_from_slice(b"POST /x HTTP/9.9\r\n\r\n"),
+                2 => stream.extend_from_slice(b"Content-Length: 5\r\n"),
+                3 => stream.extend_from_slice(b"\r\n\r\n"),
+                4 => stream.extend_from_slice(b"no colon header\r\n"),
+                _ => {
+                    for _ in 0..rng.below(40) {
+                        stream.push(rng.below(256) as u8);
+                    }
+                }
+            }
+        }
+        (stream, rng.next_u64())
+    });
+    check(
+        "parser total on garbage, failure terminal",
+        &gen,
+        400,
+        |(stream, seed)| {
+            let mut rng = Pcg64::new(*seed);
+            let mut p = RequestParser::new();
+            let mut failed = None;
+            let mut i = 0;
+            'feed: while i < stream.len() {
+                let end = (i + 1 + rng.below(16) as usize).min(stream.len());
+                p.push(&stream[i..end]);
+                i = end;
+                loop {
+                    match p.next() {
+                        Ok(Some(_)) => {}
+                        Ok(None) => break,
+                        Err(e) => {
+                            if !(400..=599).contains(&e.status) {
+                                return Err(format!(
+                                    "non-5xx/4xx status {}",
+                                    e.status
+                                ));
+                            }
+                            failed = Some(e.status);
+                            break 'feed;
+                        }
+                    }
+                }
+            }
+            if let Some(status) = failed {
+                // A failed connection never revives, even on valid bytes.
+                p.push(b"GET / HTTP/1.1\r\n\r\n");
+                if p.next().is_ok() {
+                    return Err(format!("parser revived after a {status}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unterminated_head_431s_before_twice_the_bound() {
+    use aif::server::conn::{RequestParser, MAX_HEADER_BYTES};
+    let gen = Gen::new(|rng: &mut Pcg64| 1 + rng.below(96) as usize);
+    check("unterminated head refused at bound", &gen, 60, |&chunk| {
+        let prefix: &[u8] = b"GET / HTTP/1.1\r\nX-Pad: ";
+        let mut p = RequestParser::new();
+        p.push(prefix);
+        let mut pushed = prefix.len();
+        let pad = vec![b'a'; chunk];
+        loop {
+            match p.next() {
+                Ok(None) => {}
+                Ok(Some(r)) => {
+                    return Err(format!("parsed {:?}", r.target))
+                }
+                Err(e) if e.status == 431 => return Ok(()),
+                Err(e) => {
+                    return Err(format!("wrong status {}", e.status))
+                }
+            }
+            if pushed > 2 * MAX_HEADER_BYTES {
+                return Err("no 431 by twice the bound".into());
+            }
+            p.push(&pad);
+            pushed += chunk;
+        }
+    });
+}
