@@ -1,0 +1,425 @@
+//! Distributed serving tier scaling bench (DESIGN.md §19): real worker
+//! *processes* (`aif serve --role worker`) behind an in-process
+//! `RemotePreRanker` router, all over one synthetic fixture artifact set.
+//!
+//! Gates (quick mode runs in CI via `AIF_QUICK=1`):
+//!
+//! * **near-linear throughput scaling**: saturated-router QPS at 2
+//!   workers is >= 1.8x the 1-worker baseline (full runs also gate
+//!   >= 3.2x at 4 workers);
+//! * **bitwise identity**: explicit-candidate top-K through the router
+//!   (scatter-gather across shards) equals a single-node `Merger` over
+//!   the same artifacts, bit for bit;
+//! * **zero failed requests** across a worker kill, ejection, and the
+//!   join + readmission of a replacement process.
+//!
+//! Results are written to `BENCH_cluster.json` (override with
+//! `AIF_BENCH_OUT`).  `AIF_ARTIFACTS` points at a real artifact set;
+//! otherwise a synthetic fixture is generated.  Workers are spawned from
+//! `CARGO_BIN_EXE_aif` with `--addr 127.0.0.1:0`; the assigned port is
+//! scraped from the `AIF_SERVE_ADDR=` line on stderr.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aif::config::{ClusterConfig, ServingConfig};
+use aif::coordinator::{
+    Merger, PreRanker, RemotePreRanker, ScenarioAdmin, ScoreRequest,
+};
+use aif::util::fixture;
+use aif::util::json::{Object, Value};
+
+/// Users in the default fixture (`util::fixture::N_USERS`).
+const N_USERS: usize = 24;
+
+/// Worker serving profile, shared by every spawned process AND the
+/// single-node reference `Merger` (bitwise identity needs one config).
+/// Latencies are modeled sleeps with zero jitter: per-request wall time
+/// is I/O-shaped and deterministic, so throughput scales with worker
+/// concurrency, not host cores.
+const WORKER_CFG: &str = r#"{
+  "n_rtp_workers": 2,
+  "n_async_workers": 4,
+  "n_http_workers": 4,
+  "n_candidates": 48,
+  "top_k": 16,
+  "sim_parse_us": 0.1,
+  "retrieval_latency": {"base_us": 20000, "jitter_sigma": 0},
+  "user_store_latency": {"base_us": 2000, "jitter_sigma": 0},
+  "item_store_latency": {"base_us": 500, "jitter_sigma": 0}
+}"#;
+
+/// One worker process; killed (and reaped) on drop.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_serve(args: &[&str]) -> Worker {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_aif"))
+        .arg("serve")
+        .args(args)
+        .args(["--addr", "127.0.0.1:0"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning serve process");
+    let mut reader = BufReader::new(child.stderr.take().unwrap());
+    let mut addr = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("worker stderr");
+        if n == 0 {
+            break; // worker died before binding
+        }
+        if let Some(rest) = line.trim().strip_prefix("AIF_SERVE_ADDR=") {
+            addr = Some(rest.to_string());
+            break;
+        }
+    }
+    let addr = addr.expect("serve process printed AIF_SERVE_ADDR=");
+    // Keep draining stderr so the process never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = std::io::sink();
+        let _ = std::io::copy(&mut reader, &mut sink);
+    });
+    Worker { child, addr }
+}
+
+fn spawn_worker(artifacts: &str, cfg_path: &str) -> Worker {
+    spawn_serve(&[
+        "--role",
+        "worker",
+        "--config",
+        cfg_path,
+        "--artifacts",
+        artifacts,
+    ])
+}
+
+/// In-process router over the first `n` workers.  Probing is disabled;
+/// the bench drives health transitions via request outcomes and
+/// `probe_all_now`.
+fn router_over(addrs: &[String]) -> Arc<RemotePreRanker> {
+    RemotePreRanker::connect(ClusterConfig {
+        workers: addrs.to_vec(),
+        probe_interval_ms: 0,
+        retries: 3,
+        eject_after: 1,
+        readmit_after: 1,
+        backoff_ms: 5,
+        connect_timeout_ms: 2_000,
+        request_timeout_ms: 30_000,
+        ..ClusterConfig::default()
+    })
+}
+
+/// Drive `threads x per_thread` requests at the router; returns
+/// (qps, ok, errors).
+fn measure(
+    router: &Arc<RemotePreRanker>,
+    threads: usize,
+    per_thread: usize,
+) -> (f64, u64, u64) {
+    let ok = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let router = Arc::clone(router);
+            let ok = &ok;
+            let errors = &errors;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let user = (t * per_thread + i) % N_USERS;
+                    match router.score(ScoreRequest::user(user)) {
+                        Ok(_) => ok.fetch_add(1, Ordering::Relaxed),
+                        Err(_) => errors.fetch_add(1, Ordering::Relaxed),
+                    };
+                }
+            });
+        }
+    });
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    let n_ok = ok.load(Ordering::Relaxed);
+    (n_ok as f64 / secs, n_ok, errors.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let fleet: usize = if quick { 2 } else { 4 };
+    let per_thread: usize = if quick { 20 } else { 100 };
+
+    // ---- fixture + shared worker config ---------------------------------
+    let (artifacts, fixture_tmp) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-cluster-bench-{}",
+                std::process::id()
+            ));
+            fixture::write(&tmp).expect("fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+    let cfg_path = std::env::temp_dir()
+        .join(format!("aif-cluster-bench-cfg-{}.json", std::process::id()));
+    std::fs::write(&cfg_path, WORKER_CFG).expect("writing worker config");
+    let cfg_path_s = cfg_path.to_string_lossy().into_owned();
+
+    // ---- worker fleet ---------------------------------------------------
+    let boot_start = Instant::now();
+    let mut workers: Vec<Worker> =
+        (0..fleet).map(|_| spawn_worker(&artifacts, &cfg_path_s)).collect();
+    let boot_ms = boot_start.elapsed().as_millis() as u64;
+    let addrs: Vec<String> =
+        workers.iter().map(|w| w.addr.clone()).collect();
+    println!(
+        "{fleet} worker process(es) up in {boot_ms}ms: {}",
+        addrs.join(", ")
+    );
+
+    // ---- throughput scaling ---------------------------------------------
+    let sizes: Vec<usize> =
+        (0..).map(|p| 1usize << p).take_while(|w| *w <= fleet).collect();
+    let mut scaling = Vec::new();
+    let mut qps_by_size = Vec::new();
+    for &w in &sizes {
+        let router = router_over(&addrs[..w]);
+        assert_eq!(
+            router.cluster().n_healthy(),
+            w,
+            "all {w} workers healthy before the measurement"
+        );
+        // Warm caches and connection pools outside the timed window.
+        for user in 0..N_USERS {
+            router
+                .score(ScoreRequest::user(user))
+                .expect("warmup scores");
+        }
+        let (qps, n_ok, n_err) = measure(&router, 8 * w, per_thread);
+        assert_eq!(n_err, 0, "throughput run must not shed or fail");
+        println!("  {w} worker(s): {qps:.0} req/s ({n_ok} requests)");
+        let mut row = Object::new();
+        row.insert("workers", w);
+        row.insert("qps", qps);
+        row.insert("requests", n_ok);
+        row.insert("errors", n_err);
+        scaling.push(Value::Obj(row));
+        qps_by_size.push(qps);
+    }
+    let speedup_2 = qps_by_size[1] / qps_by_size[0];
+    println!("  speedup at 2 workers: {speedup_2:.2}x (gate >= 1.8x)");
+    assert!(
+        speedup_2 >= 1.8,
+        "2-worker throughput must be >= 1.8x the 1-worker baseline, \
+         got {speedup_2:.2}x"
+    );
+    let speedup_4 = (qps_by_size.len() > 2)
+        .then(|| qps_by_size[2] / qps_by_size[0]);
+    if let Some(s4) = speedup_4 {
+        println!("  speedup at 4 workers: {s4:.2}x (gate >= 3.2x)");
+        assert!(
+            s4 >= 3.2,
+            "4-worker throughput must be >= 3.2x the 1-worker \
+             baseline, got {s4:.2}x"
+        );
+    }
+
+    // ---- bitwise identity: router scatter-gather vs single node ---------
+    let mut ref_cfg = ServingConfig::from_file(&cfg_path_s)
+        .expect("reference config parses");
+    ref_cfg.artifacts_dir = artifacts.clone();
+    let reference = Merger::build(ref_cfg).expect("reference merger");
+    let router = router_over(&addrs);
+    assert_eq!(router.cluster().n_healthy(), fleet);
+    let candidates: Vec<u32> = (0..48u32).collect();
+    for user in 0..8usize {
+        let via_router = router
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16),
+            )
+            .expect("router scores");
+        let direct = reference
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16),
+            )
+            .expect("reference scores");
+        assert_eq!(via_router.items.len(), direct.items.len());
+        for (a, b) in via_router.items.iter().zip(direct.items.iter()) {
+            assert_eq!(a.item, b.item, "user {user}: item order differs");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "user {user}: item {} score differs from single node",
+                a.item
+            );
+        }
+    }
+    println!("  router top-K bitwise-identical to single node (8 users)");
+
+    // ---- kill, eject, join, readmit: zero failed requests ---------------
+    // The victim is user 0's primary shard, so the request issued right
+    // after the kill is guaranteed to hit the dead node and fail over.
+    let victim_addr = router.route_plan(0)[0].clone();
+    let victim_idx = workers
+        .iter()
+        .position(|w| w.addr == victim_addr)
+        .expect("victim is a live worker");
+    let n_kill_requests = 3 * N_USERS;
+    let mut kill_failures = 0u64;
+    for i in 0..n_kill_requests {
+        if i == n_kill_requests / 3 {
+            // SIGKILL user 0's shard owner mid-run: its shards must
+            // fail over to replicas without a single user-visible error.
+            let mut victim = workers.remove(victim_idx);
+            let _ = victim.child.kill();
+            let _ = victim.child.wait();
+        }
+        if i == 2 * n_kill_requests / 3 {
+            assert_eq!(
+                router.cluster().n_healthy(),
+                fleet - 1,
+                "the killed worker must be ejected"
+            );
+            // A replacement process joins on a fresh port and is
+            // readmitted by an explicit probe round.
+            let replacement = spawn_worker(&artifacts, &cfg_path_s);
+            router
+                .cluster_join(&replacement.addr)
+                .expect("join accepts the replacement");
+            router.cluster().probe_all_now();
+            assert_eq!(router.cluster().n_healthy(), fleet);
+            workers.push(replacement);
+        }
+        if router.score(ScoreRequest::user(i % N_USERS)).is_err() {
+            kill_failures += 1;
+        }
+    }
+    assert_eq!(
+        kill_failures, 0,
+        "kill + rejoin must drop zero requests"
+    );
+    println!(
+        "  kill/eject/join/readmit: {n_kill_requests} requests, \
+         0 failures"
+    );
+    let victim_node = router
+        .cluster()
+        .members()
+        .into_iter()
+        .find(|n| n.addr == victim_addr)
+        .expect("the killed worker stays a (ejected) member");
+    let ejections = victim_node.stats.ejections.load(Ordering::Relaxed);
+    assert!(ejections >= 1, "the killed worker must register an ejection");
+    assert_eq!(victim_node.state().as_str(), "ejected");
+
+    // ---- process-level router: the full two-hop path --------------------
+    // A spawned `--role router` process fronts the (post-rejoin) fleet;
+    // the bench scores through it over plain HTTP, so forwarding, the
+    // remaining-deadline hop, and in-router scatter-gather all run in a
+    // separate OS process.
+    let worker_addrs: Vec<String> =
+        workers.iter().map(|w| w.addr.clone()).collect();
+    let workers_flag = worker_addrs.join(",");
+    let router_proc = spawn_serve(&[
+        "--role",
+        "router",
+        "--workers",
+        workers_flag.as_str(),
+    ]);
+    let client = router_over(&[router_proc.addr.clone()]);
+    assert_eq!(client.cluster().n_healthy(), 1, "router process is ready");
+    let mut proc_failures = 0u64;
+    for user in 0..N_USERS {
+        let req = ScoreRequest::user(user)
+            .with_deadline(Duration::from_secs(5));
+        if client.score(req).is_err() {
+            proc_failures += 1;
+        }
+    }
+    assert_eq!(
+        proc_failures, 0,
+        "scoring through the router process must not fail"
+    );
+    for user in 0..4usize {
+        let via_proc = client
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16),
+            )
+            .expect("router process scores explicit candidates");
+        let direct = reference
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16),
+            )
+            .expect("reference scores");
+        for (a, b) in via_proc.items.iter().zip(direct.items.iter()) {
+            assert_eq!(a.item, b.item);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+    }
+    println!(
+        "  router process: {} requests, 0 failures, top-K bitwise",
+        N_USERS + 4
+    );
+    drop(router_proc);
+
+    // ---- JSON baseline --------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_cluster.json".into());
+    let mut kill = Object::new();
+    kill.insert("requests", n_kill_requests);
+    kill.insert("failures", kill_failures);
+    kill.insert("ejections", ejections);
+    let mut o = Object::new();
+    o.insert("bench", "cluster_scaling");
+    o.insert("quick", quick);
+    o.insert("fleet", fleet);
+    o.insert("worker_boot_ms", boot_ms);
+    o.insert("scaling", Value::Arr(scaling));
+    o.insert("speedup_2_workers", speedup_2);
+    if let Some(s4) = speedup_4 {
+        o.insert("speedup_4_workers", s4);
+    }
+    o.insert("bitwise_identical", true);
+    o.insert("kill_rejoin", Value::Obj(kill));
+    let mut proc_block = Object::new();
+    proc_block.insert("requests", N_USERS + 4);
+    proc_block.insert("failures", proc_failures);
+    o.insert("router_process", Value::Obj(proc_block));
+    o.insert("cluster", router.cluster().stats_json());
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
+
+    drop(workers);
+    let _ = std::fs::remove_file(&cfg_path);
+    if let Some(tmp) = fixture_tmp {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}

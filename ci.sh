@@ -48,6 +48,14 @@ echo "== http front-end battery (release) =="
 # rejection at accept, bitwise-identical responses across front ends.
 cargo test --release -q --test http_api
 
+echo "== cluster tier battery (release) =="
+# Distributed serving tier over in-process workers: remaining-deadline
+# propagation per hop, expired-budget 504 before any wire call, shard
+# pinning, failover + ejection + rejoin and drain/join under traffic
+# with zero failed requests, scatter-gather bitwise identity vs a
+# single node.
+cargo test --release -q --test cluster
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -100,6 +108,16 @@ ulimit -n 32768 2>/dev/null \
 AIF_QUICK=1 AIF_FRONTEND_ONLY=1 \
     AIF_BENCH_OUT=/tmp/BENCH_frontend_ci.json \
     cargo bench --bench e2e_throughput
+
+echo "== cluster smoke (release, quick, multi-process) =="
+# The cluster gates run for real in CI: real worker processes behind
+# the router tier — >= 1.8x throughput at 2 workers over the 1-worker
+# baseline, bitwise top-K identity through both an in-process router
+# and a spawned `--role router` process, a worker SIGKILL ejected with
+# zero failed requests, a joined replacement readmitted by probing.
+# Emits BENCH_cluster.json.
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_cluster_ci.json \
+    cargo bench --bench cluster_scaling
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

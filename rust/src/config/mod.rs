@@ -257,6 +257,103 @@ fn parse_frontend(fe: &Value, out: &mut FrontendConfig) -> Result<()> {
     Ok(())
 }
 
+/// Cluster tier knobs (DESIGN.md §19): how a router process reaches its
+/// worker shards — membership, connection pooling, retries, probing.
+/// Only consulted in `--role router`; workers ignore it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Static worker membership, `host:port` each.  `--join` and the
+    /// `/v1/cluster/*` admin endpoints mutate the live set at runtime.
+    pub workers: Vec<String>,
+    /// Virtual nodes per worker on the placement ring.
+    pub vnodes: usize,
+    /// TCP connect timeout towards a worker, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-attempt read/write timeout towards a worker, milliseconds
+    /// (the request's own `deadline_ms`, when smaller, wins).
+    pub request_timeout_ms: u64,
+    /// Extra attempts against successive replicas after the primary
+    /// fails with a retryable error (connect failure or 5xx).
+    pub retries: u32,
+    /// Base backoff between attempts, milliseconds (doubled per retry;
+    /// a worker's `Retry-After` on 429 overrides it upward).
+    pub backoff_ms: u64,
+    /// Health-prober cadence, milliseconds (0 disables probing: nodes
+    /// are ejected/readmitted only by request outcomes and admin calls).
+    pub probe_interval_ms: u64,
+    /// Consecutive failures (probe or request) before a worker is
+    /// ejected from the ring.
+    pub eject_after: u32,
+    /// Consecutive successful probes before an ejected worker rejoins.
+    pub readmit_after: u32,
+    /// Idle keep-alive connections retained per worker.
+    pub pool_idle_per_node: usize,
+    /// In-flight request cap per worker; at the cap the replica is
+    /// skipped (all replicas capped => 429 at the router).
+    pub max_inflight_per_node: usize,
+    /// Explicit candidate lists at least this long scatter across all
+    /// healthy shards; shorter lists take the single-hop path.
+    pub scatter_min_candidates: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: Vec::new(),
+            vnodes: 64,
+            connect_timeout_ms: 250,
+            request_timeout_ms: 2_000,
+            retries: 2,
+            backoff_ms: 10,
+            probe_interval_ms: 200,
+            eject_after: 3,
+            readmit_after: 2,
+            pool_idle_per_node: 8,
+            max_inflight_per_node: 256,
+            scatter_min_candidates: 2,
+        }
+    }
+}
+
+fn parse_cluster(cl: &Value, out: &mut ClusterConfig) -> Result<()> {
+    if let Some(ws) = cl.get("workers") {
+        let arr = ws.as_arr().ok_or_else(|| {
+            anyhow::anyhow!("\"cluster.workers\" must be an array")
+        })?;
+        out.workers = arr
+            .iter()
+            .map(|w| {
+                w.as_str().map(str::to_string).ok_or_else(|| {
+                    anyhow::anyhow!("cluster worker entries must be strings")
+                })
+            })
+            .collect::<Result<_>>()?;
+    }
+    macro_rules! num {
+        ($field:ident, $key:literal, $ty:ty) => {
+            if let Some(x) = cl.get($key).and_then(Value::as_f64) {
+                out.$field = x as $ty;
+            }
+        };
+    }
+    num!(vnodes, "vnodes", usize);
+    num!(connect_timeout_ms, "connect_timeout_ms", u64);
+    num!(request_timeout_ms, "request_timeout_ms", u64);
+    num!(retries, "retries", u32);
+    num!(backoff_ms, "backoff_ms", u64);
+    num!(probe_interval_ms, "probe_interval_ms", u64);
+    num!(eject_after, "eject_after", u32);
+    num!(readmit_after, "readmit_after", u32);
+    num!(pool_idle_per_node, "pool_idle_per_node", usize);
+    num!(max_inflight_per_node, "max_inflight_per_node", usize);
+    num!(scatter_min_candidates, "scatter_min_candidates", usize);
+    out.vnodes = out.vnodes.max(1);
+    out.eject_after = out.eject_after.max(1);
+    out.readmit_after = out.readmit_after.max(1);
+    out.max_inflight_per_node = out.max_inflight_per_node.max(1);
+    Ok(())
+}
+
 /// One named scenario served by the shared [`ServingCore`]: the
 /// scenario-*specific* knobs only (variant, SIM handling, candidate count,
 /// result size, dispatch-layer coalescing).  Everything else — fleet size,
@@ -408,6 +505,9 @@ pub struct ServingConfig {
     /// tentpole).
     pub frontend: FrontendConfig,
 
+    /// Sharded cluster tier: router-side knobs (ISSUE 9 tentpole).
+    pub cluster: ClusterConfig,
+
     pub artifacts_dir: String,
 
     /// Named scenario blocks served over ONE shared core.  Empty (the
@@ -468,6 +568,7 @@ impl Default for ServingConfig {
             storage: StorageConfig::default(),
             nearline: NearlineConfig::default(),
             frontend: FrontendConfig::default(),
+            cluster: ClusterConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
             default_scenario: None,
@@ -525,6 +626,9 @@ impl ServingConfig {
         }
         if let Some(fe) = get("frontend") {
             parse_frontend(fe, &mut c.frontend)?;
+        }
+        if let Some(cl) = get("cluster") {
+            parse_cluster(cl, &mut c.cluster)?;
         }
         // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
         // Each block starts from the flat fields and overrides.
@@ -842,6 +946,59 @@ mod tests {
 
         let v = Value::parse(r#"{"frontend": {"mode": "fibers"}}"#)
             .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_empty_and_parses() {
+        let c = ServingConfig::default();
+        assert!(c.cluster.workers.is_empty(), "no static members");
+        assert_eq!(c.cluster.vnodes, 64);
+        assert_eq!(c.cluster.retries, 2);
+        assert_eq!(c.cluster.eject_after, 3);
+        assert_eq!(c.cluster.readmit_after, 2);
+        assert_eq!(c.cluster.max_inflight_per_node, 256);
+        assert_eq!(c.cluster.scatter_min_candidates, 2);
+
+        let v = Value::parse(
+            r#"{"cluster": {"workers": ["127.0.0.1:9001", "127.0.0.1:9002"],
+                 "vnodes": 16, "connect_timeout_ms": 50,
+                 "request_timeout_ms": 500, "retries": 1, "backoff_ms": 5,
+                 "probe_interval_ms": 40, "eject_after": 2,
+                 "readmit_after": 1, "pool_idle_per_node": 4,
+                 "max_inflight_per_node": 32,
+                 "scatter_min_candidates": 8}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.cluster.workers.len(), 2);
+        assert_eq!(c.cluster.workers[0], "127.0.0.1:9001");
+        assert_eq!(c.cluster.vnodes, 16);
+        assert_eq!(c.cluster.connect_timeout_ms, 50);
+        assert_eq!(c.cluster.request_timeout_ms, 500);
+        assert_eq!(c.cluster.retries, 1);
+        assert_eq!(c.cluster.backoff_ms, 5);
+        assert_eq!(c.cluster.probe_interval_ms, 40);
+        assert_eq!(c.cluster.eject_after, 2);
+        assert_eq!(c.cluster.readmit_after, 1);
+        assert_eq!(c.cluster.pool_idle_per_node, 4);
+        assert_eq!(c.cluster.max_inflight_per_node, 32);
+        assert_eq!(c.cluster.scatter_min_candidates, 8);
+
+        // Partial blocks keep remaining defaults; floors apply.
+        let v = Value::parse(
+            r#"{"cluster": {"vnodes": 0, "eject_after": 0}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.cluster.vnodes, 1, "floor of 1 vnode");
+        assert_eq!(c.cluster.eject_after, 1, "floor of 1 failure");
+        assert_eq!(c.cluster.retries, 2);
+
+        // Bad shapes are rejected, not ignored.
+        let v = Value::parse(r#"{"cluster": {"workers": "a,b"}}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+        let v = Value::parse(r#"{"cluster": {"workers": [1]}}"#).unwrap();
         assert!(ServingConfig::from_json(&v).is_err());
     }
 

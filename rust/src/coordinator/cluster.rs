@@ -1,0 +1,805 @@
+//! Cluster membership + transport for the sharded serving tier
+//! (DESIGN.md §19).  A router process holds one [`Cluster`]: the worker
+//! member list, a consistent-hash [`Router`] ring over the *healthy*
+//! subset, per-node keep-alive connection pools with in-flight caps, and
+//! a background prober that drives the failure/ejection state machine:
+//!
+//! ```text
+//!             eject_after consecutive failures
+//!   Healthy ────────────────────────────────────▶ Ejected
+//!      ▲                                            │
+//!      └────────────────────────────────────────────┘
+//!             readmit_after consecutive probe OKs
+//!
+//!   Draining: admin-removed; never auto-readmitted (only /join).
+//! ```
+//!
+//! The transport is a hand-rolled HTTP/1.1 keep-alive client (no new
+//! dependencies): request serialization, Content-Length framing, header
+//! parse, pooled reuse with a stale-retry, per-attempt deadline as a
+//! socket read/write timeout.  [`super::remote::RemotePreRanker`] builds
+//! the scoring semantics (replica retries, deadline propagation,
+//! scatter-gather) on top of this module's `request` primitive.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::config::ClusterConfig;
+use crate::coordinator::Router;
+use crate::metrics::ClusterNodeStats;
+use crate::util::json::{Object, Value};
+
+/// Membership state of one worker (the ejection state machine above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// On the ring, taking traffic.
+    Healthy,
+    /// Off the ring after consecutive failures; probed for readmission.
+    Ejected,
+    /// Off the ring by admin action; exempt from auto-readmission.
+    Draining,
+}
+
+impl NodeState {
+    fn from_u8(x: u8) -> NodeState {
+        match x {
+            0 => NodeState::Healthy,
+            1 => NodeState::Ejected,
+            _ => NodeState::Draining,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NodeState::Healthy => "healthy",
+            NodeState::Ejected => "ejected",
+            NodeState::Draining => "draining",
+        }
+    }
+}
+
+/// One worker: address, live state, failure accounting, connection pool.
+pub struct Node {
+    pub addr: String,
+    /// `NodeState` as u8 so the request path reads it without the
+    /// membership lock.
+    state: AtomicU8,
+    /// Consecutive failures while Healthy (ejection counter).
+    fails: AtomicU64,
+    /// Consecutive probe successes while Ejected (readmission counter).
+    oks: AtomicU64,
+    /// Worker-reported user universe (captured from `/readyz`); the
+    /// router surfaces `max` over healthy nodes as its own `n_users`.
+    pub n_users: AtomicU64,
+    /// Idle keep-alive connections, most recently used last.
+    idle: Mutex<Vec<TcpStream>>,
+    pub stats: ClusterNodeStats,
+}
+
+impl Node {
+    fn new(addr: &str) -> Node {
+        Node {
+            addr: addr.to_string(),
+            state: AtomicU8::new(NodeState::Ejected as u8),
+            fails: AtomicU64::new(0),
+            oks: AtomicU64::new(0),
+            n_users: AtomicU64::new(0),
+            idle: Mutex::new(Vec::new()),
+            stats: ClusterNodeStats::default(),
+        }
+    }
+
+    pub fn state(&self) -> NodeState {
+        NodeState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    fn set_state(&self, s: NodeState) {
+        self.state.store(s as u8, Ordering::Release);
+    }
+
+    /// Try to take an in-flight slot; `None` at the cap.
+    fn acquire(&self, cap: u64) -> Option<InflightGuard<'_>> {
+        let prev = self.stats.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= cap {
+            self.stats.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.stats.at_capacity.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(InflightGuard { node: self })
+    }
+
+    fn checkout(&self) -> Option<TcpStream> {
+        self.idle.lock().unwrap().pop()
+    }
+
+    fn checkin(&self, conn: TcpStream, keep: usize) {
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < keep {
+            idle.push(conn);
+        }
+    }
+
+    fn drop_idle(&self) {
+        self.idle.lock().unwrap().clear();
+    }
+}
+
+/// RAII in-flight slot on one worker (see
+/// [`ClusterConfig::max_inflight_per_node`]); releases on drop.
+pub struct InflightGuard<'a> {
+    node: &'a Node,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.node.stats.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A parsed worker reply.
+pub struct WireResponse {
+    pub status: u16,
+    /// Parsed `Retry-After` seconds, when the worker sent one.
+    pub retry_after: Option<u64>,
+    pub body: String,
+}
+
+/// Why an attempt against one worker failed.
+#[derive(Debug)]
+pub enum WireError {
+    /// TCP connect failed or timed out — the node is unreachable.
+    Connect(String),
+    /// The exchange started but died (reset, timeout, bad framing).
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Connect(e) => write!(f, "connect: {e}"),
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+/// The cluster a router process serves through.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    /// Member list; node ids on the ring index this vector.  Nodes are
+    /// never removed from the vector (only ejected/drained off the
+    /// ring), so ids stay stable across churn.
+    nodes: RwLock<Vec<Arc<Node>>>,
+    /// Placement ring over the healthy subset.
+    ring: RwLock<Router>,
+    epoch: Instant,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    prober: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// Build from static membership.  All members start `Ejected`; call
+    /// [`Cluster::probe_all_now`] (or start the prober and wait on
+    /// [`Cluster::n_healthy`]) to bring reachable workers onto the ring.
+    pub fn new(cfg: ClusterConfig) -> Arc<Cluster> {
+        let nodes: Vec<Arc<Node>> =
+            cfg.workers.iter().map(|a| Arc::new(Node::new(a))).collect();
+        let vnodes = cfg.vnodes;
+        Arc::new(Cluster {
+            cfg,
+            nodes: RwLock::new(nodes),
+            ring: RwLock::new(Router::new(0, vnodes)),
+            epoch: Instant::now(),
+            shutdown: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+            prober: Mutex::new(None),
+        })
+    }
+
+    /// Start the background health prober (idempotent).
+    pub fn start_prober(self: &Arc<Cluster>) {
+        let interval = self.cfg.probe_interval_ms;
+        if interval == 0 {
+            return;
+        }
+        let mut guard = self.prober.lock().unwrap();
+        if guard.is_some() {
+            return;
+        }
+        let cluster = Arc::clone(self);
+        let stop = Arc::clone(&self.shutdown);
+        *guard = Some(
+            std::thread::Builder::new()
+                .name("cluster-probe".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        cluster.probe_all_now();
+                        std::thread::sleep(Duration::from_millis(interval));
+                    }
+                })
+                .expect("spawn cluster prober"),
+        );
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.prober.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// One synchronous probe round over every non-draining member:
+    /// `GET /readyz` within the connect timeout.  Success feeds the
+    /// readmission counter (and captures the worker's `n_users`);
+    /// failure feeds ejection.  Returns the healthy count.
+    pub fn probe_all_now(&self) -> usize {
+        let nodes: Vec<(usize, Arc<Node>)> = {
+            let guard = self.nodes.read().unwrap();
+            guard.iter().cloned().enumerate().collect()
+        };
+        for (id, node) in nodes {
+            if node.state() == NodeState::Draining {
+                continue;
+            }
+            match self.probe_one(&node) {
+                Ok(n_users) => {
+                    if n_users > 0 {
+                        node.n_users.store(n_users, Ordering::Relaxed);
+                    }
+                    self.note_success(id, &node);
+                }
+                Err(_) => self.note_failure(id, &node),
+            }
+        }
+        self.n_healthy()
+    }
+
+    fn probe_one(&self, node: &Node) -> Result<u64, WireError> {
+        let resp = self.request(node, "GET", "/readyz", None)?;
+        if resp.status != 200 {
+            return Err(WireError::Io(format!(
+                "readyz status {}",
+                resp.status
+            )));
+        }
+        let n_users = Value::parse(&resp.body)
+            .ok()
+            .and_then(|v| v.get("n_users").and_then(Value::as_f64))
+            .unwrap_or(0.0) as u64;
+        Ok(n_users)
+    }
+
+    /// Record a successful exchange with node `id`: clears the failure
+    /// streak; while Ejected, advances readmission.
+    pub fn note_success(&self, id: usize, node: &Node) {
+        node.fails.store(0, Ordering::Relaxed);
+        match node.state() {
+            NodeState::Healthy | NodeState::Draining => {}
+            NodeState::Ejected => {
+                let oks = node.oks.fetch_add(1, Ordering::Relaxed) + 1;
+                if oks >= self.cfg.readmit_after as u64 {
+                    self.admit(id, node);
+                }
+            }
+        }
+    }
+
+    /// Record a failed exchange with node `id`: while Healthy, advances
+    /// ejection; while Ejected, resets the readmission streak.
+    pub fn note_failure(&self, id: usize, node: &Node) {
+        node.oks.store(0, Ordering::Relaxed);
+        match node.state() {
+            NodeState::Healthy => {
+                let fails = node.fails.fetch_add(1, Ordering::Relaxed) + 1;
+                if fails >= self.cfg.eject_after as u64 {
+                    self.eject(id, node);
+                }
+            }
+            NodeState::Ejected | NodeState::Draining => {}
+        }
+    }
+
+    fn admit(&self, id: usize, node: &Node) {
+        // Re-check under the ring lock so racing probes admit once.
+        let mut ring = self.ring.write().unwrap();
+        if node.state() != NodeState::Ejected {
+            return;
+        }
+        node.set_state(NodeState::Healthy);
+        node.oks.store(0, Ordering::Relaxed);
+        node.fails.store(0, Ordering::Relaxed);
+        ring.add_node(id);
+        node.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+        log::info!("cluster: worker {} admitted to the ring", node.addr);
+    }
+
+    fn eject(&self, id: usize, node: &Node) {
+        let mut ring = self.ring.write().unwrap();
+        if node.state() != NodeState::Healthy {
+            return;
+        }
+        node.set_state(NodeState::Ejected);
+        node.oks.store(0, Ordering::Relaxed);
+        ring.remove_node(id);
+        node.drop_idle();
+        node.stats.ejections.fetch_add(1, Ordering::Relaxed);
+        log::warn!("cluster: worker {} ejected from the ring", node.addr);
+    }
+
+    /// Admin join: add a new member (or clear `Draining` on a known
+    /// one).  The node enters `Ejected` and reaches the ring through the
+    /// normal readmission path, so a joining-but-unready worker never
+    /// takes traffic.
+    pub fn join(&self, addr: &str) -> (usize, bool) {
+        let mut nodes = self.nodes.write().unwrap();
+        if let Some((id, node)) =
+            nodes.iter().enumerate().find(|(_, n)| n.addr == addr)
+        {
+            if node.state() == NodeState::Draining {
+                node.set_state(NodeState::Ejected);
+                node.oks.store(0, Ordering::Relaxed);
+            }
+            return (id, false);
+        }
+        nodes.push(Arc::new(Node::new(addr)));
+        (nodes.len() - 1, true)
+    }
+
+    /// Admin drain: take `addr` off the ring now and pin it out of
+    /// auto-readmission.  Returns false for unknown members.
+    pub fn drain(&self, addr: &str) -> bool {
+        let entry = {
+            let nodes = self.nodes.read().unwrap();
+            nodes
+                .iter()
+                .enumerate()
+                .find(|(_, n)| n.addr == addr)
+                .map(|(id, n)| (id, Arc::clone(n)))
+        };
+        let Some((id, node)) = entry else {
+            return false;
+        };
+        let mut ring = self.ring.write().unwrap();
+        if node.state() == NodeState::Healthy {
+            ring.remove_node(id);
+        }
+        node.set_state(NodeState::Draining);
+        node.drop_idle();
+        log::info!("cluster: worker {} draining", node.addr);
+        true
+    }
+
+    pub fn n_healthy(&self) -> usize {
+        self.ring.read().unwrap().n_nodes()
+    }
+
+    /// Worker-reported user-universe size: the max over members (shards
+    /// replicate the user feature space; candidates are what's sharded).
+    pub fn n_users(&self) -> usize {
+        self.nodes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|n| n.n_users.load(Ordering::Relaxed) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The primary + fail-over replica chain for `key`: up to `max`
+    /// distinct healthy nodes clockwise from the key's ring position.
+    pub fn replica_chain(&self, key: u64, max: usize) -> Vec<(usize, Arc<Node>)> {
+        let ids = self.ring.read().unwrap().route_chain(key, max);
+        let nodes = self.nodes.read().unwrap();
+        ids.into_iter().map(|id| (id, Arc::clone(&nodes[id]))).collect()
+    }
+
+    /// Every node currently on the ring, ring-id order.
+    pub fn healthy_nodes(&self) -> Vec<(usize, Arc<Node>)> {
+        let ids: Vec<usize> = {
+            let ring = self.ring.read().unwrap();
+            let mut ids = ring.nodes().to_vec();
+            ids.sort_unstable();
+            ids
+        };
+        let nodes = self.nodes.read().unwrap();
+        ids.into_iter().map(|id| (id, Arc::clone(&nodes[id]))).collect()
+    }
+
+    /// All members (any state), id order.
+    pub fn members(&self) -> Vec<Arc<Node>> {
+        self.nodes.read().unwrap().clone()
+    }
+
+    /// Take an in-flight slot on `node` (None at the per-node cap).
+    pub fn slot<'a>(&self, node: &'a Node) -> Option<InflightGuard<'a>> {
+        node.acquire(self.cfg.max_inflight_per_node as u64)
+    }
+
+    /// One HTTP exchange with a worker, pooled keep-alive underneath:
+    /// checkout (or dial), send, read a full response, check back in.
+    /// A pooled connection that dies before delivering a response is
+    /// retried ONCE on a fresh dial (`pool_stale`) — the worker may
+    /// have closed it between requests (keep-alive budget, idle
+    /// timeout), which is not a node failure.
+    ///
+    /// `timeout` caps the whole attempt (connect + write + read).
+    pub fn request_within(
+        &self,
+        node: &Node,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        timeout: Duration,
+    ) -> Result<WireResponse, WireError> {
+        let started = Instant::now();
+        let mut reused = true;
+        let mut conn = match node.checkout() {
+            Some(c) => c,
+            None => {
+                reused = false;
+                self.dial(node, timeout)?
+            }
+        };
+        loop {
+            match exchange(&mut conn, &node.addr, method, path, body, {
+                let left = timeout.saturating_sub(started.elapsed());
+                if left.is_zero() {
+                    return Err(WireError::Io("attempt timed out".into()));
+                }
+                left
+            }) {
+                Ok((resp, keep_alive)) => {
+                    if reused {
+                        node.stats.pool_reused.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if keep_alive {
+                        node.checkin(conn, self.cfg.pool_idle_per_node);
+                    }
+                    return Ok(resp);
+                }
+                Err(e) if reused => {
+                    // Stale pooled socket: one fresh-dial retry.
+                    node.stats.pool_stale.fetch_add(1, Ordering::Relaxed);
+                    let _ = e;
+                    reused = false;
+                    conn = self.dial(
+                        node,
+                        timeout.saturating_sub(started.elapsed()),
+                    )?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// [`Cluster::request_within`] under the configured per-attempt
+    /// request timeout.
+    pub fn request(
+        &self,
+        node: &Node,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<WireResponse, WireError> {
+        self.request_within(
+            node,
+            method,
+            path,
+            body,
+            Duration::from_millis(self.cfg.request_timeout_ms.max(1)),
+        )
+    }
+
+    fn dial(
+        &self,
+        node: &Node,
+        timeout: Duration,
+    ) -> Result<TcpStream, WireError> {
+        let connect_to = Duration::from_millis(self.cfg.connect_timeout_ms.max(1))
+            .min(timeout.max(Duration::from_millis(1)));
+        let addr: std::net::SocketAddr = node
+            .addr
+            .parse()
+            .map_err(|e| WireError::Connect(format!("{}: {e}", node.addr)))?;
+        let conn = TcpStream::connect_timeout(&addr, connect_to)
+            .map_err(|e| WireError::Connect(format!("{}: {e}", node.addr)))?;
+        conn.set_nodelay(true).ok();
+        node.stats.pool_created.fetch_add(1, Ordering::Relaxed);
+        Ok(conn)
+    }
+
+    /// The `/metrics` `cluster` block / `GET /v1/cluster` body.
+    pub fn stats_json(&self) -> Value {
+        let wall = self.epoch.elapsed();
+        let nodes = self.nodes.read().unwrap();
+        let mut arr = Vec::with_capacity(nodes.len());
+        let mut healthy = 0usize;
+        for (id, node) in nodes.iter().enumerate() {
+            let state = node.state();
+            if state == NodeState::Healthy {
+                healthy += 1;
+            }
+            let mut o = Object::new();
+            o.insert("id", id);
+            o.insert("addr", node.addr.as_str());
+            o.insert("state", state.as_str());
+            o.insert("n_users", node.n_users.load(Ordering::Relaxed));
+            o.insert("stats", node.stats.snapshot(wall));
+            arr.push(Value::Obj(o));
+        }
+        let mut top = Object::new();
+        top.insert("n_members", nodes.len());
+        top.insert("n_healthy", healthy);
+        top.insert("vnodes", self.cfg.vnodes);
+        top.insert("workers", Value::Arr(arr));
+        Value::Obj(top)
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.prober.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One request/response over an established connection.  Returns the
+/// parsed response and whether the connection may be reused.
+fn exchange(
+    conn: &mut TcpStream,
+    host: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<(WireResponse, bool), WireError> {
+    let io = |e: std::io::Error| WireError::Io(e.to_string());
+    conn.set_write_timeout(Some(timeout)).map_err(io)?;
+    conn.set_read_timeout(Some(timeout)).map_err(io)?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        body.len(),
+    );
+    conn.write_all(req.as_bytes()).map_err(io)?;
+
+    // Read the full head, then exactly Content-Length body bytes.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = find_head_end(&buf) {
+            break p;
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(WireError::Io("response head too large".into()));
+        }
+        let n = conn.read(&mut chunk).map_err(io)?;
+        if n == 0 {
+            return Err(WireError::Io("connection closed mid-response".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| WireError::Io("non-utf8 response head".into()))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            WireError::Io(format!("bad status line {status_line:?}"))
+        })?;
+    let mut content_length = 0usize;
+    let mut retry_after = None;
+    let mut keep_alive = true;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value.parse().map_err(|_| {
+                WireError::Io(format!("bad content-length {value:?}"))
+            })?;
+        } else if name.eq_ignore_ascii_case("retry-after") {
+            retry_after = value.parse().ok();
+        } else if name.eq_ignore_ascii_case("connection")
+            && value.eq_ignore_ascii_case("close")
+        {
+            keep_alive = false;
+        }
+    }
+    let body_start = head_end + 4;
+    let mut body_bytes = buf.split_off(body_start.min(buf.len()));
+    while body_bytes.len() < content_length {
+        let n = conn.read(&mut chunk).map_err(io)?;
+        if n == 0 {
+            return Err(WireError::Io("connection closed mid-body".into()));
+        }
+        body_bytes.extend_from_slice(&chunk[..n]);
+    }
+    body_bytes.truncate(content_length);
+    let body = String::from_utf8(body_bytes)
+        .map_err(|_| WireError::Io("non-utf8 response body".into()))?;
+    Ok((
+        WireResponse {
+            status,
+            retry_after,
+            body,
+        },
+        keep_alive,
+    ))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Shard key of a user id — the same SplitMix-hashed placement the
+/// in-process phase router uses, applied at the cluster level.
+pub fn user_shard_key(user: usize) -> u64 {
+    user as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg(workers: &[&str]) -> ClusterConfig {
+        ClusterConfig {
+            workers: workers.iter().map(|s| s.to_string()).collect(),
+            probe_interval_ms: 0,
+            eject_after: 2,
+            readmit_after: 2,
+            ..ClusterConfig::default()
+        }
+    }
+
+    fn node(cluster: &Cluster, id: usize) -> Arc<Node> {
+        cluster.members()[id].clone()
+    }
+
+    #[test]
+    fn members_start_off_ring_until_admitted() {
+        let c = Cluster::new(test_cfg(&["127.0.0.1:1", "127.0.0.1:2"]));
+        assert_eq!(c.n_healthy(), 0);
+        assert_eq!(c.members().len(), 2);
+        let n0 = node(&c, 0);
+        c.note_success(0, &n0);
+        assert_eq!(c.n_healthy(), 0, "one OK < readmit_after");
+        c.note_success(0, &n0);
+        assert_eq!(c.n_healthy(), 1);
+        assert_eq!(n0.state(), NodeState::Healthy);
+        assert_eq!(n0.stats.readmissions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn consecutive_failures_eject_and_probes_readmit() {
+        let c = Cluster::new(test_cfg(&["127.0.0.1:1"]));
+        let n0 = node(&c, 0);
+        c.note_success(0, &n0);
+        c.note_success(0, &n0);
+        assert_eq!(c.n_healthy(), 1);
+        c.note_failure(0, &n0);
+        assert_eq!(c.n_healthy(), 1, "one failure < eject_after");
+        // A success in between clears the streak.
+        c.note_success(0, &n0);
+        c.note_failure(0, &n0);
+        assert_eq!(c.n_healthy(), 1);
+        c.note_failure(0, &n0);
+        assert_eq!(c.n_healthy(), 0, "streak of eject_after ejects");
+        assert_eq!(n0.state(), NodeState::Ejected);
+        assert_eq!(n0.stats.ejections.load(Ordering::Relaxed), 1);
+        // Failures while ejected reset the readmission streak.
+        c.note_success(0, &n0);
+        c.note_failure(0, &n0);
+        c.note_success(0, &n0);
+        assert_eq!(c.n_healthy(), 0);
+        c.note_success(0, &n0);
+        assert_eq!(c.n_healthy(), 1);
+    }
+
+    #[test]
+    fn drain_pins_out_and_join_readmits() {
+        let c = Cluster::new(test_cfg(&["127.0.0.1:1", "127.0.0.1:2"]));
+        for id in 0..2 {
+            let n = node(&c, id);
+            c.note_success(id, &n);
+            c.note_success(id, &n);
+        }
+        assert_eq!(c.n_healthy(), 2);
+        assert!(c.drain("127.0.0.1:2"));
+        assert!(!c.drain("127.0.0.1:9"), "unknown member");
+        assert_eq!(c.n_healthy(), 1);
+        let n1 = node(&c, 1);
+        assert_eq!(n1.state(), NodeState::Draining);
+        // Draining is exempt from auto-readmission...
+        c.note_success(1, &n1);
+        c.note_success(1, &n1);
+        assert_eq!(c.n_healthy(), 1);
+        // ...until an explicit join clears it back to Ejected.
+        let (id, created) = c.join("127.0.0.1:2");
+        assert_eq!((id, created), (1, false));
+        assert_eq!(n1.state(), NodeState::Ejected);
+        c.note_success(1, &n1);
+        c.note_success(1, &n1);
+        assert_eq!(c.n_healthy(), 2);
+        // Joining an unknown address appends a member.
+        let (id, created) = c.join("127.0.0.1:3");
+        assert_eq!((id, created), (2, true));
+        assert_eq!(c.members().len(), 3);
+    }
+
+    #[test]
+    fn replica_chain_covers_healthy_nodes() {
+        let c = Cluster::new(test_cfg(&[
+            "127.0.0.1:1",
+            "127.0.0.1:2",
+            "127.0.0.1:3",
+        ]));
+        for id in 0..3 {
+            let n = node(&c, id);
+            c.note_success(id, &n);
+            c.note_success(id, &n);
+        }
+        let chain = c.replica_chain(42, 3);
+        assert_eq!(chain.len(), 3);
+        let mut ids: Vec<usize> = chain.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // Chains shrink with the healthy set; drained nodes drop out.
+        c.drain("127.0.0.1:2");
+        let chain = c.replica_chain(42, 3);
+        assert_eq!(chain.len(), 2);
+        assert!(chain.iter().all(|(id, _)| *id != 1));
+    }
+
+    #[test]
+    fn inflight_cap_rejects_at_capacity() {
+        let mut cfg = test_cfg(&["127.0.0.1:1"]);
+        cfg.max_inflight_per_node = 2;
+        let c = Cluster::new(cfg);
+        let n0 = node(&c, 0);
+        let a = c.slot(&n0);
+        let b = c.slot(&n0);
+        assert!(a.is_some() && b.is_some());
+        assert!(c.slot(&n0).is_none(), "cap reached");
+        assert_eq!(n0.stats.at_capacity.load(Ordering::Relaxed), 1);
+        drop(a);
+        assert!(c.slot(&n0).is_some(), "slot released on drop");
+    }
+
+    #[test]
+    fn stats_json_reports_membership() {
+        let c = Cluster::new(test_cfg(&["127.0.0.1:1", "127.0.0.1:2"]));
+        let n0 = node(&c, 0);
+        c.note_success(0, &n0);
+        c.note_success(0, &n0);
+        let v = c.stats_json();
+        assert_eq!(v.req("n_members").as_usize(), Some(2));
+        assert_eq!(v.req("n_healthy").as_usize(), Some(1));
+        let workers = v.req("workers").as_arr().unwrap();
+        assert_eq!(workers[0].req("state").as_str(), Some("healthy"));
+        assert_eq!(workers[1].req("state").as_str(), Some("ejected"));
+        assert!(workers[0].req("stats").get("requests").is_some());
+    }
+
+    #[test]
+    fn probe_round_against_dead_addrs_ejects_nobody_twice() {
+        // Unreachable loopback ports: probes fail, members stay Ejected
+        // (they were never admitted), and the round returns 0 healthy.
+        let mut cfg = test_cfg(&["127.0.0.1:9", "127.0.0.1:13"]);
+        cfg.connect_timeout_ms = 20;
+        let c = Cluster::new(cfg);
+        assert_eq!(c.probe_all_now(), 0);
+        for n in c.members() {
+            assert_eq!(n.state(), NodeState::Ejected);
+            assert_eq!(n.stats.ejections.load(Ordering::Relaxed), 0);
+        }
+    }
+}

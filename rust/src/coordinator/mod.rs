@@ -7,14 +7,18 @@
 //! that composes them.
 
 pub mod batcher;
+pub mod cluster;
 pub mod core;
 pub mod merger;
+pub mod remote;
 pub mod router;
 pub mod scenario;
 pub mod service;
 
 pub use self::core::{ServingCore, AUTO_REQUEST_ID_BASE};
+pub use cluster::Cluster;
 pub use merger::Merger;
+pub use remote::RemotePreRanker;
 pub use router::Router;
 pub use scenario::{ScenarioEngine, ScenarioRegistry};
 pub use service::{

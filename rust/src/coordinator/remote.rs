@@ -1,0 +1,755 @@
+//! [`RemotePreRanker`]: the [`PreRanker`] seam of the sharded serving
+//! tier (DESIGN.md §19).  A router process holds one of these over a
+//! [`Cluster`] of worker processes; because it implements the same trait
+//! as the in-process `Merger`, every workload, bench and front end runs
+//! against the cluster unchanged.
+//!
+//! Request semantics built on the cluster transport:
+//!
+//! * **Placement** — a user's requests pin to one shard via the
+//!   consistent-hash ring, so the worker-side user cache and async state
+//!   stay node-local exactly as in the single-process design.
+//! * **Deadline propagation** — each hop forwards the *remaining*
+//!   budget: `deadline_ms` minus the time already burned at the router
+//!   (queueing, earlier attempts, backoff).  An exhausted budget
+//!   short-circuits with `DeadlineExceeded` before any remote call.
+//! * **Fail-over** — connect errors and 5xx retry against the next
+//!   replica on the ring with doubling backoff; 429 retries honor the
+//!   worker's `Retry-After`.  Failures feed the ejection state machine;
+//!   successes feed readmission.
+//! * **Scatter-gather** — an explicit candidate list with an explicit
+//!   `top_k` fans out in contiguous chunks across every healthy shard;
+//!   per-shard top-K lists merge by `(score desc, original candidate
+//!   position asc)` — the same tie-break `batcher::top_k` applies — so
+//!   the global result is bitwise-identical to a single node scoring
+//!   the full list.
+
+use std::sync::atomic::Ordering as atomic;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ClusterConfig;
+use crate::coordinator::cluster::{
+    user_shard_key, Cluster, Node, WireError,
+};
+use crate::coordinator::service::{
+    PhaseTimings, PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest,
+    ScoreResponse, ScoreTrace, ScoredItem, ServeError, StageSpan,
+};
+use crate::metrics::ServingMetrics;
+use crate::util::json::{Object, Value};
+
+pub struct RemotePreRanker {
+    cluster: Arc<Cluster>,
+    metrics: ServingMetrics,
+    variant: String,
+}
+
+impl RemotePreRanker {
+    /// Build over an existing cluster (must already be probing, or be
+    /// driven via [`Cluster::probe_all_now`]).
+    pub fn over(cluster: Arc<Cluster>) -> RemotePreRanker {
+        RemotePreRanker {
+            cluster,
+            metrics: ServingMetrics::new(),
+            variant: "cluster".into(),
+        }
+    }
+
+    /// Build from config: construct the cluster, run one synchronous
+    /// probe round (so immediately-issued requests see every live
+    /// worker), then start the background prober.
+    pub fn connect(cfg: ClusterConfig) -> Arc<RemotePreRanker> {
+        let cluster = Cluster::new(cfg);
+        // Two rounds: readmit_after successes admit a reachable worker.
+        for _ in 0..cluster.cfg.readmit_after.max(1) {
+            cluster.probe_all_now();
+        }
+        cluster.start_prober();
+        Arc::new(Self::over(cluster))
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// The shard fail-over order this router would try for `user` —
+    /// worker addresses, primary first.  Debug/test accessor.
+    pub fn route_plan(&self, user: usize) -> Vec<String> {
+        self.cluster
+            .replica_chain(
+                user_shard_key(user),
+                1 + self.cluster.cfg.retries as usize,
+            )
+            .into_iter()
+            .map(|(_, n)| n.addr.clone())
+            .collect()
+    }
+
+    /// Remaining budget, or the 504 to fail with.  `Ok(None)` = no
+    /// deadline.
+    fn remaining(
+        budget: Option<Duration>,
+        started: Instant,
+    ) -> Result<Option<Duration>, ServeError> {
+        let Some(b) = budget else { return Ok(None) };
+        let elapsed = started.elapsed();
+        if elapsed >= b {
+            return Err(ServeError::DeadlineExceeded {
+                budget_ms: b.as_secs_f64() * 1e3,
+                elapsed_ms: elapsed.as_secs_f64() * 1e3,
+            });
+        }
+        Ok(Some(b - elapsed))
+    }
+
+    /// Serve `req` against the replica chain, retrying per the cluster
+    /// policy.  `chain` is (ring id, node), primary first.
+    fn serve_on_chain(
+        &self,
+        req: &ScoreRequest,
+        chain: &[(usize, Arc<Node>)],
+        started: Instant,
+    ) -> Result<ScoreResponse, ServeError> {
+        let cfg = &self.cluster.cfg;
+        if chain.is_empty() {
+            return Err(ServeError::Overloaded(
+                "no healthy workers on the ring".into(),
+            ));
+        }
+        let attempts = 1 + cfg.retries as usize;
+        let mut last_err =
+            ServeError::Internal("request not attempted".into());
+        let mut all_at_capacity = true;
+        for attempt in 0..attempts {
+            let (id, node) = &chain[attempt % chain.len()];
+            // Deadline check per attempt: earlier hops + backoff burn
+            // budget, and the worker must only ever see what's left.
+            let remaining = Self::remaining(req.deadline, started)?;
+            let Some(_slot) = self.cluster.slot(node) else {
+                last_err = ServeError::Overloaded(format!(
+                    "worker {} at in-flight capacity",
+                    node.addr
+                ));
+                continue;
+            };
+            all_at_capacity = false;
+            let mut wire_req = req.clone();
+            wire_req.request_id = None;
+            wire_req.deadline = remaining;
+            let body = wire_req.to_json().to_string();
+            let timeout = remaining
+                .unwrap_or(Duration::MAX)
+                .min(Duration::from_millis(cfg.request_timeout_ms.max(1)));
+            node.stats.requests.fetch_add(1, atomic::Relaxed);
+            if attempt > 0 {
+                node.stats.retries.fetch_add(1, atomic::Relaxed);
+            }
+            let t0 = Instant::now();
+            let result = self.cluster.request_within(
+                node,
+                "POST",
+                "/v1/score",
+                Some(&body),
+                timeout,
+            );
+            node.stats.rtt.record(t0.elapsed());
+            let mut backoff =
+                Duration::from_millis(cfg.backoff_ms << attempt.min(8));
+            match result {
+                Err(e) => {
+                    node.stats.errors.fetch_add(1, atomic::Relaxed);
+                    self.cluster.note_failure(*id, node);
+                    last_err = match e {
+                        WireError::Connect(m) | WireError::Io(m) => {
+                            ServeError::Internal(format!(
+                                "worker {}: {m}",
+                                node.addr
+                            ))
+                        }
+                    };
+                }
+                Ok(resp) if resp.status == 200 => {
+                    self.cluster.note_success(*id, node);
+                    let mut parsed = ScoreResponse::from_json(
+                        &Value::parse(&resp.body).map_err(|e| {
+                            ServeError::Internal(format!(
+                                "worker {} sent unparseable JSON: {e}",
+                                node.addr
+                            ))
+                        })?,
+                    )?;
+                    if req.trace {
+                        let trace =
+                            parsed.trace.get_or_insert_with(ScoreTrace::default);
+                        trace.stages.push(StageSpan {
+                            stage: "remote_hop",
+                            elapsed: t0.elapsed(),
+                        });
+                    }
+                    return Ok(parsed);
+                }
+                Ok(resp) if resp.status >= 500 && resp.status != 504 => {
+                    node.stats.errors.fetch_add(1, atomic::Relaxed);
+                    self.cluster.note_failure(*id, node);
+                    last_err = ServeError::Internal(format!(
+                        "worker {} answered {}: {}",
+                        node.addr,
+                        resp.status,
+                        body_error(&resp.body)
+                    ));
+                }
+                Ok(resp) if resp.status == 429 => {
+                    // The worker is alive but shedding — no ejection
+                    // credit; its Retry-After stretches our backoff.
+                    last_err = ServeError::Overloaded(format!(
+                        "worker {}: {}",
+                        node.addr,
+                        body_error(&resp.body)
+                    ));
+                    if let Some(secs) = resp.retry_after {
+                        backoff =
+                            backoff.max(Duration::from_secs(secs.min(5)));
+                    }
+                }
+                Ok(resp) => {
+                    // Definitive worker verdicts map back to typed
+                    // errors and do NOT retry.
+                    self.cluster.note_success(*id, node);
+                    let msg = body_error(&resp.body);
+                    return Err(match resp.status {
+                        404 if msg.contains("scenario") => {
+                            ServeError::UnknownScenario(
+                                req.scenario
+                                    .clone()
+                                    .unwrap_or_else(|| msg.clone()),
+                            )
+                        }
+                        404 => ServeError::UnknownUser(req.user),
+                        400 | 422 => ServeError::BadRequest(msg),
+                        504 => {
+                            let b = req
+                                .deadline
+                                .unwrap_or_default()
+                                .as_secs_f64();
+                            ServeError::DeadlineExceeded {
+                                budget_ms: b * 1e3,
+                                elapsed_ms: started.elapsed().as_secs_f64()
+                                    * 1e3,
+                            }
+                        }
+                        s => ServeError::Internal(format!(
+                            "worker {} answered {s}: {msg}",
+                            node.addr
+                        )),
+                    });
+                }
+            }
+            // Back off before the next replica, never past the deadline.
+            if attempt + 1 < attempts && !backoff.is_zero() {
+                if let Ok(Some(left)) =
+                    Self::remaining(req.deadline, started)
+                {
+                    backoff = backoff.min(left);
+                }
+                std::thread::sleep(backoff);
+            }
+        }
+        if all_at_capacity {
+            return Err(ServeError::Overloaded(
+                "all replicas at in-flight capacity".into(),
+            ));
+        }
+        Err(last_err)
+    }
+
+    /// Scatter an explicit candidate list across every healthy shard
+    /// and merge the per-shard top-K lists.  Falls back to `None` (take
+    /// the single-hop path) when the preconditions don't hold.
+    fn scatter_gather(
+        &self,
+        req: &ScoreRequest,
+        started: Instant,
+    ) -> Option<Result<ScoreResponse, ServeError>> {
+        let k = req.top_k?;
+        let candidates = req.candidates.as_ref()?;
+        if candidates.len() < self.cluster.cfg.scatter_min_candidates {
+            return None;
+        }
+        // Duplicate ids make the original-position tie-break ambiguous
+        // across shards; leave those lists on the single-hop path.
+        {
+            let mut seen = std::collections::HashSet::new();
+            if !candidates.iter().all(|c| seen.insert(*c)) {
+                return None;
+            }
+        }
+        let healthy = self.cluster.healthy_nodes();
+        if healthy.len() < 2 || candidates.len() < healthy.len() {
+            return None;
+        }
+        let n = healthy.len();
+        let remaining = match Self::remaining(req.deadline, started) {
+            Ok(r) => r,
+            Err(e) => return Some(Err(e)),
+        };
+        let ranges = split_ranges(candidates.len(), n);
+        let results: Vec<Result<ScoreResponse, ServeError>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let chunk = candidates[r.clone()].to_vec();
+                        // Fail-over chain for chunk i: shard i first,
+                        // then the other healthy shards (any worker can
+                        // score any candidates — the chunk assignment
+                        // is for load spreading, not data placement).
+                        let chain: Vec<(usize, Arc<Node>)> = (0..n)
+                            .map(|j| healthy[(i + j) % n].clone())
+                            .collect();
+                        let sub = ScoreRequest {
+                            user: req.user,
+                            request_id: None,
+                            top_k: Some(k.min(chunk.len())),
+                            candidates: Some(chunk),
+                            deadline: remaining,
+                            trace: false,
+                            scenario: req.scenario.clone(),
+                        };
+                        scope.spawn(move || {
+                            self.serve_on_chain(&sub, &chain, started)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(ServeError::Internal(
+                                "scatter worker thread panicked".into(),
+                            ))
+                        })
+                    })
+                    .collect()
+            });
+        let mut subs = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Ok(s) => subs.push(s),
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        let items = merge_top_k(
+            subs.iter().map(|s| s.items.as_slice()),
+            candidates,
+            k,
+        );
+        let first = &subs[0];
+        let max_d = |f: fn(&PhaseTimings) -> Duration| {
+            subs.iter().map(|s| f(&s.timings)).max().unwrap_or_default()
+        };
+        let user_async = subs
+            .iter()
+            .filter_map(|s| s.timings.user_async)
+            .max();
+        Some(Ok(ScoreResponse {
+            request_id: first.request_id,
+            user: req.user,
+            scenario: first.scenario.clone(),
+            variant: first.variant.clone(),
+            items,
+            timings: PhaseTimings {
+                total: started.elapsed(),
+                retrieval: max_d(|t| t.retrieval),
+                user_async,
+                prerank: max_d(|t| t.prerank),
+            },
+            trace: req.trace.then(|| ScoreTrace {
+                n_candidates: candidates.len(),
+                n_batches: subs.len(),
+                coalesced_batches: 0,
+                user_side: None,
+                stages: vec![StageSpan {
+                    stage: "scatter_gather",
+                    elapsed: started.elapsed(),
+                }],
+            }),
+        }))
+    }
+
+    fn record(&self, result: &Result<ScoreResponse, ServeError>) {
+        match result {
+            Ok(resp) => self.metrics.record_request(
+                resp.timings.total,
+                resp.timings.prerank,
+                resp.timings.user_async,
+                resp.timings.retrieval,
+            ),
+            Err(_) => {
+                self.metrics.errors.fetch_add(1, atomic::Relaxed);
+            }
+        }
+    }
+}
+
+impl PreRanker for RemotePreRanker {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        let started = Instant::now();
+        // An already-spent budget never reaches the wire.
+        if let Err(e) = Self::remaining(req.deadline, started) {
+            self.metrics.errors.fetch_add(1, atomic::Relaxed);
+            return Err(e);
+        }
+        if let Some(result) = self.scatter_gather(&req, started) {
+            self.record(&result);
+            return result;
+        }
+        let chain = self.cluster.replica_chain(
+            user_shard_key(req.user),
+            1 + self.cluster.cfg.retries as usize,
+        );
+        let result = self.serve_on_chain(&req, &chain, started);
+        self.record(&result);
+        result
+    }
+
+    fn variant_name(&self) -> &str {
+        &self.variant
+    }
+
+    fn n_users(&self) -> usize {
+        self.cluster.n_users()
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+}
+
+impl ScenarioAdmin for RemotePreRanker {
+    fn list_scenarios(&self) -> Vec<ScenarioInfo> {
+        self.fetch_scenarios()
+            .map(|(_, rows)| rows)
+            .unwrap_or_default()
+    }
+
+    fn default_scenario(&self) -> String {
+        self.fetch_scenarios()
+            .map(|(default, _)| default)
+            .unwrap_or_default()
+    }
+
+    fn reload_scenario(&self, name: &str) -> Result<ScenarioInfo, ServeError> {
+        // Fan the reload to every healthy shard; all must succeed.
+        let healthy = self.cluster.healthy_nodes();
+        if healthy.is_empty() {
+            return Err(ServeError::Overloaded(
+                "no healthy workers on the ring".into(),
+            ));
+        }
+        let path = format!("/v1/scenarios/{name}/reload");
+        let mut last: Option<ScenarioInfo> = None;
+        for (id, node) in &healthy {
+            let resp = self
+                .cluster
+                .request(node, "POST", &path, Some(""))
+                .map_err(|e| {
+                    self.cluster.note_failure(*id, node);
+                    ServeError::Internal(format!(
+                        "worker {}: {e}",
+                        node.addr
+                    ))
+                })?;
+            self.cluster.note_success(*id, node);
+            if resp.status == 404 {
+                return Err(ServeError::UnknownScenario(name.to_string()));
+            }
+            if resp.status != 200 {
+                return Err(ServeError::Internal(format!(
+                    "worker {} answered {}: {}",
+                    node.addr,
+                    resp.status,
+                    body_error(&resp.body)
+                )));
+            }
+            let v = Value::parse(&resp.body).map_err(|e| {
+                ServeError::Internal(format!("bad reload body: {e}"))
+            })?;
+            let row = v.get("reloaded").ok_or_else(|| {
+                ServeError::Internal(
+                    "bad reload body: missing \"reloaded\"".into(),
+                )
+            })?;
+            last = Some(ScenarioInfo::from_json(row)?);
+        }
+        Ok(last.expect("healthy set non-empty"))
+    }
+
+    fn scenario_metrics(&self, _wall: Duration) -> Vec<(String, Value)> {
+        Vec::new()
+    }
+
+    fn readiness(&self) -> Value {
+        let healthy = self.cluster.n_healthy();
+        let mut o = Object::new();
+        o.insert("ready", healthy > 0);
+        o.insert(
+            "state",
+            if healthy > 0 {
+                "ready"
+            } else {
+                "waiting_for_workers"
+            },
+        );
+        o.insert("role", "router");
+        o.insert("n_healthy", healthy);
+        o.insert("n_members", self.cluster.members().len());
+        o.insert("n_users", self.cluster.n_users());
+        Value::Obj(o)
+    }
+
+    fn cluster_stats(&self) -> Option<Value> {
+        Some(self.cluster.stats_json())
+    }
+
+    fn cluster_join(&self, addr: &str) -> Result<Value, ServeError> {
+        validate_addr(addr)?;
+        let (id, created) = self.cluster.join(addr);
+        let mut o = Object::new();
+        o.insert("joined", addr);
+        o.insert("id", id);
+        o.insert("created", created);
+        Ok(Value::Obj(o))
+    }
+
+    fn cluster_drain(&self, addr: &str) -> Result<Value, ServeError> {
+        if !self.cluster.drain(addr) {
+            return Err(ServeError::BadRequest(format!(
+                "unknown worker {addr:?}"
+            )));
+        }
+        let mut o = Object::new();
+        o.insert("draining", addr);
+        Ok(Value::Obj(o))
+    }
+}
+
+impl RemotePreRanker {
+    /// `GET /v1/scenarios` proxied from the first healthy shard (shards
+    /// run identical registries, so one answer represents the cluster).
+    fn fetch_scenarios(&self) -> Option<(String, Vec<ScenarioInfo>)> {
+        for (id, node) in self.cluster.healthy_nodes() {
+            let Ok(resp) =
+                self.cluster.request(&node, "GET", "/v1/scenarios", None)
+            else {
+                self.cluster.note_failure(id, &node);
+                continue;
+            };
+            self.cluster.note_success(id, &node);
+            if resp.status != 200 {
+                continue;
+            }
+            let Ok(v) = Value::parse(&resp.body) else { continue };
+            let default = v
+                .get("default")
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string();
+            let rows = v
+                .get("scenarios")
+                .and_then(Value::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|r| ScenarioInfo::from_json(r).ok())
+                        .collect()
+                })
+                .unwrap_or_default();
+            return Some((default, rows));
+        }
+        None
+    }
+}
+
+fn validate_addr(addr: &str) -> Result<(), ServeError> {
+    addr.parse::<std::net::SocketAddr>().map(|_| ()).map_err(|e| {
+        ServeError::BadRequest(format!("bad worker addr {addr:?}: {e}"))
+    })
+}
+
+/// `{"error": ..}` body -> message (raw body as fallback).
+fn body_error(body: &str) -> String {
+    Value::parse(body)
+        .ok()
+        .and_then(|v| {
+            v.get("error").and_then(Value::as_str).map(str::to_string)
+        })
+        .unwrap_or_else(|| body.chars().take(200).collect())
+}
+
+/// Split `len` items into `n` contiguous, balanced, non-empty ranges
+/// (callers guarantee `len >= n >= 1`).
+fn split_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Merge per-shard top-K lists into the global top-K with the exact
+/// tie-break `batcher::top_k` uses on a single node: score descending,
+/// then original candidate-list position ascending.
+fn merge_top_k<'a>(
+    shard_items: impl Iterator<Item = &'a [ScoredItem]>,
+    candidates: &[u32],
+    k: usize,
+) -> Vec<ScoredItem> {
+    let pos: std::collections::HashMap<u32, usize> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (c, i))
+        .collect();
+    let mut all: Vec<ScoredItem> =
+        shard_items.flat_map(|s| s.iter().copied()).collect();
+    all.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| pos[&a.item].cmp(&pos[&b.item]))
+    });
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn expired_budget_short_circuits_before_any_remote_call() {
+        // No workers configured at all: a remote call would fail with
+        // "no healthy workers" (Overloaded) — the 504 must win first.
+        let ranker = RemotePreRanker::over(Cluster::new(ClusterConfig {
+            probe_interval_ms: 0,
+            ..ClusterConfig::default()
+        }));
+        let req =
+            ScoreRequest::user(1).with_deadline(Duration::from_secs(0));
+        match ranker.score(req) {
+            Err(ServeError::DeadlineExceeded { budget_ms, .. }) => {
+                assert_eq!(budget_ms, 0.0);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(ranker.metrics.errors.load(atomic::Relaxed), 1);
+        // Without a deadline the same request reaches routing and fails
+        // on the empty ring instead.
+        match ranker.score(ScoreRequest::user(1)) {
+            Err(ServeError::Overloaded(msg)) => {
+                assert!(msg.contains("no healthy workers"), "{msg}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn split_ranges_is_contiguous_and_balanced() {
+        for (len, n) in [(10, 3), (4, 4), (7, 2), (100, 7), (5, 1)] {
+            let ranges = split_ranges(len, n);
+            assert_eq!(ranges.len(), n);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, len);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+            }
+            let sizes: Vec<usize> =
+                ranges.iter().map(|r| r.len()).collect();
+            let (min, max) = (
+                sizes.iter().min().unwrap(),
+                sizes.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "balanced: {sizes:?}");
+            assert!(*min >= 1, "non-empty: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_node_tie_break() {
+        // Candidates with a score tie across chunks: the tie must
+        // resolve by original list position, exactly like
+        // batcher::top_k on one node.
+        let candidates = vec![50u32, 10, 30, 20, 40, 60];
+        // Chunk A = [50, 10, 30], chunk B = [20, 40, 60]; item 20 and
+        // item 30 tie — 30 sits earlier in the original list.
+        let a = vec![
+            ScoredItem {
+                item: 30,
+                score: 0.5,
+            },
+            ScoredItem {
+                item: 50,
+                score: 0.4,
+            },
+        ];
+        let b = vec![
+            ScoredItem {
+                item: 20,
+                score: 0.5,
+            },
+            ScoredItem {
+                item: 60,
+                score: 0.9,
+            },
+        ];
+        let merged = merge_top_k(
+            [b.as_slice(), a.as_slice()].into_iter(),
+            &candidates,
+            3,
+        );
+        let ids: Vec<u32> = merged.iter().map(|s| s.item).collect();
+        assert_eq!(ids, vec![60, 30, 20], "tie resolves to position 2");
+    }
+
+    #[test]
+    fn join_validates_addresses() {
+        let ranker = RemotePreRanker::over(Cluster::new(ClusterConfig {
+            probe_interval_ms: 0,
+            ..ClusterConfig::default()
+        }));
+        assert!(matches!(
+            ranker.cluster_join("not-an-addr"),
+            Err(ServeError::BadRequest(_))
+        ));
+        let v = ranker.cluster_join("127.0.0.1:7001").unwrap();
+        assert_eq!(v.req("created").as_bool(), Some(true));
+        assert_eq!(ranker.cluster.members().len(), 1);
+        // Unknown drains are rejected; known ones succeed.
+        assert!(ranker.cluster_drain("127.0.0.1:9").is_err());
+        assert!(ranker.cluster_drain("127.0.0.1:7001").is_ok());
+    }
+
+    #[test]
+    fn readiness_reflects_healthy_set() {
+        let ranker = RemotePreRanker::over(Cluster::new(ClusterConfig {
+            workers: vec!["127.0.0.1:7002".into()],
+            probe_interval_ms: 0,
+            readmit_after: 1,
+            ..ClusterConfig::default()
+        }));
+        let r = ranker.readiness();
+        assert_eq!(r.req("ready").as_bool(), Some(false));
+        assert_eq!(r.req("state").as_str(), Some("waiting_for_workers"));
+        let members = ranker.cluster.members();
+        ranker.cluster.note_success(0, &members[0]);
+        let r = ranker.readiness();
+        assert_eq!(r.req("ready").as_bool(), Some(true));
+        assert_eq!(r.req("n_healthy").as_usize(), Some(1));
+    }
+}

@@ -1,9 +1,17 @@
 //! Consistent-hash ring router (paper §3.4): pins both RTP phases of a
 //! request (async user inference, pre-rank scoring) to the same worker so
 //! the cached user-side features are node-local and version-consistent.
+//! The same ring places users on cluster worker nodes (DESIGN.md §19):
+//! `coordinator::cluster` wraps one `Router` whose node ids index the
+//! member list, so shard placement and in-process phase pinning share one
+//! implementation and one set of churn invariants.
 //!
 //! Standard ring with virtual nodes; node churn remaps only the keys owned
-//! by the affected arcs (tested as a property in rust/tests/).
+//! by the affected arcs (tested as properties in rust/tests/ for BOTH
+//! removal and addition).  Ring entries are keyed `(position, node)` so
+//! two vnodes of different nodes hashing to the same `u64` position
+//! coexist deterministically (tie-break: lower node id first) instead of
+//! one silently overwriting the other.
 
 use std::collections::BTreeMap;
 
@@ -17,8 +25,10 @@ fn hash64(x: u64) -> u64 {
 
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// ring position -> node id
-    ring: BTreeMap<u64, usize>,
+    /// (ring position, node id) -> node id.  The node id in the key makes
+    /// position collisions across nodes lossless and deterministically
+    /// ordered; the value repeats it for cheap range scans.
+    ring: BTreeMap<(u64, u64), usize>,
     vnodes: usize,
     nodes: Vec<usize>,
 }
@@ -43,7 +53,7 @@ impl Router {
         self.nodes.push(node);
         for v in 0..self.vnodes {
             let pos = hash64((node as u64) << 32 | v as u64);
-            self.ring.insert(pos, node);
+            self.ring.insert((pos, node as u64), node);
         }
     }
 
@@ -51,7 +61,7 @@ impl Router {
         self.nodes.retain(|&n| n != node);
         for v in 0..self.vnodes {
             let pos = hash64((node as u64) << 32 | v as u64);
-            self.ring.remove(&pos);
+            self.ring.remove(&(pos, node as u64));
         }
     }
 
@@ -59,16 +69,59 @@ impl Router {
         self.nodes.len()
     }
 
+    /// Node ids currently on the ring, insertion order.
+    pub fn nodes(&self) -> &[usize] {
+        &self.nodes
+    }
+
+    /// Total vnode entries on the ring (all vnodes of all nodes — no
+    /// position collision may drop one).
+    pub fn ring_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Test hook: place one vnode at an exact ring position, so the
+    /// cross-node position-collision case is constructible without
+    /// hunting for real `hash64` collisions.  Not for serving paths.
+    #[doc(hidden)]
+    pub fn insert_vnode_at(&mut self, pos: u64, node: usize) {
+        if !self.nodes.contains(&node) {
+            self.nodes.push(node);
+        }
+        self.ring.insert((pos, node as u64), node);
+    }
+
     /// Route a key to a node (clockwise successor on the ring).
     pub fn route(&self, key: u64) -> usize {
         assert!(!self.ring.is_empty(), "router has no nodes");
         let h = hash64(key);
         self.ring
-            .range(h..)
+            .range((h, 0)..)
             .next()
             .or_else(|| self.ring.iter().next())
             .map(|(_, &n)| n)
             .unwrap()
+    }
+
+    /// The first `max` DISTINCT nodes clockwise from `key`'s position:
+    /// the primary replica followed by the fail-over order the cluster
+    /// tier retries in.  Shorter than `max` when the ring has fewer
+    /// nodes.
+    pub fn route_chain(&self, key: u64, max: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = Vec::with_capacity(max.min(4));
+        if self.ring.is_empty() || max == 0 {
+            return out;
+        }
+        let h = hash64(key);
+        for (_, &n) in self.ring.range((h, 0)..).chain(self.ring.iter()) {
+            if !out.contains(&n) {
+                out.push(n);
+                if out.len() >= max || out.len() >= self.nodes.len() {
+                    break;
+                }
+            }
+        }
+        out
     }
 }
 
@@ -114,5 +167,46 @@ mod tests {
             }
         }
         assert!(moved_from_others > 0);
+    }
+
+    #[test]
+    fn no_vnode_is_lost_to_position_collisions() {
+        let r = Router::new(8, 128);
+        assert_eq!(r.ring_len(), 8 * 128);
+    }
+
+    #[test]
+    fn route_chain_is_distinct_and_starts_at_primary() {
+        let r = Router::new(4, 64);
+        for k in 0..1_000u64 {
+            let chain = r.route_chain(k, 3);
+            assert_eq!(chain.len(), 3);
+            assert_eq!(chain[0], r.route(k), "primary first");
+            let mut sorted = chain.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "distinct nodes: {chain:?}");
+        }
+        // Chains are capped by the node count.
+        assert_eq!(r.route_chain(1, 16).len(), 4);
+        assert!(Router::new(1, 8).route_chain(1, 3) == vec![0]);
+    }
+
+    #[test]
+    fn colliding_vnodes_coexist_and_tie_break_deterministically() {
+        // Two different nodes at the SAME ring position: both must
+        // survive (the old `u64 -> node` ring silently dropped one).
+        let mut r = Router::new(0, 1);
+        let pos = u64::MAX - 10;
+        r.insert_vnode_at(pos, 7);
+        r.insert_vnode_at(pos, 3);
+        assert_eq!(r.ring_len(), 2, "collided vnode was dropped");
+        // A key whose position precedes the shared vnode position:
+        // virtually every key, since pos is near the top of the ring.
+        let key = (0u64..).find(|&k| hash64(k) <= pos).unwrap();
+        // Tie-break is deterministic: the lower node id owns the arc...
+        assert_eq!(r.route(key), 3);
+        // ...and the collided peer is still the next replica, not lost.
+        assert_eq!(r.route_chain(key, 2), vec![3, 7]);
     }
 }

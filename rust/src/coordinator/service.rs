@@ -195,6 +195,38 @@ impl ScoreRequest {
     }
 }
 
+impl ScoreRequest {
+    /// The wire shape of a `POST /v1/score` body — the client half of
+    /// [`ScoreRequest::from_json`], used by the cluster router to forward
+    /// requests to worker shards.  `request_id` is intentionally NOT
+    /// serialized (the wire rejects it; each worker allocates its own),
+    /// and the deadline is whatever *remaining* budget the caller put in
+    /// `self.deadline` — hop-time subtraction happens in the client, not
+    /// here.
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("user", self.user);
+        if let Some(k) = self.top_k {
+            o.insert("top_k", k);
+        }
+        if let Some(c) = &self.candidates {
+            let arr: Vec<Value> =
+                c.iter().map(|&id| Value::Num(id as f64)).collect();
+            o.insert("candidates", Value::Arr(arr));
+        }
+        if let Some(d) = self.deadline {
+            o.insert("deadline_ms", d.as_secs_f64() * 1e3);
+        }
+        if self.trace {
+            o.insert("trace", true);
+        }
+        if let Some(s) = &self.scenario {
+            o.insert("scenario", s.as_str());
+        }
+        Value::Obj(o)
+    }
+}
+
 fn parse_user(v: &Value) -> Result<usize, ServeError> {
     v.as_f64()
         .filter(|x| *x >= 0.0 && x.fract() == 0.0)
@@ -303,6 +335,121 @@ impl ScoreResponse {
         }
         Value::Obj(o)
     }
+
+    /// Parse a `/v1/score` response body back into a [`ScoreResponse`] —
+    /// the client half of [`ScoreResponse::to_json`], used by
+    /// `RemotePreRanker`.  Scores survive the f32 -> f64 -> shortest-repr
+    /// -> f64 -> f32 round trip bit-for-bit (the serializer emits the
+    /// shortest representation that parses back exactly), which is what
+    /// makes router-served top-K bitwise-comparable to single-node runs.
+    pub fn from_json(v: &Value) -> Result<ScoreResponse, ServeError> {
+        let bad = |what: &str| {
+            ServeError::Internal(format!("malformed worker response: {what}"))
+        };
+        let o = v.as_obj().ok_or_else(|| bad("not an object"))?;
+        let num =
+            |key: &str| o.get(key).and_then(Value::as_f64).ok_or_else(|| bad(key));
+        let dur = |ms: f64| Duration::from_secs_f64(ms.max(0.0) / 1e3);
+        let items_v = o
+            .get("items")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| bad("items"))?;
+        let mut items = Vec::with_capacity(items_v.len());
+        for e in items_v {
+            let item = e
+                .get("item")
+                .and_then(Value::as_f64)
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                .ok_or_else(|| bad("items[].item"))? as u32;
+            let score = e
+                .get("score")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| bad("items[].score"))? as f32;
+            items.push(ScoredItem { item, score });
+        }
+        let trace = match o.get("trace") {
+            None => None,
+            Some(t) => Some(ScoreTrace {
+                n_candidates: t
+                    .get("n_candidates")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+                n_batches: t
+                    .get("n_batches")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+                coalesced_batches: t
+                    .get("coalesced_batches")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+                user_side: t
+                    .get("user_side")
+                    .and_then(Value::as_str)
+                    .and_then(intern_user_side),
+                stages: t
+                    .get("stages")
+                    .and_then(Value::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|s| {
+                                Some(StageSpan {
+                                    stage: intern_stage(
+                                        s.get("stage")?.as_str()?,
+                                    )?,
+                                    elapsed: dur(s.get("ms")?.as_f64()?),
+                                })
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            }),
+        };
+        Ok(ScoreResponse {
+            request_id: num("request_id")? as u64,
+            user: num("user")? as usize,
+            scenario: o
+                .get("scenario")
+                .and_then(Value::as_str)
+                .ok_or_else(|| bad("scenario"))?
+                .to_string(),
+            variant: o
+                .get("variant")
+                .and_then(Value::as_str)
+                .ok_or_else(|| bad("variant"))?
+                .to_string(),
+            items,
+            timings: PhaseTimings {
+                total: dur(num("total_ms")?),
+                retrieval: dur(num("retrieval_ms")?),
+                user_async: o
+                    .get("user_async_ms")
+                    .and_then(Value::as_f64)
+                    .map(dur),
+                prerank: dur(num("prerank_ms")?),
+            },
+            trace,
+        })
+    }
+}
+
+/// `StageSpan.stage` is a `&'static str`; re-materializing a trace from
+/// the wire interns the known stage vocabulary (unknown stages from a
+/// newer worker are dropped rather than leaked or mislabeled).
+fn intern_stage(s: &str) -> Option<&'static str> {
+    const STAGES: &[&str] = &[
+        "user_async",
+        "retrieval",
+        "prerank",
+        "coalesce_wait",
+        "remote_hop",
+        "scatter_gather",
+    ];
+    STAGES.iter().find(|&&k| k == s).copied()
+}
+
+fn intern_user_side(s: &str) -> Option<&'static str> {
+    const SIDES: &[&str] = &["hit", "miss", "joined"];
+    SIDES.iter().find(|&&k| k == s).copied()
 }
 
 /// Closed error set of the request path, with a defined HTTP mapping —
@@ -398,6 +545,40 @@ impl ScenarioInfo {
         o.insert("coalescing", self.coalescing);
         Value::Obj(o)
     }
+
+    /// Parse one row of a worker's `GET /v1/scenarios` listing — used by
+    /// the cluster router to proxy the admin surface.
+    pub fn from_json(v: &Value) -> Result<ScenarioInfo, ServeError> {
+        let bad = |what: &str| {
+            ServeError::Internal(format!("malformed scenario row: {what}"))
+        };
+        Ok(ScenarioInfo {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| bad("name"))?
+                .to_string(),
+            variant: v
+                .get("variant")
+                .and_then(Value::as_str)
+                .ok_or_else(|| bad("variant"))?
+                .to_string(),
+            is_default: v
+                .get("default")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+            generation: v
+                .get("generation")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0) as u64,
+            requests: v.get("requests").and_then(Value::as_f64).unwrap_or(0.0)
+                as u64,
+            coalescing: v
+                .get("coalescing")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+        })
+    }
 }
 
 /// Admin surface of a multi-scenario service (drives `GET /v1/scenarios`,
@@ -469,6 +650,29 @@ pub trait ScenarioAdmin: Send + Sync {
         Err(ServeError::BadRequest(
             "no storage backend configured".into(),
         ))
+    }
+
+    /// Cluster membership + per-shard counters for the `/metrics`
+    /// `cluster` block and `GET /v1/cluster` (`None` on single-process
+    /// services — only the router tier has a cluster to report).
+    fn cluster_stats(&self) -> Option<Value> {
+        None
+    }
+
+    /// Admit a worker (`POST /v1/cluster/join`): adds `addr` to the
+    /// membership set in `Draining`-cleared, probe-pending state; the
+    /// ring picks it up once it probes healthy.  `BadRequest` on
+    /// services without a cluster tier.
+    fn cluster_join(&self, _addr: &str) -> Result<Value, ServeError> {
+        Err(ServeError::BadRequest("not a cluster router".into()))
+    }
+
+    /// Drain a worker (`POST /v1/cluster/drain`): removes `addr` from
+    /// the ring immediately (in-flight requests finish; new ones remap)
+    /// and pins it out of probe re-admission until a `join` readmits it.
+    /// `BadRequest` on services without a cluster tier.
+    fn cluster_drain(&self, _addr: &str) -> Result<Value, ServeError> {
+        Err(ServeError::BadRequest("not a cluster router".into()))
     }
 }
 
@@ -587,6 +791,136 @@ mod tests {
                 "{src} -> {e:?}"
             );
         }
+    }
+
+    #[test]
+    fn request_wire_round_trips() {
+        let req = ScoreRequest::user(9)
+            .with_top_k(4)
+            .with_candidates(vec![7, 1, 42])
+            .with_deadline(Duration::from_millis(35))
+            .with_trace(true)
+            .with_scenario("video");
+        let wire = Value::parse(&req.to_json().to_string()).unwrap();
+        let back = ScoreRequest::from_json(&wire).unwrap();
+        assert_eq!(back.user, 9);
+        assert_eq!(back.top_k, Some(4));
+        assert_eq!(back.candidates.as_deref(), Some(&[7, 1, 42][..]));
+        assert_eq!(back.deadline, Some(Duration::from_millis(35)));
+        assert!(back.trace);
+        assert_eq!(back.scenario.as_deref(), Some("video"));
+        // request_id never crosses the wire — workers allocate their own.
+        let req = ScoreRequest::user(1).with_request_id(77);
+        assert!(req.to_json().get("request_id").is_none());
+        // A bare request serializes to just the user (defaults omitted).
+        assert_eq!(
+            ScoreRequest::user(3).to_json().to_string(),
+            r#"{"user":3}"#
+        );
+    }
+
+    #[test]
+    fn response_wire_round_trips_scores_bitwise() {
+        // Awkward f32 values must survive serialize -> parse exactly:
+        // the cluster bitwise-identity gate rides on this.
+        let scores: Vec<f32> = (0..200)
+            .map(|i| ((i as f32 * 0.7311).sin() * 30.0).exp() / 3.0_f32)
+            .chain([f32::MIN_POSITIVE, 1e-40, 0.1, 1.0 / 3.0])
+            .collect();
+        let resp = ScoreResponse {
+            request_id: 5,
+            user: 2,
+            scenario: "main".into(),
+            variant: "aif".into(),
+            items: scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| ScoredItem {
+                    item: i as u32,
+                    score: s,
+                })
+                .collect(),
+            timings: PhaseTimings {
+                total: Duration::from_micros(20_500),
+                retrieval: Duration::from_micros(12_250),
+                user_async: None,
+                prerank: Duration::from_micros(8_125),
+            },
+            trace: Some(ScoreTrace {
+                n_candidates: 64,
+                n_batches: 4,
+                coalesced_batches: 0,
+                user_side: Some("miss"),
+                stages: vec![
+                    StageSpan {
+                        stage: "retrieval",
+                        elapsed: Duration::from_millis(12),
+                    },
+                    StageSpan {
+                        stage: "prerank",
+                        elapsed: Duration::from_millis(8),
+                    },
+                ],
+            }),
+        };
+        let wire = Value::parse(&resp.to_json().to_string()).unwrap();
+        let back = ScoreResponse::from_json(&wire).unwrap();
+        assert_eq!(back.request_id, 5);
+        assert_eq!(back.user, 2);
+        assert_eq!(back.scenario, "main");
+        assert_eq!(back.variant, "aif");
+        assert_eq!(back.items.len(), resp.items.len());
+        for (a, b) in resp.items.iter().zip(&back.items) {
+            assert_eq!(a.item, b.item);
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "score {} not bitwise after round trip",
+                a.score
+            );
+        }
+        assert!(back.timings.user_async.is_none());
+        let t = back.trace.expect("trace survives");
+        assert_eq!(t.n_candidates, 64);
+        assert_eq!(t.user_side, Some("miss"));
+        assert_eq!(t.stages.len(), 2);
+        assert_eq!(t.stages[0].stage, "retrieval");
+
+        // Malformed worker bodies surface as Internal, not panics.
+        for bad in [
+            r#"[1]"#,
+            r#"{"user": 1}"#,
+            r#"{"request_id":1,"user":1,"scenario":"s","variant":"v",
+                "total_ms":1,"retrieval_ms":1,"prerank_ms":1,
+                "items":[{"item":-3,"score":0.5}]}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(matches!(
+                ScoreResponse::from_json(&v),
+                Err(ServeError::Internal(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn scenario_info_round_trips() {
+        let info = ScenarioInfo {
+            name: "video".into(),
+            variant: "t4_lsh".into(),
+            is_default: true,
+            generation: 3,
+            requests: 91,
+            coalescing: true,
+        };
+        let wire = Value::parse(&info.to_json().to_string()).unwrap();
+        let back = ScenarioInfo::from_json(&wire).unwrap();
+        assert_eq!(back.name, "video");
+        assert_eq!(back.variant, "t4_lsh");
+        assert!(back.is_default);
+        assert_eq!(back.generation, 3);
+        assert_eq!(back.requests, 91);
+        assert!(back.coalescing);
+        assert!(ScenarioInfo::from_json(&Value::Null).is_err());
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   quickstart                     one request through the full AIF stack
-//!   serve    [--addr A]            HTTP server (/v1/score, /metrics, /healthz)
+//!   serve    [--addr A] [--role router|worker]   HTTP server (/v1/score,
+//!            /metrics, /healthz; router = sharded cluster front door)
 //!   replay   [--requests N]        closed-loop load run, prints a report
 //!   abtest   [--all-variants]      online A/B simulation (Table 2 online)
 //!   nearline                       nearline update-pipeline demo
@@ -77,7 +78,11 @@ fn usage() {
          front end: [--frontend evented|blocking] [--event-loops N] \
          [--max-connections N] [--keepalive-max-requests N] \
          [--idle-timeout-ms MS] [--header-timeout-ms MS] \
-         [--body-timeout-ms MS] [--accept-backlog N] [--http-workers N]"
+         [--body-timeout-ms MS] [--accept-backlog N] [--http-workers N]\n\
+         cluster: [--role router|worker] [--workers HOST:PORT,...] \
+         [--vnodes N] [--cluster-retries N] [--probe-interval-ms MS] \
+         [--request-timeout-ms MS] [--connect-timeout-ms MS] \
+         [--eject-after N] [--readmit-after N] [--max-inflight N]"
     );
 }
 
@@ -154,6 +159,36 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
     frontend.accept_backlog = args
         .usize_or("accept-backlog", frontend.accept_backlog)
         .max(1);
+    let mut cluster = cfg.cluster.clone();
+    if let Some(list) = args.get("workers") {
+        cluster.workers = list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    cluster.vnodes = args.usize_or("vnodes", cluster.vnodes).max(1);
+    cluster.retries = args
+        .usize_or("cluster-retries", cluster.retries as usize)
+        as u32;
+    cluster.probe_interval_ms = args
+        .usize_or("probe-interval-ms", cluster.probe_interval_ms as usize)
+        as u64;
+    cluster.request_timeout_ms = args
+        .usize_or("request-timeout-ms", cluster.request_timeout_ms as usize)
+        as u64;
+    cluster.connect_timeout_ms = args
+        .usize_or("connect-timeout-ms", cluster.connect_timeout_ms as usize)
+        as u64;
+    cluster.eject_after = args
+        .usize_or("eject-after", cluster.eject_after as usize)
+        .max(1) as u32;
+    cluster.readmit_after = args
+        .usize_or("readmit-after", cluster.readmit_after as usize)
+        .max(1) as u32;
+    cluster.max_inflight_per_node = args
+        .usize_or("max-inflight", cluster.max_inflight_per_node)
+        .max(1);
     let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -174,6 +209,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         storage,
         nearline,
         frontend,
+        cluster,
         ..cfg
     };
     // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`
@@ -277,20 +313,55 @@ fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = resolve_cfg(args)?;
+    let role = args.str_or("role", "worker");
+    let addr = args.str_or("addr", "127.0.0.1:8787");
     let n_http_workers = cfg.n_http_workers;
     let frontend = cfg.frontend.clone();
-    let merger = build_merger_from(cfg)?;
-    let addr = args.str_or("addr", "127.0.0.1:8787");
-    let admin: Arc<dyn ScenarioAdmin> = Arc::clone(&merger);
-    let server = aif::server::HttpServer::start_frontend(
-        merger,
-        Some(admin),
-        &addr,
-        &frontend,
-        n_http_workers,
-    )?;
+    let server = match role.as_str() {
+        "router" => {
+            // Thin shard router: no local pipeline — every request is
+            // consistent-hashed onto a worker (DESIGN.md §19).
+            let cluster = cfg.cluster.clone();
+            anyhow::ensure!(
+                !cluster.workers.is_empty(),
+                "--role router needs --workers HOST:PORT,... (or a \
+                 \"cluster\" config block with \"workers\")"
+            );
+            let router =
+                aif::coordinator::RemotePreRanker::connect(cluster);
+            eprintln!(
+                "router over {} worker(s), {} healthy after first probes",
+                router.cluster().members().len(),
+                router.cluster().n_healthy(),
+            );
+            let admin: Arc<dyn ScenarioAdmin> = router.clone();
+            aif::server::HttpServer::start_frontend(
+                router,
+                Some(admin),
+                &addr,
+                &frontend,
+                n_http_workers,
+            )?
+        }
+        "worker" => {
+            let merger = build_merger_from(cfg)?;
+            let admin: Arc<dyn ScenarioAdmin> = Arc::clone(&merger);
+            aif::server::HttpServer::start_frontend(
+                merger,
+                Some(admin),
+                &addr,
+                &frontend,
+                n_http_workers,
+            )?
+        }
+        other => anyhow::bail!("unknown --role {other:?} (router|worker)"),
+    };
+    // Machine-readable bound address: benches and the CI smoke start
+    // processes with `--addr 127.0.0.1:0` and scrape the assigned port
+    // from stderr (eprintln is unbuffered).
+    eprintln!("AIF_SERVE_ADDR={}", server.addr);
     println!(
-        "serving on http://{}  ({} front end; try \
+        "{role} serving on http://{}  ({} front end; try \
          /v1/score?user=42&top_k=10, /v1/scenarios, /metrics, /healthz)",
         server.addr,
         server.frontend_stats().mode(),

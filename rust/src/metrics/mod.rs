@@ -6,4 +6,4 @@ pub mod histogram;
 pub mod report;
 
 pub use histogram::{Histogram, ValueHistogram};
-pub use report::{CoalesceStats, ServingMetrics};
+pub use report::{ClusterNodeStats, CoalesceStats, ServingMetrics};

@@ -70,6 +70,65 @@ impl CoalesceStats {
     }
 }
 
+/// Per-worker counters of the cluster router tier (DESIGN.md §19): one
+/// instance per member node, reported under the `/metrics` `cluster`
+/// block and `GET /v1/cluster`.  The remote client records into these;
+/// the health prober drives ejections/readmissions.
+#[derive(Default)]
+pub struct ClusterNodeStats {
+    /// Requests attempted against this worker (each retry attempt counts).
+    pub requests: AtomicU64,
+    /// Attempts that failed (connect error, io error, 5xx).
+    pub errors: AtomicU64,
+    /// Attempts that were retries of an earlier failed attempt.
+    pub retries: AtomicU64,
+    /// Times this worker was ejected from the ring.
+    pub ejections: AtomicU64,
+    /// Times this worker was readmitted after ejection.
+    pub readmissions: AtomicU64,
+    /// Requests currently in flight towards this worker (gauge).
+    pub inflight: AtomicU64,
+    /// Attempts skipped because the in-flight cap was reached.
+    pub at_capacity: AtomicU64,
+    /// Fresh connections dialed.
+    pub pool_created: AtomicU64,
+    /// Attempts served over a pooled keep-alive connection.
+    pub pool_reused: AtomicU64,
+    /// Pooled connections found dead on first use (retried fresh without
+    /// consuming a replica retry).
+    pub pool_stale: AtomicU64,
+    /// Per-attempt round-trip latency to this worker.
+    pub rtt: Histogram,
+}
+
+impl ClusterNodeStats {
+    pub fn snapshot(&self, wall: Duration) -> Value {
+        let mut o = Object::new();
+        let requests = self.requests.load(Ordering::Relaxed);
+        o.insert("requests", requests);
+        o.insert("errors", self.errors.load(Ordering::Relaxed));
+        o.insert("retries", self.retries.load(Ordering::Relaxed));
+        o.insert("ejections", self.ejections.load(Ordering::Relaxed));
+        o.insert(
+            "readmissions",
+            self.readmissions.load(Ordering::Relaxed),
+        );
+        o.insert("inflight", self.inflight.load(Ordering::Relaxed));
+        o.insert("at_capacity", self.at_capacity.load(Ordering::Relaxed));
+        o.insert(
+            "pool_created",
+            self.pool_created.load(Ordering::Relaxed),
+        );
+        o.insert("pool_reused", self.pool_reused.load(Ordering::Relaxed));
+        o.insert("pool_stale", self.pool_stale.load(Ordering::Relaxed));
+        o.insert("qps", requests as f64 / wall.as_secs_f64().max(1e-9));
+        o.insert("rtt_avg_ms", self.rtt.mean() * 1e3);
+        o.insert("rtt_p99_ms", self.rtt.percentile(99.0) * 1e3);
+        o.insert("rtt_max_ms", self.rtt.max() * 1e3);
+        Value::Obj(o)
+    }
+}
+
 #[derive(Default)]
 pub struct ServingMetrics {
     /// End-to-end request latency (what the user sees).
@@ -195,6 +254,28 @@ mod tests {
             snap.req("coalesce").req("executions").as_usize(),
             Some(0)
         );
+    }
+
+    #[test]
+    fn cluster_node_stats_snapshot() {
+        let s = ClusterNodeStats::default();
+        s.requests.fetch_add(10, Ordering::Relaxed);
+        s.errors.fetch_add(2, Ordering::Relaxed);
+        s.retries.fetch_add(1, Ordering::Relaxed);
+        s.ejections.fetch_add(1, Ordering::Relaxed);
+        s.inflight.fetch_add(3, Ordering::Relaxed);
+        s.pool_created.fetch_add(2, Ordering::Relaxed);
+        s.pool_reused.fetch_add(8, Ordering::Relaxed);
+        s.rtt.record(Duration::from_millis(4));
+        let snap = s.snapshot(Duration::from_secs(2));
+        assert_eq!(snap.req("requests").as_usize(), Some(10));
+        assert_eq!(snap.req("errors").as_usize(), Some(2));
+        assert_eq!(snap.req("retries").as_usize(), Some(1));
+        assert_eq!(snap.req("ejections").as_usize(), Some(1));
+        assert_eq!(snap.req("inflight").as_usize(), Some(3));
+        assert_eq!(snap.req("pool_reused").as_usize(), Some(8));
+        assert!((snap.req("qps").as_f64().unwrap() - 5.0).abs() < 1e-9);
+        assert!(snap.req("rtt_p99_ms").as_f64().unwrap() > 3.0);
     }
 
     #[test]

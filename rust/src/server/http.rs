@@ -187,6 +187,10 @@ pub struct Response {
     pub content_type: &'static str,
     /// `Allow` header for 405s.
     pub allow: Option<&'static str>,
+    /// `Retry-After` seconds — set on every 429 so clients (and the
+    /// cluster router's backoff) get a concrete signal instead of
+    /// guessing.  Shed paths derive it from live queue depth.
+    pub retry_after: Option<u64>,
     pub body: String,
 }
 
@@ -196,6 +200,7 @@ impl Response {
             status,
             content_type: "application/json",
             allow: None,
+            retry_after: None,
             body: v.to_string_pretty(),
         }
     }
@@ -205,6 +210,7 @@ impl Response {
             status,
             content_type: "text/plain",
             allow: None,
+            retry_after: None,
             body: body.to_string(),
         }
     }
@@ -216,7 +222,20 @@ impl Response {
     }
 
     pub fn from_serve_error(e: &ServeError) -> Response {
-        Response::error(e.http_status(), &e.to_string())
+        let mut r = Response::error(e.http_status(), &e.to_string());
+        if matches!(e, ServeError::Overloaded(_)) {
+            // Every 429 carries a Retry-After; paths that know their
+            // queue shape override this floor with a derived value.
+            r.retry_after = Some(1);
+        }
+        r
+    }
+
+    /// Retry-After derived from how oversubscribed a bounded queue is:
+    /// ceil(depth / capacity) seconds, floored at 1 — a queue at its
+    /// bound advises 1s; one drowning at 3x advises 3s.
+    pub(crate) fn retry_after_for_queue(depth: usize, capacity: usize) -> u64 {
+        (depth as u64).div_ceil(capacity.max(1) as u64).max(1)
     }
 
     fn method_not_allowed(allow: &'static str) -> Response {
@@ -245,6 +264,11 @@ impl Response {
             out.extend_from_slice(b"Allow: ");
             out.extend_from_slice(allow.as_bytes());
             out.extend_from_slice(b"\r\n");
+        }
+        if let Some(secs) = self.retry_after {
+            out.extend_from_slice(
+                format!("Retry-After: {secs}\r\n").as_bytes(),
+            );
         }
         out.extend_from_slice(b"\r\n");
         out.extend_from_slice(self.body.as_bytes());
@@ -320,6 +344,17 @@ pub(crate) fn dispatch(
                 .and_then(|o| o.get("ready"))
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false);
+            // Enrich with the served user universe: cluster routers
+            // probing /readyz learn each shard's n_users from here.
+            let report = match report {
+                Value::Obj(mut o) => {
+                    if !o.contains("n_users") {
+                        o.insert("n_users", ranker.n_users());
+                    }
+                    Value::Obj(o)
+                }
+                other => other,
+            };
             Response::json(if ready { 200 } else { 503 }, &report)
         }
         ("GET", "/metrics") => {
@@ -386,6 +421,38 @@ pub(crate) fn dispatch(
             },
             None => Response::error(404, "no durable storage configured"),
         },
+        ("GET", "/v1/cluster") => {
+            match admin.and_then(|a| a.cluster_stats()) {
+                Some(stats) => Response::json(200, &stats),
+                None => Response::error(404, "not a cluster router"),
+            }
+        }
+        ("POST", "/v1/cluster/join") | ("POST", "/v1/cluster/drain") => {
+            let Some(a) = admin else {
+                return Response::error(404, "not a cluster router");
+            };
+            let addr = std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|t| Value::parse(t).ok())
+                .and_then(|v| {
+                    v.get("addr").and_then(Value::as_str).map(str::to_string)
+                });
+            let Some(addr) = addr else {
+                return Response::error(
+                    400,
+                    "body must be {\"addr\": \"host:port\"}",
+                );
+            };
+            let result = if path.ends_with("/join") {
+                a.cluster_join(&addr)
+            } else {
+                a.cluster_drain(&addr)
+            };
+            match result {
+                Ok(v) => Response::json(200, &v),
+                Err(e) => Response::from_serve_error(&e),
+            }
+        }
         ("GET", "/v1/score") => match parse_query(query) {
             Ok(sreq) => score_one(ranker, sreq),
             Err(e) => Response::from_serve_error(&e),
@@ -429,8 +496,12 @@ pub(crate) fn dispatch(
             }
         }
         (_, "/healthz") | (_, "/metrics") | (_, "/readyz")
-        | (_, "/v1/storage") => Response::method_not_allowed("GET"),
-        (_, "/v1/checkpoint") => Response::method_not_allowed("POST"),
+        | (_, "/v1/storage") | (_, "/v1/cluster") => {
+            Response::method_not_allowed("GET")
+        }
+        (_, "/v1/checkpoint")
+        | (_, "/v1/cluster/join")
+        | (_, "/v1/cluster/drain") => Response::method_not_allowed("POST"),
         (_, "/v1/score") => Response::method_not_allowed("GET, POST"),
         (_, "/v1/scenarios") => Response::method_not_allowed("GET"),
         (_, p) if scenario_reload_target(p).is_some() => {
@@ -798,12 +869,16 @@ fn blocking_accept_loop(
                 if pool.in_flight() >= overload_at {
                     // Shed load here in the accept thread — never queue
                     // more than the pool can drain promptly.
+                    let depth = pool.in_flight();
                     let e = ServeError::Overloaded(format!(
-                        "{} connections in flight",
-                        pool.in_flight()
+                        "{depth} connections in flight"
                     ));
                     stats.shed_overload.fetch_add(1, Ordering::Relaxed);
-                    shed(stream, &e);
+                    shed(
+                        stream,
+                        &e,
+                        Response::retry_after_for_queue(depth, overload_at),
+                    );
                     stats.conn_closed();
                     continue;
                 }
@@ -842,14 +917,15 @@ fn blocking_accept_loop(
 /// stalls.  Drain whatever the client already buffered (usually the
 /// whole request, so the close doesn't RST the 429 away), write the
 /// canned reply, hang up.
-fn shed(mut stream: TcpStream, e: &ServeError) {
+fn shed(mut stream: TcpStream, e: &ServeError, retry_after: u64) {
     if stream.set_nonblocking(true).is_err() {
         return;
     }
     let mut sink = [0u8; 4096];
     let _ = stream.read(&mut sink);
-    let _ =
-        stream.write_all(&Response::from_serve_error(e).serialize(false));
+    let mut resp = Response::from_serve_error(e);
+    resp.retry_after = Some(retry_after.max(1));
+    let _ = stream.write_all(&resp.serialize(false));
 }
 
 /// Where the connection sits in the shared timeout ladder.
@@ -1114,6 +1190,38 @@ mod tests {
         let r = Response::method_not_allowed("GET, POST");
         let s = String::from_utf8(r.serialize(false)).unwrap();
         assert!(s.contains("Allow: GET, POST\r\n"), "{s}");
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_oversubscription() {
+        // At the bound: 1s.  Drowning at 3x: 3s.  Degenerate capacity
+        // never divides by zero, and the hint is floored at 1s.
+        assert_eq!(Response::retry_after_for_queue(8, 8), 1);
+        assert_eq!(Response::retry_after_for_queue(9, 8), 2);
+        assert_eq!(Response::retry_after_for_queue(24, 8), 3);
+        assert_eq!(Response::retry_after_for_queue(0, 8), 1);
+        assert_eq!(Response::retry_after_for_queue(5, 0), 5);
+    }
+
+    #[test]
+    fn serialize_emits_retry_after_on_shed_responses() {
+        let overloaded = ServeError::Overloaded("queue full".into());
+        let r = Response::from_serve_error(&overloaded);
+        let s = String::from_utf8(r.serialize(false)).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429"), "{s}");
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+
+        let mut r = Response::from_serve_error(&overloaded);
+        r.retry_after = Some(3);
+        let s = String::from_utf8(r.serialize(false)).unwrap();
+        assert!(s.contains("Retry-After: 3\r\n"), "{s}");
+
+        // Non-overload errors never advertise a retry hint.
+        let e = ServeError::UnknownUser(7);
+        let s =
+            String::from_utf8(Response::from_serve_error(&e).serialize(false))
+                .unwrap();
+        assert!(!s.contains("Retry-After"), "{s}");
     }
 
     #[test]

@@ -955,10 +955,15 @@ impl Reactor {
                                 "scoring queue full ({} jobs)",
                                 shared.queue.cap
                             ));
-                            conn.queue_output(
-                                Response::from_serve_error(&e)
-                                    .serialize(false),
-                            );
+                            let mut resp = Response::from_serve_error(&e);
+                            // Queue at its bound + this rejected job:
+                            // advise clients from the real depth.
+                            resp.retry_after =
+                                Some(Response::retry_after_for_queue(
+                                    shared.queue.cap + 1,
+                                    shared.queue.cap,
+                                ));
+                            conn.queue_output(resp.serialize(false));
                             conn.close_after_write = true;
                         }
                     }

@@ -1,0 +1,423 @@
+//! Distributed serving tier integration tests (DESIGN.md §19): a
+//! `RemotePreRanker` router in front of in-process worker `HttpServer`s.
+//!
+//! * `deadline_ms` propagation: the worker sees the *remaining* budget,
+//!   and an already-expired budget 504s before any wire call;
+//! * shard pinning: a user's requests always land on one worker, and
+//!   `route_plan` names that worker first;
+//! * failover: killing a worker ejects it after the in-flight request
+//!   retries onto a replica — zero failed requests — and a joined
+//!   replacement is readmitted by probing;
+//! * scatter-gather over real fixture `Merger`s is BITWISE-identical to
+//!   a single-node `Merger` over the same artifacts;
+//! * drain + rejoin under continuous traffic drops zero requests.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use aif::config::{ClusterConfig, ServingConfig};
+use aif::coordinator::{
+    Merger, PhaseTimings, PreRanker, RemotePreRanker, ScenarioAdmin,
+    ScoreRequest, ScoreResponse, ScoredItem, ServeError,
+};
+use aif::features::LatencyModel;
+use aif::metrics::ServingMetrics;
+use aif::server::HttpServer;
+use aif::util::fixture;
+
+/// Stub worker ranker: accepts every user, records each scoring call's
+/// `(user, deadline)` so tests can inspect what crossed the wire.
+struct RecordingRanker {
+    tag: &'static str,
+    metrics: ServingMetrics,
+    calls: AtomicUsize,
+    seen: Mutex<Vec<(usize, Option<Duration>)>>,
+}
+
+impl RecordingRanker {
+    fn new(tag: &'static str) -> Arc<RecordingRanker> {
+        Arc::new(RecordingRanker {
+            tag,
+            metrics: ServingMetrics::new(),
+            calls: AtomicUsize::new(0),
+            seen: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// How many scoring calls mentioned `user`.
+    fn hits_for(&self, user: usize) -> usize {
+        let seen = self.seen.lock().unwrap();
+        seen.iter().filter(|(u, _)| *u == user).count()
+    }
+}
+
+impl PreRanker for RecordingRanker {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.seen.lock().unwrap().push((req.user, req.deadline));
+        Ok(ScoreResponse {
+            request_id: req.request_id.unwrap_or(0),
+            user: req.user,
+            scenario: "mock".into(),
+            variant: self.tag.into(),
+            items: vec![ScoredItem { item: req.user as u32, score: 1.0 }],
+            timings: PhaseTimings {
+                total: Duration::from_micros(10),
+                retrieval: Duration::from_micros(5),
+                user_async: None,
+                prerank: Duration::from_micros(5),
+            },
+            trace: None,
+        })
+    }
+
+    fn variant_name(&self) -> &str {
+        self.tag
+    }
+
+    fn n_users(&self) -> usize {
+        1 << 20
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+}
+
+/// One stub worker behind a real blocking front end on an ephemeral port.
+fn spawn_worker(tag: &'static str) -> (Arc<RecordingRanker>, HttpServer) {
+    let ranker = RecordingRanker::new(tag);
+    let server = HttpServer::start(
+        Arc::clone(&ranker) as Arc<dyn PreRanker>,
+        "127.0.0.1:0",
+        2,
+    )
+    .expect("worker front end binds");
+    (ranker, server)
+}
+
+/// Router config over `workers`: probing disabled (tests drive health
+/// transitions explicitly), short timeouts, tiny backoff.
+fn cluster_cfg(workers: Vec<String>) -> ClusterConfig {
+    ClusterConfig {
+        workers,
+        probe_interval_ms: 0,
+        connect_timeout_ms: 500,
+        request_timeout_ms: 2_000,
+        backoff_ms: 1,
+        ..ClusterConfig::default()
+    }
+}
+
+/// Total wire attempts recorded across all cluster members.
+fn wire_attempts(router: &RemotePreRanker) -> u64 {
+    router
+        .cluster()
+        .members()
+        .iter()
+        .map(|n| n.stats.requests.load(Ordering::Relaxed))
+        .sum()
+}
+
+#[test]
+fn router_forwards_remaining_deadline_to_the_worker() {
+    let (worker, server) = spawn_worker("w0");
+    let router =
+        RemotePreRanker::connect(cluster_cfg(vec![server.addr.clone()]));
+    assert_eq!(router.cluster().n_healthy(), 1, "probe admits the worker");
+
+    let budget = Duration::from_millis(500);
+    let resp = router
+        .score(ScoreRequest::user(3).with_deadline(budget))
+        .expect("healthy cluster scores");
+    assert_eq!(resp.user, 3);
+
+    let (user, forwarded) = {
+        let seen = worker.seen.lock().unwrap();
+        assert_eq!(seen.len(), 1, "exactly one scoring call reached w0");
+        seen[0]
+    };
+    assert_eq!(user, 3);
+    let remaining = forwarded.expect("deadline must propagate to the hop");
+    assert!(
+        remaining <= budget,
+        "remaining may not exceed the original budget: {remaining:?}"
+    );
+    assert!(
+        remaining >= Duration::from_millis(200),
+        "the router ate most of a 500ms budget before the hop: \
+         {remaining:?}"
+    );
+
+    // Without a client deadline nothing is forwarded.
+    router.score(ScoreRequest::user(3)).expect("scores");
+    assert_eq!(worker.seen.lock().unwrap()[1].1, None);
+    server.shutdown();
+}
+
+#[test]
+fn expired_budget_short_circuits_before_any_wire_call() {
+    let (worker, server) = spawn_worker("w0");
+    let router =
+        RemotePreRanker::connect(cluster_cfg(vec![server.addr.clone()]));
+    let attempts_before = wire_attempts(&router);
+
+    let err = router
+        .score(ScoreRequest::user(1).with_deadline(Duration::ZERO))
+        .expect_err("zero budget cannot be served");
+    match &err {
+        ServeError::DeadlineExceeded { budget_ms, .. } => {
+            assert_eq!(*budget_ms, 0.0);
+        }
+        other => panic!("want DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(err.http_status(), 504);
+    assert_eq!(
+        worker.calls.load(Ordering::SeqCst),
+        0,
+        "no scoring call may reach a worker"
+    );
+    assert_eq!(
+        wire_attempts(&router),
+        attempts_before,
+        "the 504 fires before any wire attempt"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn users_pin_to_one_shard_and_route_plan_names_it_first() {
+    let mut workers = Vec::new();
+    for tag in ["w0", "w1", "w2"] {
+        workers.push(spawn_worker(tag));
+    }
+    let addrs: Vec<String> =
+        workers.iter().map(|(_, s)| s.addr.clone()).collect();
+    let router = RemotePreRanker::connect(cluster_cfg(addrs.clone()));
+    assert_eq!(router.cluster().n_healthy(), 3);
+
+    for user in 0..20 {
+        for _ in 0..3 {
+            router.score(ScoreRequest::user(user)).expect("scores");
+        }
+    }
+    for user in 0..20 {
+        let hits: Vec<usize> =
+            workers.iter().map(|(r, _)| r.hits_for(user)).collect();
+        let owners: Vec<usize> = (0..hits.len())
+            .filter(|i| hits[*i] > 0)
+            .collect();
+        assert_eq!(
+            owners.len(),
+            1,
+            "user {user} spread across shards: {hits:?}"
+        );
+        assert_eq!(hits[owners[0]], 3, "every repeat hit the same shard");
+        let plan = router.route_plan(user);
+        assert_eq!(
+            plan[0], addrs[owners[0]],
+            "route_plan primary must match where traffic went"
+        );
+        assert_eq!(plan.len(), 3, "plan walks every distinct healthy node");
+    }
+    for (_, server) in workers {
+        server.shutdown();
+    }
+}
+
+#[test]
+fn failover_ejects_dead_worker_and_rejoin_drops_zero_requests() {
+    let (ranker_a, server_a) = spawn_worker("w0");
+    let (ranker_b, server_b) = spawn_worker("w1");
+    let addr_a = server_a.addr.clone();
+    let mut cfg =
+        cluster_cfg(vec![addr_a.clone(), server_b.addr.clone()]);
+    cfg.eject_after = 1;
+    cfg.readmit_after = 1;
+    cfg.retries = 2;
+    let router = RemotePreRanker::connect(cfg);
+    assert_eq!(router.cluster().n_healthy(), 2);
+
+    // A user whose primary shard is worker A (exists: A owns vnodes).
+    let victim = (0..10_000)
+        .find(|u| router.route_plan(*u)[0] == addr_a)
+        .expect("some user maps to worker A");
+
+    router.score(ScoreRequest::user(victim)).expect("pre-kill scores");
+    assert!(ranker_a.hits_for(victim) > 0, "victim pinned to A");
+
+    // Kill A.  The victim's next request must fail over to B — zero
+    // user-visible errors — and A is ejected after that one failure.
+    server_a.shutdown();
+    router
+        .score(ScoreRequest::user(victim))
+        .expect("failover absorbs the dead worker");
+    assert!(ranker_b.hits_for(victim) > 0, "replica B served the victim");
+    assert_eq!(router.cluster().n_healthy(), 1, "A is ejected");
+
+    // Every user still scores on the survivor.
+    for user in 0..16 {
+        router.score(ScoreRequest::user(user)).expect("survivor serves");
+    }
+
+    // Rejoin: a replacement worker joins and is readmitted by probing.
+    let (ranker_c, server_c) = spawn_worker("w2");
+    router
+        .cluster_join(&server_c.addr)
+        .expect("join accepts a valid addr");
+    assert_eq!(router.cluster().n_healthy(), 1, "joined nodes start cold");
+    router.cluster().probe_all_now();
+    assert_eq!(router.cluster().n_healthy(), 2, "probe readmits the join");
+    for user in 0..16 {
+        router.score(ScoreRequest::user(user)).expect("post-join scores");
+    }
+    assert!(
+        ranker_c.calls.load(Ordering::SeqCst) > 0
+            || ranker_b.calls.load(Ordering::SeqCst) > 0,
+        "traffic flows after the rejoin"
+    );
+    server_b.shutdown();
+    server_c.shutdown();
+}
+
+#[test]
+fn drain_and_join_under_traffic_drop_zero_requests() {
+    let (_ranker_a, server_a) = spawn_worker("w0");
+    let (_ranker_b, server_b) = spawn_worker("w1");
+    let addr_a = server_a.addr.clone();
+    let router = RemotePreRanker::connect(cluster_cfg(vec![
+        addr_a.clone(),
+        server_b.addr.clone(),
+    ]));
+    assert_eq!(router.cluster().n_healthy(), 2);
+
+    for i in 0..300usize {
+        if i == 100 {
+            let v = router.cluster_drain(&addr_a).expect("drain known node");
+            assert!(format!("{v}").contains("draining"));
+            assert_eq!(router.cluster().n_healthy(), 1);
+        }
+        if i == 200 {
+            router.cluster_join(&addr_a).expect("rejoin drained node");
+            // Default `readmit_after` is two clean probe rounds.
+            router.cluster().probe_all_now();
+            router.cluster().probe_all_now();
+            assert_eq!(router.cluster().n_healthy(), 2);
+        }
+        router
+            .score(ScoreRequest::user(i % 24))
+            .unwrap_or_else(|e| panic!("request {i} dropped: {e:?}"));
+    }
+    server_a.shutdown();
+    server_b.shutdown();
+}
+
+// -----------------------------------------------------------------------
+// Scatter-gather vs a single node, over real fixture artifacts
+// -----------------------------------------------------------------------
+
+/// Fresh fixture dir per test (tests run in parallel).
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("aif-fixture-{}-{tag}", std::process::id()));
+    fixture::write(&dir).expect("fixture generation");
+    dir
+}
+
+/// Removes the fixture dir when the test ends (also on panic/unwind).
+struct Cleanup(PathBuf);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Fast core config: tiny modeled latencies, small candidate sets.
+fn core_cfg(dir: &PathBuf) -> ServingConfig {
+    ServingConfig {
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        n_candidates: 48,
+        top_k: 16,
+        retrieval_latency: LatencyModel::fixed(100.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn scatter_gather_matches_single_node_bitwise() {
+    let dir = fixture_dir("cluster-sg");
+    let _cleanup = Cleanup(dir.clone());
+    let cfg = core_cfg(&dir);
+
+    // Two shard workers and one single-node reference, all over the
+    // SAME fixture artifacts — identical score surfaces by construction.
+    let shard_a = Arc::new(Merger::build(cfg.clone()).expect("shard A"));
+    let shard_b = Arc::new(Merger::build(cfg.clone()).expect("shard B"));
+    let reference = Merger::build(cfg).expect("reference");
+    let server_a = HttpServer::start(
+        Arc::clone(&shard_a) as Arc<dyn PreRanker>,
+        "127.0.0.1:0",
+        2,
+    )
+    .expect("shard A binds");
+    let server_b = HttpServer::start(
+        Arc::clone(&shard_b) as Arc<dyn PreRanker>,
+        "127.0.0.1:0",
+        2,
+    )
+    .expect("shard B binds");
+
+    let router = RemotePreRanker::connect(cluster_cfg(vec![
+        server_a.addr.clone(),
+        server_b.addr.clone(),
+    ]));
+    assert_eq!(router.cluster().n_healthy(), 2);
+
+    let candidates: Vec<u32> = (0..48u32).collect();
+    for user in [1usize, 5, 11] {
+        let via_router = router
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16),
+            )
+            .expect("router scores");
+        let direct = reference
+            .score(
+                ScoreRequest::user(user)
+                    .with_candidates(candidates.clone())
+                    .with_top_k(16)
+                    .with_request_id(900 + user as u64),
+            )
+            .expect("reference scores");
+        assert_eq!(via_router.items.len(), direct.items.len());
+        for (a, b) in via_router.items.iter().zip(direct.items.iter()) {
+            assert_eq!(a.item, b.item, "user {user}: item order differs");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "user {user}: score for item {} not bitwise-identical",
+                a.item
+            );
+        }
+    }
+    // The explicit 48-candidate list actually scattered: both shards
+    // served sub-requests.
+    let served = |m: &Arc<Merger>| {
+        m.metrics().requests.load(Ordering::Relaxed)
+    };
+    assert!(
+        served(&shard_a) > 0 && served(&shard_b) > 0,
+        "both shards must participate in scatter-gather"
+    );
+    server_a.shutdown();
+    server_b.shutdown();
+}

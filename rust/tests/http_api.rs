@@ -7,7 +7,7 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use aif::config::FrontendConfig;
@@ -1104,6 +1104,171 @@ fn evented_enforces_max_connections_while_idle_conns_stay_cheap() {
     let (status, _, body) = r.next();
     assert_eq!(status, 200);
     assert_eq!(body, "ok");
+    server.shutdown();
+}
+
+fn header_value(head: &str, name: &str) -> Option<String> {
+    head.lines().find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        k.eq_ignore_ascii_case(name).then(|| v.trim().to_string())
+    })
+}
+
+/// Stub that sheds every request, for the `Retry-After` surface.
+struct OverloadedRanker {
+    metrics: ServingMetrics,
+}
+
+impl PreRanker for OverloadedRanker {
+    fn score(&self, _req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        Err(ServeError::Overloaded("synthetic overload".into()))
+    }
+
+    fn variant_name(&self) -> &str {
+        "overloaded"
+    }
+
+    fn n_users(&self) -> usize {
+        N_USERS
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+}
+
+#[test]
+fn overload_429_carries_retry_after_in_both_modes() {
+    for mode in MODES {
+        let ranker: Arc<dyn PreRanker> = Arc::new(OverloadedRanker {
+            metrics: ServingMetrics::new(),
+        });
+        let server = HttpServer::start_frontend(
+            ranker,
+            None,
+            "127.0.0.1:0",
+            &frontend_cfg(mode),
+            2,
+        )
+        .expect("server starts");
+        let (status, head, body) = get(&server.addr, "/v1/score?user=1");
+        assert_eq!(status, 429, "{mode}: {body}");
+        let ra = header_value(&head, "Retry-After").unwrap_or_else(|| {
+            panic!("{mode}: 429 without Retry-After:\n{head}")
+        });
+        assert!(
+            ra.parse::<u64>().expect("integer Retry-After") >= 1,
+            "{mode}: {ra}"
+        );
+        server.shutdown();
+    }
+}
+
+/// Stub whose requests block on a gate until the test opens it — holds
+/// worker threads occupied so queue overflow is deterministic.
+struct GatedRanker {
+    inner: MockRanker,
+    entered: std::sync::atomic::AtomicUsize,
+    gate: (Mutex<bool>, Condvar),
+}
+
+impl GatedRanker {
+    fn new() -> GatedRanker {
+        GatedRanker {
+            inner: MockRanker {
+                metrics: ServingMetrics::new(),
+            },
+            entered: std::sync::atomic::AtomicUsize::new(0),
+            gate: (Mutex::new(false), Condvar::new()),
+        }
+    }
+
+    fn release(&self) {
+        let (m, c) = &self.gate;
+        *m.lock().unwrap() = true;
+        c.notify_all();
+    }
+}
+
+impl PreRanker for GatedRanker {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse, ServeError> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let (m, c) = &self.gate;
+        let mut open = m.lock().unwrap();
+        while !*open {
+            open = c.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.score(req)
+    }
+
+    fn variant_name(&self) -> &str {
+        "gated"
+    }
+
+    fn n_users(&self) -> usize {
+        self.inner.n_users()
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        self.inner.metrics()
+    }
+}
+
+#[test]
+fn queue_overflow_429_advertises_queue_derived_retry_after() {
+    // One evented worker => job-queue capacity 8 (OVERLOAD_QUEUE_FACTOR).
+    let ranker = Arc::new(GatedRanker::new());
+    let server = HttpServer::start_frontend(
+        Arc::clone(&ranker) as Arc<dyn PreRanker>,
+        None,
+        "127.0.0.1:0",
+        &frontend_cfg("evented"),
+        1,
+    )
+    .expect("server starts");
+    let stats = Arc::clone(server.frontend_stats());
+    let wait = |what: &str, ok: &dyn Fn() -> bool| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !ok() {
+            assert!(Instant::now() < deadline, "timed out waiting: {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+    // One request occupies the single worker ...
+    let mut held = vec![RespReader::connect(&server.addr)];
+    held[0].send("GET /v1/score?user=0 HTTP/1.1\r\nHost: t\r\n\r\n");
+    wait("worker occupied", &|| {
+        ranker.entered.load(Ordering::SeqCst) == 1
+    });
+    // ... eight more fill the bounded job queue to its cap ...
+    for user in 1..=8usize {
+        let mut r = RespReader::connect(&server.addr);
+        r.send(&format!(
+            "GET /v1/score?user={user} HTTP/1.1\r\nHost: t\r\n\r\n"
+        ));
+        held.push(r);
+    }
+    wait("queue full", &|| {
+        stats.queue_depth.load(Ordering::Relaxed) == 8
+    });
+    // ... so the ninth is shed with the queue-derived hint:
+    // ceil((cap + 1) / cap) = 2 seconds.
+    let (status, head, body) = get(&server.addr, "/v1/score?user=9");
+    assert_eq!(status, 429, "{body}");
+    assert_eq!(
+        header_value(&head, "Retry-After").as_deref(),
+        Some("2"),
+        "queue-derived hint:\n{head}"
+    );
+    assert!(stats.shed_overload.load(Ordering::Relaxed) >= 1);
+    // Opening the gate drains every held request successfully — the
+    // shed never cost an accepted request its reply.
+    ranker.release();
+    for r in &mut held {
+        let (status, _, _) = r.next();
+        assert_eq!(status, 200);
+    }
     server.shutdown();
 }
 

@@ -271,6 +271,71 @@ fn prop_router_remap_is_minimal() {
     });
 }
 
+#[test]
+fn prop_router_add_node_only_steals_keys() {
+    let gen = Gen::new(|rng: &mut Pcg64| 1 + rng.below(12) as usize);
+    check("router add only steals", &gen, 50, |&nodes| {
+        let mut r = Router::new(nodes, 64);
+        let before: Vec<usize> = (0..2000u64).map(|k| r.route(k)).collect();
+        r.add_node(nodes);
+        // Lossless ring: every vnode of every node is present even when
+        // positions collide (the (position, node) key keeps both).
+        if r.ring_len() != (nodes + 1) * 64 {
+            return Err(format!(
+                "ring holds {} vnodes, want {}",
+                r.ring_len(),
+                (nodes + 1) * 64
+            ));
+        }
+        let mut stolen = 0usize;
+        for (k, &b) in before.iter().enumerate() {
+            let after = r.route(k as u64);
+            if after != b && after != nodes {
+                return Err(format!(
+                    "key {k} moved {b}->{after}, not to the new node"
+                ));
+            }
+            if after == nodes {
+                stolen += 1;
+            }
+        }
+        // The new node takes a real share of roughly 1/(n+1).
+        let fair = 2000 / (nodes + 1);
+        if stolen == 0 || stolen > fair * 3 {
+            return Err(format!(
+                "new node stole {stolen} of 2000 keys (fair {fair})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_vnode_balance_bounds_shares() {
+    let gen = Gen::new(|rng: &mut Pcg64| 2 + rng.below(7) as usize);
+    check("router balance", &gen, 20, |&nodes| {
+        let r = Router::new(nodes, 128);
+        let samples = 20_000u64;
+        let mut counts = vec![0usize; nodes];
+        for k in 0..samples {
+            counts[r.route(k)] += 1;
+        }
+        // 128 vnodes keep every node within a small constant factor of
+        // the fair share (loose 3x bound: the property is "no node is
+        // starved or doubly loaded", not a tight variance claim).
+        let fair = samples as usize / nodes;
+        for (node, &c) in counts.iter().enumerate() {
+            if c < fair / 3 || c > fair * 3 {
+                return Err(format!(
+                    "node {node} owns {c} of {samples} keys \
+                     (fair share {fair})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------
 // LRU: capacity bound + hit-after-insert.
 // ---------------------------------------------------------------------
