@@ -1,0 +1,468 @@
+//! Overload tiering bench (ISSUE 10 gate): 4x sustained overload
+//! against the evented HTTP front end, adaptive computation tiering ON
+//! vs the pure 429-shedding baseline — same ladder, same worker budget,
+//! same closed-loop client fleet; only the `overload.enabled` knob
+//! differs (the `zero_copy`/`user_reuse`-style A/B convention).
+//!
+//! Gates (run for real in CI via `AIF_QUICK=1`):
+//!
+//! * with tiering ON, the p99 of successful requests stays under the
+//!   configured `overload.sla_bound_ms`;
+//! * goodput (2xx/sec) is STRICTLY higher than the shedding baseline —
+//!   degrading compute beats dropping traffic;
+//! * degradation actually engages (responses served above tier 0, read
+//!   from the `X-AIF-Tier` header) and is fully visible in `/metrics`;
+//! * `guaranteed` requests NEVER observe a degraded tier — every 2xx
+//!   carries `X-AIF-Tier: 0` (a 429 is the only other allowed answer);
+//! * the baseline (knob off) never serves above tier 0.
+//!
+//! Results are written to `BENCH_overload.json` (override with
+//! `AIF_BENCH_OUT`).  `AIF_ARTIFACTS` points at a real artifact set;
+//! otherwise the synthetic fixture is generated.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aif::config::{
+    FrontendConfig, OverloadConfig, ServingConfig, SimMode, TierSpec,
+};
+use aif::coordinator::{Merger, PreRanker, ScenarioAdmin};
+use aif::server::HttpServer;
+use aif::util::fixture;
+use aif::util::json::{Object, Value};
+
+/// The p99 bound the adaptive policy must defend (also wired into the
+/// config so `/metrics` reports it).
+const SLA_BOUND_MS: f64 = 400.0;
+/// Scoring workers; the evented job queue bounds at 8x this, so the
+/// absorbable in-flight load is 9 requests...
+const N_WORKERS: usize = 1;
+/// ...and 36 closed-loop clients offer a sustained 4x that.
+const N_CLIENTS: usize = 36;
+
+fn cfg(dir: &str, adaptive: bool) -> ServingConfig {
+    ServingConfig {
+        variant: "aif".into(),
+        sim_mode: SimMode::Precached,
+        artifacts_dir: dir.into(),
+        // Compute-heavy full tier so the ladder has real headroom: the
+        // floor scores 16x fewer candidates per request.
+        n_candidates: 512,
+        top_k: 16,
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        retrieval_latency: aif::features::LatencyModel::fixed(50.0),
+        user_store_latency: aif::features::LatencyModel::fixed(20.0),
+        item_store_latency: aif::features::LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        ladder: vec![
+            TierSpec::full("aif"),
+            TierSpec {
+                name: "lite".into(),
+                variant: "aif".into(),
+                max_candidates: 128,
+            },
+            TierSpec {
+                name: "floor".into(),
+                variant: "aif".into(),
+                max_candidates: 32,
+            },
+        ],
+        overload: OverloadConfig {
+            enabled: adaptive, // THE knob under test
+            sample_interval_ms: 10,
+            degrade_queue_depth: 4,
+            recover_queue_depth: 1,
+            dwell_ms: 50,
+            sla_bound_ms: SLA_BOUND_MS,
+            ..OverloadConfig::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// One keep-alive client connection; reads one length-framed response
+/// per round trip and surfaces the `X-AIF-Tier` header.  `None` means
+/// the connection died (e.g. closed after a shed) — callers reconnect.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Conn {
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    fn roundtrip(
+        &mut self,
+        raw: &[u8],
+    ) -> Option<(u16, Option<usize>, String)> {
+        if self.stream.write_all(raw).is_err() {
+            return None;
+        }
+        let mut chunk = [0u8; 8192];
+        let head_end = loop {
+            if let Some(p) =
+                self.buf.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                break p;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) | Err(_) => return None,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+            }
+        };
+        let head =
+            String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        let header = |name: &str| {
+            head.lines()
+                .find(|l| l.to_ascii_lowercase().starts_with(name))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|v| v.trim().to_string())
+        };
+        let cl: usize = header("content-length:")?.parse().ok()?;
+        let total = head_end + 4 + cl;
+        while self.buf.len() < total {
+            match self.stream.read(&mut chunk) {
+                Ok(0) | Err(_) => return None,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+            }
+        }
+        let body = String::from_utf8_lossy(&self.buf[head_end + 4..total])
+            .into_owned();
+        self.buf.drain(..total);
+        let status: u16 =
+            head.split_whitespace().nth(1).and_then(|s| s.parse().ok())?;
+        let tier = header("x-aif-tier:").and_then(|v| v.parse().ok());
+        Some((status, tier, body))
+    }
+}
+
+#[derive(Default)]
+struct ClientTally {
+    ok: u64,
+    shed: u64,
+    lat_ms: Vec<f64>,
+    tiers: [u64; 3],
+    violations: u64,
+}
+
+/// Closed-loop client: hammer until the deadline, reconnecting after
+/// dead connections, pausing briefly after a shed.  `sla` of Some adds
+/// the query param and checks the guaranteed invariant.
+fn client_loop(
+    addr: &str,
+    seed: usize,
+    n_users: usize,
+    deadline: Instant,
+    sla: Option<&str>,
+    pace: Duration,
+) -> ClientTally {
+    let mut tally = ClientTally::default();
+    let mut conn: Option<Conn> = None;
+    let mut i = 0usize;
+    while Instant::now() < deadline {
+        if conn.is_none() {
+            match Conn::connect(addr) {
+                Ok(c) => conn = Some(c),
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+            }
+        }
+        let user = seed
+            .wrapping_mul(131)
+            .wrapping_add(i.wrapping_mul(17))
+            % n_users.max(1);
+        i += 1;
+        let sla_q = sla.map(|s| format!("&sla={s}")).unwrap_or_default();
+        let raw = format!(
+            "GET /v1/score?user={user}&top_k=16{sla_q} HTTP/1.1\r\n\
+             Host: b\r\n\r\n"
+        );
+        let t0 = Instant::now();
+        match conn.as_mut().unwrap().roundtrip(raw.as_bytes()) {
+            None => conn = None,
+            Some((200, tier, _)) => {
+                tally.ok += 1;
+                tally.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                let t = tier.unwrap_or(0);
+                tally.tiers[t.min(2)] += 1;
+                if sla.is_some() && t != 0 {
+                    tally.violations += 1;
+                }
+            }
+            Some((429, _, _)) => {
+                tally.shed += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Some((status, _, body)) => {
+                panic!("unexpected {status}: {body}");
+            }
+        }
+        if !pace.is_zero() {
+            std::thread::sleep(pace);
+        }
+    }
+    tally
+}
+
+struct ArmReport {
+    ok: u64,
+    shed: u64,
+    goodput_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    tiers: [u64; 3],
+    guaranteed_ok: u64,
+    guaranteed_shed: u64,
+    guaranteed_violations: u64,
+}
+
+fn arm_json(r: &ArmReport) -> Value {
+    let mut o = Object::new();
+    o.insert("ok", r.ok);
+    o.insert("shed_429", r.shed);
+    o.insert("goodput_qps", r.goodput_qps);
+    o.insert("p50_ms", r.p50_ms);
+    o.insert("p99_ms", r.p99_ms);
+    let mut tiers = Object::new();
+    for (i, n) in r.tiers.iter().enumerate() {
+        tiers.insert(format!("tier_{i}"), *n);
+    }
+    o.insert("served_by_tier", Value::Obj(tiers));
+    o.insert("guaranteed_ok", r.guaranteed_ok);
+    o.insert("guaranteed_shed", r.guaranteed_shed);
+    o.insert("guaranteed_violations", r.guaranteed_violations);
+    Value::Obj(o)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn run_arm(
+    label: &str,
+    dir: &str,
+    adaptive: bool,
+    secs: f64,
+) -> (ArmReport, Option<Value>) {
+    let merger =
+        Arc::new(Merger::build(cfg(dir, adaptive)).expect("merger"));
+    let ranker: Arc<dyn PreRanker> = Arc::clone(&merger);
+    let admin: Arc<dyn ScenarioAdmin> = Arc::clone(&merger);
+    let n_users = merger.world().n_users;
+    let fe = FrontendConfig {
+        mode: "evented".into(),
+        n_event_loops: 1,
+        ..FrontendConfig::default()
+    };
+    let srv = HttpServer::start_frontend(
+        ranker,
+        Some(admin),
+        "127.0.0.1:0",
+        &fe,
+        N_WORKERS,
+    )
+    .expect("front end");
+
+    // Warm the stack (artifact JIT, caches) outside the measured window.
+    if let Ok(mut c) = Conn::connect(&srv.addr) {
+        for u in 0..4usize {
+            let _ = c.roundtrip(
+                format!(
+                    "GET /v1/score?user={u}&top_k=16 HTTP/1.1\r\n\
+                     Host: b\r\n\r\n"
+                )
+                .as_bytes(),
+            );
+        }
+    }
+
+    let deadline = Instant::now() + Duration::from_secs_f64(secs);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..N_CLIENTS {
+        let addr = srv.addr.clone();
+        handles.push(std::thread::spawn(move || {
+            client_loop(&addr, c, n_users, deadline, None, Duration::ZERO)
+        }));
+    }
+    // One paced guaranteed prober rides along: its 2xx responses must
+    // all come from tier 0, overload or not.
+    let guaranteed = {
+        let addr = srv.addr.clone();
+        std::thread::spawn(move || {
+            client_loop(
+                &addr,
+                N_CLIENTS + 1,
+                n_users,
+                deadline,
+                Some("guaranteed"),
+                Duration::from_millis(3),
+            )
+        })
+    };
+
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    let mut tiers = [0u64; 3];
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        let t = h.join().expect("client thread");
+        ok += t.ok;
+        shed += t.shed;
+        for i in 0..3 {
+            tiers[i] += t.tiers[i];
+        }
+        lat.extend(t.lat_ms);
+    }
+    let g = guaranteed.join().expect("guaranteed prober");
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // The /metrics overload block, before shutdown.
+    let metrics = Conn::connect(&srv.addr)
+        .ok()
+        .and_then(|mut c| {
+            c.roundtrip(
+                b"GET /metrics HTTP/1.1\r\nHost: b\r\n\
+                  Connection: close\r\n\r\n",
+            )
+        })
+        .filter(|(status, _, _)| *status == 200)
+        .and_then(|(_, _, body)| Value::parse(&body).ok())
+        .and_then(|v| v.get("overload").cloned());
+    srv.shutdown();
+
+    let report = ArmReport {
+        ok,
+        shed,
+        goodput_qps: ok as f64 / wall,
+        p50_ms: percentile(&lat, 0.50),
+        p99_ms: percentile(&lat, 0.99),
+        tiers,
+        guaranteed_ok: g.ok,
+        guaranteed_shed: g.shed,
+        guaranteed_violations: g.violations,
+    };
+    println!(
+        "{label:22} 2xx {:>7}  429 {:>7}  goodput {:>8.1}/s  p50 \
+         {:>7.2}ms  p99 {:>7.2}ms  tiers {:?}",
+        report.ok,
+        report.shed,
+        report.goodput_qps,
+        report.p50_ms,
+        report.p99_ms,
+        report.tiers
+    );
+    println!(
+        "{:22} guaranteed: 2xx {}  429 {}  degraded 2xx {}",
+        "", g.ok, g.shed, g.violations
+    );
+    (report, metrics)
+}
+
+fn main() {
+    let quick = std::env::var("AIF_QUICK").as_deref() == Ok("1");
+    let secs = if quick { 2.5 } else { 8.0 };
+
+    let (dir, fixture_dir) = match std::env::var("AIF_ARTIFACTS") {
+        Ok(d)
+            if std::path::Path::new(&d)
+                .join("manifest.json")
+                .exists() =>
+        {
+            (d, None)
+        }
+        _ => {
+            let tmp = std::env::temp_dir().join(format!(
+                "aif-overload-bench-{}",
+                std::process::id()
+            ));
+            fixture::write(&tmp).expect("fixture generation");
+            (tmp.to_string_lossy().into_owned(), Some(tmp))
+        }
+    };
+
+    println!(
+        "overload_tiering: {N_CLIENTS} closed-loop clients vs \
+         {N_WORKERS} worker(s) for {secs:.1}s per arm (~4x overload)"
+    );
+    let (base, _) = run_arm("429-shedding (off)", &dir, false, secs);
+    let (adaptive, overload_metrics) =
+        run_arm("adaptive tiering (on)", &dir, true, secs);
+
+    // ---- the acceptance gates -------------------------------------------
+    assert_eq!(
+        base.tiers[1] + base.tiers[2],
+        0,
+        "knob off must never serve above tier 0"
+    );
+    assert!(
+        adaptive.tiers[1] + adaptive.tiers[2] > 0,
+        "sustained overload never engaged the ladder"
+    );
+    assert_eq!(
+        base.guaranteed_violations + adaptive.guaranteed_violations,
+        0,
+        "guaranteed requests observed a degraded tier"
+    );
+    assert!(
+        adaptive.p99_ms <= SLA_BOUND_MS,
+        "adaptive p99 {:.2}ms breaks the {SLA_BOUND_MS}ms SLA bound",
+        adaptive.p99_ms
+    );
+    assert!(
+        adaptive.goodput_qps > base.goodput_qps,
+        "degrading compute must beat dropping traffic: adaptive \
+         {:.1}/s vs baseline {:.1}/s",
+        adaptive.goodput_qps,
+        base.goodput_qps
+    );
+    println!(
+        "\ngoodput {:.1}/s -> {:.1}/s ({:+.1}%), p99 {:.2}ms -> {:.2}ms \
+         under 4x overload",
+        base.goodput_qps,
+        adaptive.goodput_qps,
+        (adaptive.goodput_qps / base.goodput_qps - 1.0) * 100.0,
+        base.p99_ms,
+        adaptive.p99_ms
+    );
+
+    // ---- JSON baseline ---------------------------------------------------
+    let out_path = std::env::var("AIF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_overload.json".into());
+    let mut o = Object::new();
+    o.insert("bench", "overload_tiering");
+    o.insert("quick", quick);
+    o.insert("n_clients", N_CLIENTS);
+    o.insert("n_workers", N_WORKERS);
+    o.insert("seconds_per_arm", secs);
+    o.insert("sla_bound_ms", SLA_BOUND_MS);
+    o.insert("shedding_baseline", arm_json(&base));
+    o.insert("adaptive_tiering", arm_json(&adaptive));
+    if let Some(m) = overload_metrics {
+        o.insert("overload_metrics", m);
+    }
+    std::fs::write(&out_path, Value::Obj(o).to_string_pretty())
+        .expect("writing bench baseline");
+    println!("baseline written to {out_path}");
+
+    if let Some(tmp) = fixture_dir {
+        let _ = std::fs::remove_dir_all(tmp);
+    }
+}

@@ -56,6 +56,13 @@ echo "== cluster tier battery (release) =="
 # single node.
 cargo test --release -q --test cluster
 
+echo "== overload tiering battery (release) =="
+# Load-adaptive computation tiering: sustained overload steps the
+# active tier down and idle recovers it, guaranteed traffic never
+# observes a degraded tier, pinned tiers are bitwise-deterministic and
+# fully visible in the trace, hot reload preserves the current tier.
+cargo test --release -q --test overload_tiering
+
 echo "== benches compile =="
 cargo build --release --benches
 
@@ -118,6 +125,16 @@ echo "== cluster smoke (release, quick, multi-process) =="
 # Emits BENCH_cluster.json.
 AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_cluster_ci.json \
     cargo bench --bench cluster_scaling
+
+echo "== overload tiering smoke (release, quick) =="
+# The overload gates run for real in CI: under 4x sustained closed-loop
+# overload, adaptive tiering holds p99 under the SLA bound with
+# strictly higher goodput than the 429-shedding baseline (same ladder,
+# same worker budget, only overload.enabled differs), degradation
+# engages and is visible via X-AIF-Tier, and guaranteed 2xx responses
+# are always tier 0.  Emits BENCH_overload.json.
+AIF_QUICK=1 AIF_BENCH_OUT=/tmp/BENCH_overload_ci.json \
+    cargo bench --bench overload_tiering
 
 echo "== #[ignore] ratchet =="
 # Coverage may only ratchet up: adding an ignored test needs this bound

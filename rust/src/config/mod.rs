@@ -354,6 +354,223 @@ fn parse_cluster(cl: &Value, out: &mut ClusterConfig) -> Result<()> {
     Ok(())
 }
 
+/// Per-request service-level class (DESIGN.md §20): how much compute
+/// degradation a request tolerates under overload.  From the `sla`
+/// request field / query param, defaulting to
+/// [`OverloadConfig::default_sla`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlaClass {
+    /// Always served at the top tier — or shed with 429 when even that
+    /// is impossible.  Never observes a degraded tier.
+    Guaranteed,
+    /// Served at the controller's current tier (the default).
+    Degradable,
+    /// First to step down, last to recover: serves one tier below the
+    /// controller whenever the load signal is not fully relaxed.
+    BestEffort,
+}
+
+impl SlaClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SlaClass::Guaranteed => "guaranteed",
+            SlaClass::Degradable => "degradable",
+            SlaClass::BestEffort => "best_effort",
+        }
+    }
+}
+
+/// Parse an SLA class string ("guaranteed" | "degradable" |
+/// "best_effort") — shared by the JSON request path, the query string
+/// and the config default.
+pub fn parse_sla(x: &str) -> Result<SlaClass> {
+    Ok(match x {
+        "guaranteed" => SlaClass::Guaranteed,
+        "degradable" => SlaClass::Degradable,
+        "best_effort" => SlaClass::BestEffort,
+        other => anyhow::bail!(
+            "unknown sla {other:?} (guaranteed|degradable|best_effort)"
+        ),
+    })
+}
+
+/// One rung of a scenario's execution-tier ladder (DESIGN.md §20).
+/// Tier 0 is the top (full) tier; later rungs trade effectiveness for
+/// compute — a cheaper head variant, a truncated candidate set, or both.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Tier label, surfaced in responses/metrics (defaults to the
+    /// variant name).
+    pub name: String,
+    /// Manifest variant serving this tier.
+    pub variant: String,
+    /// Cap on candidates scored at this tier (0 = no cap): explicit
+    /// candidate lists are truncated, the default candidate count is
+    /// clamped.  Deterministic, so scores stay bitwise-stable per tier.
+    pub max_candidates: usize,
+}
+
+impl TierSpec {
+    /// A full-compute tier over `variant` (what a ladder-less scenario
+    /// serves).
+    pub fn full(variant: &str) -> TierSpec {
+        TierSpec {
+            name: variant.to_string(),
+            variant: variant.to_string(),
+            max_candidates: 0,
+        }
+    }
+}
+
+/// Parse one ladder entry: either a bare variant string or
+/// `{"name": .., "variant": .., "max_candidates": ..}`.
+fn parse_tier(v: &Value) -> Result<TierSpec> {
+    if let Some(s) = v.as_str() {
+        if s.is_empty() {
+            anyhow::bail!("ladder variant names must be non-empty");
+        }
+        return Ok(TierSpec::full(s));
+    }
+    let obj = v.as_obj().ok_or_else(|| {
+        anyhow::anyhow!("ladder entries must be strings or objects")
+    })?;
+    let variant = obj
+        .get("variant")
+        .and_then(Value::as_str)
+        .ok_or_else(|| {
+            anyhow::anyhow!("ladder tier objects need a \"variant\"")
+        })?
+        .to_string();
+    let name = obj
+        .get("name")
+        .and_then(Value::as_str)
+        .unwrap_or(&variant)
+        .to_string();
+    let max_candidates = obj
+        .get("max_candidates")
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0) as usize;
+    Ok(TierSpec {
+        name,
+        variant,
+        max_candidates,
+    })
+}
+
+fn parse_ladder(v: &Value) -> Result<Vec<TierSpec>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        anyhow::anyhow!("\"ladder\" must be an array of tiers")
+    })?;
+    arr.iter().map(parse_tier).collect()
+}
+
+/// Load-adaptive computation tiering (DESIGN.md §20).  Off by default:
+/// every scenario serves its single full tier and overload stays pure
+/// 429-shedding.  When enabled, a background controller samples the
+/// front-end job queue, the in-flight gauge and a windowed-p99 EWMA and
+/// walks each scenario's active tier down/up its ladder with hysteresis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadConfig {
+    /// Run the feedback controller (requires a ladder with > 1 tier to
+    /// have any effect).
+    pub enabled: bool,
+    /// Controller sampling cadence, milliseconds.
+    pub sample_interval_ms: u64,
+    /// Degrade one tier when the front-end job-queue depth reaches this.
+    pub degrade_queue_depth: usize,
+    /// Recover one tier only once the queue depth is back at or below
+    /// this (must be < `degrade_queue_depth` for hysteresis).
+    pub recover_queue_depth: usize,
+    /// Degrade when in-flight connections reach this (0 = signal off).
+    pub degrade_inflight: usize,
+    /// In-flight level at or below which recovery is allowed (only
+    /// consulted when `degrade_inflight` > 0).
+    pub recover_inflight: usize,
+    /// Degrade when the windowed-p99 EWMA reaches this, milliseconds
+    /// (0 = signal off).
+    pub degrade_p99_ms: f64,
+    /// p99 EWMA at or below which recovery is allowed (only consulted
+    /// when `degrade_p99_ms` > 0).
+    pub recover_p99_ms: f64,
+    /// Minimum time between tier transitions of one scenario,
+    /// milliseconds (the anti-flap dwell).
+    pub dwell_ms: u64,
+    /// Smoothing factor of the p99 EWMA (0 < alpha <= 1; higher reacts
+    /// faster).
+    pub ewma_alpha: f64,
+    /// The p99 bound the policy defends, milliseconds (reported in
+    /// `/metrics`; the overload bench gates against it).  0 = none.
+    pub sla_bound_ms: f64,
+    /// SLA class of requests that don't carry one.
+    pub default_sla: SlaClass,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            enabled: false,
+            sample_interval_ms: 25,
+            degrade_queue_depth: 8,
+            recover_queue_depth: 1,
+            degrade_inflight: 0,
+            recover_inflight: 0,
+            degrade_p99_ms: 0.0,
+            recover_p99_ms: 0.0,
+            dwell_ms: 250,
+            ewma_alpha: 0.3,
+            sla_bound_ms: 0.0,
+            default_sla: SlaClass::Degradable,
+        }
+    }
+}
+
+fn parse_overload(ov: &Value, out: &mut OverloadConfig) -> Result<()> {
+    if let Some(b) = ov.get("enabled").and_then(Value::as_bool) {
+        out.enabled = b;
+    }
+    macro_rules! num {
+        ($field:ident, $key:literal, $ty:ty) => {
+            if let Some(x) = ov.get($key).and_then(Value::as_f64) {
+                out.$field = x as $ty;
+            }
+        };
+    }
+    num!(sample_interval_ms, "sample_interval_ms", u64);
+    num!(degrade_queue_depth, "degrade_queue_depth", usize);
+    num!(recover_queue_depth, "recover_queue_depth", usize);
+    num!(degrade_inflight, "degrade_inflight", usize);
+    num!(recover_inflight, "recover_inflight", usize);
+    num!(degrade_p99_ms, "degrade_p99_ms", f64);
+    num!(recover_p99_ms, "recover_p99_ms", f64);
+    num!(dwell_ms, "dwell_ms", u64);
+    num!(ewma_alpha, "ewma_alpha", f64);
+    num!(sla_bound_ms, "sla_bound_ms", f64);
+    if let Some(x) = ov.get("default_sla").and_then(Value::as_str) {
+        out.default_sla = parse_sla(x)?;
+    }
+    out.sample_interval_ms = out.sample_interval_ms.max(1);
+    out.degrade_queue_depth = out.degrade_queue_depth.max(1);
+    if out.recover_queue_depth >= out.degrade_queue_depth {
+        anyhow::bail!(
+            "overload.recover_queue_depth ({}) must be below \
+             degrade_queue_depth ({}) for hysteresis",
+            out.recover_queue_depth,
+            out.degrade_queue_depth
+        );
+    }
+    if out.degrade_p99_ms > 0.0 && out.recover_p99_ms >= out.degrade_p99_ms
+    {
+        anyhow::bail!(
+            "overload.recover_p99_ms must be below degrade_p99_ms for \
+             hysteresis"
+        );
+    }
+    if !(out.ewma_alpha > 0.0 && out.ewma_alpha <= 1.0) {
+        anyhow::bail!("overload.ewma_alpha must be in (0, 1]");
+    }
+    Ok(())
+}
+
 /// One named scenario served by the shared [`ServingCore`]: the
 /// scenario-*specific* knobs only (variant, SIM handling, candidate count,
 /// result size, dispatch-layer coalescing).  Everything else — fleet size,
@@ -377,6 +594,9 @@ pub struct ScenarioConfig {
     /// Scenarios sharing a head artifact share one coalescer queue (the
     /// first registration's knobs win).
     pub coalesce: CoalesceConfig,
+    /// Execution-tier ladder, top (full) tier first.  Empty = one full
+    /// tier over `variant` (see [`ScenarioConfig::effective_ladder`]).
+    pub ladder: Vec<TierSpec>,
 }
 
 impl ScenarioConfig {
@@ -391,6 +611,18 @@ impl ScenarioConfig {
             n_candidates: cfg.n_candidates,
             top_k: cfg.top_k,
             coalesce: cfg.coalesce.clone(),
+            ladder: cfg.ladder.clone(),
+        }
+    }
+
+    /// The tier ladder this scenario serves: the declared rungs, or one
+    /// full tier over `variant` when none are declared.  Always
+    /// non-empty; tier 0 is the top tier.
+    pub fn effective_ladder(&self) -> Vec<TierSpec> {
+        if self.ladder.is_empty() {
+            vec![TierSpec::full(&self.variant)]
+        } else {
+            self.ladder.clone()
         }
     }
 
@@ -413,6 +645,9 @@ impl ScenarioConfig {
         }
         if let Some(co) = v.get("coalesce") {
             parse_coalesce(co, &mut s.coalesce);
+        }
+        if let Some(la) = v.get("ladder") {
+            s.ladder = parse_ladder(la)?;
         }
         Ok(s)
     }
@@ -508,6 +743,14 @@ pub struct ServingConfig {
     /// Sharded cluster tier: router-side knobs (ISSUE 9 tentpole).
     pub cluster: ClusterConfig,
 
+    /// Execution-tier ladder of the flat (single-scenario) config;
+    /// scenario blocks inherit it unless they declare their own
+    /// (ISSUE 10 tentpole).
+    pub ladder: Vec<TierSpec>,
+
+    /// Load-adaptive tiering controller (DESIGN.md §20).
+    pub overload: OverloadConfig,
+
     pub artifacts_dir: String,
 
     /// Named scenario blocks served over ONE shared core.  Empty (the
@@ -569,6 +812,8 @@ impl Default for ServingConfig {
             nearline: NearlineConfig::default(),
             frontend: FrontendConfig::default(),
             cluster: ClusterConfig::default(),
+            ladder: Vec::new(),
+            overload: OverloadConfig::default(),
             artifacts_dir: "artifacts".into(),
             scenarios: Vec::new(),
             default_scenario: None,
@@ -629,6 +874,12 @@ impl ServingConfig {
         }
         if let Some(cl) = get("cluster") {
             parse_cluster(cl, &mut c.cluster)?;
+        }
+        if let Some(la) = get("ladder") {
+            c.ladder = parse_ladder(la)?;
+        }
+        if let Some(ov) = get("overload") {
+            parse_overload(ov, &mut c.overload)?;
         }
         // Named scenario blocks: `{"scenarios": {"name": {..}, ..}}`.
         // Each block starts from the flat fields and overrides.
@@ -1000,6 +1251,114 @@ mod tests {
         assert!(ServingConfig::from_json(&v).is_err());
         let v = Value::parse(r#"{"cluster": {"workers": [1]}}"#).unwrap();
         assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn overload_defaults_off_and_parses() {
+        let c = ServingConfig::default();
+        assert!(!c.overload.enabled, "tiering is opt-in");
+        assert!(c.ladder.is_empty(), "single full tier by default");
+        assert_eq!(c.overload.default_sla, SlaClass::Degradable);
+        assert!(
+            c.overload.recover_queue_depth < c.overload.degrade_queue_depth,
+            "default thresholds carry hysteresis"
+        );
+
+        let v = Value::parse(
+            r#"{"overload": {"enabled": true, "sample_interval_ms": 10,
+                 "degrade_queue_depth": 6, "recover_queue_depth": 2,
+                 "degrade_inflight": 32, "recover_inflight": 8,
+                 "degrade_p99_ms": 40, "recover_p99_ms": 15,
+                 "dwell_ms": 100, "ewma_alpha": 0.5, "sla_bound_ms": 80,
+                 "default_sla": "best_effort"}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert!(c.overload.enabled);
+        assert_eq!(c.overload.sample_interval_ms, 10);
+        assert_eq!(c.overload.degrade_queue_depth, 6);
+        assert_eq!(c.overload.recover_queue_depth, 2);
+        assert_eq!(c.overload.degrade_inflight, 32);
+        assert_eq!(c.overload.recover_inflight, 8);
+        assert_eq!(c.overload.degrade_p99_ms, 40.0);
+        assert_eq!(c.overload.recover_p99_ms, 15.0);
+        assert_eq!(c.overload.dwell_ms, 100);
+        assert_eq!(c.overload.ewma_alpha, 0.5);
+        assert_eq!(c.overload.sla_bound_ms, 80.0);
+        assert_eq!(c.overload.default_sla, SlaClass::BestEffort);
+
+        // Inverted thresholds (no hysteresis band) are rejected.
+        let v = Value::parse(
+            r#"{"overload": {"degrade_queue_depth": 4,
+                 "recover_queue_depth": 4}}"#,
+        )
+        .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+        let v = Value::parse(
+            r#"{"overload": {"degrade_p99_ms": 10, "recover_p99_ms": 20}}"#,
+        )
+        .unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+        let v = Value::parse(r#"{"overload": {"ewma_alpha": 0}}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+        let v =
+            Value::parse(r#"{"overload": {"default_sla": "vip"}}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn ladder_parses_and_scenarios_inherit() {
+        let v = Value::parse(
+            r#"{"variant": "aif",
+                "ladder": ["aif",
+                           {"name": "lsh_only", "variant": "base",
+                            "max_candidates": 32}],
+                "scenarios": {
+                  "a": {},
+                  "b": {"ladder": ["base"]}
+                }}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&v).unwrap();
+        assert_eq!(c.ladder.len(), 2);
+        assert_eq!(c.ladder[0], TierSpec::full("aif"));
+        assert_eq!(c.ladder[1].name, "lsh_only");
+        assert_eq!(c.ladder[1].variant, "base");
+        assert_eq!(c.ladder[1].max_candidates, 32);
+        let a = c.scenarios.iter().find(|s| s.name == "a").unwrap();
+        assert_eq!(a.ladder.len(), 2, "blocks inherit the flat ladder");
+        let b = c.scenarios.iter().find(|s| s.name == "b").unwrap();
+        assert_eq!(b.ladder, vec![TierSpec::full("base")]);
+
+        // A ladder-less scenario serves one full tier over its variant.
+        let c = ServingConfig::default();
+        let eff = c.effective_scenarios()[0].effective_ladder();
+        assert_eq!(eff, vec![TierSpec::full("aif")]);
+
+        // Bad shapes are rejected, not ignored.
+        for bad in [
+            r#"{"ladder": "aif"}"#,
+            r#"{"ladder": [""]}"#,
+            r#"{"ladder": [{"name": "x"}]}"#,
+            r#"{"ladder": [1]}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(ServingConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn sla_class_round_trips() {
+        for (s, want) in [
+            ("guaranteed", SlaClass::Guaranteed),
+            ("degradable", SlaClass::Degradable),
+            ("best_effort", SlaClass::BestEffort),
+        ] {
+            let got = parse_sla(s).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.as_str(), s);
+        }
+        assert!(parse_sla("platinum").is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::overload::LoadSignals;
 use super::router::Router;
 use crate::cache::{ArenaPool, ShardedLru, UserStateCache};
 use crate::config::{CoalesceConfig, ServingConfig};
@@ -116,6 +117,10 @@ pub struct ServingCore {
     /// [`Self::update_queue`] call (serve mode starts it when a nearline
     /// scenario registers).
     nearline_queue: Mutex<Option<Arc<UpdateQueue>>>,
+    /// Front-end load signals (job-queue depth, in-flight jobs) sampled
+    /// by the overload controller.  Front ends register their stats
+    /// blocks here at startup.
+    pub overload_signals: Arc<LoadSignals>,
 }
 
 impl ServingCore {
@@ -198,6 +203,7 @@ impl ServingCore {
             nearline_build_ms: AtomicU64::new(0),
             heat: Arc::new(ItemHeat::new(world.n_items)),
             nearline_queue: Mutex::new(None),
+            overload_signals: Arc::new(LoadSignals::new()),
             manifest,
             world,
             store,

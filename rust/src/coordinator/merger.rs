@@ -23,6 +23,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::core::ServingCore;
+use super::overload::Controller;
 use super::scenario::{ScenarioEngine, ScenarioRegistry};
 use super::service::{
     PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest, ScoreResponse,
@@ -30,6 +31,7 @@ use super::service::{
 };
 use crate::config::ServingConfig;
 use crate::metrics::ServingMetrics;
+use crate::server::http::FrontendStats;
 use crate::util::json::{Object, Value};
 
 // Helpers that predate the split keep their `coordinator::merger::` paths.
@@ -55,6 +57,9 @@ pub struct Merger {
     /// storage backend and `checkpoint_interval_ms > 0` are configured.
     /// Held only for its Drop (stop + join).
     _checkpoint_driver: Option<CheckpointDriver>,
+    /// Load-adaptive tiering feedback loop (DESIGN.md §20), present when
+    /// `overload.enabled`.  Held only for its Drop (stop + join).
+    _overload_controller: Option<Controller>,
 }
 
 /// Periodic checkpoint thread; stops and joins on drop so a Merger
@@ -154,6 +159,16 @@ impl Merger {
         // whose scenarios never touch the N2O table would otherwise sit
         // in "starting" forever.
         core.readiness.set(crate::storage::ReadyState::Ready);
+        // The tiering feedback loop (DESIGN.md §20).  Off by default; when
+        // disabled every request serves at tier 0 (the full ladder rung)
+        // and no controller thread exists.
+        let overload_controller = core.cfg.overload.enabled.then(|| {
+            Controller::start(
+                core.cfg.overload.clone(),
+                Arc::clone(&registry),
+                Arc::clone(&core.overload_signals),
+            )
+        });
         Ok(Merger {
             default_metrics: Arc::clone(&def.metrics),
             default_variant: def.cfg.variant.clone(),
@@ -161,16 +176,21 @@ impl Merger {
             core,
             registry,
             _checkpoint_driver: checkpoint_driver,
+            _overload_controller: overload_controller,
         })
     }
 
     /// Serve one request end to end, routed to its scenario (the
-    /// configured default when the request doesn't name one).
+    /// configured default when the request doesn't name one) at the tier
+    /// its SLA class currently maps to: `guaranteed` always gets tier 0,
+    /// `degradable` the controller's tier, `best_effort` the trailing
+    /// best-effort tier.  The served tier is stamped on the response (and
+    /// trace) so degradation is always visible to the caller.
     pub fn score(
         &self,
-        req: ScoreRequest,
+        mut req: ScoreRequest,
     ) -> Result<ScoreResponse, ServeError> {
-        let engine = match self.registry.get(req.scenario.as_deref()) {
+        let entry = match self.registry.entry(req.scenario.as_deref()) {
             Ok(e) => e,
             Err(e) => {
                 // Attributed to routing, NOT to any scenario's metrics —
@@ -179,7 +199,40 @@ impl Merger {
                 return Err(e);
             }
         };
-        engine.score(req)
+        let sla = req.sla.unwrap_or(self.core.cfg.overload.default_sla);
+        let (engine, tier) = entry.engine_at(entry.stats.tier_for(sla));
+        let engine = Arc::clone(engine);
+        // The rung's compute knob applies to explicit candidate lists
+        // too: a deterministic prefix truncation, so scores stay
+        // bitwise-stable within a tier (the rung's engine already clamps
+        // the default retrieval count).
+        if let Some(cap) = entry.ladder.get(tier).map(|s| s.max_candidates) {
+            if cap > 0 {
+                if let Some(c) = req.candidates.as_mut() {
+                    c.truncate(cap);
+                }
+            }
+        }
+        let mut resp = engine.score(req)?;
+        entry.stats.observe_served(tier, sla);
+        resp.tier = Some(tier);
+        if let Some(t) = resp.trace.as_mut() {
+            t.tier = Some(tier);
+        }
+        Ok(resp)
+    }
+
+    /// Pin (or unpin with `None`) a scenario's served tier, overriding the
+    /// controller for `degradable`/`best_effort` traffic.  `guaranteed`
+    /// requests still serve at tier 0.  Used by the per-tier determinism
+    /// tests and operational drills.
+    pub fn force_tier(
+        &self,
+        scenario: Option<&str>,
+        tier: Option<usize>,
+    ) -> Result<(), ServeError> {
+        self.registry.entry(scenario)?.stats.force_tier(tier);
+        Ok(())
     }
 
     /// The shared substrate (fleet, stores, caches, N2O).
@@ -290,6 +343,21 @@ impl ScenarioAdmin for Merger {
 
     fn nearline_stats(&self) -> Option<Value> {
         Some(Value::from(self.core.nearline_stats()))
+    }
+
+    fn overload_stats(&self) -> Option<Value> {
+        let mut o = Object::new();
+        o.insert("enabled", self.core.cfg.overload.enabled);
+        let mut scenarios = Object::new();
+        for (name, snap) in self.registry.overload_snapshots() {
+            scenarios.insert(name, snap);
+        }
+        o.insert("scenarios", Value::from(scenarios));
+        Some(Value::from(o))
+    }
+
+    fn register_frontend(&self, stats: &Arc<FrontendStats>) {
+        self.core.overload_signals.register(stats);
     }
 
     fn readiness(&self) -> Value {

@@ -10,6 +10,7 @@ pub mod batcher;
 pub mod cluster;
 pub mod core;
 pub mod merger;
+pub mod overload;
 pub mod remote;
 pub mod router;
 pub mod scenario;
@@ -18,9 +19,12 @@ pub mod service;
 pub use self::core::{ServingCore, AUTO_REQUEST_ID_BASE};
 pub use cluster::Cluster;
 pub use merger::Merger;
+pub use overload::{
+    Controller, EwmaState, LoadSample, LoadSignals, OverloadStats,
+};
 pub use remote::RemotePreRanker;
 pub use router::Router;
-pub use scenario::{ScenarioEngine, ScenarioRegistry};
+pub use scenario::{ScenarioEngine, ScenarioRegistry, TieredScenario};
 pub use service::{
     PhaseTimings, PreRanker, ScenarioAdmin, ScenarioInfo, ScoreRequest,
     ScoreResponse, ScoreTrace, ScoredItem, ServeError, StageSpan,

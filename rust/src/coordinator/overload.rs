@@ -1,0 +1,690 @@
+//! Load-adaptive computation tiering (DESIGN.md §20).
+//!
+//! Under overload this server degrades *compute*, not traffic: each
+//! scenario registers an ordered ladder of execution tiers (tier 0 =
+//! full fidelity, higher indices = cheaper variants / fewer candidates)
+//! and a feedback [`Controller`] walks the active tier down and up that
+//! ladder with hysteresis.  Requests carry an SLA class:
+//!
+//! - `guaranteed`  — always served at tier 0 (or shed by the existing
+//!   queue-full 429 path; never silently degraded),
+//! - `degradable`  — served at the controller's tier,
+//! - `best_effort` — first to step down, last to recover (one rung
+//!   below the controller tier whenever load is not fully relaxed).
+//!
+//! The controller samples three inputs per tick: the front-end job-queue
+//! depth, the in-flight request count (both summed over every registered
+//! front end) and a windowed-p99 EWMA over the scenario's request
+//! latency + coalescer queue-wait histograms.  Transitions move at most
+//! ONE rung per tick, require a dwell time since the previous
+//! transition, and use *distinct* degrade/recover thresholds — the three
+//! properties that make the loop flap-free (asserted in
+//! `prop_invariants.rs`).
+//!
+//! The decision core ([`step_tier`] / [`step_be_tier`] /
+//! [`overloaded`] / [`relaxed`]) is pure and lives apart from the
+//! sampling thread so property tests can drive it with synthetic load
+//! signals.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::scenario::ScenarioRegistry;
+use crate::config::{OverloadConfig, SlaClass, TierSpec};
+use crate::metrics::{Histogram, ServingMetrics};
+use crate::server::http::FrontendStats;
+use crate::util::json::{Object, Value};
+
+/// Ladder depth bound: per-tier counters are fixed-size atomics so the
+/// serve path never locks (and a reload can grow the ladder in place).
+pub const MAX_TIERS: usize = 16;
+
+/// `forced` sentinel for "not pinned".
+const UNFORCED: usize = usize::MAX;
+
+// ==========================================================================
+// Pure decision core
+// ==========================================================================
+
+/// One controller sample of the load signals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSample {
+    /// Parsed requests queued for a scoring worker (all front ends).
+    pub queue_depth: usize,
+    /// Requests currently executing on scoring workers (all front ends).
+    pub inflight: usize,
+    /// EWMA of the windowed p99 request latency, milliseconds.
+    pub p99_ewma_ms: f64,
+}
+
+/// Any degrade threshold crossed?  (`degrade_inflight` / `degrade_p99_ms`
+/// of 0 disable that signal.)
+pub fn overloaded(cfg: &OverloadConfig, s: &LoadSample) -> bool {
+    s.queue_depth >= cfg.degrade_queue_depth
+        || (cfg.degrade_inflight > 0 && s.inflight >= cfg.degrade_inflight)
+        || (cfg.degrade_p99_ms > 0.0 && s.p99_ewma_ms >= cfg.degrade_p99_ms)
+}
+
+/// ALL signals at/below their recover thresholds.  Config validation
+/// keeps each recover threshold strictly below its degrade sibling, so
+/// `overloaded` and `relaxed` are disjoint — the gap between them is the
+/// hysteresis band where the tier holds still.
+pub fn relaxed(cfg: &OverloadConfig, s: &LoadSample) -> bool {
+    s.queue_depth <= cfg.recover_queue_depth
+        && (cfg.degrade_inflight == 0 || s.inflight <= cfg.recover_inflight)
+        && (cfg.degrade_p99_ms <= 0.0 || s.p99_ewma_ms <= cfg.recover_p99_ms)
+}
+
+/// One controller step for the *degradable* tier: at most one rung per
+/// call, gated by the dwell time since the last transition.
+pub fn step_tier(
+    cfg: &OverloadConfig,
+    n_tiers: usize,
+    current: usize,
+    s: &LoadSample,
+    since_last_transition_ms: u64,
+) -> usize {
+    if n_tiers <= 1 {
+        return 0;
+    }
+    let current = current.min(n_tiers - 1);
+    if since_last_transition_ms < cfg.dwell_ms {
+        return current;
+    }
+    if overloaded(cfg, s) {
+        (current + 1).min(n_tiers - 1)
+    } else if relaxed(cfg, s) {
+        current.saturating_sub(1)
+    } else {
+        current
+    }
+}
+
+/// The *best-effort* tier trails one rung below the controller tier
+/// whenever load is not fully relaxed (first to step down) and climbs
+/// back one rung per relaxed tick, never above the controller tier
+/// (last to recover).  Invariant: result >= `tier` always.
+pub fn step_be_tier(
+    n_tiers: usize,
+    tier: usize,
+    be: usize,
+    relaxed: bool,
+) -> usize {
+    if n_tiers <= 1 {
+        return 0;
+    }
+    let cap = n_tiers - 1;
+    if relaxed {
+        be.saturating_sub(1).clamp(tier, cap)
+    } else {
+        be.max(tier + 1).min(cap)
+    }
+}
+
+// ==========================================================================
+// Per-scenario tier state + counters
+// ==========================================================================
+
+/// Per-scenario overload state: the active tier indices, transition
+/// counters and the last-sampled controller inputs.  Lives OUTSIDE the
+/// scenario's engines and survives `ScenarioRegistry::reload` — a reload
+/// under saturation must not reset a degraded scenario to full tier.
+pub struct OverloadStats {
+    tier: AtomicUsize,
+    be_tier: AtomicUsize,
+    n_tiers: AtomicUsize,
+    /// Admin/test pin for degradable+best-effort traffic (`UNFORCED`
+    /// when the controller drives).  Guaranteed traffic ignores it.
+    forced: AtomicUsize,
+    transitions_down: AtomicU64,
+    transitions_up: AtomicU64,
+    ticks: AtomicU64,
+    /// Millis since `epoch` of the last tier transition (0 = never).
+    last_transition_ms: AtomicU64,
+    epoch: Instant,
+    served_by_tier: Vec<AtomicU64>,
+    guaranteed_served: AtomicU64,
+    // Last controller sample, surfaced in /metrics.
+    in_queue_depth: AtomicUsize,
+    in_inflight: AtomicUsize,
+    in_p99_ewma_us: AtomicU64,
+}
+
+impl OverloadStats {
+    pub fn new(n_tiers: usize) -> OverloadStats {
+        OverloadStats {
+            tier: AtomicUsize::new(0),
+            be_tier: AtomicUsize::new(0),
+            n_tiers: AtomicUsize::new(n_tiers.clamp(1, MAX_TIERS)),
+            forced: AtomicUsize::new(UNFORCED),
+            transitions_down: AtomicU64::new(0),
+            transitions_up: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
+            last_transition_ms: AtomicU64::new(0),
+            epoch: Instant::now(),
+            served_by_tier: (0..MAX_TIERS).map(|_| AtomicU64::new(0)).collect(),
+            guaranteed_served: AtomicU64::new(0),
+            in_queue_depth: AtomicUsize::new(0),
+            in_inflight: AtomicUsize::new(0),
+            in_p99_ewma_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.n_tiers.load(Ordering::Relaxed)
+    }
+
+    /// Re-point at a (possibly resized) ladder, PRESERVING the current
+    /// tier — clamped into the new range.  Called by registry reload.
+    pub fn set_n_tiers(&self, n: usize) {
+        let n = n.clamp(1, MAX_TIERS);
+        self.n_tiers.store(n, Ordering::Relaxed);
+        let cap = n - 1;
+        self.tier.fetch_min(cap, Ordering::Relaxed);
+        self.be_tier.fetch_min(cap, Ordering::Relaxed);
+    }
+
+    /// The controller's current (degradable) tier.
+    pub fn tier(&self) -> usize {
+        self.tier.load(Ordering::Relaxed)
+    }
+
+    pub fn be_tier(&self) -> usize {
+        self.be_tier.load(Ordering::Relaxed)
+    }
+
+    /// Pin the degradable/best-effort tier (admin + determinism tests);
+    /// `None` returns control to the controller.  Guaranteed traffic is
+    /// never affected.
+    pub fn force_tier(&self, t: Option<usize>) {
+        let cap = self.n_tiers() - 1;
+        self.forced
+            .store(t.map(|t| t.min(cap)).unwrap_or(UNFORCED), Ordering::Relaxed);
+    }
+
+    pub fn forced(&self) -> Option<usize> {
+        match self.forced.load(Ordering::Relaxed) {
+            UNFORCED => None,
+            t => Some(t),
+        }
+    }
+
+    /// Resolve the tier a request of `sla` class serves at.  THE
+    /// invariant of the whole subsystem: `guaranteed` resolves to tier 0
+    /// unconditionally — no controller state, pin or reload can move it.
+    pub fn tier_for(&self, sla: SlaClass) -> usize {
+        let cap = self.n_tiers() - 1;
+        match sla {
+            SlaClass::Guaranteed => 0,
+            SlaClass::Degradable => {
+                self.forced().unwrap_or_else(|| self.tier()).min(cap)
+            }
+            SlaClass::BestEffort => {
+                self.forced().unwrap_or_else(|| self.be_tier()).min(cap)
+            }
+        }
+    }
+
+    /// Count one served request at `tier`.
+    pub fn observe_served(&self, tier: usize, sla: SlaClass) {
+        self.served_by_tier[tier.min(MAX_TIERS - 1)]
+            .fetch_add(1, Ordering::Relaxed);
+        if sla == SlaClass::Guaranteed {
+            self.guaranteed_served.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Millis spent in the current tier.
+    pub fn dwell_in_tier_ms(&self) -> u64 {
+        self.now_ms()
+            .saturating_sub(self.last_transition_ms.load(Ordering::Relaxed))
+    }
+
+    pub fn transitions(&self) -> (u64, u64) {
+        (
+            self.transitions_down.load(Ordering::Relaxed),
+            self.transitions_up.load(Ordering::Relaxed),
+        )
+    }
+
+    /// One controller tick against a load sample: records the inputs,
+    /// steps the degradable tier (hysteresis + dwell) and trails the
+    /// best-effort tier.  Pure-logic twin: [`step_tier`].
+    pub fn tick(&self, cfg: &OverloadConfig, s: &LoadSample) -> usize {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        self.in_queue_depth.store(s.queue_depth, Ordering::Relaxed);
+        self.in_inflight.store(s.inflight, Ordering::Relaxed);
+        self.in_p99_ewma_us
+            .store((s.p99_ewma_ms * 1e3) as u64, Ordering::Relaxed);
+
+        let n = self.n_tiers();
+        let cur = self.tier();
+        let next = step_tier(cfg, n, cur, s, self.dwell_in_tier_ms());
+        if next != cur {
+            self.tier.store(next, Ordering::Relaxed);
+            self.last_transition_ms
+                .store(self.now_ms(), Ordering::Relaxed);
+            if next > cur {
+                self.transitions_down.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.transitions_up.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let be = step_be_tier(n, next, self.be_tier(), relaxed(cfg, s));
+        self.be_tier.store(be, Ordering::Relaxed);
+        next
+    }
+
+    /// The per-scenario `overload` block in `/metrics`.
+    pub fn snapshot(&self, ladder: &[TierSpec]) -> Value {
+        let mut o = Object::new();
+        let tier = self.tier();
+        o.insert("tier", tier as u64);
+        if let Some(spec) = ladder.get(tier) {
+            o.insert("tier_name", spec.name.as_str());
+        }
+        o.insert("be_tier", self.be_tier() as u64);
+        o.insert("n_tiers", self.n_tiers() as u64);
+        if let Some(f) = self.forced() {
+            o.insert("forced_tier", f as u64);
+        }
+        let (down, up) = self.transitions();
+        o.insert("transitions_down", down);
+        o.insert("transitions_up", up);
+        o.insert("ticks", self.ticks.load(Ordering::Relaxed));
+        o.insert("dwell_in_tier_ms", self.dwell_in_tier_ms());
+        o.insert(
+            "guaranteed_served",
+            self.guaranteed_served.load(Ordering::Relaxed),
+        );
+        let mut served = Object::new();
+        for (i, spec) in ladder.iter().enumerate().take(MAX_TIERS) {
+            served.insert(
+                spec.name.as_str(),
+                self.served_by_tier[i].load(Ordering::Relaxed),
+            );
+        }
+        o.insert("served_by_tier", served);
+        let mut inputs = Object::new();
+        inputs.insert(
+            "queue_depth",
+            self.in_queue_depth.load(Ordering::Relaxed) as u64,
+        );
+        inputs.insert(
+            "inflight",
+            self.in_inflight.load(Ordering::Relaxed) as u64,
+        );
+        inputs.insert(
+            "p99_ewma_ms",
+            self.in_p99_ewma_us.load(Ordering::Relaxed) as f64 / 1e3,
+        );
+        o.insert("inputs", inputs);
+        Value::Obj(o)
+    }
+}
+
+// ==========================================================================
+// Load-signal registry (front ends publish, the controller samples)
+// ==========================================================================
+
+/// Where the controller reads queue depth and in-flight counts from:
+/// every front end started over this core registers its
+/// [`FrontendStats`] here (weakly — a drained front end just drops out).
+#[derive(Default)]
+pub struct LoadSignals {
+    frontends: Mutex<Vec<Weak<FrontendStats>>>,
+}
+
+impl LoadSignals {
+    pub fn new() -> LoadSignals {
+        LoadSignals::default()
+    }
+
+    pub fn register(&self, stats: &Arc<FrontendStats>) {
+        let mut v = self.frontends.lock().unwrap();
+        v.retain(|w| w.strong_count() > 0);
+        v.push(Arc::downgrade(stats));
+    }
+
+    fn sum(&self, f: impl Fn(&FrontendStats) -> usize) -> usize {
+        self.frontends
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|w| w.upgrade())
+            .map(|s| f(&s))
+            .sum()
+    }
+
+    /// Parsed requests waiting for a scoring worker, all front ends.
+    pub fn queue_depth(&self) -> usize {
+        self.sum(|s| s.queue_depth.load(Ordering::Relaxed))
+    }
+
+    /// Requests currently executing on scoring workers, all front ends.
+    pub fn inflight(&self) -> usize {
+        self.sum(|s| s.jobs_inflight.load(Ordering::Relaxed))
+    }
+}
+
+// ==========================================================================
+// The sampling thread
+// ==========================================================================
+
+/// One scenario's view for the controller: its stats plus the metrics of
+/// every ladder rung (latency histograms are summed across rungs — tiers
+/// normally share one `ServingMetrics`, and duplicate counts cannot move
+/// a percentile).
+pub struct OverloadView {
+    pub name: String,
+    pub stats: Arc<OverloadStats>,
+    pub metrics: Vec<Arc<ServingMetrics>>,
+}
+
+/// Windowed-p99 EWMA state, per scenario.  Opaque to callers: tests that
+/// drive [`controller_tick`] directly just thread a fresh
+/// `HashMap::default()` through consecutive ticks.
+#[derive(Default)]
+pub struct EwmaState {
+    prev_rt: Vec<u64>,
+    prev_wait: Vec<u64>,
+    ewma_ms: f64,
+}
+
+/// The feedback loop: a background thread sampling the load signals
+/// every `sample_interval_ms` and ticking every scenario's
+/// [`OverloadStats`].  Stopped + joined on drop (same lifecycle as the
+/// merger's checkpoint driver).
+pub struct Controller {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Controller {
+    pub fn start(
+        cfg: OverloadConfig,
+        registry: Arc<ScenarioRegistry>,
+        signals: Arc<LoadSignals>,
+    ) -> Controller {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("overload-ctl".into())
+            .spawn(move || {
+                let mut ewmas: HashMap<String, EwmaState> = HashMap::new();
+                let interval = Duration::from_millis(cfg.sample_interval_ms);
+                while !stop2.load(Ordering::Relaxed) {
+                    // Chunked sleep so drop never waits a full interval.
+                    let t0 = Instant::now();
+                    while t0.elapsed() < interval {
+                        if stop2.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        thread::sleep(
+                            (interval - t0.elapsed())
+                                .min(Duration::from_millis(10)),
+                        );
+                    }
+                    controller_tick(&cfg, &registry, &signals, &mut ewmas);
+                }
+            })
+            .expect("spawn overload controller");
+        Controller {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for Controller {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One pass over every registered scenario.  Factored out of the thread
+/// so the integration tests can drive ticks deterministically.
+pub fn controller_tick(
+    cfg: &OverloadConfig,
+    registry: &ScenarioRegistry,
+    signals: &LoadSignals,
+    ewmas: &mut HashMap<String, EwmaState>,
+) {
+    let queue_depth = signals.queue_depth();
+    let inflight = signals.inflight();
+    for view in registry.overload_views() {
+        let st = ewmas.entry(view.name.clone()).or_default();
+        // Sum latency buckets across rungs: request latency + coalescer
+        // queue dwell both feed the pressure signal.
+        let mut rt: Vec<u64> = Vec::new();
+        let mut wait: Vec<u64> = Vec::new();
+        for m in &view.metrics {
+            sum_into(&mut rt, &m.total_rt.bucket_counts());
+            sum_into(&mut wait, &m.coalesce.queue_wait.bucket_counts());
+        }
+        let p_rt = windowed_p99(&st.prev_rt, &rt);
+        let p_wait = windowed_p99(&st.prev_wait, &wait);
+        st.prev_rt = rt;
+        st.prev_wait = wait;
+        let observed_ms = match (p_rt, p_wait) {
+            (Some(a), Some(b)) => Some(a.max(b) * 1e3),
+            (Some(a), None) => Some(a * 1e3),
+            (None, Some(b)) => Some(b * 1e3),
+            (None, None) => None,
+        };
+        st.ewma_ms = match observed_ms {
+            Some(p) if st.ewma_ms == 0.0 => p,
+            Some(p) => {
+                cfg.ewma_alpha * p + (1.0 - cfg.ewma_alpha) * st.ewma_ms
+            }
+            // An idle window decays the EWMA: no traffic is no load, and
+            // a stale high p99 must not pin the scenario degraded.
+            None => (1.0 - cfg.ewma_alpha) * st.ewma_ms,
+        };
+        view.stats.tick(
+            cfg,
+            &LoadSample {
+                queue_depth,
+                inflight,
+                p99_ewma_ms: st.ewma_ms,
+            },
+        );
+    }
+}
+
+fn sum_into(acc: &mut Vec<u64>, counts: &[u64]) {
+    if acc.len() < counts.len() {
+        acc.resize(counts.len(), 0);
+    }
+    for (a, c) in acc.iter_mut().zip(counts) {
+        *a += c;
+    }
+}
+
+fn windowed_p99(prev: &[u64], cur: &[u64]) -> Option<f64> {
+    if prev.len() != cur.len() {
+        return None; // first tick: establish the baseline snapshot
+    }
+    Histogram::percentile_between(prev, cur, 99.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OverloadConfig {
+        OverloadConfig {
+            enabled: true,
+            degrade_queue_depth: 8,
+            recover_queue_depth: 1,
+            dwell_ms: 0,
+            ..OverloadConfig::default()
+        }
+    }
+
+    fn load(q: usize) -> LoadSample {
+        LoadSample {
+            queue_depth: q,
+            ..LoadSample::default()
+        }
+    }
+
+    #[test]
+    fn steps_one_rung_with_hysteresis() {
+        let c = cfg();
+        // Degrade one rung per step, clamped at the bottom.
+        assert_eq!(step_tier(&c, 3, 0, &load(8), 1000), 1);
+        assert_eq!(step_tier(&c, 3, 1, &load(20), 1000), 2);
+        assert_eq!(step_tier(&c, 3, 2, &load(20), 1000), 2);
+        // The hysteresis band (1 < q < 8) holds still.
+        assert_eq!(step_tier(&c, 3, 1, &load(4), 1000), 1);
+        // Relaxed recovers one rung, clamped at the top.
+        assert_eq!(step_tier(&c, 3, 2, &load(0), 1000), 1);
+        assert_eq!(step_tier(&c, 3, 0, &load(0), 1000), 0);
+        // A single-rung ladder never moves.
+        assert_eq!(step_tier(&c, 1, 0, &load(100), 1000), 0);
+    }
+
+    #[test]
+    fn dwell_blocks_both_directions() {
+        let mut c = cfg();
+        c.dwell_ms = 250;
+        assert_eq!(step_tier(&c, 3, 1, &load(20), 100), 1);
+        assert_eq!(step_tier(&c, 3, 1, &load(0), 100), 1);
+        assert_eq!(step_tier(&c, 3, 1, &load(20), 250), 2);
+    }
+
+    #[test]
+    fn secondary_signals_gate_when_enabled() {
+        let mut c = cfg();
+        c.degrade_inflight = 16;
+        c.recover_inflight = 2;
+        c.degrade_p99_ms = 50.0;
+        c.recover_p99_ms = 10.0;
+        let s = LoadSample {
+            queue_depth: 0,
+            inflight: 16,
+            p99_ewma_ms: 0.0,
+        };
+        assert!(overloaded(&c, &s));
+        let s = LoadSample {
+            queue_depth: 0,
+            inflight: 0,
+            p99_ewma_ms: 60.0,
+        };
+        assert!(overloaded(&c, &s));
+        // Recovery needs ALL signals relaxed.
+        let s = LoadSample {
+            queue_depth: 0,
+            inflight: 0,
+            p99_ewma_ms: 20.0,
+        };
+        assert!(!overloaded(&c, &s) && !relaxed(&c, &s));
+        let s = LoadSample {
+            queue_depth: 0,
+            inflight: 1,
+            p99_ewma_ms: 5.0,
+        };
+        assert!(relaxed(&c, &s));
+    }
+
+    #[test]
+    fn best_effort_leads_down_trails_up() {
+        // Not relaxed: one rung below the controller tier.
+        assert_eq!(step_be_tier(3, 0, 0, false), 1);
+        assert_eq!(step_be_tier(3, 1, 1, false), 2);
+        assert_eq!(step_be_tier(3, 2, 2, false), 2); // clamped
+        // Relaxed: climbs one rung per tick, never above the tier.
+        assert_eq!(step_be_tier(3, 1, 2, true), 1);
+        assert_eq!(step_be_tier(3, 0, 1, true), 0);
+        assert_eq!(step_be_tier(3, 0, 0, true), 0);
+        // Invariant: be >= tier.
+        for tier in 0..3 {
+            for be in 0..3 {
+                for rel in [false, true] {
+                    assert!(step_be_tier(3, tier, be, rel) >= tier);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_tick_moves_and_counts() {
+        let st = OverloadStats::new(3);
+        let c = cfg();
+        assert_eq!(st.tick(&c, &load(20)), 1);
+        assert_eq!(st.tick(&c, &load(20)), 2);
+        assert_eq!(st.tier(), 2);
+        assert_eq!(st.be_tier(), 2);
+        assert_eq!(st.tick(&c, &load(0)), 1);
+        assert_eq!(st.transitions(), (2, 1));
+        // Guaranteed is pinned to the top through it all.
+        assert_eq!(st.tier_for(SlaClass::Guaranteed), 0);
+        assert_eq!(st.tier_for(SlaClass::Degradable), 1);
+        assert!(st.tier_for(SlaClass::BestEffort) >= 1);
+    }
+
+    #[test]
+    fn force_pin_and_reload_clamp() {
+        let st = OverloadStats::new(4);
+        st.force_tier(Some(3));
+        assert_eq!(st.tier_for(SlaClass::Degradable), 3);
+        assert_eq!(st.tier_for(SlaClass::Guaranteed), 0);
+        // A reload that shrinks the ladder clamps tiers, keeps position.
+        let c = cfg();
+        st.tick(&c, &load(20));
+        st.tick(&c, &load(20));
+        st.tick(&c, &load(20));
+        assert_eq!(st.tier(), 3);
+        st.set_n_tiers(2);
+        assert_eq!(st.tier(), 1);
+        assert_eq!(st.tier_for(SlaClass::Degradable), 1); // forced clamped too
+        st.force_tier(None);
+        assert_eq!(st.tier_for(SlaClass::Degradable), 1);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let st = OverloadStats::new(2);
+        let ladder = vec![
+            TierSpec {
+                name: "full".into(),
+                variant: "aif".into(),
+                max_candidates: 0,
+            },
+            TierSpec {
+                name: "lite".into(),
+                variant: "aif".into(),
+                max_candidates: 16,
+            },
+        ];
+        st.observe_served(0, SlaClass::Guaranteed);
+        st.observe_served(1, SlaClass::Degradable);
+        let v = st.snapshot(&ladder);
+        assert_eq!(v.get("tier").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            v.get("tier_name").unwrap().as_str().unwrap(),
+            "full"
+        );
+        assert_eq!(
+            v.get("served_by_tier")
+                .unwrap()
+                .get("lite")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+        assert!(v.get("inputs").unwrap().get("queue_depth").is_some());
+    }
+}

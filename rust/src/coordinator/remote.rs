@@ -121,6 +121,12 @@ impl RemotePreRanker {
         let mut last_err =
             ServeError::Internal("request not attempted".into());
         let mut all_at_capacity = true;
+        // Replicas that answered 429 this pass.  Once every replica in
+        // the chain is shedding, more retries only add queueing to an
+        // overloaded fleet — fail fast and surface the largest
+        // advertised Retry-After instead of burning backoff.
+        let mut shedding = vec![false; chain.len()];
+        let mut max_retry_after: u64 = 0;
         for attempt in 0..attempts {
             let (id, node) = &chain[attempt % chain.len()];
             // Deadline check per attempt: earlier hops + backoff burn
@@ -208,8 +214,18 @@ impl RemotePreRanker {
                         body_error(&resp.body)
                     ));
                     if let Some(secs) = resp.retry_after {
+                        max_retry_after = max_retry_after.max(secs);
                         backoff =
                             backoff.max(Duration::from_secs(secs.min(5)));
+                    }
+                    shedding[attempt % chain.len()] = true;
+                    if shedding.iter().all(|s| *s) {
+                        return Err(ServeError::Overloaded(format!(
+                            "all {} replicas shedding load; retry in \
+                             {}s",
+                            chain.len(),
+                            max_retry_after.max(1),
+                        )));
                     }
                 }
                 Ok(resp) => {
@@ -316,6 +332,7 @@ impl RemotePreRanker {
                             deadline: remaining,
                             trace: false,
                             scenario: req.scenario.clone(),
+                            sla: req.sla,
                         };
                         scope.spawn(move || {
                             self.serve_on_chain(&sub, &chain, started)
@@ -353,7 +370,12 @@ impl RemotePreRanker {
             .iter()
             .filter_map(|s| s.timings.user_async)
             .max();
+        // The merged result is only as good as its most degraded chunk:
+        // report the highest tier index (= cheapest rung) any shard
+        // served at, so the caller never overestimates fidelity.
+        let tier = subs.iter().filter_map(|s| s.tier).max();
         Some(Ok(ScoreResponse {
+            tier,
             request_id: first.request_id,
             user: req.user,
             scenario: first.scenario.clone(),
@@ -370,6 +392,7 @@ impl RemotePreRanker {
                 n_batches: subs.len(),
                 coalesced_batches: 0,
                 user_side: None,
+                tier,
                 stages: vec![StageSpan {
                     stage: "scatter_gather",
                     elapsed: started.elapsed(),

@@ -25,6 +25,7 @@ use anyhow::Result;
 
 use super::batcher;
 use super::core::{sim_budget_key, ServingCore, AUTO_REQUEST_ID_BASE};
+use super::overload::{OverloadStats, OverloadView, MAX_TIERS};
 use super::service::{
     PhaseTimings, PreRanker, ScenarioInfo, ScoreRequest, ScoreResponse,
     ScoreTrace, ScoredItem, ServeError, StageSpan,
@@ -33,7 +34,7 @@ use crate::cache::{
     ArenaPool, Claim, Flight, FlightGuard, PooledBuf, RequestKey,
     ShardedLru, UserAsync, UserKey, UserSide,
 };
-use crate::config::{ScenarioConfig, SimMode};
+use crate::config::{ScenarioConfig, SimMode, TierSpec};
 use crate::features::{assembly, FeatureStore, World};
 use crate::lsh;
 use crate::metrics::ServingMetrics;
@@ -606,6 +607,9 @@ impl ScenarioEngine {
                 n_batches: candidates.len().div_ceil(core.batch),
                 coalesced_batches: coalesce.batches,
                 user_side: user_side.map(UserSide::as_str),
+                // Stamped by the tier-resolving facade (Merger); a bare
+                // engine has no ladder position.
+                tier: None,
                 stages,
             })
         } else {
@@ -617,6 +621,7 @@ impl ScenarioEngine {
             user,
             scenario: self.cfg.name.clone(),
             variant: self.cfg.variant.clone(),
+            tier: None,
             items: top
                 .into_iter()
                 .map(|(item, score)| ScoredItem { item, score })
@@ -817,8 +822,30 @@ impl PreRanker for ScenarioEngine {
 // The registry
 // ==========================================================================
 
+/// One registered scenario with its execution-tier ladder: `tiers[0]` is
+/// the full-fidelity engine, higher indices are the cheaper rungs the
+/// overload controller degrades into (DESIGN.md §20).  Scenarios without
+/// a configured ladder get the single-rung `[full(variant)]` — identical
+/// to the pre-tiering registry.  The [`OverloadStats`] lives OUTSIDE the
+/// engines and survives reload, so a reload under saturation keeps the
+/// controller's tier instead of resetting to full.
+#[derive(Clone)]
+pub struct TieredScenario {
+    pub tiers: Vec<Arc<ScenarioEngine>>,
+    pub ladder: Vec<TierSpec>,
+    pub stats: Arc<OverloadStats>,
+}
+
+impl TieredScenario {
+    /// The engine at `tier`, clamped into the ladder.
+    pub fn engine_at(&self, tier: usize) -> (&Arc<ScenarioEngine>, usize) {
+        let t = tier.min(self.tiers.len() - 1);
+        (&self.tiers[t], t)
+    }
+}
+
 struct RegistryState {
-    engines: HashMap<String, Arc<ScenarioEngine>>,
+    engines: HashMap<String, TieredScenario>,
     /// Registration order (stable listings).
     order: Vec<String>,
     default: String,
@@ -853,8 +880,9 @@ impl ScenarioRegistry {
         &self.core
     }
 
-    /// Register a new scenario (hot add).  The engine is built outside the
-    /// lock — traffic keeps flowing while artifacts compile.
+    /// Register a new scenario (hot add).  Every ladder rung's engine is
+    /// built outside the lock — traffic keeps flowing while artifacts
+    /// compile.
     pub fn add(
         &self,
         cfg: ScenarioConfig,
@@ -864,13 +892,19 @@ impl ScenarioRegistry {
             !self.state.read().unwrap().engines.contains_key(&name),
             "scenario {name:?} is already registered"
         );
-        let engine = ScenarioEngine::build(&self.core, cfg, 0, None)?;
+        let tiers = build_ladder(&self.core, &cfg, 0, &[])?;
+        let entry = TieredScenario {
+            stats: Arc::new(OverloadStats::new(tiers.len())),
+            ladder: cfg.effective_ladder(),
+            tiers,
+        };
+        let engine = Arc::clone(&entry.tiers[0]);
         let mut state = self.state.write().unwrap();
         anyhow::ensure!(
             !state.engines.contains_key(&name),
             "scenario {name:?} was registered concurrently"
         );
-        state.engines.insert(name.clone(), Arc::clone(&engine));
+        state.engines.insert(name.clone(), entry);
         state.order.push(name);
         Ok(engine)
     }
@@ -897,13 +931,25 @@ impl ScenarioRegistry {
             .get(name)
             .cloned()
             .ok_or_else(|| ServeError::UnknownScenario(name.to_string()))?;
-        let engine = ScenarioEngine::build(
+        let old_top = &old.tiers[0];
+        let tiers = build_ladder(
             &self.core,
-            old.cfg.clone(),
-            old.generation + 1,
-            Some(Arc::clone(&old.metrics)),
+            &old_top.cfg,
+            old_top.generation + 1,
+            &old.tiers,
         )
         .map_err(|e| ServeError::Internal(format!("{e:#}")))?;
+        // The overload state survives the swap: a reload during
+        // saturation keeps serving at the controller's tier instead of
+        // snapping back to full and spiking p99.  Only the ladder SIZE
+        // is re-clamped (a shrunk ladder can't point past its end).
+        old.stats.set_n_tiers(tiers.len());
+        let entry = TieredScenario {
+            stats: Arc::clone(&old.stats),
+            ladder: old_top.cfg.effective_ladder(),
+            tiers,
+        };
+        let engine = Arc::clone(&entry.tiers[0]);
         // Checkpoint barrier (DESIGN.md §16): the engine swap + epoch
         // bump is a version event, and a checkpoint captured halfway
         // through it would pair the old epoch with the new engine.
@@ -913,11 +959,9 @@ impl ScenarioRegistry {
         *crossings += 1;
         let mut state = self.state.write().unwrap();
         match state.engines.get(name) {
-            // Still the engine we rebuilt from: swap.
-            Some(current) if Arc::ptr_eq(current, &old) => {
-                state
-                    .engines
-                    .insert(name.to_string(), Arc::clone(&engine));
+            // Still the engines we rebuilt from: swap.
+            Some(current) if Arc::ptr_eq(&current.tiers[0], old_top) => {
+                state.engines.insert(name.to_string(), entry);
                 // Invalidate cached cross-request user state: reload is a
                 // version event, so the epoch moves and old entries stop
                 // matching (they age out via TTL/LRU, no sweep needed).
@@ -953,10 +997,21 @@ impl ScenarioRegistry {
     }
 
     /// Resolve a request's scenario: the named one, or the default.
+    /// Returns the FULL (tier-0) engine — tier resolution is the
+    /// facade's job via [`ScenarioRegistry::entry`].
     pub fn get(
         &self,
         name: Option<&str>,
     ) -> Result<Arc<ScenarioEngine>, ServeError> {
+        Ok(Arc::clone(&self.entry(name)?.tiers[0]))
+    }
+
+    /// Resolve a request's scenario WITH its tier ladder and overload
+    /// state (clones three `Arc`s under the brief read lock).
+    pub fn entry(
+        &self,
+        name: Option<&str>,
+    ) -> Result<TieredScenario, ServeError> {
         let state = self.state.read().unwrap();
         let key = name.unwrap_or(state.default.as_str());
         state
@@ -990,19 +1045,95 @@ impl ScenarioRegistry {
             .order
             .iter()
             .filter_map(|n| state.engines.get(n))
-            .map(|e| e.info(e.cfg.name == state.default))
+            .map(|e| {
+                let top = &e.tiers[0];
+                top.info(top.cfg.name == state.default)
+            })
             .collect()
     }
 
-    /// Engines in registration order (workload drivers iterate these).
+    /// Tier-0 engines in registration order (workload drivers iterate
+    /// these).
     pub fn engines(&self) -> Vec<Arc<ScenarioEngine>> {
         let state = self.state.read().unwrap();
         state
             .order
             .iter()
-            .filter_map(|n| state.engines.get(n).cloned())
+            .filter_map(|n| state.engines.get(n))
+            .map(|e| Arc::clone(&e.tiers[0]))
             .collect()
     }
+
+    /// Controller view of every scenario: its overload state plus the
+    /// metrics of every rung (for the windowed-p99 sample).
+    pub fn overload_views(&self) -> Vec<OverloadView> {
+        let state = self.state.read().unwrap();
+        state
+            .order
+            .iter()
+            .filter_map(|n| state.engines.get(n).map(|e| (n, e)))
+            .map(|(n, e)| OverloadView {
+                name: n.clone(),
+                stats: Arc::clone(&e.stats),
+                metrics: e
+                    .tiers
+                    .iter()
+                    .map(|t| Arc::clone(&t.metrics))
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Per-scenario `overload` blocks for `/metrics`.
+    pub fn overload_snapshots(&self) -> Vec<(String, crate::util::json::Value)>
+    {
+        let state = self.state.read().unwrap();
+        state
+            .order
+            .iter()
+            .filter_map(|n| state.engines.get(n).map(|e| (n, e)))
+            .map(|(n, e)| (n.clone(), e.stats.snapshot(&e.ladder)))
+            .collect()
+    }
+}
+
+/// Build one engine per ladder rung.  Rung 0 carries the old tier-0
+/// metrics on reload; rungs 1+ share rung 0's metrics object so the
+/// scenario reports ONE latency/request stream wherever its requests
+/// land on the ladder (the engine build falls back to a fresh object
+/// only if a rung's coalescer wiring diverges).
+fn build_ladder(
+    core: &Arc<ServingCore>,
+    cfg: &ScenarioConfig,
+    generation: u64,
+    old_tiers: &[Arc<ScenarioEngine>],
+) -> Result<Vec<Arc<ScenarioEngine>>> {
+    let ladder = cfg.effective_ladder();
+    anyhow::ensure!(
+        ladder.len() <= MAX_TIERS,
+        "scenario {:?}: ladder has {} rungs (max {MAX_TIERS})",
+        cfg.name,
+        ladder.len()
+    );
+    let mut tiers: Vec<Arc<ScenarioEngine>> =
+        Vec::with_capacity(ladder.len());
+    for (i, rung) in ladder.iter().enumerate() {
+        let mut rung_cfg = cfg.clone();
+        rung_cfg.variant = rung.variant.clone();
+        if rung.max_candidates > 0 {
+            // The compute knob: fewer candidates through retrieval means
+            // proportionally fewer mini-batches through the head.
+            rung_cfg.n_candidates =
+                rung_cfg.n_candidates.min(rung.max_candidates);
+        }
+        let carry = if i == 0 {
+            old_tiers.first().map(|t| Arc::clone(&t.metrics))
+        } else {
+            Some(Arc::clone(&tiers[0].metrics))
+        };
+        tiers.push(ScenarioEngine::build(core, rung_cfg, generation, carry)?);
+    }
+    Ok(tiers)
 }
 
 // ==========================================================================

@@ -11,9 +11,12 @@
 //! HTTP status mapping instead of `anyhow` leaking to callers.  Any
 //! pipeline that implements [`PreRanker`] plugs into every harness.
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::config::{parse_sla, SlaClass};
 use crate::metrics::ServingMetrics;
+use crate::server::http::FrontendStats;
 use crate::util::json::{Object, Value};
 
 /// Per-request phase timings.
@@ -58,6 +61,11 @@ pub struct ScoreRequest {
     /// the configured default.  Unknown names fail with
     /// [`ServeError::UnknownScenario`].
     pub scenario: Option<String>,
+    /// SLA class under overload tiering (DESIGN.md §20): `guaranteed`
+    /// always serves at the top tier, `degradable` at the controller's
+    /// tier, `best_effort` degrades first and recovers last.  `None`
+    /// takes the configured `overload.default_sla`.
+    pub sla: Option<SlaClass>,
 }
 
 impl ScoreRequest {
@@ -98,6 +106,11 @@ impl ScoreRequest {
         self
     }
 
+    pub fn with_sla(mut self, sla: SlaClass) -> Self {
+        self.sla = Some(sla);
+        self
+    }
+
     /// Parse one request object from a `POST /v1/score` JSON body.
     pub fn from_json(v: &Value) -> Result<ScoreRequest, ServeError> {
         let o = v.as_obj().ok_or_else(|| {
@@ -117,7 +130,7 @@ impl ScoreRequest {
             if !matches!(
                 key,
                 "user" | "users" | "top_k" | "candidates" | "deadline_ms"
-                    | "trace" | "scenario"
+                    | "trace" | "scenario" | "sla"
             ) {
                 return Err(ServeError::BadRequest(format!(
                     "unknown field {key:?}"
@@ -161,6 +174,14 @@ impl ScoreRequest {
                 ));
             }
             req.scenario = Some(s.to_string());
+        }
+        if let Some(v) = o.get("sla") {
+            let s = v.as_str().ok_or_else(|| {
+                ServeError::BadRequest("\"sla\" must be a string".into())
+            })?;
+            req.sla = Some(parse_sla(s).map_err(|e| {
+                ServeError::BadRequest(format!("{e:#}"))
+            })?);
         }
         if let Some(v) = o.get("candidates") {
             let arr = v.as_arr().ok_or_else(|| {
@@ -223,6 +244,9 @@ impl ScoreRequest {
         if let Some(s) = &self.scenario {
             o.insert("scenario", s.as_str());
         }
+        if let Some(sla) = self.sla {
+            o.insert("sla", sla.as_str());
+        }
         Value::Obj(o)
     }
 }
@@ -268,6 +292,9 @@ pub struct ScoreTrace {
     /// `"joined"` (parked on another request's in-flight computation).
     /// `None` on variants without an async user side.
     pub user_side: Option<&'static str>,
+    /// Ladder tier that served the request (0 = full fidelity); `None`
+    /// when the service has no overload tiering.
+    pub tier: Option<usize>,
     pub stages: Vec<StageSpan>,
 }
 
@@ -280,6 +307,10 @@ pub struct ScoreResponse {
     pub scenario: String,
     /// Pipeline variant that served the request (Table-4 row name).
     pub variant: String,
+    /// Ladder tier that served the request (0 = full fidelity; on a
+    /// scatter-gather response the *most degraded* tier any shard used).
+    /// `None` when the service has no overload tiering.
+    pub tier: Option<usize>,
     /// Top-K scored items, descending score.
     pub items: Vec<ScoredItem>,
     pub timings: PhaseTimings,
@@ -295,6 +326,9 @@ impl ScoreResponse {
         o.insert("user", self.user);
         o.insert("scenario", self.scenario.as_str());
         o.insert("variant", self.variant.as_str());
+        if let Some(t) = self.tier {
+            o.insert("tier", t);
+        }
         o.insert("total_ms", ms(self.timings.total));
         o.insert("retrieval_ms", ms(self.timings.retrieval));
         if let Some(ua) = self.timings.user_async {
@@ -319,6 +353,9 @@ impl ScoreResponse {
             t.insert("coalesced_batches", trace.coalesced_batches);
             if let Some(side) = trace.user_side {
                 t.insert("user_side", side);
+            }
+            if let Some(tier) = trace.tier {
+                t.insert("tier", tier);
             }
             let stages: Vec<Value> = trace
                 .stages
@@ -386,6 +423,7 @@ impl ScoreResponse {
                     .get("user_side")
                     .and_then(Value::as_str)
                     .and_then(intern_user_side),
+                tier: t.get("tier").and_then(Value::as_usize),
                 stages: t
                     .get("stages")
                     .and_then(Value::as_arr)
@@ -417,6 +455,8 @@ impl ScoreResponse {
                 .and_then(Value::as_str)
                 .ok_or_else(|| bad("variant"))?
                 .to_string(),
+            // Tolerant: absent on workers without overload tiering.
+            tier: o.get("tier").and_then(Value::as_usize),
             items,
             timings: PhaseTimings {
                 total: dur(num("total_ms")?),
@@ -652,6 +692,19 @@ pub trait ScenarioAdmin: Send + Sync {
         ))
     }
 
+    /// Per-scenario overload-tiering snapshots for the `/metrics`
+    /// `overload` block (current tier, transitions, dwell, per-tier
+    /// request counts, controller inputs); `None` when the service has
+    /// no tier ladder / controller.
+    fn overload_stats(&self) -> Option<Value> {
+        None
+    }
+
+    /// Front ends announce their stats block here so the overload
+    /// controller can sample queue depth and in-flight counts.  Default:
+    /// the service has no controller and ignores the registration.
+    fn register_frontend(&self, _stats: &Arc<FrontendStats>) {}
+
     /// Cluster membership + per-shard counters for the `/metrics`
     /// `cluster` block and `GET /v1/cluster` (`None` on single-process
     /// services — only the router tier has a cluster to report).
@@ -729,6 +782,26 @@ mod tests {
     }
 
     #[test]
+    fn sla_knob_parses_and_rejects() {
+        let v = Value::parse(r#"{"user": 1, "sla": "guaranteed"}"#).unwrap();
+        let req = ScoreRequest::from_json(&v).unwrap();
+        assert_eq!(req.sla, Some(SlaClass::Guaranteed));
+        for bad in [
+            r#"{"user": 1, "sla": "platinum"}"#,
+            r#"{"user": 1, "sla": 3}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(matches!(
+                ScoreRequest::from_json(&v),
+                Err(ServeError::BadRequest(_))
+            ));
+        }
+        // Absent -> None -> the configured default class applies.
+        let v = Value::parse(r#"{"user": 1}"#).unwrap();
+        assert_eq!(ScoreRequest::from_json(&v).unwrap().sla, None);
+    }
+
+    #[test]
     fn http_status_mapping() {
         assert_eq!(ServeError::UnknownUser(1).http_status(), 404);
         assert_eq!(
@@ -800,7 +873,8 @@ mod tests {
             .with_candidates(vec![7, 1, 42])
             .with_deadline(Duration::from_millis(35))
             .with_trace(true)
-            .with_scenario("video");
+            .with_scenario("video")
+            .with_sla(SlaClass::BestEffort);
         let wire = Value::parse(&req.to_json().to_string()).unwrap();
         let back = ScoreRequest::from_json(&wire).unwrap();
         assert_eq!(back.user, 9);
@@ -809,6 +883,7 @@ mod tests {
         assert_eq!(back.deadline, Some(Duration::from_millis(35)));
         assert!(back.trace);
         assert_eq!(back.scenario.as_deref(), Some("video"));
+        assert_eq!(back.sla, Some(SlaClass::BestEffort));
         // request_id never crosses the wire — workers allocate their own.
         let req = ScoreRequest::user(1).with_request_id(77);
         assert!(req.to_json().get("request_id").is_none());
@@ -832,6 +907,7 @@ mod tests {
             user: 2,
             scenario: "main".into(),
             variant: "aif".into(),
+            tier: Some(1),
             items: scores
                 .iter()
                 .enumerate()
@@ -851,6 +927,7 @@ mod tests {
                 n_batches: 4,
                 coalesced_batches: 0,
                 user_side: Some("miss"),
+                tier: Some(1),
                 stages: vec![
                     StageSpan {
                         stage: "retrieval",
@@ -880,9 +957,11 @@ mod tests {
             );
         }
         assert!(back.timings.user_async.is_none());
+        assert_eq!(back.tier, Some(1), "tier survives the wire");
         let t = back.trace.expect("trace survives");
         assert_eq!(t.n_candidates, 64);
         assert_eq!(t.user_side, Some("miss"));
+        assert_eq!(t.tier, Some(1));
         assert_eq!(t.stages.len(), 2);
         assert_eq!(t.stages[0].stage, "retrieval");
 
@@ -930,6 +1009,7 @@ mod tests {
             user: 3,
             scenario: "main".into(),
             variant: "aif".into(),
+            tier: None,
             items: vec![
                 ScoredItem {
                     item: 10,
@@ -951,6 +1031,7 @@ mod tests {
                 n_batches: 2,
                 coalesced_batches: 2,
                 user_side: Some("hit"),
+                tier: None,
                 stages: vec![StageSpan {
                     stage: "prerank",
                     elapsed: Duration::from_millis(8),

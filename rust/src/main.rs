@@ -82,7 +82,9 @@ fn usage() {
          cluster: [--role router|worker] [--workers HOST:PORT,...] \
          [--vnodes N] [--cluster-retries N] [--probe-interval-ms MS] \
          [--request-timeout-ms MS] [--connect-timeout-ms MS] \
-         [--eject-after N] [--readmit-after N] [--max-inflight N]"
+         [--eject-after N] [--readmit-after N] [--max-inflight N]\n\
+         overload: [--overload BOOL] [--overload-dwell-ms MS] \
+         [--sla-bound-ms MS] (ladder + thresholds via --config)"
     );
 }
 
@@ -189,6 +191,13 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
     cluster.max_inflight_per_node = args
         .usize_or("max-inflight", cluster.max_inflight_per_node)
         .max(1);
+    let mut overload = cfg.overload.clone();
+    overload.enabled = args.bool_or("overload", overload.enabled);
+    overload.dwell_ms = args
+        .usize_or("overload-dwell-ms", overload.dwell_ms as usize)
+        as u64;
+    overload.sla_bound_ms =
+        args.f64_or("sla-bound-ms", overload.sla_bound_ms);
     let mut cfg = ServingConfig {
         variant: args.str_or("variant", &cfg.variant),
         artifacts_dir: artifacts_dir(args),
@@ -210,6 +219,7 @@ fn resolve_cfg(args: &Args) -> anyhow::Result<ServingConfig> {
         nearline,
         frontend,
         cluster,
+        overload,
         ..cfg
     };
     // Inline scenario blocks: `--scenarios main=aif,fallback=base:off`

@@ -98,6 +98,47 @@ impl Histogram {
         self.sum_nanos.store(0, Ordering::Relaxed);
         self.max_nanos.store(0, Ordering::Relaxed);
     }
+
+    /// Snapshot of the raw bucket counters.  Pair two snapshots with
+    /// [`Histogram::percentile_between`] to read percentiles over a time
+    /// *window* of a histogram that itself accumulates forever — the
+    /// overload controller's view of "p99 over the last sample tick".
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Percentile in seconds over the recordings BETWEEN two
+    /// [`Histogram::bucket_counts`] snapshots (`prev` taken earlier).
+    /// Returns `None` when the window holds no recordings.  Counters are
+    /// monotonic, so the per-bucket delta is exact even while writers
+    /// race the snapshots.
+    pub fn percentile_between(
+        prev: &[u64],
+        cur: &[u64],
+        p: f64,
+    ) -> Option<f64> {
+        debug_assert_eq!(prev.len(), cur.len());
+        let total: u64 = cur
+            .iter()
+            .zip(prev)
+            .map(|(c, pr)| c.saturating_sub(*pr))
+            .sum();
+        if total == 0 {
+            return None;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, (c, pr)) in cur.iter().zip(prev).enumerate() {
+            seen += c.saturating_sub(*pr);
+            if seen >= target {
+                return Some(Self::bucket_upper(i) / 1e9);
+            }
+        }
+        None
+    }
 }
 
 /// Lock-free log2-bucketed histogram over plain counts (batch sizes, rows
@@ -224,6 +265,32 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn windowed_percentile_sees_only_the_delta() {
+        let h = Histogram::new();
+        // Epoch 1: a slow regime.
+        for _ in 0..100 {
+            h.record(Duration::from_millis(50));
+        }
+        let snap1 = h.bucket_counts();
+        // Epoch 2: fast again.  The cumulative p99 stays ~50ms, the
+        // windowed p99 sees only the fresh fast recordings.
+        for _ in 0..100 {
+            h.record(Duration::from_micros(100));
+        }
+        let snap2 = h.bucket_counts();
+        let cumulative = h.percentile(99.0);
+        assert!(cumulative > 10e-3, "cumulative p99 {cumulative}");
+        let windowed =
+            Histogram::percentile_between(&snap1, &snap2, 99.0).unwrap();
+        assert!(windowed < 1e-3, "windowed p99 {windowed}");
+        // An empty window has no percentile.
+        assert_eq!(
+            Histogram::percentile_between(&snap2, &snap2, 99.0),
+            None
+        );
     }
 
     #[test]

@@ -93,6 +93,10 @@ pub struct FrontendStats {
     pub write_wakeups: AtomicU64,
     /// Parsed requests waiting for a scoring worker (evented mode).
     pub queue_depth: AtomicUsize,
+    /// Requests currently being scored by a worker (gauge, both modes).
+    /// Together with `queue_depth` this is the load signal the overload
+    /// controller samples (DESIGN.md §20).
+    pub jobs_inflight: AtomicUsize,
     pub jobs_submitted: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
@@ -118,6 +122,7 @@ impl FrontendStats {
             read_wakeups: AtomicU64::new(0),
             write_wakeups: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
+            jobs_inflight: AtomicUsize::new(0),
             jobs_submitted: AtomicU64::new(0),
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
@@ -167,6 +172,10 @@ impl FrontendStats {
             "queue_depth",
             self.queue_depth.load(Ordering::Relaxed) as u64,
         );
+        o.insert(
+            "jobs_inflight",
+            self.jobs_inflight.load(Ordering::Relaxed) as u64,
+        );
         o.insert("jobs_submitted", g(&self.jobs_submitted));
         o.insert("bytes_in", g(&self.bytes_in));
         o.insert("bytes_out", g(&self.bytes_out));
@@ -191,6 +200,11 @@ pub struct Response {
     /// cluster router's backoff) get a concrete signal instead of
     /// guessing.  Shed paths derive it from live queue depth.
     pub retry_after: Option<u64>,
+    /// Execution tier the request was served at (DESIGN.md §20) —
+    /// emitted as an `X-AIF-Tier` response header so degradation is
+    /// visible without parsing the body.  Batch responses carry the most
+    /// degraded tier across their results.
+    pub tier: Option<usize>,
     pub body: String,
 }
 
@@ -201,6 +215,7 @@ impl Response {
             content_type: "application/json",
             allow: None,
             retry_after: None,
+            tier: None,
             body: v.to_string_pretty(),
         }
     }
@@ -211,6 +226,7 @@ impl Response {
             content_type: "text/plain",
             allow: None,
             retry_after: None,
+            tier: None,
             body: body.to_string(),
         }
     }
@@ -268,6 +284,11 @@ impl Response {
         if let Some(secs) = self.retry_after {
             out.extend_from_slice(
                 format!("Retry-After: {secs}\r\n").as_bytes(),
+            );
+        }
+        if let Some(tier) = self.tier {
+            out.extend_from_slice(
+                format!("X-AIF-Tier: {tier}\r\n").as_bytes(),
             );
         }
         out.extend_from_slice(b"\r\n");
@@ -384,6 +405,9 @@ pub(crate) fn dispatch(
                 }
                 if let Some(nl) = a.nearline_stats() {
                     o.insert("nearline", nl);
+                }
+                if let Some(ov) = a.overload_stats() {
+                    o.insert("overload", ov);
                 }
                 o.insert("scenarios", Value::Obj(per));
             }
@@ -533,6 +557,7 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
     let mut deadline_ms: Option<f64> = None;
     let mut trace = false;
     let mut scenario: Option<String> = None;
+    let mut sla: Option<crate::config::SlaClass> = None;
     for kv in query.split('&').filter(|s| !s.is_empty()) {
         let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
         match k {
@@ -582,6 +607,11 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
                 }
                 scenario = Some(v.to_string());
             }
+            "sla" => {
+                sla = Some(crate::config::parse_sla(v).map_err(|e| {
+                    ServeError::BadRequest(e.to_string())
+                })?);
+            }
             other => {
                 return Err(ServeError::BadRequest(format!(
                     "unknown query param {other:?}"
@@ -601,6 +631,9 @@ fn parse_query(query: &str) -> Result<ScoreRequest, ServeError> {
     }
     if let Some(s) = scenario {
         req = req.with_scenario(s);
+    }
+    if let Some(c) = sla {
+        req = req.with_sla(c);
     }
     Ok(req)
 }
@@ -642,6 +675,9 @@ fn score_body(ranker: &dyn PreRanker, body: &Value) -> Response {
         Err(e) => return unprocessable(&e.to_string()),
     };
     let mut results: Vec<Value> = Vec::with_capacity(users.len());
+    // Batch header tier = most degraded (highest index) tier any result
+    // was served at.
+    let mut batch_tier: Option<usize> = None;
     for u in users {
         let Some(user) = u
             .as_f64()
@@ -657,18 +693,27 @@ fn score_body(ranker: &dyn PreRanker, body: &Value) -> Response {
         // Per-user failures come back inline so one bad user doesn't
         // void the whole batch.
         results.push(match ranker.score(req) {
-            Ok(resp) => resp.to_json(),
+            Ok(resp) => {
+                batch_tier = batch_tier.max(resp.tier);
+                resp.to_json()
+            }
             Err(e) => error_json(&e),
         });
     }
     let mut o = Object::new();
     o.insert("results", Value::Arr(results));
-    Response::json(200, &Value::Obj(o))
+    let mut r = Response::json(200, &Value::Obj(o));
+    r.tier = batch_tier;
+    r
 }
 
 fn score_one(ranker: &dyn PreRanker, req: ScoreRequest) -> Response {
     match ranker.score(req) {
-        Ok(resp) => Response::json(200, &resp.to_json()),
+        Ok(resp) => {
+            let mut r = Response::json(200, &resp.to_json());
+            r.tier = resp.tier;
+            r
+        }
         Err(e) => Response::from_serve_error(&e),
     }
 }
@@ -744,6 +789,11 @@ impl HttpServer {
                 {
                     let stats =
                         Arc::new(FrontendStats::new("evented"));
+                    // The overload controller samples this front end's
+                    // queue depth and in-flight gauge (DESIGN.md §20).
+                    if let Some(a) = &admin {
+                        a.register_frontend(&stats);
+                    }
                     let evented =
                         crate::server::reactor::EventedServer::start(
                             ranker,
@@ -788,6 +838,9 @@ impl HttpServer {
         started: Instant,
     ) -> Result<HttpServer> {
         let stats = Arc::new(FrontendStats::new("blocking"));
+        if let Some(a) = &admin {
+            a.register_frontend(&stats);
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let stats2 = Arc::clone(&stats);
@@ -970,8 +1023,10 @@ fn handle_blocking_conn(
                             || served + 1
                                 < cfg.keepalive_max_requests as u64);
                     stats.requests.fetch_add(1, Ordering::Relaxed);
+                    stats.jobs_inflight.fetch_add(1, Ordering::Relaxed);
                     let resp =
                         dispatch(&req, ranker, admin, started, stats);
+                    stats.jobs_inflight.fetch_sub(1, Ordering::Relaxed);
                     let bytes = resp.serialize(keep_alive);
                     if stream.write_all(&bytes).is_err() {
                         return;
@@ -1222,6 +1277,31 @@ mod tests {
             String::from_utf8(Response::from_serve_error(&e).serialize(false))
                 .unwrap();
         assert!(!s.contains("Retry-After"), "{s}");
+    }
+
+    #[test]
+    fn serialize_emits_tier_header() {
+        let mut r = Response::text(200, "ok");
+        r.tier = Some(2);
+        let s = String::from_utf8(r.serialize(true)).unwrap();
+        assert!(s.contains("X-AIF-Tier: 2\r\n"), "{s}");
+        // No tier -> no header.
+        let s = String::from_utf8(
+            Response::text(200, "ok").serialize(true),
+        )
+        .unwrap();
+        assert!(!s.contains("X-AIF-Tier"), "{s}");
+    }
+
+    #[test]
+    fn query_accepts_sla_class() {
+        use crate::config::SlaClass;
+        let req = parse_query("user=1&sla=guaranteed").unwrap();
+        assert_eq!(req.sla, Some(SlaClass::Guaranteed));
+        let req = parse_query("user=1&sla=best_effort").unwrap();
+        assert_eq!(req.sla, Some(SlaClass::BestEffort));
+        assert_eq!(parse_query("user=1").unwrap().sla, None);
+        assert!(parse_query("user=1&sla=gold").is_err());
     }
 
     #[test]

@@ -1244,6 +1244,7 @@ impl Reactor {
 fn worker_loop(shared: Arc<Shared>) {
     let stats = Arc::clone(&shared.stats);
     while let Some(job) = shared.queue.pop(&stats) {
+        stats.jobs_inflight.fetch_add(1, Ordering::Relaxed);
         let resp = dispatch(
             &job.request,
             shared.ranker.as_ref(),
@@ -1251,6 +1252,7 @@ fn worker_loop(shared: Arc<Shared>) {
             shared.started,
             &stats,
         );
+        stats.jobs_inflight.fetch_sub(1, Ordering::Relaxed);
         let bytes = resp.serialize(job.keep_alive);
         let r = &shared.reactors[job.reactor];
         r.inbox.lock().unwrap().completions.push(Completion {

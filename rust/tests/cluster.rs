@@ -62,6 +62,7 @@ impl PreRanker for RecordingRanker {
             user: req.user,
             scenario: "mock".into(),
             variant: self.tag.into(),
+            tier: None,
             items: vec![ScoredItem { item: req.user as u32, score: 1.0 }],
             timings: PhaseTimings {
                 total: Duration::from_micros(10),

@@ -65,6 +65,7 @@ impl PreRanker for MockRanker {
                 .clone()
                 .unwrap_or_else(|| "mock".to_string()),
             variant: "mock".into(),
+            tier: None,
             items,
             timings,
             trace: None,

@@ -1,0 +1,333 @@
+//! Load-adaptive computation tiering, integration-shaped (DESIGN.md §20;
+//! ISSUE 10 acceptance):
+//!
+//! * sustained overload steps the scenario down its ladder one rung per
+//!   controller tick; load dropping steps it back up — with zero failed
+//!   requests either way;
+//! * `guaranteed` traffic NEVER observes a degraded tier, through
+//!   degradation, forced pins and hot reloads;
+//! * within a pinned tier, responses are bitwise-deterministic, and the
+//!   served tier is visible on the response, the trace and `/metrics`;
+//! * `ScenarioRegistry::reload` under degradation preserves the
+//!   controller's current tier instead of resetting to full.
+//!
+//! Runs against the synthetic fixture artifact set over the
+//! deterministic PJRT stand-in, like the other serving suites.  The
+//! controller loop is driven by explicit `controller_tick` calls against
+//! a registered [`FrontendStats`] block, so every transition here is
+//! deterministic — the wall-clock sampling thread is covered by the
+//! overload bench.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use aif::config::{
+    OverloadConfig, ScenarioConfig, ServingConfig, SimMode, SlaClass,
+    TierSpec,
+};
+use aif::coordinator::overload::{controller_tick, EwmaState, LoadSample};
+use aif::coordinator::{Merger, ScoreRequest};
+use aif::features::LatencyModel;
+use aif::server::http::FrontendStats;
+use aif::util::fixture;
+
+/// Fresh fixture dir per test (tests run in parallel).
+fn fixture_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("aif-overload-{}-{tag}", std::process::id()));
+    fixture::write(&dir).expect("fixture generation");
+    dir
+}
+
+/// Removes the fixture dir when the test ends (also on panic/unwind).
+struct Cleanup(PathBuf);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Three-rung ladder: full AIF, a truncated-candidate AIF tier, and a
+/// cheap synchronous floor on the base variant.
+fn ladder() -> Vec<TierSpec> {
+    vec![
+        TierSpec::full("aif"),
+        TierSpec {
+            name: "lite".into(),
+            variant: "aif".into(),
+            max_candidates: 24,
+        },
+        TierSpec {
+            name: "floor".into(),
+            variant: "base".into(),
+            max_candidates: 16,
+        },
+    ]
+}
+
+/// Queue-depth-only controller config with no dwell: one deterministic
+/// rung per tick.  `enabled` stays false — the tests drive ticks by
+/// hand; the sampling thread adds nothing but wall-clock jitter here.
+fn overload_cfg() -> OverloadConfig {
+    OverloadConfig {
+        degrade_queue_depth: 8,
+        recover_queue_depth: 1,
+        dwell_ms: 0,
+        ..OverloadConfig::default()
+    }
+}
+
+/// Fast core config: tiny modeled latencies, small candidate sets, one
+/// laddered scenario named "ranked".
+fn core_cfg(dir: &PathBuf) -> ServingConfig {
+    let base = ServingConfig {
+        n_rtp_workers: 2,
+        n_async_workers: 4,
+        n_candidates: 48,
+        top_k: 16,
+        retrieval_latency: LatencyModel::fixed(100.0),
+        user_store_latency: LatencyModel::fixed(20.0),
+        item_store_latency: LatencyModel::fixed(10.0),
+        sim_parse_us: 0.1,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        overload: overload_cfg(),
+        ..Default::default()
+    };
+    let ranked = ScenarioConfig {
+        sim_mode: SimMode::Precached,
+        ladder: ladder(),
+        ..ScenarioConfig::from_serving("ranked", &base)
+    };
+    ServingConfig {
+        scenarios: vec![ranked],
+        default_scenario: Some("ranked".into()),
+        ..base
+    }
+}
+
+/// Fixed candidate override: retrieval is stochastic, tiering is not.
+fn cands() -> Vec<u32> {
+    (0..48u32).collect()
+}
+
+fn req(user: usize, id: u64) -> ScoreRequest {
+    ScoreRequest::user(user)
+        .with_request_id(id)
+        .with_candidates(cands())
+        .with_top_k(16)
+}
+
+#[test]
+fn overload_degrades_recovers_and_never_fails_guaranteed() {
+    let dir = fixture_dir("degrade");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Arc::new(Merger::build(core_cfg(&dir)).expect("merger"));
+    let entry = merger.registry().entry(Some("ranked")).unwrap();
+    assert_eq!(entry.stats.n_tiers(), 3);
+
+    // The controller reads load from registered front-end stat blocks.
+    let fe = Arc::new(FrontendStats::new("test"));
+    merger.core().overload_signals.register(&fe);
+    let ov = overload_cfg();
+    let mut ewmas: HashMap<String, EwmaState> = HashMap::new();
+
+    // Unloaded baseline: everyone serves the full tier.
+    let r = merger.score(req(1, 10)).expect("baseline");
+    assert_eq!(r.tier, Some(0));
+
+    // Sustained overload: one rung per tick, clamped at the floor.
+    fe.queue_depth.store(20, Ordering::Relaxed);
+    for want in [1usize, 2, 2] {
+        controller_tick(
+            &ov,
+            merger.registry(),
+            &merger.core().overload_signals,
+            &mut ewmas,
+        );
+        assert_eq!(entry.stats.tier(), want, "degrade walks one rung/tick");
+    }
+    assert_eq!(entry.stats.be_tier(), 2);
+
+    // 4-thread mixed-SLA traffic against the degraded scenario: ZERO
+    // failures, guaranteed pinned to the full tier, everything else at
+    // the floor — and the served tier visible on every response.
+    const N_THREADS: usize = 4;
+    const M_REQUESTS: usize = 24;
+    let mut handles = Vec::new();
+    for t in 0..N_THREADS {
+        let merger = Arc::clone(&merger);
+        handles.push(std::thread::spawn(move || {
+            let mut guaranteed = 0u64;
+            for m in 0..M_REQUESTS {
+                let sla = [
+                    SlaClass::Degradable,
+                    SlaClass::Guaranteed,
+                    SlaClass::BestEffort,
+                ][m % 3];
+                let id = 1000 + (t * M_REQUESTS + m) as u64;
+                let r = merger
+                    .score(req((t + m) % 24, id).with_sla(sla))
+                    .expect("no failed requests under degradation");
+                match sla {
+                    SlaClass::Guaranteed => {
+                        assert_eq!(
+                            r.tier,
+                            Some(0),
+                            "guaranteed served below the top tier"
+                        );
+                        guaranteed += 1;
+                    }
+                    _ => assert_eq!(r.tier, Some(2)),
+                }
+            }
+            guaranteed
+        }));
+    }
+    let guaranteed: u64 = handles
+        .into_iter()
+        .map(|h| h.join().expect("traffic thread panicked"))
+        .sum();
+    assert_eq!(guaranteed, (N_THREADS * M_REQUESTS / 3) as u64);
+
+    // Load drops: recovery walks back up, best-effort trailing.
+    fe.queue_depth.store(0, Ordering::Relaxed);
+    for want in [1usize, 0, 0] {
+        controller_tick(
+            &ov,
+            merger.registry(),
+            &merger.core().overload_signals,
+            &mut ewmas,
+        );
+        assert_eq!(entry.stats.tier(), want, "recovery walks one rung/tick");
+    }
+    assert_eq!(entry.stats.be_tier(), 0);
+    assert_eq!(entry.stats.transitions(), (2, 2));
+
+    // The /metrics snapshot reflects all of it.
+    let snaps = merger.registry().overload_snapshots();
+    let (_, snap) = snaps
+        .iter()
+        .find(|(name, _)| name == "ranked")
+        .expect("ranked overload snapshot");
+    assert_eq!(snap.get("tier").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(snap.get("n_tiers").unwrap().as_f64().unwrap(), 3.0);
+    assert_eq!(
+        snap.get("guaranteed_served").unwrap().as_f64().unwrap() as u64,
+        guaranteed
+    );
+    let served = snap.get("served_by_tier").unwrap();
+    assert!(
+        served.get("floor").unwrap().as_f64().unwrap() > 0.0,
+        "degraded traffic must be visible per rung"
+    );
+    assert_eq!(
+        snap.get("inputs")
+            .unwrap()
+            .get("queue_depth")
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+        0.0
+    );
+}
+
+#[test]
+fn pinned_tiers_are_bitwise_deterministic_and_fully_visible() {
+    let dir = fixture_dir("determinism");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Merger::build(core_cfg(&dir)).expect("merger");
+    let entry = merger.registry().entry(Some("ranked")).unwrap();
+
+    // The rung engines really are cheaper: the compute knob clamps each
+    // rung's candidate count.
+    assert_eq!(entry.tiers[0].cfg.n_candidates, 48);
+    assert_eq!(entry.tiers[1].cfg.n_candidates, 24);
+    assert_eq!(entry.tiers[2].cfg.n_candidates, 16);
+
+    let mut tier0_items = None;
+    for (tier, want_cands) in [(0usize, 48usize), (1, 24), (2, 16)] {
+        merger.force_tier(Some("ranked"), Some(tier)).unwrap();
+        let a = merger
+            .score(req(7, 100 + tier as u64).with_trace(true))
+            .expect("pinned-tier request");
+        let b = merger
+            .score(req(7, 200 + tier as u64).with_trace(true))
+            .expect("pinned-tier repeat");
+        assert_eq!(
+            a.items, b.items,
+            "tier {tier}: responses must be bitwise-deterministic"
+        );
+        // The tier is visible on the response AND the trace, and the
+        // trace shows the rung's truncated candidate set.
+        assert_eq!(a.tier, Some(tier));
+        let trace = a.trace.as_ref().expect("trace requested");
+        assert_eq!(trace.tier, Some(tier));
+        assert_eq!(trace.n_candidates, want_cands);
+        if tier == 0 {
+            tier0_items = Some(a.items.clone());
+        }
+        // A pin never touches guaranteed traffic: full tier, full bits.
+        let g = merger
+            .score(req(7, 300 + tier as u64).with_sla(SlaClass::Guaranteed))
+            .expect("guaranteed under pin");
+        assert_eq!(g.tier, Some(0));
+        assert_eq!(
+            Some(&g.items),
+            tier0_items.as_ref(),
+            "guaranteed must serve exactly the full-tier scores"
+        );
+    }
+    // The floor rung serves the base variant, and says so.
+    let floor = merger.score(req(3, 400)).expect("floor request");
+    assert_eq!(floor.variant, "base");
+
+    // Unpin: the controller tier (still 0) takes back over.
+    merger.force_tier(Some("ranked"), None).unwrap();
+    assert_eq!(merger.score(req(7, 500)).unwrap().tier, Some(0));
+}
+
+#[test]
+fn reload_under_degradation_preserves_the_current_tier() {
+    let dir = fixture_dir("reload");
+    let _cleanup = Cleanup(dir.clone());
+    let merger = Merger::build(core_cfg(&dir)).expect("merger");
+    let entry = merger.registry().entry(Some("ranked")).unwrap();
+    let ov = overload_cfg();
+
+    // Degrade to the floor through the stats state machine directly.
+    let overloaded = LoadSample {
+        queue_depth: 20,
+        ..LoadSample::default()
+    };
+    entry.stats.tick(&ov, &overloaded);
+    entry.stats.tick(&ov, &overloaded);
+    assert_eq!(entry.stats.tier(), 2);
+
+    // Hot reload must NOT reset a saturated scenario to full compute.
+    merger.registry().reload("ranked").expect("hot reload");
+    let fresh = merger.registry().entry(Some("ranked")).unwrap();
+    assert!(
+        Arc::ptr_eq(&fresh.stats, &entry.stats),
+        "overload state must survive the reload"
+    );
+    assert_eq!(fresh.stats.tier(), 2, "reload reset the degraded tier");
+    assert_eq!(fresh.stats.n_tiers(), 3);
+    assert_eq!(fresh.tiers[0].generation, 1);
+
+    // Traffic keeps serving at the preserved tier; guaranteed stays top.
+    let r = merger.score(req(5, 600)).expect("post-reload request");
+    assert_eq!(r.tier, Some(2));
+    let g = merger
+        .score(req(5, 601).with_sla(SlaClass::Guaranteed))
+        .expect("post-reload guaranteed");
+    assert_eq!(g.tier, Some(0));
+
+    // Recovery still works on the reloaded entry.
+    let idle = LoadSample::default();
+    fresh.stats.tick(&ov, &idle);
+    fresh.stats.tick(&ov, &idle);
+    assert_eq!(fresh.stats.tier(), 0);
+}

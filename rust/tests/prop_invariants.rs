@@ -1033,6 +1033,188 @@ fn prop_http_parser_never_panics_and_failure_is_terminal() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Overload tiering controller (DESIGN.md §20): the decision core moves
+// at most one rung per step, hysteresis makes the loop flap-free, and
+// `guaranteed` traffic never observes a degraded tier — under arbitrary
+// tick / pin / reload-resize sequences.
+// ---------------------------------------------------------------------
+
+fn overload_cfg_gen() -> Gen<(aif::config::OverloadConfig, usize)> {
+    Gen::new(|rng: &mut Pcg64| {
+        let degrade = 2 + rng.below(62) as usize;
+        let recover = rng.below(degrade as u64 - 1) as usize;
+        let cfg = aif::config::OverloadConfig {
+            enabled: true,
+            degrade_queue_depth: degrade,
+            recover_queue_depth: recover,
+            dwell_ms: rng.below(400),
+            ..aif::config::OverloadConfig::default()
+        };
+        let n_tiers = 1 + rng.below(16) as usize;
+        (cfg, n_tiers)
+    })
+}
+
+#[test]
+fn prop_overload_tier_moves_at_most_one_rung_in_signal_direction() {
+    use aif::coordinator::overload::{
+        overloaded, relaxed, step_tier, LoadSample,
+    };
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let seed = rng.next_u64();
+        let current = rng.below(20) as usize;
+        let q = rng.below(128) as usize;
+        let since = rng.below(800);
+        (seed, current, q, since)
+    });
+    check(
+        "overload step: one rung, right way",
+        &gen,
+        500,
+        |&(seed, current, q, since)| {
+            let (cfg, n_tiers) =
+                (overload_cfg_gen().make)(&mut Pcg64::new(seed));
+            let s = LoadSample {
+                queue_depth: q,
+                ..LoadSample::default()
+            };
+            let next = step_tier(&cfg, n_tiers, current, &s, since);
+            let cur = current.min(n_tiers - 1);
+            if next >= n_tiers {
+                return Err(format!("tier {next} outside {n_tiers}-ladder"));
+            }
+            if next.abs_diff(cur) > 1 {
+                return Err(format!("jumped {cur} -> {next}"));
+            }
+            if since < cfg.dwell_ms && next != cur {
+                return Err("moved inside the dwell window".into());
+            }
+            if next > cur && !overloaded(&cfg, &s) {
+                return Err("degraded without an overload signal".into());
+            }
+            if next < cur && !relaxed(&cfg, &s) {
+                return Err("recovered while not relaxed".into());
+            }
+            // Hysteresis: the two trigger predicates never overlap.
+            if overloaded(&cfg, &s) && relaxed(&cfg, &s) {
+                return Err("overloaded and relaxed at once".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overload_hysteresis_band_never_flaps() {
+    use aif::coordinator::overload::{step_tier, LoadSample};
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let cfg_seed = rng.next_u64();
+        let start = rng.below(20) as usize;
+        let load_seed = rng.next_u64();
+        (cfg_seed, start, load_seed)
+    });
+    check(
+        "hysteresis band holds the tier",
+        &gen,
+        300,
+        |&(cfg_seed, start, load_seed)| {
+            let (mut cfg, n_tiers) =
+                (overload_cfg_gen().make)(&mut Pcg64::new(cfg_seed));
+            cfg.dwell_ms = 0; // the band alone must prevent movement
+            if cfg.degrade_queue_depth - cfg.recover_queue_depth < 2 {
+                return Ok(()); // empty open band
+            }
+            // 100 loads oscillating strictly INSIDE the band: with both
+            // thresholds uncrossed, the tier must not move once —
+            // distinct degrade/recover levels are exactly what kills
+            // degrade->recover->degrade flapping.
+            let mut rng = Pcg64::new(load_seed);
+            let mut tier = start.min(n_tiers - 1);
+            let first = tier;
+            for _ in 0..100 {
+                let span =
+                    (cfg.degrade_queue_depth - cfg.recover_queue_depth - 1)
+                        as u64;
+                let q = cfg.recover_queue_depth
+                    + 1
+                    + rng.below(span) as usize;
+                let s = LoadSample {
+                    queue_depth: q,
+                    ..LoadSample::default()
+                };
+                tier = step_tier(&cfg, n_tiers, tier, &s, 1_000);
+                if tier != first {
+                    return Err(format!(
+                        "tier flapped {first} -> {tier} at q={q} inside \
+                         ({}, {})",
+                        cfg.recover_queue_depth, cfg.degrade_queue_depth
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_guaranteed_never_observes_a_degraded_tier() {
+    use aif::config::SlaClass;
+    use aif::coordinator::overload::{LoadSample, OverloadStats};
+    let gen = Gen::new(|rng: &mut Pcg64| {
+        let cfg_seed = rng.next_u64();
+        let ops_seed = rng.next_u64();
+        (cfg_seed, ops_seed)
+    });
+    check(
+        "guaranteed pinned to tier 0",
+        &gen,
+        150,
+        |&(cfg_seed, ops_seed)| {
+            let (mut cfg, n_tiers) =
+                (overload_cfg_gen().make)(&mut Pcg64::new(cfg_seed));
+            cfg.dwell_ms = 0;
+            let st = OverloadStats::new(n_tiers);
+            let mut rng = Pcg64::new(ops_seed);
+            for _ in 0..200 {
+                // Arbitrary interleaving of controller ticks, admin
+                // pins/unpins and reload-driven ladder resizes.
+                match rng.below(5) {
+                    0 | 1 => {
+                        let s = LoadSample {
+                            queue_depth: rng.below(128) as usize,
+                            ..LoadSample::default()
+                        };
+                        st.tick(&cfg, &s);
+                    }
+                    2 => st.force_tier(Some(rng.below(20) as usize)),
+                    3 => st.force_tier(None),
+                    _ => st.set_n_tiers(1 + rng.below(16) as usize),
+                }
+                // THE invariant: nothing above degrades guaranteed.
+                if st.tier_for(SlaClass::Guaranteed) != 0 {
+                    return Err("guaranteed saw a degraded tier".into());
+                }
+                // And every class resolves inside the ladder, with
+                // best-effort at least as degraded as degradable.
+                let cap = st.n_tiers() - 1;
+                let d = st.tier_for(SlaClass::Degradable);
+                let b = st.tier_for(SlaClass::BestEffort);
+                if d > cap || b > cap {
+                    return Err(format!("tier outside ladder ({d}, {b})"));
+                }
+                if st.forced().is_none() && b < d {
+                    return Err(format!(
+                        "best-effort ({b}) less degraded than \
+                         degradable ({d})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_unterminated_head_431s_before_twice_the_bound() {
     use aif::server::conn::{RequestParser, MAX_HEADER_BYTES};
